@@ -1,0 +1,100 @@
+//! Ablation tour: reproduce the paper's two component studies at
+//! example scale —
+//!
+//! * §4.4 / Fig. 7: FSDP vs Cephalo-CB (compute balancing only) vs
+//!   Cephalo-MB (memory balancing only) vs full Cephalo, and
+//! * §4.5 / Fig. 8: the gradient-accumulation optimization ladder
+//!   (FSDP-GA -> LGA -> +CO -> +S -> +O).
+//!
+//! ```sh
+//! cargo run --release --offline --example ablation_tour
+//! ```
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::model::find_model;
+use cephalo::optimizer::ablations;
+use cephalo::perfmodel::{CollectiveModel, SyntheticOracle};
+use cephalo::sim::cephalo::simulate_assignment;
+use cephalo::sim::GaVariant;
+use cephalo::util::tablefmt::{fmt_throughput, Table};
+
+fn main() {
+    // ---- Fig. 7-style ablation on Cluster A / GPT 2.7B ----
+    let batch = 128;
+    let w = Workload::prepare(Cluster::cluster_a(), "GPT 2.7B", 42)
+        .expect("profile");
+    let mut t = Table::new(
+        "Compute vs memory balancing (GPT 2.7B, Cluster A, batch 128)",
+        &["variant", "samples/s", "note"],
+    );
+    // Every variant is evaluated on the SAME simulator.
+    let variants: Vec<(&str, Result<_, _>, &str)> = vec![
+        ("FSDP", ablations::fsdp_even(&w.profile, batch),
+         "even everything"),
+        ("Cephalo-CB", ablations::compute_balanced_only(&w.profile, batch),
+         "compute only"),
+        ("Cephalo-MB", ablations::memory_balanced_only(&w.profile, batch),
+         "memory only, m=1"),
+        ("Cephalo", w.optimize(batch).map(|(a, _)| a), "joint"),
+    ];
+    for (name, plan, note) in variants {
+        match plan {
+            Ok(a) => {
+                let s = w.simulate(&a, GaVariant::LGA_CO_S_O);
+                t.add_row(vec![name.into(), fmt_throughput(s.throughput),
+                               note.into()]);
+            }
+            Err(e) => {
+                t.add_row(vec![name.into(), "OOM".into(), e.to_string()]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- Fig. 8-style GA ladder on 16xV100 / GPT 6.7B ----
+    // 2x p3.16xlarge: 25 Gbps NICs bound the DP ring.
+    let cluster = Cluster::homogeneous("V100", 16, 8, 25.0);
+    let model = find_model("GPT 6.7B").unwrap();
+    let oracle = SyntheticOracle::new(&cluster, &model, 42);
+    let coll = CollectiveModel::from_cluster(&cluster);
+    // Paper setup: batch 256 = 16 GPUs x 16 microbatches of size 1.
+    let asg = cephalo::optimizer::Assignment {
+        per_gpu: (0..16)
+            .map(|_| cephalo::optimizer::GpuAssign {
+                microbatch: 1,
+                num_micro: 16,
+                state_ratio: 1.0 / 16.0,
+            })
+            .collect(),
+        layer_latency: 0.0,
+        iter_latency: 0.0,
+    };
+    let ladder = [
+        ("FSDP-GA", GaVariant::FSDP_GA),
+        ("LGA", GaVariant::LGA),
+        ("LGA+CO", GaVariant::LGA_CO),
+        ("LGA+CO+S", GaVariant::LGA_CO_S),
+        ("LGA+CO+S+O", GaVariant::LGA_CO_S_O),
+    ];
+    let mut t2 = Table::new(
+        "Gradient accumulation ladder (GPT 6.7B, 16xV100, batch 256)",
+        &["variant", "samples/s", "speedup vs FSDP-GA", "peak mem GB"],
+    );
+    let base = simulate_assignment(&model, &oracle, &coll, &asg,
+                                   GaVariant::FSDP_GA);
+    for (name, v) in ladder {
+        let s = simulate_assignment(&model, &oracle, &coll, &asg, v);
+        let peak = s
+            .per_gpu_mem
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        t2.add_row(vec![
+            name.into(),
+            fmt_throughput(s.throughput),
+            format!("{:.2}x", base.latency / s.latency),
+            format!("{:.1}", peak / 1e9),
+        ]);
+    }
+    println!("{}", t2.render());
+}

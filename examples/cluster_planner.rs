@@ -1,0 +1,87 @@
+//! Cluster planner: sweep Table-2 models and batch sizes over a chosen
+//! cluster, comparing Cephalo against every baseline — a practitioner's
+//! "what can my mixed-GPU fleet actually train, and how fast?" tool.
+//!
+//! ```sh
+//! cargo run --release --offline --example cluster_planner -- [a|b]
+//! ```
+
+use cephalo::baselines::{self, BaselinePlanner};
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::util::tablefmt::{fmt_throughput, Table};
+
+fn main() {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "a".to_string());
+    let cluster = Cluster::preset(&arg).unwrap_or_else(|| {
+        eprintln!("unknown cluster '{arg}', using A");
+        Cluster::cluster_a()
+    });
+    let models = if cluster.num_gpus() > 8 {
+        vec![("ViT-e", 512), ("GPT 6.7B", 512), ("Llama 7B", 512)]
+    } else {
+        vec![
+            ("BERT-Large", 128),
+            ("ViT-G", 128),
+            ("GPT 2.7B", 128),
+            ("Llama 3B", 128),
+        ]
+    };
+
+    let mut table = Table::new(
+        &format!("Training plans for cluster {}", cluster.name),
+        &["model", "batch", "system", "samples/s", "plan"],
+    );
+    for (model, batch) in models {
+        let w = match Workload::prepare(cluster.clone(), model, 42) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("skipping {model}: {e}");
+                continue;
+            }
+        };
+        match w.cephalo_throughput(batch) {
+            Ok((asg, stats)) => {
+                let bs: Vec<usize> =
+                    asg.per_gpu.iter().map(|g| g.batch()).collect();
+                table.add_row(vec![
+                    model.into(),
+                    batch.to_string(),
+                    "Cephalo".into(),
+                    fmt_throughput(stats.throughput),
+                    format!("b={bs:?}"),
+                ]);
+            }
+            Err(e) => table.add_row(vec![
+                model.into(),
+                batch.to_string(),
+                "Cephalo".into(),
+                "OOM".into(),
+                e.to_string(),
+            ]),
+        }
+        let planners: Vec<Box<dyn BaselinePlanner>> = vec![
+            Box::new(baselines::megatron::MegatronHet),
+            Box::new(baselines::flashflex::FlashFlex),
+        ];
+        for p in planners {
+            match p.plan(&w.ctx(batch)) {
+                Ok(out) => table.add_row(vec![
+                    model.into(),
+                    batch.to_string(),
+                    out.system,
+                    fmt_throughput(out.throughput),
+                    out.config,
+                ]),
+                Err(_) => table.add_row(vec![
+                    model.into(),
+                    batch.to_string(),
+                    p.name().into(),
+                    "OOM".into(),
+                    String::new(),
+                ]),
+            }
+        }
+    }
+    println!("{}", table.render());
+}

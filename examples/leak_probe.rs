@@ -1,0 +1,43 @@
+// Bisect the per-call leak in the PJRT exec path.
+use cephalo::runtime::XlaEngine;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+fn main() {
+    let dir = cephalo::runtime::default_artifacts_dir();
+    let engine = XlaEngine::load(&dir, &["grad_step"]).unwrap();
+    let params = engine.init_params(1);
+    let seq = engine.manifest().model.seq_len;
+    let tokens = vec![1i32; seq];
+    let targets = vec![2i32; seq];
+
+    // Phase 1: literal creation only (vec1 + reshape), no execute.
+    let r0 = rss_mb();
+    for _ in 0..20 {
+        for p in &params {
+            let l = xla::Literal::vec1(p).reshape(&[p.len() as i64]).unwrap();
+            std::hint::black_box(&l);
+        }
+    }
+    let r1 = rss_mb();
+    println!("literal-only: {:.0} -> {:.0} MB (delta {:.1}/iter)", r0, r1, (r1-r0)/20.0);
+
+    // Phase 2: full grad_step over device-resident params (execute_b).
+    engine.set_params(&params).unwrap();
+    let r2 = rss_mb();
+    for _ in 0..20 {
+        let out = engine.grad_step(&tokens, &targets, 1).unwrap();
+        std::hint::black_box(&out);
+    }
+    let r3 = rss_mb();
+    println!("grad_step:    {:.0} -> {:.0} MB (delta {:.1}/iter)", r2, r3, (r3-r2)/20.0);
+    // Phase 3: set_params churn (per-step upload path).
+    let r4 = rss_mb();
+    for _ in 0..20 {
+        engine.set_params(&params).unwrap();
+    }
+    let r5 = rss_mb();
+    println!("set_params:   {:.0} -> {:.0} MB (delta {:.1}/iter)", r4, r5, (r5-r4)/20.0);
+}

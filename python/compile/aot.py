@@ -1,0 +1,157 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust runtime.
+
+Emits HLO text (NOT ``lowered.compile().serialize()``): jax >= 0.5 writes
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (under ``artifacts/``):
+* ``grad_step_m{m}.hlo.txt``  — per-microbatch sum-loss gradient step, one
+  per configured microbatch size (one compiled executable per variant, as
+  the runtime contract requires).
+* ``loss_m{m}.hlo.txt``       — forward-only loss for eval.
+* ``layer_fwd_m{m}.hlo.txt``  — single transformer layer forward, the
+  profiling unit for the Fig.-5 compute-latency model.
+* ``manifest.json``           — model config, parameter order/shapes, the
+  list of emitted entry points. The ABI consumed by
+  ``rust/src/runtime/artifacts.rs``.
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    PARAM_ORDER,
+    layer_param_shapes,
+    make_grad_step_fn,
+    make_layer_fwd_fn,
+    make_loss_fn,
+    param_shapes,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True,
+    so the Rust side unwraps with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_grad_step(cfg: ModelConfig, microbatch: int) -> str:
+    fn = make_grad_step_fn(cfg)
+    shapes = param_shapes(cfg)
+    args = [_spec(shapes[n]) for n in PARAM_ORDER]
+    args.append(_spec((microbatch, cfg.seq_len), jnp.int32))  # tokens
+    args.append(_spec((microbatch, cfg.seq_len), jnp.int32))  # targets
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_loss(cfg: ModelConfig, microbatch: int) -> str:
+    fn = make_loss_fn(cfg)
+    shapes = param_shapes(cfg)
+    args = [_spec(shapes[n]) for n in PARAM_ORDER]
+    args.append(_spec((microbatch, cfg.seq_len), jnp.int32))
+    args.append(_spec((microbatch, cfg.seq_len), jnp.int32))
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_layer_fwd(cfg: ModelConfig, microbatch: int) -> str:
+    fn = make_layer_fwd_fn(cfg)
+    args = [_spec((microbatch, cfg.seq_len, cfg.d_model))]
+    args += [_spec(s) for _, s in layer_param_shapes(cfg)]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_manifest(cfg: ModelConfig, microbatches: List[int],
+                   entries: List[dict]) -> dict:
+    shapes = param_shapes(cfg)
+    return {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len,
+            "d_ff": cfg.d_ff,
+            "use_pallas": cfg.use_pallas,
+            "num_params": cfg.num_params(),
+        },
+        "param_order": PARAM_ORDER,
+        "param_shapes": {n: list(shapes[n]) for n in PARAM_ORDER},
+        "layer_param_shapes": [
+            {"name": n, "shape": list(s)} for n, s in layer_param_shapes(cfg)
+        ],
+        "microbatches": microbatches,
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", default="1,2,4",
+                    help="comma-separated microbatch sizes to AOT-compile")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of the "
+                         "Pallas kernels (same numerics; faster CPU exec)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_layers=args.layers,
+        n_heads=args.heads,
+        seq_len=args.seq_len,
+        use_pallas=not args.no_pallas,
+    )
+    microbatches = sorted({int(x) for x in args.microbatches.split(",")})
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for m in microbatches:
+        for kind, lower in (
+            ("grad_step", lower_grad_step),
+            ("loss", lower_loss),
+            ("layer_fwd", lower_layer_fwd),
+        ):
+            name = f"{kind}_m{m}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower(cfg, m)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append({"kind": kind, "microbatch": m, "file": name})
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = build_manifest(cfg, microbatches, entries)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}: {cfg.num_params()} params, "
+          f"microbatches={microbatches}, pallas={cfg.use_pallas}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1 — Pallas kernels for the transformer compute hot spots.
+
+Exports differentiable ops backed by the Pallas kernels:
+
+* ``attention(q, k, v)``   — tiled causal flash attention
+  (``flash_attention.flash_attention``); backward = recompute-from-reference VJP
+  (activation-checkpointing style, matching the paper's recompute-in-
+  backward strategy).
+* ``ffn(x, w1, b1, w2, b2)`` — fused GELU MLP (``ffn.fused_ffn``); backward
+  likewise recomputes via the reference VJP.
+* ``layernorm(x, scale, bias)`` — fused LayerNorm with a *hand-written
+  Pallas backward kernel* (closed-form VJP).
+
+Each op is wrapped in ``jax.custom_vjp`` so the L2 model differentiates
+through the kernels cleanly, and the whole graph still lowers to plain HLO
+under ``interpret=True``.
+"""
+
+import jax
+
+from . import flash_attention as _attention_mod
+from . import fused_ffn as _ffn_mod
+from . import fused_layernorm as _layernorm_mod
+from . import ref
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal multi-head attention via the flash-attention Pallas kernel."""
+    return _attention_mod.flash_attention(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return _attention_mod.flash_attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused FFN
+
+
+@jax.custom_vjp
+def ffn(x, w1, b1, w2, b2):
+    """Fused gelu(x@w1+b1)@w2+b2 via the Pallas FFN kernel."""
+    return _ffn_mod.fused_ffn(x, w1, b1, w2, b2)
+
+
+def _ffn_fwd(x, w1, b1, w2, b2):
+    return _ffn_mod.fused_ffn(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd(res, g):
+    x, w1, b1, w2, b2 = res
+    _, vjp = jax.vjp(ref.ffn, x, w1, b1, w2, b2)
+    return vjp(g)
+
+
+ffn.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# layernorm (Pallas forward AND backward)
+
+
+@jax.custom_vjp
+def layernorm(x, scale, bias):
+    """LayerNorm over the last axis via the Pallas kernel. x: [rows, d]."""
+    return _layernorm_mod.layernorm_fwd(x, scale, bias)
+
+
+def _layernorm_fwd(x, scale, bias):
+    return _layernorm_mod.layernorm_fwd(x, scale, bias), (x, scale)
+
+
+def _layernorm_bwd(res, g):
+    x, scale = res
+    dx, dscale, dbias = _layernorm_mod.layernorm_bwd(x, scale, g)
+    return dx, dscale, dbias
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

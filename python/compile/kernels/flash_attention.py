@@ -1,0 +1,129 @@
+"""Tiled causal flash-attention Pallas kernel (interpret mode).
+
+Hardware adaptation (paper -> TPU, see DESIGN.md §Hardware-Adaptation):
+the CUDA flash-attention schedule keeps K/V tiles in shared memory and
+iterates thread-blocks over query tiles; here the `BlockSpec` grid plays
+the thread-block role — one program instance per (batch*head, q-block),
+with the K/V tiles staged through VMEM and the online-softmax running
+statistics carried through a `fori_loop`, which is exactly the HBM->VMEM
+schedule a real Mosaic lowering would pipeline.
+
+`interpret=True` is mandatory on this CPU-only image: a real TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+Correctness is asserted against `ref.attention` by the pytest suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes. 64 is a multiple of the 8-sublane f32 tile and keeps
+# the per-program VMEM footprint small; see EXPERIMENTS.md §Perf for the
+# footprint arithmetic.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq: int,
+                      scale: float):
+    """One program instance: one (batch*head, q-block) pair.
+
+    q_ref: [1, block_q, hd]; k_ref/v_ref: [1, seq, hd] (whole K/V row for
+    this batch*head); o_ref: [1, block_q, hd].
+    """
+    block_q = q_ref.shape[1]
+    head_dim = q_ref.shape[2]
+    qb = pl.program_id(1)
+
+    q = q_ref[0, :, :] * scale  # [block_q, hd]
+    # Global row index of each query in this block.
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+
+    num_kv = pl.cdiv(seq, block_k)
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(k_pos <= q_pos, s, ref.NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)  # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # rescale factor for old stats
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), ref.NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+
+    # Causal mask guarantees every row attends to >= 1 key, so l > 0.
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """Causal flash attention. q,k,v: [batch, heads, seq, head_dim]."""
+    batch, heads, seq, head_dim = q.shape
+    bq = min(block_q, seq)
+    bk = min(block_k, seq)
+    if seq % bq != 0 or seq % bk != 0:
+        raise ValueError(f"seq={seq} must be divisible by blocks ({bq},{bk})")
+    bh = batch * heads
+    qf = q.reshape(bh, seq, head_dim)
+    kf = k.reshape(bh, seq, head_dim)
+    vf = v.reshape(bh, seq, head_dim)
+
+    grid = (bh, seq // bq)
+    kernel = functools.partial(
+        _attention_kernel,
+        block_k=bk,
+        seq=seq,
+        scale=1.0 / (head_dim ** 0.5),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, head_dim), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(batch, heads, seq, head_dim)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, seq: int, head_dim: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated per-program VMEM residency for the §Perf analysis.
+
+    Counts the q block, one k/v tile pair, the f32 accumulator and the
+    [bq, bk] score/probability tile. The full-seq K/V rows are *streamed*
+    through the tile (pl.dslice loads), so only one tile of each is
+    resident at a time in a pipelined Mosaic lowering.
+    """
+    q_blk = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_k * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4
+    stats = 2 * block_q * 4
+    scores = block_q * block_k * 4
+    out = block_q * head_dim * dtype_bytes
+    return q_blk + kv_tiles + acc + stats + scores + out

@@ -1,0 +1,61 @@
+"""Fused feed-forward (GELU MLP) Pallas kernel (interpret mode).
+
+Fuses `gelu(x @ w1 + b1) @ w2 + b2` into a single kernel so the [rows,
+d_ff] intermediate never round-trips HBM — the paper's activation-memory
+pressure motivates exactly this fusion. The grid tiles the row dimension;
+each program instance keeps its row tile, the two weight panels and the
+hidden tile in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = h + b1_ref[...][None, :]
+    h = jax.nn.gelu(h)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o = o + b2_ref[...][None, :]
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def fused_ffn(x, w1, b1, w2, b2, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = True):
+    """x: [rows, d] -> [rows, d]; w1: [d, d_ff], w2: [d_ff, d]."""
+    rows, d = x.shape
+    d_ff = w1.shape[1]
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"rows={rows} must be divisible by block_rows={br}")
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff,), lambda i: (0,)),
+            pl.BlockSpec((d_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_footprint_bytes(block_rows: int, d: int, d_ff: int,
+                         dtype_bytes: int = 4) -> int:
+    """Per-program VMEM residency estimate for §Perf."""
+    x_blk = block_rows * d * dtype_bytes
+    weights = (d * d_ff + d_ff * d) * dtype_bytes + (d_ff + d) * dtype_bytes
+    hidden = block_rows * d_ff * 4
+    out = block_rows * d * dtype_bytes
+    return x_blk + weights + hidden + out

@@ -1,0 +1,112 @@
+"""Fused LayerNorm Pallas kernels — forward *and* backward (interpret mode).
+
+LayerNorm is the one kernel whose backward we also hand-write as a Pallas
+kernel (closed-form VJP), demonstrating the full fwd+bwd kernel path; the
+attention/FFN backwards use recompute-from-reference VJPs (see
+kernels/__init__.py), matching the paper's activation-checkpointing
+strategy of recomputing intra-layer activations in the backward pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+EPS = 1e-5
+
+
+def _ln_fwd_kernel(x_ref, scale_ref, bias_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * inv
+    o_ref[...] = (xhat * scale_ref[...][None, :] +
+                  bias_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def _ln_bwd_kernel(x_ref, scale_ref, g_ref, dx_ref, dscale_ref, dbias_ref):
+    """Closed-form LayerNorm VJP.
+
+    dx = inv/d * (d*gs - sum(gs) - xhat * sum(gs*xhat)) with gs = g*scale.
+    dscale/dbias accumulate across the row-block grid: every program writes
+    the same output block (index_map -> 0), initialising on the first step.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * inv
+
+    gs = g * scale[None, :]
+    s1 = jnp.sum(gs, axis=-1, keepdims=True)
+    s2 = jnp.sum(gs * xhat, axis=-1, keepdims=True)
+    dx = (inv / d) * (d * gs - s1 - xhat * s2)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+    part_dscale = jnp.sum(g * xhat, axis=0)
+    part_dbias = jnp.sum(g, axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dscale_ref[...] = jnp.zeros_like(dscale_ref)
+        dbias_ref[...] = jnp.zeros_like(dbias_ref)
+
+    dscale_ref[...] += part_dscale.astype(dscale_ref.dtype)
+    dbias_ref[...] += part_dbias.astype(dbias_ref.dtype)
+
+
+def layernorm_fwd(x, scale, bias, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = True):
+    """x: [rows, d] -> [rows, d]."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={br}")
+    return pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, scale, bias)
+
+
+def layernorm_bwd(x, scale, g, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = True):
+    """Returns (dx, dscale, dbias) for y = layernorm(x, scale, bias)."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    if rows % br != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={br}")
+    return pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), scale.dtype),
+            jax.ShapeDtypeStruct((d,), scale.dtype),
+        ],
+        interpret=interpret,
+    )(x, scale, g)

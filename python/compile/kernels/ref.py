@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+pure-`jax.numpy` counterpart here. pytest + hypothesis sweep shapes and
+dtypes asserting `assert_allclose(kernel(...), ref(...))`; the backward
+passes of the wrapped ops are defined as the VJPs of these references
+(activation-recompute style), so gradient correctness follows from forward
+agreement.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    """LayerNorm over the last axis. x: [..., d], scale/bias: [d]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * scale + bias
+
+
+def attention(q, k, v):
+    """Causal multi-head attention.
+
+    q, k, v: [batch, heads, seq, head_dim] -> [batch, heads, seq, head_dim].
+    Scores are scaled by 1/sqrt(head_dim); the mask is causal
+    (position i attends to j <= i).
+    """
+    head_dim = q.shape[-1]
+    seq = q.shape[-2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(head_dim, q.dtype)
+    )
+    qi = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+    mask = ki <= qi
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ffn(x, w1, b1, w2, b2):
+    """Fused feed-forward: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [rows, d], w1: [d, d_ff], b1: [d_ff], w2: [d_ff, d], b2: [d].
+    """
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2 + b2

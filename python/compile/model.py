@@ -1,0 +1,281 @@
+"""L2 — decoder-only transformer (forward/backward) in JAX.
+
+The model is the paper's training workload: a sequence of identical
+transformer layers (pre-LN attention + FFN blocks), embedding in, LM head
+out, causal cross-entropy loss. Layer parameters are *stacked* along a
+leading layer axis and the layer loop is a ``jax.lax.scan``, which keeps
+the lowered HLO compact and maps directly onto the paper's "transformer
+layers are identical" assumption (each scan step == one FSDP unit).
+
+The hot spots call the L1 Pallas kernels (``kernels.attention``,
+``kernels.ffn``, ``kernels.layernorm``); everything lowers to plain HLO
+via interpret mode, executed from Rust through PJRT.
+
+Gradient conventions (chosen for the Rust coordinator):
+* ``grad_step`` returns gradients of the **sum** of token losses (not the
+  mean). Summed gradients make layered gradient accumulation and Eq. 1's
+  uneven-batch weighting exact: the leader just adds shard contributions
+  and scales once by 1/(global token count).
+* Losses are returned as (loss_sum, token_count) so the leader can report
+  the exact global mean loss.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static transformer hyperparameters (fixed at AOT time)."""
+
+    vocab: int = 1024
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    seq_len: int = 128
+    ff_mult: int = 4
+    use_pallas: bool = True
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.ff_mult
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        d, dff, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        per_layer = 4 * d * d + d * dff + dff + dff * d + d + 4 * d
+        return V * d + L * per_layer + 2 * d + d * V
+
+
+# Parameter order is the ABI between python and rust: aot.py writes it to
+# artifacts/manifest.json and rust/src/runtime/artifacts.rs re-reads it.
+PARAM_ORDER: List[str] = [
+    "embed",      # [V, d]
+    "ln1_scale",  # [L, d]
+    "ln1_bias",   # [L, d]
+    "wq",         # [L, d, d]
+    "wk",         # [L, d, d]
+    "wv",         # [L, d, d]
+    "wo",         # [L, d, d]
+    "ln2_scale",  # [L, d]
+    "ln2_bias",   # [L, d]
+    "w1",         # [L, d, d_ff]
+    "b1",         # [L, d_ff]
+    "w2",         # [L, d_ff, d]
+    "b2",         # [L, d]
+    "lnf_scale",  # [d]
+    "lnf_bias",   # [d]
+    "wout",       # [d, V]
+]
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, dff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    return {
+        "embed": (V, d),
+        "ln1_scale": (L, d),
+        "ln1_bias": (L, d),
+        "wq": (L, d, d),
+        "wk": (L, d, d),
+        "wv": (L, d, d),
+        "wo": (L, d, d),
+        "ln2_scale": (L, d),
+        "ln2_bias": (L, d),
+        "w1": (L, d, dff),
+        "b1": (L, dff),
+        "w2": (L, dff, d),
+        "b2": (L, d),
+        "lnf_scale": (d,),
+        "lnf_bias": (d,),
+        "wout": (d, V),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """GPT-2-style init: normal(0, 0.02) weights, ones/zeros for LN/bias."""
+    shapes = param_shapes(cfg)
+    params = {}
+    for i, name in enumerate(PARAM_ORDER):
+        sub = jax.random.fold_in(key, i)
+        shape = shapes[name]
+        if "scale" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif "bias" in name or name in ("b1", "b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_list(params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[name] for name in PARAM_ORDER]
+
+
+def list_to_params(flat) -> Dict[str, jax.Array]:
+    return dict(zip(PARAM_ORDER, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+
+
+def _ln(x2d, scale, bias, use_pallas):
+    if use_pallas:
+        return kernels.layernorm(x2d, scale, bias)
+    return kref.layernorm(x2d, scale, bias)
+
+
+def _attn(q, k, v, use_pallas):
+    if use_pallas:
+        return kernels.attention(q, k, v)
+    return kref.attention(q, k, v)
+
+
+def _ffn(x2d, w1, b1, w2, b2, use_pallas):
+    if use_pallas:
+        return kernels.ffn(x2d, w1, b1, w2, b2)
+    return kref.ffn(x2d, w1, b1, w2, b2)
+
+
+LAYER_PARAM_NAMES = (
+    "ln1_scale", "ln1_bias", "wq", "wk", "wv", "wo",
+    "ln2_scale", "ln2_bias", "w1", "b1", "w2", "b2",
+)
+
+
+def layer_forward(x, layer_params, cfg: ModelConfig):
+    """One transformer layer. x: [b, s, d] -> [b, s, d].
+
+    Pre-LN: x + attn(ln1(x)); then x + ffn(ln2(x)). This function is both
+    the scan body and the unit profiled for the Fig.-5 latency model.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = cfg.head_dim
+    up = cfg.use_pallas
+    (ln1_s, ln1_b, wq, wk, wv, wo, ln2_s, ln2_b, w1, b1, w2, b2) = layer_params
+
+    x2d = x.reshape(b * s, d)
+    a_in = _ln(x2d, ln1_s, ln1_b, up)
+    q = (a_in @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (a_in @ wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (a_in @ wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = _attn(q, k, v, up)
+    att = att.transpose(0, 2, 1, 3).reshape(b * s, d)
+    x2d = x2d + att @ wo
+
+    f_in = _ln(x2d, ln2_s, ln2_b, up)
+    x2d = x2d + _ffn(f_in, w1, b1, w2, b2, up)
+    return x2d.reshape(b, s, d)
+
+
+def forward(params: Dict[str, jax.Array], tokens, cfg: ModelConfig):
+    """tokens: [b, s] int32 -> logits [b, s, V]."""
+    x = params["embed"][tokens]  # [b, s, d]
+
+    stacked = tuple(params[n] for n in LAYER_PARAM_NAMES)
+
+    def body(x, layer_params):
+        return layer_forward(x, layer_params, cfg), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+
+    b, s, d = x.shape
+    x2d = _ln(x.reshape(b * s, d), params["lnf_scale"], params["lnf_bias"],
+              cfg.use_pallas)
+    logits = x2d @ params["wout"]
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_sum(params, tokens, targets, cfg: ModelConfig):
+    """Cross-entropy summed over all tokens. Returns (loss_sum, count)."""
+    logits = forward(params, tokens, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)  # [b, s]
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    losses = logz - tgt_logit
+    return jnp.sum(losses), jnp.asarray(losses.size, jnp.float32)
+
+
+def grad_step(params, tokens, targets, cfg: ModelConfig):
+    """Sum-loss gradients for one microbatch.
+
+    Returns (grads in PARAM_ORDER, loss_sum, token_count).
+    """
+
+    def f(plist):
+        ls, cnt = loss_sum(list_to_params(plist), tokens, targets, cfg)
+        return ls, cnt
+
+    (ls, cnt), grads = jax.value_and_grad(f, has_aux=True)(
+        params_to_list(params)
+    )
+    return grads, ls, cnt
+
+
+def make_grad_step_fn(cfg: ModelConfig):
+    """The AOT entry point: flat-arg function for jax.jit().lower().
+
+    Signature: (p_0, ..., p_15, tokens, targets) ->
+               (g_0, ..., g_15, loss_sum, token_count).
+    """
+
+    def fn(*args):
+        plist = list(args[: len(PARAM_ORDER)])
+        tokens, targets = args[len(PARAM_ORDER)], args[len(PARAM_ORDER) + 1]
+        grads, ls, cnt = grad_step(list_to_params(plist), tokens, targets, cfg)
+        return tuple(grads) + (ls, cnt)
+
+    return fn
+
+
+def make_loss_fn(cfg: ModelConfig):
+    """Flat-arg forward-only loss (for eval and profiling)."""
+
+    def fn(*args):
+        plist = list(args[: len(PARAM_ORDER)])
+        tokens, targets = args[len(PARAM_ORDER)], args[len(PARAM_ORDER) + 1]
+        ls, cnt = loss_sum(list_to_params(plist), tokens, targets, cfg)
+        return (ls, cnt)
+
+    return fn
+
+
+def make_layer_fwd_fn(cfg: ModelConfig):
+    """Single-layer forward (x, 12 layer params) -> y — the Fig.-5
+    profiling unit loaded by rust's profiler."""
+
+    def fn(x, *layer_params):
+        return (layer_forward(x, tuple(layer_params), cfg),)
+
+    return fn
+
+
+def layer_param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Shapes of one (unstacked) layer's params, in layer_forward order."""
+    d, dff = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_scale", (d,)),
+        ("ln1_bias", (d,)),
+        ("wq", (d, d)),
+        ("wk", (d, d)),
+        ("wv", (d, d)),
+        ("wo", (d, d)),
+        ("ln2_scale", (d,)),
+        ("ln2_bias", (d,)),
+        ("w1", (d, dff)),
+        ("b1", (dff,)),
+        ("w2", (dff, d)),
+        ("b2", (d,)),
+    ]

@@ -1,0 +1,148 @@
+"""L2 correctness: model shapes, loss semantics, gradient conventions.
+
+The gradient-accumulation and uneven-batch equivalences proved here are
+the numerical foundation for the Rust coordinator's Eq.-1 weighting and
+layered gradient accumulation: because grad_step returns SUM-loss
+gradients, concatenation == addition of shards.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=4, seq_len=32)
+CFG_REF = M.ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=4,
+                        seq_len=32, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def make_batch(seed, b, cfg=CFG):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (b, cfg.seq_len), 0, cfg.vocab, jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+def test_param_count_matches_formula(params):
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == CFG.num_params()
+
+
+def test_param_order_covers_all(params):
+    assert set(M.PARAM_ORDER) == set(params.keys())
+    rt = M.list_to_params(M.params_to_list(params))
+    for n in M.PARAM_ORDER:
+        assert rt[n] is params[n]
+
+
+def test_forward_shape(params):
+    tokens, _ = make_batch(1, 3)
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_near_uniform_at_init(params):
+    """At init the model is near-uniform: mean loss ~ ln(vocab)."""
+    tokens, targets = make_batch(2, 4)
+    ls, cnt = M.loss_sum(params, tokens, targets, CFG)
+    mean = float(ls) / float(cnt)
+    assert abs(mean - np.log(CFG.vocab)) < 0.2
+    assert int(cnt) == 4 * CFG.seq_len
+
+
+def test_pallas_and_ref_paths_agree(params):
+    tokens, targets = make_batch(3, 2)
+    lp = M.loss_sum(params, tokens, targets, CFG)[0]
+    lr = M.loss_sum(params, tokens, targets, CFG_REF)[0]
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+
+
+def test_grad_step_returns_all_params(params):
+    tokens, targets = make_batch(4, 2)
+    grads, ls, cnt = M.grad_step(params, tokens, targets, CFG)
+    assert len(grads) == len(M.PARAM_ORDER)
+    shapes = M.param_shapes(CFG)
+    for name, g in zip(M.PARAM_ORDER, grads):
+        assert g.shape == shapes[name], name
+        assert bool(jnp.all(jnp.isfinite(g))), name
+
+
+def test_gradient_accumulation_equivalence(params):
+    """Sum of microbatch gradients == full-batch gradient (sum loss)."""
+    tokens, targets = make_batch(5, 4)
+    g_full, ls_full, _ = M.grad_step(params, tokens, targets, CFG)
+    g_acc = None
+    ls_acc = 0.0
+    for i in range(4):
+        g, ls, _ = M.grad_step(params, tokens[i:i + 1], targets[i:i + 1], CFG)
+        ls_acc += float(ls)
+        g_acc = g if g_acc is None else [a + b for a, b in zip(g_acc, g)]
+    np.testing.assert_allclose(ls_acc, float(ls_full), rtol=1e-4)
+    for name, a, b in zip(M.PARAM_ORDER, g_acc, g_full):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4,
+                                   err_msg=name)
+
+
+def test_uneven_split_equivalence(params):
+    """Eq. 1: shards of sizes (1, 3) summed == full batch of 4."""
+    tokens, targets = make_batch(6, 4)
+    g_full, _, _ = M.grad_step(params, tokens, targets, CFG)
+    g1, _, _ = M.grad_step(params, tokens[:1], targets[:1], CFG)
+    g3, _, _ = M.grad_step(params, tokens[1:], targets[1:], CFG)
+    for name, a, b, c in zip(M.PARAM_ORDER, g1, g3, g_full):
+        np.testing.assert_allclose(a + b, c, rtol=2e-3, atol=2e-4,
+                                   err_msg=name)
+
+
+def test_grad_descends_loss(params):
+    tokens, targets = make_batch(7, 2)
+    grads, ls0, cnt = M.grad_step(params, tokens, targets, CFG)
+    lr = 0.05
+    plist = M.params_to_list(params)
+    new = [p - lr * g / float(cnt) for p, g in zip(plist, grads)]
+    ls1, _ = M.loss_sum(M.list_to_params(new), tokens, targets, CFG)
+    assert float(ls1) < float(ls0)
+
+
+def test_layer_forward_residual_structure(params):
+    """Zeroed attention+ffn weights reduce the layer to identity."""
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, CFG.seq_len, CFG.d_model))
+    d, dff = CFG.d_model, CFG.d_ff
+    zeros = [
+        jnp.ones(d), jnp.zeros(d),                      # ln1
+        jnp.zeros((d, d)), jnp.zeros((d, d)),           # wq wk
+        jnp.zeros((d, d)), jnp.zeros((d, d)),           # wv wo
+        jnp.ones(d), jnp.zeros(d),                      # ln2
+        jnp.zeros((d, dff)), jnp.zeros(dff),
+        jnp.zeros((dff, d)), jnp.zeros(d),
+    ]
+    y = M.layer_forward(x, tuple(zeros), CFG)
+    np.testing.assert_allclose(y, x, atol=1e-5)
+
+
+def test_make_grad_step_fn_flat_signature(params):
+    fn = M.make_grad_step_fn(CFG)
+    tokens, targets = make_batch(9, 1)
+    out = fn(*M.params_to_list(params), tokens, targets)
+    assert len(out) == len(M.PARAM_ORDER) + 2
+    grads, ls, cnt = M.grad_step(params, tokens, targets, CFG)
+    np.testing.assert_allclose(float(out[-2]), float(ls), rtol=1e-5)
+    np.testing.assert_allclose(float(out[-1]), float(cnt))
+
+
+def test_make_layer_fwd_fn(params):
+    fn = M.make_layer_fwd_fn(CFG)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, CFG.seq_len, CFG.d_model))
+    layer0 = [params[n][0] for n in M.LAYER_PARAM_NAMES]
+    (y,) = fn(x, *layer0)
+    assert y.shape == x.shape
+    expect = M.layer_forward(x, tuple(layer0), CFG)
+    np.testing.assert_allclose(y, expect, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,53 @@
+//! Fig. 10: performance-model accuracy — absolute relative error
+//! between the optimizer's predicted iteration latency (Eqs. 2/3 over
+//! the fitted linear models) and the "actual" latency from the event
+//! simulator driven by the ground-truth oracle. Paper: all errors
+//! within 10%, mean ARE 2.9%.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::sim::GaVariant;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let models = [
+        "ViT-G", "ViT-e", "BERT-Large", "BERT-XLarge", "GPT 2.7B",
+        "Tiny Llama", "Llama 3B",
+    ];
+    let batches = [64usize, 128, 256];
+    let mut t = Table::new(
+        "Fig. 10 — performance model absolute relative error (Cluster A)",
+        &["model", "batch", "predicted (s)", "actual (s)", "ARE %"],
+    );
+    let mut errors = Vec::new();
+    for model in models {
+        let w = Workload::prepare(Cluster::cluster_a(), model, 42)
+            .expect("profile");
+        for &batch in &batches {
+            let Ok((asg, _)) = w.optimize(batch) else { continue };
+            let stats = w.simulate(&asg, GaVariant::LGA_CO_S_O);
+            let are = (asg.iter_latency - stats.latency).abs()
+                / stats.latency;
+            errors.push(are);
+            t.add_row(vec![
+                model.into(),
+                batch.to_string(),
+                format!("{:.3}", asg.iter_latency),
+                format!("{:.3}", stats.latency),
+                format!("{:.2}", are * 100.0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let mean = cephalo::util::stats::mean(&errors);
+    let max = cephalo::util::stats::max(&errors);
+    println!(
+        "mean ARE {:.2}%  max ARE {:.2}%  ({} configurations)",
+        mean * 100.0,
+        max * 100.0,
+        errors.len()
+    );
+    assert!(max < 0.10, "max ARE {max:.3} exceeds the paper's 10% bound");
+    assert!(mean < 0.05, "mean ARE {mean:.3} too high (paper: 2.9%)");
+    println!("shape check: errors within 10%, mean under 5%  [ok]");
+}

@@ -1,0 +1,69 @@
+//! Fig. 2: GPU FP32 TFLOPs vs memory capacity — the compute/memory
+//! mismatch motivating Cephalo (e.g. L4 ~2.6x the compute of the P40 at
+//! identical 24 GB memory).
+
+use cephalo::cluster::catalog::{catalog, find};
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 2 — GPU TFLOPs (FP32) vs memory capacity",
+        &["gpu", "generation", "TFLOPs", "memory GB", "TFLOPs/GB"],
+    );
+    let mut gpus = catalog();
+    gpus.sort_by(|a, b| {
+        b.compute_mem_ratio().partial_cmp(&a.compute_mem_ratio()).unwrap()
+    });
+    for g in &gpus {
+        t.add_row(vec![
+            g.name.clone(),
+            g.generation.clone(),
+            format!("{:.1}", g.tflops_fp32),
+            format!("{:.0}", g.mem_gb),
+            format!("{:.2}", g.compute_mem_ratio()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ASCII scatter: memory (x) vs tflops (y).
+    println!("scatter (x = memory GB, y = TFLOPs):");
+    let max_t = gpus.iter().map(|g| g.tflops_fp32).fold(0.0, f64::max);
+    for row in (0..12).rev() {
+        let lo = max_t * row as f64 / 12.0;
+        let hi = max_t * (row + 1) as f64 / 12.0;
+        let mut line = format!("{:>5.0} |", hi);
+        for col in 0..20 {
+            let mlo = 80.0 * col as f64 / 20.0;
+            let mhi = 80.0 * (col + 1) as f64 / 20.0;
+            let hit = gpus.iter().find(|g| {
+                g.tflops_fp32 > lo
+                    && g.tflops_fp32 <= hi
+                    && g.mem_gb > mlo
+                    && g.mem_gb <= mhi
+            });
+            line.push_str(match hit {
+                Some(g) => match g.name.as_str() {
+                    "L4" => "L",
+                    "P40" => "P",
+                    "A6000" => "A",
+                    "H100" => "H",
+                    _ => "*",
+                },
+                None => " ",
+            });
+        }
+        println!("{line}");
+    }
+    println!("      +{}", "-".repeat(20));
+    println!("       0        40        80  (GB)");
+
+    // The motivating pair.
+    let l4 = find("L4").unwrap();
+    let p40 = find("P40").unwrap();
+    assert_eq!(l4.mem_gb, p40.mem_gb);
+    assert!(l4.tflops_fp32 > 2.0 * p40.tflops_fp32);
+    println!(
+        "\nshape check: L4 ({:.1} TF) vs P40 ({:.1} TF) at equal {} GB [ok]",
+        l4.tflops_fp32, p40.tflops_fp32, l4.mem_gb
+    );
+}

@@ -1,0 +1,86 @@
+//! Fig. 5: single-layer training latency and compute memory vs
+//! microbatch size (BERT-Large) — sublinear latency at small m, then
+//! linear; memory strongly linear.
+//!
+//! Two series: the synthetic oracle ("profiled") against the fitted
+//! linear models the optimizer actually plans with; plus, when AOT
+//! artifacts exist, a REAL PJRT series timing the compiled layer
+//! forward on this host.
+
+use cephalo::cluster::Cluster;
+use cephalo::model::find_model;
+use cephalo::perfmodel::{ComputeOracle, Profiler, SyntheticOracle};
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let cluster = Cluster::cluster_a();
+    let model = find_model("BERT-Large").unwrap();
+    let oracle = SyntheticOracle::new(&cluster, &model, 42);
+    let profile = Profiler::default().profile(&cluster, &model, &oracle);
+    let gpu = 2; // the A6000
+
+    let mut t = Table::new(
+        "Fig. 5 — BERT-Large layer latency & compute memory vs microbatch \
+         (A6000 slot)",
+        &["m", "latency profiled (ms)", "latency fitted (ms)",
+          "per-sample (ms)", "mem profiled (GB)", "mem fitted (GB)"],
+    );
+    for m in [1usize, 2, 3, 4, 6, 8, 12, 16, 24, 32] {
+        let lat = oracle.fwd_latency(gpu, m) + oracle.bwd_latency(gpu, m);
+        let fit = profile.per_gpu[gpu].fwd.predict(m)
+            + profile.per_gpu[gpu].bwd.predict(m);
+        let mem = oracle.compute_mem(gpu, m);
+        let mem_fit = profile.per_gpu[gpu].mem.predict(m);
+        t.add_row(vec![
+            m.to_string(),
+            format!("{:.1}", lat * 1e3),
+            format!("{:.1}", fit * 1e3),
+            format!("{:.2}", lat * 1e3 / m as f64),
+            format!("{:.2}", mem / 1e9),
+            format!("{:.2}", mem_fit / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Shape: per-sample latency improves with m (sublinear start)...
+    let per1 = oracle.fwd_latency(gpu, 1);
+    let per8 = oracle.fwd_latency(gpu, 8) / 8.0;
+    assert!(per1 > 1.2 * per8, "no sublinear regime");
+    // ...and memory is linear (R^2 of the fit near 1).
+    let pts: Vec<(f64, f64)> = (1..=8)
+        .map(|m| (m as f64, oracle.compute_mem(gpu, m)))
+        .collect();
+    let (slope, icpt) = cephalo::util::stats::linear_fit(&pts);
+    let r2 = cephalo::util::stats::r_squared(&pts, slope, icpt);
+    assert!(r2 > 0.98, "memory not linear: r2={r2}");
+    println!("shape check: sublinear latency + linear memory (r2={r2:.4}) \
+              [ok]");
+
+    // Real PJRT series (artifacts present only after `make artifacts`).
+    let dir = cephalo::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        match cephalo::coordinator::real_profile::profile_layer_fwd(&dir, 5)
+        {
+            Ok(samples) => {
+                let mut rt = Table::new(
+                    "Fig. 5 (real) — AOT layer_fwd via PJRT on this host",
+                    &["m", "mean", "min", "per-sample"],
+                );
+                for s in &samples {
+                    rt.add_row(vec![
+                        s.microbatch.to_string(),
+                        cephalo::util::human_secs(s.mean_seconds),
+                        cephalo::util::human_secs(s.min_seconds),
+                        cephalo::util::human_secs(
+                            s.mean_seconds / s.microbatch as f64,
+                        ),
+                    ]);
+                }
+                println!("{}", rt.render());
+            }
+            Err(e) => println!("real profile skipped: {e}"),
+        }
+    } else {
+        println!("real profile skipped: no artifacts (run `make artifacts`)");
+    }
+}

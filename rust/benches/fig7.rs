@@ -1,0 +1,88 @@
+//! Fig. 7: throughput vs batch size for FSDP, Cephalo-CB (compute
+//! balancing only), Cephalo-MB (memory balancing only), and full
+//! Cephalo — ViT-e, GPT 2.7B, Llama 3B on Cluster A. Every variant is
+//! measured on the shared simulator.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::optimizer::ablations;
+use cephalo::sim::GaVariant;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let batches = [32usize, 64, 96, 128, 160, 192, 224, 256];
+    for model in ["ViT-e", "GPT 2.7B", "Llama 3B"] {
+        let w = Workload::prepare(Cluster::cluster_a(), model, 42)
+            .expect("profile");
+        let mut headers = vec!["variant".to_string()];
+        headers.extend(batches.iter().map(|b| format!("@{b}")));
+        let mut t = Table::new(
+            &format!("Fig. 7 — {model} on Cluster A (samples/s)"),
+            &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        let mut rows: Vec<(String, Vec<Option<f64>>)> = Vec::new();
+        for (name, f) in [
+            ("FSDP", plan_fsdp as PlanFn),
+            ("Cephalo-CB", plan_cb as PlanFn),
+            ("Cephalo-MB", plan_mb as PlanFn),
+            ("Cephalo", plan_full as PlanFn),
+        ] {
+            let mut row = vec![name.to_string()];
+            let mut series = Vec::new();
+            for &b in &batches {
+                match f(&w, b) {
+                    Some(asg) => {
+                        let s = w.simulate(&asg, GaVariant::LGA_CO_S_O);
+                        row.push(format!("{:.2}", s.throughput));
+                        series.push(Some(s.throughput));
+                    }
+                    None => {
+                        row.push("OOM".into());
+                        series.push(None);
+                    }
+                }
+            }
+            t.add_row(row);
+            rows.push((name.to_string(), series));
+        }
+        println!("{}", t.render());
+
+        // Shape: CB OOMs beyond ~batch 100; MB never OOMs but is slow;
+        // Cephalo never OOMs and dominates at 256.
+        let get = |name: &str| {
+            rows.iter().find(|(n, _)| n == name).unwrap().1.clone()
+        };
+        let cb = get("Cephalo-CB");
+        let mb = get("Cephalo-MB");
+        let full = get("Cephalo");
+        assert!(cb.last().unwrap().is_none(), "{model}: CB should OOM @256");
+        assert!(mb.iter().all(Option::is_some), "{model}: MB should fit");
+        assert!(full.iter().all(Option::is_some),
+                "{model}: Cephalo should fit");
+        let f256 = full.last().unwrap().unwrap();
+        let m256 = mb.last().unwrap().unwrap();
+        assert!(f256 > 1.5 * m256,
+                "{model}: Cephalo {f256:.2} should dominate MB {m256:.2}");
+        println!("shape check [{model}]: CB OOMs, MB slow, Cephalo wins \
+                  [ok]\n");
+    }
+}
+
+type PlanFn = fn(&Workload, usize) -> Option<cephalo::optimizer::Assignment>;
+
+fn plan_fsdp(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
+    ablations::fsdp_even(&w.profile, b).ok()
+}
+
+fn plan_cb(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
+    ablations::compute_balanced_only(&w.profile, b).ok()
+}
+
+fn plan_mb(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
+    ablations::memory_balanced_only(&w.profile, b).ok()
+}
+
+fn plan_full(w: &Workload, b: usize)
+    -> Option<cephalo::optimizer::Assignment> {
+    w.optimize(b).ok().map(|(a, _)| a)
+}

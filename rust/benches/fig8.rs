@@ -1,0 +1,79 @@
+//! Fig. 8: speedup and memory reduction from the gradient-accumulation
+//! optimizations, GPT 6.7B on a homogeneous 16xV100 cluster (2x
+//! p3.16xlarge, 25 Gbps NICs), batch 256 = 16 microbatches of size 1
+//! per GPU. Ladder: FSDP-GA -> LGA -> +CO -> +S -> +O.
+
+use cephalo::cluster::Cluster;
+use cephalo::model::find_model;
+use cephalo::optimizer::{Assignment, GpuAssign};
+use cephalo::perfmodel::{CollectiveModel, SyntheticOracle};
+use cephalo::sim::cephalo::simulate_assignment;
+use cephalo::sim::GaVariant;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let cluster = Cluster::preset("16xv100").unwrap();
+    let model = find_model("GPT 6.7B").unwrap();
+    let oracle = SyntheticOracle::new(&cluster, &model, 42);
+    let coll = CollectiveModel::from_cluster(&cluster);
+    let asg = Assignment {
+        per_gpu: (0..16)
+            .map(|_| GpuAssign {
+                microbatch: 1,
+                num_micro: 16,
+                state_ratio: 1.0 / 16.0,
+            })
+            .collect(),
+        layer_latency: 0.0,
+        iter_latency: 0.0,
+    };
+
+    let ladder = [
+        ("FSDP-GA", GaVariant::FSDP_GA),
+        ("LGA", GaVariant::LGA),
+        ("LGA+CO", GaVariant::LGA_CO),
+        ("LGA+CO+S", GaVariant::LGA_CO_S),
+        ("LGA+CO+S+O", GaVariant::LGA_CO_S_O),
+    ];
+    let base = simulate_assignment(&model, &oracle, &coll, &asg,
+                                   GaVariant::FSDP_GA);
+    let mut t = Table::new(
+        "Fig. 8 — GA optimizations (GPT 6.7B, 16xV100, batch 256)",
+        &["variant", "iter (s)", "samples/s", "speedup", "AllGathers",
+          "peak mem GB"],
+    );
+    let mut speedups = Vec::new();
+    let mut mems = Vec::new();
+    for (name, v) in ladder {
+        let s = simulate_assignment(&model, &oracle, &coll, &asg, v);
+        let peak = s.per_gpu_mem.iter().fold(0.0f64, |a, &b| a.max(b));
+        speedups.push(base.latency / s.latency);
+        mems.push(peak);
+        t.add_row(vec![
+            name.into(),
+            format!("{:.2}", s.latency),
+            format!("{:.2}", s.throughput),
+            format!("{:.2}x", base.latency / s.latency),
+            s.ag_count.to_string(),
+            format!("{:.1}", peak / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Shape: monotone ladder; LGA's big jump comes from the 16x fewer
+    // AllGathers (paper: 6x there, 7.8x total; our simulated substrate
+    // lands lower but the ordering and the memory story must hold).
+    assert!(
+        speedups.windows(2).all(|w| w[1] >= w[0] * 0.999),
+        "ladder not monotone: {speedups:?}"
+    );
+    assert!(speedups[1] > 1.5, "LGA speedup too small: {}", speedups[1]);
+    assert!(speedups[4] > speedups[1], "CO+S+O must add on top of LGA");
+    // Memory: +O reduces below FSDP-GA; LGA alone raises it.
+    assert!(mems[1] > mems[0], "LGA should raise memory");
+    assert!(mems[4] < mems[0], "full ladder should cut memory");
+    println!(
+        "shape check: monotone {:.2}x..{:.2}x, mem {:.1} -> {:.1} GB  [ok]",
+        speedups[0], speedups[4], mems[0] / 1e9, mems[4] / 1e9
+    );
+}

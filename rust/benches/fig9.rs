@@ -1,0 +1,66 @@
+//! Fig. 9: optimized training configurations for ViT-G and Llama 3B on
+//! Cluster A at batch 256 — per-GPU batch share and training-state
+//! share. Expected shape (§4.6): the A6000 takes the largest batch AND
+//! the largest state share; L4s about half of the A6000; P40s hold more
+//! state than P100s thanks to their 24 GB.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    for model in ["ViT-G", "Llama 3B"] {
+        let w = Workload::prepare(Cluster::cluster_a(), model, 42)
+            .expect("profile");
+        let (asg, _) = w.optimize(256).expect("plan");
+        let mut t = Table::new(
+            &format!("Fig. 9 — optimized configuration: {model}, \
+                      Cluster A, batch 256"),
+            &["gpu", "type", "batch b_i", "batch %", "micro m_i x l_i",
+              "state %"],
+        );
+        let gpus = w.cluster.gpus();
+        for (i, (g, slot)) in asg.per_gpu.iter().zip(&gpus).enumerate() {
+            t.add_row(vec![
+                i.to_string(),
+                slot.spec.name.clone(),
+                g.batch().to_string(),
+                format!("{:.1}", g.batch() as f64 / 256.0 * 100.0),
+                format!("{} x {}", g.microbatch, g.num_micro),
+                format!("{:.1}", g.state_ratio * 100.0),
+            ]);
+        }
+        println!("{}", t.render());
+
+        // Shape checks (§4.6).
+        let by_type = |name: &str| -> (f64, f64) {
+            let mut batch = 0usize;
+            let mut state = 0.0;
+            let mut n = 0usize;
+            for (g, slot) in asg.per_gpu.iter().zip(&gpus) {
+                if slot.spec.name == name {
+                    batch += g.batch();
+                    state += g.state_ratio;
+                    n += 1;
+                }
+            }
+            (batch as f64 / n as f64, state / n as f64)
+        };
+        let (a6000_b, a6000_s) = by_type("A6000");
+        let (l4_b, _) = by_type("L4");
+        let (p40_b, p40_s) = by_type("P40");
+        let (p100_b, p100_s) = by_type("P100");
+        assert!(a6000_b >= l4_b, "{model}: A6000 should lead batch");
+        assert!(a6000_s >= p40_s, "{model}: A6000 should lead state");
+        assert!(
+            p40_s > p100_s,
+            "{model}: P40 (24 GB) should hold more state than P100 (12 GB)"
+        );
+        assert!(
+            l4_b > p40_b.max(p100_b),
+            "{model}: L4 should out-batch Pascal GPUs"
+        );
+        println!("shape check [{model}]: A6000 leads, P40>P100 state  \
+                  [ok]\n");
+    }
+}

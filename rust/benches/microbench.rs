@@ -1,0 +1,103 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation for L3.
+//! Covers: DP optimizer solve, greedy state partition, the event
+//! simulator, shard planning, numeric collectives, and (when artifacts
+//! are present) the real PJRT grad step.
+
+use cephalo::benchkit::Bencher;
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::optimizer::{partition_state, DpOptimizer};
+use cephalo::sharding::{ShardLayout, ShardPlan};
+use cephalo::sim::GaVariant;
+use cephalo::testkit::Gen;
+
+fn main() {
+    let mut b = Bencher::new(2, 10);
+
+    // --- optimizer ---
+    let wa = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+        .unwrap();
+    b.bench("dp_solve cluster A, B=128", || {
+        DpOptimizer::default().solve(&wa.profile, 128).unwrap()
+    });
+    b.bench("dp_solve cluster A, B=256", || {
+        DpOptimizer::default().solve(&wa.profile, 256).unwrap()
+    });
+    let wb = Workload::prepare(Cluster::cluster_b(), "GPT 6.7B", 42)
+        .unwrap();
+    let mut b_slow = Bencher::new(1, 3);
+    b_slow.bench("dp_solve cluster B (64 GPUs), B=512", || {
+        DpOptimizer::default().solve(&wb.profile, 512).unwrap()
+    });
+    b_slow.bench("dp_solve cluster B (64 GPUs), B=1024", || {
+        DpOptimizer::default().solve(&wb.profile, 1024).unwrap()
+    });
+
+    let (asg_a, _) = DpOptimizer::default().solve(&wa.profile, 128).unwrap();
+    b.bench("greedy_state_partition (8 GPUs)", || {
+        let mut pg = asg_a.per_gpu.clone();
+        partition_state(&wa.profile, &mut pg).unwrap();
+        pg
+    });
+
+    // --- simulator ---
+    b.bench("simulate_iteration BERT-Large/A (24 units)", || {
+        wa.simulate(&asg_a, GaVariant::LGA_CO_S_O)
+    });
+    let (asg_b, _) = DpOptimizer::default().solve(&wb.profile, 512).unwrap();
+    b.bench("simulate_iteration GPT-6.7B/B (64 GPUs, 32 units)", || {
+        wb.simulate(&asg_b, GaVariant::LGA_CO_S_O)
+    });
+
+    // --- sharding + collectives ---
+    b.bench("shard_plan 48 units x 8 GPUs", || {
+        ShardPlan::plan(48, 33_000_000, &[0.3, 0.2, 0.15, 0.1, 0.1, 0.05,
+                                          0.05, 0.05])
+    });
+    let mut g = Gen::new(1, 1.0);
+    let len = 1 << 20;
+    let layout = ShardLayout::by_ratios(len, &[0.3, 0.3, 0.2, 0.2]);
+    let full: Vec<Vec<f32>> = (0..4).map(|_| g.vec_f32(len, 1.0)).collect();
+    let shards: Vec<Vec<f32>> =
+        (0..4).map(|r| full[r][layout.range(r)].to_vec()).collect();
+    b.bench("ring_allgather 4 MB x 4 ranks", || {
+        cephalo::collectives::ring_allgather(&shards, &layout)
+    });
+    b.bench("ring_reduce_scatter 4 MB x 4 ranks", || {
+        cephalo::collectives::ring_reduce_scatter(&full, &layout)
+    });
+
+    // --- real PJRT grad step (optional) ---
+    let dir = cephalo::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        match cephalo::runtime::ExecService::start(&dir, &["grad_step"]) {
+            Ok(service) => {
+                let manifest = service.manifest().clone();
+                let params = std::sync::Arc::new(
+                    cephalo::trainer::init_params(&manifest, 7),
+                );
+                let handle = service.handle();
+                handle.set_params(std::sync::Arc::clone(&params)).unwrap();
+                let seq = manifest.model.seq_len;
+                let vocab = manifest.model.vocab as i64;
+                let mut rng = cephalo::util::prng::Rng::new(3);
+                for &m in &manifest.microbatches.clone() {
+                    let tokens: Vec<i32> = (0..m * seq)
+                        .map(|_| rng.range_i64(0, vocab) as i32)
+                        .collect();
+                    let targets = tokens.clone();
+                    let mut bm = Bencher::new(1, 5);
+                    bm.bench(&format!("pjrt grad_step m={m}"), || {
+                        handle
+                            .grad_step(tokens.clone(), targets.clone(), m)
+                            .unwrap()
+                    });
+                }
+            }
+            Err(e) => println!("pjrt microbench skipped: {e}"),
+        }
+    } else {
+        println!("pjrt microbench skipped: no artifacts");
+    }
+    println!("\nmicrobench done");
+}

@@ -1,0 +1,65 @@
+//! Table 4: training throughput (samples/s) on the 8-GPU Cluster A —
+//! 8 models x batch {128, 256} x {Megatron-Het, FlashFlex, Cephalo}.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::Workload;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let models = [
+        "ViT-G", "ViT-e", "BERT-Large", "BERT-XLarge", "GPT 1.3B",
+        "GPT 2.7B", "Tiny Llama", "Llama 3B",
+    ];
+    let systems = [
+        SystemKind::MegatronHet,
+        SystemKind::FlashFlex,
+        SystemKind::Cephalo,
+    ];
+    let mut headers = vec!["System".to_string()];
+    for m in models {
+        headers.push(format!("{m} @128"));
+        headers.push(format!("{m} @256"));
+    }
+    let mut t = Table::new(
+        "Table 4 — throughput (samples/s), Cluster A",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let workloads: Vec<Workload> = models
+        .iter()
+        .map(|m| {
+            Workload::prepare(Cluster::cluster_a(), m, 42).expect("profile")
+        })
+        .collect();
+
+    for system in systems {
+        let mut row = vec![system.name().to_string()];
+        for w in &workloads {
+            row.push(cell(w, 128, system));
+            row.push(cell(w, 256, system));
+        }
+        t.add_row(row);
+    }
+    println!("{}", t.render());
+
+    // Shape assertions (the paper's qualitative results).
+    for (i, w) in workloads.iter().enumerate() {
+        for batch in [128usize, 256] {
+            let c = throughput(w, batch, SystemKind::Cephalo);
+            assert!(c.is_ok(), "Cephalo OOM on {} @{batch}", models[i]);
+            let c = c.unwrap();
+            for other in [SystemKind::MegatronHet, SystemKind::FlashFlex] {
+                if let Ok(o) = throughput(w, batch, other) {
+                    assert!(
+                        c > o,
+                        "{} beat Cephalo on {} @{batch}: {o:.2} vs {c:.2}",
+                        other.name(),
+                        models[i]
+                    );
+                }
+            }
+        }
+    }
+    println!("shape check: Cephalo wins every cell without OOM  [ok]");
+}

@@ -1,0 +1,68 @@
+//! Table 5: throughput on the 64-GPU Cluster B — ViT-e / GPT 6.7B /
+//! Llama 7B at batch {512, 1024} x {Megatron-Het, FlashFlex, Cephalo}.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::Workload;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let models = ["ViT-e", "GPT 6.7B", "Llama 7B"];
+    let systems = [
+        SystemKind::MegatronHet,
+        SystemKind::FlashFlex,
+        SystemKind::Cephalo,
+    ];
+    let mut headers = vec!["System".to_string()];
+    for m in models {
+        headers.push(format!("{m} @512"));
+        headers.push(format!("{m} @1024"));
+    }
+    let mut t = Table::new(
+        "Table 5 — throughput (samples/s), Cluster B (64 GPUs)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    let workloads: Vec<Workload> = models
+        .iter()
+        .map(|m| {
+            Workload::prepare(Cluster::cluster_b(), m, 42).expect("profile")
+        })
+        .collect();
+    for system in systems {
+        let mut row = vec![system.name().to_string()];
+        for w in &workloads {
+            row.push(cell(w, 512, system));
+            row.push(cell(w, 1024, system));
+        }
+        t.add_row(row);
+    }
+    println!("{}", t.render());
+
+    // Shape: Cephalo clearly ahead of the best baseline (§4.3: 2-10x).
+    for (i, w) in workloads.iter().enumerate() {
+        for batch in [512usize, 1024] {
+            let c = throughput(w, batch, SystemKind::Cephalo)
+                .unwrap_or_else(|e| {
+                    panic!("Cephalo OOM on {} @{batch}: {e}", models[i])
+                });
+            let best_baseline = [SystemKind::MegatronHet,
+                                 SystemKind::FlashFlex]
+                .iter()
+                .filter_map(|s| throughput(w, batch, *s).ok())
+                .fold(0.0f64, f64::max);
+            if best_baseline > 0.0 {
+                let ratio = c / best_baseline;
+                assert!(
+                    ratio > 1.2,
+                    "{}: Cephalo speedup only {ratio:.2}x @{batch}",
+                    models[i]
+                );
+                println!(
+                    "{} @{batch}: Cephalo {c:.2}, best baseline \
+                     {best_baseline:.2} ({ratio:.1}x)",
+                    models[i]
+                );
+            }
+        }
+    }
+}

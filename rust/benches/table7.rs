@@ -1,0 +1,73 @@
+//! Table 7: profiling + optimization runtime breakdown for the largest
+//! workload (GPT 6.7B, 64 GPUs, batch 512). The paper reports 987 s on
+//! their testbed; here the profiling subtasks sample the synthetic
+//! oracle (the real-GPU substitution), so the interesting number is the
+//! DP partition time — which our Rust implementation reduces from the
+//! paper's 327 s to well under a second.
+
+use std::time::Instant;
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::model::find_model;
+use cephalo::optimizer::{partition_state, DpOptimizer};
+use cephalo::perfmodel::{CollectiveModel, Profiler, SyntheticOracle};
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let cluster = Cluster::cluster_b();
+    let model = find_model("GPT 6.7B").unwrap();
+    let batch = 512;
+
+    let mut t = Table::new(
+        "Table 7 — optimization runtime breakdown (GPT 6.7B, 64 GPUs, \
+         batch 512)",
+        &["subtask", "runtime (s)", "paper (s)"],
+    );
+
+    // Profile compute+memory: sample the oracle at m = 1..=8 per GPU.
+    let oracle = SyntheticOracle::new(&cluster, &model, 42);
+    let t0 = Instant::now();
+    let profile = Profiler::default().profile(&cluster, &model, &oracle);
+    let t_profile = t0.elapsed().as_secs_f64();
+    t.add_row(vec!["profile compute+memory".into(),
+                   format!("{t_profile:.3}"), "23 + 486".into()]);
+
+    let t0 = Instant::now();
+    let _coll = CollectiveModel::from_cluster(&cluster);
+    let t_comm = t0.elapsed().as_secs_f64();
+    t.add_row(vec!["profile communication".into(), format!("{t_comm:.3}"),
+                   "150".into()]);
+
+    let t0 = Instant::now();
+    let (asg, stats) =
+        DpOptimizer::default().solve(&profile, batch).expect("solve");
+    let t_dp = t0.elapsed().as_secs_f64();
+    t.add_row(vec!["partition compute (DP)".into(), format!("{t_dp:.3}"),
+                   "327".into()]);
+
+    let t0 = Instant::now();
+    let mut per_gpu = asg.per_gpu.clone();
+    partition_state(&profile, &mut per_gpu).expect("state partition");
+    let t_state = t0.elapsed().as_secs_f64();
+    t.add_row(vec!["partition state (greedy)".into(),
+                   format!("{t_state:.3}"), "1".into()]);
+
+    t.add_row(vec![
+        "total".into(),
+        format!("{:.3}", t_profile + t_comm + t_dp + t_state),
+        "987".into(),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "DP stats: {} states, {} transitions, granularity {} \
+         (k_max {})",
+        stats.states_visited, stats.transitions, stats.granularity,
+        stats.k_max
+    );
+    // The paper's bound: the whole pipeline within 20 minutes. Ours must
+    // be far below.
+    assert!(t_dp < 60.0, "DP too slow: {t_dp}s");
+    let w = Workload::prepare(Cluster::cluster_b(), "GPT 6.7B", 42).unwrap();
+    assert_eq!(w.profile.num_gpus(), 64);
+}

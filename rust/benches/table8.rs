@@ -1,0 +1,73 @@
+//! Table 8 (Supplementary D): FSDP / Whale / HAP / Cephalo on Cluster A
+//! — the additional-baselines comparison. The paper's shape: Whale and
+//! HAP train only BERT-Large; FSDP OOMs on the larger models and at
+//! batch 256 for ViT-G / BERT-XLarge / Tiny Llama; Cephalo never OOMs.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::Workload;
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let models = [
+        "ViT-G", "ViT-e", "BERT-Large", "BERT-XLarge", "GPT 1.3B",
+        "GPT 2.7B", "Tiny Llama", "Llama 3B",
+    ];
+    let systems = [
+        SystemKind::Fsdp,
+        SystemKind::Whale,
+        SystemKind::Hap,
+        SystemKind::Cephalo,
+    ];
+    let mut headers = vec!["System".to_string()];
+    for m in models {
+        headers.push(format!("{m} @128"));
+        headers.push(format!("{m} @256"));
+    }
+    let mut t = Table::new(
+        "Table 8 — additional baselines, Cluster A",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    let workloads: Vec<Workload> = models
+        .iter()
+        .map(|m| {
+            Workload::prepare(Cluster::cluster_a(), m, 42).expect("profile")
+        })
+        .collect();
+    for system in systems {
+        let mut row = vec![system.name().to_string()];
+        for w in &workloads {
+            row.push(cell(w, 128, system));
+            row.push(cell(w, 256, system));
+        }
+        t.add_row(row);
+    }
+    println!("{}", t.render());
+
+    // Shape checks.
+    let bert = &workloads[2];
+    assert!(throughput(bert, 128, SystemKind::Whale).is_ok());
+    assert!(throughput(bert, 128, SystemKind::Hap).is_ok());
+    let mut whale_ooms = 0;
+    let mut hap_ooms = 0;
+    for (i, w) in workloads.iter().enumerate() {
+        if i == 2 {
+            continue; // BERT-Large
+        }
+        if throughput(w, 128, SystemKind::Whale).is_err() {
+            whale_ooms += 1;
+        }
+        if throughput(w, 128, SystemKind::Hap).is_err() {
+            hap_ooms += 1;
+        }
+        // Cephalo never OOMs.
+        assert!(throughput(w, 256, SystemKind::Cephalo).is_ok());
+    }
+    assert!(whale_ooms >= 6, "Whale should OOM on most models");
+    assert!(hap_ooms >= 6, "HAP should OOM on most models");
+    // HAP's cross-node TP makes it slower than FSDP on BERT-Large.
+    let hap = throughput(bert, 128, SystemKind::Hap).unwrap();
+    let fsdp = throughput(bert, 128, SystemKind::Fsdp).unwrap();
+    assert!(hap < fsdp, "HAP ({hap:.2}) should trail FSDP ({fsdp:.2})");
+    println!("shape check: OOM pattern + HAP<FSDP hold  [ok]");
+}

@@ -1,0 +1,113 @@
+//! Baseline FSDP (even-everything) with the PyTorch memory profile:
+//! even batch split, no gradient accumulation, even state sharding,
+//! layer-boundary checkpoints resident on GPU, fragmentation from the
+//! default allocator behaviour. The Table-8 / Fig.-7 "FSDP" row.
+
+use super::{BaselineOutcome, BaselinePlanner, PlanContext,
+            PYTORCH_FRAGMENTATION};
+use crate::memory::{state_bytes, usable_capacity};
+use crate::optimizer::PlanError;
+
+pub struct FsdpBaseline;
+
+impl BaselinePlanner for FsdpBaseline {
+    fn name(&self) -> &'static str {
+        "FSDP"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<BaselineOutcome, PlanError> {
+        let n = ctx.cluster.num_gpus();
+        let model = ctx.model;
+        if ctx.batch % n != 0 {
+            return Err(PlanError::Infeasible(format!(
+                "batch {} not divisible by {n} GPUs",
+                ctx.batch
+            )));
+        }
+        let b = ctx.batch / n;
+        let even_state = state_bytes(model.total_params() as f64) / n as f64;
+
+        for i in 0..n {
+            let prof = &ctx.profile.per_gpu[i];
+            let checkpoints = model.boundary_activation_bytes()
+                * (b * model.layers) as f64;
+            let compute = (prof.mem.intercept
+                + prof.mem.slope * b as f64
+                + checkpoints)
+                * PYTORCH_FRAGMENTATION;
+            let need = even_state + compute;
+            let cap = usable_capacity(prof.capacity);
+            if need > cap {
+                return Err(PlanError::OutOfMemory {
+                    gpu: i,
+                    needed: need,
+                    capacity: cap,
+                });
+            }
+        }
+
+        // Latency via Eqs. 2/3: slowest GPU bounds each phase; even
+        // sharding, so even collectives.
+        let ag = ctx.profile.unit_allgather();
+        let rs = ctx.profile.unit_reduce_scatter();
+        let tf = (0..n)
+            .map(|i| ctx.oracle.fwd_latency(i, b))
+            .fold(0.0, f64::max);
+        let tb = (0..n)
+            .map(|i| ctx.oracle.bwd_latency(i, b))
+            .fold(0.0, f64::max);
+        let layer = tf.max(ag) + tb.max(ag + rs);
+        let latency = layer * model.layers as f64;
+        Ok(BaselineOutcome {
+            system: self.name().into(),
+            iter_latency: latency,
+            throughput: ctx.batch as f64 / latency,
+            config: format!("even dp: {b}/GPU, even shard"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::Ctx;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn table8_fsdp_pattern() {
+        // FSDP trains ViT-G/BERT-Large/BERT-XLarge/TinyLlama @ 128 but
+        // OOMs GPT 2.7B and Llama 3B on cluster A (Supplementary D).
+        for model in ["ViT-G", "BERT-Large", "BERT-XLarge", "Tiny Llama"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            let r = FsdpBaseline.plan(&c.ctx(128));
+            assert!(r.is_ok(), "{model} @128: {:?}", r.err());
+        }
+        for model in ["GPT 2.7B", "Llama 3B", "ViT-e"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            assert!(
+                FsdpBaseline.plan(&c.ctx(128)).is_err(),
+                "{model} should OOM @128"
+            );
+        }
+    }
+
+    #[test]
+    fn ooms_at_larger_batch() {
+        // Table 8: ViT-G trains at 128, OOMs at 256.
+        let c = Ctx::new(Cluster::cluster_a(), "ViT-G");
+        assert!(FsdpBaseline.plan(&c.ctx(128)).is_ok());
+        assert!(FsdpBaseline.plan(&c.ctx(256)).is_err());
+    }
+
+    #[test]
+    fn bottlenecked_by_slowest_gpu() {
+        // The even split leaves fast GPUs idle: throughput is bounded by
+        // the P100's speed, not the aggregate.
+        let c = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        let out = FsdpBaseline.plan(&c.ctx(128)).unwrap();
+        let ideal = c.model.iter_flops(128, true)
+            / (c.cluster.total_tflops() * 1e12 * 0.42);
+        assert!(out.iter_latency > 1.8 * ideal);
+    }
+}

@@ -1,0 +1,176 @@
+//! HAP (Zhang et al., 2024b): SPMD training with automated sharding —
+//! tensor parallelism ACROSS nodes + data parallelism within nodes,
+//! batch and parameters sharded unevenly to match compute.
+//!
+//! HAP does not model per-GPU memory constraints (Supplementary D), so
+//! it OOMs on everything but BERT-Large on cluster A; and its cross-node
+//! tensor parallelism pays per-layer activation allreduces over the slow
+//! inter-node link, making it slower than even baseline FSDP.
+
+use super::{allreduce_time, BaselineOutcome, BaselinePlanner, PlanContext};
+use crate::memory::usable_capacity;
+use crate::optimizer::ablations::proportional_split;
+use crate::optimizer::PlanError;
+
+pub struct Hap;
+
+impl BaselinePlanner for Hap {
+    fn name(&self) -> &'static str {
+        "HAP"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<BaselineOutcome, PlanError> {
+        let model = ctx.model;
+        let nodes = &ctx.cluster.nodes;
+        let tp = nodes.len(); // tensor parallel across nodes
+        if tp < 1 {
+            return Err(PlanError::Infeasible("empty cluster".into()));
+        }
+        let dp = nodes.iter().map(|n| n.gpus.len()).min().unwrap();
+
+        // Uneven parameter shard per node ∝ node compute (HAP's
+        // automated sharding); uneven batch within DP ∝ GPU compute.
+        let node_tflops: Vec<f64> = nodes
+            .iter()
+            .map(|n| n.gpus.iter().map(|g| g.tflops_fp32).sum())
+            .collect();
+        let total_tflops: f64 = node_tflops.iter().sum();
+
+        let gpus = ctx.cluster.gpus();
+        // DP replica r uses GPU r of each node; batch ∝ replica speed.
+        let replica_speed: Vec<f64> = (0..dp)
+            .map(|r| {
+                (0..tp)
+                    .map(|s| {
+                        let slot = ctx
+                            .cluster
+                            .gpus()
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, g)| g.node == s)
+                            .map(|(i, _)| i)
+                            .nth(r)
+                            .unwrap();
+                        let m = 8;
+                        m as f64
+                            / (ctx.oracle.fwd_latency(slot, m)
+                                + ctx.oracle.bwd_latency(slot, m))
+                    })
+                    .fold(f64::INFINITY, f64::min) // replica bound by slowest shard
+            })
+            .collect();
+        let batches = proportional_split(ctx.batch, &replica_speed);
+
+        // ---- memory (HAP ignores it; we detect the resulting OOM) ----
+        let total_params = model.total_params() as f64;
+        for (i, g) in gpus.iter().enumerate() {
+            let node_share = node_tflops[g.node] / total_tflops;
+            // Parameters sharded by TP (node share), replicated in DP;
+            // full fp32 Adam state for the shard.
+            let state = 16.0 * total_params * node_share;
+            let r = g.index_in_node.min(dp - 1);
+            let b = batches[r].max(1);
+            let prof = &ctx.profile.per_gpu[i];
+            let checkpoints = model.boundary_activation_bytes()
+                * (b * model.layers) as f64;
+            let need =
+                state + prof.mem.intercept + prof.mem.slope * b as f64
+                    + checkpoints;
+            let cap = usable_capacity(prof.capacity);
+            if need > cap {
+                return Err(PlanError::OutOfMemory {
+                    gpu: i,
+                    needed: need,
+                    capacity: cap,
+                });
+            }
+        }
+
+        // ---- latency ----
+        // Compute: slowest replica's model pass with its TP speedup
+        // (bounded by its slowest shard GPU).
+        let compute = (0..dp)
+            .map(|r| {
+                let b = batches[r];
+                if b == 0 {
+                    return 0.0;
+                }
+                (0..tp)
+                    .map(|s| {
+                        let slot = gpus
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, g)| g.node == s)
+                            .map(|(i, _)| i)
+                            .nth(r)
+                            .unwrap();
+                        let share = node_tflops[s] / total_tflops;
+                        (ctx.oracle.fwd_latency(slot, b)
+                            + ctx.oracle.bwd_latency(slot, b))
+                            * model.layers as f64
+                            * share
+                    })
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max);
+        // TP activation allreduces: 4 per layer per replica-batch over
+        // the INTER-NODE link — HAP's killer overhead.
+        let max_b = *batches.iter().max().unwrap();
+        let act_bytes =
+            (max_b * model.seq_len * model.d_model * 4) as f64;
+        let tp_comm = 4.0
+            * model.layers as f64
+            * allreduce_time(act_bytes, tp, ctx.cluster.inter_bw_gbps);
+        // DP gradient allreduce within nodes.
+        let grad_sync = allreduce_time(
+            total_params * 4.0 / tp as f64,
+            dp,
+            nodes.iter().map(|n| n.intra_bw_gbps).fold(f64::INFINITY,
+                                                       f64::min),
+        );
+        let latency = compute + tp_comm + grad_sync;
+        Ok(BaselineOutcome {
+            system: self.name().into(),
+            iter_latency: latency,
+            throughput: ctx.batch as f64 / latency,
+            config: format!("tp={tp} dp={dp} batches={batches:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::Ctx;
+    use crate::cluster::Cluster;
+    use crate::optimizer::ablations::fsdp_even;
+
+    #[test]
+    fn table8_only_bert_large_fits() {
+        let ok = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        assert!(Hap.plan(&ok.ctx(128)).is_ok());
+        for model in ["ViT-G", "BERT-XLarge", "GPT 2.7B"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            let r = Hap.plan(&c.ctx(128));
+            assert!(
+                matches!(r, Err(PlanError::OutOfMemory { .. })),
+                "{model} should OOM: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn slower_than_fsdp_due_to_cross_node_tp() {
+        // Table 8: HAP 17.48 vs FSDP 24.50 on BERT-Large @ 128.
+        let c = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        let hap = Hap.plan(&c.ctx(128)).unwrap();
+        let fsdp = fsdp_even(&c.profile, 128).unwrap();
+        let fsdp_tput = 128.0 / fsdp.iter_latency;
+        assert!(
+            hap.throughput < fsdp_tput,
+            "HAP {} should trail FSDP {fsdp_tput}",
+            hap.throughput
+        );
+    }
+}

@@ -1,0 +1,297 @@
+//! Megatron-Het (§4.1): Megatron-LM adapted for heterogeneous clusters.
+//!
+//! Topology: one pipeline stage per node; within a node, GPUs form a
+//! (data-parallel x tensor-parallel) grid, with ZeRO-2 sharding of
+//! gradients + optimizer state inside the DP group (§4.3). Layers are
+//! partitioned across stages proportionally to node compute — but every
+//! pipeline must be partitioned *identically*, so mixed GPU types within
+//! a node put slow GPUs on the same stage as fast ones and the slowest
+//! bounds the stage (§4.2's P40 bottleneck).
+//!
+//! Tensor parallelism is only available for architectures Megatron-LM
+//! implements (GPT and BERT); ViT / Llama variants run tp = 1, which is
+//! why the big ViT-e and Llama-3B rows OOM in Table 4.
+
+use super::{allreduce_time, pow2_candidates, BaselineOutcome,
+            BaselinePlanner, PlanContext};
+use crate::cluster::gbps_to_bytes_per_sec;
+use crate::memory::usable_capacity;
+use crate::optimizer::PlanError;
+use crate::sim::{simulate_pipeline, PipelineWorkload, StageSpec};
+
+pub struct MegatronHet;
+
+/// Does Megatron-LM support tensor parallelism for this model family?
+fn tp_supported(model_name: &str) -> bool {
+    let n = model_name.to_ascii_lowercase();
+    n.contains("gpt") || n.contains("bert")
+}
+
+impl BaselinePlanner for MegatronHet {
+    fn name(&self) -> &'static str {
+        "Megatron-Het"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<BaselineOutcome, PlanError> {
+        let nodes = &ctx.cluster.nodes;
+        let stages = nodes.len();
+        let model = ctx.model;
+
+        // Compute-proportional layer partition (identical pipelines).
+        let node_tflops: Vec<f64> = nodes
+            .iter()
+            .map(|n| n.gpus.iter().map(|g| g.tflops_fp32).sum())
+            .collect();
+        let layer_split = crate::optimizer::ablations::proportional_split(
+            model.layers,
+            &node_tflops,
+        );
+
+        // GPU flat index of each node's slots.
+        let gpus = ctx.cluster.gpus();
+        let mut node_slots: Vec<Vec<usize>> = vec![Vec::new(); stages];
+        for (i, g) in gpus.iter().enumerate() {
+            node_slots[g.node].push(i);
+        }
+
+        let gpus_per_node = nodes
+            .iter()
+            .map(|n| n.gpus.len())
+            .min()
+            .unwrap_or(0);
+        if gpus_per_node == 0 {
+            return Err(PlanError::Infeasible("empty node".into()));
+        }
+
+        let tp_options: Vec<usize> = if tp_supported(&model.name) {
+            (0..)
+                .map(|e| 1usize << e)
+                .take_while(|t| *t <= gpus_per_node)
+                .collect()
+        } else {
+            vec![1]
+        };
+
+        let mut best: Option<(f64, String)> = None;
+        let mut oom: Option<PlanError> = None;
+
+        for &tp in &tp_options {
+            if gpus_per_node % tp != 0 {
+                continue;
+            }
+            let dp = gpus_per_node / tp; // pipelines
+            if ctx.batch % dp != 0 {
+                continue;
+            }
+            let per_pipeline = ctx.batch / dp;
+            for &m in &pow2_candidates(per_pipeline) {
+                if per_pipeline % m != 0 {
+                    continue;
+                }
+                let l = per_pipeline / m;
+                match self.evaluate(ctx, &layer_split, &node_slots, tp, dp,
+                                    m, l) {
+                    Ok(latency) => {
+                        let cfg = format!(
+                            "pp={stages} tp={tp} dp={dp} micro={m} x {l}"
+                        );
+                        if best
+                            .as_ref()
+                            .map(|(b, _)| latency < *b)
+                            .unwrap_or(true)
+                        {
+                            best = Some((latency, cfg));
+                        }
+                    }
+                    Err(e @ PlanError::OutOfMemory { .. }) => {
+                        oom.get_or_insert(e);
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+
+        match best {
+            Some((latency, config)) => Ok(BaselineOutcome {
+                system: self.name().into(),
+                iter_latency: latency,
+                throughput: ctx.batch as f64 / latency,
+                config,
+            }),
+            None => Err(oom.unwrap_or(PlanError::Infeasible(
+                "no megatron configuration feasible".into(),
+            ))),
+        }
+    }
+}
+
+impl MegatronHet {
+    /// Memory-check one configuration and simulate the slowest pipeline.
+    #[allow(clippy::too_many_arguments)]
+    fn evaluate(
+        &self,
+        ctx: &PlanContext<'_>,
+        layer_split: &[usize],
+        node_slots: &[Vec<usize>],
+        tp: usize,
+        dp: usize,
+        m: usize,
+        l: usize,
+    ) -> Result<f64, PlanError> {
+        let model = ctx.model;
+        let stages = layer_split.len();
+        let unit_params = model.params_per_layer() as f64;
+
+        // ---- memory check (per GPU, worst in each stage) ----
+        for (s, slots) in node_slots.iter().enumerate() {
+            let stage_params = layer_split[s] as f64 * unit_params / tp as f64;
+            // ZeRO-2: params replicated in DP, grads+opt state sharded.
+            let state = 4.0 * stage_params
+                + 12.0 * stage_params / dp as f64;
+            // In-flight activations: the GPipe all-forward wave holds
+            // boundary checkpoints for ALL l microbatches of the stage.
+            let acts = model.boundary_activation_bytes()
+                * (m * l * layer_split[s]) as f64
+                / tp as f64;
+            for &slot in slots {
+                let prof = &ctx.profile.per_gpu[slot];
+                let workspace =
+                    prof.mem.intercept + prof.mem.slope * m as f64 / tp as f64;
+                let need = state + acts + workspace;
+                let cap = usable_capacity(prof.capacity);
+                if need > cap {
+                    return Err(PlanError::OutOfMemory {
+                        gpu: slot,
+                        needed: need,
+                        capacity: cap,
+                    });
+                }
+            }
+        }
+
+        // ---- latency: simulate the SLOWEST pipeline (its finish gates
+        // the gradient sync; identical partitions mean the pipeline
+        // containing each node's slowest GPU is the straggler) ----
+        let mut stage_specs = Vec::with_capacity(stages);
+        for (s, slots) in node_slots.iter().enumerate() {
+            // Slowest GPU of the node runs this stage in some pipeline.
+            let worst = slots
+                .iter()
+                .map(|&i| {
+                    (ctx.oracle.fwd_latency(i, m),
+                     ctx.oracle.bwd_latency(i, m))
+                })
+                .max_by(|a, b| (a.0 + a.1).partial_cmp(&(b.0 + b.1)).unwrap())
+                .unwrap();
+            // tp divides compute; adds two allreduces per layer per
+            // microbatch (fwd) + two (bwd) over the intra-node link.
+            let tp_comm = if tp > 1 {
+                let bytes =
+                    (m * model.seq_len * model.d_model * 4) as f64;
+                let node = &ctx.cluster.nodes[s];
+                4.0 * allreduce_time(bytes, tp, node.intra_bw_gbps)
+                    * layer_split[s] as f64
+            } else {
+                0.0
+            };
+            stage_specs.push(StageSpec {
+                device: s,
+                fwd_micro: worst.0 * layer_split[s] as f64 / tp as f64
+                    + tp_comm / 3.0,
+                bwd_micro: worst.1 * layer_split[s] as f64 / tp as f64
+                    + tp_comm * 2.0 / 3.0,
+            });
+        }
+        let p2p_bytes = (m * model.seq_len * model.d_model * 4) as f64;
+        let p2p = 10e-6
+            + p2p_bytes
+                / gbps_to_bytes_per_sec(ctx.cluster.inter_bw_gbps);
+        let (pipe_latency, _) = simulate_pipeline(&PipelineWorkload {
+            stages: stage_specs,
+            microbatches: l,
+            p2p_time: p2p,
+        });
+
+        // Gradient allreduce across the dp pipelines per stage (ZeRO-2
+        // reduce-scatter + allgather of fp32 grads), overlapping stages.
+        let grad_sync = node_slots
+            .iter()
+            .enumerate()
+            .map(|(s, _)| {
+                let bytes = layer_split[s] as f64 * unit_params * 4.0
+                    / tp as f64;
+                allreduce_time(
+                    bytes,
+                    dp,
+                    ctx.cluster.nodes[s].intra_bw_gbps,
+                )
+            })
+            .fold(0.0, f64::max);
+        Ok(pipe_latency + grad_sync)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::Ctx;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn trains_small_models_on_cluster_a() {
+        let c = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        let out = MegatronHet.plan(&c.ctx(128)).expect("feasible");
+        assert!(out.throughput > 0.0);
+        assert!(out.config.contains("pp=2"));
+    }
+
+    #[test]
+    fn table4_oom_pattern() {
+        // Paper Table 4: Megatron-Het OOMs on ViT-e and Llama 3B
+        // (no Megatron tensor parallelism for those architectures).
+        for model in ["ViT-e", "Llama 3B"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            let r = MegatronHet.plan(&c.ctx(128));
+            assert!(r.is_err(), "{model} should OOM, got {r:?}");
+        }
+        // ...but trains ViT-G, GPT 2.7B, Tiny Llama.
+        for model in ["ViT-G", "GPT 2.7B", "Tiny Llama"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            let r = MegatronHet.plan(&c.ctx(128));
+            assert!(r.is_ok(), "{model} should train: {:?}", r.err());
+        }
+    }
+
+    #[test]
+    fn tp_support_matrix() {
+        assert!(tp_supported("GPT 2.7B"));
+        assert!(tp_supported("BERT-Large"));
+        assert!(!tp_supported("ViT-e"));
+        assert!(!tp_supported("Llama 3B"));
+    }
+
+    #[test]
+    fn slower_than_ideal_due_to_p40_bottleneck() {
+        // §4.2: the P40s bound both stages; Megatron cannot reach the
+        // cluster's aggregate compute.
+        let c = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        let out = MegatronHet.plan(&c.ctx(128)).unwrap();
+        // Aggregate-compute ideal iteration time.
+        let total_flops = c.model.iter_flops(128, true);
+        let ideal = total_flops
+            / (c.cluster.total_tflops() * 1e12 * 0.42);
+        assert!(
+            out.iter_latency > 1.5 * ideal,
+            "megatron {} vs ideal {ideal}",
+            out.iter_latency
+        );
+    }
+
+    #[test]
+    fn works_on_cluster_b() {
+        let c = Ctx::new(Cluster::cluster_b(), "GPT 6.7B");
+        let out = MegatronHet.plan(&c.ctx(512)).expect("feasible");
+        assert!(out.throughput > 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Baseline heterogeneous-training systems (§4.1, Supplementary D).
+//!
+//! Each baseline is a *planner* that searches its own configuration
+//! space (microbatch size, tensor-parallel degree, layer partition) and
+//! returns the best feasible iteration latency on the shared execution
+//! simulator — mirroring the paper's methodology ("we tested various
+//! microbatch sizes (powers of 2), with the best results reported").
+//!
+//! Structural constraints faithfully reproduced:
+//! * **Megatron-Het** — pipeline across nodes with *identical pipeline
+//!   partitions*, ZeRO-2 data parallelism within nodes, tensor
+//!   parallelism only for the architectures Megatron-LM supports
+//!   (GPT/BERT), communication-heavy over PCIe/Ethernet.
+//! * **FlashFlex** — heterogeneous pipelines (per-GPU-type stages),
+//!   ZeRO-2 sharding, *memory-proportional* layer partitioning (the
+//!   paper's criticism: T4 stages get V100-sized compute).
+//! * **Whale** — uneven-batch data parallelism with FULL training-state
+//!   replication (no sharding).
+//! * **HAP** — tensor parallelism across nodes + data parallelism within
+//!   nodes, no memory-constraint awareness.
+//! * **FSDP** — even-everything fully sharded baseline.
+
+pub mod flashflex;
+pub mod fsdp;
+pub mod hap;
+pub mod megatron;
+pub mod whale;
+
+use crate::cluster::Cluster;
+use crate::model::TransformerSpec;
+use crate::optimizer::PlanError;
+use crate::perfmodel::{ClusterPerfProfile, ComputeOracle};
+
+/// Inputs shared by every baseline planner.
+pub struct PlanContext<'a> {
+    pub cluster: &'a Cluster,
+    pub model: &'a TransformerSpec,
+    pub profile: &'a ClusterPerfProfile,
+    pub oracle: &'a dyn ComputeOracle,
+    pub batch: usize,
+}
+
+/// A baseline's chosen configuration and its simulated performance.
+#[derive(Debug, Clone)]
+pub struct BaselineOutcome {
+    pub system: String,
+    pub iter_latency: f64,
+    pub throughput: f64,
+    /// Human-readable description of the winning configuration.
+    pub config: String,
+}
+
+/// Common interface so benches can sweep systems uniformly.
+pub trait BaselinePlanner {
+    fn name(&self) -> &'static str;
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<BaselineOutcome, PlanError>;
+}
+
+/// Microbatch candidates: powers of two up to `max`.
+pub fn pow2_candidates(max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut m = 1;
+    while m <= max {
+        v.push(m);
+        m *= 2;
+    }
+    v
+}
+
+/// Allocator overhead multiplier applied to PyTorch-DP-family baselines
+/// (FSDP, Whale) on their compute memory: caching-allocator slack,
+/// transient double-buffering of gathered units and recompute peaks that
+/// the planner-visible linear model does not capture.
+pub const PYTORCH_FRAGMENTATION: f64 = 1.25;
+
+/// Ring allreduce time for `bytes` over `ranks` with bottleneck `gbps`.
+pub fn allreduce_time(bytes: f64, ranks: usize, gbps: f64) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let n = ranks as f64;
+    let bw = crate::cluster::gbps_to_bytes_per_sec(gbps);
+    // RS + AG, each moving (n-1)/n of the data.
+    2.0 * ((n - 1.0) * 20e-6 + bytes * (n - 1.0) / (n * bw))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::model::find_model;
+    use crate::perfmodel::{Profiler, SyntheticOracle};
+
+    pub struct Ctx {
+        pub cluster: Cluster,
+        pub model: TransformerSpec,
+        pub profile: ClusterPerfProfile,
+        pub oracle: SyntheticOracle,
+    }
+
+    impl Ctx {
+        pub fn new(cluster: Cluster, model: &str) -> Ctx {
+            let model = find_model(model).unwrap();
+            let oracle = SyntheticOracle::new(&cluster, &model, 42);
+            let profile =
+                Profiler::default().profile(&cluster, &model, &oracle);
+            Ctx { cluster, model, profile, oracle }
+        }
+
+        pub fn ctx(&self, batch: usize) -> PlanContext<'_> {
+            PlanContext {
+                cluster: &self.cluster,
+                model: &self.model,
+                profile: &self.profile,
+                oracle: &self.oracle,
+                batch,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2() {
+        assert_eq!(pow2_candidates(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(pow2_candidates(20), vec![1, 2, 4, 8, 16]);
+        assert_eq!(pow2_candidates(1), vec![1]);
+    }
+
+    #[test]
+    fn allreduce_scales() {
+        let t1 = allreduce_time(1e9, 8, 50.0);
+        let t2 = allreduce_time(2e9, 8, 50.0);
+        assert!(t2 / t1 > 1.9 && t2 / t1 < 2.1);
+        assert_eq!(allreduce_time(1e9, 1, 50.0), 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Whale (Jia et al., 2022): heterogeneity-aware data parallelism.
+//!
+//! Batch sizes are assigned proportionally to profiled GPU speed, but
+//! the training state is FULLY REPLICATED on every GPU (vanilla DP). As
+//! Supplementary D shows, that replication OOMs everything but
+//! BERT-Large on cluster A: P100s run out while P40s sit at 50%
+//! utilization — the compute/memory coupling Cephalo breaks.
+
+use super::{allreduce_time, BaselineOutcome, BaselinePlanner, PlanContext,
+            PYTORCH_FRAGMENTATION};
+use crate::memory::{state_bytes, usable_capacity};
+use crate::optimizer::ablations::proportional_split;
+use crate::optimizer::PlanError;
+
+pub struct Whale;
+
+impl BaselinePlanner for Whale {
+    fn name(&self) -> &'static str {
+        "Whale"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<BaselineOutcome, PlanError> {
+        let n = ctx.cluster.num_gpus();
+        let model = ctx.model;
+
+        // Batch ∝ profiled speed (saturated per-sample throughput).
+        let speeds: Vec<f64> = (0..n)
+            .map(|i| {
+                let m = 8;
+                m as f64
+                    / (ctx.oracle.fwd_latency(i, m)
+                        + ctx.oracle.bwd_latency(i, m))
+            })
+            .collect();
+        let batches = proportional_split(ctx.batch, &speeds);
+
+        // Memory: full replicated state + per-batch compute + layer
+        // checkpoints, with PyTorch fragmentation (no Cephalo sync).
+        let full_state = state_bytes(model.total_params() as f64);
+        for (i, &b) in batches.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            let prof = &ctx.profile.per_gpu[i];
+            let checkpoints = model.boundary_activation_bytes()
+                * (b * model.layers) as f64;
+            let compute = (prof.mem.intercept
+                + prof.mem.slope * b as f64
+                + checkpoints)
+                * PYTORCH_FRAGMENTATION;
+            let need = full_state + compute;
+            let cap = usable_capacity(prof.capacity);
+            if need > cap {
+                return Err(PlanError::OutOfMemory {
+                    gpu: i,
+                    needed: need,
+                    capacity: cap,
+                });
+            }
+        }
+
+        // Latency: slowest GPU's full fwd+bwd + ring allreduce of the
+        // full fp32 gradient.
+        let compute = batches
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b > 0)
+            .map(|(i, &b)| {
+                (ctx.oracle.fwd_latency(i, b)
+                    + ctx.oracle.bwd_latency(i, b))
+                    * model.layers as f64
+            })
+            .fold(0.0, f64::max);
+        let sync = allreduce_time(
+            model.total_params() as f64 * 4.0,
+            n,
+            ctx.cluster.ring_bw_gbps(),
+        );
+        let latency = compute + sync;
+        Ok(BaselineOutcome {
+            system: self.name().into(),
+            iter_latency: latency,
+            throughput: ctx.batch as f64 / latency,
+            config: format!("dp batches={batches:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::Ctx;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn table8_only_bert_large_fits() {
+        // Supplementary D: Whale trains only BERT-Large on cluster A.
+        let ok = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        assert!(Whale.plan(&ok.ctx(128)).is_ok());
+        for model in ["ViT-G", "BERT-XLarge", "GPT 2.7B", "Tiny Llama"] {
+            let c = Ctx::new(Cluster::cluster_a(), model);
+            let r = Whale.plan(&c.ctx(128));
+            assert!(
+                matches!(r, Err(PlanError::OutOfMemory { .. })),
+                "{model} should OOM: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_track_speed() {
+        let c = Ctx::new(Cluster::cluster_a(), "BERT-Large");
+        let out = Whale.plan(&c.ctx(128)).unwrap();
+        // The A6000 (38.7 TF) should get several times the P100 share —
+        // visible in the config string.
+        assert!(out.config.contains("dp batches="));
+        assert!(out.throughput > 0.0);
+    }
+}

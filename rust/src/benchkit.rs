@@ -1,0 +1,139 @@
+//! Criterion-style benchmark harness (criterion substitute).
+//!
+//! The `benches/*.rs` binaries are `harness = false` and drive this
+//! module directly: warmup, repeated timed iterations, mean/std/percentile
+//! reporting, and optional CSV/markdown capture for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p50 {:>12}, p95 {:>12}, n={})",
+            self.name,
+            crate::util::human_secs(self.mean_s),
+            crate::util::human_secs(self.p50_s),
+            crate::util::human_secs(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with warmup + sampling.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    pub measurements: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, sample_iters: 15, measurements: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Self { warmup_iters, sample_iters, measurements: Vec::new() }
+    }
+
+    /// Time `f`, which should perform one full unit of the benchmarked
+    /// work, returning a value that is black-boxed to keep the optimizer
+    /// honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F)
+        -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.sample_iters,
+            mean_s: stats::mean(&samples),
+            std_s: stats::std_dev(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: stats::min(&samples),
+            max_s: stats::max(&samples),
+        };
+        println!("{}", m.report());
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Render all measurements as a markdown table (EXPERIMENTS.md §Perf).
+    pub fn render_markdown(&self, title: &str) -> String {
+        let mut t = crate::util::tablefmt::Table::new(
+            title,
+            &["benchmark", "mean", "p50", "p95", "std", "iters"],
+        );
+        for m in &self.measurements {
+            t.add_row(vec![
+                m.name.clone(),
+                crate::util::human_secs(m.mean_s),
+                crate::util::human_secs(m.p50_s),
+                crate::util::human_secs(m.p95_s),
+                crate::util::human_secs(m.std_s),
+                m.iters.to_string(),
+            ]);
+        }
+        t.render_markdown()
+    }
+}
+
+/// Identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::new(1, 5);
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.p50_s && m.p50_s <= m.max_s);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn collects_multiple_measurements() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("a", || 1 + 1);
+        b.bench("b", || 2 + 2);
+        assert_eq!(b.measurements.len(), 2);
+        let md = b.render_markdown("t");
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Command-line argument parsing (clap substitute).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--switch`, and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for one subcommand.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for a subcommand.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse `argv` (without the program name) against `specs`.
+/// Unknown `--options` are an error; positionals pass through.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for spec in specs {
+        if let Some(d) = spec.default {
+            args.opts.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown option --{name}"))?;
+            if spec.is_switch {
+                if inline_val.is_some() {
+                    return Err(format!("--{name} takes no value"));
+                }
+                args.switches.push(name.to_string());
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                    }
+                };
+                args.opts.insert(name.to_string(), val);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\noptions:\n");
+    for s in specs {
+        let head = if s.is_switch {
+            format!("  --{}", s.name)
+        } else {
+            format!("  --{} <value>", s.name)
+        };
+        let default = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("{head:<32} {}{default}\n", s.help));
+    }
+    out
+}
+
+pub const fn opt(
+    name: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+) -> OptSpec {
+    OptSpec { name, help, default, is_switch: false }
+}
+
+pub const fn switch(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_switch: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            opt("batch", "global batch size", Some("128")),
+            opt("cluster", "cluster name", None),
+            switch("verbose", "debug logging"),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_usize("batch"), Some(128));
+        assert_eq!(a.get("cluster"), None);
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&sv(&["--batch", "256", "--cluster=a"]), &specs())
+            .unwrap();
+        assert_eq!(a.get_usize("batch"), Some(256));
+        assert_eq!(a.get("cluster"), Some("a"));
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = parse(&sv(&["train", "--verbose", "extra"]), &specs())
+            .unwrap();
+        assert!(a.has("verbose"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&sv(&["--batch"]), &specs()).is_err()); // missing value
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("train", "run training", &specs());
+        assert!(u.contains("--batch"));
+        assert!(u.contains("default: 128"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Synthetic AWS GPU-availability trace (Fig. 1 substitute).
+//!
+//! The paper plots hourly availability of GPU VM types in us-west over a
+//! 12-hour window: A100/H100 nearly always unavailable, mid-tier (A10G,
+//! V100, T4) limited. We cannot re-run their crawler, so this module
+//! generates a seeded trace with the same qualitative profile: a per-type
+//! base availability level, diurnal modulation and bursty stock-outs.
+//! Deterministic given the seed — the Fig.-1 bench regenerates the same
+//! series every run.
+
+use crate::util::prng::Rng;
+
+/// Availability profile for one instance type.
+#[derive(Debug, Clone)]
+pub struct TypeProfile {
+    pub gpu: String,
+    /// Mean fraction of requested capacity that is grantable (0..1).
+    pub base_availability: f64,
+    /// Maximum instances a single account can typically obtain.
+    pub quota_cap: u32,
+}
+
+/// Paper-calibrated profiles: high-end nearly zero, mid-tier limited.
+pub fn default_profiles() -> Vec<TypeProfile> {
+    vec![
+        TypeProfile { gpu: "H100".into(), base_availability: 0.02, quota_cap: 2 },
+        TypeProfile { gpu: "A100".into(), base_availability: 0.05, quota_cap: 4 },
+        TypeProfile { gpu: "A10G".into(), base_availability: 0.45, quota_cap: 16 },
+        TypeProfile { gpu: "V100".into(), base_availability: 0.40, quota_cap: 16 },
+        TypeProfile { gpu: "T4".into(), base_availability: 0.65, quota_cap: 32 },
+        TypeProfile { gpu: "K80".into(), base_availability: 0.90, quota_cap: 32 },
+    ]
+}
+
+/// One hourly sample: instances obtainable for each type.
+#[derive(Debug, Clone)]
+pub struct HourSample {
+    pub hour: usize,
+    pub available: Vec<(String, u32)>,
+}
+
+/// Generate an `hours`-long trace (Fig. 1 uses 12).
+pub fn generate(seed: u64, hours: usize, profiles: &[TypeProfile])
+    -> Vec<HourSample> {
+    let mut rng = Rng::new(seed);
+    // Per-type burst state: stock-outs persist for a few hours.
+    let mut stockout: Vec<usize> = vec![0; profiles.len()];
+    let mut out = Vec::with_capacity(hours);
+    for hour in 0..hours {
+        let mut available = Vec::with_capacity(profiles.len());
+        // Mild diurnal demand wave: availability dips mid-trace.
+        let diurnal = 1.0
+            - 0.25
+                * (std::f64::consts::PI * hour as f64 / hours.max(1) as f64)
+                    .sin();
+        for (i, p) in profiles.iter().enumerate() {
+            if stockout[i] > 0 {
+                stockout[i] -= 1;
+                available.push((p.gpu.clone(), 0));
+                continue;
+            }
+            // Chance of entering a stock-out burst is higher for scarce
+            // types.
+            if rng.bool((1.0 - p.base_availability) * 0.3) {
+                stockout[i] = rng.range(1, 4);
+                available.push((p.gpu.clone(), 0));
+                continue;
+            }
+            let level = (p.base_availability * diurnal
+                * (0.6 + 0.8 * rng.f64()))
+            .clamp(0.0, 1.0);
+            let count = (level * p.quota_cap as f64).round() as u32;
+            available.push((p.gpu.clone(), count.min(p.quota_cap)));
+        }
+        out.push(HourSample { hour, available });
+    }
+    out
+}
+
+/// Fraction of hours with zero availability for `gpu`.
+pub fn unavailability_fraction(trace: &[HourSample], gpu: &str) -> f64 {
+    let zero_hours = trace
+        .iter()
+        .filter(|h| {
+            h.available
+                .iter()
+                .any(|(g, c)| g == gpu && *c == 0)
+        })
+        .count();
+    zero_hours as f64 / trace.len().max(1) as f64
+}
+
+/// Mean available instances for `gpu` over the trace.
+pub fn mean_available(trace: &[HourSample], gpu: &str) -> f64 {
+    let total: u32 = trace
+        .iter()
+        .flat_map(|h| h.available.iter())
+        .filter(|(g, _)| g == gpu)
+        .map(|(_, c)| *c)
+        .sum();
+    total as f64 / trace.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = default_profiles();
+        let a = generate(42, 12, &p);
+        let b = generate(42, 12, &p);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.available, y.available);
+        }
+    }
+
+    #[test]
+    fn high_end_scarcer_than_mid_tier() {
+        let p = default_profiles();
+        let trace = generate(7, 240, &p);
+        let h100_unavail = unavailability_fraction(&trace, "H100");
+        let t4_unavail = unavailability_fraction(&trace, "T4");
+        assert!(
+            h100_unavail > 0.7,
+            "H100 should be mostly unavailable, got {h100_unavail}"
+        );
+        assert!(t4_unavail < 0.5, "T4 too scarce: {t4_unavail}");
+        assert!(mean_available(&trace, "T4") > mean_available(&trace, "A100"));
+    }
+
+    #[test]
+    fn trace_length_and_types() {
+        let p = default_profiles();
+        let trace = generate(1, 12, &p);
+        assert_eq!(trace.len(), 12);
+        for h in &trace {
+            assert_eq!(h.available.len(), p.len());
+        }
+    }
+
+    #[test]
+    fn counts_respect_quota() {
+        let p = default_profiles();
+        let trace = generate(3, 100, &p);
+        for h in &trace {
+            for (g, c) in &h.available {
+                let prof = p.iter().find(|x| &x.gpu == g).unwrap();
+                assert!(*c <= prof.quota_cap);
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! GPU specification catalog.
+//!
+//! Table 3 of the paper plus the additional models appearing in Fig. 2's
+//! TFLOPs-vs-memory scatter and Fig. 1's availability trace. All numbers
+//! are vendor FP32 peak (no tensor cores) and marketing memory capacity,
+//! matching the paper's usage.
+
+use crate::util::GB;
+
+/// Static description of one GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub generation: String,
+    /// Memory capacity in GB (decimal, as marketed / Table 3).
+    pub mem_gb: f64,
+    /// Peak FP32 TFLOPs (Table 3).
+    pub tflops_fp32: f64,
+}
+
+impl GpuSpec {
+    pub fn new(name: &str, generation: &str, mem_gb: f64, tflops: f64)
+        -> Self {
+        Self {
+            name: name.into(),
+            generation: generation.into(),
+            mem_gb,
+            tflops_fp32: tflops,
+        }
+    }
+
+    /// Memory capacity in bytes.
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gb * GB
+    }
+
+    /// Peak FLOP/s.
+    pub fn flops(&self) -> f64 {
+        self.tflops_fp32 * 1e12
+    }
+
+    /// Compute-to-memory ratio (TFLOPs per GB) — the heterogeneity axis
+    /// the paper's Fig. 2 highlights (L4 vs P40 etc.).
+    pub fn compute_mem_ratio(&self) -> f64 {
+        self.tflops_fp32 / self.mem_gb
+    }
+}
+
+/// Table 3 GPUs (clusters A and B) + Fig. 2 extras.
+pub fn catalog() -> Vec<GpuSpec> {
+    vec![
+        // Cluster A (Table 3)
+        GpuSpec::new("P40", "Pascal", 24.0, 11.8),
+        GpuSpec::new("P100", "Pascal", 12.0, 9.3),
+        GpuSpec::new("A6000", "Ampere", 48.0, 38.7),
+        GpuSpec::new("L4", "Ada", 24.0, 30.3),
+        // Cluster B (Table 3)
+        GpuSpec::new("V100", "Volta", 16.0, 14.1),
+        GpuSpec::new("T4", "Turing", 15.0, 8.1),
+        GpuSpec::new("A10G", "Ampere", 24.0, 31.2),
+        // Fig. 1 / Fig. 2 extras
+        GpuSpec::new("A100", "Ampere", 80.0, 19.5),
+        GpuSpec::new("H100", "Hopper", 80.0, 66.9),
+        GpuSpec::new("K80", "Kepler", 12.0, 4.1),
+        GpuSpec::new("M60", "Maxwell", 8.0, 4.8),
+        GpuSpec::new("RTX6000", "Turing", 24.0, 16.3),
+    ]
+}
+
+/// Lookup by name (case-sensitive, as in Table 3).
+pub fn find(name: &str) -> Option<GpuSpec> {
+    catalog().into_iter().find(|g| g.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values_exact() {
+        let p40 = find("P40").unwrap();
+        assert_eq!(p40.mem_gb, 24.0);
+        assert_eq!(p40.tflops_fp32, 11.8);
+        assert_eq!(p40.generation, "Pascal");
+        let a6000 = find("A6000").unwrap();
+        assert_eq!(a6000.mem_gb, 48.0);
+        assert_eq!(a6000.tflops_fp32, 38.7);
+        let t4 = find("T4").unwrap();
+        assert_eq!(t4.mem_gb, 15.0);
+        assert_eq!(t4.tflops_fp32, 8.1);
+    }
+
+    #[test]
+    fn fig2_mismatch_examples() {
+        // The paper's motivating mismatch: L4 is ~2.6x faster than P40
+        // at the SAME memory capacity.
+        let l4 = find("L4").unwrap();
+        let p40 = find("P40").unwrap();
+        assert_eq!(l4.mem_gb, p40.mem_gb);
+        assert!(l4.tflops_fp32 / p40.tflops_fp32 > 2.0);
+        // And V100 vs T4: similar memory, very different compute (§4.3).
+        let v100 = find("V100").unwrap();
+        let t4 = find("T4").unwrap();
+        assert!((v100.mem_gb - t4.mem_gb).abs() <= 1.0);
+        assert!(v100.tflops_fp32 > 1.5 * t4.tflops_fp32);
+    }
+
+    #[test]
+    fn bytes_conversion() {
+        let t4 = find("T4").unwrap();
+        assert_eq!(t4.mem_bytes(), 15.0 * GB);
+        assert_eq!(t4.flops(), 8.1e12);
+    }
+
+    #[test]
+    fn catalog_has_no_duplicates() {
+        let c = catalog();
+        for (i, a) in c.iter().enumerate() {
+            for b in &c[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_mem_ratio_ordering() {
+        // L4 has one of the highest compute:memory ratios in the catalog;
+        // P100 is mid; K80 is low.
+        let l4 = find("L4").unwrap().compute_mem_ratio();
+        let k80 = find("K80").unwrap().compute_mem_ratio();
+        assert!(l4 > 3.0 * k80);
+    }
+}

@@ -1,0 +1,348 @@
+//! Heterogeneous cluster description: GPU catalog (Table 3 / Fig. 2),
+//! node and cluster topology (Clusters A and B from §4.1), and the AWS
+//! availability-trace generator behind Fig. 1.
+
+pub mod aws_trace;
+pub mod catalog;
+
+use crate::configfmt::Config;
+use catalog::GpuSpec;
+
+/// One machine: a set of GPUs plus the intra-node interconnect.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub gpus: Vec<GpuSpec>,
+    /// Intra-node GPU<->GPU bandwidth in Gbps (PCIe or NVLink).
+    pub intra_bw_gbps: f64,
+}
+
+/// A (possibly heterogeneous) GPU cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Inter-node network bandwidth in Gbps.
+    pub inter_bw_gbps: f64,
+}
+
+/// Flat view of one GPU within a cluster.
+#[derive(Debug, Clone)]
+pub struct GpuSlot {
+    pub node: usize,
+    pub index_in_node: usize,
+    pub spec: GpuSpec,
+}
+
+impl Cluster {
+    /// All GPUs flattened in (node, slot) order — the canonical GPU
+    /// indexing used by the optimizer and trainer.
+    pub fn gpus(&self) -> Vec<GpuSlot> {
+        let mut out = Vec::new();
+        for (n, node) in self.nodes.iter().enumerate() {
+            for (i, spec) in node.gpus.iter().enumerate() {
+                out.push(GpuSlot {
+                    node: n,
+                    index_in_node: i,
+                    spec: spec.clone(),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus.len()).sum()
+    }
+
+    /// Aggregate FP32 TFLOPs.
+    pub fn total_tflops(&self) -> f64 {
+        self.gpus().iter().map(|g| g.spec.tflops_fp32).sum()
+    }
+
+    /// Aggregate memory in bytes.
+    pub fn total_mem_bytes(&self) -> f64 {
+        self.gpus().iter().map(|g| g.spec.mem_bytes()).sum()
+    }
+
+    /// True if all GPUs share one spec.
+    pub fn is_homogeneous(&self) -> bool {
+        let gpus = self.gpus();
+        gpus.windows(2).all(|w| w[0].spec.name == w[1].spec.name)
+    }
+
+    /// The effective all-reduce path bandwidth between two GPUs: the
+    /// inter-node link if they are on different nodes, else intra-node.
+    pub fn bw_between_gbps(&self, a: usize, b: usize) -> f64 {
+        let gpus = self.gpus();
+        if gpus[a].node == gpus[b].node {
+            self.nodes[gpus[a].node].intra_bw_gbps
+        } else {
+            self.inter_bw_gbps
+        }
+    }
+
+    /// The bottleneck bandwidth for a cluster-wide ring collective:
+    /// if any two members are on different nodes, the inter-node link
+    /// bounds the ring.
+    pub fn ring_bw_gbps(&self) -> f64 {
+        if self.nodes.len() > 1 {
+            self.inter_bw_gbps
+        } else {
+            self.nodes[0].intra_bw_gbps
+        }
+    }
+
+    /// §4.1 Cluster A: 2 machines (8 GPUs) over a 50 Gbps link.
+    /// Machine 1: 2×L4, 1×A6000, 1×P40; machine 2: 2×P40, 2×P100.
+    pub fn cluster_a() -> Cluster {
+        let c = catalog::catalog();
+        let g = |name: &str| c.iter().find(|s| s.name == name).unwrap().clone();
+        Cluster {
+            name: "A".into(),
+            nodes: vec![
+                Node {
+                    name: "a-node0".into(),
+                    gpus: vec![g("L4"), g("L4"), g("A6000"), g("P40")],
+                    intra_bw_gbps: 128.0, // PCIe 4.0 x16
+                },
+                Node {
+                    name: "a-node1".into(),
+                    gpus: vec![g("P40"), g("P40"), g("P100"), g("P100")],
+                    intra_bw_gbps: 96.0, // PCIe 3.0 x16
+                },
+            ],
+            inter_bw_gbps: 50.0,
+        }
+    }
+
+    /// §4.1 Cluster B: 8 VMs (64 GPUs), 100 Gbps:
+    /// 2×g5.48xlarge (8×A10G each), 2×p3.16xlarge (8×V100 each),
+    /// 4×g4dn.metal (8×T4 each).
+    pub fn cluster_b() -> Cluster {
+        let c = catalog::catalog();
+        let g = |name: &str| c.iter().find(|s| s.name == name).unwrap().clone();
+        let vm = |name: &str, gpu: &str, intra: f64| Node {
+            name: name.into(),
+            gpus: (0..8).map(|_| g(gpu)).collect(),
+            intra_bw_gbps: intra,
+        };
+        Cluster {
+            name: "B".into(),
+            nodes: vec![
+                vm("g5-0", "A10G", 128.0),
+                vm("g5-1", "A10G", 128.0),
+                vm("p3-0", "V100", 300.0), // NVLink (not all-to-all)
+                vm("p3-1", "V100", 300.0),
+                vm("g4dn-0", "T4", 96.0),
+                vm("g4dn-1", "T4", 96.0),
+                vm("g4dn-2", "T4", 96.0),
+                vm("g4dn-3", "T4", 96.0),
+            ],
+            inter_bw_gbps: 100.0,
+        }
+    }
+
+    /// Subset of Cluster B used by Fig. 6 left: only the named GPU types.
+    pub fn cluster_b_subset(types: &[&str]) -> Cluster {
+        let full = Self::cluster_b();
+        let nodes: Vec<Node> = full
+            .nodes
+            .into_iter()
+            .filter(|n| types.contains(&n.gpus[0].name.as_str()))
+            .collect();
+        assert!(!nodes.is_empty(), "no nodes matched {types:?}");
+        Cluster {
+            name: format!("B[{}]", types.join("+")),
+            nodes,
+            inter_bw_gbps: 100.0,
+        }
+    }
+
+    /// Homogeneous comparison cluster (Fig. 6 right: 32×A10G; Fig. 8:
+    /// 16×V100).
+    pub fn homogeneous(gpu: &str, count: usize, per_node: usize,
+                       inter_bw_gbps: f64) -> Cluster {
+        let c = catalog::catalog();
+        let spec = c
+            .iter()
+            .find(|s| s.name == gpu)
+            .unwrap_or_else(|| panic!("unknown GPU '{gpu}'"))
+            .clone();
+        assert!(count % per_node == 0);
+        let nodes = (0..count / per_node)
+            .map(|i| Node {
+                name: format!("{gpu}-node{i}"),
+                gpus: vec![spec.clone(); per_node],
+                intra_bw_gbps: 128.0,
+            })
+            .collect();
+        Cluster {
+            name: format!("{count}x{gpu}"),
+            nodes,
+            inter_bw_gbps,
+        }
+    }
+
+    /// Look up a named preset cluster.
+    pub fn preset(name: &str) -> Option<Cluster> {
+        match name.to_ascii_lowercase().as_str() {
+            "a" | "cluster-a" => Some(Self::cluster_a()),
+            "b" | "cluster-b" => Some(Self::cluster_b()),
+            // p3.16xlarge VMs expose 25 Gbps NICs (the Fig.-8 testbed).
+            "16xv100" => Some(Self::homogeneous("V100", 16, 8, 25.0)),
+            "32xa10g" => Some(Self::homogeneous("A10G", 32, 8, 100.0)),
+            _ => None,
+        }
+    }
+
+    /// Build a cluster from a parsed TOML config (see `configs/*.toml`).
+    pub fn from_config(cfg: &Config) -> Result<Cluster, String> {
+        let cat = catalog::catalog();
+        let name = cfg.str("cluster.name").unwrap_or("custom").to_string();
+        let inter = cfg
+            .f64("cluster.inter_bw_gbps")
+            .ok_or("missing cluster.inter_bw_gbps")?;
+        let n_nodes = cfg.table_count("node");
+        if n_nodes == 0 {
+            return Err("config defines no [[node]] blocks".into());
+        }
+        let mut nodes = Vec::new();
+        for i in 0..n_nodes {
+            let gpus_val = cfg
+                .get(&format!("node[{i}].gpus"))
+                .and_then(|v| v.as_array())
+                .ok_or(format!("node[{i}] missing gpus array"))?;
+            let mut gpus = Vec::new();
+            for v in gpus_val {
+                let gname = v.as_str().ok_or("gpu names must be strings")?;
+                let spec = cat
+                    .iter()
+                    .find(|s| s.name == gname)
+                    .ok_or(format!("unknown GPU type '{gname}'"))?;
+                gpus.push(spec.clone());
+            }
+            let intra = cfg
+                .f64(&format!("node[{i}].intra_bw_gbps"))
+                .unwrap_or(96.0);
+            nodes.push(Node {
+                name: format!("node{i}"),
+                gpus,
+                intra_bw_gbps: intra,
+            });
+        }
+        Ok(Cluster { name, nodes, inter_bw_gbps: inter })
+    }
+}
+
+/// Convert Gbps to bytes/second.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}
+
+/// Peak aggregate TFLOPs check used in Fig. 6 right (984 vs 998).
+pub fn peak_tflops_close(a: &Cluster, b: &Cluster, tol_frac: f64) -> bool {
+    let (ta, tb) = (a.total_tflops(), b.total_tflops());
+    ((ta - tb) / tb).abs() <= tol_frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_a_composition() {
+        let a = Cluster::cluster_a();
+        assert_eq!(a.num_gpus(), 8);
+        let counts = |name: &str| {
+            a.gpus().iter().filter(|g| g.spec.name == name).count()
+        };
+        assert_eq!(counts("L4"), 2);
+        assert_eq!(counts("A6000"), 1);
+        assert_eq!(counts("P40"), 3);
+        assert_eq!(counts("P100"), 2);
+        assert_eq!(a.inter_bw_gbps, 50.0);
+        assert!(!a.is_homogeneous());
+    }
+
+    #[test]
+    fn cluster_b_composition() {
+        let b = Cluster::cluster_b();
+        assert_eq!(b.num_gpus(), 64);
+        let counts = |name: &str| {
+            b.gpus().iter().filter(|g| g.spec.name == name).count()
+        };
+        assert_eq!(counts("A10G"), 16);
+        assert_eq!(counts("V100"), 16);
+        assert_eq!(counts("T4"), 32);
+        assert_eq!(b.inter_bw_gbps, 100.0);
+    }
+
+    #[test]
+    fn fig6_homogeneous_comparison_is_matched() {
+        // Paper: Cluster B (998 TFLOPs) vs 32xA10G (984 TFLOPs).
+        let b = Cluster::cluster_b();
+        let homo = Cluster::homogeneous("A10G", 32, 8, 100.0);
+        assert!(peak_tflops_close(&b, &homo, 0.05));
+        assert!(homo.is_homogeneous());
+    }
+
+    #[test]
+    fn subset_selection() {
+        let s = Cluster::cluster_b_subset(&["A10G"]);
+        assert_eq!(s.num_gpus(), 16);
+        let s2 = Cluster::cluster_b_subset(&["A10G", "V100"]);
+        assert_eq!(s2.num_gpus(), 32);
+    }
+
+    #[test]
+    fn gpu_flat_indexing_is_stable() {
+        let a = Cluster::cluster_a();
+        let gpus = a.gpus();
+        assert_eq!(gpus[0].spec.name, "L4");
+        assert_eq!(gpus[3].spec.name, "P40");
+        assert_eq!(gpus[3].node, 0);
+        assert_eq!(gpus[4].node, 1);
+    }
+
+    #[test]
+    fn bandwidth_lookup() {
+        let a = Cluster::cluster_a();
+        assert_eq!(a.bw_between_gbps(0, 1), 128.0); // same node
+        assert_eq!(a.bw_between_gbps(0, 7), 50.0); // cross node
+        assert_eq!(a.ring_bw_gbps(), 50.0);
+    }
+
+    #[test]
+    fn from_config_roundtrip() {
+        let text = r#"
+[cluster]
+name = "mini"
+inter_bw_gbps = 25.0
+
+[[node]]
+gpus = ["T4", "V100"]
+intra_bw_gbps = 64.0
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let c = Cluster::from_config(&cfg).unwrap();
+        assert_eq!(c.num_gpus(), 2);
+        assert_eq!(c.gpus()[1].spec.name, "V100");
+        assert_eq!(c.inter_bw_gbps, 25.0);
+    }
+
+    #[test]
+    fn from_config_rejects_unknown_gpu() {
+        let text = "[cluster]\ninter_bw_gbps = 1.0\n[[node]]\ngpus = [\"NOPE\"]";
+        let cfg = Config::parse(text).unwrap();
+        assert!(Cluster::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert!(Cluster::preset("a").is_some());
+        assert!(Cluster::preset("B").is_some());
+        assert!(Cluster::preset("16xV100".to_lowercase().as_str()).is_some());
+        assert!(Cluster::preset("nope").is_none());
+    }
+}

@@ -1,0 +1,272 @@
+//! Numeric collectives over in-process ranks (§3.3 generalized
+//! AllGather / ReduceScatter).
+//!
+//! The trainer's workers live in one address space, so a collective is a
+//! deterministic transformation over per-rank buffers. Two
+//! implementations are provided and property-tested against each other:
+//!
+//! * `direct_*` — the obvious gather/sum reference.
+//! * `ring_*`  — a faithful segmented-ring schedule (what NCCL runs),
+//!   operating in N-1 steps over the uneven shard layout. This is the
+//!   implementation the trainer uses, so the tests double as evidence
+//!   that uneven input sizes are handled exactly.
+//!
+//! All functions take a `ShardLayout` so even and uneven sharding share
+//! one code path.
+
+use crate::sharding::ShardLayout;
+
+/// AllGather: each rank contributes its shard; returns the full vector.
+/// Reference implementation: direct concatenation.
+pub fn direct_allgather(shards: &[Vec<f32>], layout: &ShardLayout)
+    -> Vec<f32> {
+    assert_eq!(shards.len(), layout.num_ranks());
+    let mut out = vec![0f32; layout.len()];
+    for (rank, shard) in shards.iter().enumerate() {
+        let range = layout.range(rank);
+        assert_eq!(shard.len(), range.len(), "rank {rank} shard size");
+        out[range].copy_from_slice(shard);
+    }
+    out
+}
+
+/// ReduceScatter: every rank holds a full-length contribution; rank r
+/// receives the element-wise sum restricted to its shard range.
+pub fn direct_reduce_scatter(full: &[Vec<f32>], layout: &ShardLayout)
+    -> Vec<Vec<f32>> {
+    let n = layout.num_ranks();
+    assert_eq!(full.len(), n);
+    for f in full {
+        assert_eq!(f.len(), layout.len());
+    }
+    (0..n)
+        .map(|rank| {
+            let range = layout.range(rank);
+            let mut shard = vec![0f32; range.len()];
+            for contrib in full {
+                for (o, v) in shard.iter_mut().zip(&contrib[range.clone()]) {
+                    *o += v;
+                }
+            }
+            shard
+        })
+        .collect()
+}
+
+/// AllReduce = ReduceScatter + AllGather (sum).
+pub fn direct_allreduce(full: &[Vec<f32>], layout: &ShardLayout)
+    -> Vec<f32> {
+    let shards = direct_reduce_scatter(full, layout);
+    direct_allgather(&shards, layout)
+}
+
+/// Segmented-ring AllGather: in step s, rank r forwards the segment it
+/// received in step s-1 to rank (r+1) mod N; after N-1 steps everyone
+/// holds all segments. Handles uneven (including empty) segments.
+pub fn ring_allgather(shards: &[Vec<f32>], layout: &ShardLayout)
+    -> Vec<f32> {
+    let n = layout.num_ranks();
+    assert_eq!(shards.len(), n);
+    // Each rank's working buffer for the full vector.
+    let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![0f32; layout.len()]).collect();
+    for (rank, shard) in shards.iter().enumerate() {
+        let range = layout.range(rank);
+        assert_eq!(shard.len(), range.len());
+        bufs[rank][range].copy_from_slice(shard);
+    }
+    // Ring steps: rank r sends segment (r - s) mod n in step s.
+    for s in 0..n.saturating_sub(1) {
+        // Compute sends first (synchronous step semantics).
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let seg = (r + n - s) % n;
+                let range = layout.range(seg);
+                (r, seg, bufs[r][range].to_vec())
+            })
+            .collect();
+        for (r, seg, data) in sends {
+            let dst = (r + 1) % n;
+            let range = layout.range(seg);
+            bufs[dst][range].copy_from_slice(&data);
+        }
+    }
+    // All ranks now agree; return rank 0's view (asserted in tests).
+    bufs.swap_remove(0)
+}
+
+/// Segmented-ring ReduceScatter: in step s, rank r sends the partial sum
+/// of segment (r + 1 + s) mod n to rank r+1; after N-1 steps rank r
+/// holds the full sum of its own segment.
+pub fn ring_reduce_scatter(full: &[Vec<f32>], layout: &ShardLayout)
+    -> Vec<Vec<f32>> {
+    let n = layout.num_ranks();
+    assert_eq!(full.len(), n);
+    let mut bufs: Vec<Vec<f32>> = full.to_vec();
+    for s in 0..n.saturating_sub(1) {
+        // Rank r sends segment (r - s - 1 + 2n) mod n, accumulated into
+        // the receiver's buffer.
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..n)
+            .map(|r| {
+                let seg = (r + 2 * n - s - 1) % n;
+                let range = layout.range(seg);
+                (r, seg, bufs[r][range].to_vec())
+            })
+            .collect();
+        for (r, seg, data) in sends {
+            let dst = (r + 1) % n;
+            let range = layout.range(seg);
+            for (o, v) in bufs[dst][range].iter_mut().zip(&data) {
+                *o += v;
+            }
+        }
+    }
+    (0..n)
+        .map(|r| bufs[r][layout.range(r)].to_vec())
+        .collect()
+}
+
+/// Weighted sum across ranks without scatter — the Eq.-1 aggregation
+/// used by the leader when shards carry per-GPU weights.
+pub fn weighted_sum(full: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(full.len(), weights.len());
+    assert!(!full.is_empty());
+    let len = full[0].len();
+    let mut out = vec![0f32; len];
+    for (contrib, &w) in full.iter().zip(weights) {
+        assert_eq!(contrib.len(), len);
+        for (o, v) in out.iter_mut().zip(contrib) {
+            *o += w * v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    fn gen_shards(g: &mut crate::testkit::Gen, layout: &ShardLayout)
+        -> Vec<Vec<f32>> {
+        (0..layout.num_ranks())
+            .map(|r| g.vec_f32(layout.size(r), 2.0))
+            .collect()
+    }
+
+    #[test]
+    fn direct_allgather_even() {
+        let layout = ShardLayout::even(6, 3);
+        let shards = vec![vec![1., 2.], vec![3., 4.], vec![5., 6.]];
+        assert_eq!(
+            direct_allgather(&shards, &layout),
+            vec![1., 2., 3., 4., 5., 6.]
+        );
+    }
+
+    #[test]
+    fn direct_reduce_scatter_sums() {
+        let layout = ShardLayout::even(4, 2);
+        let full = vec![vec![1., 1., 1., 1.], vec![2., 2., 2., 2.]];
+        let shards = direct_reduce_scatter(&full, &layout);
+        assert_eq!(shards, vec![vec![3., 3.], vec![3., 3.]]);
+    }
+
+    #[test]
+    fn prop_ring_allgather_matches_direct() {
+        check("ring-ag-vs-direct", 150, |g| {
+            let n = g.usize_in(1, 9);
+            let len = g.usize_in(0, 400);
+            let ratios = g.ratios(n);
+            let layout = if g.bool() {
+                ShardLayout::even(len, n)
+            } else {
+                ShardLayout::by_ratios(len, &ratios)
+            };
+            let shards = gen_shards(g, &layout);
+            let expect = direct_allgather(&shards, &layout);
+            let got = ring_allgather(&shards, &layout);
+            assert_eq!(got, expect);
+        });
+    }
+
+    #[test]
+    fn prop_ring_reduce_scatter_matches_direct() {
+        check("ring-rs-vs-direct", 150, |g| {
+            let n = g.usize_in(1, 9);
+            let len = g.usize_in(0, 300);
+            let ratios = g.ratios(n);
+            let layout = if g.bool() {
+                ShardLayout::even(len, n)
+            } else {
+                ShardLayout::by_ratios(len, &ratios)
+            };
+            let full: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_f32(len, 2.0)).collect();
+            let expect = direct_reduce_scatter(&full, &layout);
+            let got = ring_reduce_scatter(&full, &layout);
+            for (rank, (e, r)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(e.len(), r.len());
+                for (i, (a, b)) in e.iter().zip(r).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                        "rank {rank} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rs_then_ag_equals_allreduce() {
+        // DESIGN.md invariant 4.
+        check("rs-ag-is-allreduce", 100, |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(1, 200);
+            let ratios = g.ratios(n);
+            let layout = ShardLayout::by_ratios(len, &ratios);
+            let full: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_f32(len, 1.0)).collect();
+            let shards = ring_reduce_scatter(&full, &layout);
+            let gathered = ring_allgather(&shards, &layout);
+            let expect = direct_allreduce(&full, &layout);
+            for (a, b) in gathered.iter().zip(&expect) {
+                assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_shard_roundtrip() {
+        // DESIGN.md invariant 3: shard -> allgather is the identity.
+        check("shard-roundtrip", 100, |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(0, 500);
+            let ratios = g.ratios(n);
+            let layout = ShardLayout::by_ratios(len, &ratios);
+            let full = g.vec_f32(len, 3.0);
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|r| full[layout.range(r)].to_vec())
+                .collect();
+            assert_eq!(ring_allgather(&shards, &layout), full);
+        });
+    }
+
+    #[test]
+    fn weighted_sum_applies_weights() {
+        let full = vec![vec![1., 2.], vec![10., 20.]];
+        let out = weighted_sum(&full, &[1.0, 0.5]);
+        assert_eq!(out, vec![6., 12.]);
+    }
+
+    #[test]
+    fn empty_shard_ranks_are_fine() {
+        // A GPU with r_i = 0 holds nothing but still participates.
+        let layout = ShardLayout::by_ratios(8, &[1.0, 0.0, 1.0]);
+        assert_eq!(layout.sizes(), vec![4, 0, 4]);
+        let shards = vec![vec![1.; 4], vec![], vec![2.; 4]];
+        let full = ring_allgather(&shards, &layout);
+        assert_eq!(full.len(), 8);
+        assert_eq!(&full[..4], &[1.; 4]);
+        assert_eq!(&full[4..], &[2.; 4]);
+    }
+}

@@ -1,0 +1,353 @@
+//! TOML-subset configuration parser.
+//!
+//! Cephalo's launcher reads cluster/model/training configs from `.toml`
+//! files (see `configs/`). The offline build has no `toml`/`serde`, so we
+//! parse the subset the configs actually use:
+//!
+//! * `[section]` and `[section.sub]` headers
+//! * `[[array-of-tables]]` headers (e.g. repeated `[[node]]` blocks)
+//! * `key = value` with string / integer / float / bool / array values
+//! * `#` comments, blank lines
+//!
+//! Values keep their section path as `section.sub.key`; array-of-table
+//! instances are indexed `section[i].key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parsed config: flat map from dotted path to value, plus the list of
+/// array-of-table instance counts for iteration.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+    pub table_counts: BTreeMap<String, usize>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[") {
+                let name = name.strip_suffix("]]").ok_or(ConfigError {
+                    line: lineno,
+                    msg: "unterminated [[table]]".into(),
+                })?;
+                let count =
+                    cfg.table_counts.entry(name.to_string()).or_insert(0);
+                section = format!("{name}[{count}]");
+                *count += 1;
+            } else if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno,
+                    msg: "unterminated [section]".into(),
+                })?;
+                section = name.to_string();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(ConfigError {
+                        line: lineno,
+                        msg: "empty key".into(),
+                    });
+                }
+                let val = parse_value(line[eq + 1..].trim(), lineno)?;
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                cfg.values.insert(path, val);
+            } else {
+                return Err(ConfigError {
+                    line: lineno,
+                    msg: format!("cannot parse: '{line}'"),
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(Value::as_usize)
+    }
+
+    pub fn f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Number of `[[name]]` instances.
+    pub fn table_count(&self, name: &str) -> usize {
+        self.table_counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Required-field accessors with descriptive errors.
+    pub fn require_usize(&self, path: &str) -> Result<usize, ConfigError> {
+        self.usize(path).ok_or(ConfigError {
+            line: 0,
+            msg: format!("missing/invalid integer field '{path}'"),
+        })
+    }
+
+    pub fn require_f64(&self, path: &str) -> Result<f64, ConfigError> {
+        self.f64(path).ok_or(ConfigError {
+            line: 0,
+            msg: format!("missing/invalid float field '{path}'"),
+        })
+    }
+
+    pub fn require_str(&self, path: &str) -> Result<&str, ConfigError> {
+        self.str(path).ok_or(ConfigError {
+            line: 0,
+            msg: format!("missing/invalid string field '{path}'"),
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ConfigError> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(ConfigError { line, msg: "empty value".into() });
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or(ConfigError {
+            line,
+            msg: "unterminated string".into(),
+        })?;
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or(ConfigError {
+            line,
+            msg: "unterminated array".into(),
+        })?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for piece in split_top_level(inner) {
+                items.push(parse_value(piece.trim(), line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError { line, msg: format!("cannot parse value '{t}'") })
+}
+
+/// Split an array body on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# training config
+name = "cephalo-demo"
+
+[model]
+d_model = 256
+layers = 4         # identical transformer layers
+lr = 3.0e-4
+use_pallas = true
+
+[cluster]
+inter_bw_gbps = 50.0
+
+[[node]]
+gpus = ["L4", "L4", "A6000", "P40"]
+intra_bw_gbps = 64.0
+
+[[node]]
+gpus = ["P40", "P40", "P100", "P100"]
+intra_bw_gbps = 64.0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name"), Some("cephalo-demo"));
+        assert_eq!(c.usize("model.d_model"), Some(256));
+        assert_eq!(c.usize("model.layers"), Some(4));
+        assert!((c.f64("model.lr").unwrap() - 3.0e-4).abs() < 1e-12);
+        assert_eq!(c.bool("model.use_pallas"), Some(true));
+        assert_eq!(c.f64("cluster.inter_bw_gbps"), Some(50.0));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.table_count("node"), 2);
+        let gpus0 = c.get("node[0].gpus").unwrap().as_array().unwrap();
+        assert_eq!(gpus0.len(), 4);
+        assert_eq!(gpus0[2].as_str(), Some("A6000"));
+        assert_eq!(c.f64("node[1].intra_bw_gbps"), Some(64.0));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let c = Config::parse("s = \"a # not comment\" # real comment")
+            .unwrap();
+        assert_eq!(c.str("s"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let c = Config::parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = c.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(c.get("a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(c.f64("a"), Some(3.0)); // ints coerce to f64
+    }
+
+    #[test]
+    fn require_errors_are_descriptive() {
+        let c = Config::parse("a = 1").unwrap();
+        let e = c.require_usize("missing.key").unwrap_err();
+        assert!(e.msg.contains("missing.key"));
+        assert!(c.require_usize("a").is_ok());
+    }
+}

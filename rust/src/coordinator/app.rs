@@ -1,0 +1,435 @@
+//! The `cephalo` CLI: profile / optimize / simulate / train / trace.
+
+use crate::baselines::{self, BaselinePlanner};
+use crate::cli::{opt, parse, switch, usage, OptSpec};
+use crate::cluster::Cluster;
+use crate::coordinator::Workload;
+use crate::optimizer::PlanError;
+use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
+use crate::util::tablefmt::{fmt_throughput, Table};
+
+pub fn main_with_args(argv: Vec<String>) -> i32 {
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return 2;
+    };
+    let rest = argv[1..].to_vec();
+    let code = match cmd.as_str() {
+        "optimize" => cmd_optimize(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "profile" => cmd_profile(&rest),
+        "train" => cmd_train(&rest),
+        "trace" => cmd_trace(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'; try `cephalo help`")),
+    };
+    match code {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cephalo — heterogeneous-cluster transformer training\n\n\
+         commands:\n  \
+         optimize  solve the compute/state division for a workload\n  \
+         simulate  throughput of cephalo and/or baselines on a cluster\n  \
+         profile   fit or measure performance models\n  \
+         train     run real training via the AOT artifacts (PJRT)\n  \
+         trace     generate the AWS availability trace (Fig. 1)\n  \
+         help      this message\n\n\
+         run `cephalo <command> --help` for options"
+    );
+}
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        opt("cluster", "preset cluster: a | b | 16xv100 | 32xa10g, or a \
+                        TOML config path", Some("a")),
+        opt("model", "Table-2 model name", Some("BERT-Large")),
+        opt("batch", "global batch size", Some("128")),
+        opt("seed", "PRNG seed", Some("42")),
+        switch("help", "show usage"),
+    ]
+}
+
+fn resolve_cluster(name: &str) -> Result<Cluster, String> {
+    if let Some(c) = Cluster::preset(name) {
+        return Ok(c);
+    }
+    if std::path::Path::new(name).exists() {
+        let cfg = crate::configfmt::Config::load(name)
+            .map_err(|e| e.to_string())?;
+        return Cluster::from_config(&cfg);
+    }
+    Err(format!("unknown cluster '{name}' (not a preset or config file)"))
+}
+
+fn plan_err(e: PlanError) -> String {
+    e.to_string()
+}
+
+fn cmd_optimize(argv: &[String]) -> Result<(), String> {
+    let specs = common_specs();
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo optimize", "solve a workload", &specs));
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let w = Workload::prepare(
+        cluster,
+        a.get("model").unwrap(),
+        a.get_u64("seed").unwrap_or(42),
+    )
+    .map_err(plan_err)?;
+    let (asg, stats) = w.optimize(batch).map_err(plan_err)?;
+
+    let mut t = Table::new(
+        &format!(
+            "Optimized configuration: {} on cluster {} @ batch {batch}",
+            w.model.name, w.cluster.name
+        ),
+        &["gpu", "type", "batch b_i", "micro m_i", "count l_i",
+          "state r_i"],
+    );
+    for (i, (g, slot)) in
+        asg.per_gpu.iter().zip(w.cluster.gpus()).enumerate()
+    {
+        t.add_row(vec![
+            i.to_string(),
+            slot.spec.name.clone(),
+            g.batch().to_string(),
+            g.microbatch.to_string(),
+            g.num_micro.to_string(),
+            format!("{:.3}", g.state_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "predicted iter latency {:.4}s  throughput {:.2} samples/s  \
+         (DP: {} states, {} transitions, {:.2}s solve)",
+        asg.iter_latency,
+        asg.throughput(),
+        stats.states_visited,
+        stats.transitions,
+        stats.solve_seconds
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.push(opt("system", "cephalo | megatron | flashflex | whale | \
+                              hap | fsdp | all", Some("all")));
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo simulate", "simulate throughput",
+                             &specs));
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let w = Workload::prepare(
+        cluster,
+        a.get("model").unwrap(),
+        a.get_u64("seed").unwrap_or(42),
+    )
+    .map_err(plan_err)?;
+
+    let system = a.get("system").unwrap().to_ascii_lowercase();
+    let mut t = Table::new(
+        &format!(
+            "Simulated throughput (samples/s): {} on cluster {} @ {batch}",
+            w.model.name, w.cluster.name
+        ),
+        &["system", "throughput", "config"],
+    );
+    if system == "cephalo" || system == "all" {
+        match w.cephalo_throughput(batch) {
+            Ok((asg, stats)) => {
+                let bs: Vec<usize> =
+                    asg.per_gpu.iter().map(|g| g.batch()).collect();
+                t.add_row(vec![
+                    "Cephalo".into(),
+                    fmt_throughput(stats.throughput),
+                    format!("b={bs:?}"),
+                ]);
+            }
+            Err(e) => t.add_row(vec!["Cephalo".into(), "OOM".into(),
+                                     e.to_string()]),
+        }
+    }
+    let planners: Vec<Box<dyn BaselinePlanner>> = vec![
+        Box::new(baselines::megatron::MegatronHet),
+        Box::new(baselines::flashflex::FlashFlex),
+        Box::new(baselines::whale::Whale),
+        Box::new(baselines::hap::Hap),
+        Box::new(baselines::fsdp::FsdpBaseline),
+    ];
+    for p in planners {
+        let key = p.name().to_ascii_lowercase();
+        if system != "all" && !key.contains(&system) {
+            continue;
+        }
+        match p.plan(&w.ctx(batch)) {
+            Ok(out) => t.add_row(vec![
+                out.system,
+                fmt_throughput(out.throughput),
+                out.config,
+            ]),
+            Err(e) => t.add_row(vec![p.name().into(), "OOM".into(),
+                                     e.to_string()]),
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_profile(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.push(switch("real", "profile the AOT layer_fwd via PJRT"));
+    specs.push(opt("artifacts", "artifacts directory",
+                   Some("artifacts")));
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo profile", "fit performance models",
+                             &specs));
+        return Ok(());
+    }
+    if a.has("real") {
+        let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
+        let samples =
+            crate::coordinator::real_profile::profile_layer_fwd(&dir, 5)
+                .map_err(|e| e.to_string())?;
+        let mut t = Table::new(
+            "Real layer_fwd latency via PJRT (CPU)",
+            &["microbatch", "mean", "min"],
+        );
+        for s in samples {
+            t.add_row(vec![
+                s.microbatch.to_string(),
+                crate::util::human_secs(s.mean_seconds),
+                crate::util::human_secs(s.min_seconds),
+            ]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let w = Workload::prepare(
+        cluster,
+        a.get("model").unwrap(),
+        a.get_u64("seed").unwrap_or(42),
+    )
+    .map_err(plan_err)?;
+    let mut t = Table::new(
+        &format!("Fitted per-GPU models: {} on cluster {}", w.model.name,
+                 w.cluster.name),
+        &["gpu", "type", "fwd(m=1)", "fwd(m=8)", "bwd(m=8)",
+          "mem(m=8) GB", "cap GB"],
+    );
+    for (i, (g, slot)) in
+        w.profile.per_gpu.iter().zip(w.cluster.gpus()).enumerate()
+    {
+        t.add_row(vec![
+            i.to_string(),
+            slot.spec.name.clone(),
+            crate::util::human_secs(g.fwd.predict(1)),
+            crate::util::human_secs(g.fwd.predict(8)),
+            crate::util::human_secs(g.bwd.predict(8)),
+            format!("{:.2}", g.mem.predict(8) / 1e9),
+            format!("{:.0}", g.capacity / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "unit AG {:.2} ms (uneven {:.2} ms), RS {:.2} ms",
+        w.profile.unit_allgather() * 1e3,
+        w.profile.unit_allgather_uneven() * 1e3,
+        w.profile.unit_reduce_scatter() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.push(opt("steps", "training steps", Some("50")));
+    specs.push(opt("lr", "Adam learning rate", Some("0.001")));
+    specs.push(opt("artifacts", "artifacts directory", Some("artifacts")));
+    specs.push(opt("log-every", "log cadence", Some("10")));
+    specs.push(opt("loss-csv", "write the loss curve CSV here", None));
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo train",
+                             "real training over PJRT artifacts", &specs));
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let steps = a.get_usize("steps").ok_or("bad --steps")?;
+    let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
+    if !dir.join("manifest.json").exists() {
+        return Err(format!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+
+    // Plan compute/state division on the simulated heterogeneous
+    // cluster, then execute the REAL numerics on this host.
+    let names: Vec<String> =
+        cluster.gpus().iter().map(|g| g.spec.name.clone()).collect();
+    let w = Workload::prepare(
+        cluster,
+        a.get("model").unwrap(),
+        a.get_u64("seed").unwrap_or(42),
+    )
+    .map_err(plan_err)?;
+    let (asg, _) = w.optimize(batch).map_err(plan_err)?;
+    let workers: Vec<WorkerSpec> =
+        Trainer::workers_from_assignment(&asg, &names);
+    crate::info!(
+        "training plan: batches {:?}, state ratios {:?}",
+        workers.iter().map(|w| w.batch).collect::<Vec<_>>(),
+        workers
+            .iter()
+            .map(|w| (w.state_ratio * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    let cfg = TrainConfig {
+        steps,
+        seed: a.get_u64("seed").unwrap_or(42),
+        adam: crate::trainer::adam::AdamConfig {
+            lr: a.get_f64("lr").unwrap_or(1e-3) as f32,
+            ..Default::default()
+        },
+        corpus_branch: 4,
+        log_every: a.get_usize("log-every").unwrap_or(10),
+    };
+    let mut trainer =
+        Trainer::new(&dir, workers, cfg).map_err(|e| e.to_string())?;
+    println!(
+        "model: {} params, corpus entropy {:.3} nats, ln(V) = {:.3}",
+        trainer.manifest().model.num_params,
+        trainer.corpus_entropy(),
+        (trainer.manifest().model.vocab as f64).ln()
+    );
+    let history = trainer.run().map_err(|e| e.to_string())?;
+    let first = history.first().map(|s| s.mean_loss).unwrap_or(0.0);
+    let last = history.last().map(|s| s.mean_loss).unwrap_or(0.0);
+    println!(
+        "loss {first:.4} -> {last:.4} over {} steps ({} samples/step)",
+        history.len(),
+        trainer.global_batch()
+    );
+    if let Some(path) = a.get("loss-csv") {
+        let mut csv = String::from("step,loss,wall_seconds\n");
+        for s in &history {
+            csv.push_str(&format!("{},{},{}\n", s.step, s.mean_loss,
+                                  s.wall_seconds));
+        }
+        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        opt("hours", "trace length", Some("12")),
+        opt("seed", "PRNG seed", Some("42")),
+        switch("help", "show usage"),
+    ];
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo trace", "AWS availability trace",
+                             &specs));
+        return Ok(());
+    }
+    let hours = a.get_usize("hours").unwrap_or(12);
+    let profiles = crate::cluster::aws_trace::default_profiles();
+    let trace = crate::cluster::aws_trace::generate(
+        a.get_u64("seed").unwrap_or(42),
+        hours,
+        &profiles,
+    );
+    let mut headers = vec!["hour".to_string()];
+    headers.extend(profiles.iter().map(|p| p.gpu.clone()));
+    let mut t = Table::new(
+        "AWS GPU availability (instances obtainable per hour)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for h in &trace {
+        let mut row = vec![h.hour.to_string()];
+        row.extend(h.available.iter().map(|(_, c)| c.to_string()));
+        t.add_row(row);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_paths() {
+        assert_eq!(main_with_args(sv(&["help"])), 0);
+        assert_eq!(main_with_args(sv(&[])), 2);
+        assert_eq!(main_with_args(sv(&["bogus"])), 1);
+    }
+
+    #[test]
+    fn optimize_runs() {
+        assert_eq!(
+            main_with_args(sv(&["optimize", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "64"])),
+            0
+        );
+    }
+
+    #[test]
+    fn simulate_single_system() {
+        assert_eq!(
+            main_with_args(sv(&["simulate", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "64",
+                                "--system", "whale"])),
+            0
+        );
+    }
+
+    #[test]
+    fn profile_synthetic() {
+        assert_eq!(
+            main_with_args(sv(&["profile", "--cluster", "a", "--model",
+                                "BERT-Large"])),
+            0
+        );
+    }
+
+    #[test]
+    fn trace_runs() {
+        assert_eq!(main_with_args(sv(&["trace", "--hours", "3"])), 0);
+    }
+
+    #[test]
+    fn bad_cluster_is_error() {
+        assert_eq!(
+            main_with_args(sv(&["optimize", "--cluster", "nope"])),
+            1
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! Elastic re-planning: adapt a running job to cluster membership
+//! changes — the workflow Fig. 1 motivates (cloud GPUs appear and
+//! vanish hour to hour).
+//!
+//! Given the old assignment + shard layout and a NEW cluster, this
+//! module re-runs the optimizer and computes a **state migration plan**:
+//! which contiguous byte ranges of the flat training state (16 B/param:
+//! parameters + Adam moments) each surviving GPU must send/receive so
+//! the new shard layout is materialized with minimal traffic (only the
+//! deltas move; bytes already resident stay put).
+
+use crate::optimizer::{Assignment, PlanError};
+use crate::perfmodel::ClusterPerfProfile;
+use crate::sharding::ShardLayout;
+
+/// One transfer in the migration plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    /// Source GPU in the OLD layout (None = must be restored from the
+    /// checkpoint/leader — its old owner left the cluster).
+    pub from: Option<usize>,
+    /// Destination GPU in the NEW layout.
+    pub to: usize,
+    /// Flat element range being moved.
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Result of an elastic re-plan.
+#[derive(Debug)]
+pub struct Replan {
+    pub assignment: Assignment,
+    pub new_layout: ShardLayout,
+    pub transfers: Vec<Transfer>,
+    /// Elements that stay on their current owner (no traffic).
+    pub resident_elems: usize,
+    /// Elements that move between GPUs or from the checkpoint.
+    pub moved_elems: usize,
+}
+
+impl Replan {
+    /// Migration traffic in bytes (16 B per element of training state).
+    pub fn migration_bytes(&self) -> f64 {
+        self.moved_elems as f64 * 16.0
+    }
+}
+
+/// Map each flat element range of the new layout onto its old owner,
+/// emitting transfers only where ownership changes.
+///
+/// `survivor_map[new_gpu] = Some(old_gpu_index)` identifies which old
+/// rank (if any) the new rank is the same physical GPU as.
+pub fn plan_migration(
+    old_layout: &ShardLayout,
+    new_layout: &ShardLayout,
+    survivor_map: &[Option<usize>],
+) -> (Vec<Transfer>, usize, usize) {
+    assert_eq!(new_layout.len(), old_layout.len(),
+               "state size changed between plans");
+    assert_eq!(survivor_map.len(), new_layout.num_ranks());
+    let mut transfers = Vec::new();
+    let mut resident = 0usize;
+    let mut moved = 0usize;
+
+    // Reverse map: old gpu -> new gpu (if it survived).
+    for new_gpu in 0..new_layout.num_ranks() {
+        let range = new_layout.range(new_gpu);
+        if range.is_empty() {
+            continue;
+        }
+        // Walk the old layout's ranks overlapping this range.
+        let mut pos = range.start;
+        while pos < range.end {
+            // Find old owner of `pos`.
+            let old_owner = (0..old_layout.num_ranks())
+                .find(|&r| old_layout.range(r).contains(&pos));
+            let old_end = old_owner
+                .map(|r| old_layout.range(r).end)
+                .unwrap_or(range.end);
+            let chunk_end = range.end.min(old_end);
+            let len = chunk_end - pos;
+            let stays = old_owner.is_some()
+                && survivor_map[new_gpu] == old_owner;
+            if stays {
+                resident += len;
+            } else {
+                moved += len;
+                transfers.push(Transfer {
+                    from: old_owner.and_then(|r| {
+                        // The old rank only still exists if some new
+                        // rank maps to it.
+                        survivor_map
+                            .iter()
+                            .position(|s| *s == Some(r))
+                            .map(|_| r)
+                    }),
+                    to: new_gpu,
+                    start: pos,
+                    len,
+                });
+            }
+            pos = chunk_end;
+        }
+    }
+    (transfers, resident, moved)
+}
+
+/// Re-plan after cluster membership changed.
+///
+/// * `old_assignment` / `old_profile` — the running configuration.
+/// * `new_profile` — profile of the surviving/expanded cluster.
+/// * `survivor_map[new_gpu]` — the old index of each new GPU (None for
+///   newly added GPUs).
+pub fn replan(
+    old_assignment: &Assignment,
+    old_profile: &ClusterPerfProfile,
+    new_profile: &ClusterPerfProfile,
+    survivor_map: &[Option<usize>],
+    batch: usize,
+) -> Result<Replan, PlanError> {
+    let (assignment, _) =
+        crate::optimizer::DpOptimizer::default().solve(new_profile, batch)?;
+    // Flat state layouts (in elements) from the ratio vectors; use the
+    // parameter count as the flat length (moments scale with it).
+    let total = old_profile.total_params as usize;
+    let old_ratios: Vec<f64> =
+        old_assignment.per_gpu.iter().map(|g| g.state_ratio).collect();
+    let new_ratios: Vec<f64> =
+        assignment.per_gpu.iter().map(|g| g.state_ratio).collect();
+    let old_layout = ShardLayout::by_ratios(total, &old_ratios);
+    let new_layout = ShardLayout::by_ratios(total, &new_ratios);
+    let (transfers, resident_elems, moved_elems) =
+        plan_migration(&old_layout, &new_layout, survivor_map);
+    Ok(Replan {
+        assignment,
+        new_layout,
+        transfers,
+        resident_elems,
+        moved_elems,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::Workload;
+    use crate::testkit::check;
+
+    #[test]
+    fn identity_replan_moves_nothing() {
+        let layout = ShardLayout::by_ratios(1000, &[0.5, 0.3, 0.2]);
+        let survivors = vec![Some(0), Some(1), Some(2)];
+        let (transfers, resident, moved) =
+            plan_migration(&layout, &layout, &survivors);
+        assert!(transfers.is_empty());
+        assert_eq!(resident, 1000);
+        assert_eq!(moved, 0);
+    }
+
+    #[test]
+    fn lost_gpu_state_is_resourced() {
+        // 3 GPUs -> 2 survivors (old rank 1 left).
+        let old = ShardLayout::by_ratios(900, &[1.0, 1.0, 1.0]);
+        let new = ShardLayout::by_ratios(900, &[0.5, 0.5]);
+        let survivors = vec![Some(0), Some(2)];
+        let (transfers, resident, moved) =
+            plan_migration(&old, &new, &survivors);
+        assert_eq!(resident + moved, 900);
+        // Old rank 0's first 300 elements stay on new rank 0.
+        assert_eq!(resident, 300 + 300); // rank0 keeps 300; old rank2's
+                                         // last 300 land on new rank 1
+        // The departed rank 1's range must be transferred with from=None
+        // only if rank1 truly vanished from the survivor map.
+        let orphan: usize = transfers
+            .iter()
+            .filter(|t| t.from.is_none())
+            .map(|t| t.len)
+            .sum();
+        assert_eq!(orphan, 300, "old rank 1's shard must be restored");
+    }
+
+    #[test]
+    fn prop_migration_covers_new_layout_exactly() {
+        check("migration-coverage", 100, |g| {
+            let total = g.usize_in(10, 5000);
+            let n_old = g.usize_in(1, 6);
+            let n_new = g.usize_in(1, 6);
+            let old = ShardLayout::by_ratios(total, &g.ratios(n_old));
+            let new = ShardLayout::by_ratios(total, &g.ratios(n_new));
+            let survivors: Vec<Option<usize>> = (0..n_new)
+                .map(|i| if i < n_old && g.bool() { Some(i) } else { None })
+                .collect();
+            let (transfers, resident, moved) =
+                plan_migration(&old, &new, &survivors);
+            assert_eq!(resident + moved, total);
+            // Transfers are disjoint and within bounds.
+            let mut covered = vec![false; total];
+            for t in &transfers {
+                for i in t.start..t.start + t.len {
+                    assert!(!covered[i], "overlap at {i}");
+                    covered[i] = true;
+                }
+                // Destination must own the range in the new layout.
+                let r = new.range(t.to);
+                assert!(r.start <= t.start && t.start + t.len <= r.end);
+            }
+            assert_eq!(covered.iter().filter(|&&c| c).count(), moved);
+        });
+    }
+
+    #[test]
+    fn end_to_end_replan_on_gpu_loss() {
+        // Cluster A loses its A6000 (the big-memory GPU): the re-plan
+        // must redistribute its state to the P40s and stay feasible.
+        let full = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let (old_asg, _) = full.optimize(64).unwrap();
+
+        let mut degraded = Cluster::cluster_a();
+        degraded.nodes[0].gpus.remove(2); // the A6000
+        let small = Workload::prepare(degraded, "BERT-Large", 42).unwrap();
+        // New rank i maps to old rank (skipping old index 2).
+        let survivor_map: Vec<Option<usize>> =
+            vec![Some(0), Some(1), Some(3), Some(4), Some(5), Some(6),
+                 Some(7)];
+        let re = replan(&old_asg, &full.profile, &small.profile,
+                        &survivor_map, 64)
+            .expect("replan feasible");
+        assert_eq!(re.assignment.global_batch(), 64);
+        assert!(re.moved_elems > 0, "A6000's ~40% state share must move");
+        assert!(re.migration_bytes() > 0.0);
+        // Conservation.
+        assert_eq!(
+            re.resident_elems + re.moved_elems,
+            full.profile.total_params as usize
+        );
+    }
+}

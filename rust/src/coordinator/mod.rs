@@ -1,0 +1,133 @@
+//! Top-level coordination: profile -> optimize -> simulate/train, plus
+//! the CLI application surface (`coordinator::app`).
+
+pub mod app;
+pub mod elastic;
+pub mod real_profile;
+pub mod report;
+
+use crate::cluster::Cluster;
+use crate::model::{find_model, TransformerSpec};
+use crate::optimizer::{Assignment, DpOptimizer, DpStats, PlanError};
+use crate::perfmodel::{ClusterPerfProfile, CollectiveModel, Profiler,
+                       SyntheticOracle};
+use crate::sim::cephalo::{simulate_assignment, IterStats};
+use crate::sim::GaVariant;
+
+/// Everything needed to evaluate one (cluster, model) workload.
+pub struct Workload {
+    pub cluster: Cluster,
+    pub model: TransformerSpec,
+    pub oracle: SyntheticOracle,
+    pub profile: ClusterPerfProfile,
+    pub collective: CollectiveModel,
+}
+
+impl Workload {
+    /// Standard pipeline: build the synthetic oracle (the stand-in for
+    /// profiling real GPUs; see DESIGN.md §Substitutions) and fit the
+    /// performance models.
+    pub fn prepare(cluster: Cluster, model_name: &str, seed: u64)
+        -> Result<Workload, PlanError> {
+        let model = find_model(model_name).ok_or_else(|| {
+            PlanError::Infeasible(format!("unknown model '{model_name}'"))
+        })?;
+        let oracle = SyntheticOracle::new(&cluster, &model, seed);
+        let profile = Profiler::default().profile(&cluster, &model, &oracle);
+        let collective = CollectiveModel::from_cluster(&cluster);
+        Ok(Workload { cluster, model, oracle, profile, collective })
+    }
+
+    /// Run the Cephalo optimizer.
+    pub fn optimize(&self, batch: usize)
+        -> Result<(Assignment, DpStats), PlanError> {
+        DpOptimizer::default().solve(&self.profile, batch)
+    }
+
+    /// Optimize then simulate the full Cephalo execution (LGA+CO+S+O).
+    pub fn cephalo_throughput(&self, batch: usize)
+        -> Result<(Assignment, IterStats), PlanError> {
+        let (asg, _) = self.optimize(batch)?;
+        let stats = simulate_assignment(
+            &self.model,
+            &self.oracle,
+            &self.collective,
+            &asg,
+            GaVariant::LGA_CO_S_O,
+        );
+        Ok((asg, stats))
+    }
+
+    /// Simulate an arbitrary assignment under a GA variant — used for
+    /// the Fig.-7 ablations so every variant is measured on the SAME
+    /// simulator (not its planner's optimistic model).
+    pub fn simulate(&self, asg: &Assignment, variant: GaVariant)
+        -> IterStats {
+        simulate_assignment(
+            &self.model,
+            &self.oracle,
+            &self.collective,
+            asg,
+            variant,
+        )
+    }
+
+    /// Baseline planner context.
+    pub fn ctx(&self, batch: usize) -> crate::baselines::PlanContext<'_> {
+        crate::baselines::PlanContext {
+            cluster: &self.cluster,
+            model: &self.model,
+            profile: &self.profile,
+            oracle: &self.oracle,
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_and_optimize() {
+        let w = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let (asg, stats) = w.cephalo_throughput(128).unwrap();
+        assert_eq!(asg.global_batch(), 128);
+        assert!(stats.throughput > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        assert!(
+            Workload::prepare(Cluster::cluster_a(), "GPT-9T", 1).is_err()
+        );
+    }
+
+    #[test]
+    fn cephalo_beats_every_baseline_bert_cluster_a() {
+        // The paper's headline: Cephalo wins Table 4 across the board.
+        use crate::baselines::*;
+        let w = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let (_, cephalo) = w.cephalo_throughput(128).unwrap();
+        let planners: Vec<Box<dyn BaselinePlanner>> = vec![
+            Box::new(megatron::MegatronHet),
+            Box::new(flashflex::FlashFlex),
+            Box::new(whale::Whale),
+            Box::new(hap::Hap),
+            Box::new(fsdp::FsdpBaseline),
+        ];
+        for p in planners {
+            if let Ok(out) = p.plan(&w.ctx(128)) {
+                assert!(
+                    cephalo.throughput > out.throughput,
+                    "{} ({}) beat cephalo ({})",
+                    p.name(),
+                    out.throughput,
+                    cephalo.throughput
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Real profiling through PJRT (§3.1 on this testbed): time the
+//! AOT-compiled single-layer forward at each compiled microbatch size.
+//!
+//! This is the CPU-host analogue of the paper's profiler — the numbers
+//! feed the Fig.-5 "real" series and the e2e example's reporting. For
+//! heterogeneous *simulation* the synthetic oracle is used instead
+//! (DESIGN.md §Substitutions); this module proves the profiling code
+//! path against real executions.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::XlaEngine;
+use crate::util::prng::Rng;
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct LayerSample {
+    pub microbatch: usize,
+    pub mean_seconds: f64,
+    pub min_seconds: f64,
+    pub reps: usize,
+}
+
+/// Time `layer_fwd` for each compiled microbatch size.
+pub fn profile_layer_fwd(artifacts_dir: &Path, reps: usize)
+    -> Result<Vec<LayerSample>> {
+    let engine = XlaEngine::load(artifacts_dir, &["layer_fwd"])?;
+    let manifest = engine.manifest().clone();
+    let seq = manifest.model.seq_len;
+    let d = manifest.model.d_model;
+    let dff = manifest.model.d_ff;
+
+    // Unstacked single-layer parameter shapes (layer_forward order).
+    let layer_shapes: Vec<Vec<usize>> = vec![
+        vec![d],        // ln1_scale
+        vec![d],        // ln1_bias
+        vec![d, d],     // wq
+        vec![d, d],     // wk
+        vec![d, d],     // wv
+        vec![d, d],     // wo
+        vec![d],        // ln2_scale
+        vec![d],        // ln2_bias
+        vec![d, dff],   // w1
+        vec![dff],      // b1
+        vec![dff, d],   // w2
+        vec![d],        // b2
+    ];
+    let mut rng = Rng::new(7);
+    let layer_params: Vec<Vec<f32>> = layer_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let n: usize = s.iter().product();
+            match i {
+                0 | 6 => vec![1.0; n],          // scales
+                1 | 7 | 9 | 11 => vec![0.0; n], // biases
+                _ => {
+                    let mut v = vec![0f32; n];
+                    rng.fill_normal(&mut v, 0.02);
+                    v
+                }
+            }
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    for m in engine.available("layer_fwd") {
+        let mut x = vec![0f32; m * seq * d];
+        rng.fill_normal(&mut x, 1.0);
+        // Warmup.
+        engine.layer_fwd(&x, &layer_params, &layer_shapes, m)?;
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let y = engine.layer_fwd(&x, &layer_params, &layer_shapes, m)?;
+            times.push(t0.elapsed().as_secs_f64());
+            assert_eq!(y.len(), x.len());
+        }
+        out.push(LayerSample {
+            microbatch: m,
+            mean_seconds: crate::util::stats::mean(&times),
+            min_seconds: crate::util::stats::min(&times),
+            reps,
+        });
+    }
+    Ok(out)
+}

@@ -1,0 +1,82 @@
+//! Shared helpers for the benchmark binaries (`rust/benches/*.rs`):
+//! uniform "system -> throughput" evaluation used by every table bench.
+
+use crate::baselines::{self, BaselinePlanner};
+use crate::coordinator::Workload;
+use crate::optimizer::PlanError;
+use crate::sim::GaVariant;
+
+/// The systems compared across the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    Cephalo,
+    MegatronHet,
+    FlashFlex,
+    Whale,
+    Hap,
+    Fsdp,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Cephalo => "Cephalo",
+            SystemKind::MegatronHet => "Megatron-Het",
+            SystemKind::FlashFlex => "FlashFlex",
+            SystemKind::Whale => "Whale",
+            SystemKind::Hap => "HAP",
+            SystemKind::Fsdp => "FSDP",
+        }
+    }
+}
+
+/// Samples/s of `system` on the workload, or the planning error (OOM).
+pub fn throughput(w: &Workload, batch: usize, system: SystemKind)
+    -> Result<f64, PlanError> {
+    match system {
+        SystemKind::Cephalo => {
+            let (asg, _) = w.optimize(batch)?;
+            let stats = w.simulate(&asg, GaVariant::LGA_CO_S_O);
+            Ok(stats.throughput)
+        }
+        SystemKind::MegatronHet => baselines::megatron::MegatronHet
+            .plan(&w.ctx(batch))
+            .map(|o| o.throughput),
+        SystemKind::FlashFlex => baselines::flashflex::FlashFlex
+            .plan(&w.ctx(batch))
+            .map(|o| o.throughput),
+        SystemKind::Whale => {
+            baselines::whale::Whale.plan(&w.ctx(batch)).map(|o| o.throughput)
+        }
+        SystemKind::Hap => {
+            baselines::hap::Hap.plan(&w.ctx(batch)).map(|o| o.throughput)
+        }
+        SystemKind::Fsdp => baselines::fsdp::FsdpBaseline
+            .plan(&w.ctx(batch))
+            .map(|o| o.throughput),
+    }
+}
+
+/// "6.38" or "OOM" — the paper's table cell format.
+pub fn cell(w: &Workload, batch: usize, system: SystemKind) -> String {
+    match throughput(w, batch, system) {
+        Ok(t) => format!("{t:.2}"),
+        Err(PlanError::OutOfMemory { .. }) => "OOM".to_string(),
+        Err(_) => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn cells_format() {
+        let w = Workload::prepare(Cluster::cluster_a(), "GPT 2.7B", 42)
+            .unwrap();
+        assert_eq!(cell(&w, 128, SystemKind::Whale), "OOM");
+        let c = cell(&w, 128, SystemKind::Cephalo);
+        assert!(c.parse::<f64>().is_ok(), "{c}");
+    }
+}

@@ -1,0 +1,43 @@
+//! # Cephalo — heterogeneous-cluster transformer training
+//!
+//! A Rust + JAX + Pallas reproduction of *“Cephalo: Harnessing
+//! Heterogeneous GPU Clusters for Training Transformer Models”* (Guo et
+//! al., 2024).
+//!
+//! Cephalo decouples **compute** assignment (per-GPU batch size) from
+//! **memory** assignment (training-state shard ratio) on top of a fully
+//! sharded data-parallel (FSDP) runtime, adds *layered gradient
+//! accumulation* with communication overlap, and activation
+//! checkpointing + asynchronous CPU offloading — then jointly optimizes
+//! all of it with a dynamic program over profiled performance models.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: cluster/topology modeling,
+//!   profiler + performance models, the DP optimizer, the execution
+//!   simulator with per-device compute/comm/offload streams, the
+//!   heterogeneous baselines, and a real numeric training engine driving
+//!   AOT-compiled JAX computations through PJRT.
+//! * **L2 (`python/compile/model.py`)** — the transformer fwd/bwd in
+//!   JAX, lowered once to HLO text (`artifacts/`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (flash
+//!   attention, fused FFN, fused LayerNorm) called by L2.
+
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod configfmt;
+pub mod logging;
+pub mod memory;
+pub mod model;
+pub mod perfmodel;
+pub mod testkit;
+pub mod util;
+
+pub mod baselines;
+pub mod collectives;
+pub mod coordinator;
+pub mod runtime;
+pub mod trainer;
+pub mod optimizer;
+pub mod sharding;
+pub mod sim;

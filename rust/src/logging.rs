@@ -1,0 +1,170 @@
+//! Leveled logging + metrics recording.
+//!
+//! A tiny `log`-crate substitute: global level filter, timestamped stderr
+//! lines, and a `MetricsRecorder` that training/benchmark loops use to
+//! accumulate named series and dump them as CSV (consumed by
+//! EXPERIMENTS.md and the loss-curve artifacts).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Log a line at `level`; prefer the `info!`/`debug!` macros.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info,
+                             format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn,
+                             format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug,
+                             format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Error,
+                             format_args!($($arg)*))
+    };
+}
+
+/// Named time-series metrics (loss curves, throughput traces).
+#[derive(Default)]
+pub struct MetricsRecorder {
+    series: Mutex<BTreeMap<String, Vec<(f64, f64)>>>,
+    start: Option<Instant>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self { series: Mutex::new(BTreeMap::new()), start: Some(Instant::now()) }
+    }
+
+    /// Record (x, y) on a named series.
+    pub fn record(&self, name: &str, x: f64, y: f64) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push((x, y));
+    }
+
+    /// Record y at wall-clock seconds since recorder creation.
+    pub fn record_timed(&self, name: &str, y: f64) {
+        let t = self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.record(name, t, y);
+    }
+
+    pub fn get(&self, name: &str) -> Vec<(f64, f64)> {
+        self.series.lock().unwrap().get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.series.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// CSV: series,x,y per line.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,x,y\n");
+        for (name, points) in self.series.lock().unwrap().iter() {
+            for (x, y) in points {
+                out.push_str(&format!("{name},{x},{y}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn metrics_roundtrip() {
+        let m = MetricsRecorder::new();
+        m.record("loss", 0.0, 6.9);
+        m.record("loss", 1.0, 6.5);
+        m.record("tput", 0.0, 12.0);
+        assert_eq!(m.get("loss").len(), 2);
+        assert_eq!(m.names(), vec!["loss".to_string(), "tput".to_string()]);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("series,x,y\n"));
+        assert!(csv.contains("loss,0,6.9"));
+        assert!(csv.contains("tput,0,12"));
+    }
+}

@@ -1,0 +1,9 @@
+//! `cephalo` — the leader entrypoint.
+//!
+//! Subcommands: optimize / simulate / profile / train / trace.
+//! See `cephalo help` and README.md.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cephalo::coordinator::app::main_with_args(argv));
+}

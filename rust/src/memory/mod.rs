@@ -1,0 +1,146 @@
+//! GPU memory accounting (§2.3 Memory Utilization Model).
+//!
+//! Total usage M = M_state + M_compute:
+//! * `M_state = 16 bytes/param * |P_i|` — fp32 Adam training state
+//!   (4 param + 4 grad + 8 moments), scaled by the GPU's training-state
+//!   ratio `r_i`.
+//! * `M_compute(m)` — linear in microbatch size (Fig. 5 right): kernel
+//!   workspace + live activations + framework overhead.
+//!
+//! The optimizer caps usable memory at 80% of capacity (§3.2) to avoid
+//! allocator thrash near the limit.
+
+/// Bytes of training state per parameter with fp32 Adam (§2.3).
+pub const BYTES_PER_PARAM_STATE: f64 = 16.0;
+
+/// Fraction of physical memory the optimizer will plan into (§3.2).
+pub const MEM_UTIL_CAP: f64 = 0.80;
+
+/// Training-state bytes for a parameter count.
+pub fn state_bytes(params: f64) -> f64 {
+    params * BYTES_PER_PARAM_STATE
+}
+
+/// Usable planning capacity for a GPU.
+pub fn usable_capacity(mem_bytes: f64) -> f64 {
+    mem_bytes * MEM_UTIL_CAP
+}
+
+/// Linear compute-memory model fitted from profiles (Fig. 5 right).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Bytes per sample of microbatch.
+    pub slope: f64,
+    /// Fixed overhead bytes (framework, one materialized FSDP unit, ...).
+    pub intercept: f64,
+}
+
+impl MemoryModel {
+    pub fn predict(&self, microbatch: usize) -> f64 {
+        self.intercept + self.slope * microbatch as f64
+    }
+
+    /// Fit from (microbatch, bytes) samples by least squares.
+    pub fn fit(samples: &[(usize, f64)]) -> MemoryModel {
+        let pts: Vec<(f64, f64)> = samples
+            .iter()
+            .map(|(m, b)| (*m as f64, *b))
+            .collect();
+        let (slope, intercept) = crate::util::stats::linear_fit(&pts);
+        MemoryModel { slope: slope.max(0.0), intercept: intercept.max(0.0) }
+    }
+
+    /// Largest microbatch that fits under `capacity_bytes` alongside
+    /// `state` bytes of training state; None if even m=1 does not fit.
+    pub fn max_microbatch(&self, capacity_bytes: f64, state: f64)
+        -> Option<usize> {
+        let budget = capacity_bytes - state - self.intercept;
+        if budget < self.slope {
+            return None;
+        }
+        if self.slope <= 0.0 {
+            return Some(usize::MAX);
+        }
+        Some((budget / self.slope).floor() as usize)
+    }
+}
+
+/// Full per-GPU memory ledger for reports and OOM checks.
+#[derive(Debug, Clone)]
+pub struct MemoryLedger {
+    pub capacity: f64,
+    pub state: f64,
+    pub compute: f64,
+}
+
+impl MemoryLedger {
+    pub fn total(&self) -> f64 {
+        self.state + self.compute
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.total() / self.capacity
+    }
+
+    pub fn fits(&self) -> bool {
+        self.total() <= usable_capacity(self.capacity)
+    }
+
+    pub fn fits_physical(&self) -> bool {
+        self.total() <= self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_state_is_16_bytes_per_param() {
+        assert_eq!(state_bytes(1e9), 16e9);
+    }
+
+    #[test]
+    fn memory_model_fit_recovers_line() {
+        let truth = MemoryModel { slope: 50e6, intercept: 1.2e9 };
+        let samples: Vec<(usize, f64)> =
+            (1..=8).map(|m| (m, truth.predict(m))).collect();
+        let fit = MemoryModel::fit(&samples);
+        assert!((fit.slope - truth.slope).abs() / truth.slope < 1e-9);
+        assert!(
+            (fit.intercept - truth.intercept).abs() / truth.intercept < 1e-9
+        );
+    }
+
+    #[test]
+    fn max_microbatch_boundaries() {
+        let m = MemoryModel { slope: 1e9, intercept: 2e9 };
+        // 16 GB capacity, 6 GB state -> budget 8 GB -> m = 8.
+        assert_eq!(m.max_microbatch(16e9, 6e9), Some(8));
+        // Exactly one sample fits.
+        assert_eq!(m.max_microbatch(3e9 + 1e9, 0.0), Some(2));
+        // Nothing fits.
+        assert_eq!(m.max_microbatch(2.5e9, 0.0), None);
+        assert_eq!(m.max_microbatch(16e9, 15e9), None);
+    }
+
+    #[test]
+    fn ledger_checks() {
+        let l = MemoryLedger { capacity: 10e9, state: 4e9, compute: 3e9 };
+        assert!(l.fits()); // 7 <= 8
+        assert!((l.utilization() - 0.7).abs() < 1e-12);
+        let l2 = MemoryLedger { capacity: 10e9, state: 5e9, compute: 4e9 };
+        assert!(!l2.fits()); // 9 > 8
+        assert!(l2.fits_physical());
+        let l3 = MemoryLedger { capacity: 10e9, state: 8e9, compute: 3e9 };
+        assert!(!l3.fits_physical());
+    }
+
+    #[test]
+    fn fit_clamps_negative() {
+        // Degenerate profile data must not produce negative slopes.
+        let fit = MemoryModel::fit(&[(1, 5e9), (2, 4.9e9), (3, 5.1e9)]);
+        assert!(fit.slope >= 0.0);
+        assert!(fit.intercept >= 0.0);
+    }
+}

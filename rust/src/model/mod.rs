@@ -1,0 +1,221 @@
+//! Transformer workload descriptions (Table 2) and analytic accounting
+//! of parameters, FLOPs and activation bytes — the quantities every
+//! performance/memory model downstream consumes.
+
+/// Task category from Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    ImageClassification,
+    TextClassification,
+    TextGeneration,
+}
+
+/// One transformer workload (Table 2 row).
+#[derive(Debug, Clone)]
+pub struct TransformerSpec {
+    pub name: String,
+    pub task: Task,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    /// Sequence length used in training (512 for LM per §4.1; ViT uses
+    /// its patch-token count).
+    pub seq_len: usize,
+    /// FFN hidden width (model-specific: ViTs and GPTs use ~4d, Llamas
+    /// use the SwiGLU width).
+    pub d_ff: usize,
+    /// FFN weight matrices: 2 for GELU MLPs, 3 for SwiGLU (Llama).
+    pub ffn_matrices: usize,
+    /// Approximate vocabulary (LM head) or class count; contributes to
+    /// embedding parameters.
+    pub vocab: usize,
+}
+
+impl TransformerSpec {
+    /// Parameters in one transformer layer:
+    /// 4 d^2 (qkv+o) + ffn_matrices * d * d_ff + biases/LN.
+    pub fn params_per_layer(&self) -> usize {
+        let d = self.d_model;
+        let dff = self.d_ff;
+        4 * d * d + self.ffn_matrices * d * dff + dff + d + 4 * d
+    }
+
+    /// Total parameters (layers + embeddings + LM head).
+    pub fn total_params(&self) -> usize {
+        self.layers * self.params_per_layer()
+            + self.vocab * self.d_model * 2
+            + 2 * self.d_model
+    }
+
+    /// Forward FLOPs for one layer on a batch of `m` sequences:
+    /// QKV+O projections 8 s d^2, attention 4 s^2 d, FFN
+    /// 2 * ffn_matrices * s * d * d_ff.
+    pub fn layer_fwd_flops(&self, m: usize) -> f64 {
+        let s = self.seq_len as f64;
+        let d = self.d_model as f64;
+        let dff = self.d_ff as f64;
+        let per_seq = 8.0 * s * d * d
+            + 4.0 * s * s * d
+            + 2.0 * self.ffn_matrices as f64 * s * d * dff;
+        per_seq * m as f64
+    }
+
+    /// Backward is ~2x forward (recompute for checkpointing adds ~1x
+    /// more forward, folded in by the caller when enabled).
+    pub fn layer_bwd_flops(&self, m: usize) -> f64 {
+        2.0 * self.layer_fwd_flops(m)
+    }
+
+    /// Total model FLOPs for one fwd+bwd iteration on batch `b`, with
+    /// activation recompute (fwd again during bwd) if `recompute`.
+    pub fn iter_flops(&self, b: usize, recompute: bool) -> f64 {
+        let fwd = self.layer_fwd_flops(b) * self.layers as f64;
+        let bwd = self.layer_bwd_flops(b) * self.layers as f64;
+        let re = if recompute { fwd } else { 0.0 };
+        fwd + bwd + re
+    }
+
+    /// Boundary activation bytes per sample per layer (fp32): the
+    /// checkpointed tensor is [s, d].
+    pub fn boundary_activation_bytes(&self) -> f64 {
+        (self.seq_len * self.d_model * 4) as f64
+    }
+
+    /// Peak intra-layer activation bytes per sample (fp32), when NOT
+    /// recomputing: attention scores + ffn hidden dominate.
+    pub fn intra_layer_activation_bytes(&self) -> f64 {
+        let s = self.seq_len as f64;
+        let d = self.d_model as f64;
+        let dff = self.d_ff as f64;
+        let h = self.heads as f64;
+        4.0 * (h * s * s + s * dff + 6.0 * s * d)
+    }
+
+    /// Table 2 headline parameter count in billions (for display).
+    pub fn params_b(&self) -> f64 {
+        self.total_params() as f64 / 1e9
+    }
+}
+
+/// The nine Table-2 models (+ GPT 1.3B used in Table 4).
+pub fn table2_models() -> Vec<TransformerSpec> {
+    use Task::*;
+    let m = |name: &str, task, layers, d_model, heads, seq, d_ff, mats,
+             vocab| TransformerSpec {
+        name: name.into(),
+        task,
+        layers,
+        d_model,
+        heads,
+        seq_len: seq,
+        d_ff,
+        ffn_matrices: mats,
+        vocab,
+    };
+    vec![
+        // ViTs process 224x224 images as 256 patch tokens (+1 cls);
+        // widths/depths/mlp dims from Zhai et al. / Chen et al.
+        m("ViT-G", ImageClassification, 48, 1664, 16, 257, 8192, 2, 1000),
+        m("ViT-e", ImageClassification, 56, 1792, 16, 257, 15360, 2, 1000),
+        m("BERT-Large", TextClassification, 24, 1024, 16, 512, 4096, 2, 30522),
+        m("BERT-XLarge", TextClassification, 36, 1536, 24, 512, 6144, 2,
+          30522),
+        m("GPT 1.3B", TextGeneration, 24, 2048, 32, 512, 8192, 2, 50257),
+        m("GPT 2.7B", TextGeneration, 32, 2560, 80, 512, 10240, 2, 50257),
+        m("GPT 6.7B", TextGeneration, 32, 4096, 128, 512, 16384, 2, 50257),
+        m("Tiny Llama", TextGeneration, 22, 2048, 32, 512, 5632, 3, 32000),
+        m("Llama 3B", TextGeneration, 26, 3200, 32, 512, 8640, 3, 32000),
+        m("Llama 7B", TextGeneration, 32, 4096, 32, 512, 11008, 3, 32000),
+    ]
+}
+
+/// Look up a Table-2 model by (case-insensitive) name.
+pub fn find_model(name: &str) -> Option<TransformerSpec> {
+    let lower = name.to_ascii_lowercase();
+    table2_models()
+        .into_iter()
+        .find(|m| m.name.to_ascii_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_table2_headlines() {
+        // Table 2 parameter counts (billions); the analytic formula
+        // should be within ~20%.
+        let expect = [
+            ("ViT-G", 1.8),
+            ("ViT-e", 3.9),
+            ("BERT-Large", 0.4),
+            ("BERT-XLarge", 1.2),
+            ("GPT 1.3B", 1.3),
+            ("GPT 2.7B", 2.7),
+            ("GPT 6.7B", 6.7),
+            ("Tiny Llama", 1.1),
+            ("Llama 3B", 3.5),
+            ("Llama 7B", 6.7),
+        ];
+        for (name, billions) in expect {
+            let m = find_model(name).unwrap();
+            let got = m.params_b();
+            let rel = (got - billions) / billions;
+            assert!(
+                rel.abs() < 0.20,
+                "{name}: expected ~{billions}B, formula gives {got:.2}B"
+            );
+        }
+    }
+
+    #[test]
+    fn layer_flops_scale_linearly_in_batch() {
+        let m = find_model("BERT-Large").unwrap();
+        let f1 = m.layer_fwd_flops(1);
+        let f8 = m.layer_fwd_flops(8);
+        assert!((f8 / f1 - 8.0).abs() < 1e-9);
+        assert!(m.layer_bwd_flops(1) == 2.0 * f1);
+    }
+
+    #[test]
+    fn iter_flops_recompute_adds_one_forward() {
+        let m = find_model("BERT-Large").unwrap();
+        let without = m.iter_flops(4, false);
+        let with = m.iter_flops(4, true);
+        let fwd = m.layer_fwd_flops(4) * m.layers as f64;
+        assert!((with - without - fwd).abs() / fwd < 1e-9);
+    }
+
+    #[test]
+    fn six_nd_sanity() {
+        // Classic 6*N*D estimate: fwd+bwd FLOPs per token ~ 6 * params.
+        let m = find_model("GPT 6.7B").unwrap();
+        let tokens = m.seq_len as f64;
+        let flops = m.iter_flops(1, false);
+        let six_nd = 6.0 * m.total_params() as f64 * tokens;
+        let ratio = flops / six_nd;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "iter flops {flops:.3e} vs 6ND {six_nd:.3e} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn activation_accounting_positive_and_ordered() {
+        let m = find_model("GPT 2.7B").unwrap();
+        assert!(m.boundary_activation_bytes() > 0.0);
+        // Full intra-layer activations dwarf the boundary checkpoint.
+        assert!(
+            m.intra_layer_activation_bytes()
+                > 4.0 * m.boundary_activation_bytes()
+        );
+    }
+
+    #[test]
+    fn all_models_resolvable() {
+        for m in table2_models() {
+            assert!(find_model(&m.name).is_some());
+        }
+        assert!(find_model("nonexistent").is_none());
+    }
+}

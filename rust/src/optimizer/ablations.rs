@@ -1,0 +1,244 @@
+//! Ablated planners for Fig. 7: compute balancing only (Cephalo-CB),
+//! memory balancing only (Cephalo-MB), and the even-everything FSDP
+//! baseline plan.
+
+use super::{Assignment, GpuAssign, PlanError};
+use crate::memory::{state_bytes, usable_capacity};
+use crate::perfmodel::ClusterPerfProfile;
+
+/// Predict the Eqs. 2/3 layer latency for a fixed per-GPU (m, l) set.
+pub fn predict_layer_latency(
+    profile: &ClusterPerfProfile,
+    per_gpu: &[GpuAssign],
+    uneven_state: bool,
+) -> f64 {
+    let (ag, rs) = if uneven_state {
+        (profile.unit_allgather_uneven(), profile.unit_reduce_scatter_uneven())
+    } else {
+        (profile.unit_allgather(), profile.unit_reduce_scatter())
+    };
+    let tf = per_gpu
+        .iter()
+        .zip(&profile.per_gpu)
+        .filter(|(g, _)| g.microbatch > 0)
+        .map(|(g, m)| m.fwd.total(g.microbatch, g.num_micro))
+        .fold(0.0, f64::max);
+    let tb = per_gpu
+        .iter()
+        .zip(&profile.per_gpu)
+        .filter(|(g, _)| g.microbatch > 0)
+        .map(|(g, m)| m.bwd.total(g.microbatch, g.num_micro))
+        .fold(0.0, f64::max);
+    tf.max(ag) + tb.max(ag + rs)
+}
+
+fn finish(
+    profile: &ClusterPerfProfile,
+    per_gpu: Vec<GpuAssign>,
+    batch: usize,
+    uneven: bool,
+) -> Result<Assignment, PlanError> {
+    let layer = predict_layer_latency(profile, &per_gpu, uneven);
+    let asg = Assignment {
+        per_gpu,
+        layer_latency: layer,
+        iter_latency: layer * profile.layers as f64,
+    };
+    asg.validate(profile, batch)?;
+    Ok(asg)
+}
+
+/// Cephalo-CB (§4.4): batch sizes proportional to compute speed, NO
+/// gradient accumulation (m_i = b_i, l = 1), EVEN training state.
+/// OOMs once per-GPU compute memory or the even state share no longer
+/// fit — exactly the Fig.-7 failure mode beyond batch ~100.
+pub fn compute_balanced_only(
+    profile: &ClusterPerfProfile,
+    batch: usize,
+) -> Result<Assignment, PlanError> {
+    let n = profile.num_gpus();
+    // Speed proxy: saturated per-sample latency (inverse throughput).
+    let speeds: Vec<f64> = profile
+        .per_gpu
+        .iter()
+        .map(|g| {
+            let m = 8;
+            m as f64 / (g.fwd.predict(m) + g.bwd.predict(m))
+        })
+        .collect();
+    let batches = proportional_split(batch, &speeds);
+    let even_ratio = 1.0 / n as f64;
+    let total_state = state_bytes(profile.total_params);
+    let mut per_gpu = Vec::with_capacity(n);
+    for (i, b) in batches.iter().enumerate() {
+        let g = &profile.per_gpu[i];
+        let cap = usable_capacity(g.capacity);
+        let need = if *b > 0 { g.mem.predict(*b) } else { 0.0 }
+            + even_ratio * total_state;
+        if need > cap {
+            return Err(PlanError::OutOfMemory {
+                gpu: i,
+                needed: need,
+                capacity: cap,
+            });
+        }
+        per_gpu.push(GpuAssign {
+            microbatch: *b,
+            num_micro: usize::from(*b > 0),
+            state_ratio: even_ratio,
+        });
+    }
+    finish(profile, per_gpu, batch, false)
+}
+
+/// Cephalo-MB (§4.4): memory balancing only — EVEN batch split,
+/// microbatch fixed at 1 (maximal accumulation), UNEVEN state via the
+/// greedy partitioner. Never OOMs but underutilizes compute.
+pub fn memory_balanced_only(
+    profile: &ClusterPerfProfile,
+    batch: usize,
+) -> Result<Assignment, PlanError> {
+    let n = profile.num_gpus();
+    if batch % n != 0 {
+        return Err(PlanError::Infeasible(format!(
+            "batch {batch} not divisible by {n} GPUs"
+        )));
+    }
+    let b = batch / n;
+    let mut per_gpu: Vec<GpuAssign> = (0..n)
+        .map(|_| GpuAssign {
+            microbatch: 1,
+            num_micro: b,
+            state_ratio: 0.0,
+        })
+        .collect();
+    super::greedy::partition_state(profile, &mut per_gpu)?;
+    finish(profile, per_gpu, batch, true)
+}
+
+/// Baseline FSDP plan: even batch, no accumulation, even state.
+pub fn fsdp_even(
+    profile: &ClusterPerfProfile,
+    batch: usize,
+) -> Result<Assignment, PlanError> {
+    let n = profile.num_gpus();
+    if batch % n != 0 {
+        return Err(PlanError::Infeasible(format!(
+            "batch {batch} not divisible by {n} GPUs"
+        )));
+    }
+    let b = batch / n;
+    let even_ratio = 1.0 / n as f64;
+    let total_state = state_bytes(profile.total_params);
+    for (i, g) in profile.per_gpu.iter().enumerate() {
+        let cap = usable_capacity(g.capacity);
+        let need = g.mem.predict(b) + even_ratio * total_state;
+        if need > cap {
+            return Err(PlanError::OutOfMemory {
+                gpu: i,
+                needed: need,
+                capacity: cap,
+            });
+        }
+    }
+    let per_gpu: Vec<GpuAssign> = (0..n)
+        .map(|_| GpuAssign {
+            microbatch: b,
+            num_micro: 1,
+            state_ratio: even_ratio,
+        })
+        .collect();
+    finish(profile, per_gpu, batch, false)
+}
+
+/// Split `total` proportionally to `weights` with largest-remainder
+/// rounding (Σ result == total).
+pub fn proportional_split(total: usize, weights: &[f64]) -> Vec<usize> {
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0);
+    let ideal: Vec<f64> =
+        weights.iter().map(|w| w / wsum * total as f64).collect();
+    let mut out: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let mut left = total - out.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        (ideal[b] - ideal[b].floor())
+            .partial_cmp(&(ideal[a] - ideal[a].floor()))
+            .unwrap()
+    });
+    for &i in &order {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::model::find_model;
+    use crate::optimizer::DpOptimizer;
+    use crate::perfmodel::{Profiler, SyntheticOracle};
+
+    fn profile(model: &str) -> ClusterPerfProfile {
+        let cluster = Cluster::cluster_a();
+        let m = find_model(model).unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &m, 42);
+        Profiler::default().profile(&cluster, &m, &oracle)
+    }
+
+    #[test]
+    fn proportional_split_sums() {
+        let s = proportional_split(128, &[30.3, 30.3, 38.7, 11.8, 11.8,
+                                          11.8, 9.3, 9.3]);
+        assert_eq!(s.iter().sum::<usize>(), 128);
+        assert!(s[2] > s[6]); // A6000 > P100
+    }
+
+    #[test]
+    fn cb_ooms_at_large_batch_mb_does_not() {
+        // Fig. 7: CB hits OOM beyond ~batch 100 on the big models; MB
+        // keeps going.
+        let p = profile("GPT 2.7B");
+        assert!(compute_balanced_only(&p, 256).is_err());
+        let mb = memory_balanced_only(&p, 256).expect("MB should fit");
+        assert_eq!(mb.global_batch(), 256);
+    }
+
+    #[test]
+    fn mb_is_slower_than_full_cephalo() {
+        // Fig. 7: microbatch=1 underutilizes compute.
+        let p = profile("ViT-e");
+        let mb = memory_balanced_only(&p, 128).unwrap();
+        let (full, _) = DpOptimizer::default().solve(&p, 128).unwrap();
+        assert!(
+            full.iter_latency < mb.iter_latency,
+            "cephalo {} should beat MB {}",
+            full.iter_latency,
+            mb.iter_latency
+        );
+    }
+
+    #[test]
+    fn cephalo_beats_cb_when_cb_feasible() {
+        let p = profile("BERT-Large");
+        let cb = compute_balanced_only(&p, 64).expect("small batch fits");
+        let (full, _) = DpOptimizer::default().solve(&p, 64).unwrap();
+        assert!(full.iter_latency <= cb.iter_latency * 1.001);
+    }
+
+    #[test]
+    fn fsdp_even_ooms_on_big_models() {
+        // Table 8: baseline FSDP OOMs on GPT 2.7B at batch 128 (P100s'
+        // 12 GB can't hold the even share + compute).
+        let p = profile("GPT 2.7B");
+        assert!(fsdp_even(&p, 128).is_err());
+        // But works for BERT-Large at small batch.
+        let p2 = profile("BERT-Large");
+        assert!(fsdp_even(&p2, 64).is_ok());
+    }
+}

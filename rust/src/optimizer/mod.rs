@@ -1,0 +1,121 @@
+//! The Cephalo optimizer (§2.4, Algorithm 1): dynamic programming over
+//! (GPU prefix, batch allocated, aggregate microbatch size) to divide
+//! compute, then greedy training-state partitioning to divide memory.
+
+pub mod ablations;
+pub mod dp;
+pub mod greedy;
+
+pub use dp::{DpOptimizer, DpStats};
+pub use greedy::partition_state;
+
+use crate::perfmodel::ClusterPerfProfile;
+
+/// Per-GPU slice of the training configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuAssign {
+    /// Microbatch size m_i (0 means the GPU receives no compute).
+    pub microbatch: usize,
+    /// Number of microbatches l_i.
+    pub num_micro: usize,
+    /// Training-state ratio r_i (sums to 1 across GPUs).
+    pub state_ratio: f64,
+}
+
+impl GpuAssign {
+    /// Local batch size b_i = m_i * l_i.
+    pub fn batch(&self) -> usize {
+        self.microbatch * self.num_micro
+    }
+}
+
+/// A full training configuration for the cluster.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub per_gpu: Vec<GpuAssign>,
+    /// Predicted single-layer latency T_f + T_b (Eqs. 2, 3).
+    pub layer_latency: f64,
+    /// Predicted full-iteration latency (layer latency x layers).
+    pub iter_latency: f64,
+}
+
+impl Assignment {
+    pub fn global_batch(&self) -> usize {
+        self.per_gpu.iter().map(GpuAssign::batch).sum()
+    }
+
+    /// Predicted throughput in samples/second.
+    pub fn throughput(&self) -> f64 {
+        self.global_batch() as f64 / self.iter_latency
+    }
+
+    /// Sanity checks against a profile; used by tests and the trainer.
+    pub fn validate(&self, profile: &ClusterPerfProfile, batch: usize)
+        -> Result<(), PlanError> {
+        if self.per_gpu.len() != profile.num_gpus() {
+            return Err(PlanError::Internal("gpu count mismatch".into()));
+        }
+        if self.global_batch() != batch {
+            return Err(PlanError::Internal(format!(
+                "batch {} != requested {batch}",
+                self.global_batch()
+            )));
+        }
+        let rsum: f64 = self.per_gpu.iter().map(|g| g.state_ratio).sum();
+        if (rsum - 1.0).abs() > 1e-6 {
+            return Err(PlanError::Internal(format!(
+                "state ratios sum to {rsum}"
+            )));
+        }
+        // Per-GPU memory: compute + assigned state within the 80% cap.
+        let total_state =
+            crate::memory::state_bytes(profile.total_params);
+        for (i, (g, m)) in
+            self.per_gpu.iter().zip(&profile.per_gpu).enumerate()
+        {
+            let compute = if g.microbatch > 0 {
+                m.mem.predict(g.microbatch)
+            } else {
+                0.0
+            };
+            let used = compute + g.state_ratio * total_state;
+            let cap = crate::memory::usable_capacity(m.capacity);
+            if used > cap * (1.0 + 1e-9) {
+                return Err(PlanError::OutOfMemory {
+                    gpu: i,
+                    needed: used,
+                    capacity: cap,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Planning failures.
+#[derive(Debug, Clone)]
+pub enum PlanError {
+    /// No configuration satisfies the memory constraints — the paper's
+    /// "OOM" table entries.
+    OutOfMemory { gpu: usize, needed: f64, capacity: f64 },
+    /// The batch cannot be divided under the constraints.
+    Infeasible(String),
+    Internal(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::OutOfMemory { gpu, needed, capacity } => write!(
+                f,
+                "OOM on gpu {gpu}: needs {:.2} GB > usable {:.2} GB",
+                needed / 1e9,
+                capacity / 1e9
+            ),
+            PlanError::Infeasible(s) => write!(f, "infeasible: {s}"),
+            PlanError::Internal(s) => write!(f, "internal: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}

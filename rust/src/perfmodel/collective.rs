@@ -1,0 +1,162 @@
+//! NCCL-style collective latency model (§2.3 Communication Latency,
+//! Supplementary C / Fig. 12).
+//!
+//! Ring AllGather / ReduceScatter over N ranks moves (N-1)/N of the
+//! collective size through the bottleneck link per rank, plus a per-step
+//! latency term. Uneven input sizes (uneven training-state sharding) add
+//! a conservative +15% (paper's measured bound), uncorrelated with the
+//! skew degree — exactly the model the optimizer assumes.
+
+use crate::cluster::{gbps_to_bytes_per_sec, Cluster};
+
+/// Paper's conservative uneven-input overhead (Supplementary C).
+pub const UNEVEN_OVERHEAD: f64 = 0.15;
+
+#[derive(Debug, Clone)]
+pub struct CollectiveModel {
+    pub ranks: usize,
+    /// Bottleneck bus bandwidth in bytes/s for the ring.
+    pub bus_bytes_per_sec: f64,
+    /// Per-ring-step latency (link latency + kernel launch), seconds.
+    pub step_latency_s: f64,
+}
+
+impl CollectiveModel {
+    /// Build from a cluster: the DP ring spans all GPUs, so the
+    /// bottleneck is the slowest link on the ring (inter-node if the
+    /// cluster has >1 node).
+    pub fn from_cluster(cluster: &Cluster) -> CollectiveModel {
+        let ranks = cluster.num_gpus();
+        let bw = gbps_to_bytes_per_sec(cluster.ring_bw_gbps());
+        // Multi-node rings pay NIC/switch latency per step; intra-node
+        // rings only kernel-launch + PCIe latency.
+        let step = if cluster.nodes.len() > 1 { 20e-6 } else { 6e-6 };
+        CollectiveModel { ranks, bus_bytes_per_sec: bw, step_latency_s: step }
+    }
+
+    /// Ring AllGather latency for a collective of `bytes` total
+    /// (sum of all input shards).
+    pub fn allgather(&self, bytes: f64) -> f64 {
+        self.ring_time(bytes)
+    }
+
+    /// Ring ReduceScatter latency — same data movement as AllGather.
+    pub fn reduce_scatter(&self, bytes: f64) -> f64 {
+        self.ring_time(bytes)
+    }
+
+    /// AllReduce = ReduceScatter + AllGather.
+    pub fn allreduce(&self, bytes: f64) -> f64 {
+        self.reduce_scatter(bytes) + self.allgather(bytes)
+    }
+
+    /// Uneven-sharding variants (§2.3: +15%).
+    pub fn allgather_uneven(&self, bytes: f64) -> f64 {
+        self.allgather(bytes) * (1.0 + UNEVEN_OVERHEAD)
+    }
+
+    pub fn reduce_scatter_uneven(&self, bytes: f64) -> f64 {
+        self.reduce_scatter(bytes) * (1.0 + UNEVEN_OVERHEAD)
+    }
+
+    fn ring_time(&self, bytes: f64) -> f64 {
+        if self.ranks <= 1 {
+            return 0.0;
+        }
+        let n = self.ranks as f64;
+        let steps = n - 1.0;
+        steps * self.step_latency_s
+            + bytes * (steps / n) / self.bus_bytes_per_sec
+    }
+
+    /// Point-to-point transfer time over a link of `gbps`.
+    pub fn p2p(bytes: f64, gbps: f64) -> f64 {
+        10e-6 + bytes / gbps_to_bytes_per_sec(gbps)
+    }
+}
+
+/// Input skew: largest input / total input (Fig. 12 bottom x-axis).
+pub fn input_skew(shards: &[f64]) -> f64 {
+    let total: f64 = shards.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    shards.iter().copied().fold(0.0, f64::max) / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    fn model() -> CollectiveModel {
+        CollectiveModel {
+            ranks: 8,
+            bus_bytes_per_sec: 6.25e9, // 50 Gbps
+            step_latency_s: 20e-6,
+        }
+    }
+
+    #[test]
+    fn latency_scales_with_bytes() {
+        let m = model();
+        let t1 = m.allgather(100e6);
+        let t2 = m.allgather(200e6);
+        assert!(t2 > 1.8 * t1 && t2 < 2.2 * t1);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CollectiveModel {
+            ranks: 1,
+            bus_bytes_per_sec: 1e9,
+            step_latency_s: 1e-5,
+        };
+        assert_eq!(m.allgather(1e9), 0.0);
+        assert_eq!(m.allreduce(1e9), 0.0);
+    }
+
+    #[test]
+    fn uneven_is_exactly_15_percent_worse() {
+        let m = model();
+        let even = m.allgather(500e6);
+        let uneven = m.allgather_uneven(500e6);
+        assert!((uneven / even - 1.15).abs() < 1e-12);
+        let rs = m.reduce_scatter(500e6);
+        assert!((m.reduce_scatter_uneven(500e6) / rs - 1.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_is_rs_plus_ag() {
+        let m = model();
+        let x = 123e6;
+        assert!(
+            (m.allreduce(x) - m.reduce_scatter(x) - m.allgather(x)).abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn from_cluster_uses_bottleneck_link() {
+        let a = Cluster::cluster_a();
+        let m = CollectiveModel::from_cluster(&a);
+        assert_eq!(m.ranks, 8);
+        // Cluster A bottleneck is the 50 Gbps inter-node link.
+        assert!((m.bus_bytes_per_sec - 6.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn ring_bandwidth_term_dominates_large_messages() {
+        let m = model();
+        // 1 GB AllGather: bw term = 1e9 * (7/8) / 6.25e9 = 0.14 s.
+        let t = m.allgather(1e9);
+        assert!((t - 0.14).abs() / 0.14 < 0.01);
+    }
+
+    #[test]
+    fn skew_metric() {
+        assert!((input_skew(&[1.0, 1.0, 1.0, 1.0]) - 0.25).abs() < 1e-12);
+        assert!((input_skew(&[4.0, 0.0, 0.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(input_skew(&[]), 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Compute latency model (Fig. 5 left): profiled small-batch points to
+//! capture sublinear warm-up, linear extrapolation beyond the profiled
+//! range once the GPU is saturated.
+
+/// Latency (seconds) of one microbatch as a function of microbatch size.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Profiled latencies for m = 1..=profiled.len().
+    profiled: Vec<f64>,
+    /// Linear tail fitted on the largest profiled points.
+    slope: f64,
+    intercept: f64,
+}
+
+impl LatencyModel {
+    /// Fit from (microbatch, seconds) samples; microbatches must be the
+    /// contiguous range 1..=P (the profiler guarantees this).
+    pub fn fit(samples: &[(usize, f64)]) -> LatencyModel {
+        assert!(samples.len() >= 2, "need >= 2 latency samples");
+        for (i, (m, _)) in samples.iter().enumerate() {
+            assert_eq!(*m, i + 1, "samples must cover 1..=P contiguously");
+        }
+        let profiled: Vec<f64> = samples.iter().map(|s| s.1).collect();
+        // Fit the tail on the last half of the points, where the GPU is
+        // closest to saturation (strongest linear regime).
+        let tail_start = samples.len() / 2;
+        let tail: Vec<(f64, f64)> = samples[tail_start..]
+            .iter()
+            .map(|(m, t)| (*m as f64, *t))
+            .collect();
+        let (slope, intercept) = if tail.len() >= 2 {
+            crate::util::stats::linear_fit(&tail)
+        } else {
+            let (m, t) = samples[samples.len() - 1];
+            (t / m as f64, 0.0)
+        };
+        LatencyModel { profiled, slope: slope.max(0.0), intercept }
+    }
+
+    /// Construct directly (tests, analytic baselines).
+    pub fn from_line(slope: f64, intercept: f64) -> LatencyModel {
+        LatencyModel { profiled: Vec::new(), slope, intercept }
+    }
+
+    /// Latency of one microbatch of size m.
+    pub fn predict(&self, m: usize) -> f64 {
+        assert!(m >= 1, "microbatch must be >= 1");
+        if m <= self.profiled.len() {
+            self.profiled[m - 1]
+        } else {
+            (self.slope * m as f64 + self.intercept).max(0.0)
+        }
+    }
+
+    /// Total latency of `l` microbatches of size m (§2.3: linear scale).
+    pub fn total(&self, m: usize, l: usize) -> f64 {
+        self.predict(m) * l as f64
+    }
+
+    pub fn profiled_range(&self) -> usize {
+        self.profiled.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn saturating_curve(m: usize) -> f64 {
+        // Latency = flops / (peak * eff(m)), eff = m / (m + 2)
+        let work = 10.0 * m as f64;
+        let eff = m as f64 / (m as f64 + 2.0);
+        work / (100.0 * eff)
+    }
+
+    #[test]
+    fn profiled_points_are_exact() {
+        let samples: Vec<(usize, f64)> =
+            (1..=8).map(|m| (m, saturating_curve(m))).collect();
+        let model = LatencyModel::fit(&samples);
+        for (m, t) in &samples {
+            assert_eq!(model.predict(*m), *t);
+        }
+    }
+
+    #[test]
+    fn extrapolation_is_nearly_linear_and_monotonic() {
+        let samples: Vec<(usize, f64)> =
+            (1..=8).map(|m| (m, saturating_curve(m))).collect();
+        let model = LatencyModel::fit(&samples);
+        let mut prev = model.predict(8);
+        for m in 9..64 {
+            let t = model.predict(m);
+            assert!(t > prev, "latency must grow with m");
+            prev = t;
+        }
+        // At large m the modeled throughput approaches saturation:
+        // true saturated cost is 0.1 s/sample.
+        let per_sample = model.predict(256) / 256.0;
+        assert!((per_sample - 0.1).abs() / 0.1 < 0.1, "{per_sample}");
+    }
+
+    #[test]
+    fn sublinearity_captured_at_small_m() {
+        let samples: Vec<(usize, f64)> =
+            (1..=8).map(|m| (m, saturating_curve(m))).collect();
+        let model = LatencyModel::fit(&samples);
+        // Latency per sample at m=1 is much worse than at m=8.
+        assert!(model.predict(1) / 1.0 > 1.5 * (model.predict(8) / 8.0));
+    }
+
+    #[test]
+    fn total_scales_by_microbatch_count() {
+        let model = LatencyModel::from_line(0.01, 0.005);
+        let one = model.predict(4);
+        assert!((model.total(4, 8) - 8.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_contiguous_samples() {
+        LatencyModel::fit(&[(1, 0.1), (3, 0.3)]);
+    }
+}

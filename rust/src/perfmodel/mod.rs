@@ -1,0 +1,14 @@
+//! Performance modeling (§2.3): per-GPU compute latency and memory
+//! models, the NCCL-style collective model with the +15% uneven-input
+//! adjustment, the synthetic compute oracle standing in for real GPU
+//! profiling, and the profiler that fits everything.
+
+pub mod collective;
+pub mod latency;
+pub mod oracle;
+pub mod profiler;
+
+pub use collective::CollectiveModel;
+pub use latency::LatencyModel;
+pub use oracle::{ComputeOracle, SyntheticOracle};
+pub use profiler::{ClusterPerfProfile, GpuModelSet, Profiler};

@@ -1,0 +1,205 @@
+//! Compute oracles: the source of "measured" per-GPU latency/memory.
+//!
+//! * `SyntheticOracle` — the cluster-simulation stand-in for running
+//!   real profiling iterations on the paper's GPUs (see DESIGN.md
+//!   §Substitutions): an analytic roofline curve per GPU derived from
+//!   the model's FLOPs and the GPU's peak TFLOPs, with a saturating
+//!   small-batch efficiency term (reproducing Fig. 5's sublinear ->
+//!   linear shape) and deterministic measurement noise.
+//! * The trait is also implemented by the real PJRT-backed profiler in
+//!   `coordinator::real_profile` for the CPU end-to-end path.
+//!
+//! The *profiler* samples an oracle at small m and fits linear models;
+//! the *simulator* queries the oracle directly as ground truth. The gap
+//! between the two is exactly what Fig. 10 (model ARE) measures.
+
+use crate::cluster::Cluster;
+use crate::model::TransformerSpec;
+use crate::util::prng::Rng;
+
+/// Ground-truth source of per-GPU compute latency and memory.
+pub trait ComputeOracle {
+    /// Forward latency of ONE transformer layer for a microbatch of m.
+    fn fwd_latency(&self, gpu: usize, m: usize) -> f64;
+    /// Backward (incl. recompute) latency of one layer for microbatch m.
+    fn bwd_latency(&self, gpu: usize, m: usize) -> f64;
+    /// Compute memory (bytes) at microbatch m — M_compute in §2.3.
+    fn compute_mem(&self, gpu: usize, m: usize) -> f64;
+    fn num_gpus(&self) -> usize;
+}
+
+/// Analytic per-GPU roofline with saturating efficiency + noise.
+#[derive(Debug, Clone)]
+pub struct SyntheticOracle {
+    /// Peak FLOP/s per GPU slot.
+    peak_flops: Vec<f64>,
+    /// Microbatch size at which each GPU reaches half efficiency.
+    m_half: Vec<f64>,
+    /// Achievable fraction of peak at saturation (fp32 transformer).
+    pub max_utilization: f64,
+    /// Relative measurement noise amplitude.
+    pub noise: f64,
+    model: TransformerSpec,
+    seed: u64,
+    /// Fixed memory overhead per GPU (framework + one FSDP unit).
+    mem_intercept: f64,
+    /// Compute-memory bytes per sample.
+    mem_slope: f64,
+}
+
+impl SyntheticOracle {
+    pub fn new(cluster: &Cluster, model: &TransformerSpec, seed: u64)
+        -> SyntheticOracle {
+        let gpus = cluster.gpus();
+        let peak_flops: Vec<f64> =
+            gpus.iter().map(|g| g.spec.flops()).collect();
+        // Faster GPUs need more work in flight to saturate: m_half scales
+        // ~ sqrt of relative speed (empirically matches Fig. 5's shape).
+        let m_half: Vec<f64> = gpus
+            .iter()
+            .map(|g| 1.5 * (g.spec.tflops_fp32 / 15.0).sqrt().max(0.4))
+            .collect();
+        // One FSDP unit materialized (params + grads) + framework state.
+        let unit_bytes = model.params_per_layer() as f64 * 4.0;
+        let mem_intercept = 0.9e9 + 2.0 * unit_bytes;
+        // Live working set of one layer's intra-layer activations with
+        // checkpointing (one layer live at a time) + margins.
+        let mem_slope = model.intra_layer_activation_bytes() * 1.3;
+        SyntheticOracle {
+            peak_flops,
+            m_half,
+            max_utilization: 0.42,
+            noise: 0.02,
+            model: model.clone(),
+            seed,
+            mem_intercept,
+            mem_slope,
+        }
+    }
+
+    /// Saturating efficiency in (0, 1]: eff(m) = m / (m + m_half).
+    fn efficiency(&self, gpu: usize, m: usize) -> f64 {
+        let m = m as f64;
+        m / (m + self.m_half[gpu])
+    }
+
+    /// Deterministic noise in [1-noise, 1+noise] keyed on all inputs.
+    fn jitter(&self, gpu: usize, m: usize, salt: u64) -> f64 {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (gpu as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (m as u64).wrapping_mul(0xD1B54A32D192ED03)
+                ^ salt,
+        );
+        1.0 + self.noise * (2.0 * rng.f64() - 1.0)
+    }
+
+    pub fn model(&self) -> &TransformerSpec {
+        &self.model
+    }
+}
+
+impl ComputeOracle for SyntheticOracle {
+    fn fwd_latency(&self, gpu: usize, m: usize) -> f64 {
+        let flops = self.model.layer_fwd_flops(m);
+        let achievable = self.peak_flops[gpu]
+            * self.max_utilization
+            * self.efficiency(gpu, m);
+        flops / achievable * self.jitter(gpu, m, 1)
+    }
+
+    fn bwd_latency(&self, gpu: usize, m: usize) -> f64 {
+        // Backward (2x fwd) + activation recompute (1x fwd) — the paper
+        // checkpoints activations at every layer boundary (§4.1).
+        let flops = self.model.layer_bwd_flops(m) + self.model.layer_fwd_flops(m);
+        let achievable = self.peak_flops[gpu]
+            * self.max_utilization
+            * self.efficiency(gpu, m);
+        flops / achievable * self.jitter(gpu, m, 2)
+    }
+
+    fn compute_mem(&self, gpu: usize, m: usize) -> f64 {
+        (self.mem_intercept + self.mem_slope * m as f64)
+            * self.jitter(gpu, m, 3)
+    }
+
+    fn num_gpus(&self) -> usize {
+        self.peak_flops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::model::find_model;
+
+    fn oracle() -> SyntheticOracle {
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        SyntheticOracle::new(&cluster, &model, 42)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = oracle();
+        let b = oracle();
+        for gpu in 0..8 {
+            for m in 1..10 {
+                assert_eq!(a.fwd_latency(gpu, m), b.fwd_latency(gpu, m));
+                assert_eq!(a.compute_mem(gpu, m), b.compute_mem(gpu, m));
+            }
+        }
+    }
+
+    #[test]
+    fn faster_gpu_is_faster_at_saturation() {
+        let o = oracle();
+        // GPU 2 is the A6000 (38.7 TF), GPU 7 a P100 (9.3 TF).
+        let fast = o.fwd_latency(2, 32);
+        let slow = o.fwd_latency(7, 32);
+        assert!(
+            slow / fast > 2.5,
+            "A6000 {fast} vs P100 {slow}: ratio too small"
+        );
+    }
+
+    #[test]
+    fn sublinear_then_linear_shape() {
+        // Fig. 5 left: per-sample latency at m=1 much worse than m=8;
+        // beyond saturation, near-linear scaling.
+        let o = oracle();
+        let per1 = o.fwd_latency(0, 1);
+        let per8 = o.fwd_latency(0, 8) / 8.0;
+        assert!(per1 > 1.3 * per8);
+        let t16 = o.fwd_latency(0, 16);
+        let t32 = o.fwd_latency(0, 32);
+        let ratio = t32 / t16;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bwd_costs_about_3x_fwd() {
+        // bwd = 2x fwd + 1x recompute.
+        let o = oracle();
+        let f = o.fwd_latency(3, 8);
+        let b = o.bwd_latency(3, 8);
+        let r = b / f;
+        assert!((2.7..3.3).contains(&r), "bwd/fwd {r}");
+    }
+
+    #[test]
+    fn memory_grows_linearly_and_same_across_gpus_modulo_noise() {
+        let o = oracle();
+        let m1 = o.compute_mem(0, 1);
+        let m5 = o.compute_mem(0, 5);
+        let m9 = o.compute_mem(0, 9);
+        // Differences approximate slope * 4 each.
+        let d1 = m5 - m1;
+        let d2 = m9 - m5;
+        assert!((d1 / d2 - 1.0).abs() < 0.2);
+        // Memory is a property of the model, not the GPU (±noise).
+        let other = o.compute_mem(5, 5);
+        assert!((other / o.compute_mem(0, 5) - 1.0).abs() < 0.1);
+    }
+}

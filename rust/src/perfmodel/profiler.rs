@@ -1,0 +1,203 @@
+//! The profiler (§3.1): samples an oracle at small microbatch sizes
+//! (m = 1..=8 suffices per the paper), fits per-GPU latency and memory
+//! models, and measures collective latencies — producing the
+//! `ClusterPerfProfile` the optimizer plans against.
+
+use crate::cluster::Cluster;
+use crate::memory::MemoryModel;
+use crate::model::TransformerSpec;
+use crate::perfmodel::collective::CollectiveModel;
+use crate::perfmodel::latency::LatencyModel;
+use crate::perfmodel::oracle::ComputeOracle;
+
+/// Fitted models for one GPU slot.
+#[derive(Debug, Clone)]
+pub struct GpuModelSet {
+    pub fwd: LatencyModel,
+    pub bwd: LatencyModel,
+    pub mem: MemoryModel,
+    /// Physical memory capacity in bytes.
+    pub capacity: f64,
+}
+
+/// Everything the optimizer needs about a (cluster, model) pair.
+#[derive(Debug, Clone)]
+pub struct ClusterPerfProfile {
+    pub per_gpu: Vec<GpuModelSet>,
+    pub collective: CollectiveModel,
+    /// Parameters per FSDP unit (one transformer layer).
+    pub unit_params: f64,
+    /// Total model parameters (incl. embeddings, divided across units
+    /// for state accounting).
+    pub total_params: f64,
+    pub layers: usize,
+    pub model_name: String,
+    pub seq_len: usize,
+}
+
+impl ClusterPerfProfile {
+    /// AllGather latency for one FSDP unit's parameters (fp32).
+    pub fn unit_allgather(&self) -> f64 {
+        self.collective.allgather(self.unit_params * 4.0)
+    }
+
+    /// ReduceScatter latency for one unit's gradients (fp32).
+    pub fn unit_reduce_scatter(&self) -> f64 {
+        self.collective.reduce_scatter(self.unit_params * 4.0)
+    }
+
+    pub fn unit_allgather_uneven(&self) -> f64 {
+        self.collective.allgather_uneven(self.unit_params * 4.0)
+    }
+
+    pub fn unit_reduce_scatter_uneven(&self) -> f64 {
+        self.collective.reduce_scatter_uneven(self.unit_params * 4.0)
+    }
+
+    /// Even training-state share per GPU in bytes.
+    pub fn even_state_share(&self) -> f64 {
+        crate::memory::state_bytes(self.total_params)
+            / self.per_gpu.len() as f64
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.per_gpu.len()
+    }
+}
+
+/// Profiler configuration (§3.1: "B = 8 suffices").
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    pub max_profile_m: usize,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self { max_profile_m: 8 }
+    }
+}
+
+impl Profiler {
+    /// Profile a (cluster, model) pair through `oracle`.
+    pub fn profile(
+        &self,
+        cluster: &Cluster,
+        model: &TransformerSpec,
+        oracle: &dyn ComputeOracle,
+    ) -> ClusterPerfProfile {
+        assert_eq!(oracle.num_gpus(), cluster.num_gpus());
+        let gpus = cluster.gpus();
+        let per_gpu = gpus
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let fwd_samples: Vec<(usize, f64)> = (1..=self.max_profile_m)
+                    .map(|m| (m, oracle.fwd_latency(i, m)))
+                    .collect();
+                let bwd_samples: Vec<(usize, f64)> = (1..=self.max_profile_m)
+                    .map(|m| (m, oracle.bwd_latency(i, m)))
+                    .collect();
+                let mem_samples: Vec<(usize, f64)> = (1..=self.max_profile_m)
+                    .map(|m| (m, oracle.compute_mem(i, m)))
+                    .collect();
+                GpuModelSet {
+                    fwd: LatencyModel::fit(&fwd_samples),
+                    bwd: LatencyModel::fit(&bwd_samples),
+                    mem: MemoryModel::fit(&mem_samples),
+                    capacity: slot.spec.mem_bytes(),
+                }
+            })
+            .collect();
+        ClusterPerfProfile {
+            per_gpu,
+            collective: CollectiveModel::from_cluster(cluster),
+            unit_params: model.params_per_layer() as f64,
+            total_params: model.total_params() as f64,
+            layers: model.layers,
+            model_name: model.name.clone(),
+            seq_len: model.seq_len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::model::find_model;
+    use crate::perfmodel::oracle::SyntheticOracle;
+
+    fn profile() -> ClusterPerfProfile {
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &model, 42);
+        Profiler::default().profile(&cluster, &model, &oracle)
+    }
+
+    #[test]
+    fn one_model_set_per_gpu() {
+        let p = profile();
+        assert_eq!(p.per_gpu.len(), 8);
+        assert_eq!(p.layers, 24);
+        assert!(p.unit_params > 0.0);
+        assert!(p.total_params > p.unit_params * p.layers as f64 * 0.9);
+    }
+
+    #[test]
+    fn fitted_models_track_oracle_within_noise() {
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &model, 42);
+        let p = Profiler::default().profile(&cluster, &model, &oracle);
+        // Within the profiled range, exact; beyond it, within ~10%
+        // (paper Fig. 10: error < 10%).
+        for gpu in [0usize, 2, 5] {
+            for m in [12usize, 16, 24, 32] {
+                let pred = p.per_gpu[gpu].fwd.predict(m);
+                let actual = oracle.fwd_latency(gpu, m);
+                let err = ((pred - actual) / actual).abs();
+                assert!(
+                    err < 0.10,
+                    "gpu {gpu} m {m}: pred {pred}, actual {actual}, err {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_model_extrapolates() {
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &model, 42);
+        let p = Profiler::default().profile(&cluster, &model, &oracle);
+        for m in [16usize, 32] {
+            let pred = p.per_gpu[0].mem.predict(m);
+            let actual = oracle.compute_mem(0, m);
+            assert!(((pred - actual) / actual).abs() < 0.08);
+        }
+    }
+
+    #[test]
+    fn capacities_match_specs() {
+        let p = profile();
+        // GPU 2 in cluster A is the 48 GB A6000.
+        assert!((p.per_gpu[2].capacity - 48e9).abs() < 1e6);
+        // GPU 6/7 are 12 GB P100s.
+        assert!((p.per_gpu[7].capacity - 12e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn collective_latencies_positive_and_uneven_costlier() {
+        let p = profile();
+        assert!(p.unit_allgather() > 0.0);
+        assert!(p.unit_allgather_uneven() > p.unit_allgather());
+        assert!(p.unit_reduce_scatter_uneven() > p.unit_reduce_scatter());
+    }
+
+    #[test]
+    fn even_state_share() {
+        let p = profile();
+        let expect = p.total_params * 16.0 / 8.0;
+        assert!((p.even_state_share() - expect).abs() < 1.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Artifact manifest: the ABI between `python/compile/aot.py` and the
+//! Rust runtime. Reads `artifacts/manifest.json` (parameter order,
+//! shapes, model config, available entry points).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Model hyperparameters baked into the artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+    pub use_pallas: bool,
+    pub num_params: usize,
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub kind: String,
+    pub microbatch: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    /// Parameter names in ABI order.
+    pub param_order: Vec<String>,
+    /// Shapes per parameter, same order.
+    pub param_shapes: Vec<Vec<usize>>,
+    pub microbatches: Vec<usize>,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let model = j.field("model").map_err(|e| e.to_string())?;
+        let get = |k: &str| -> Result<usize, String> {
+            model
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or(format!("manifest: bad model.{k}"))
+        };
+        let minfo = ModelInfo {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            seq_len: get("seq_len")?,
+            d_ff: get("d_ff")?,
+            use_pallas: model
+                .get("use_pallas")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            num_params: get("num_params")?,
+        };
+        let param_order: Vec<String> = j
+            .field("param_order")
+            .map_err(|e| e.to_string())?
+            .as_arr()
+            .ok_or("param_order not an array")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let shapes_obj = j.field("param_shapes").map_err(|e| e.to_string())?;
+        let mut param_shapes = Vec::with_capacity(param_order.len());
+        for name in &param_order {
+            let shape: Vec<usize> = shapes_obj
+                .get(name)
+                .and_then(Json::as_arr)
+                .ok_or(format!("missing shape for {name}"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            param_shapes.push(shape);
+        }
+        let microbatches: Vec<usize> = j
+            .field("microbatches")
+            .map_err(|e| e.to_string())?
+            .as_arr()
+            .ok_or("microbatches not an array")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let entries: Vec<Entry> = j
+            .field("entries")
+            .map_err(|e| e.to_string())?
+            .as_arr()
+            .ok_or("entries not an array")?
+            .iter()
+            .map(|e| Entry {
+                kind: e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                microbatch: e
+                    .get("microbatch")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model: minfo,
+            param_order,
+            param_shapes,
+            microbatches,
+            entries,
+        })
+    }
+
+    /// Total parameter count from the shapes (cross-check vs model).
+    pub fn param_count(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Element count per parameter tensor.
+    pub fn param_sizes(&self) -> Vec<usize> {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .collect()
+    }
+
+    /// Path to the HLO file for (kind, microbatch), if lowered.
+    pub fn entry_path(&self, kind: &str, microbatch: usize)
+        -> Option<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.microbatch == microbatch)
+            .map(|e| self.dir.join(&e.file))
+    }
+
+    /// Greedy decomposition of a batch into available microbatch sizes
+    /// (largest first) — used when an assignment's m_i has no compiled
+    /// variant.
+    pub fn decompose_batch(&self, batch: usize) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self.microbatches.clone();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let mut rest = batch;
+        let mut out = Vec::new();
+        for &s in &sizes {
+            while rest >= s {
+                out.push(s);
+                rest -= s;
+            }
+        }
+        assert!(
+            rest == 0,
+            "batch {batch} not representable with microbatches {:?}",
+            self.microbatches
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_heads": 2,
+                  "seq_len": 16, "d_ff": 128, "use_pallas": true,
+                  "num_params": 10000},
+        "param_order": ["embed", "wq"],
+        "param_shapes": {"embed": [64, 32], "wq": [2, 32, 32]},
+        "microbatches": [1, 2, 4],
+        "entries": [
+            {"kind": "grad_step", "microbatch": 1, "file": "grad_step_m1.hlo.txt"},
+            {"kind": "loss", "microbatch": 2, "file": "loss_m2.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.model.d_model, 32);
+        assert_eq!(m.param_order, vec!["embed", "wq"]);
+        assert_eq!(m.param_shapes[1], vec![2, 32, 32]);
+        assert_eq!(m.param_count(), 64 * 32 + 2 * 32 * 32);
+        assert_eq!(
+            m.entry_path("grad_step", 1).unwrap(),
+            Path::new("/tmp/a/grad_step_m1.hlo.txt")
+        );
+        assert!(m.entry_path("grad_step", 8).is_none());
+    }
+
+    #[test]
+    fn decompose_batches() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.decompose_batch(7), vec![4, 2, 1]);
+        assert_eq!(m.decompose_batch(4), vec![4]);
+        assert_eq!(m.decompose_batch(3), vec![2, 1]);
+        assert_eq!(m.decompose_batch(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration hook: when `make artifacts` has run, verify the
+        // real manifest round-trips.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.param_order.len(), 16);
+            assert_eq!(m.param_count(), m.model.num_params);
+            for e in &m.entries {
+                assert!(m.dir.join(&e.file).exists(), "{} missing", e.file);
+            }
+        }
+    }
+}

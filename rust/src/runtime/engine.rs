@@ -1,0 +1,265 @@
+//! XLA/PJRT execution engine: loads AOT HLO-text artifacts, compiles
+//! them on the CPU PJRT client, and executes grad/loss steps.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `XlaEngine` is intentionally NOT `Send` (the underlying PJRT wrappers
+//! hold raw pointers); `service::ExecService` owns one on a dedicated
+//! thread and hands out cloneable handles.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::Manifest;
+
+/// Outcome of one microbatch gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    /// Sum-loss gradients, one flat vector per parameter tensor
+    /// (manifest order).
+    pub grads: Vec<Vec<f32>>,
+    /// Sum of token losses over the microbatch.
+    pub loss_sum: f32,
+    /// Token count.
+    pub token_count: f32,
+}
+
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables keyed by (kind, microbatch).
+    executables: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Device-resident parameter buffers, uploaded once per step via
+    /// `set_params`. Two birds: (a) the xla crate's literal-input
+    /// `execute` path leaks the staged input buffers (~|params| bytes
+    /// per call — measured in examples/leak_probe.rs), while
+    /// `execute_b` over caller-owned `PjRtBuffer`s frees correctly;
+    /// (b) parameters are uploaded once per step instead of once per
+    /// microbatch.
+    params_device: RefCell<Option<Vec<xla::PjRtBuffer>>>,
+}
+
+impl XlaEngine {
+    /// Create the engine and eagerly compile the requested entry kinds
+    /// for every available microbatch size.
+    pub fn load(dir: &Path, kinds: &[&str]) -> Result<XlaEngine> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for entry in manifest.entries.clone() {
+            if !kinds.contains(&entry.kind.as_str()) {
+                continue;
+            }
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.file))?;
+            executables.insert((entry.kind.clone(), entry.microbatch), exe);
+        }
+        Ok(XlaEngine {
+            client,
+            manifest,
+            executables,
+            params_device: RefCell::new(None),
+        })
+    }
+
+    /// Upload the parameter tensors to device buffers (once per step).
+    pub fn set_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        if params.len() != self.manifest.param_order.len() {
+            return Err(anyhow!(
+                "expected {} param tensors, got {}",
+                self.manifest.param_order.len(),
+                params.len()
+            ));
+        }
+        let mut bufs = Vec::with_capacity(params.len());
+        for (i, p) in params.iter().enumerate() {
+            let shape = &self.manifest.param_shapes[i];
+            let expect: usize = shape.iter().product();
+            if p.len() != expect {
+                return Err(anyhow!(
+                    "param {} ({}): {} elements, shape {:?} needs {expect}",
+                    i,
+                    self.manifest.param_order[i],
+                    p.len(),
+                    shape
+                ));
+            }
+            bufs.push(self.client.buffer_from_host_buffer(
+                p, shape, None,
+            )?);
+        }
+        *self.params_device.borrow_mut() = Some(bufs);
+        Ok(())
+    }
+
+    fn token_buffer(&self, tokens: &[i32], m: usize)
+        -> Result<xla::PjRtBuffer> {
+        let seq = self.manifest.model.seq_len;
+        if tokens.len() != m * seq {
+            return Err(anyhow!(
+                "tokens: {} elements, expected {m}x{seq}",
+                tokens.len()
+            ));
+        }
+        Ok(self.client.buffer_from_host_buffer(tokens, &[m, seq], None)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn available(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .keys()
+            .filter(|(k, _)| k == kind)
+            .map(|(_, m)| *m)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// One gradient step on a microbatch of size `m` (must have a
+    /// compiled variant), using the device-resident parameters from the
+    /// last `set_params`. Returns sum-loss gradients.
+    pub fn grad_step(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        m: usize,
+    ) -> Result<GradOut> {
+        let exe = self
+            .executables
+            .get(&("grad_step".to_string(), m))
+            .ok_or_else(|| anyhow!("no grad_step variant for m={m}"))?;
+        let guard = self.params_device.borrow();
+        let pbufs = guard
+            .as_ref()
+            .ok_or_else(|| anyhow!("set_params not called"))?;
+        let tok = self.token_buffer(tokens, m)?;
+        let tgt = self.token_buffer(targets, m)?;
+        let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        let n_params = self.manifest.param_order.len();
+        if outs.len() != n_params + 2 {
+            return Err(anyhow!(
+                "grad_step returned {} outputs, expected {}",
+                outs.len(),
+                n_params + 2
+            ));
+        }
+        let token_count = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let loss_sum = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let grads = outs
+            .into_iter()
+            .map(|l| l.to_vec::<f32>())
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok(GradOut { grads, loss_sum, token_count })
+    }
+
+    /// Forward-only loss on a microbatch of size `m` (device params).
+    pub fn loss(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        m: usize,
+    ) -> Result<(f32, f32)> {
+        let exe = self
+            .executables
+            .get(&("loss".to_string(), m))
+            .ok_or_else(|| anyhow!("no loss variant for m={m}"))?;
+        let guard = self.params_device.borrow();
+        let pbufs = guard
+            .as_ref()
+            .ok_or_else(|| anyhow!("set_params not called"))?;
+        let tok = self.token_buffer(tokens, m)?;
+        let tgt = self.token_buffer(targets, m)?;
+        let mut args: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let loss_sum = outs[0].to_vec::<f32>()?[0];
+        let count = outs[1].to_vec::<f32>()?[0];
+        Ok((loss_sum, count))
+    }
+
+    /// Single transformer layer forward (the Fig.-5 profiling unit).
+    /// `x` is [m, seq, d] flattened; `layer_params` are the 12 unstacked
+    /// layer tensors.
+    pub fn layer_fwd(
+        &self,
+        x: &[f32],
+        layer_params: &[Vec<f32>],
+        layer_shapes: &[Vec<usize>],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(&("layer_fwd".to_string(), m))
+            .ok_or_else(|| anyhow!("no layer_fwd variant for m={m}"))?;
+        let seq = self.manifest.model.seq_len;
+        let d = self.manifest.model.d_model;
+        let mut bufs = vec![self
+            .client
+            .buffer_from_host_buffer(x, &[m, seq, d], None)?];
+        for (p, shape) in layer_params.iter().zip(layer_shapes) {
+            bufs.push(self.client.buffer_from_host_buffer(
+                p,
+                shape.as_slice(),
+                None,
+            )?);
+        }
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Initialize parameters (GPT-2-style) with the repo PRNG; matches
+    /// python's shapes, not its exact values (initialization is a
+    /// training detail, not part of the numeric-equivalence contract).
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        self.manifest
+            .param_order
+            .iter()
+            .zip(&self.manifest.param_shapes)
+            .map(|(name, shape)| {
+                let nelem: usize = shape.iter().product();
+                if name.contains("scale") {
+                    vec![1.0; nelem]
+                } else if name.contains("bias")
+                    || name == "b1"
+                    || name == "b2"
+                {
+                    vec![0.0; nelem]
+                } else {
+                    let mut v = vec![0f32; nelem];
+                    rng.fill_normal(&mut v, 0.02);
+                    v
+                }
+            })
+            .collect()
+    }
+}

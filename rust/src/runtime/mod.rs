@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT-compiled JAX computations (HLO text) and
+//! execute them from the coordinator's hot path. Python never runs at
+//! training time — `make artifacts` is the only python invocation.
+
+pub mod artifacts;
+pub mod engine;
+pub mod service;
+
+pub use artifacts::{Entry, Manifest, ModelInfo};
+pub use engine::{GradOut, XlaEngine};
+pub use service::{ExecHandle, ExecService};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if AOT artifacts are present (tests skip gracefully otherwise,
+/// with a loud marker in the output).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

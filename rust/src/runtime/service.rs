@@ -1,0 +1,163 @@
+//! Execution service: a dedicated thread owning the (non-`Send`) PJRT
+//! engine, fronted by cloneable channel-based handles so the trainer's
+//! worker threads can submit grad-step requests concurrently.
+//!
+//! This mirrors the paper's process topology at single-box scale: the
+//! leader and N workers coordinate over channels; the "GPU" work funnels
+//! through the PJRT device queue (the CPU client parallelizes internally
+//! across cores).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Manifest;
+use super::engine::{GradOut, XlaEngine};
+
+enum Request {
+    /// Upload parameters to device buffers (once per training step).
+    SetParams {
+        params: Arc<Vec<Vec<f32>>>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    GradStep {
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        m: usize,
+        reply: mpsc::Sender<Result<GradOut>>,
+    },
+    Loss {
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        m: usize,
+        reply: mpsc::Sender<Result<(f32, f32)>>,
+    },
+    Shutdown,
+}
+
+/// Owner side: spawns the engine thread; dropping shuts it down.
+pub struct ExecService {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+    manifest: Manifest,
+    platform: String,
+}
+
+/// Cloneable submit handle for worker threads.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ExecService {
+    /// Load artifacts from `dir`, compiling `kinds` (e.g. ["grad_step",
+    /// "loss"]).
+    pub fn start(dir: &Path, kinds: &[&str]) -> Result<ExecService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) =
+            mpsc::channel::<Result<(Manifest, String)>>();
+        let dir = dir.to_path_buf();
+        let kinds: Vec<String> = kinds.iter().map(|s| s.to_string()).collect();
+        let join = std::thread::Builder::new()
+            .name("xla-exec".into())
+            .spawn(move || {
+                let kind_refs: Vec<&str> =
+                    kinds.iter().map(String::as_str).collect();
+                let engine = match XlaEngine::load(&dir, &kind_refs) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok((
+                            e.manifest().clone(),
+                            e.platform(),
+                        )));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::SetParams { params, reply } => {
+                            let _ = reply.send(engine.set_params(&params));
+                        }
+                        Request::GradStep { tokens, targets, m, reply } => {
+                            let out = engine.grad_step(&tokens, &targets, m);
+                            let _ = reply.send(out);
+                        }
+                        Request::Loss { tokens, targets, m, reply } => {
+                            let out = engine.loss(&tokens, &targets, m);
+                            let _ = reply.send(out);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let (manifest, platform) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(ExecService { tx, join: Some(join), manifest, platform })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        ExecHandle { tx: self.tx.clone() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecHandle {
+    /// Upload parameters to the device (blocking; once per step).
+    pub fn set_params(&self, params: Arc<Vec<Vec<f32>>>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::SetParams { params, reply })
+            .map_err(|_| anyhow!("exec service gone"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+
+    /// Blocking gradient step on the device-resident parameters.
+    pub fn grad_step(
+        &self,
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        m: usize,
+    ) -> Result<GradOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::GradStep { tokens, targets, m, reply })
+            .map_err(|_| anyhow!("exec service gone"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+
+    pub fn loss(
+        &self,
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        m: usize,
+    ) -> Result<(f32, f32)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Loss { tokens, targets, m, reply })
+            .map_err(|_| anyhow!("exec service gone"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+}

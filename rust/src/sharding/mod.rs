@@ -1,0 +1,186 @@
+//! Uneven FSDP sharding (§2.1 Training State Partitioning, §3.3).
+//!
+//! Each FSDP unit (one transformer layer) holds `unit_params`
+//! parameters. Given per-GPU training-state ratios `r_i` (Σ r_i = 1),
+//! this module computes per-unit shard layouts, applying the paper's
+//! greedy skew-minimization: prefer sharding as many whole units evenly
+//! (1/N each) as possible and concentrate the imbalance into as few
+//! uneven units as possible — e.g. a 3:1 target over two GPUs becomes
+//! one unit sharded 1:1 and one sharded 1:0, paying the +15% uneven
+//! collective overhead on only one unit.
+
+pub mod plan;
+
+pub use plan::{ShardPlan, UnitShard};
+
+/// Per-GPU element ranges for one FSDP unit of `len` elements.
+/// `bounds[i]..bounds[i+1]` is GPU i's slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardLayout {
+    pub bounds: Vec<usize>,
+}
+
+impl ShardLayout {
+    /// Even 1/N split with remainder spread over the first ranks —
+    /// FSDP's default layout.
+    pub fn even(len: usize, n: usize) -> ShardLayout {
+        assert!(n > 0);
+        let base = len / n;
+        let rem = len % n;
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut acc = 0;
+        bounds.push(0);
+        for i in 0..n {
+            acc += base + usize::from(i < rem);
+            bounds.push(acc);
+        }
+        ShardLayout { bounds }
+    }
+
+    /// Split `len` elements by ratio vector (need not be normalized).
+    /// Largest-remainder rounding keeps Σ shards == len exactly.
+    pub fn by_ratios(len: usize, ratios: &[f64]) -> ShardLayout {
+        assert!(!ratios.is_empty());
+        let total: f64 = ratios.iter().sum();
+        assert!(total > 0.0, "ratios must not all be zero");
+        let ideal: Vec<f64> =
+            ratios.iter().map(|r| r / total * len as f64).collect();
+        let mut sizes: Vec<usize> =
+            ideal.iter().map(|x| x.floor() as usize).collect();
+        let mut deficit = len - sizes.iter().sum::<usize>();
+        // Assign leftover elements to the largest fractional parts.
+        let mut order: Vec<usize> = (0..ratios.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = ideal[a] - ideal[a].floor();
+            let fb = ideal[b] - ideal[b].floor();
+            fb.partial_cmp(&fa).unwrap()
+        });
+        for &i in order.iter() {
+            if deficit == 0 {
+                break;
+            }
+            sizes[i] += 1;
+            deficit -= 1;
+        }
+        let mut bounds = vec![0usize];
+        let mut acc = 0;
+        for s in sizes {
+            acc += s;
+            bounds.push(acc);
+        }
+        ShardLayout { bounds }
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn range(&self, rank: usize) -> std::ops::Range<usize> {
+        self.bounds[rank]..self.bounds[rank + 1]
+    }
+
+    pub fn size(&self, rank: usize) -> usize {
+        self.bounds[rank + 1] - self.bounds[rank]
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        (0..self.num_ranks()).map(|r| self.size(r)).collect()
+    }
+
+    /// Is this the even FSDP layout (max size diff <= 1)?
+    pub fn is_even(&self) -> bool {
+        let sizes = self.sizes();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        max - min <= 1
+    }
+
+    /// Largest shard / total (Fig. 12 skew metric).
+    pub fn skew(&self) -> f64 {
+        if self.len() == 0 {
+            return 0.0;
+        }
+        *self.sizes().iter().max().unwrap() as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    #[test]
+    fn even_layout_covers_everything() {
+        let l = ShardLayout::even(10, 3);
+        assert_eq!(l.sizes(), vec![4, 3, 3]);
+        assert_eq!(l.len(), 10);
+        assert!(l.is_even());
+        assert_eq!(l.range(0), 0..4);
+        assert_eq!(l.range(2), 7..10);
+    }
+
+    #[test]
+    fn ratio_layout_matches_targets() {
+        let l = ShardLayout::by_ratios(100, &[0.5, 0.25, 0.25]);
+        assert_eq!(l.sizes(), vec![50, 25, 25]);
+        let l2 = ShardLayout::by_ratios(4, &[3.0, 1.0]);
+        assert_eq!(l2.sizes(), vec![3, 1]);
+        assert!(!l2.is_even());
+    }
+
+    #[test]
+    fn zero_ratio_means_zero_shard() {
+        let l = ShardLayout::by_ratios(10, &[1.0, 0.0]);
+        assert_eq!(l.sizes(), vec![10, 0]);
+        assert!((l.skew() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_ratio_layout_is_exact_partition() {
+        check("shard-partition-exact", 200, |g| {
+            let n = g.usize_in(1, 12);
+            let len = g.usize_in(0, 10_000);
+            let ratios = g.ratios(n);
+            let l = ShardLayout::by_ratios(len, &ratios);
+            assert_eq!(l.len(), len);
+            assert_eq!(l.num_ranks(), n);
+            // Ranges are contiguous and disjoint by construction; check
+            // monotone bounds.
+            for w in l.bounds.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rounding_error_bounded() {
+        check("shard-rounding-error", 200, |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(n * 10, 100_000);
+            let ratios = g.ratios(n);
+            let l = ShardLayout::by_ratios(len, &ratios);
+            for (i, r) in ratios.iter().enumerate() {
+                let ideal = r * len as f64;
+                let got = l.size(i) as f64;
+                assert!(
+                    (got - ideal).abs() <= 1.0,
+                    "rank {i}: ideal {ideal}, got {got}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn skew_of_even_is_one_over_n() {
+        let l = ShardLayout::even(100, 4);
+        assert!((l.skew() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,227 @@
+//! Evaluate a full Cephalo `Assignment` on the event simulator — the
+//! "actual" side of Fig. 10 (the optimizer's Eqs. 2/3 prediction is the
+//! other side) and the engine behind every throughput table.
+
+use super::fsdp::{peak_compute_memory, simulate_iteration, FsdpWorkload,
+                  GaVariant};
+use crate::memory::state_bytes;
+use crate::model::TransformerSpec;
+use crate::optimizer::Assignment;
+use crate::perfmodel::{CollectiveModel, ComputeOracle};
+use crate::sharding::ShardPlan;
+
+/// PCIe host-link bandwidth for activation offload (bytes/s).
+pub const PCIE_BYTES_PER_SEC: f64 = 16e9;
+
+/// Result of simulating one full iteration of an assignment.
+#[derive(Debug)]
+pub struct IterStats {
+    /// End-to-end iteration latency (seconds).
+    pub latency: f64,
+    /// Throughput in samples/s.
+    pub throughput: f64,
+    /// Per-GPU total memory (state + compute peak), bytes.
+    pub per_gpu_mem: Vec<f64>,
+    /// AllGather count for the iteration.
+    pub ag_count: usize,
+}
+
+/// Simulate one training iteration of `asg` with ground-truth latencies
+/// from `oracle`, under the full Cephalo execution variant
+/// (LGA + CO + S + O) unless overridden.
+pub fn simulate_assignment(
+    model: &TransformerSpec,
+    oracle: &dyn ComputeOracle,
+    collective: &CollectiveModel,
+    asg: &Assignment,
+    variant: GaVariant,
+) -> IterStats {
+    let n = asg.per_gpu.len();
+    assert_eq!(n, oracle.num_gpus());
+
+    // Shard plan from the state ratios decides which units pay the
+    // uneven collective overhead.
+    let ratios: Vec<f64> = asg.per_gpu.iter().map(|g| g.state_ratio).collect();
+    let plan = ShardPlan::plan(model.layers, model.params_per_layer(),
+                               &ratios);
+    let unit_bytes = model.params_per_layer() as f64 * 4.0;
+    let ag_unit: Vec<f64> = plan
+        .units
+        .iter()
+        .map(|u| {
+            if u.uneven {
+                collective.allgather_uneven(unit_bytes)
+            } else {
+                collective.allgather(unit_bytes)
+            }
+        })
+        .collect();
+    let rs_unit: Vec<f64> = plan
+        .units
+        .iter()
+        .map(|u| {
+            if u.uneven {
+                collective.reduce_scatter_uneven(unit_bytes)
+            } else {
+                collective.reduce_scatter(unit_bytes)
+            }
+        })
+        .collect();
+
+    // Idle GPUs (m=0) still join collectives; give them zero compute.
+    let micro: Vec<(usize, usize)> = asg
+        .per_gpu
+        .iter()
+        .map(|g| (g.microbatch.max(1), g.num_micro.max(1)))
+        .collect();
+    let fwd: Vec<f64> = asg
+        .per_gpu
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            if g.microbatch > 0 {
+                oracle.fwd_latency(i, g.microbatch)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let bwd: Vec<f64> = asg
+        .per_gpu
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            if g.microbatch > 0 {
+                oracle.bwd_latency(i, g.microbatch)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let offload: Vec<f64> = asg
+        .per_gpu
+        .iter()
+        .map(|g| {
+            model.boundary_activation_bytes() * g.microbatch as f64
+                / PCIE_BYTES_PER_SEC
+        })
+        .collect();
+
+    let w = FsdpWorkload {
+        units: model.layers,
+        micro,
+        fwd_micro: fwd,
+        bwd_micro: bwd,
+        ag_unit,
+        rs_unit,
+        offload_micro: offload,
+    };
+    let sim = simulate_iteration(&w, variant);
+
+    let total_state = state_bytes(model.total_params() as f64);
+    let per_gpu_mem: Vec<f64> = asg
+        .per_gpu
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let base = if g.microbatch > 0 {
+                oracle.compute_mem(i, g.microbatch)
+            } else {
+                0.0
+            };
+            let compute = peak_compute_memory(
+                g.microbatch.max(1),
+                g.num_micro.max(1),
+                base,
+                model.boundary_activation_bytes(),
+                model.layers,
+                variant,
+            );
+            g.state_ratio * total_state + compute
+        })
+        .collect();
+
+    IterStats {
+        latency: sim.latency,
+        throughput: asg.global_batch() as f64 / sim.latency,
+        per_gpu_mem,
+        ag_count: sim.ag_count,
+    }
+}
+
+/// Model FLOPs throughput (TFLOP/s) of an iteration — Fig. 6's metric.
+pub fn tflops(model: &TransformerSpec, batch: usize, latency: f64) -> f64 {
+    model.iter_flops(batch, true) / latency / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::model::find_model;
+    use crate::optimizer::DpOptimizer;
+    use crate::perfmodel::{CollectiveModel, Profiler, SyntheticOracle};
+
+    fn setup() -> (TransformerSpec, SyntheticOracle, CollectiveModel,
+                   Assignment) {
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &model, 42);
+        let profile = Profiler::default().profile(&cluster, &model, &oracle);
+        let (asg, _) = DpOptimizer::default().solve(&profile, 128).unwrap();
+        let coll = CollectiveModel::from_cluster(&cluster);
+        (model, oracle, coll, asg)
+    }
+
+    #[test]
+    fn simulated_latency_close_to_prediction() {
+        // Fig. 10: the performance model tracks the simulator within
+        // ~10%.
+        let (model, oracle, coll, asg) = setup();
+        let stats = simulate_assignment(&model, &oracle, &coll, &asg,
+                                        GaVariant::LGA_CO_S_O);
+        let rel = (stats.latency - asg.iter_latency).abs()
+            / stats.latency;
+        assert!(
+            rel < 0.15,
+            "sim {} vs model {} (rel {rel})",
+            stats.latency,
+            asg.iter_latency
+        );
+    }
+
+    #[test]
+    fn throughput_positive_and_consistent() {
+        let (model, oracle, coll, asg) = setup();
+        let stats = simulate_assignment(&model, &oracle, &coll, &asg,
+                                        GaVariant::LGA_CO_S_O);
+        assert!(stats.throughput > 0.0);
+        assert!((stats.throughput - 128.0 / stats.latency).abs() < 1e-9);
+        assert_eq!(stats.per_gpu_mem.len(), 8);
+        let _ = tflops(&model, 128, stats.latency);
+    }
+
+    #[test]
+    fn memory_respects_capacity() {
+        let (model, oracle, coll, asg) = setup();
+        let stats = simulate_assignment(&model, &oracle, &coll, &asg,
+                                        GaVariant::LGA_CO_S_O);
+        let cluster = Cluster::cluster_a();
+        for (mem, slot) in stats.per_gpu_mem.iter().zip(cluster.gpus()) {
+            assert!(
+                *mem <= slot.spec.mem_bytes(),
+                "{}: {mem} > {}",
+                slot.spec.name,
+                slot.spec.mem_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn ag_count_is_two_per_unit() {
+        let (model, oracle, coll, asg) = setup();
+        let stats = simulate_assignment(&model, &oracle, &coll, &asg,
+                                        GaVariant::LGA_CO_S_O);
+        assert_eq!(stats.ag_count, 2 * model.layers);
+    }
+}

@@ -1,0 +1,223 @@
+//! Event-driven multi-stream execution engine.
+//!
+//! Models the paper's execution substrate: every device owns a
+//! *compute* stream, an *offload* (PCIe copy) stream, and the cluster
+//! owns a shared *communication* channel on which NCCL collectives for
+//! the data-parallel group serialize (Fig. 4's two rows, plus the
+//! offload row of Fig. 11).
+//!
+//! Ops declare a stream, a duration and dependencies on earlier ops.
+//! Within a stream, ops run in issue (program) order — exactly CUDA
+//! stream semantics. An op starts at
+//! `max(stream predecessor finish, max(dep finishes))`.
+
+use std::collections::HashMap;
+
+pub type OpId = usize;
+
+/// Stream identity: per-device compute/offload, or the global comm
+/// channel shared by the DP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    Compute(usize),
+    Offload(usize),
+    /// Cluster-wide NCCL channel for DP-group collectives.
+    Comm,
+    /// Point-to-point link channel (pipeline parallel), keyed by
+    /// (src_device, dst_device).
+    Link(usize, usize),
+}
+
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub stream: Stream,
+    pub duration: f64,
+    pub deps: Vec<OpId>,
+    pub label: &'static str,
+}
+
+/// Completed timeline.
+#[derive(Debug)]
+pub struct Timeline {
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    labels: Vec<&'static str>,
+    streams: Vec<Stream>,
+}
+
+impl Timeline {
+    pub fn makespan(&self) -> f64 {
+        self.finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total busy time on a stream (for utilization reports).
+    pub fn busy_time(&self, stream: Stream) -> f64 {
+        self.streams
+            .iter()
+            .zip(self.start.iter().zip(&self.finish))
+            .filter(|(s, _)| **s == stream)
+            .map(|(_, (s, f))| f - s)
+            .sum()
+    }
+
+    /// Count ops with a given label (e.g. "AG") — used to assert the
+    /// LGA-reduces-AllGathers invariant.
+    pub fn count_label(&self, label: &str) -> usize {
+        self.labels.iter().filter(|l| **l == label).count()
+    }
+
+    pub fn finish_of(&self, id: OpId) -> f64 {
+        self.finish[id]
+    }
+}
+
+/// Builder + single-pass scheduler.
+#[derive(Debug, Default)]
+pub struct Engine {
+    ops: Vec<Op>,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an op; `deps` must reference previously added ops.
+    pub fn add(&mut self, stream: Stream, duration: f64, deps: &[OpId],
+               label: &'static str) -> OpId {
+        let id = self.ops.len();
+        for &d in deps {
+            assert!(d < id, "dependency {d} added after op {id}");
+        }
+        assert!(duration >= 0.0, "negative duration on '{label}'");
+        self.ops.push(Op {
+            stream,
+            duration,
+            deps: deps.to_vec(),
+            label,
+        });
+        id
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Run the schedule: ops execute in issue order per stream, gated by
+    /// dependency completion. Single forward pass suffices because deps
+    /// point backwards.
+    pub fn run(&self) -> Timeline {
+        let n = self.ops.len();
+        let mut start = vec![0f64; n];
+        let mut finish = vec![0f64; n];
+        let mut stream_tail: HashMap<Stream, f64> = HashMap::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            let dep_ready = op
+                .deps
+                .iter()
+                .map(|&d| finish[d])
+                .fold(0.0, f64::max);
+            let stream_ready =
+                stream_tail.get(&op.stream).copied().unwrap_or(0.0);
+            start[i] = dep_ready.max(stream_ready);
+            finish[i] = start[i] + op.duration;
+            stream_tail.insert(op.stream, finish[i]);
+        }
+        Timeline {
+            start,
+            finish,
+            labels: self.ops.iter().map(|o| o.label).collect(),
+            streams: self.ops.iter().map(|o| o.stream).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_ops_on_one_stream() {
+        let mut e = Engine::new();
+        let a = e.add(Stream::Compute(0), 1.0, &[], "a");
+        let b = e.add(Stream::Compute(0), 2.0, &[], "b");
+        let t = e.run();
+        assert_eq!(t.finish_of(a), 1.0);
+        assert_eq!(t.start[b], 1.0);
+        assert_eq!(t.makespan(), 3.0);
+    }
+
+    #[test]
+    fn parallel_streams_overlap() {
+        let mut e = Engine::new();
+        e.add(Stream::Compute(0), 3.0, &[], "c0");
+        e.add(Stream::Compute(1), 2.0, &[], "c1");
+        e.add(Stream::Comm, 2.5, &[], "ag");
+        let t = e.run();
+        assert_eq!(t.makespan(), 3.0);
+    }
+
+    #[test]
+    fn dependencies_gate_start() {
+        let mut e = Engine::new();
+        let ag = e.add(Stream::Comm, 1.0, &[], "ag");
+        let c = e.add(Stream::Compute(0), 2.0, &[ag], "fwd");
+        let rs = e.add(Stream::Comm, 1.0, &[c], "rs");
+        let t = e.run();
+        assert_eq!(t.start[c], 1.0);
+        assert_eq!(t.start[rs], 3.0);
+        assert_eq!(t.makespan(), 4.0);
+    }
+
+    #[test]
+    fn stream_order_even_without_deps() {
+        // Comm ops serialize even if independent (NCCL channel).
+        let mut e = Engine::new();
+        let a = e.add(Stream::Comm, 1.0, &[], "ag1");
+        let b = e.add(Stream::Comm, 1.0, &[], "ag2");
+        let t = e.run();
+        assert_eq!(t.start[b], t.finish[a]);
+    }
+
+    #[test]
+    fn diamond_dependency() {
+        let mut e = Engine::new();
+        let root = e.add(Stream::Compute(0), 1.0, &[], "r");
+        let left = e.add(Stream::Compute(1), 5.0, &[root], "l");
+        let right = e.add(Stream::Compute(2), 2.0, &[root], "rg");
+        let join = e.add(Stream::Compute(0), 1.0, &[left, right], "j");
+        let t = e.run();
+        assert_eq!(t.start[join], 6.0);
+        assert_eq!(t.makespan(), 7.0);
+    }
+
+    #[test]
+    fn busy_time_and_label_count() {
+        let mut e = Engine::new();
+        e.add(Stream::Comm, 1.0, &[], "AG");
+        e.add(Stream::Comm, 2.0, &[], "AG");
+        e.add(Stream::Compute(0), 4.0, &[], "fwd");
+        let t = e.run();
+        assert_eq!(t.busy_time(Stream::Comm), 3.0);
+        assert_eq!(t.count_label("AG"), 2);
+        assert_eq!(t.count_label("fwd"), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_dependency_rejected() {
+        let mut e = Engine::new();
+        e.add(Stream::Compute(0), 1.0, &[5], "bad");
+    }
+
+    #[test]
+    fn link_streams_are_independent_channels() {
+        let mut e = Engine::new();
+        let a = e.add(Stream::Link(0, 1), 2.0, &[], "p2p01");
+        let b = e.add(Stream::Link(1, 2), 2.0, &[], "p2p12");
+        let c = e.add(Stream::Link(0, 1), 2.0, &[], "p2p01b");
+        let t = e.run();
+        assert_eq!(t.start[b], 0.0); // different link: parallel
+        assert_eq!(t.start[c], t.finish[a]); // same link: serial
+    }
+}

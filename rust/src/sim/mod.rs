@@ -1,0 +1,18 @@
+//! Event-driven execution simulation.
+//!
+//! * `engine` — generic multi-stream op-graph scheduler (CUDA-stream
+//!   semantics: per-stream FIFO + cross-stream dependencies).
+//! * `fsdp` — FSDP / gradient-accumulation schedules, including the
+//!   Fig.-8 optimization ladder (FSDP-GA, LGA, +CO, +S, +O).
+//! * `pipeline` — GPipe-style pipeline schedules for the baselines.
+//! * `cephalo` — glue that evaluates a full Cephalo `Assignment`
+//!   against a ground-truth oracle (the "actual" side of Fig. 10).
+
+pub mod cephalo;
+pub mod engine;
+pub mod fsdp;
+pub mod pipeline;
+
+pub use engine::{Engine, Op, OpId, Stream, Timeline};
+pub use fsdp::{simulate_iteration, FsdpWorkload, GaVariant, SimResult};
+pub use pipeline::{simulate_pipeline, PipelineWorkload, StageSpec};

@@ -1,0 +1,167 @@
+//! Pipeline-parallel schedule simulation (GPipe-style) for the
+//! Megatron-Het and FlashFlex baselines.
+//!
+//! Stages process microbatches in order; activations travel between
+//! consecutive stages over point-to-point links. The schedule is the
+//! classic all-forward-then-all-backward GPipe wave; stage times already
+//! fold in any tensor parallelism inside the stage (computed by the
+//! baseline planners).
+
+use super::engine::{Engine, OpId, Stream};
+
+/// One pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Simulator device id (unique per stage per pipeline).
+    pub device: usize,
+    /// Forward latency of one microbatch through this stage.
+    pub fwd_micro: f64,
+    /// Backward latency of one microbatch.
+    pub bwd_micro: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineWorkload {
+    pub stages: Vec<StageSpec>,
+    pub microbatches: usize,
+    /// Activation/gradient transfer time between adjacent stages per
+    /// microbatch.
+    pub p2p_time: f64,
+}
+
+/// Simulated latency of one pipeline iteration (fwd+bwd all
+/// microbatches). Returns (latency, bubble_fraction).
+pub fn simulate_pipeline(w: &PipelineWorkload) -> (f64, f64) {
+    assert!(!w.stages.is_empty() && w.microbatches > 0);
+    let s = w.stages.len();
+    let l = w.microbatches;
+    let mut e = Engine::new();
+
+    // Forward wave.
+    let mut fwd: Vec<Vec<OpId>> = vec![Vec::with_capacity(l); s];
+    for j in 0..l {
+        for (si, stage) in w.stages.iter().enumerate() {
+            let mut deps: Vec<OpId> = Vec::new();
+            if si > 0 {
+                // activation hop from previous stage
+                let link = e.add(
+                    Stream::Link(w.stages[si - 1].device, stage.device),
+                    w.p2p_time,
+                    &[fwd[si - 1][j]],
+                    "p2p",
+                );
+                deps.push(link);
+            }
+            let op =
+                e.add(Stream::Compute(stage.device), stage.fwd_micro, &deps,
+                      "F");
+            fwd[si].push(op);
+        }
+    }
+    // Backward wave (reverse stage order).
+    let mut bwd: Vec<Vec<Option<OpId>>> = vec![vec![None; l]; s];
+    for j in 0..l {
+        for si in (0..s).rev() {
+            let stage = &w.stages[si];
+            let mut deps: Vec<OpId> = vec![fwd[si][j]];
+            if si + 1 < s {
+                let link = e.add(
+                    Stream::Link(w.stages[si + 1].device, stage.device),
+                    w.p2p_time,
+                    &[bwd[si + 1][j].unwrap()],
+                    "p2pg",
+                );
+                deps.push(link);
+            }
+            let op =
+                e.add(Stream::Compute(stage.device), stage.bwd_micro, &deps,
+                      "B");
+            bwd[si][j] = Some(op);
+        }
+    }
+    let t = e.run();
+    let latency = t.makespan();
+
+    // Bubble fraction: idle time on the busiest stage.
+    let busiest: f64 = w
+        .stages
+        .iter()
+        .map(|st| (st.fwd_micro + st.bwd_micro) * l as f64)
+        .fold(0.0, f64::max);
+    let bubble = 1.0 - busiest / latency;
+    (latency, bubble.max(0.0))
+}
+
+/// Analytic GPipe bound for cross-checking the simulator:
+/// (l + s - 1) * per-stage time when stages are balanced.
+pub fn gpipe_bound(stage_fwd: f64, stage_bwd: f64, stages: usize, l: usize)
+    -> f64 {
+    (l + stages - 1) as f64 * (stage_fwd + stage_bwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn balanced(stages: usize, l: usize) -> PipelineWorkload {
+        PipelineWorkload {
+            stages: (0..stages)
+                .map(|i| StageSpec {
+                    device: i,
+                    fwd_micro: 0.010,
+                    bwd_micro: 0.020,
+                })
+                .collect(),
+            microbatches: l,
+            p2p_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_stage_is_serial_compute() {
+        let w = balanced(1, 4);
+        let (lat, bubble) = simulate_pipeline(&w);
+        assert!((lat - 4.0 * 0.030).abs() < 1e-9);
+        assert!(bubble < 1e-9);
+    }
+
+    #[test]
+    fn balanced_pipeline_close_to_gpipe_bound() {
+        let w = balanced(4, 8);
+        let (lat, _) = simulate_pipeline(&w);
+        let bound = gpipe_bound(0.010, 0.020, 4, 8);
+        // GPipe-style waves: within ~20% of the analytic bound.
+        assert!(lat <= bound * 1.2, "lat {lat} vs bound {bound}");
+        assert!(lat >= 8.0 * 0.030); // can't beat serial best stage
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_microbatches() {
+        let (_, bubble_small) = simulate_pipeline(&balanced(4, 2));
+        let (_, bubble_large) = simulate_pipeline(&balanced(4, 32));
+        assert!(bubble_large < bubble_small);
+        assert!(bubble_large < 0.2);
+    }
+
+    #[test]
+    fn slowest_stage_dominates() {
+        // Stage 1 is 3x slower: latency ~ l * slow_stage for large l.
+        let mut w = balanced(3, 16);
+        w.stages[1].fwd_micro = 0.030;
+        w.stages[1].bwd_micro = 0.060;
+        let (lat, _) = simulate_pipeline(&w);
+        let slow_serial = 16.0 * 0.090;
+        assert!(lat >= slow_serial);
+        assert!(lat < slow_serial * 1.4);
+    }
+
+    #[test]
+    fn p2p_adds_latency() {
+        let w0 = balanced(4, 4);
+        let mut w1 = balanced(4, 4);
+        w1.p2p_time = 0.005;
+        let (l0, _) = simulate_pipeline(&w0);
+        let (l1, _) = simulate_pipeline(&w1);
+        assert!(l1 > l0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Mini property-testing framework (proptest substitute).
+//!
+//! The offline dependency closure has no `proptest`, so Cephalo carries a
+//! small deterministic property-test harness with the same methodology:
+//! run a property over many PRNG-generated cases; on failure, retry with
+//! progressively "smaller" regenerated cases (shrinking-lite) and report
+//! the smallest failing seed so the case is reproducible.
+//!
+//! ```ignore
+//! // (`ignore`: doctest binaries do not inherit the xla rpath flags,
+//! // so they cannot load libxla_extension.so; the same example runs
+//! // as a unit test below.)
+//! use cephalo::testkit::{check, Gen};
+//! check("sum is commutative", 256, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Per-case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]: shrink attempts re-run with smaller sizes.
+    pub size: f64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Rng::new(seed), size, case_seed: seed }
+    }
+
+    /// usize in [lo, hi], biased smaller when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).ceil() as usize;
+        let hi_eff = lo + scaled.min(span);
+        if hi_eff == lo {
+            lo
+        } else {
+            self.rng.range(lo, hi_eff + 1)
+        }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64() * self.size.max(0.05)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// A vector of f32 in [-scale, scale].
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| (self.rng.f32() * 2.0 - 1.0) * scale)
+            .collect()
+    }
+
+    /// A normalized ratio vector of length n (sums to 1, entries >= 0).
+    pub fn ratios(&mut self, n: usize) -> Vec<f64> {
+        let mut xs: Vec<f64> = (0..n).map(|_| self.rng.f64() + 1e-3).collect();
+        let total: f64 = xs.iter().sum();
+        for x in xs.iter_mut() {
+            *x /= total;
+        }
+        xs
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (failing the enclosing
+/// test) with the reproducing seed on the first failure, after attempting
+/// smaller-size reproductions.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            // Shrinking-lite: try the same seed at smaller sizes and
+            // report the smallest size that still fails.
+            let mut min_failing_size = 1.0;
+            for &size in &[0.05, 0.1, 0.25, 0.5, 0.75] {
+                let failed = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                })
+                .is_err();
+                if failed {
+                    min_failing_size = size;
+                    break;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (seed={seed:#x}, min_failing_size={min_failing_size}): {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a hash for stable name->seed derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add-commutes", 64, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 8, |_g| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn ratios_sum_to_one() {
+        check("ratios-normalized", 64, |g| {
+            let n = g.usize_in(1, 16);
+            let r = g.ratios(n);
+            assert_eq!(r.len(), n);
+            let s: f64 = r.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(r.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        check("usize-bounds", 128, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // Same property name => same sequence of generated values.
+        let mut first = Vec::new();
+        check("determinism-probe", 4, |g| {
+            // record through a thread local to avoid capture issues
+            FIRST.with(|f| f.borrow_mut().push(g.usize_in(0, 1_000_000)));
+        });
+        FIRST.with(|f| first.extend(f.borrow().iter().copied()));
+        FIRST.with(|f| f.borrow_mut().clear());
+        let mut second = Vec::new();
+        check("determinism-probe", 4, |g| {
+            FIRST.with(|f| f.borrow_mut().push(g.usize_in(0, 1_000_000)));
+        });
+        FIRST.with(|f| second.extend(f.borrow().iter().copied()));
+        assert_eq!(first, second);
+    }
+
+    thread_local! {
+        static FIRST: std::cell::RefCell<Vec<usize>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+}

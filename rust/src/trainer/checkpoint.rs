@@ -1,0 +1,229 @@
+//! Training-state checkpointing: save/restore parameters, sharded Adam
+//! moments and step counters to a single binary file.
+//!
+//! Production trainers must survive restarts — and Cephalo's own
+//! motivation (Fig. 1: cloud GPUs appear and vanish hourly) makes
+//! suspend/resume + re-planning a first-class workflow (see
+//! `coordinator::elastic`). Format: a small hand-rolled container
+//! (magic, version, metadata, length-prefixed f32 sections) since serde
+//! is not in the offline dependency closure.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+const MAGIC: &[u8; 8] = b"CEPHCKPT";
+const VERSION: u32 = 1;
+
+/// A complete training-state snapshot (leader view: full vectors).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Optimizer step count.
+    pub step: u64,
+    /// Parameter tensors in manifest order.
+    pub params: Vec<Vec<f32>>,
+    /// First-moment vector over the FLAT parameter space.
+    pub adam_m: Vec<f32>,
+    /// Second-moment vector over the flat space.
+    pub adam_v: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for p in &self.params {
+            write_f32s(&mut buf, p);
+        }
+        write_f32s(&mut buf, &self.adam_m);
+        write_f32s(&mut buf, &self.adam_v);
+        // Trailing checksum (FNV-1a over everything before it).
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(path, &buf)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut data)?;
+        if data.len() < MAGIC.len() + 4 + 8 + 4 + 8 {
+            return Err(anyhow!("checkpoint truncated"));
+        }
+        let (body, tail) = data.split_at(data.len() - 8);
+        let expect = u64::from_le_bytes(tail.try_into().unwrap());
+        if fnv1a(body) != expect {
+            return Err(anyhow!("checkpoint checksum mismatch"));
+        }
+        let mut r = Reader { b: body, i: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            return Err(anyhow!("not a cephalo checkpoint"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
+        }
+        let step = r.u64()?;
+        let n_tensors = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            params.push(r.f32s()?);
+        }
+        let adam_m = r.f32s()?;
+        let adam_v = r.f32s()?;
+        if r.i != body.len() {
+            return Err(anyhow!("trailing bytes in checkpoint"));
+        }
+        Ok(Checkpoint { step, params, adam_m, adam_v })
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+
+    /// Consistency: moment vectors must cover the flat space.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.param_count();
+        if self.adam_m.len() != n || self.adam_v.len() != n {
+            return Err(anyhow!(
+                "moment length {} / {} != param count {n}",
+                self.adam_m.len(),
+                self.adam_v.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn write_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    // Little-endian bulk write.
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(anyhow!("checkpoint truncated at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.5; 7]],
+            adam_m: vec![0.1; 10],
+            adam_v: vec![0.2; 10],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ceph_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("ceph_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.ckpt");
+        sample().save(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = std::env::temp_dir().join("ceph_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.ckpt");
+        sample().save(&path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = std::env::temp_dir().join("ceph_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("magic.ckpt");
+        // Valid checksum over an invalid body.
+        let mut buf = b"NOTCKPT!".to_vec();
+        buf.extend_from_slice(&[0u8; 16]);
+        let sum = super::fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("not a cephalo"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let mut ck = sample();
+        ck.adam_m.pop();
+        assert!(ck.validate().is_err());
+    }
+}

@@ -1,0 +1,488 @@
+//! Real numeric training engine (the paper's Trainer, §3.3).
+//!
+//! N worker threads stand in for the cluster's GPUs. Each worker owns a
+//! batch share `b_i` (compute division) and a training-state shard
+//! `r_i` (memory division) — the decoupling that *is* Cephalo. Per step:
+//!
+//! 1. the leader samples a global batch and splits it `b_i`-wise;
+//! 2. every worker runs its microbatches through the AOT-compiled JAX
+//!    grad step (PJRT), accumulating SUM-loss gradients — numerically
+//!    identical to layered gradient accumulation (addition commutes);
+//! 3. gradients are combined with a real uneven ReduceScatter
+//!    (`collectives::ring_reduce_scatter` over the `r_i` shard layout)
+//!    and scaled once by 1/(global token count) — Eq. 1 exactly;
+//! 4. each worker applies sharded Adam to its own state shard;
+//! 5. an uneven AllGather rebuilds the full parameter vector.
+//!
+//! Python never runs here: the grad step is the HLO artifact produced at
+//! build time.
+
+pub mod adam;
+pub mod checkpoint;
+pub mod data;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+// Hot path uses the direct collectives (single-pass, no per-ring-step
+// copies); the segmented-ring implementations are property-tested
+// equivalent (collectives::tests) and exercised by the Fig.-12 bench.
+use crate::collectives::{direct_allgather, direct_reduce_scatter};
+use crate::optimizer::Assignment;
+use crate::runtime::{ExecService, Manifest};
+use crate::sharding::ShardLayout;
+use adam::{AdamConfig, AdamShard};
+use data::Corpus;
+
+/// One worker's static role.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Per-step batch share b_i (rows).
+    pub batch: usize,
+    /// Training-state ratio r_i.
+    pub state_ratio: f64,
+    /// Label for logs (GPU name in the simulated cluster).
+    pub name: String,
+}
+
+/// Training-loop configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub seed: u64,
+    pub adam: AdamConfig,
+    /// Markov-corpus branching factor (lower = easier).
+    pub corpus_branch: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 100,
+            seed: 42,
+            adam: AdamConfig::default(),
+            corpus_branch: 4,
+            log_every: 10,
+        }
+    }
+}
+
+/// Per-step outcome.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    pub mean_loss: f64,
+    pub tokens: f64,
+    pub wall_seconds: f64,
+}
+
+pub struct Trainer {
+    service: ExecService,
+    workers: Vec<WorkerSpec>,
+    cfg: TrainConfig,
+    /// Leader's full parameter copy, one flat vec per tensor.
+    params: Vec<Vec<f32>>,
+    /// Tensor sizes (manifest order) for flatten/unflatten.
+    sizes: Vec<usize>,
+    /// Shard layout over the flat parameter vector (by r_i).
+    layout: ShardLayout,
+    shards: Vec<AdamShard>,
+    corpus: Corpus,
+    pub history: Vec<StepStats>,
+}
+
+impl Trainer {
+    /// Build from explicit worker specs.
+    pub fn new(
+        artifacts_dir: &Path,
+        workers: Vec<WorkerSpec>,
+        cfg: TrainConfig,
+    ) -> Result<Trainer> {
+        if workers.is_empty() {
+            return Err(anyhow!("need at least one worker"));
+        }
+        let service = ExecService::start(artifacts_dir, &["grad_step",
+                                                          "loss"])?;
+        let manifest = service.manifest().clone();
+        let sizes = manifest.param_sizes();
+        let flat_len: usize = sizes.iter().sum();
+        let ratios: Vec<f64> =
+            workers.iter().map(|w| w.state_ratio.max(0.0)).collect();
+        let layout = ShardLayout::by_ratios(flat_len, &ratios);
+        let shards = (0..workers.len())
+            .map(|r| AdamShard::new(layout.size(r), cfg.adam))
+            .collect();
+        let corpus =
+            Corpus::new(manifest.model.vocab, cfg.corpus_branch, cfg.seed);
+        // Parameter init on the engine side (shared PRNG).
+        let params = {
+            // init through a temporary engine call path: the service owns
+            // the engine; replicate init here using manifest shapes.
+            init_params(&manifest, cfg.seed)
+        };
+        Ok(Trainer {
+            service,
+            workers,
+            cfg,
+            params,
+            sizes,
+            layout,
+            shards,
+            corpus,
+            history: Vec::new(),
+        })
+    }
+
+    /// Build worker specs from a Cephalo `Assignment` and cluster GPU
+    /// names.
+    pub fn workers_from_assignment(
+        asg: &Assignment,
+        names: &[String],
+    ) -> Vec<WorkerSpec> {
+        asg.per_gpu
+            .iter()
+            .enumerate()
+            .map(|(i, g)| WorkerSpec {
+                batch: g.batch(),
+                state_ratio: g.state_ratio,
+                name: names
+                    .get(i)
+                    .cloned()
+                    .unwrap_or_else(|| format!("gpu{i}")),
+            })
+            .collect()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.service.manifest()
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.workers.iter().map(|w| w.batch).sum()
+    }
+
+    pub fn corpus_entropy(&self) -> f64 {
+        self.corpus.entropy()
+    }
+
+    /// Run one training step; returns the global mean loss.
+    pub fn step(&mut self, step_idx: usize) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let manifest = self.service.manifest().clone();
+        let seq = manifest.model.seq_len;
+        let b = self.global_batch();
+        let (tokens, targets) = self.corpus.sample_batch(b, seq);
+        let sizes: Vec<usize> =
+            self.workers.iter().map(|w| w.batch).collect();
+        let parts = data::split_batch(&tokens, &targets, seq, &sizes);
+
+        // Upload the step's parameters to the device once; workers then
+        // run microbatches against the device-resident copy.
+        let snapshot = Arc::new(self.params.clone());
+        let handle = self.service.handle();
+        handle.set_params(Arc::clone(&snapshot))?;
+
+        // Workers: microbatch loops, local gradient accumulation.
+        let flat_len: usize = self.sizes.iter().sum();
+        let mut worker_grads: Vec<Vec<f32>> = Vec::new();
+        let mut loss_sum = 0f64;
+        let mut token_count = 0f64;
+        let results: Vec<Result<(Vec<f32>, f64, f64)>> =
+            std::thread::scope(|scope| {
+                let mut joins = Vec::new();
+                for (w, (wtokens, wtargets)) in
+                    self.workers.iter().zip(parts.into_iter())
+                {
+                    let handle = handle.clone();
+                    let manifest = manifest.clone();
+                    let sizes = self.sizes.clone();
+                    let batch = w.batch;
+                    joins.push(scope.spawn(move || {
+                        worker_grad_pass(
+                            &handle, &manifest, &sizes, &wtokens,
+                            &wtargets, batch, flat_len,
+                        )
+                    }));
+                }
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+        for r in results {
+            let (g, ls, cnt) = r?;
+            worker_grads.push(g);
+            loss_sum += ls;
+            token_count += cnt;
+        }
+
+        // Uneven ReduceScatter of gradients onto the state shards, then
+        // the Eq.-1 scale by 1/(global token count).
+        let mut grad_shards =
+            direct_reduce_scatter(&worker_grads, &self.layout);
+        let inv = 1.0 / token_count as f32;
+        for shard in grad_shards.iter_mut() {
+            for g in shard.iter_mut() {
+                *g *= inv;
+            }
+        }
+
+        // Sharded Adam in parallel, on a flattened parameter copy.
+        let mut flat = flatten(&self.params, flat_len);
+        {
+            let layout = &self.layout;
+            let mut param_slices: Vec<&mut [f32]> = Vec::new();
+            let mut rest: &mut [f32] = &mut flat;
+            let mut consumed = 0usize;
+            for r in 0..self.workers.len() {
+                let range = layout.range(r);
+                let (head, tail) = rest.split_at_mut(range.len());
+                debug_assert_eq!(range.start, consumed);
+                consumed += range.len();
+                param_slices.push(head);
+                rest = tail;
+            }
+            std::thread::scope(|scope| {
+                for ((shard, grads), pslice) in self
+                    .shards
+                    .iter_mut()
+                    .zip(&grad_shards)
+                    .zip(param_slices.into_iter())
+                {
+                    scope.spawn(move || shard.update(pslice, grads));
+                }
+            });
+        }
+
+        // AllGather rebuilds the full parameter vector on all ranks
+        // (leader keeps one canonical copy).
+        let shard_views: Vec<Vec<f32>> = (0..self.workers.len())
+            .map(|r| flat[self.layout.range(r)].to_vec())
+            .collect();
+        let gathered = direct_allgather(&shard_views, &self.layout);
+        self.params = unflatten(&gathered, &self.sizes);
+
+        let stats = StepStats {
+            step: step_idx,
+            mean_loss: loss_sum / token_count,
+            tokens: token_count,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Run the configured number of steps, logging every `log_every`.
+    pub fn run(&mut self) -> Result<Vec<StepStats>> {
+        for s in 0..self.cfg.steps {
+            let stats = self.step(s)?;
+            if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+                crate::info!(
+                    "step {:>5}  loss {:.4}  ({:.2}s, {} tokens)",
+                    s,
+                    stats.mean_loss,
+                    stats.wall_seconds,
+                    stats.tokens
+                );
+            }
+        }
+        Ok(self.history.clone())
+    }
+
+    /// Evaluate mean loss on fresh batches (no update).
+    pub fn eval_loss(&mut self, batches: usize) -> Result<f64> {
+        let manifest = self.service.manifest().clone();
+        let seq = manifest.model.seq_len;
+        let m = *manifest.microbatches.iter().max().unwrap();
+        let snapshot = Arc::new(self.params.clone());
+        let handle = self.service.handle();
+        handle.set_params(snapshot)?;
+        let mut total = 0f64;
+        let mut count = 0f64;
+        for _ in 0..batches {
+            let (tokens, targets) = self.corpus.sample_batch(m, seq);
+            let (ls, cnt) = handle.loss(tokens, targets, m)?;
+            total += ls as f64;
+            count += cnt as f64;
+        }
+        Ok(total / count)
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Per-worker training-state bytes (the 16 B/param split by r_i) —
+    /// for memory reports.
+    pub fn state_bytes_per_worker(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .map(|r| self.layout.size(r) * 16)
+            .collect()
+    }
+
+    /// Assemble a leader-view checkpoint (full params + gathered Adam
+    /// moments over the flat parameter space).
+    pub fn checkpoint(&self) -> checkpoint::Checkpoint {
+        let flat_len: usize = self.sizes.iter().sum();
+        let mut adam_m = vec![0f32; flat_len];
+        let mut adam_v = vec![0f32; flat_len];
+        let mut step = 0u64;
+        for (r, shard) in self.shards.iter().enumerate() {
+            let range = self.layout.range(r);
+            adam_m[range.clone()].copy_from_slice(&shard.m);
+            adam_v[range].copy_from_slice(&shard.v);
+            step = step.max(shard.step);
+        }
+        checkpoint::Checkpoint {
+            step,
+            params: self.params.clone(),
+            adam_m,
+            adam_v,
+        }
+    }
+
+    /// Restore params + optimizer state from a checkpoint. The shard
+    /// layout may differ from the one the checkpoint was written under —
+    /// exactly the elastic-replan resume path
+    /// (`coordinator::elastic`).
+    pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
+        ck.validate()?;
+        let sizes: Vec<usize> = ck.params.iter().map(Vec::len).collect();
+        if sizes != self.sizes {
+            return Err(anyhow!(
+                "checkpoint tensor sizes do not match the artifacts"
+            ));
+        }
+        self.params = ck.params.clone();
+        for (r, shard) in self.shards.iter_mut().enumerate() {
+            let range = self.layout.range(r);
+            shard.m.copy_from_slice(&ck.adam_m[range.clone()]);
+            shard.v.copy_from_slice(&ck.adam_v[range]);
+            shard.step = ck.step;
+        }
+        Ok(())
+    }
+}
+
+/// One worker's full pass: decompose the batch into available
+/// microbatch sizes, run grad steps, sum gradients into a flat vector.
+#[allow(clippy::too_many_arguments)]
+fn worker_grad_pass(
+    handle: &crate::runtime::ExecHandle,
+    manifest: &Manifest,
+    sizes: &[usize],
+    tokens: &[i32],
+    targets: &[i32],
+    batch: usize,
+    flat_len: usize,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let seq = manifest.model.seq_len;
+    let mut flat_grad = vec![0f32; flat_len];
+    let mut loss_sum = 0f64;
+    let mut token_count = 0f64;
+    let mut row = 0usize;
+    for m in manifest.decompose_batch(batch) {
+        let lo = row * seq;
+        let hi = (row + m) * seq;
+        let out = handle.grad_step(
+            tokens[lo..hi].to_vec(),
+            targets[lo..hi].to_vec(),
+            m,
+        )?;
+        // Accumulate (sum-loss gradients add exactly).
+        let mut off = 0usize;
+        for (g, &sz) in out.grads.iter().zip(sizes) {
+            debug_assert_eq!(g.len(), sz);
+            for (acc, v) in flat_grad[off..off + sz].iter_mut().zip(g) {
+                *acc += v;
+            }
+            off += sz;
+        }
+        loss_sum += out.loss_sum as f64;
+        token_count += out.token_count as f64;
+        row += m;
+    }
+    debug_assert_eq!(row, batch);
+    Ok((flat_grad, loss_sum, token_count))
+}
+
+/// Leader-side parameter init matching `XlaEngine::init_params`.
+pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    manifest
+        .param_order
+        .iter()
+        .zip(&manifest.param_shapes)
+        .map(|(name, shape)| {
+            let nelem: usize = shape.iter().product();
+            if name.contains("scale") {
+                vec![1.0; nelem]
+            } else if name.contains("bias") || name == "b1" || name == "b2"
+            {
+                vec![0.0; nelem]
+            } else {
+                let mut v = vec![0f32; nelem];
+                rng.fill_normal(&mut v, 0.02);
+                v
+            }
+        })
+        .collect()
+}
+
+fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(flat_len);
+    for t in tensors {
+        out.extend_from_slice(t);
+    }
+    out
+}
+
+fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0usize;
+    for &sz in sizes {
+        out.push(flat[off..off + sz].to_vec());
+        off += sz;
+    }
+    debug_assert_eq!(off, flat.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_roundtrip() {
+        let tensors = vec![vec![1.0f32, 2.0], vec![3.0], vec![4.0, 5.0, 6.0]];
+        let sizes = vec![2usize, 1, 3];
+        let flat = flatten(&tensors, 6);
+        assert_eq!(flat, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(unflatten(&flat, &sizes), tensors);
+    }
+
+    #[test]
+    fn init_params_shapes() {
+        let manifest = Manifest::parse(
+            Path::new("/tmp"),
+            r#"{
+                "model": {"vocab": 8, "d_model": 4, "n_layers": 1,
+                          "n_heads": 1, "seq_len": 4, "d_ff": 16,
+                          "use_pallas": true, "num_params": 100},
+                "param_order": ["embed", "ln1_scale", "b1"],
+                "param_shapes": {"embed": [8, 4], "ln1_scale": [1, 4],
+                                  "b1": [1, 16]},
+                "microbatches": [1],
+                "entries": []
+            }"#,
+        )
+        .unwrap();
+        let p = init_params(&manifest, 1);
+        assert_eq!(p[0].len(), 32);
+        assert!(p[1].iter().all(|&x| x == 1.0)); // scale -> ones
+        assert!(p[2].iter().all(|&x| x == 0.0)); // b1 -> zeros
+        assert!(p[0].iter().any(|&x| x != 0.0)); // embed -> random
+        // Deterministic.
+        assert_eq!(init_params(&manifest, 1)[0], p[0]);
+    }
+}

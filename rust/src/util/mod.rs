@@ -1,0 +1,49 @@
+//! Shared low-level utilities: PRNG, statistics, JSON, table formatting,
+//! and byte-size helpers. These substitute for the external crates
+//! (`rand`, `serde`, `prettytable`) that the offline build cannot use.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod tablefmt;
+
+/// Bytes in one GiB.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Bytes in one GB (decimal — GPU marketing units, Table 3).
+pub const GB: f64 = 1e9;
+
+/// Convert GiB to bytes.
+pub fn gib(x: f64) -> f64 {
+    x * GIB
+}
+
+/// Duration of an f64-second value as human text.
+pub fn human_secs(s: f64) -> String {
+    tablefmt::fmt_secs(s)
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(gib(1.0), GIB);
+        assert!(GB < GIB);
+    }
+}

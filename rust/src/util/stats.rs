@@ -1,0 +1,141 @@
+//! Small statistics helpers used by the profiler, benchkit and reports.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ordinary least squares fit y = slope * x + intercept.
+/// Returns (slope, intercept). Needs >= 2 points.
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64) {
+    assert!(points.len() >= 2, "linear_fit needs >= 2 points");
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Coefficient of determination for a fit.
+pub fn r_squared(points: &[(f64, f64)], slope: f64, intercept: f64) -> f64 {
+    let ym = mean(&points.iter().map(|p| p.1).collect::<Vec<_>>());
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - ym) * (p.1 - ym)).sum();
+    let ss_res: f64 = points
+        .iter()
+        .map(|p| {
+            let pred = slope * p.0 + intercept;
+            (p.1 - pred) * (p.1 - pred)
+        })
+        .sum();
+    if ss_tot < 1e-12 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Mean absolute relative error between predictions and actuals (Fig. 10).
+pub fn mean_abs_rel_error(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    assert!(!pred.is_empty());
+    mean(
+        &pred
+            .iter()
+            .zip(actual)
+            .map(|(p, a)| ((p - a) / a).abs())
+            .collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let pts = [(1.0, 3.0), (2.0, 5.0), (3.0, 7.0)];
+        let (slope, intercept) = linear_fit(&pts);
+        assert!((slope - 2.0).abs() < 1e-9);
+        assert!((intercept - 1.0).abs() < 1e-9);
+        assert!((r_squared(&pts, slope, intercept) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_noisy_recovers() {
+        let pts: Vec<(f64, f64)> = (1..50)
+            .map(|i| {
+                let x = i as f64;
+                (x, 3.5 * x + 10.0 + if i % 2 == 0 { 0.5 } else { -0.5 })
+            })
+            .collect();
+        let (slope, intercept) = linear_fit(&pts);
+        assert!((slope - 3.5).abs() < 0.01);
+        assert!((intercept - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn mare_basic() {
+        let pred = [1.1, 2.0];
+        let act = [1.0, 2.0];
+        assert!((mean_abs_rel_error(&pred, &act) - 0.05).abs() < 1e-9);
+    }
+}

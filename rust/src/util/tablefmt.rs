@@ -1,0 +1,161 @@
+//! Plain-text table rendering for the benchmark harness.
+//!
+//! Every `benches/table*.rs` / `benches/fig*.rs` binary prints its result
+//! in the same row/column layout the paper reports, via this formatter.
+
+/// A simple column-aligned table with a title and optional units row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Column widths: max of header and cell widths.
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let header: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>width$}", h, width = w[i]))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(header.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavored markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` decimals, or "OOM"/"-" markers.
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+/// Throughput cell: finite -> 2 decimals, NaN/inf -> "OOM".
+pub fn fmt_throughput(x: f64) -> String {
+    if x.is_finite() && x > 0.0 {
+        format!("{:.2}", x)
+    } else {
+        "OOM".to_string()
+    }
+}
+
+/// Human bytes (GiB with 1 decimal).
+pub fn fmt_gib(bytes: f64) -> String {
+    format!("{:.1} GiB", bytes / (1024.0 * 1024.0 * 1024.0))
+}
+
+/// Seconds with ms precision for latencies.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["sys", "x"]);
+        t.add_row(vec!["Cephalo".into(), "6.38".into()]);
+        t.add_row(vec!["FSDP".into(), "OOM".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("Cephalo"));
+        assert!(s.contains("OOM"));
+        // rows have equal rendered width
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_width() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("m", &["a", "b"]);
+        t.add_row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_throughput(6.381), "6.38");
+        assert_eq!(fmt_throughput(f64::NAN), "OOM");
+        assert_eq!(fmt_secs(0.0005), "500.0 us");
+        assert_eq!(fmt_secs(0.25), "250.00 ms");
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert!(fmt_gib(3.5 * 1024.0 * 1024.0 * 1024.0).starts_with("3.5"));
+    }
+}

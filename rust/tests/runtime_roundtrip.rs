@@ -1,0 +1,344 @@
+//! Integration tests over the REAL PJRT runtime: the AOT bridge
+//! (HLO text -> parse -> compile -> execute) and the numeric-equivalence
+//! invariants of DESIGN.md executed through actual compiled artifacts.
+//!
+//! Requires `make artifacts`; tests no-op with a loud marker otherwise
+//! (CI always builds artifacts first).
+
+use std::sync::Arc;
+
+use cephalo::runtime::{artifacts_available, default_artifacts_dir,
+                       ExecService};
+use cephalo::trainer::data::Corpus;
+use cephalo::trainer::{init_params, TrainConfig, Trainer, WorkerSpec};
+use cephalo::util::prng::Rng;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIPPED: no artifacts (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn service() -> ExecService {
+    ExecService::start(&default_artifacts_dir(), &["grad_step", "loss"])
+        .expect("start exec service")
+}
+
+fn sample(service: &ExecService, m: usize, seed: u64)
+    -> (Vec<i32>, Vec<i32>) {
+    let manifest = service.manifest();
+    let mut corpus = Corpus::new(manifest.model.vocab, 4, seed);
+    corpus.sample_batch(m, manifest.model.seq_len)
+}
+
+#[test]
+fn loss_at_init_is_near_uniform() {
+    if skip() {
+        return;
+    }
+    let svc = service();
+    let manifest = svc.manifest().clone();
+    let params = Arc::new(init_params(&manifest, 1));
+    let (tokens, targets) = sample(&svc, 2, 3);
+    let h = svc.handle();
+    h.set_params(params).unwrap();
+    let (loss_sum, count) = h.loss(tokens, targets, 2).expect("loss exec");
+    let mean = loss_sum / count;
+    let uniform = (manifest.model.vocab as f32).ln();
+    assert!(
+        (mean - uniform).abs() < 0.3,
+        "init loss {mean} should be ~ln(V) = {uniform}"
+    );
+}
+
+#[test]
+fn gradient_accumulation_equivalence_through_hlo() {
+    // DESIGN.md invariant 2, executed on the real artifacts: the sum of
+    // two m=1 grad steps equals one m=2 grad step on the same rows.
+    if skip() {
+        return;
+    }
+    let svc = service();
+    let manifest = svc.manifest().clone();
+    let seq = manifest.model.seq_len;
+    let params = Arc::new(init_params(&manifest, 1));
+    let (tokens, targets) = sample(&svc, 2, 7);
+    let h = svc.handle();
+    h.set_params(params).unwrap();
+
+    let full = h
+        .grad_step(tokens.clone(), targets.clone(), 2)
+        .unwrap();
+    let a = h
+        .grad_step(tokens[..seq].to_vec(), targets[..seq].to_vec(), 1)
+        .unwrap();
+    let b = h
+        .grad_step(tokens[seq..].to_vec(), targets[seq..].to_vec(), 1)
+        .unwrap();
+    assert!((full.loss_sum - a.loss_sum - b.loss_sum).abs()
+        / full.loss_sum.abs()
+        < 1e-4);
+    for ((gf, ga), gb) in full.grads.iter().zip(&a.grads).zip(&b.grads) {
+        for ((f, x), y) in gf.iter().zip(ga).zip(gb) {
+            let sum = x + y;
+            assert!(
+                (f - sum).abs() <= 1e-3 * f.abs().max(1e-2),
+                "grad mismatch: {f} vs {sum}"
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_step_deterministic() {
+    if skip() {
+        return;
+    }
+    let svc = service();
+    let manifest = svc.manifest().clone();
+    let params = Arc::new(init_params(&manifest, 2));
+    let (tokens, targets) = sample(&svc, 1, 9);
+    let h = svc.handle();
+    h.set_params(params).unwrap();
+    let g1 = h.grad_step(tokens.clone(), targets.clone(), 1).unwrap();
+    let g2 = h.grad_step(tokens, targets, 1).unwrap();
+    assert_eq!(g1.loss_sum, g2.loss_sum);
+    for (a, b) in g1.grads.iter().zip(&g2.grads) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn concurrent_grad_steps_from_many_threads() {
+    // Worker threads funnel through the exec service; results must be
+    // identical to sequential execution.
+    if skip() {
+        return;
+    }
+    let svc = service();
+    let manifest = svc.manifest().clone();
+    let params = Arc::new(init_params(&manifest, 3));
+    let (tokens, targets) = sample(&svc, 1, 11);
+    let h = svc.handle();
+    h.set_params(params).unwrap();
+    let expect = h.grad_step(tokens.clone(), targets.clone(), 1).unwrap();
+    let results: Vec<f32> = std::thread::scope(|s| {
+        (0..4)
+            .map(|_| {
+                let h = h.clone();
+                let tokens = tokens.clone();
+                let targets = targets.clone();
+                s.spawn(move || {
+                    h.grad_step(tokens, targets, 1).unwrap().loss_sum
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|j| j.join().unwrap())
+            .collect()
+    });
+    for r in results {
+        assert_eq!(r, expect.loss_sum);
+    }
+}
+
+#[test]
+fn uneven_split_training_matches_single_worker() {
+    // DESIGN.md invariant 1 at full-trainer scale: a step with an uneven
+    // (3,1) worker split + uneven (0.7, 0.3) state sharding produces the
+    // SAME updated parameters as a single worker doing all 4 rows.
+    if skip() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let cfg = TrainConfig {
+        steps: 1,
+        seed: 5,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut uneven = Trainer::new(
+        &dir,
+        vec![
+            WorkerSpec { batch: 3, state_ratio: 0.7, name: "fast".into() },
+            WorkerSpec { batch: 1, state_ratio: 0.3, name: "slow".into() },
+        ],
+        cfg.clone(),
+    )
+    .unwrap();
+    let mut single = Trainer::new(
+        &dir,
+        vec![WorkerSpec { batch: 4, state_ratio: 1.0, name: "solo".into() }],
+        cfg,
+    )
+    .unwrap();
+    let s1 = uneven.step(0).unwrap();
+    let s2 = single.step(0).unwrap();
+    assert!((s1.mean_loss - s2.mean_loss).abs() < 1e-5,
+            "losses diverge: {} vs {}", s1.mean_loss, s2.mean_loss);
+    // Gradients agree to fp32 reduction-order noise, but Adam's step-1
+    // update lr*g/(|g|+eps) is chaotic for near-zero gradients (a tiny
+    // sign flip moves a parameter by 2*lr). Compare statistically: the
+    // bulk of parameters must match tightly, outliers bounded by the
+    // 2*lr sign-flip envelope.
+    let lr = 3e-4f32; // TrainConfig::default() Adam lr
+    let mut n = 0usize;
+    let mut sum_abs = 0f64;
+    let mut max_abs = 0f32;
+    for (a, b) in uneven.params().iter().zip(single.params()) {
+        for (x, y) in a.iter().zip(b) {
+            let d = (x - y).abs();
+            sum_abs += d as f64;
+            max_abs = max_abs.max(d);
+            n += 1;
+        }
+    }
+    let mean_abs = (sum_abs / n as f64) as f32;
+    assert!(
+        mean_abs < 0.02 * lr,
+        "mean param divergence {mean_abs} vs lr {lr}"
+    );
+    assert!(
+        max_abs <= 2.5 * lr,
+        "param divergence {max_abs} beyond the sign-flip envelope"
+    );
+}
+
+#[test]
+fn short_training_run_descends() {
+    if skip() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let cfg = TrainConfig {
+        steps: 8,
+        seed: 6,
+        log_every: 0,
+        adam: cephalo::trainer::adam::AdamConfig {
+            lr: 2e-3,
+            ..Default::default()
+        },
+        corpus_branch: 4,
+    };
+    let workers = vec![
+        WorkerSpec { batch: 3, state_ratio: 0.5, name: "a".into() },
+        WorkerSpec { batch: 2, state_ratio: 0.3, name: "b".into() },
+        WorkerSpec { batch: 3, state_ratio: 0.2, name: "c".into() },
+    ];
+    let mut t = Trainer::new(&dir, workers, cfg).unwrap();
+    let hist = t.run().unwrap();
+    let first = hist.first().unwrap().mean_loss;
+    let last = hist.last().unwrap().mean_loss;
+    assert!(
+        last < first - 0.05,
+        "loss should descend: {first} -> {last}"
+    );
+    // State bytes split matches ratios.
+    let bytes = t.state_bytes_per_worker();
+    assert!(bytes[0] > bytes[1] && bytes[1] > bytes[2]);
+}
+
+#[test]
+fn decomposed_microbatches_match_direct() {
+    // batch=3 decomposes into [2, 1]; the summed gradients must equal a
+    // hypothetical single pass (checked via loss sums and grad
+    // accumulation already proven above — here we exercise the
+    // decomposition path end to end).
+    if skip() {
+        return;
+    }
+    let svc = service();
+    let manifest = svc.manifest().clone();
+    assert_eq!(manifest.decompose_batch(3), vec![2, 1]);
+    let params = Arc::new(init_params(&manifest, 8));
+    let (tokens, targets) = sample(&svc, 3, 13);
+    let seq = manifest.model.seq_len;
+    let h = svc.handle();
+    h.set_params(params).unwrap();
+    let g2 = h
+        .grad_step(tokens[..2 * seq].to_vec(), targets[..2 * seq].to_vec(),
+                   2)
+        .unwrap();
+    let g1 = h
+        .grad_step(tokens[2 * seq..].to_vec(), targets[2 * seq..].to_vec(),
+                   1)
+        .unwrap();
+    let mut rng = Rng::new(0);
+    // Spot-check a few hundred random gradient coordinates across the
+    // two shards against an m=1+m=1+m=1 decomposition.
+    let a = h
+        .grad_step(tokens[..seq].to_vec(), targets[..seq].to_vec(), 1)
+        .unwrap();
+    let b = h
+        .grad_step(tokens[seq..2 * seq].to_vec(),
+                   targets[seq..2 * seq].to_vec(), 1)
+        .unwrap();
+    for _ in 0..300 {
+        let ti = rng.range(0, g2.grads.len());
+        if g2.grads[ti].is_empty() {
+            continue;
+        }
+        let ei = rng.range(0, g2.grads[ti].len());
+        let lhs = g2.grads[ti][ei] + g1.grads[ti][ei];
+        let rhs = a.grads[ti][ei] + b.grads[ti][ei] + g1.grads[ti][ei];
+        assert!((lhs - rhs).abs() <= 1e-3 * lhs.abs().max(1e-2));
+    }
+}
+
+#[test]
+fn checkpoint_resume_across_different_sharding() {
+    // Save under a (0.7, 0.3) layout, resume under (0.25 x 4): training
+    // continues bit-identically to an uncheckpointed run (same data
+    // stream), proving state round-trips through the elastic path.
+    if skip() {
+        return;
+    }
+    let dir = default_artifacts_dir();
+    let cfg = TrainConfig { steps: 2, seed: 21, log_every: 0,
+                            ..Default::default() };
+    let mut a = Trainer::new(
+        &dir,
+        vec![
+            WorkerSpec { batch: 3, state_ratio: 0.7, name: "a".into() },
+            WorkerSpec { batch: 1, state_ratio: 0.3, name: "b".into() },
+        ],
+        cfg.clone(),
+    )
+    .unwrap();
+    a.step(0).unwrap();
+    let ck = a.checkpoint();
+    assert_eq!(ck.step, 1);
+    let tmp = std::env::temp_dir().join("ceph_resume.ckpt");
+    ck.save(&tmp).unwrap();
+    let loaded =
+        cephalo::trainer::checkpoint::Checkpoint::load(&tmp).unwrap();
+
+    // Continue on A (reference trajectory).
+    let sa = a.step(1).unwrap();
+
+    // Fresh trainer with a DIFFERENT shard layout; restore; same data
+    // stream state requires same corpus position -> replay step 0's
+    // batch by stepping once before restore.
+    let mut b = Trainer::new(
+        &dir,
+        vec![
+            WorkerSpec { batch: 1, state_ratio: 0.25, name: "w0".into() },
+            WorkerSpec { batch: 1, state_ratio: 0.25, name: "w1".into() },
+            WorkerSpec { batch: 1, state_ratio: 0.25, name: "w2".into() },
+            WorkerSpec { batch: 1, state_ratio: 0.25, name: "w3".into() },
+        ],
+        cfg,
+    )
+    .unwrap();
+    b.step(0).unwrap(); // advance the corpus to the same position
+    b.restore(&loaded).unwrap();
+    let sb = b.step(1).unwrap();
+    assert!(
+        (sa.mean_loss - sb.mean_loss).abs() < 1e-5,
+        "resumed trajectory diverged: {} vs {}",
+        sa.mean_loss,
+        sb.mean_loss
+    );
+}

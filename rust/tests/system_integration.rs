@@ -1,0 +1,196 @@
+//! Cross-module integration: full profile -> optimize -> simulate
+//! pipelines over every preset cluster and Table-2 model, baseline
+//! planner robustness, and end-to-end property checks that span
+//! optimizer + sharding + simulator.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::report::{throughput, SystemKind};
+use cephalo::coordinator::Workload;
+use cephalo::memory::usable_capacity;
+use cephalo::model::table2_models;
+use cephalo::optimizer::PlanError;
+use cephalo::sim::GaVariant;
+use cephalo::testkit::check;
+
+#[test]
+fn every_table2_model_plans_on_cluster_a_or_reports_oom_cleanly() {
+    for model in table2_models() {
+        let w = Workload::prepare(Cluster::cluster_a(), &model.name, 42)
+            .expect("profile");
+        match w.optimize(128) {
+            Ok((asg, _)) => {
+                assert_eq!(asg.global_batch(), 128, "{}", model.name);
+                asg.validate(&w.profile, 128).unwrap();
+                let stats = w.simulate(&asg, GaVariant::LGA_CO_S_O);
+                assert!(stats.throughput > 0.0);
+            }
+            Err(PlanError::OutOfMemory { .. })
+            | Err(PlanError::Infeasible(_)) => {
+                // Only the 6.7B-class models may fail on 192 GB.
+                assert!(
+                    model.total_params() > 5_000_000_000,
+                    "{} should fit on cluster A",
+                    model.name
+                );
+            }
+            Err(e) => panic!("{}: unexpected {e}", model.name),
+        }
+    }
+}
+
+#[test]
+fn cluster_b_handles_the_7b_models() {
+    for name in ["GPT 6.7B", "Llama 7B"] {
+        let w = Workload::prepare(Cluster::cluster_b(), name, 42).unwrap();
+        let (asg, _) = w.optimize(512).expect(name);
+        asg.validate(&w.profile, 512).unwrap();
+    }
+}
+
+#[test]
+fn baselines_never_panic_across_the_matrix() {
+    let systems = [
+        SystemKind::MegatronHet,
+        SystemKind::FlashFlex,
+        SystemKind::Whale,
+        SystemKind::Hap,
+        SystemKind::Fsdp,
+    ];
+    for model in ["ViT-G", "BERT-Large", "GPT 2.7B", "Llama 3B"] {
+        let w = Workload::prepare(Cluster::cluster_a(), model, 42).unwrap();
+        for batch in [64usize, 128, 256] {
+            for s in systems {
+                // Result may be Ok or a clean planning error; panics are
+                // the only failure.
+                let _ = throughput(&w, batch, s);
+            }
+        }
+    }
+}
+
+#[test]
+fn simulated_memory_never_exceeds_physical_capacity() {
+    // End-to-end invariant: for every feasible plan, the simulator's
+    // per-GPU memory stays within the physical cards.
+    for model in ["ViT-G", "BERT-Large", "GPT 2.7B"] {
+        let w = Workload::prepare(Cluster::cluster_a(), model, 42).unwrap();
+        for batch in [64usize, 128, 256] {
+            let Ok((asg, _)) = w.optimize(batch) else { continue };
+            let stats = w.simulate(&asg, GaVariant::LGA_CO_S_O);
+            for (mem, slot) in stats.per_gpu_mem.iter().zip(w.cluster.gpus())
+            {
+                assert!(
+                    *mem <= slot.spec.mem_bytes() * 1.001,
+                    "{model} @{batch}: {} uses {:.1} GB > {:.1} GB",
+                    slot.spec.name,
+                    mem / 1e9,
+                    slot.spec.mem_bytes() / 1e9
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_optimizer_feasible_over_random_batches() {
+    let w = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+        .unwrap();
+    check("optimizer-random-batches", 20, |g| {
+        let batch = g.usize_in(8, 192);
+        if let Ok((asg, _)) = w.optimize(batch) {
+            assert_eq!(asg.global_batch(), batch);
+            asg.validate(&w.profile, batch).unwrap();
+            // State only on GPUs where it fits next to compute.
+            for (gpu, m) in asg.per_gpu.iter().zip(&w.profile.per_gpu) {
+                let compute = if gpu.microbatch > 0 {
+                    m.mem.predict(gpu.microbatch)
+                } else {
+                    m.mem.intercept
+                };
+                let state = gpu.state_ratio
+                    * cephalo::memory::state_bytes(w.profile.total_params);
+                assert!(compute + state
+                        <= usable_capacity(m.capacity) * 1.0001);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_more_memory_never_hurts() {
+    // Upgrading every GPU's memory (same compute) must not reduce the
+    // optimizer's predicted throughput.
+    let base = Workload::prepare(Cluster::cluster_a(), "GPT 2.7B", 42)
+        .unwrap();
+    let mut big_cluster = Cluster::cluster_a();
+    for node in big_cluster.nodes.iter_mut() {
+        for gpu in node.gpus.iter_mut() {
+            gpu.mem_gb *= 2.0;
+        }
+    }
+    let big = Workload::prepare(big_cluster, "GPT 2.7B", 42).unwrap();
+    for batch in [64usize, 128] {
+        let t_base = base
+            .optimize(batch)
+            .map(|(a, _)| a.throughput())
+            .unwrap_or(0.0);
+        let t_big = big
+            .optimize(batch)
+            .map(|(a, _)| a.throughput())
+            .unwrap_or(0.0);
+        assert!(
+            t_big >= t_base * 0.999,
+            "doubling memory reduced throughput @{batch}: {t_base} -> \
+             {t_big}"
+        );
+    }
+}
+
+#[test]
+fn ga_variant_ladder_monotone_on_random_workloads() {
+    use cephalo::sim::{simulate_iteration, FsdpWorkload};
+    check("ladder-monotone", 30, |g| {
+        let n = g.usize_in(2, 6);
+        let units = g.usize_in(2, 12);
+        let l = g.usize_in(2, 8);
+        let w = FsdpWorkload {
+            units,
+            micro: vec![(g.usize_in(1, 4), l); n],
+            fwd_micro: (0..n).map(|_| g.f64_in(0.001, 0.05)).collect(),
+            bwd_micro: (0..n).map(|_| g.f64_in(0.003, 0.15)).collect(),
+            ag_unit: (0..units).map(|_| g.f64_in(0.001, 0.08)).collect(),
+            rs_unit: (0..units).map(|_| g.f64_in(0.001, 0.08)).collect(),
+            offload_micro: (0..n).map(|_| g.f64_in(0.0001, 0.002)).collect(),
+        };
+        let fsdp_ga = simulate_iteration(&w, GaVariant::FSDP_GA).latency;
+        let lga = simulate_iteration(&w, GaVariant::LGA).latency;
+        let lga_co = simulate_iteration(&w, GaVariant::LGA_CO).latency;
+        let full = simulate_iteration(&w, GaVariant::LGA_CO_S_O).latency;
+        assert!(lga <= fsdp_ga * 1.001, "LGA worse than FSDP-GA");
+        assert!(lga_co <= lga * 1.001, "CO hurt");
+        assert!(full <= lga_co * 1.02, "S+O hurt: {full} vs {lga_co}");
+    });
+}
+
+#[test]
+fn config_file_cluster_roundtrip() {
+    let toml = r#"
+[cluster]
+name = "ci"
+inter_bw_gbps = 40.0
+
+[[node]]
+gpus = ["A10G", "A10G", "T4", "T4"]
+intra_bw_gbps = 96.0
+
+[[node]]
+gpus = ["V100", "V100", "V100", "V100"]
+intra_bw_gbps = 300.0
+"#;
+    let cfg = cephalo::configfmt::Config::parse(toml).unwrap();
+    let cluster = Cluster::from_config(&cfg).unwrap();
+    assert_eq!(cluster.num_gpus(), 8);
+    let w = Workload::prepare(cluster, "BERT-Large", 1).unwrap();
+    let (asg, _) = w.optimize(64).unwrap();
+    assert_eq!(asg.global_batch(), 64);
+}
