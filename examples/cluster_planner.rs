@@ -1,14 +1,16 @@
 //! Cluster planner: sweep Table-2 models and batch sizes over a chosen
-//! cluster, comparing Cephalo against every baseline — a practitioner's
-//! "what can my mixed-GPU fleet actually train, and how fast?" tool.
+//! cluster, comparing Cephalo against every registered strategy — a
+//! practitioner's "what can my mixed-GPU fleet actually train, and how
+//! fast?" tool. All solves for a model run as one parallel
+//! `plan::sweep` over the planner registry.
 //!
 //! ```sh
 //! cargo run --release --offline --example cluster_planner -- [a|b]
 //! ```
 
-use cephalo::baselines::{self, BaselinePlanner};
 use cephalo::cluster::Cluster;
 use cephalo::coordinator::Workload;
+use cephalo::plan::{sweep, PlannerRegistry};
 use cephalo::util::tablefmt::{fmt_throughput, Table};
 
 fn main() {
@@ -28,6 +30,12 @@ fn main() {
         ]
     };
 
+    let registry = PlannerRegistry::with_defaults();
+    let planners: Vec<_> = ["cephalo", "megatron", "flashflex"]
+        .iter()
+        .map(|n| registry.get(n).expect("default registry entry"))
+        .collect();
+
     let mut table = Table::new(
         &format!("Training plans for cluster {}", cluster.name),
         &["model", "batch", "system", "samples/s", "plan"],
@@ -40,45 +48,21 @@ fn main() {
                 continue;
             }
         };
-        match w.cephalo_throughput(batch) {
-            Ok((asg, stats)) => {
-                let bs: Vec<usize> =
-                    asg.per_gpu.iter().map(|g| g.batch()).collect();
-                table.add_row(vec![
-                    model.into(),
-                    batch.to_string(),
-                    "Cephalo".into(),
-                    fmt_throughput(stats.throughput),
-                    format!("b={bs:?}"),
-                ]);
-            }
-            Err(e) => table.add_row(vec![
-                model.into(),
-                batch.to_string(),
-                "Cephalo".into(),
-                "OOM".into(),
-                e.to_string(),
-            ]),
-        }
-        let planners: Vec<Box<dyn BaselinePlanner>> = vec![
-            Box::new(baselines::megatron::MegatronHet),
-            Box::new(baselines::flashflex::FlashFlex),
-        ];
-        for p in planners {
-            match p.plan(&w.ctx(batch)) {
+        for cell in sweep(&w.ctx(0), &planners, &[batch], None) {
+            match cell.result {
                 Ok(out) => table.add_row(vec![
                     model.into(),
                     batch.to_string(),
-                    out.system,
+                    out.planner,
                     fmt_throughput(out.throughput),
                     out.config,
                 ]),
-                Err(_) => table.add_row(vec![
+                Err(e) => table.add_row(vec![
                     model.into(),
                     batch.to_string(),
-                    p.name().into(),
-                    "OOM".into(),
-                    String::new(),
+                    cell.planner,
+                    if e.is_oom() { "OOM".into() } else { "-".into() },
+                    e.to_string(),
                 ]),
             }
         }

@@ -56,7 +56,13 @@ fn main() {
     println!("shape check: sublinear latency + linear memory (r2={r2:.4}) \
               [ok]");
 
-    // Real PJRT series (artifacts present only after `make artifacts`).
+    // Real PJRT series (artifacts present only after `make artifacts`;
+    // xla builds only).
+    real_series();
+}
+
+#[cfg(feature = "xla")]
+fn real_series() {
     let dir = cephalo::runtime::default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         match cephalo::coordinator::real_profile::profile_layer_fwd(&dir, 5)
@@ -83,4 +89,9 @@ fn main() {
     } else {
         println!("real profile skipped: no artifacts (run `make artifacts`)");
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn real_series() {
+    println!("real profile skipped: built without the `xla` feature");
 }

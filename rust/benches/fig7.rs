@@ -1,16 +1,34 @@
 //! Fig. 7: throughput vs batch size for FSDP, Cephalo-CB (compute
 //! balancing only), Cephalo-MB (memory balancing only), and full
-//! Cephalo — ViT-e, GPT 2.7B, Llama 3B on Cluster A. Every variant is
-//! measured on the shared simulator.
+//! Cephalo — ViT-e, GPT 2.7B, Llama 3B on Cluster A. Every variant
+//! comes out of the planner registry, and every feasible plan is
+//! re-measured on the SHARED simulator (`Workload::simulate`), not its
+//! planner's optimistic internal model.
+
+use std::sync::Arc;
 
 use cephalo::cluster::Cluster;
 use cephalo::coordinator::Workload;
-use cephalo::optimizer::ablations;
+use cephalo::plan::{sweep, CephaloPlanner, Planner, PlannerRegistry};
+use cephalo::sim::cephalo::evaluate_outcome;
 use cephalo::sim::GaVariant;
 use cephalo::util::tablefmt::Table;
 
 fn main() {
     let batches = [32usize, 64, 96, 128, 160, 192, 224, 256];
+    let variants = ["FSDP", "Cephalo-CB", "Cephalo-MB", "Cephalo"];
+    let registry = PlannerRegistry::with_defaults();
+    // FSDP-even is the ablation-scale FSDP plan; Cephalo runs with
+    // simulate=false because evaluate_outcome below re-measures every
+    // assignment on the shared simulator anyway — simulating inside
+    // the planner too would do the work twice for identical numbers.
+    let planners: Vec<Arc<dyn Planner>> = vec![
+        registry.get("fsdp-even").expect("registered"),
+        registry.get("cephalo-cb").expect("registered"),
+        registry.get("cephalo-mb").expect("registered"),
+        Arc::new(CephaloPlanner { simulate: false, ..Default::default() }),
+    ];
+
     for model in ["ViT-e", "GPT 2.7B", "Llama 3B"] {
         let w = Workload::prepare(Cluster::cluster_a(), model, 42)
             .expect("profile");
@@ -20,21 +38,32 @@ fn main() {
             &format!("Fig. 7 — {model} on Cluster A (samples/s)"),
             &headers.iter().map(String::as_str).collect::<Vec<_>>(),
         );
+
+        // The whole (variant x batch) grid solves in parallel; every
+        // feasible outcome is then measured once on the one shared
+        // simulator (evaluate_outcome re-simulates assignments and
+        // passes assignment-less outcomes' own numbers through).
+        let cells = sweep(&w.ctx(0), &planners, &batches, None);
         let mut rows: Vec<(String, Vec<Option<f64>>)> = Vec::new();
-        for (name, f) in [
-            ("FSDP", plan_fsdp as PlanFn),
-            ("Cephalo-CB", plan_cb as PlanFn),
-            ("Cephalo-MB", plan_mb as PlanFn),
-            ("Cephalo", plan_full as PlanFn),
-        ] {
+        for (v, name) in variants.iter().enumerate() {
             let mut row = vec![name.to_string()];
             let mut series = Vec::new();
-            for &b in &batches {
-                match f(&w, b) {
-                    Some(asg) => {
-                        let s = w.simulate(&asg, GaVariant::LGA_CO_S_O);
-                        row.push(format!("{:.2}", s.throughput));
-                        series.push(Some(s.throughput));
+            for (b, _) in batches.iter().enumerate() {
+                let cell = &cells[v * batches.len() + b];
+                let sim = cell.result.as_ref().ok().map(|o| {
+                    evaluate_outcome(
+                        &w.model,
+                        &w.oracle,
+                        &w.collective,
+                        o,
+                        GaVariant::LGA_CO_S_O,
+                    )
+                    .throughput
+                });
+                match sim {
+                    Some(tput) => {
+                        row.push(format!("{tput:.2}"));
+                        series.push(Some(tput));
                     }
                     None => {
                         row.push("OOM".into());
@@ -66,23 +95,4 @@ fn main() {
         println!("shape check [{model}]: CB OOMs, MB slow, Cephalo wins \
                   [ok]\n");
     }
-}
-
-type PlanFn = fn(&Workload, usize) -> Option<cephalo::optimizer::Assignment>;
-
-fn plan_fsdp(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
-    ablations::fsdp_even(&w.profile, b).ok()
-}
-
-fn plan_cb(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
-    ablations::compute_balanced_only(&w.profile, b).ok()
-}
-
-fn plan_mb(w: &Workload, b: usize) -> Option<cephalo::optimizer::Assignment> {
-    ablations::memory_balanced_only(&w.profile, b).ok()
-}
-
-fn plan_full(w: &Workload, b: usize)
-    -> Option<cephalo::optimizer::Assignment> {
-    w.optimize(b).ok().map(|(a, _)| a)
 }

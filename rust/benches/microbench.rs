@@ -7,6 +7,7 @@ use cephalo::benchkit::Bencher;
 use cephalo::cluster::Cluster;
 use cephalo::coordinator::Workload;
 use cephalo::optimizer::{partition_state, DpOptimizer};
+use cephalo::plan::{sweep, PlanCache, PlannerRegistry};
 use cephalo::sharding::{ShardLayout, ShardPlan};
 use cephalo::sim::GaVariant;
 use cephalo::testkit::Gen;
@@ -67,7 +68,28 @@ fn main() {
         cephalo::collectives::ring_reduce_scatter(&full, &layout)
     });
 
-    // --- real PJRT grad step (optional) ---
+    // --- plan subsystem: registry sweep + cache ---
+    let registry = PlannerRegistry::with_defaults();
+    b.bench("plan sweep: 9 planners x B=128, cluster A (parallel)", || {
+        sweep(&wa.ctx(0), registry.planners(), &[128], None)
+    });
+    let cache = PlanCache::new();
+    let cephalo_planner = registry.get("cephalo").unwrap();
+    cache.get_or_plan(&*cephalo_planner, &wa.ctx(128)).unwrap();
+    b.bench("plan_cache hit: cephalo/A B=128 (elastic fast path)", || {
+        cache.get_or_plan(&*cephalo_planner, &wa.ctx(128)).unwrap()
+    });
+    b.bench("plan fingerprint: cluster A profile", || {
+        cephalo::plan::fingerprint(&wa.cluster, &wa.profile)
+    });
+
+    // --- real PJRT grad step (optional, xla builds only) ---
+    pjrt_bench();
+    println!("\nmicrobench done");
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_bench() {
     let dir = cephalo::runtime::default_artifacts_dir();
     if dir.join("manifest.json").exists() {
         match cephalo::runtime::ExecService::start(&dir, &["grad_step"]) {
@@ -99,5 +121,9 @@ fn main() {
     } else {
         println!("pjrt microbench skipped: no artifacts");
     }
-    println!("\nmicrobench done");
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_bench() {
+    println!("pjrt microbench skipped: built without the `xla` feature");
 }

@@ -1,9 +1,11 @@
 //! Table 4: training throughput (samples/s) on the 8-GPU Cluster A —
-//! 8 models x batch {128, 256} x {Megatron-Het, FlashFlex, Cephalo}.
+//! 8 models x batch {128, 256} x {Megatron-Het, FlashFlex, Cephalo},
+//! every cell produced by ONE parallel `plan::sweep` per workload.
 
 use cephalo::cluster::Cluster;
-use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::report::{find_cell, outcome_cell, SystemKind};
 use cephalo::coordinator::Workload;
+use cephalo::plan::{sweep, PlannerRegistry, SweepCell};
 use cephalo::util::tablefmt::Table;
 
 fn main() {
@@ -16,6 +18,7 @@ fn main() {
         SystemKind::FlashFlex,
         SystemKind::Cephalo,
     ];
+    let batches = [128usize, 256];
     let mut headers = vec!["System".to_string()];
     for m in models {
         headers.push(format!("{m} @128"));
@@ -26,31 +29,50 @@ fn main() {
         &headers.iter().map(String::as_str).collect::<Vec<_>>(),
     );
 
+    let registry = PlannerRegistry::with_defaults();
+    let planners: Vec<_> = systems
+        .iter()
+        .map(|s| registry.get(s.name()).expect("registered"))
+        .collect();
+
     let workloads: Vec<Workload> = models
         .iter()
         .map(|m| {
             Workload::prepare(Cluster::cluster_a(), m, 42).expect("profile")
         })
         .collect();
+    // One parallel (system x batch) sweep per workload.
+    let grids: Vec<Vec<SweepCell>> = workloads
+        .iter()
+        .map(|w| sweep(&w.ctx(0), &planners, &batches, None))
+        .collect();
 
     for system in systems {
         let mut row = vec![system.name().to_string()];
-        for w in &workloads {
-            row.push(cell(w, 128, system));
-            row.push(cell(w, 256, system));
+        for cells in &grids {
+            for &batch in &batches {
+                row.push(outcome_cell(
+                    &find_cell(cells, system, batch).result,
+                ));
+            }
         }
         t.add_row(row);
     }
     println!("{}", t.render());
 
-    // Shape assertions (the paper's qualitative results).
-    for (i, w) in workloads.iter().enumerate() {
-        for batch in [128usize, 256] {
-            let c = throughput(w, batch, SystemKind::Cephalo);
-            assert!(c.is_ok(), "Cephalo OOM on {} @{batch}", models[i]);
-            let c = c.unwrap();
+    // Shape assertions (the paper's qualitative results) straight off
+    // the sweep cells — no re-solving.
+    for (i, cells) in grids.iter().enumerate() {
+        for &batch in &batches {
+            let c = find_cell(cells, SystemKind::Cephalo, batch)
+                .throughput()
+                .unwrap_or_else(|| {
+                    panic!("Cephalo OOM on {} @{batch}", models[i])
+                });
             for other in [SystemKind::MegatronHet, SystemKind::FlashFlex] {
-                if let Ok(o) = throughput(w, batch, other) {
+                if let Some(o) =
+                    find_cell(cells, other, batch).throughput()
+                {
                     assert!(
                         c > o,
                         "{} beat Cephalo on {} @{batch}: {o:.2} vs {c:.2}",

@@ -1,9 +1,11 @@
 //! Table 5: throughput on the 64-GPU Cluster B — ViT-e / GPT 6.7B /
-//! Llama 7B at batch {512, 1024} x {Megatron-Het, FlashFlex, Cephalo}.
+//! Llama 7B at batch {512, 1024} x {Megatron-Het, FlashFlex, Cephalo},
+//! via one parallel `plan::sweep` per workload.
 
 use cephalo::cluster::Cluster;
-use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::report::{find_cell, outcome_cell, SystemKind};
 use cephalo::coordinator::Workload;
+use cephalo::plan::{sweep, PlannerRegistry, SweepCell};
 use cephalo::util::tablefmt::Table;
 
 fn main() {
@@ -13,6 +15,7 @@ fn main() {
         SystemKind::FlashFlex,
         SystemKind::Cephalo,
     ];
+    let batches = [512usize, 1024];
     let mut headers = vec!["System".to_string()];
     for m in models {
         headers.push(format!("{m} @512"));
@@ -22,33 +25,48 @@ fn main() {
         "Table 5 — throughput (samples/s), Cluster B (64 GPUs)",
         &headers.iter().map(String::as_str).collect::<Vec<_>>(),
     );
+
+    let registry = PlannerRegistry::with_defaults();
+    let planners: Vec<_> = systems
+        .iter()
+        .map(|s| registry.get(s.name()).expect("registered"))
+        .collect();
     let workloads: Vec<Workload> = models
         .iter()
         .map(|m| {
             Workload::prepare(Cluster::cluster_b(), m, 42).expect("profile")
         })
         .collect();
+    let grids: Vec<Vec<SweepCell>> = workloads
+        .iter()
+        .map(|w| sweep(&w.ctx(0), &planners, &batches, None))
+        .collect();
+
     for system in systems {
         let mut row = vec![system.name().to_string()];
-        for w in &workloads {
-            row.push(cell(w, 512, system));
-            row.push(cell(w, 1024, system));
+        for cells in &grids {
+            for &batch in &batches {
+                row.push(outcome_cell(
+                    &find_cell(cells, system, batch).result,
+                ));
+            }
         }
         t.add_row(row);
     }
     println!("{}", t.render());
 
     // Shape: Cephalo clearly ahead of the best baseline (§4.3: 2-10x).
-    for (i, w) in workloads.iter().enumerate() {
-        for batch in [512usize, 1024] {
-            let c = throughput(w, batch, SystemKind::Cephalo)
-                .unwrap_or_else(|e| {
-                    panic!("Cephalo OOM on {} @{batch}: {e}", models[i])
+    for (i, cells) in grids.iter().enumerate() {
+        for &batch in &batches {
+            let c = find_cell(cells, SystemKind::Cephalo, batch)
+                .throughput()
+                .unwrap_or_else(|| {
+                    panic!("Cephalo OOM on {} @{batch}", models[i])
                 });
             let best_baseline = [SystemKind::MegatronHet,
                                  SystemKind::FlashFlex]
                 .iter()
-                .filter_map(|s| throughput(w, batch, *s).ok())
+                .filter_map(|s| find_cell(cells, *s, batch).throughput())
                 .fold(0.0f64, f64::max);
             if best_baseline > 0.0 {
                 let ratio = c / best_baseline;

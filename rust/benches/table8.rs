@@ -2,10 +2,12 @@
 //! — the additional-baselines comparison. The paper's shape: Whale and
 //! HAP train only BERT-Large; FSDP OOMs on the larger models and at
 //! batch 256 for ViT-G / BERT-XLarge / Tiny Llama; Cephalo never OOMs.
+//! All cells come from one parallel `plan::sweep` per workload.
 
 use cephalo::cluster::Cluster;
-use cephalo::coordinator::report::{cell, throughput, SystemKind};
+use cephalo::coordinator::report::{find_cell, outcome_cell, SystemKind};
 use cephalo::coordinator::Workload;
+use cephalo::plan::{sweep, PlannerRegistry, SweepCell};
 use cephalo::util::tablefmt::Table;
 
 fn main() {
@@ -19,6 +21,7 @@ fn main() {
         SystemKind::Hap,
         SystemKind::Cephalo,
     ];
+    let batches = [128usize, 256];
     let mut headers = vec!["System".to_string()];
     for m in models {
         headers.push(format!("{m} @128"));
@@ -28,46 +31,68 @@ fn main() {
         "Table 8 — additional baselines, Cluster A",
         &headers.iter().map(String::as_str).collect::<Vec<_>>(),
     );
+    let registry = PlannerRegistry::with_defaults();
+    let planners: Vec<_> = systems
+        .iter()
+        .map(|s| registry.get(s.name()).expect("registered"))
+        .collect();
     let workloads: Vec<Workload> = models
         .iter()
         .map(|m| {
             Workload::prepare(Cluster::cluster_a(), m, 42).expect("profile")
         })
         .collect();
+    let grids: Vec<Vec<SweepCell>> = workloads
+        .iter()
+        .map(|w| sweep(&w.ctx(0), &planners, &batches, None))
+        .collect();
+
     for system in systems {
         let mut row = vec![system.name().to_string()];
-        for w in &workloads {
-            row.push(cell(w, 128, system));
-            row.push(cell(w, 256, system));
+        for cells in &grids {
+            for &batch in &batches {
+                row.push(outcome_cell(
+                    &find_cell(cells, system, batch).result,
+                ));
+            }
         }
         t.add_row(row);
     }
     println!("{}", t.render());
 
-    // Shape checks.
-    let bert = &workloads[2];
-    assert!(throughput(bert, 128, SystemKind::Whale).is_ok());
-    assert!(throughput(bert, 128, SystemKind::Hap).is_ok());
+    // Shape checks, straight off the sweep grids.
+    let ok = |cells: &[SweepCell], s: SystemKind, b: usize| {
+        find_cell(cells, s, b).throughput()
+    };
+    let bert = &grids[2];
+    assert!(ok(bert, SystemKind::Whale, 128).is_some());
+    assert!(ok(bert, SystemKind::Hap, 128).is_some());
     let mut whale_ooms = 0;
     let mut hap_ooms = 0;
-    for (i, w) in workloads.iter().enumerate() {
+    for (i, cells) in grids.iter().enumerate() {
         if i == 2 {
             continue; // BERT-Large
         }
-        if throughput(w, 128, SystemKind::Whale).is_err() {
+        if ok(cells, SystemKind::Whale, 128).is_none() {
             whale_ooms += 1;
         }
-        if throughput(w, 128, SystemKind::Hap).is_err() {
+        if ok(cells, SystemKind::Hap, 128).is_none() {
             hap_ooms += 1;
         }
         // Cephalo never OOMs.
-        assert!(throughput(w, 256, SystemKind::Cephalo).is_ok());
+        assert!(ok(cells, SystemKind::Cephalo, 256).is_some());
     }
     assert!(whale_ooms >= 6, "Whale should OOM on most models");
     assert!(hap_ooms >= 6, "HAP should OOM on most models");
     // HAP's cross-node TP makes it slower than FSDP on BERT-Large.
-    let hap = throughput(bert, 128, SystemKind::Hap).unwrap();
-    let fsdp = throughput(bert, 128, SystemKind::Fsdp).unwrap();
+    let hap = ok(bert, SystemKind::Hap, 128).unwrap();
+    let fsdp = ok(bert, SystemKind::Fsdp, 128).unwrap();
     assert!(hap < fsdp, "HAP ({hap:.2}) should trail FSDP ({fsdp:.2})");
+    // OOM cells render as "OOM" and name the failing configuration in
+    // the underlying error (Table 4/5 presentation requirement).
+    let whale_err = find_cell(&grids[0], SystemKind::Whale, 128);
+    assert_eq!(outcome_cell(&whale_err.result), "OOM");
+    let msg = whale_err.result.as_ref().unwrap_err().to_string();
+    assert!(msg.contains("[Whale]"), "{msg}");
     println!("shape check: OOM pattern + HAP<FSDP hold  [ok]");
 }

@@ -12,8 +12,10 @@
 //! * Microbatch size / accumulation manually swept (powers of two), the
 //!   best reported.
 
-use super::{allreduce_time, pow2_candidates, BaselineOutcome,
-            BaselinePlanner, PlanContext};
+use std::time::Instant;
+
+use super::{allreduce_time, pow2_candidates, PlanContext,
+            PlanDiagnostics, PlanOutcome, Planner};
 use crate::cluster::gbps_to_bytes_per_sec;
 use crate::memory::usable_capacity;
 use crate::optimizer::PlanError;
@@ -53,13 +55,21 @@ fn group_by_type(ctx: &PlanContext<'_>) -> Vec<StageGroup> {
         .collect()
 }
 
-impl BaselinePlanner for FlashFlex {
+impl Planner for FlashFlex {
     fn name(&self) -> &'static str {
         "FlashFlex"
     }
 
     fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError> {
+        -> Result<PlanOutcome, PlanError> {
+        self.plan_inner(ctx).map_err(|e| e.tagged(self.name()))
+    }
+}
+
+impl FlashFlex {
+    fn plan_inner(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
         let model = ctx.model;
         let groups = group_by_type(ctx);
         let stages = groups.len();
@@ -92,6 +102,7 @@ impl BaselinePlanner for FlashFlex {
         let unit_params = model.params_per_layer() as f64;
         let mut best: Option<(f64, String)> = None;
         let mut oom: Option<PlanError> = None;
+        let mut candidates = 0u64;
 
         // FlashFlex supports per-stage tensor parallelism (less than
         // Megatron, §4.3); searched alongside the microbatch size.
@@ -104,6 +115,7 @@ impl BaselinePlanner for FlashFlex {
                 continue;
             }
             let l = ctx.batch / m;
+            candidates += 1;
             match self.evaluate(ctx, &groups, &layer_split, unit_params, m,
                                 l, tp)
             {
@@ -125,20 +137,25 @@ impl BaselinePlanner for FlashFlex {
         }
         }
         match best {
-            Some((latency, config)) => Ok(BaselineOutcome {
-                system: self.name().into(),
+            Some((latency, config)) => Ok(PlanOutcome {
+                planner: self.name().into(),
                 iter_latency: latency,
                 throughput: ctx.batch as f64 / latency,
                 config,
+                // Heterogeneous pipeline stages, no FSDP division.
+                assignment: None,
+                diagnostics: PlanDiagnostics {
+                    solve_seconds: t0.elapsed().as_secs_f64(),
+                    candidates,
+                    ..Default::default()
+                },
             }),
             None => Err(oom.unwrap_or(PlanError::Infeasible(
                 "no flashflex configuration feasible".into(),
             ))),
         }
     }
-}
 
-impl FlashFlex {
     fn evaluate(
         &self,
         ctx: &PlanContext<'_>,
@@ -171,11 +188,12 @@ impl FlashFlex {
                 let need = state + acts + workspace;
                 let cap = usable_capacity(prof.capacity);
                 if need > cap {
-                    return Err(PlanError::OutOfMemory {
-                        gpu: slot,
-                        needed: need,
-                        capacity: cap,
-                    });
+                    return Err(PlanError::oom_in(
+                        slot,
+                        need,
+                        cap,
+                        format!("stage={s} tp={tp} micro={m} x {l}"),
+                    ));
                 }
             }
         }

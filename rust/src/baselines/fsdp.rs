@@ -3,20 +3,30 @@
 //! layer-boundary checkpoints resident on GPU, fragmentation from the
 //! default allocator behaviour. The Table-8 / Fig.-7 "FSDP" row.
 
-use super::{BaselineOutcome, BaselinePlanner, PlanContext,
+use std::time::Instant;
+
+use super::{PlanContext, PlanDiagnostics, PlanOutcome, Planner,
             PYTORCH_FRAGMENTATION};
 use crate::memory::{state_bytes, usable_capacity};
-use crate::optimizer::PlanError;
+use crate::optimizer::{Assignment, GpuAssign, PlanError};
 
 pub struct FsdpBaseline;
 
-impl BaselinePlanner for FsdpBaseline {
+impl Planner for FsdpBaseline {
     fn name(&self) -> &'static str {
         "FSDP"
     }
 
     fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError> {
+        -> Result<PlanOutcome, PlanError> {
+        self.plan_inner(ctx).map_err(|e| e.tagged(self.name()))
+    }
+}
+
+impl FsdpBaseline {
+    fn plan_inner(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
         let n = ctx.cluster.num_gpus();
         let model = ctx.model;
         if ctx.batch % n != 0 {
@@ -39,11 +49,12 @@ impl BaselinePlanner for FsdpBaseline {
             let need = even_state + compute;
             let cap = usable_capacity(prof.capacity);
             if need > cap {
-                return Err(PlanError::OutOfMemory {
-                    gpu: i,
-                    needed: need,
-                    capacity: cap,
-                });
+                return Err(PlanError::oom_in(
+                    i,
+                    need,
+                    cap,
+                    format!("even dp: b_i={b}, even shard"),
+                ));
             }
         }
 
@@ -59,11 +70,30 @@ impl BaselinePlanner for FsdpBaseline {
             .fold(0.0, f64::max);
         let layer = tf.max(ag) + tb.max(ag + rs);
         let latency = layer * model.layers as f64;
-        Ok(BaselineOutcome {
-            system: self.name().into(),
+        // FSDP's division DOES map onto the per-GPU assignment shape:
+        // even batch, no accumulation, even state.
+        let assignment = Assignment {
+            per_gpu: (0..n)
+                .map(|_| GpuAssign {
+                    microbatch: b,
+                    num_micro: 1,
+                    state_ratio: 1.0 / n as f64,
+                })
+                .collect(),
+            layer_latency: layer,
+            iter_latency: latency,
+        };
+        Ok(PlanOutcome {
+            planner: self.name().into(),
             iter_latency: latency,
             throughput: ctx.batch as f64 / latency,
             config: format!("even dp: {b}/GPU, even shard"),
+            assignment: Some(assignment),
+            diagnostics: PlanDiagnostics {
+                solve_seconds: t0.elapsed().as_secs_f64(),
+                candidates: 1,
+                ..Default::default()
+            },
         })
     }
 }

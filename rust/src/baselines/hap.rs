@@ -7,20 +7,31 @@
 //! tensor parallelism pays per-layer activation allreduces over the slow
 //! inter-node link, making it slower than even baseline FSDP.
 
-use super::{allreduce_time, BaselineOutcome, BaselinePlanner, PlanContext};
+use std::time::Instant;
+
+use super::{allreduce_time, PlanContext, PlanDiagnostics, PlanOutcome,
+            Planner};
 use crate::memory::usable_capacity;
 use crate::optimizer::ablations::proportional_split;
 use crate::optimizer::PlanError;
 
 pub struct Hap;
 
-impl BaselinePlanner for Hap {
+impl Planner for Hap {
     fn name(&self) -> &'static str {
         "HAP"
     }
 
     fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError> {
+        -> Result<PlanOutcome, PlanError> {
+        self.plan_inner(ctx).map_err(|e| e.tagged(self.name()))
+    }
+}
+
+impl Hap {
+    fn plan_inner(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
         let model = ctx.model;
         let nodes = &ctx.cluster.nodes;
         let tp = nodes.len(); // tensor parallel across nodes
@@ -79,11 +90,12 @@ impl BaselinePlanner for Hap {
                     + checkpoints;
             let cap = usable_capacity(prof.capacity);
             if need > cap {
-                return Err(PlanError::OutOfMemory {
-                    gpu: i,
-                    needed: need,
-                    capacity: cap,
-                });
+                return Err(PlanError::oom_in(
+                    i,
+                    need,
+                    cap,
+                    format!("tp={tp} dp={dp} b_i={b}"),
+                ));
             }
         }
 
@@ -130,11 +142,18 @@ impl BaselinePlanner for Hap {
                                                        f64::min),
         );
         let latency = compute + tp_comm + grad_sync;
-        Ok(BaselineOutcome {
-            system: self.name().into(),
+        Ok(PlanOutcome {
+            planner: self.name().into(),
             iter_latency: latency,
             throughput: ctx.batch as f64 / latency,
             config: format!("tp={tp} dp={dp} batches={batches:?}"),
+            // Cross-node TP sharding is not an FSDP-style division.
+            assignment: None,
+            diagnostics: PlanDiagnostics {
+                solve_seconds: t0.elapsed().as_secs_f64(),
+                candidates: 1,
+                ..Default::default()
+            },
         })
     }
 }
@@ -154,9 +173,11 @@ mod tests {
             let c = Ctx::new(Cluster::cluster_a(), model);
             let r = Hap.plan(&c.ctx(128));
             assert!(
-                matches!(r, Err(PlanError::OutOfMemory { .. })),
+                matches!(&r, Err(e) if e.is_oom()),
                 "{model} should OOM: {r:?}"
             );
+            let msg = r.unwrap_err().to_string();
+            assert!(msg.contains("[HAP]") && msg.contains("tp="), "{msg}");
         }
     }
 

@@ -12,8 +12,10 @@
 //! implements (GPT and BERT); ViT / Llama variants run tp = 1, which is
 //! why the big ViT-e and Llama-3B rows OOM in Table 4.
 
-use super::{allreduce_time, pow2_candidates, BaselineOutcome,
-            BaselinePlanner, PlanContext};
+use std::time::Instant;
+
+use super::{allreduce_time, pow2_candidates, PlanContext,
+            PlanDiagnostics, PlanOutcome, Planner};
 use crate::cluster::gbps_to_bytes_per_sec;
 use crate::memory::usable_capacity;
 use crate::optimizer::PlanError;
@@ -27,13 +29,21 @@ fn tp_supported(model_name: &str) -> bool {
     n.contains("gpt") || n.contains("bert")
 }
 
-impl BaselinePlanner for MegatronHet {
+impl Planner for MegatronHet {
     fn name(&self) -> &'static str {
         "Megatron-Het"
     }
 
     fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError> {
+        -> Result<PlanOutcome, PlanError> {
+        self.plan_inner(ctx).map_err(|e| e.tagged(self.name()))
+    }
+}
+
+impl MegatronHet {
+    fn plan_inner(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
         let nodes = &ctx.cluster.nodes;
         let stages = nodes.len();
         let model = ctx.model;
@@ -75,6 +85,7 @@ impl BaselinePlanner for MegatronHet {
 
         let mut best: Option<(f64, String)> = None;
         let mut oom: Option<PlanError> = None;
+        let mut candidates = 0u64;
 
         for &tp in &tp_options {
             if gpus_per_node % tp != 0 {
@@ -90,6 +101,7 @@ impl BaselinePlanner for MegatronHet {
                     continue;
                 }
                 let l = per_pipeline / m;
+                candidates += 1;
                 match self.evaluate(ctx, &layer_split, &node_slots, tp, dp,
                                     m, l) {
                     Ok(latency) => {
@@ -113,20 +125,25 @@ impl BaselinePlanner for MegatronHet {
         }
 
         match best {
-            Some((latency, config)) => Ok(BaselineOutcome {
-                system: self.name().into(),
+            Some((latency, config)) => Ok(PlanOutcome {
+                planner: self.name().into(),
                 iter_latency: latency,
                 throughput: ctx.batch as f64 / latency,
                 config,
+                // Pipeline stages don't map onto the FSDP division.
+                assignment: None,
+                diagnostics: PlanDiagnostics {
+                    solve_seconds: t0.elapsed().as_secs_f64(),
+                    candidates,
+                    ..Default::default()
+                },
             }),
             None => Err(oom.unwrap_or(PlanError::Infeasible(
                 "no megatron configuration feasible".into(),
             ))),
         }
     }
-}
 
-impl MegatronHet {
     /// Memory-check one configuration and simulate the slowest pipeline.
     #[allow(clippy::too_many_arguments)]
     fn evaluate(
@@ -161,11 +178,13 @@ impl MegatronHet {
                 let need = state + acts + workspace;
                 let cap = usable_capacity(prof.capacity);
                 if need > cap {
-                    return Err(PlanError::OutOfMemory {
-                        gpu: slot,
-                        needed: need,
-                        capacity: cap,
-                    });
+                    return Err(PlanError::oom_in(
+                        slot,
+                        need,
+                        cap,
+                        format!("pp={stages} tp={tp} dp={dp} \
+                                 micro={m} x {l}"),
+                    ));
                 }
             }
         }

@@ -26,36 +26,11 @@ pub mod hap;
 pub mod megatron;
 pub mod whale;
 
-use crate::cluster::Cluster;
-use crate::model::TransformerSpec;
-use crate::optimizer::PlanError;
-use crate::perfmodel::{ClusterPerfProfile, ComputeOracle};
-
-/// Inputs shared by every baseline planner.
-pub struct PlanContext<'a> {
-    pub cluster: &'a Cluster,
-    pub model: &'a TransformerSpec,
-    pub profile: &'a ClusterPerfProfile,
-    pub oracle: &'a dyn ComputeOracle,
-    pub batch: usize,
-}
-
-/// A baseline's chosen configuration and its simulated performance.
-#[derive(Debug, Clone)]
-pub struct BaselineOutcome {
-    pub system: String,
-    pub iter_latency: f64,
-    pub throughput: f64,
-    /// Human-readable description of the winning configuration.
-    pub config: String,
-}
-
-/// Common interface so benches can sweep systems uniformly.
-pub trait BaselinePlanner {
-    fn name(&self) -> &'static str;
-    fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError>;
-}
+// The shared planner interface lives in `crate::plan`; every baseline
+// implements `plan::Planner` and is registered in
+// `plan::PlannerRegistry::with_defaults()`. Re-exported here so
+// baseline call sites read naturally.
+pub use crate::plan::{PlanContext, PlanDiagnostics, PlanOutcome, Planner};
 
 /// Microbatch candidates: powers of two up to `max`.
 pub fn pow2_candidates(max: usize) -> Vec<usize> {
@@ -88,8 +63,9 @@ pub fn allreduce_time(bytes: f64, ranks: usize, gbps: f64) -> f64 {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::model::find_model;
-    use crate::perfmodel::{Profiler, SyntheticOracle};
+    use crate::cluster::Cluster;
+    use crate::model::{find_model, TransformerSpec};
+    use crate::perfmodel::{ClusterPerfProfile, Profiler, SyntheticOracle};
 
     pub struct Ctx {
         pub cluster: Cluster,
@@ -108,13 +84,13 @@ pub(crate) mod testutil {
         }
 
         pub fn ctx(&self, batch: usize) -> PlanContext<'_> {
-            PlanContext {
-                cluster: &self.cluster,
-                model: &self.model,
-                profile: &self.profile,
-                oracle: &self.oracle,
+            PlanContext::new(
+                &self.cluster,
+                &self.model,
+                &self.profile,
+                &self.oracle,
                 batch,
-            }
+            )
         }
     }
 }

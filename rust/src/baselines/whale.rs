@@ -6,21 +6,31 @@
 //! BERT-Large on cluster A: P100s run out while P40s sit at 50%
 //! utilization — the compute/memory coupling Cephalo breaks.
 
-use super::{allreduce_time, BaselineOutcome, BaselinePlanner, PlanContext,
-            PYTORCH_FRAGMENTATION};
+use std::time::Instant;
+
+use super::{allreduce_time, PlanContext, PlanDiagnostics, PlanOutcome,
+            Planner, PYTORCH_FRAGMENTATION};
 use crate::memory::{state_bytes, usable_capacity};
 use crate::optimizer::ablations::proportional_split;
 use crate::optimizer::PlanError;
 
 pub struct Whale;
 
-impl BaselinePlanner for Whale {
+impl Planner for Whale {
     fn name(&self) -> &'static str {
         "Whale"
     }
 
     fn plan(&self, ctx: &PlanContext<'_>)
-        -> Result<BaselineOutcome, PlanError> {
+        -> Result<PlanOutcome, PlanError> {
+        self.plan_inner(ctx).map_err(|e| e.tagged(self.name()))
+    }
+}
+
+impl Whale {
+    fn plan_inner(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
         let n = ctx.cluster.num_gpus();
         let model = ctx.model;
 
@@ -52,11 +62,12 @@ impl BaselinePlanner for Whale {
             let need = full_state + compute;
             let cap = usable_capacity(prof.capacity);
             if need > cap {
-                return Err(PlanError::OutOfMemory {
-                    gpu: i,
-                    needed: need,
-                    capacity: cap,
-                });
+                return Err(PlanError::oom_in(
+                    i,
+                    need,
+                    cap,
+                    format!("replicated state, b_i={b}"),
+                ));
             }
         }
 
@@ -78,11 +89,18 @@ impl BaselinePlanner for Whale {
             ctx.cluster.ring_bw_gbps(),
         );
         let latency = compute + sync;
-        Ok(BaselineOutcome {
-            system: self.name().into(),
+        Ok(PlanOutcome {
+            planner: self.name().into(),
             iter_latency: latency,
             throughput: ctx.batch as f64 / latency,
             config: format!("dp batches={batches:?}"),
+            // Full replication has no (sum-to-1) state-ratio encoding.
+            assignment: None,
+            diagnostics: PlanDiagnostics {
+                solve_seconds: t0.elapsed().as_secs_f64(),
+                candidates: 1,
+                ..Default::default()
+            },
         })
     }
 }
@@ -102,9 +120,13 @@ mod tests {
             let c = Ctx::new(Cluster::cluster_a(), model);
             let r = Whale.plan(&c.ctx(128));
             assert!(
-                matches!(r, Err(PlanError::OutOfMemory { .. })),
+                matches!(&r, Err(e) if e.is_oom()),
                 "{model} should OOM: {r:?}"
             );
+            // Errors are attributed and name the OOMing configuration.
+            let msg = r.unwrap_err().to_string();
+            assert!(msg.contains("[Whale]"), "{msg}");
+            assert!(msg.contains("replicated state"), "{msg}");
         }
     }
 

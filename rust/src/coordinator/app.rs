@@ -1,10 +1,14 @@
-//! The `cephalo` CLI: profile / optimize / simulate / train / trace.
+//! The `cephalo` CLI: plan / optimize / simulate / elastic / profile /
+//! train / trace.
 
-use crate::baselines::{self, BaselinePlanner};
+use std::sync::Arc;
+
 use crate::cli::{opt, parse, switch, usage, OptSpec};
 use crate::cluster::Cluster;
-use crate::coordinator::Workload;
+use crate::coordinator::{elastic, Workload};
 use crate::optimizer::PlanError;
+use crate::plan::{self, PlanCache, Planner, PlannerRegistry};
+#[cfg(feature = "xla")]
 use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
 use crate::util::tablefmt::{fmt_throughput, Table};
 
@@ -15,8 +19,10 @@ pub fn main_with_args(argv: Vec<String>) -> i32 {
     };
     let rest = argv[1..].to_vec();
     let code = match cmd.as_str() {
+        "plan" => cmd_plan(&rest),
         "optimize" => cmd_optimize(&rest),
         "simulate" => cmd_simulate(&rest),
+        "elastic" => cmd_elastic(&rest),
         "profile" => cmd_profile(&rest),
         "train" => cmd_train(&rest),
         "trace" => cmd_trace(&rest),
@@ -39,8 +45,11 @@ fn print_help() {
     println!(
         "cephalo — heterogeneous-cluster transformer training\n\n\
          commands:\n  \
+         plan      compare planners (--system <name|all>) via a \
+         parallel sweep\n  \
          optimize  solve the compute/state division for a workload\n  \
          simulate  throughput of cephalo and/or baselines on a cluster\n  \
+         elastic   simulate membership churn with cached re-planning\n  \
          profile   fit or measure performance models\n  \
          train     run real training via the AOT artifacts (PJRT)\n  \
          trace     generate the AWS availability trace (Fig. 1)\n  \
@@ -126,6 +135,31 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// The six table systems (ablation variants are reachable via `plan`).
+const TABLE_SYSTEMS: [&str; 6] = [
+    "Cephalo", "Megatron-Het", "FlashFlex", "Whale", "HAP", "FSDP",
+];
+
+/// Resolve `--system <name|all>` against the registry.
+fn resolve_planners(
+    registry: &PlannerRegistry,
+    system: &str,
+    all: &[&str],
+) -> Result<Vec<Arc<dyn Planner>>, String> {
+    if system.eq_ignore_ascii_case("all") {
+        return Ok(all
+            .iter()
+            .map(|n| registry.get(n).expect("default registry entry"))
+            .collect());
+    }
+    registry.get(system).map(|p| vec![p]).ok_or_else(|| {
+        format!(
+            "unknown system '{system}'; known: {}",
+            registry.names().join(", ")
+        )
+    })
+}
+
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.push(opt("system", "cephalo | megatron | flashflex | whale | \
@@ -145,7 +179,12 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     )
     .map_err(plan_err)?;
 
-    let system = a.get("system").unwrap().to_ascii_lowercase();
+    let registry = PlannerRegistry::with_defaults();
+    let planners = resolve_planners(
+        &registry,
+        a.get("system").unwrap(),
+        &TABLE_SYSTEMS,
+    )?;
     let mut t = Table::new(
         &format!(
             "Simulated throughput (samples/s): {} on cluster {} @ {batch}",
@@ -153,44 +192,194 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         ),
         &["system", "throughput", "config"],
     );
-    if system == "cephalo" || system == "all" {
-        match w.cephalo_throughput(batch) {
-            Ok((asg, stats)) => {
-                let bs: Vec<usize> =
-                    asg.per_gpu.iter().map(|g| g.batch()).collect();
-                t.add_row(vec![
-                    "Cephalo".into(),
-                    fmt_throughput(stats.throughput),
-                    format!("b={bs:?}"),
-                ]);
-            }
-            Err(e) => t.add_row(vec!["Cephalo".into(), "OOM".into(),
-                                     e.to_string()]),
-        }
-    }
-    let planners: Vec<Box<dyn BaselinePlanner>> = vec![
-        Box::new(baselines::megatron::MegatronHet),
-        Box::new(baselines::flashflex::FlashFlex),
-        Box::new(baselines::whale::Whale),
-        Box::new(baselines::hap::Hap),
-        Box::new(baselines::fsdp::FsdpBaseline),
-    ];
-    for p in planners {
-        let key = p.name().to_ascii_lowercase();
-        if system != "all" && !key.contains(&system) {
-            continue;
-        }
-        match p.plan(&w.ctx(batch)) {
+    for cell in plan::sweep(&w.ctx(0), &planners, &[batch], None) {
+        match cell.result {
             Ok(out) => t.add_row(vec![
-                out.system,
+                out.planner,
                 fmt_throughput(out.throughput),
                 out.config,
             ]),
-            Err(e) => t.add_row(vec![p.name().into(), "OOM".into(),
-                                     e.to_string()]),
+            Err(e) => t.add_row(vec![
+                cell.planner,
+                if e.is_oom() { "OOM".into() } else { "-".into() },
+                e.to_string(),
+            ]),
         }
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.push(opt("system", "planner name (see `plan --system all`) or \
+                              'all'", Some("all")));
+    specs.push(opt("batches", "comma-separated batch sizes (overrides \
+                               --batch)", None));
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage("cephalo plan",
+                             "compare planning strategies", &specs));
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let batches: Vec<usize> = match a.get("batches") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad batch '{x}'"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => vec![batch],
+    };
+    let w = Workload::prepare(
+        cluster,
+        a.get("model").unwrap(),
+        a.get_u64("seed").unwrap_or(42),
+    )
+    .map_err(plan_err)?;
+
+    let registry = PlannerRegistry::with_defaults();
+    let all = registry.names();
+    let planners =
+        resolve_planners(&registry, a.get("system").unwrap(), &all)?;
+    let cells = plan::sweep(&w.ctx(0), &planners, &batches, None);
+
+    let mut t = Table::new(
+        &format!(
+            "Planner comparison: {} on cluster {} ({} solves, parallel)",
+            w.model.name,
+            w.cluster.name,
+            cells.len()
+        ),
+        &["system", "batch", "samples/s", "iter (s)", "solve (s)",
+          "configuration"],
+    );
+    for c in &cells {
+        match &c.result {
+            Ok(o) => t.add_row(vec![
+                c.planner.clone(),
+                c.batch.to_string(),
+                fmt_throughput(o.throughput),
+                format!("{:.4}", o.iter_latency),
+                format!("{:.3}", o.diagnostics.solve_seconds),
+                o.config.clone(),
+            ]),
+            Err(e) => t.add_row(vec![
+                c.planner.clone(),
+                c.batch.to_string(),
+                if e.is_oom() { "OOM".into() } else { "-".into() },
+                "-".into(),
+                "-".into(),
+                e.to_string(),
+            ]),
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_elastic(argv: &[String]) -> Result<(), String> {
+    let mut specs = common_specs();
+    specs.push(opt("events", "membership-change events to simulate",
+                   Some("6")));
+    specs.push(opt("planner", "registry planner used for re-planning",
+                   Some("cephalo")));
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage(
+            "cephalo elastic",
+            "alternate losing/regaining a GPU, re-planning through the \
+             registry + plan cache each time",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    if cluster.num_gpus() < 2 {
+        return Err("elastic demo needs at least 2 GPUs".into());
+    }
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let events = a.get_usize("events").ok_or("bad --events")?;
+    let model = a.get("model").unwrap();
+    let seed = a.get_u64("seed").unwrap_or(42);
+
+    let registry = PlannerRegistry::with_defaults();
+    let planner_name = a.get("planner").unwrap();
+    let planner = registry.get(planner_name).ok_or_else(|| {
+        format!(
+            "unknown planner '{planner_name}'; known: {}",
+            registry.names().join(", ")
+        )
+    })?;
+    let cache = PlanCache::new();
+
+    // Two recurring membership states: the full cluster, and the
+    // cluster with its last GPU preempted (Fig.-1 churn at demo scale).
+    let full = Workload::prepare(cluster.clone(), model, seed)
+        .map_err(plan_err)?;
+    let mut degraded_cluster = cluster.clone();
+    let last = degraded_cluster.nodes.len() - 1;
+    degraded_cluster.nodes[last].gpus.pop();
+    if degraded_cluster.nodes[last].gpus.is_empty() {
+        degraded_cluster.nodes.pop();
+    }
+    let degraded = Workload::prepare(degraded_cluster, model, seed)
+        .map_err(plan_err)?;
+
+    let n = full.cluster.num_gpus();
+    let to_degraded: Vec<Option<usize>> = (0..n - 1).map(Some).collect();
+    let mut to_full: Vec<Option<usize>> = (0..n - 1).map(Some).collect();
+    to_full.push(None); // the returning GPU restores from checkpoint
+
+    let (mut current, _) = full.optimize(batch).map_err(plan_err)?;
+    let mut t = Table::new(
+        &format!(
+            "Elastic re-planning: {model} @ {batch}, planner \
+             {}, cluster {}",
+            planner.name(),
+            full.cluster.name
+        ),
+        &["event", "membership", "gpus", "state moved (GB)", "solve (s)",
+          "plan cache"],
+    );
+    for e in 0..events {
+        let losing = e % 2 == 0;
+        let (w, survivors, old_profile) = if losing {
+            (&degraded, &to_degraded, &full.profile)
+        } else {
+            (&full, &to_full, &degraded.profile)
+        };
+        let re = elastic::replan(
+            &current,
+            old_profile,
+            &w.ctx(batch),
+            survivors,
+            &*planner,
+            Some(&cache),
+        )
+        .map_err(plan_err)?;
+        t.add_row(vec![
+            e.to_string(),
+            String::from(if losing { "gpu lost" } else { "gpu restored" }),
+            w.cluster.num_gpus().to_string(),
+            format!("{:.2}", re.migration_bytes() / 1e9),
+            format!("{:.3}", re.solve_seconds),
+            String::from(if re.from_cache { "hit" } else { "miss" }),
+        ]);
+        current = re.assignment;
+    }
+    println!("{}", t.render());
+    println!(
+        "plan cache: {} hits / {} misses across {} events over 2 \
+         recurring memberships",
+        cache.hits(),
+        cache.misses(),
+        events
+    );
     Ok(())
 }
 
@@ -206,23 +395,7 @@ fn cmd_profile(argv: &[String]) -> Result<(), String> {
         return Ok(());
     }
     if a.has("real") {
-        let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
-        let samples =
-            crate::coordinator::real_profile::profile_layer_fwd(&dir, 5)
-                .map_err(|e| e.to_string())?;
-        let mut t = Table::new(
-            "Real layer_fwd latency via PJRT (CPU)",
-            &["microbatch", "mean", "min"],
-        );
-        for s in samples {
-            t.add_row(vec![
-                s.microbatch.to_string(),
-                crate::util::human_secs(s.mean_seconds),
-                crate::util::human_secs(s.min_seconds),
-            ]);
-        }
-        println!("{}", t.render());
-        return Ok(());
+        return profile_real(&a);
     }
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let w = Workload::prepare(
@@ -260,6 +433,36 @@ fn cmd_profile(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `profile --real`: time the AOT layer_fwd through PJRT.
+#[cfg(feature = "xla")]
+fn profile_real(a: &crate::cli::Args) -> Result<(), String> {
+    let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
+    let samples =
+        crate::coordinator::real_profile::profile_layer_fwd(&dir, 5)
+            .map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "Real layer_fwd latency via PJRT (CPU)",
+        &["microbatch", "mean", "min"],
+    );
+    for s in samples {
+        t.add_row(vec![
+            s.microbatch.to_string(),
+            crate::util::human_secs(s.mean_seconds),
+            crate::util::human_secs(s.min_seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn profile_real(_a: &crate::cli::Args) -> Result<(), String> {
+    Err("this binary was built without the `xla` feature; rebuild with \
+         `--features xla` for real PJRT profiling"
+        .into())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.push(opt("steps", "training steps", Some("50")));
@@ -343,6 +546,13 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_argv: &[String]) -> Result<(), String> {
+    Err("this binary was built without the `xla` feature; rebuild with \
+         `--features xla` to run real training over PJRT artifacts"
+        .into())
+}
+
 fn cmd_trace(argv: &[String]) -> Result<(), String> {
     let specs = vec![
         opt("hours", "trace length", Some("12")),
@@ -407,6 +617,41 @@ mod tests {
             main_with_args(sv(&["simulate", "--cluster", "a", "--model",
                                 "BERT-Large", "--batch", "64",
                                 "--system", "whale"])),
+            0
+        );
+    }
+
+    #[test]
+    fn plan_all_systems_runs() {
+        assert_eq!(
+            main_with_args(sv(&["plan", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "64",
+                                "--system", "all"])),
+            0
+        );
+    }
+
+    #[test]
+    fn plan_single_system_and_batch_list() {
+        assert_eq!(
+            main_with_args(sv(&["plan", "--cluster", "a", "--model",
+                                "BERT-Large", "--system", "cephalo-mb",
+                                "--batches", "32,64"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["plan", "--cluster", "a", "--system",
+                                "not-a-planner"])),
+            1
+        );
+    }
+
+    #[test]
+    fn elastic_churn_runs() {
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "64",
+                                "--events", "4"])),
             0
         );
     }

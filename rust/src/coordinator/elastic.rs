@@ -3,14 +3,22 @@
 //! vanish hour to hour).
 //!
 //! Given the old assignment + shard layout and a NEW cluster, this
-//! module re-runs the optimizer and computes a **state migration plan**:
-//! which contiguous byte ranges of the flat training state (16 B/param:
+//! module re-plans THROUGH the unified planner interface (any
+//! `plan::Planner` that yields an `Assignment`, memoized by an optional
+//! `plan::PlanCache`) and computes a **state migration plan**: which
+//! contiguous byte ranges of the flat training state (16 B/param:
 //! parameters + Adam moments) each surviving GPU must send/receive so
 //! the new shard layout is materialized with minimal traffic (only the
 //! deltas move; bytes already resident stay put).
+//!
+//! The cache is what makes elasticity cheap in practice: cloud
+//! memberships recur (Fig. 1's hourly availability oscillates between
+//! a few states), and a re-plan over a previously seen membership is a
+//! lookup instead of a DP solve.
 
 use crate::optimizer::{Assignment, PlanError};
 use crate::perfmodel::ClusterPerfProfile;
+use crate::plan::{PlanCache, PlanContext, Planner};
 use crate::sharding::ShardLayout;
 
 /// One transfer in the migration plan.
@@ -36,6 +44,11 @@ pub struct Replan {
     pub resident_elems: usize,
     /// Elements that move between GPUs or from the checkpoint.
     pub moved_elems: usize,
+    /// True when the plan came from the `PlanCache` (recurring
+    /// membership) instead of a fresh solve.
+    pub from_cache: bool,
+    /// Planning wall-clock (0 on cache hits).
+    pub solve_seconds: f64,
 }
 
 impl Replan {
@@ -105,21 +118,36 @@ pub fn plan_migration(
     (transfers, resident, moved)
 }
 
-/// Re-plan after cluster membership changed.
+/// Re-plan after cluster membership changed, through the unified
+/// planner interface.
 ///
 /// * `old_assignment` / `old_profile` — the running configuration.
-/// * `new_profile` — profile of the surviving/expanded cluster.
+/// * `new_ctx` — planner context for the surviving/expanded cluster at
+///   the (possibly unchanged) global batch.
 /// * `survivor_map[new_gpu]` — the old index of each new GPU (None for
 ///   newly added GPUs).
+/// * `planner` — any registered strategy that yields an `Assignment`
+///   (the Cephalo DP by default — see [`replan_default`]).
+/// * `cache` — optional memoization; recurring memberships hit.
 pub fn replan(
     old_assignment: &Assignment,
     old_profile: &ClusterPerfProfile,
-    new_profile: &ClusterPerfProfile,
+    new_ctx: &PlanContext<'_>,
     survivor_map: &[Option<usize>],
-    batch: usize,
+    planner: &dyn Planner,
+    cache: Option<&PlanCache>,
 ) -> Result<Replan, PlanError> {
-    let (assignment, _) =
-        crate::optimizer::DpOptimizer::default().solve(new_profile, batch)?;
+    let outcome = match cache {
+        Some(c) => c.get_or_plan(planner, new_ctx)?,
+        None => planner.plan(new_ctx)?,
+    };
+    let assignment = outcome.assignment.ok_or_else(|| {
+        PlanError::Internal(format!(
+            "planner '{}' yields no per-GPU assignment; elastic \
+             re-planning needs one",
+            outcome.planner
+        ))
+    })?;
     // Flat state layouts (in elements) from the ratio vectors; use the
     // parameter count as the flat length (moments scale with it).
     let total = old_profile.total_params as usize;
@@ -137,7 +165,27 @@ pub fn replan(
         transfers,
         resident_elems,
         moved_elems,
+        from_cache: outcome.diagnostics.cache_hit,
+        solve_seconds: outcome.diagnostics.solve_seconds,
     })
+}
+
+/// [`replan`] with the default Cephalo DP planner and no cache — the
+/// drop-in for the old signature.
+pub fn replan_default(
+    old_assignment: &Assignment,
+    old_profile: &ClusterPerfProfile,
+    new_ctx: &PlanContext<'_>,
+    survivor_map: &[Option<usize>],
+) -> Result<Replan, PlanError> {
+    replan(
+        old_assignment,
+        old_profile,
+        new_ctx,
+        survivor_map,
+        &crate::plan::CephaloPlanner::default(),
+        None,
+    )
 }
 
 #[cfg(test)]
@@ -224,10 +272,11 @@ mod tests {
         let survivor_map: Vec<Option<usize>> =
             vec![Some(0), Some(1), Some(3), Some(4), Some(5), Some(6),
                  Some(7)];
-        let re = replan(&old_asg, &full.profile, &small.profile,
-                        &survivor_map, 64)
+        let re = replan_default(&old_asg, &full.profile, &small.ctx(64),
+                                &survivor_map)
             .expect("replan feasible");
         assert_eq!(re.assignment.global_batch(), 64);
+        assert!(!re.from_cache);
         assert!(re.moved_elems > 0, "A6000's ~40% state share must move");
         assert!(re.migration_bytes() > 0.0);
         // Conservation.
@@ -235,5 +284,45 @@ mod tests {
             re.resident_elems + re.moved_elems,
             full.profile.total_params as usize
         );
+    }
+
+    #[test]
+    fn replan_on_unchanged_cluster_is_served_from_cache() {
+        // Acceptance: an elastic re-plan over a membership the cache
+        // has already seen is a lookup, not a solve.
+        let planner = crate::plan::CephaloPlanner::default();
+        let cache = crate::plan::PlanCache::new();
+        let full = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let (old_asg, _) = full.optimize(64).unwrap();
+        let survivors: Vec<Option<usize>> = (0..8).map(Some).collect();
+
+        let first = replan(&old_asg, &full.profile, &full.ctx(64),
+                           &survivors, &planner, Some(&cache))
+            .unwrap();
+        assert!(!first.from_cache);
+        assert_eq!(cache.misses(), 1);
+
+        let second = replan(&old_asg, &full.profile, &full.ctx(64),
+                            &survivors, &planner, Some(&cache))
+            .unwrap();
+        assert!(second.from_cache, "unchanged cluster must hit the cache");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(second.assignment, first.assignment);
+        assert_eq!(second.solve_seconds, 0.0);
+        // Identity membership + identical plan: nothing moves.
+        assert_eq!(second.moved_elems, first.moved_elems);
+    }
+
+    #[test]
+    fn replan_rejects_planners_without_assignments() {
+        let full = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let (old_asg, _) = full.optimize(64).unwrap();
+        let survivors: Vec<Option<usize>> = (0..8).map(Some).collect();
+        let err = replan(&old_asg, &full.profile, &full.ctx(64),
+                         &survivors, &crate::baselines::whale::Whale, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("no per-GPU assignment"), "{err}");
     }
 }

@@ -10,7 +10,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::runtime::XlaEngine;
 use crate::util::prng::Rng;

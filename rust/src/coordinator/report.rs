@@ -1,10 +1,10 @@
 //! Shared helpers for the benchmark binaries (`rust/benches/*.rs`):
-//! uniform "system -> throughput" evaluation used by every table bench.
+//! uniform "system -> throughput" evaluation, now routed through the
+//! unified `plan::PlannerRegistry` instead of per-system match arms.
 
-use crate::baselines::{self, BaselinePlanner};
 use crate::coordinator::Workload;
 use crate::optimizer::PlanError;
-use crate::sim::GaVariant;
+use crate::plan::{PlanOutcome, PlannerRegistry, SweepCell};
 
 /// The systems compared across the paper's tables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,6 +18,7 @@ pub enum SystemKind {
 }
 
 impl SystemKind {
+    /// Display name == registry name (`PlannerRegistry::get` input).
     pub fn name(&self) -> &'static str {
         match self {
             SystemKind::Cephalo => "Cephalo",
@@ -31,39 +32,52 @@ impl SystemKind {
 }
 
 /// Samples/s of `system` on the workload, or the planning error (OOM).
+/// Cephalo's number comes from the event simulator (the planner
+/// simulates its solved assignment), baselines from their own search —
+/// identical semantics to the pre-registry per-system match.
+///
+/// One-off convenience (builds a registry per call) for tests and
+/// spot checks; anything looping over a grid should run ONE
+/// `Workload::sweep` and read cells via [`find_cell`]/[`outcome_cell`],
+/// as the table benches do.
 pub fn throughput(w: &Workload, batch: usize, system: SystemKind)
     -> Result<f64, PlanError> {
-    match system {
-        SystemKind::Cephalo => {
-            let (asg, _) = w.optimize(batch)?;
-            let stats = w.simulate(&asg, GaVariant::LGA_CO_S_O);
-            Ok(stats.throughput)
-        }
-        SystemKind::MegatronHet => baselines::megatron::MegatronHet
-            .plan(&w.ctx(batch))
-            .map(|o| o.throughput),
-        SystemKind::FlashFlex => baselines::flashflex::FlashFlex
-            .plan(&w.ctx(batch))
-            .map(|o| o.throughput),
-        SystemKind::Whale => {
-            baselines::whale::Whale.plan(&w.ctx(batch)).map(|o| o.throughput)
-        }
-        SystemKind::Hap => {
-            baselines::hap::Hap.plan(&w.ctx(batch)).map(|o| o.throughput)
-        }
-        SystemKind::Fsdp => baselines::fsdp::FsdpBaseline
-            .plan(&w.ctx(batch))
-            .map(|o| o.throughput),
-    }
+    let registry = PlannerRegistry::with_defaults();
+    w.plan_with(&registry, system.name(), batch, None)
+        .map(|o| o.throughput)
 }
 
 /// "6.38" or "OOM" — the paper's table cell format.
 pub fn cell(w: &Workload, batch: usize, system: SystemKind) -> String {
     match throughput(w, batch, system) {
         Ok(t) => format!("{t:.2}"),
-        Err(PlanError::OutOfMemory { .. }) => "OOM".to_string(),
+        Err(e) if e.is_oom() => "OOM".to_string(),
         Err(_) => "-".to_string(),
     }
+}
+
+/// The same cell format for a sweep result (lets benches run ONE
+/// parallel `Workload::sweep` and format all cells from it).
+pub fn outcome_cell(result: &Result<PlanOutcome, PlanError>) -> String {
+    match result {
+        Ok(o) => format!("{:.2}", o.throughput),
+        Err(e) if e.is_oom() => "OOM".to_string(),
+        Err(_) => "-".to_string(),
+    }
+}
+
+/// Find one sweep cell by (planner, batch).
+pub fn find_cell<'a>(
+    cells: &'a [SweepCell],
+    system: SystemKind,
+    batch: usize,
+) -> &'a SweepCell {
+    cells
+        .iter()
+        .find(|c| c.planner == system.name() && c.batch == batch)
+        .unwrap_or_else(|| {
+            panic!("no sweep cell for {} @{batch}", system.name())
+        })
 }
 
 #[cfg(test)]
@@ -78,5 +92,23 @@ mod tests {
         assert_eq!(cell(&w, 128, SystemKind::Whale), "OOM");
         let c = cell(&w, 128, SystemKind::Cephalo);
         assert!(c.parse::<f64>().is_ok(), "{c}");
+    }
+
+    #[test]
+    fn sweep_cells_match_direct_throughput() {
+        let w = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+            .unwrap();
+        let registry = PlannerRegistry::with_defaults();
+        let cells = w.sweep(&registry, &[128], None);
+        let direct = throughput(&w, 128, SystemKind::FlashFlex).unwrap();
+        let from_sweep = find_cell(&cells, SystemKind::FlashFlex, 128)
+            .throughput()
+            .unwrap();
+        assert_eq!(direct, from_sweep);
+        assert_eq!(
+            outcome_cell(&find_cell(&cells, SystemKind::FlashFlex, 128)
+                .result),
+            format!("{direct:.2}")
+        );
     }
 }

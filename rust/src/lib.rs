@@ -16,11 +16,20 @@
 //!   profiler + performance models, the DP optimizer, the execution
 //!   simulator with per-device compute/comm/offload streams, the
 //!   heterogeneous baselines, and a real numeric training engine driving
-//!   AOT-compiled JAX computations through PJRT.
+//!   AOT-compiled JAX computations through PJRT (behind the `xla`
+//!   feature — see DESIGN.md §Runtime).
 //! * **L2 (`python/compile/model.py`)** — the transformer fwd/bwd in
 //!   JAX, lowered once to HLO text (`artifacts/`).
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (flash
 //!   attention, fused FFN, fused LayerNorm) called by L2.
+//!
+//! Every planning strategy — the Cephalo DP solver, the five baseline
+//! systems, and the §4.4 ablations — implements the [`plan::Planner`]
+//! trait and is reachable through [`plan::PlannerRegistry`]; solved
+//! plans are memoized in a content-addressed [`plan::PlanCache`] (what
+//! makes elastic re-planning over recurring memberships near-free) and
+//! grids of (planner, batch) solves run in parallel via
+//! [`plan::sweep`]. See DESIGN.md §Plan subsystem.
 
 pub mod benchkit;
 pub mod cli;
@@ -36,6 +45,7 @@ pub mod util;
 pub mod baselines;
 pub mod collectives;
 pub mod coordinator;
+pub mod plan;
 pub mod runtime;
 pub mod trainer;
 pub mod optimizer;

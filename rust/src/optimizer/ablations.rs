@@ -76,11 +76,12 @@ pub fn compute_balanced_only(
         let need = if *b > 0 { g.mem.predict(*b) } else { 0.0 }
             + even_ratio * total_state;
         if need > cap {
-            return Err(PlanError::OutOfMemory {
-                gpu: i,
-                needed: need,
-                capacity: cap,
-            });
+            return Err(PlanError::oom_in(
+                i,
+                need,
+                cap,
+                format!("cb: b_i={b}, even state"),
+            ));
         }
         per_gpu.push(GpuAssign {
             microbatch: *b,
@@ -134,11 +135,12 @@ pub fn fsdp_even(
         let cap = usable_capacity(g.capacity);
         let need = g.mem.predict(b) + even_ratio * total_state;
         if need > cap {
-            return Err(PlanError::OutOfMemory {
-                gpu: i,
-                needed: need,
-                capacity: cap,
-            });
+            return Err(PlanError::oom_in(
+                i,
+                need,
+                cap,
+                format!("even dp: b_i={b}, even state"),
+            ));
         }
     }
     let per_gpu: Vec<GpuAssign> = (0..n)

@@ -60,7 +60,11 @@ impl DpOptimizer {
         let q = if self.granularity > 0 {
             self.granularity
         } else {
-            (batch / 256).max(1)
+            // Auto: keep the table ~256 wide, but round DOWN to the
+            // largest divisor of `batch` so quantization never makes a
+            // feasible batch (e.g. 1000 -> naive q=3) report Infeasible.
+            let auto = (batch / 256).max(1);
+            (1..=auto).rev().find(|d| batch % d == 0).unwrap_or(1)
         };
         if batch % q != 0 {
             return Err(PlanError::Infeasible(format!(
@@ -82,11 +86,7 @@ impl DpOptimizer {
             m_max[i] = mq.min(bq);
         }
         if m_max.iter().all(|&m| m == 0) {
-            return Err(PlanError::OutOfMemory {
-                gpu: 0,
-                needed: f64::INFINITY,
-                capacity: 0.0,
-            });
+            return Err(PlanError::oom(0, f64::INFINITY, 0.0));
         }
 
         // k upper bound: sum of per-GPU max microbatches, batch, and the
@@ -416,18 +416,8 @@ mod tests {
 
     #[test]
     fn matches_brute_force_on_small_instances() {
-        use crate::cluster::{Node, Cluster};
-        use crate::cluster::catalog::find;
-        // 2-GPU toy cluster.
-        let cluster = Cluster {
-            name: "toy".into(),
-            nodes: vec![Node {
-                name: "n0".into(),
-                gpus: vec![find("T4").unwrap(), find("V100").unwrap()],
-                intra_bw_gbps: 64.0,
-            }],
-            inter_bw_gbps: 50.0,
-        };
+        // 2-GPU toy cluster (shared with the plan-parity tests).
+        let cluster = crate::testkit::tiny_cluster();
         let p = profile_for(&cluster, "BERT-Large");
         for batch in [4usize, 6, 9, 12] {
             let (asg, _) = DpOptimizer {
@@ -462,6 +452,26 @@ mod tests {
         assert!(stats.granularity >= 2);
         assert_eq!(asg.global_batch(), 512);
         asg.validate(&p, 512).unwrap();
+    }
+
+    #[test]
+    fn auto_granularity_handles_non_pow2_batches() {
+        // Regression: batch 1000 -> naive auto q = 1000/256 = 3 does
+        // not divide 1000, which used to return Infeasible. The auto
+        // pick must round down to a divisor (here 2).
+        let p = profile_for(&Cluster::cluster_a(), "BERT-Large");
+        let (asg, stats) = DpOptimizer::default()
+            .solve(&p, 1000)
+            .expect("non-power-of-two batch must stay feasible");
+        assert_eq!(asg.global_batch(), 1000);
+        assert!(stats.granularity > 1, "auto quantization should engage");
+        assert_eq!(1000 % stats.granularity, 0);
+        asg.validate(&p, 1000).unwrap();
+        // An explicit non-divisor granularity still errors loudly.
+        let err = DpOptimizer { granularity: 3, max_microbatch: 0 }
+            .solve(&p, 1000)
+            .unwrap_err();
+        assert!(err.to_string().contains("not divisible"));
     }
 
     #[test]

@@ -81,11 +81,7 @@ pub fn partition_state(
     // Sanity: compute alone must fit.
     for i in 0..n {
         if compute[i] > caps[i] {
-            return Err(PlanError::OutOfMemory {
-                gpu: i,
-                needed: compute[i],
-                capacity: caps[i],
-            });
+            return Err(PlanError::oom(i, compute[i], caps[i]));
         }
     }
 

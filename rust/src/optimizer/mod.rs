@@ -30,7 +30,7 @@ impl GpuAssign {
 }
 
 /// A full training configuration for the cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Assignment {
     pub per_gpu: Vec<GpuAssign>,
     /// Predicted single-layer latency T_f + T_b (Eqs. 2, 3).
@@ -81,11 +81,7 @@ impl Assignment {
             let used = compute + g.state_ratio * total_state;
             let cap = crate::memory::usable_capacity(m.capacity);
             if used > cap * (1.0 + 1e-9) {
-                return Err(PlanError::OutOfMemory {
-                    gpu: i,
-                    needed: used,
-                    capacity: cap,
-                });
+                return Err(PlanError::oom(i, used, cap));
             }
         }
         Ok(())
@@ -93,29 +89,136 @@ impl Assignment {
 }
 
 /// Planning failures.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlanError {
     /// No configuration satisfies the memory constraints — the paper's
-    /// "OOM" table entries.
-    OutOfMemory { gpu: usize, needed: f64, capacity: f64 },
+    /// "OOM" table entries. `config` describes WHICH candidate
+    /// configuration overflowed (microbatch / tp / dp ...), when the
+    /// planner knows it.
+    OutOfMemory {
+        gpu: usize,
+        needed: f64,
+        capacity: f64,
+        config: Option<String>,
+    },
     /// The batch cannot be divided under the constraints.
     Infeasible(String),
     Internal(String),
+    /// An error attributed to a named planner (`plan::Planner` impls
+    /// tag their failures so sweep/CLI output names the system).
+    Tagged { planner: String, inner: Box<PlanError> },
+}
+
+impl PlanError {
+    /// OOM without a known candidate configuration.
+    pub fn oom(gpu: usize, needed: f64, capacity: f64) -> PlanError {
+        PlanError::OutOfMemory { gpu, needed, capacity, config: None }
+    }
+
+    /// OOM of a specific candidate configuration (Table 4/5 entries).
+    pub fn oom_in(
+        gpu: usize,
+        needed: f64,
+        capacity: f64,
+        config: impl Into<String>,
+    ) -> PlanError {
+        PlanError::OutOfMemory {
+            gpu,
+            needed,
+            capacity,
+            config: Some(config.into()),
+        }
+    }
+
+    /// Attribute this error to `planner` (idempotent: re-tagging an
+    /// already-tagged error keeps the innermost attribution).
+    pub fn tagged(self, planner: &str) -> PlanError {
+        match self {
+            e @ PlanError::Tagged { .. } => e,
+            inner => PlanError::Tagged {
+                planner: planner.to_string(),
+                inner: Box::new(inner),
+            },
+        }
+    }
+
+    /// True for OOM, looking through planner tags.
+    pub fn is_oom(&self) -> bool {
+        matches!(self.untagged(), PlanError::OutOfMemory { .. })
+    }
+
+    /// The planner this error is attributed to, if any.
+    pub fn planner(&self) -> Option<&str> {
+        match self {
+            PlanError::Tagged { planner, .. } => Some(planner),
+            _ => None,
+        }
+    }
+
+    /// The error with any planner attribution stripped.
+    pub fn untagged(&self) -> &PlanError {
+        match self {
+            PlanError::Tagged { inner, .. } => inner.untagged(),
+            e => e,
+        }
+    }
 }
 
 impl std::fmt::Display for PlanError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            PlanError::OutOfMemory { gpu, needed, capacity } => write!(
-                f,
-                "OOM on gpu {gpu}: needs {:.2} GB > usable {:.2} GB",
-                needed / 1e9,
-                capacity / 1e9
-            ),
+            PlanError::OutOfMemory { gpu, needed, capacity, config } => {
+                match config {
+                    Some(c) => write!(
+                        f,
+                        "OOM on gpu {gpu} ({c}): needs {:.2} GB > \
+                         usable {:.2} GB",
+                        needed / 1e9,
+                        capacity / 1e9
+                    ),
+                    None => write!(
+                        f,
+                        "OOM on gpu {gpu}: needs {:.2} GB > usable \
+                         {:.2} GB",
+                        needed / 1e9,
+                        capacity / 1e9
+                    ),
+                }
+            }
             PlanError::Infeasible(s) => write!(f, "infeasible: {s}"),
             PlanError::Internal(s) => write!(f, "internal: {s}"),
+            PlanError::Tagged { planner, inner } => {
+                write!(f, "[{planner}] {inner}")
+            }
         }
     }
 }
 
 impl std::error::Error for PlanError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_planner_and_config() {
+        let e = PlanError::oom_in(3, 20e9, 10e9, "micro=16 x 2")
+            .tagged("Whale");
+        let s = e.to_string();
+        assert!(s.contains("[Whale]"), "{s}");
+        assert!(s.contains("micro=16 x 2"), "{s}");
+        assert!(s.contains("gpu 3"), "{s}");
+        assert!(e.is_oom());
+        assert_eq!(e.planner(), Some("Whale"));
+    }
+
+    #[test]
+    fn tagging_is_idempotent() {
+        let e = PlanError::Infeasible("x".into())
+            .tagged("HAP")
+            .tagged("sweep");
+        assert_eq!(e.planner(), Some("HAP"));
+        assert!(!e.is_oom());
+        assert_eq!(*e.untagged(), PlanError::Infeasible("x".into()));
+    }
+}

@@ -1,0 +1,220 @@
+//! Content-addressed plan memoization.
+//!
+//! A plan depends only on (cluster + fitted profile, model, batch,
+//! planner): all of it deterministic, so outcomes — including failures,
+//! OOM is a property of the inputs — can be cached. Keys fingerprint
+//! the cluster topology and the fitted `ClusterPerfProfile` contents
+//! (the profile is itself a deterministic function of the oracle seed,
+//! so it proxies the oracle too). The elastic coordinator keeps one
+//! cache across membership changes: returning to a previously seen
+//! membership makes re-planning near-free.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{PlanContext, PlanOutcome, Planner};
+use crate::cluster::Cluster;
+use crate::optimizer::PlanError;
+use crate::perfmodel::ClusterPerfProfile;
+
+use crate::util::fnv1a;
+
+/// Content fingerprint of everything a planner reads about the cluster:
+/// the topology (GPU specs, per-node grouping, bandwidths) and the
+/// fitted per-GPU latency/memory models + collective constants. Uses
+/// the canonical `Debug` rendering, which covers every field —
+/// including the profiled latency points fitted from the noisy oracle,
+/// so different oracle seeds fingerprint differently.
+pub fn fingerprint(cluster: &Cluster, profile: &ClusterPerfProfile) -> u64 {
+    let c = fnv1a(format!("{cluster:?}").as_bytes());
+    let p = fnv1a(format!("{profile:?}").as_bytes());
+    c ^ p.rotate_left(17)
+}
+
+/// Cache key: (cluster/profile fingerprint, model, batch, planner
+/// cache signature — name PLUS configuration, so two differently
+/// configured planners sharing a name never share entries).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub cluster_fingerprint: u64,
+    pub model: String,
+    pub batch: usize,
+    pub planner: String,
+}
+
+impl PlanKey {
+    /// Key for `ctx` + a planner's `cache_signature()`. Uses the
+    /// context's precomputed fingerprint — no profile re-render.
+    pub fn for_ctx(ctx: &PlanContext<'_>, signature: &str) -> PlanKey {
+        PlanKey {
+            cluster_fingerprint: ctx.cluster_fingerprint,
+            model: ctx.model.name.clone(),
+            batch: ctx.batch,
+            planner: signature.to_string(),
+        }
+    }
+}
+
+/// Thread-safe memoization of plan results (hits from `sweep` workers
+/// and the elastic coordinator are counted).
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Result<PlanOutcome, PlanError>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Serve from cache or run the planner and remember the result
+    /// (successes AND clean failures). Cache hits are marked in
+    /// `diagnostics.cache_hit` with `solve_seconds` zeroed. The solve
+    /// runs outside the lock, so concurrent misses on the same key may
+    /// both solve (last insert wins — results are deterministic, so
+    /// both are identical).
+    pub fn get_or_plan(
+        &self,
+        planner: &dyn Planner,
+        ctx: &PlanContext<'_>,
+    ) -> Result<PlanOutcome, PlanError> {
+        let key = PlanKey::for_ctx(ctx, &planner.cache_signature());
+        if let Some(found) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return match found {
+                Ok(outcome) => {
+                    let mut out = outcome.clone();
+                    out.diagnostics.cache_hit = true;
+                    out.diagnostics.solve_seconds = 0.0;
+                    Ok(out)
+                }
+                Err(e) => Err(e.clone()),
+            };
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = planner.plan(ctx);
+        self.map.lock().unwrap().insert(key, result.clone());
+        result
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Workload;
+    use crate::plan::planners::CephaloPlanner;
+    use crate::testkit::tiny_cluster;
+
+    fn workload() -> Workload {
+        Workload::prepare(tiny_cluster(), "BERT-Large", 42).unwrap()
+    }
+
+    #[test]
+    fn hit_reproduces_miss_exactly() {
+        let w = workload();
+        let cache = PlanCache::new();
+        let planner = CephaloPlanner::default();
+        let miss = cache.get_or_plan(&planner, &w.ctx(8)).unwrap();
+        let hit = cache.get_or_plan(&planner, &w.ctx(8)).unwrap();
+        assert!(!miss.diagnostics.cache_hit);
+        assert!(hit.diagnostics.cache_hit);
+        assert_eq!(hit.assignment, miss.assignment);
+        assert_eq!(hit.iter_latency, miss.iter_latency);
+        assert_eq!(hit.throughput, miss.throughput);
+        assert_eq!(hit.config, miss.config);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn failures_are_cached_too() {
+        // Llama 7B state (~107 GB) >> the tiny cluster: deterministic
+        // failure, so the second call must not re-solve.
+        let w = Workload::prepare(tiny_cluster(), "Llama 7B", 42).unwrap();
+        let cache = PlanCache::new();
+        let planner = CephaloPlanner::default();
+        let e1 = cache.get_or_plan(&planner, &w.ctx(8)).unwrap_err();
+        let e2 = cache.get_or_plan(&planner, &w.ctx(8)).unwrap_err();
+        assert_eq!(e1, e2);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn differently_configured_planners_do_not_collide() {
+        // Same name, different configuration (simulated vs predicted
+        // evaluation): cache_signature keeps their entries apart.
+        let w = workload();
+        let cache = PlanCache::new();
+        let simulated = CephaloPlanner::default();
+        let predicted =
+            CephaloPlanner { simulate: false, ..Default::default() };
+        let a = cache.get_or_plan(&simulated, &w.ctx(8)).unwrap();
+        let b = cache.get_or_plan(&predicted, &w.ctx(8)).unwrap();
+        assert!(
+            !b.diagnostics.cache_hit,
+            "distinct configs must not share a cache entry"
+        );
+        assert_eq!(cache.len(), 2);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        // Same underlying solve, different evaluation path.
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn keys_separate_batch_planner_and_cluster() {
+        let w = workload();
+        let k8 = PlanKey::for_ctx(&w.ctx(8), "Cephalo");
+        let k16 = PlanKey::for_ctx(&w.ctx(16), "Cephalo");
+        let kw = PlanKey::for_ctx(&w.ctx(8), "Whale");
+        assert_ne!(k8, k16);
+        assert_ne!(k8, kw);
+
+        // Different oracle seed -> different fitted profile -> different
+        // fingerprint, even with identical topology.
+        let w2 =
+            Workload::prepare(tiny_cluster(), "BERT-Large", 43).unwrap();
+        assert_ne!(
+            fingerprint(&w.cluster, &w.profile),
+            fingerprint(&w2.cluster, &w2.profile)
+        );
+        // Same seed reproduces the fingerprint.
+        let w3 =
+            Workload::prepare(tiny_cluster(), "BERT-Large", 42).unwrap();
+        assert_eq!(
+            fingerprint(&w.cluster, &w.profile),
+            fingerprint(&w3.cluster, &w3.profile)
+        );
+    }
+}

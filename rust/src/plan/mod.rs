@@ -1,0 +1,159 @@
+//! The plan subsystem: ONE interface over every planning strategy.
+//!
+//! Cephalo's contribution is decoupling compute distribution from
+//! training-state assignment and re-solving that joint plan as cluster
+//! conditions change. This module makes "a way to produce a plan" a
+//! first-class object so the coordinator, CLI, benches and the elastic
+//! re-planner all speak to the Cephalo DP solver, the five baseline
+//! systems and the ablation variants through the same trait:
+//!
+//! * [`Planner`] — name + `plan(ctx) -> PlanOutcome`; implemented by
+//!   [`planners::CephaloPlanner`], every `baselines::*` system, and the
+//!   §4.4 ablations ([`planners::CephaloCb`] / [`planners::CephaloMb`]
+//!   / [`planners::FsdpEven`]).
+//! * [`PlanContext`] — the shared inputs (cluster, model, fitted
+//!   profile, ground-truth oracle, global batch), promoted out of
+//!   `baselines::mod`.
+//! * [`PlanOutcome`] — the full [`Assignment`] (when the strategy
+//!   produces an FSDP-style per-GPU division) plus latency, throughput,
+//!   a human-readable configuration and solver diagnostics.
+//! * [`PlannerRegistry`] — name-based lookup ("cephalo", "whale",
+//!   "cephalo-mb", ...) so new strategies are one `register` away.
+//! * [`PlanCache`] — content-addressed memoization keyed on (cluster
+//!   fingerprint, model, batch, planner); elastic re-planning over a
+//!   previously seen membership is served from cache.
+//! * [`sweep`] — solve (planner x batch) grids in parallel with scoped
+//!   threads; the engine behind `cephalo plan --system all` and the
+//!   table benches.
+
+pub mod cache;
+pub mod planners;
+pub mod registry;
+pub mod sweep;
+
+pub use cache::{fingerprint, PlanCache, PlanKey};
+pub use planners::{CephaloCb, CephaloMb, CephaloPlanner, FsdpEven};
+pub use registry::PlannerRegistry;
+pub use sweep::{sweep, SweepCell};
+
+use crate::cluster::Cluster;
+use crate::model::TransformerSpec;
+use crate::optimizer::{Assignment, PlanError};
+use crate::perfmodel::{ClusterPerfProfile, ComputeOracle};
+
+/// Inputs shared by every planner. `oracle` must be `Sync` so contexts
+/// can be shared across the [`sweep`] worker threads.
+///
+/// Prefer [`PlanContext::new`] (or `Workload::ctx`, which memoizes):
+/// `cluster_fingerprint` MUST be `fingerprint(cluster, profile)` or
+/// the [`PlanCache`] will serve stale entries.
+#[derive(Clone, Copy)]
+pub struct PlanContext<'a> {
+    pub cluster: &'a Cluster,
+    pub model: &'a TransformerSpec,
+    pub profile: &'a ClusterPerfProfile,
+    pub oracle: &'a (dyn ComputeOracle + Sync),
+    pub batch: usize,
+    /// Content fingerprint of (cluster, profile), precomputed so cache
+    /// lookups are a hash probe instead of an O(profile) re-render.
+    pub cluster_fingerprint: u64,
+}
+
+impl<'a> PlanContext<'a> {
+    pub fn new(
+        cluster: &'a Cluster,
+        model: &'a TransformerSpec,
+        profile: &'a ClusterPerfProfile,
+        oracle: &'a (dyn ComputeOracle + Sync),
+        batch: usize,
+    ) -> PlanContext<'a> {
+        PlanContext {
+            cluster,
+            model,
+            profile,
+            oracle,
+            batch,
+            cluster_fingerprint: fingerprint(cluster, profile),
+        }
+    }
+}
+
+/// Solver diagnostics carried by every outcome (Table 7 reporting and
+/// the cache/elastic instrumentation).
+#[derive(Debug, Clone, Default)]
+pub struct PlanDiagnostics {
+    /// Wall-clock planning time (zero when served from cache).
+    pub solve_seconds: f64,
+    /// DP states visited (Cephalo) — 0 for search-based baselines.
+    pub states_visited: u64,
+    /// DP transitions relaxed (Cephalo) — 0 for baselines.
+    pub transitions: u64,
+    /// Candidate configurations evaluated by search-based planners.
+    pub candidates: u64,
+    /// True when this outcome was served from a [`PlanCache`].
+    pub cache_hit: bool,
+}
+
+/// A planner's chosen configuration and its predicted performance.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    /// The planner that produced this outcome (`Planner::name`).
+    pub planner: String,
+    /// Predicted end-to-end iteration latency (seconds).
+    pub iter_latency: f64,
+    /// Predicted throughput (samples/second).
+    pub throughput: f64,
+    /// Human-readable description of the winning configuration.
+    pub config: String,
+    /// The full per-GPU compute/state division, for strategies that map
+    /// onto the FSDP-style `Assignment` (Cephalo, ablations, FSDP).
+    /// Pipeline/TP baselines (Megatron-Het, FlashFlex, HAP) and
+    /// replication (Whale) have no such division and return `None`.
+    pub assignment: Option<Assignment>,
+    pub diagnostics: PlanDiagnostics,
+}
+
+/// A strategy that turns a [`PlanContext`] into a [`PlanOutcome`].
+///
+/// Implementations must be `Send + Sync`: the registry shares them via
+/// `Arc` and [`sweep`] calls them from multiple threads. Errors should
+/// be tagged with the planner name (`PlanError::tagged`) so table cells
+/// and logs can attribute OOMs.
+pub trait Planner: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError>;
+
+    /// Cache discriminator. Two planner INSTANCES that can produce
+    /// different outcomes for the same context must return different
+    /// signatures, or the [`PlanCache`] will conflate them. The
+    /// default suits stateless planners; configurable ones must
+    /// include their configuration (see `CephaloPlanner`).
+    fn cache_signature(&self) -> String {
+        self.name().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::tiny_cluster;
+
+    #[test]
+    fn context_is_copy_and_sendable_across_threads() {
+        let holder = crate::coordinator::Workload::prepare(
+            tiny_cluster(),
+            "BERT-Large",
+            42,
+        )
+        .unwrap();
+        let ctx = holder.ctx(8);
+        let ctx2 = ctx; // Copy
+        let both = std::thread::scope(|s| {
+            let a = s.spawn(move || ctx.batch);
+            let b = s.spawn(move || ctx2.profile.num_gpus());
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        assert_eq!(both, (8, 2));
+    }
+}

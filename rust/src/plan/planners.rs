@@ -1,0 +1,229 @@
+//! `Planner` adapters for the Cephalo DP solver and the §4.4 ablation
+//! variants. (The five baseline systems implement the trait in their
+//! own modules under `baselines::`.)
+
+use std::time::Instant;
+
+use super::{PlanContext, PlanDiagnostics, PlanOutcome, Planner};
+use crate::optimizer::{ablations, Assignment, DpOptimizer, PlanError};
+use crate::perfmodel::CollectiveModel;
+use crate::sim::cephalo::simulate_assignment;
+use crate::sim::GaVariant;
+
+/// The full Cephalo system: DP compute division + greedy state
+/// partition, evaluated on the event simulator under the complete
+/// gradient-accumulation ladder (LGA + CO + S + O) — the same numbers
+/// the paper's tables report for "Cephalo".
+#[derive(Debug, Clone)]
+pub struct CephaloPlanner {
+    pub opts: DpOptimizer,
+    /// Evaluate the solved assignment on the event simulator (default).
+    /// When false the outcome carries the optimizer's Eqs.-2/3
+    /// prediction instead — the Fig.-10 "predicted" side.
+    pub simulate: bool,
+    pub variant: GaVariant,
+}
+
+impl Default for CephaloPlanner {
+    fn default() -> Self {
+        Self {
+            opts: DpOptimizer::default(),
+            simulate: true,
+            variant: GaVariant::LGA_CO_S_O,
+        }
+    }
+}
+
+impl Planner for CephaloPlanner {
+    fn name(&self) -> &'static str {
+        "Cephalo"
+    }
+
+    fn cache_signature(&self) -> String {
+        format!(
+            "Cephalo/g={}/mm={}/sim={}/{:?}",
+            self.opts.granularity,
+            self.opts.max_microbatch,
+            self.simulate,
+            self.variant
+        )
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
+        let (asg, stats) = self
+            .opts
+            .solve(ctx.profile, ctx.batch)
+            .map_err(|e| e.tagged(self.name()))?;
+        let (iter_latency, throughput) = if self.simulate {
+            let collective = CollectiveModel::from_cluster(ctx.cluster);
+            let sim = simulate_assignment(
+                ctx.model,
+                ctx.oracle,
+                &collective,
+                &asg,
+                self.variant,
+            );
+            (sim.latency, sim.throughput)
+        } else {
+            (asg.iter_latency, asg.throughput())
+        };
+        let batches: Vec<usize> =
+            asg.per_gpu.iter().map(|g| g.batch()).collect();
+        Ok(PlanOutcome {
+            planner: self.name().into(),
+            iter_latency,
+            throughput,
+            config: format!("b={batches:?}"),
+            assignment: Some(asg),
+            diagnostics: PlanDiagnostics {
+                solve_seconds: t0.elapsed().as_secs_f64(),
+                states_visited: stats.states_visited,
+                transitions: stats.transitions,
+                candidates: 0,
+                cache_hit: false,
+            },
+        })
+    }
+}
+
+/// Shared tail for the ablation adapters: wrap a solved `Assignment`
+/// into an outcome carrying the Eqs.-2/3 prediction.
+fn ablation_outcome(
+    name: &'static str,
+    config: String,
+    asg: Assignment,
+    t0: Instant,
+) -> PlanOutcome {
+    PlanOutcome {
+        planner: name.into(),
+        iter_latency: asg.iter_latency,
+        throughput: asg.throughput(),
+        config,
+        assignment: Some(asg),
+        diagnostics: PlanDiagnostics {
+            solve_seconds: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        },
+    }
+}
+
+/// Cephalo-CB (§4.4): compute balancing only — speed-proportional
+/// batches, no accumulation, EVEN training state.
+pub struct CephaloCb;
+
+impl Planner for CephaloCb {
+    fn name(&self) -> &'static str {
+        "Cephalo-CB"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
+        let asg = ablations::compute_balanced_only(ctx.profile, ctx.batch)
+            .map_err(|e| e.tagged(self.name()))?;
+        Ok(ablation_outcome(
+            self.name(),
+            "speed-proportional b_i, even state".into(),
+            asg,
+            t0,
+        ))
+    }
+}
+
+/// Cephalo-MB (§4.4): memory balancing only — even batch, microbatch 1,
+/// UNEVEN state via the greedy partitioner.
+pub struct CephaloMb;
+
+impl Planner for CephaloMb {
+    fn name(&self) -> &'static str {
+        "Cephalo-MB"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
+        let asg = ablations::memory_balanced_only(ctx.profile, ctx.batch)
+            .map_err(|e| e.tagged(self.name()))?;
+        Ok(ablation_outcome(
+            self.name(),
+            "even b_i, m=1, greedy state".into(),
+            asg,
+            t0,
+        ))
+    }
+}
+
+/// The even-everything FSDP plan on Cephalo's own memory model — the
+/// Fig.-7 "FSDP" ablation row (distinct from `baselines::fsdp`, which
+/// models the PyTorch allocator).
+pub struct FsdpEven;
+
+impl Planner for FsdpEven {
+    fn name(&self) -> &'static str {
+        "FSDP-even"
+    }
+
+    fn plan(&self, ctx: &PlanContext<'_>)
+        -> Result<PlanOutcome, PlanError> {
+        let t0 = Instant::now();
+        let asg = ablations::fsdp_even(ctx.profile, ctx.batch)
+            .map_err(|e| e.tagged(self.name()))?;
+        Ok(ablation_outcome(
+            self.name(),
+            "even b_i, no accumulation, even state".into(),
+            asg,
+            t0,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::Workload;
+
+    #[test]
+    fn cephalo_adapter_matches_direct_solve_byte_for_byte() {
+        let w =
+            Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+                .unwrap();
+        let direct = DpOptimizer::default().solve(&w.profile, 128).unwrap().0;
+        let out = CephaloPlanner::default().plan(&w.ctx(128)).unwrap();
+        assert_eq!(out.assignment.as_ref(), Some(&direct));
+        assert!(out.diagnostics.transitions > 0);
+        assert!(!out.diagnostics.cache_hit);
+    }
+
+    #[test]
+    fn predicted_vs_simulated_within_model_error() {
+        // Fig. 10: prediction tracks the simulator within ~15%.
+        let w =
+            Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+                .unwrap();
+        let sim = CephaloPlanner::default().plan(&w.ctx(128)).unwrap();
+        let pred = CephaloPlanner {
+            simulate: false,
+            ..Default::default()
+        }
+        .plan(&w.ctx(128))
+        .unwrap();
+        let rel =
+            (sim.iter_latency - pred.iter_latency).abs() / sim.iter_latency;
+        assert!(rel < 0.15, "sim {} pred {}", sim.iter_latency,
+                pred.iter_latency);
+    }
+
+    #[test]
+    fn ablation_adapters_tag_their_errors() {
+        let w = Workload::prepare(Cluster::cluster_a(), "GPT 2.7B", 42)
+            .unwrap();
+        let err = CephaloCb.plan(&w.ctx(256)).unwrap_err();
+        assert_eq!(err.planner(), Some("Cephalo-CB"));
+        assert!(err.is_oom(), "{err}");
+        let ok = CephaloMb.plan(&w.ctx(256)).unwrap();
+        assert_eq!(ok.assignment.unwrap().global_batch(), 256);
+    }
+}

@@ -1,0 +1,162 @@
+//! Name-based planner lookup: every strategy the repo implements —
+//! Cephalo, the five baseline systems, and the ablation variants — is
+//! reachable through `PlannerRegistry::get("name")`, so the CLI,
+//! benches and the elastic coordinator never hardwire a planner list.
+
+use std::sync::Arc;
+
+use super::planners::{CephaloCb, CephaloMb, CephaloPlanner, FsdpEven};
+use super::Planner;
+use crate::baselines;
+
+/// Ordered collection of planners with normalized-name lookup.
+pub struct PlannerRegistry {
+    entries: Vec<Arc<dyn Planner>>,
+}
+
+/// Lookup normalization: case-insensitive, punctuation-insensitive
+/// ("Megatron-Het" == "megatron_het" == "megatronhet").
+fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+impl PlannerRegistry {
+    /// An empty registry (register your own strategies).
+    pub fn new() -> PlannerRegistry {
+        PlannerRegistry { entries: Vec::new() }
+    }
+
+    /// Every planner the repo ships: Cephalo (DP), the five baselines,
+    /// and the three ablation variants, in table order.
+    pub fn with_defaults() -> PlannerRegistry {
+        let mut r = PlannerRegistry::new();
+        r.register(Arc::new(CephaloPlanner::default()));
+        r.register(Arc::new(baselines::megatron::MegatronHet));
+        r.register(Arc::new(baselines::flashflex::FlashFlex));
+        r.register(Arc::new(baselines::whale::Whale));
+        r.register(Arc::new(baselines::hap::Hap));
+        r.register(Arc::new(baselines::fsdp::FsdpBaseline));
+        r.register(Arc::new(CephaloCb));
+        r.register(Arc::new(CephaloMb));
+        r.register(Arc::new(FsdpEven));
+        r
+    }
+
+    /// Add (or shadow) a planner. Later registrations win lookups for
+    /// the same normalized name.
+    pub fn register(&mut self, planner: Arc<dyn Planner>) {
+        self.entries.push(planner);
+    }
+
+    /// Look up by name: exact normalized match first, then substring
+    /// match ("megatron" -> "Megatron-Het"). Later registrations
+    /// shadow earlier ones on exact ties. The substring fallback
+    /// requires at least 4 characters so short typos (an "al" for
+    /// "all", a stray "a") error instead of resolving to whatever
+    /// name happens to contain them.
+    pub fn get(&self, name: &str) -> Option<Arc<dyn Planner>> {
+        let want = normalize(name);
+        if want.is_empty() {
+            return None;
+        }
+        if let Some(p) = self
+            .entries
+            .iter()
+            .rev()
+            .find(|p| normalize(p.name()) == want)
+        {
+            return Some(Arc::clone(p));
+        }
+        if want.len() < 4 {
+            return None;
+        }
+        self.entries
+            .iter()
+            .find(|p| normalize(p.name()).contains(&want))
+            .map(Arc::clone)
+    }
+
+    /// Registered display names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|p| p.name()).collect()
+    }
+
+    /// All planners, in registration order (the `sweep` input).
+    pub fn planners(&self) -> &[Arc<dyn Planner>] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for PlannerRegistry {
+    /// Empty, matching `new()` (Rust convention). The fully populated
+    /// registry is the EXPLICIT `with_defaults()`.
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_system() {
+        let r = PlannerRegistry::with_defaults();
+        assert_eq!(r.len(), 9);
+        for name in [
+            "cephalo",
+            "Megatron-Het",
+            "flashflex",
+            "whale",
+            "HAP",
+            "fsdp",
+            "cephalo-cb",
+            "Cephalo-MB",
+            "fsdp-even",
+        ] {
+            assert!(r.get(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn exact_match_beats_substring() {
+        let r = PlannerRegistry::with_defaults();
+        // "cephalo" must resolve to the DP planner, not Cephalo-CB.
+        assert_eq!(r.get("cephalo").unwrap().name(), "Cephalo");
+        assert_eq!(r.get("fsdp").unwrap().name(), "FSDP");
+        // Substring fallback still works.
+        assert_eq!(r.get("megatron").unwrap().name(), "Megatron-Het");
+    }
+
+    #[test]
+    fn unknown_names_miss() {
+        let r = PlannerRegistry::with_defaults();
+        assert!(r.get("alpa").is_none());
+        assert!(r.get("").is_none());
+        // Short fragments must not substring-resolve: "al" (a typo'd
+        // "all") would otherwise match "ceph[al]o".
+        assert!(r.get("al").is_none());
+        assert!(r.get("a").is_none());
+        // ...but short EXACT names still resolve.
+        assert_eq!(r.get("hap").unwrap().name(), "HAP");
+        // And Default is the empty registry, matching new().
+        assert!(PlannerRegistry::default().is_empty());
+    }
+
+    #[test]
+    fn normalization_is_punctuation_blind() {
+        assert_eq!(normalize("Megatron-Het"), "megatronhet");
+        assert_eq!(normalize("cephalo_mb"), "cephalomb");
+    }
+}

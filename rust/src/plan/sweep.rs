@@ -1,0 +1,162 @@
+//! Parallel (planner x batch) sweeps over scoped threads.
+//!
+//! Every solve is independent — same read-only context, different
+//! (planner, batch) — so the grid is embarrassingly parallel. Workers
+//! pull tasks off a shared atomic counter (work stealing), which keeps
+//! cores busy even though solve times vary by 100x between a baseline's
+//! config search and the 64-GPU DP table.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{PlanCache, PlanContext, PlanOutcome, Planner};
+use crate::optimizer::PlanError;
+
+/// One cell of a sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// `Planner::name` of the planner that produced this cell.
+    pub planner: String,
+    pub batch: usize,
+    pub result: Result<PlanOutcome, PlanError>,
+}
+
+impl SweepCell {
+    /// Throughput for feasible cells, `None` for planning failures.
+    pub fn throughput(&self) -> Option<f64> {
+        self.result.as_ref().ok().map(|o| o.throughput)
+    }
+}
+
+/// Solve every (planner, batch) pair in parallel and return the cells
+/// in deterministic planner-major order:
+/// `cells[p * batches.len() + b]` is `planners[p]` at `batches[b]`.
+///
+/// `base.batch` is ignored (overridden per cell). With a cache, cells
+/// are resolved through [`PlanCache::get_or_plan`], so repeated sweeps
+/// — e.g. elastic re-plans over recurring memberships — skip solved
+/// work.
+pub fn sweep(
+    base: &PlanContext<'_>,
+    planners: &[Arc<dyn Planner>],
+    batches: &[usize],
+    cache: Option<&PlanCache>,
+) -> Vec<SweepCell> {
+    let tasks: Vec<(usize, usize)> = (0..planners.len())
+        .flat_map(|p| batches.iter().map(move |&b| (p, b)))
+        .collect();
+    if tasks.is_empty() {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(tasks.len());
+    let next = AtomicUsize::new(0);
+    let cells: Vec<Mutex<Option<SweepCell>>> =
+        tasks.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let (p, batch) = tasks[i];
+                let ctx = PlanContext { batch, ..*base };
+                let planner = &*planners[p];
+                let result = match cache {
+                    Some(c) => c.get_or_plan(planner, &ctx),
+                    None => planner.plan(&ctx),
+                };
+                *cells[i].lock().unwrap() = Some(SweepCell {
+                    planner: planner.name().into(),
+                    batch,
+                    result,
+                });
+            });
+        }
+    });
+
+    cells
+        .into_iter()
+        .map(|c| {
+            c.into_inner()
+                .unwrap()
+                .expect("sweep worker left a cell unfilled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Workload;
+    use crate::plan::PlannerRegistry;
+    use crate::testkit::tiny_cluster;
+
+    #[test]
+    fn parallel_sweep_matches_serial_solves() {
+        let w = Workload::prepare(tiny_cluster(), "BERT-Large", 42)
+            .unwrap();
+        let reg = PlannerRegistry::with_defaults();
+        let batches = [4usize, 8];
+        let cells = sweep(&w.ctx(0), reg.planners(), &batches, None);
+        assert_eq!(cells.len(), reg.len() * batches.len());
+        for (p, planner) in reg.planners().iter().enumerate() {
+            for (b, &batch) in batches.iter().enumerate() {
+                let cell = &cells[p * batches.len() + b];
+                assert_eq!(cell.planner, planner.name());
+                assert_eq!(cell.batch, batch);
+                let serial = planner.plan(&w.ctx(batch));
+                match (&cell.result, &serial) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.throughput, b.throughput);
+                        assert_eq!(a.config, b.config);
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b),
+                    (a, b) => panic!(
+                        "{} @{batch}: parallel {a:?} vs serial {b:?}",
+                        planner.name()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_through_cache_records_misses_then_hits() {
+        let w = Workload::prepare(tiny_cluster(), "BERT-Large", 42)
+            .unwrap();
+        let reg = PlannerRegistry::with_defaults();
+        let cache = PlanCache::new();
+        let n = reg.len() as u64;
+        let first = sweep(&w.ctx(0), reg.planners(), &[8], Some(&cache));
+        assert_eq!(cache.misses(), n);
+        assert_eq!(cache.hits(), 0);
+        let second = sweep(&w.ctx(0), reg.planners(), &[8], Some(&cache));
+        assert_eq!(cache.misses(), n);
+        assert_eq!(cache.hits(), n);
+        for (a, b) in first.iter().zip(&second) {
+            match (&a.result, &b.result) {
+                (Ok(x), Ok(y)) => {
+                    assert!(!x.diagnostics.cache_hit);
+                    assert!(y.diagnostics.cache_hit);
+                    assert_eq!(x.throughput, y.throughput);
+                }
+                (Err(x), Err(y)) => assert_eq!(x, y),
+                (x, y) => panic!("{}: {x:?} vs {y:?}", a.planner),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let w = Workload::prepare(tiny_cluster(), "BERT-Large", 42)
+            .unwrap();
+        let reg = PlannerRegistry::with_defaults();
+        assert!(sweep(&w.ctx(0), reg.planners(), &[], None).is_empty());
+        assert!(sweep(&w.ctx(0), &[], &[8], None).is_empty());
+    }
+}

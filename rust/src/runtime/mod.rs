@@ -3,11 +3,15 @@
 //! training time — `make artifacts` is the only python invocation.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod service;
 
 pub use artifacts::{Entry, Manifest, ModelInfo};
+#[cfg(feature = "xla")]
 pub use engine::{GradOut, XlaEngine};
+#[cfg(feature = "xla")]
 pub use service::{ExecHandle, ExecService};
 
 use std::path::PathBuf;

@@ -12,7 +12,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use super::artifacts::Manifest;
 use super::engine::{GradOut, XlaEngine};

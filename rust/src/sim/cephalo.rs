@@ -149,6 +149,34 @@ pub fn simulate_assignment(
     }
 }
 
+/// Evaluate ANY planner's `PlanOutcome` on the shared event simulator.
+///
+/// Strategies that expose a full per-GPU `Assignment` (Cephalo, the
+/// ablations, FSDP) are re-simulated under `variant`, so comparisons
+/// across planners use ONE execution model instead of each planner's
+/// optimistic internal estimate. Pipeline/TP strategies without an
+/// assignment keep their own simulated latency (they already ran the
+/// pipeline simulator); their `per_gpu_mem` is reported empty.
+pub fn evaluate_outcome(
+    model: &TransformerSpec,
+    oracle: &dyn ComputeOracle,
+    collective: &CollectiveModel,
+    outcome: &crate::plan::PlanOutcome,
+    variant: GaVariant,
+) -> IterStats {
+    match &outcome.assignment {
+        Some(asg) => {
+            simulate_assignment(model, oracle, collective, asg, variant)
+        }
+        None => IterStats {
+            latency: outcome.iter_latency,
+            throughput: outcome.throughput,
+            per_gpu_mem: Vec::new(),
+            ag_count: 0,
+        },
+    }
+}
+
 /// Model FLOPs throughput (TFLOP/s) of an iteration — Fig. 6's metric.
 pub fn tflops(model: &TransformerSpec, batch: usize, latency: f64) -> f64 {
     model.iter_flops(batch, true) / latency / 1e12
@@ -215,6 +243,31 @@ mod tests {
                 slot.spec.mem_bytes()
             );
         }
+    }
+
+    #[test]
+    fn evaluate_outcome_resimulates_assignments() {
+        use crate::plan::{PlanContext, Planner};
+        let cluster = Cluster::cluster_a();
+        let model = find_model("BERT-Large").unwrap();
+        let oracle = SyntheticOracle::new(&cluster, &model, 42);
+        let profile = Profiler::default().profile(&cluster, &model, &oracle);
+        let coll = CollectiveModel::from_cluster(&cluster);
+        let ctx = PlanContext::new(&cluster, &model, &profile, &oracle, 128);
+        // With an assignment: evaluation == simulate_assignment.
+        let cephalo =
+            crate::plan::CephaloPlanner::default().plan(&ctx).unwrap();
+        let stats = evaluate_outcome(&model, &oracle, &coll, &cephalo,
+                                     GaVariant::LGA_CO_S_O);
+        assert_eq!(stats.latency, cephalo.iter_latency);
+        assert_eq!(stats.per_gpu_mem.len(), 8);
+        // Without one (Whale): the outcome's own numbers pass through.
+        let whale = crate::baselines::whale::Whale.plan(&ctx).unwrap();
+        assert!(whale.assignment.is_none());
+        let stats = evaluate_outcome(&model, &oracle, &coll, &whale,
+                                     GaVariant::LGA_CO_S_O);
+        assert_eq!(stats.latency, whale.iter_latency);
+        assert!(stats.per_gpu_mem.is_empty());
     }
 
     #[test]

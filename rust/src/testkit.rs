@@ -20,6 +20,24 @@
 
 use crate::util::prng::Rng;
 
+/// The canonical 2-GPU toy cluster (one T4 + one V100 on a single
+/// node): small enough for brute-force test oracles, heterogeneous
+/// enough to exercise uneven compute/state division. Shared by the DP
+/// brute-force comparison and the plan-subsystem parity tests.
+pub fn tiny_cluster() -> crate::cluster::Cluster {
+    use crate::cluster::catalog::find;
+    use crate::cluster::{Cluster, Node};
+    Cluster {
+        name: "tiny".into(),
+        nodes: vec![Node {
+            name: "n0".into(),
+            gpus: vec![find("T4").unwrap(), find("V100").unwrap()],
+            intra_bw_gbps: 64.0,
+        }],
+        inter_bw_gbps: 50.0,
+    }
+}
+
 /// Per-case generator handed to properties.
 pub struct Gen {
     rng: Rng,
@@ -124,19 +142,19 @@ where
     }
 }
 
-/// FNV-1a hash for stable name->seed derivation.
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+// Stable name->seed derivation shares the one FNV-1a in `util`.
+use crate::util::fnv1a;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tiny_cluster_shape() {
+        let c = tiny_cluster();
+        assert_eq!(c.num_gpus(), 2);
+        assert!(!c.is_homogeneous());
+    }
 
     #[test]
     fn passing_property_runs_all_cases() {

@@ -11,7 +11,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 const MAGIC: &[u8; 8] = b"CEPHCKPT";
 const VERSION: u32 = 1;
@@ -146,14 +146,7 @@ impl<'a> Reader<'a> {
     }
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+use crate::util::fnv1a;
 
 #[cfg(test)]
 mod tests {

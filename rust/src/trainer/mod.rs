@@ -21,19 +21,30 @@ pub mod adam;
 pub mod checkpoint;
 pub mod data;
 
+#[cfg(feature = "xla")]
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+#[cfg(feature = "xla")]
+use crate::util::error::{anyhow, Result};
 
 // Hot path uses the direct collectives (single-pass, no per-ring-step
 // copies); the segmented-ring implementations are property-tested
 // equivalent (collectives::tests) and exercised by the Fig.-12 bench.
+#[cfg(feature = "xla")]
 use crate::collectives::{direct_allgather, direct_reduce_scatter};
+#[cfg(feature = "xla")]
 use crate::optimizer::Assignment;
-use crate::runtime::{ExecService, Manifest};
+use crate::runtime::Manifest;
+#[cfg(feature = "xla")]
+use crate::runtime::ExecService;
+#[cfg(feature = "xla")]
 use crate::sharding::ShardLayout;
-use adam::{AdamConfig, AdamShard};
+use adam::AdamConfig;
+#[cfg(feature = "xla")]
+use adam::AdamShard;
+#[cfg(feature = "xla")]
 use data::Corpus;
 
 /// One worker's static role.
@@ -79,6 +90,7 @@ pub struct StepStats {
     pub wall_seconds: f64,
 }
 
+#[cfg(feature = "xla")]
 pub struct Trainer {
     service: ExecService,
     workers: Vec<WorkerSpec>,
@@ -94,6 +106,7 @@ pub struct Trainer {
     pub history: Vec<StepStats>,
 }
 
+#[cfg(feature = "xla")]
 impl Trainer {
     /// Build from explicit worker specs.
     pub fn new(
@@ -366,6 +379,7 @@ impl Trainer {
 
 /// One worker's full pass: decompose the batch into available
 /// microbatch sizes, run grad steps, sum gradients into a flat vector.
+#[cfg(feature = "xla")]
 #[allow(clippy::too_many_arguments)]
 fn worker_grad_pass(
     handle: &crate::runtime::ExecHandle,
@@ -429,6 +443,7 @@ pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(flat_len);
     for t in tensors {
@@ -437,6 +452,7 @@ fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
     out
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
     let mut out = Vec::with_capacity(sizes.len());
     let mut off = 0usize;
@@ -451,6 +467,7 @@ fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn flatten_roundtrip() {

@@ -1,0 +1,136 @@
+//! Minimal `anyhow` substitute for the offline dependency closure (the
+//! same role util/prng.rs plays for `rand`): an opaque, message-carrying
+//! error type with the `anyhow!` macro and the `Context` extension
+//! trait, covering exactly the subset the runtime/trainer code uses.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what permits the blanket
+//! `From<E: std::error::Error>` conversion powering `?`.
+
+/// Opaque error: a rendered message plus optional rendered cause chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: std::fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, `anyhow`-style (`context: cause`).
+    pub fn wrap<C: std::fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::anyhow!`: format a message into an [`Error`].
+/// Mirrors the real macro's arms: a format literal (with optional
+/// args), or any `Display` expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+// Make `use crate::util::error::anyhow;` work like the real crate's
+// `use anyhow::anyhow;` (macro_export hoists the macro to the root).
+pub use crate::anyhow;
+
+/// Drop-in for `anyhow::Context` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: std::fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: std::fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: std::fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "disk gone");
+        Err(e)?; // exercises the blanket From
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().contains("disk gone"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        assert_eq!(format!("{e:?}"), "bad value 42");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), String> = Err("cause".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: cause");
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+}

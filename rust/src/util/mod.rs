@@ -1,7 +1,9 @@
 //! Shared low-level utilities: PRNG, statistics, JSON, table formatting,
-//! and byte-size helpers. These substitute for the external crates
-//! (`rand`, `serde`, `prettytable`) that the offline build cannot use.
+//! error handling, and byte-size helpers. These substitute for the
+//! external crates (`rand`, `serde`, `prettytable`, `anyhow`) that the
+//! offline build cannot use.
 
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod stats;
@@ -27,6 +29,17 @@ pub fn human_secs(s: f64) -> String {
 pub fn ceil_div(a: usize, b: usize) -> usize {
     assert!(b > 0);
     a.div_ceil(b)
+}
+
+/// FNV-1a over a byte stream — the one hash shared by testkit seed
+/// derivation, checkpoint checksums, and plan-cache fingerprints.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 #[cfg(test)]

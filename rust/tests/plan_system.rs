@@ -1,0 +1,163 @@
+//! Plan-subsystem integration: every strategy behind one trait.
+//!
+//! Covers the refactor's contract surface: registry completeness, DP
+//! parity through the trait, cache hit == miss reproduction,
+//! `Assignment::validate` for every registered planner on the tiny
+//! test cluster, parallel-sweep determinism, and planner-attributed
+//! error messages.
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::optimizer::DpOptimizer;
+use cephalo::plan::{sweep, CephaloPlanner, PlanCache, Planner,
+                    PlannerRegistry};
+use cephalo::testkit::{check, tiny_cluster};
+
+fn tiny_workload(model: &str) -> Workload {
+    Workload::prepare(tiny_cluster(), model, 42).unwrap()
+}
+
+#[test]
+fn registry_reaches_cephalo_all_baselines_and_ablations() {
+    let r = PlannerRegistry::with_defaults();
+    // Acceptance: cephalo (DP), the five baselines and the ablation
+    // variants all resolve by name.
+    for name in [
+        "cephalo",
+        "megatron",
+        "flashflex",
+        "whale",
+        "hap",
+        "fsdp",
+        "cephalo-cb",
+        "cephalo-mb",
+        "fsdp-even",
+    ] {
+        let p = r.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert!(!p.name().is_empty());
+    }
+    assert_eq!(r.names().len(), 9);
+}
+
+#[test]
+fn dp_through_trait_is_byte_identical_to_direct_call() {
+    let w = tiny_workload("BERT-Large");
+    for batch in [4usize, 8, 12] {
+        let (direct, _) =
+            DpOptimizer::default().solve(&w.profile, batch).unwrap();
+        let through_trait = CephaloPlanner::default()
+            .plan(&w.ctx(batch))
+            .unwrap()
+            .assignment
+            .expect("cephalo always yields an assignment");
+        assert_eq!(through_trait, direct, "batch {batch}");
+    }
+}
+
+#[test]
+fn prop_cache_hits_reproduce_misses_exactly() {
+    let w = tiny_workload("BERT-Large");
+    // `dyn Planner` carries no unwind-safety bound; the property never
+    // observes a broken invariant across unwinds (registry is
+    // read-only, cache is Mutex/atomic).
+    let registry =
+        std::panic::AssertUnwindSafe(PlannerRegistry::with_defaults());
+    let cache = PlanCache::new();
+    check("cache-hit-parity", 40, |g| {
+        let batch = 2 * g.usize_in(1, 12); // even, fits the tiny pair
+        let name = *g.pick(&["cephalo", "whale", "fsdp", "cephalo-mb"]);
+        let planner = registry.get(name).unwrap();
+        let first = cache.get_or_plan(&*planner, &w.ctx(batch));
+        let second = cache.get_or_plan(&*planner, &w.ctx(batch));
+        match (first, second) {
+            (Ok(a), Ok(b)) => {
+                assert!(b.diagnostics.cache_hit);
+                assert_eq!(a.assignment, b.assignment);
+                assert_eq!(a.iter_latency, b.iter_latency);
+                assert_eq!(a.throughput, b.throughput);
+                assert_eq!(a.config, b.config);
+                assert_eq!(a.planner, b.planner);
+            }
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            (a, b) => panic!("{name} @{batch}: {a:?} vs {b:?}"),
+        }
+    });
+    assert!(cache.hits() > 0);
+}
+
+#[test]
+fn every_planner_assignment_validates_on_the_tiny_cluster() {
+    let w = tiny_workload("BERT-Large");
+    let registry = PlannerRegistry::with_defaults();
+    let batch = 8;
+    let mut validated = 0;
+    for planner in registry.planners() {
+        match planner.plan(&w.ctx(batch)) {
+            Ok(out) => {
+                assert!(out.throughput > 0.0, "{}", planner.name());
+                if let Some(asg) = &out.assignment {
+                    asg.validate(&w.profile, batch).unwrap_or_else(|e| {
+                        panic!("{}: invalid assignment: {e}",
+                               planner.name())
+                    });
+                }
+            }
+            Err(e) => {
+                // Clean, attributed planning failures are acceptable
+                // (a tiny 2-GPU cluster is hostile to pipelining).
+                assert_eq!(e.planner(), Some(planner.name()), "{e}");
+            }
+        }
+        if planner
+            .plan(&w.ctx(batch))
+            .ok()
+            .and_then(|o| o.assignment)
+            .is_some()
+        {
+            validated += 1;
+        }
+    }
+    // At least the FSDP-division family must produce assignments.
+    assert!(validated >= 4, "only {validated} planners yielded \
+                             assignments");
+}
+
+#[test]
+fn sweep_grid_is_deterministic_and_ordered() {
+    let w = tiny_workload("BERT-Large");
+    let registry = PlannerRegistry::with_defaults();
+    let batches = [4usize, 8, 16];
+    let a = sweep(&w.ctx(0), registry.planners(), &batches, None);
+    let b = sweep(&w.ctx(0), registry.planners(), &batches, None);
+    assert_eq!(a.len(), registry.len() * batches.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.planner, y.planner);
+        assert_eq!(x.batch, y.batch);
+        assert_eq!(x.throughput(), y.throughput());
+    }
+    // Planner-major order matches the registry.
+    for (i, cell) in a.iter().enumerate() {
+        assert_eq!(cell.planner,
+                   registry.planners()[i / batches.len()].name());
+        assert_eq!(cell.batch, batches[i % batches.len()]);
+    }
+}
+
+#[test]
+fn oom_errors_name_planner_and_configuration() {
+    // Whale fully replicates GPT 2.7B's ~44 GB state: guaranteed OOM on
+    // cluster A, and the error must say who and which config.
+    let w = Workload::prepare(Cluster::cluster_a(), "GPT 2.7B", 42)
+        .unwrap();
+    let registry = PlannerRegistry::with_defaults();
+    let err = registry
+        .get("whale")
+        .unwrap()
+        .plan(&w.ctx(128))
+        .unwrap_err();
+    assert!(err.is_oom(), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("[Whale]"), "{msg}");
+    assert!(msg.contains("replicated state"), "{msg}");
+    assert!(msg.contains("GB"), "{msg}");
+}

@@ -5,6 +5,10 @@
 //! Requires `make artifacts`; tests no-op with a loud marker otherwise
 //! (CI always builds artifacts first).
 
+// The PJRT runtime only exists behind the `xla` feature (see DESIGN.md
+// §Runtime); without it this whole test binary compiles to nothing.
+#![cfg(feature = "xla")]
+
 use std::sync::Arc;
 
 use cephalo::runtime::{artifacts_available, default_artifacts_dir,
