@@ -25,6 +25,7 @@ use std::path::PathBuf;
 
 use cephalo::cluster::Cluster;
 use cephalo::coordinator::Workload;
+use cephalo::runtime::Manifest;
 use cephalo::trainer::adam::AdamConfig;
 use cephalo::trainer::{TrainConfig, Trainer, WorkerSpec};
 
@@ -97,7 +98,9 @@ fn main() -> anyhow::Result<()> {
         log_every: 10,
     };
     let mut trainer = Trainer::new(&dir, workers, cfg)?;
-    let m = trainer.manifest().model.clone();
+    let m = Manifest::load(&dir)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .model;
     println!(
         "\nmodel: {} params (d={} L={} V={} seq={}), pallas={}",
         m.num_params, m.d_model, m.n_layers, m.vocab, m.seq_len,

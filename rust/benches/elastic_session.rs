@@ -1,0 +1,99 @@
+//! Elastic-session bench: live steps/sec across a churn trace on the
+//! native backend, and the PlanCache payoff — cache-hit re-plans vs
+//! cold DP solves — measured through `benchkit`.
+
+use std::sync::Arc;
+
+use cephalo::benchkit::Bencher;
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::session::{Session, SessionConfig};
+use cephalo::coordinator::{elastic, Workload};
+use cephalo::plan::{CephaloPlanner, PlanCache, Planner};
+use cephalo::util::tablefmt::Table;
+
+fn main() {
+    let mut b = Bencher::new(1, 7);
+
+    // ---- Re-plan latency: cold solve vs recurring-membership hit ----
+    let planner = CephaloPlanner::default();
+    let full = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+        .expect("workload");
+    let (asg, _) = full.optimize(64).expect("plan");
+    let survivors: Vec<Option<usize>> = (0..8).map(Some).collect();
+
+    let cold = b
+        .bench("replan: cold DP solve", || {
+            // Fresh cache every iteration -> every re-plan solves.
+            let cache = PlanCache::new();
+            elastic::replan(&asg, &full.profile, &full.ctx(64),
+                            &survivors, &planner, Some(&cache))
+                .expect("replan")
+                .solve_seconds
+        })
+        .mean_s;
+
+    let warm_cache = PlanCache::new();
+    elastic::replan(&asg, &full.profile, &full.ctx(64), &survivors,
+                    &planner, Some(&warm_cache))
+        .expect("warm");
+    let hit = b
+        .bench("replan: recurring membership (cache hit)", || {
+            let re = elastic::replan(&asg, &full.profile, &full.ctx(64),
+                                     &survivors, &planner,
+                                     Some(&warm_cache))
+                .expect("replan");
+            assert!(re.from_cache);
+            re.moved_elems
+        })
+        .mean_s;
+
+    // ---- Live session: steps/sec across a 6-event churn trace ----
+    let planner: Arc<dyn Planner> = Arc::new(CephaloPlanner::default());
+    let cfg = SessionConfig {
+        batch: 64,
+        steps_per_event: 3,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut session =
+        Session::new(Cluster::cluster_a(), Arc::clone(&planner), cfg)
+            .expect("session");
+    let t0 = std::time::Instant::now();
+    let reports = session.run(6).expect("live session");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "Live elastic session across the churn trace (native backend)",
+        &["event", "gpus", "plan", "state moved (GB)", "sim steps/s"],
+    );
+    for r in &reports {
+        t.add_row(vec![
+            r.event.to_string(),
+            r.gpus.to_string(),
+            String::from(if r.from_cache { "hit" } else { "solve" }),
+            format!("{:.2}", r.migration_bytes / 1e9),
+            format!("{:.2}", r.steps_per_sec),
+        ]);
+    }
+    println!("{}", t.render());
+    let steps = session.trainer().history.len();
+    println!(
+        "{steps} live steps over {} events in {wall:.2}s wall \
+         ({:.1} steps/s executed); plan cache {} hits / {} misses",
+        reports.len(),
+        steps as f64 / wall,
+        session.cache().hits(),
+        session.cache().misses()
+    );
+    println!("{}", b.render_markdown("Elastic re-plan latency"));
+
+    assert!(
+        hit < cold,
+        "cache hit ({hit:.6}s) should beat a cold solve ({cold:.6}s)"
+    );
+    assert!(
+        session.cache().hits() >= 1,
+        "recurring memberships should hit the cache"
+    );
+    println!("shape check: hit {hit:.2e}s < cold solve {cold:.2e}s  [ok]");
+}

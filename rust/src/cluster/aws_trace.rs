@@ -77,6 +77,23 @@ pub fn generate(seed: u64, hours: usize, profiles: &[TypeProfile])
     out
 }
 
+/// Fold one trace hour onto a cluster-membership size in
+/// `[min_gpus, max_gpus]`: the total obtainable instances across all
+/// types, folded into the membership range. Deterministic, and —
+/// because hourly availability oscillates between a handful of levels
+/// (Fig. 1) — recurring, which is what makes the elastic `PlanCache`
+/// pay off on a live session.
+pub fn membership_size(
+    hour: &HourSample,
+    min_gpus: usize,
+    max_gpus: usize,
+) -> usize {
+    assert!(min_gpus >= 1 && min_gpus <= max_gpus);
+    let total: u32 =
+        hour.available.iter().map(|(_, c)| *c).sum();
+    min_gpus + total as usize % (max_gpus - min_gpus + 1)
+}
+
 /// Fraction of hours with zero availability for `gpu`.
 pub fn unavailability_fraction(trace: &[HourSample], gpu: &str) -> f64 {
     let zero_hours = trace
@@ -137,6 +154,22 @@ mod tests {
         for h in &trace {
             assert_eq!(h.available.len(), p.len());
         }
+    }
+
+    #[test]
+    fn membership_sizes_stay_in_range_and_recur() {
+        let p = default_profiles();
+        let trace = generate(5, 40, &p);
+        let sizes: Vec<usize> =
+            trace.iter().map(|h| membership_size(h, 6, 8)).collect();
+        assert!(sizes.iter().all(|&s| (6..=8).contains(&s)));
+        // 40 events over 3 possible memberships: recurrence guaranteed,
+        // and the generator should actually exercise churn (≥2 sizes).
+        let distinct: std::collections::BTreeSet<_> =
+            sizes.iter().collect();
+        assert!(distinct.len() >= 2, "trace produced no churn: {sizes:?}");
+        // Degenerate single-size range collapses deterministically.
+        assert!(trace.iter().all(|h| membership_size(h, 4, 4) == 4));
     }
 
     #[test]

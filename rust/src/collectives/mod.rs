@@ -74,14 +74,20 @@ pub fn ring_allgather(shards: &[Vec<f32>], layout: &ShardLayout)
         assert_eq!(shard.len(), range.len());
         bufs[rank][range].copy_from_slice(shard);
     }
-    // Ring steps: rank r sends segment (r - s) mod n in step s.
+    // Ring steps: rank r sends segment (r - s) mod n in step s. A rank
+    // whose turn lands on an empty segment (an `r_i = 0` shard) still
+    // takes the step — it just forwards nothing, which is exactly what
+    // NCCL does with zero-byte chunks.
     for s in 0..n.saturating_sub(1) {
         // Compute sends first (synchronous step semantics).
         let sends: Vec<(usize, usize, Vec<f32>)> = (0..n)
-            .map(|r| {
+            .filter_map(|r| {
                 let seg = (r + n - s) % n;
                 let range = layout.range(seg);
-                (r, seg, bufs[r][range].to_vec())
+                if range.is_empty() {
+                    return None;
+                }
+                Some((r, seg, bufs[r][range].to_vec()))
             })
             .collect();
         for (r, seg, data) in sends {
@@ -104,12 +110,16 @@ pub fn ring_reduce_scatter(full: &[Vec<f32>], layout: &ShardLayout)
     let mut bufs: Vec<Vec<f32>> = full.to_vec();
     for s in 0..n.saturating_sub(1) {
         // Rank r sends segment (r - s - 1 + 2n) mod n, accumulated into
-        // the receiver's buffer.
+        // the receiver's buffer. Empty segments (`r_i = 0` ranks) pass
+        // through as zero-byte sends without touching any neighbor.
         let sends: Vec<(usize, usize, Vec<f32>)> = (0..n)
-            .map(|r| {
+            .filter_map(|r| {
                 let seg = (r + 2 * n - s - 1) % n;
                 let range = layout.range(seg);
-                (r, seg, bufs[r][range].to_vec())
+                if range.is_empty() {
+                    return None;
+                }
+                Some((r, seg, bufs[r][range].to_vec()))
             })
             .collect();
         for (r, seg, data) in sends {
@@ -268,5 +278,57 @@ mod tests {
         assert_eq!(full.len(), 8);
         assert_eq!(&full[..4], &[1.; 4]);
         assert_eq!(&full[4..], &[2.; 4]);
+    }
+
+    #[test]
+    fn single_survivor_layout_passes_through_the_ring() {
+        // Degenerate elastic layout: ALL state on one rank, every other
+        // rank `r_i = 0` — the N-1 ring steps must neither panic nor
+        // corrupt neighbors, and sums must stay exact.
+        let layout = ShardLayout::by_ratios(7, &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(layout.sizes(), vec![0, 7, 0, 0]);
+        let owned: Vec<f32> = (1..=7).map(|x| x as f32).collect();
+        let shards =
+            vec![Vec::new(), owned.clone(), Vec::new(), Vec::new()];
+        assert_eq!(ring_allgather(&shards, &layout), owned);
+        let full: Vec<Vec<f32>> =
+            (0..4).map(|r| vec![r as f32; 7]).collect();
+        let rs = ring_reduce_scatter(&full, &layout);
+        assert!(rs[0].is_empty() && rs[2].is_empty() && rs[3].is_empty());
+        assert_eq!(rs[1], vec![6.0; 7]); // 0 + 1 + 2 + 3, exactly
+    }
+
+    #[test]
+    fn prop_ring_matches_direct_on_empty_shard_layouts() {
+        // Satellite: the ring schedules against the direct reference
+        // over layouts where random ranks hold r_i = 0 (including the
+        // zero-length-vector corner).
+        check("ring-vs-direct-empty-shards", 120, |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(0, 300);
+            let layout =
+                ShardLayout::by_ratios(len, &g.sparse_ratios(n));
+            assert_eq!(layout.len(), len);
+
+            let shards = gen_shards(g, &layout);
+            assert_eq!(
+                ring_allgather(&shards, &layout),
+                direct_allgather(&shards, &layout),
+            );
+
+            let full: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_f32(len, 2.0)).collect();
+            let expect = direct_reduce_scatter(&full, &layout);
+            let got = ring_reduce_scatter(&full, &layout);
+            for (rank, (e, r)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(e.len(), r.len(), "rank {rank} shard size");
+                for (i, (a, b)) in e.iter().zip(r).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                        "rank {rank} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+        });
     }
 }

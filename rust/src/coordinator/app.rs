@@ -5,10 +5,11 @@ use std::sync::Arc;
 
 use crate::cli::{opt, parse, switch, usage, OptSpec};
 use crate::cluster::Cluster;
+use crate::coordinator::session::{Session, SessionConfig};
 use crate::coordinator::{elastic, Workload};
+use crate::exec::{NativeExecutor, StepTimeModel, SurrogateSpec};
 use crate::optimizer::PlanError;
 use crate::plan::{self, PlanCache, Planner, PlannerRegistry};
-#[cfg(feature = "xla")]
 use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
 use crate::util::tablefmt::{fmt_throughput, Table};
 
@@ -49,9 +50,11 @@ fn print_help() {
          parallel sweep\n  \
          optimize  solve the compute/state division for a workload\n  \
          simulate  throughput of cephalo and/or baselines on a cluster\n  \
-         elastic   simulate membership churn with cached re-planning\n  \
+         elastic   membership churn with cached re-planning; --live \
+         runs real\n            migration + training on the native \
+         backend\n  \
          profile   fit or measure performance models\n  \
-         train     run real training via the AOT artifacts (PJRT)\n  \
+         train     real numeric training (--backend native | pjrt)\n  \
          trace     generate the AWS availability trace (Fig. 1)\n  \
          help      this message\n\n\
          run `cephalo <command> --help` for options"
@@ -139,6 +142,19 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
 const TABLE_SYSTEMS: [&str; 6] = [
     "Cephalo", "Megatron-Het", "FlashFlex", "Whale", "HAP", "FSDP",
 ];
+
+/// Resolve a single `--planner <name>` against the registry.
+fn lookup_planner(
+    registry: &PlannerRegistry,
+    name: &str,
+) -> Result<Arc<dyn Planner>, String> {
+    registry.get(name).ok_or_else(|| {
+        format!(
+            "unknown planner '{name}'; known: {}",
+            registry.names().join(", ")
+        )
+    })
+}
 
 /// Resolve `--system <name|all>` against the registry.
 fn resolve_planners(
@@ -288,12 +304,19 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
                    Some("6")));
     specs.push(opt("planner", "registry planner used for re-planning",
                    Some("cephalo")));
+    specs.push(switch("live", "run a LIVE session: churn from the AWS \
+                               trace, real migration + training on the \
+                               native backend"));
+    specs.push(opt("steps", "training steps per event (--live)",
+                   Some("5")));
+    specs.push(opt("min-gpus", "smallest live membership (0 = auto)",
+                   Some("0")));
     let a = parse(argv, &specs)?;
     if a.has("help") {
         println!("{}", usage(
             "cephalo elastic",
-            "alternate losing/regaining a GPU, re-planning through the \
-             registry + plan cache each time",
+            "membership churn with cached re-planning; --live executes \
+             the migrations against a running native trainer",
             &specs,
         ));
         return Ok(());
@@ -302,19 +325,16 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     if cluster.num_gpus() < 2 {
         return Err("elastic demo needs at least 2 GPUs".into());
     }
+    if a.has("live") {
+        return cmd_elastic_live(&a, cluster);
+    }
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let events = a.get_usize("events").ok_or("bad --events")?;
     let model = a.get("model").unwrap();
     let seed = a.get_u64("seed").unwrap_or(42);
 
     let registry = PlannerRegistry::with_defaults();
-    let planner_name = a.get("planner").unwrap();
-    let planner = registry.get(planner_name).ok_or_else(|| {
-        format!(
-            "unknown planner '{planner_name}'; known: {}",
-            registry.names().join(", ")
-        )
-    })?;
+    let planner = lookup_planner(&registry, a.get("planner").unwrap())?;
     let cache = PlanCache::new();
 
     // Two recurring membership states: the full cluster, and the
@@ -379,6 +399,65 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
         cache.hits(),
         cache.misses(),
         events
+    );
+    Ok(())
+}
+
+/// `elastic --live`: a real end-to-end session — AWS-trace churn,
+/// registry+cache re-planning, state migration applied to resident
+/// shards, training resumed on the native backend.
+fn cmd_elastic_live(
+    a: &crate::cli::Args,
+    cluster: Cluster,
+) -> Result<(), String> {
+    let batch = a.get_usize("batch").ok_or("bad --batch")?;
+    let events = a.get_usize("events").ok_or("bad --events")?;
+    let steps = a.get_usize("steps").ok_or("bad --steps")?;
+    let registry = PlannerRegistry::with_defaults();
+    let planner = lookup_planner(&registry, a.get("planner").unwrap())?;
+    let cfg = SessionConfig {
+        model: a.get("model").unwrap().to_string(),
+        batch,
+        steps_per_event: steps,
+        seed: a.get_u64("seed").unwrap_or(42),
+        min_gpus: a.get_usize("min-gpus").unwrap_or(0),
+        ..Default::default()
+    };
+    let cluster_name = cluster.name.clone();
+    let mut session = Session::new(cluster, planner, cfg)
+        .map_err(|e| e.to_string())?;
+    let reports =
+        session.run(events).map_err(|e| e.to_string())?;
+
+    let mut t = Table::new(
+        &format!(
+            "Live elastic session: {} @ {batch} on cluster \
+             {cluster_name}, {steps} steps/event, backend {}",
+            a.get("model").unwrap(),
+            session.trainer().executor_name()
+        ),
+        &["event", "gpus", "plan", "solve (s)", "state moved (GB)",
+          "loss", "steps/s"],
+    );
+    for r in &reports {
+        t.add_row(vec![
+            r.event.to_string(),
+            r.gpus.to_string(),
+            String::from(if r.from_cache { "cache hit" } else { "solve" }),
+            format!("{:.3}", r.solve_seconds),
+            format!("{:.2}", r.migration_bytes / 1e9),
+            format!("{:.4}", r.mean_loss),
+            format!("{:.2}", r.steps_per_sec),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "plan cache: {} hits / {} misses; {} training steps survived \
+         {} membership changes",
+        session.cache().hits(),
+        session.cache().misses(),
+        session.trainer().history.len(),
+        reports.len()
     );
     Ok(())
 }
@@ -462,30 +541,29 @@ fn profile_real(_a: &crate::cli::Args) -> Result<(), String> {
         .into())
 }
 
-#[cfg(feature = "xla")]
 fn cmd_train(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
+    specs.push(opt("backend", "execution backend: native | pjrt",
+                   Some("native")));
     specs.push(opt("steps", "training steps", Some("50")));
     specs.push(opt("lr", "Adam learning rate", Some("0.001")));
-    specs.push(opt("artifacts", "artifacts directory", Some("artifacts")));
+    specs.push(opt("artifacts", "artifacts directory (pjrt backend)",
+                   Some("artifacts")));
     specs.push(opt("log-every", "log cadence", Some("10")));
     specs.push(opt("loss-csv", "write the loss curve CSV here", None));
     let a = parse(argv, &specs)?;
     if a.has("help") {
-        println!("{}", usage("cephalo train",
-                             "real training over PJRT artifacts", &specs));
+        println!("{}", usage(
+            "cephalo train",
+            "train for real: plan on the simulated cluster, execute the \
+             numeric FSDP pipeline on the chosen backend",
+            &specs,
+        ));
         return Ok(());
     }
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let steps = a.get_usize("steps").ok_or("bad --steps")?;
-    let dir = std::path::PathBuf::from(a.get("artifacts").unwrap());
-    if !dir.join("manifest.json").exists() {
-        return Err(format!(
-            "no artifacts at {} — run `make artifacts` first",
-            dir.display()
-        ));
-    }
 
     // Plan compute/state division on the simulated heterogeneous
     // cluster, then execute the REAL numerics on this host.
@@ -518,13 +596,34 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         corpus_branch: 4,
         log_every: a.get_usize("log-every").unwrap_or(10),
     };
-    let mut trainer =
-        Trainer::new(&dir, workers, cfg).map_err(|e| e.to_string())?;
+    let backend = a.get("backend").unwrap().to_string();
+    let mut trainer = match backend.as_str() {
+        "native" => {
+            // Simulated per-step durations from the same oracle the
+            // planner profiled, so logged steps/sec reflect the plan.
+            let timer =
+                StepTimeModel::from_oracle(&w.oracle, w.model.layers);
+            let exec = NativeExecutor::new(SurrogateSpec::default())
+                .with_timer(timer);
+            Trainer::from_executor(Box::new(exec), workers, cfg)
+                .map_err(|e| e.to_string())?
+        }
+        "pjrt" => {
+            pjrt_trainer(a.get("artifacts").unwrap(), workers, cfg)?
+        }
+        other => {
+            return Err(format!(
+                "unknown backend '{other}' (native | pjrt)"
+            ))
+        }
+    };
+    let flat_params: usize =
+        trainer.params().iter().map(Vec::len).sum();
     println!(
-        "model: {} params, corpus entropy {:.3} nats, ln(V) = {:.3}",
-        trainer.manifest().model.num_params,
-        trainer.corpus_entropy(),
-        (trainer.manifest().model.vocab as f64).ln()
+        "backend {}: {} params, corpus entropy {:.3} nats",
+        trainer.executor_name(),
+        flat_params,
+        trainer.corpus_entropy()
     );
     let history = trainer.run().map_err(|e| e.to_string())?;
     let first = history.first().map(|s| s.mean_loss).unwrap_or(0.0);
@@ -546,10 +645,31 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Stand up the PJRT-backed trainer (`--backend pjrt`).
+#[cfg(feature = "xla")]
+fn pjrt_trainer(
+    artifacts: &str,
+    workers: Vec<WorkerSpec>,
+    cfg: TrainConfig,
+) -> Result<Trainer, String> {
+    let dir = std::path::PathBuf::from(artifacts);
+    if !dir.join("manifest.json").exists() {
+        return Err(format!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    Trainer::new(&dir, workers, cfg).map_err(|e| e.to_string())
+}
+
 #[cfg(not(feature = "xla"))]
-fn cmd_train(_argv: &[String]) -> Result<(), String> {
-    Err("this binary was built without the `xla` feature; rebuild with \
-         `--features xla` to run real training over PJRT artifacts"
+fn pjrt_trainer(
+    _artifacts: &str,
+    _workers: Vec<WorkerSpec>,
+    _cfg: TrainConfig,
+) -> Result<Trainer, String> {
+    Err("the pjrt backend needs a build with `--features xla`; \
+         use --backend native"
         .into())
 }
 
@@ -653,6 +773,32 @@ mod tests {
                                 "BERT-Large", "--batch", "64",
                                 "--events", "4"])),
             0
+        );
+    }
+
+    #[test]
+    fn elastic_live_session_runs() {
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--live", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "32",
+                                "--events", "3", "--steps", "1"])),
+            0
+        );
+    }
+
+    #[test]
+    fn train_native_backend_runs_ungated() {
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "native",
+                                "--cluster", "a", "--model", "BERT-Large",
+                                "--batch", "32", "--steps", "2",
+                                "--log-every", "0"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "bogus",
+                                "--cluster", "a", "--batch", "32"])),
+            1
         );
     }
 

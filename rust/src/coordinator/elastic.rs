@@ -118,6 +118,73 @@ pub fn plan_migration(
     (transfers, resident, moved)
 }
 
+/// Materialize a migration plan against live state: build each NEW
+/// rank's contiguous shard of the flat state vector by (a) copying the
+/// resident ranges straight from the surviving old shards and (b)
+/// applying the transfer list — peer copies for `from: Some(_)`,
+/// checkpoint restores (`reference`, the leader-view full vector) for
+/// `from: None` (the old owner left the cluster, so its memory is
+/// gone). Invariant 4 extended to execution: resident + transferred +
+/// restored ranges cover the new layout exactly once, so every output
+/// element is written exactly once (property-tested over churn
+/// sequences below).
+///
+/// Call once per migrating vector (Adam m, Adam v, ...): the plan is
+/// layout-level and shared.
+pub fn apply_migration(
+    old_layout: &ShardLayout,
+    old_shards: &[&[f32]],
+    new_layout: &ShardLayout,
+    survivor_map: &[Option<usize>],
+    transfers: &[Transfer],
+    reference: &[f32],
+) -> Vec<Vec<f32>> {
+    assert_eq!(old_shards.len(), old_layout.num_ranks());
+    assert_eq!(survivor_map.len(), new_layout.num_ranks());
+    assert_eq!(reference.len(), new_layout.len());
+    for (r, s) in old_shards.iter().enumerate() {
+        assert_eq!(s.len(), old_layout.size(r), "old shard {r} size");
+    }
+    let mut out: Vec<Vec<f32>> = (0..new_layout.num_ranks())
+        .map(|r| vec![0f32; new_layout.size(r)])
+        .collect();
+    // Resident prefill: where the new rank IS the old owner, the
+    // overlap of its old and new ranges never leaves the device.
+    for (new_gpu, survivor) in survivor_map.iter().enumerate() {
+        let Some(old_gpu) = survivor else { continue };
+        let nr = new_layout.range(new_gpu);
+        let or = old_layout.range(*old_gpu);
+        let lo = nr.start.max(or.start);
+        let hi = nr.end.min(or.end);
+        if lo < hi {
+            out[new_gpu][lo - nr.start..hi - nr.start].copy_from_slice(
+                &old_shards[*old_gpu][lo - or.start..hi - or.start],
+            );
+        }
+    }
+    // The transfer list: everything that moves between GPUs or comes
+    // back from the checkpoint.
+    for t in transfers {
+        let nr = new_layout.range(t.to);
+        debug_assert!(nr.start <= t.start && t.start + t.len <= nr.end);
+        let dst =
+            &mut out[t.to][t.start - nr.start..t.start + t.len - nr.start];
+        match t.from {
+            Some(src) => {
+                let or = old_layout.range(src);
+                dst.copy_from_slice(
+                    &old_shards[src]
+                        [t.start - or.start..t.start + t.len - or.start],
+                );
+            }
+            None => {
+                dst.copy_from_slice(&reference[t.start..t.start + t.len]);
+            }
+        }
+    }
+    out
+}
+
 /// Re-plan after cluster membership changed, through the unified
 /// planner interface.
 ///
@@ -254,6 +321,90 @@ mod tests {
                 assert!(r.start <= t.start && t.start + t.len <= r.end);
             }
             assert_eq!(covered.iter().filter(|&&c| c).count(), moved);
+        });
+    }
+
+    #[test]
+    fn prop_migration_sequences_cover_and_apply_exactly() {
+        // DESIGN.md invariant 4 extended from one-shot to SEQUENCES:
+        // over random churn chains (random layouts, random survivor
+        // maps, r_i = 0 ranks included), resident + transferred +
+        // restored ranges cover each new layout exactly once — verified
+        // at the data level by applying every migration to live shards
+        // and checking them against the ground-truth vector.
+        check("migration-sequences", 60, |g| {
+            let total = g.usize_in(50, 2000);
+            // Ground truth: distinguishable values per element.
+            let reference: Vec<f32> =
+                (0..total).map(|i| i as f32 * 0.5 + 1.0).collect();
+            let n0 = g.usize_in(1, 5);
+            let mut layout =
+                ShardLayout::by_ratios(total, &g.sparse_ratios(n0));
+            let mut shards: Vec<Vec<f32>> = (0..n0)
+                .map(|r| reference[layout.range(r)].to_vec())
+                .collect();
+            for _event in 0..g.usize_in(2, 6) {
+                let n_new = g.usize_in(1, 5);
+                let survivors: Vec<Option<usize>> = (0..n_new)
+                    .map(|i| {
+                        if i < layout.num_ranks() && g.bool() {
+                            Some(i)
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                let new_layout =
+                    ShardLayout::by_ratios(total, &g.sparse_ratios(n_new));
+                let (transfers, resident, moved) =
+                    plan_migration(&layout, &new_layout, &survivors);
+                assert_eq!(resident + moved, total);
+                // Transfers: disjoint, in-bounds, and peer sources must
+                // be surviving old ranks that own the range.
+                let mut covered = vec![false; total];
+                for t in &transfers {
+                    for i in t.start..t.start + t.len {
+                        assert!(!covered[i], "overlap at {i}");
+                        covered[i] = true;
+                    }
+                    let r = new_layout.range(t.to);
+                    assert!(
+                        r.start <= t.start && t.start + t.len <= r.end
+                    );
+                    if let Some(src) = t.from {
+                        assert!(
+                            survivors.iter().any(|s| *s == Some(src)),
+                            "transfer from departed rank {src}"
+                        );
+                        let or = layout.range(src);
+                        assert!(
+                            or.start <= t.start
+                                && t.start + t.len <= or.end
+                        );
+                    }
+                }
+                assert_eq!(
+                    covered.iter().filter(|&&c| c).count(),
+                    moved
+                );
+                // Apply. Any coverage gap would leave a 0.0 (reference
+                // values are all >= 1.0), any overlap was caught above.
+                let views: Vec<&[f32]> =
+                    shards.iter().map(|s| s.as_slice()).collect();
+                let new_shards = apply_migration(
+                    &layout, &views, &new_layout, &survivors,
+                    &transfers, &reference,
+                );
+                for r in 0..n_new {
+                    assert_eq!(
+                        new_shards[r].as_slice(),
+                        &reference[new_layout.range(r)],
+                        "rank {r} state corrupted after migration"
+                    );
+                }
+                layout = new_layout;
+                shards = new_shards;
+            }
         });
     }
 

@@ -8,6 +8,7 @@ pub mod elastic;
 #[cfg(feature = "xla")]
 pub mod real_profile;
 pub mod report;
+pub mod session;
 
 use crate::cluster::Cluster;
 use crate::model::{find_model, TransformerSpec};

@@ -1,0 +1,473 @@
+//! Live elastic training session: the Fig.-1 workflow end to end, on
+//! real numerics, in the default (no-`xla`) build.
+//!
+//! A [`Session`] owns a generic [`Trainer`] (any `exec::StepExecutor`;
+//! the native backend by default) and reacts to cluster churn the way
+//! the paper's coordinator does:
+//!
+//! 1. **churn event** — an `cluster/aws_trace` hour folds onto a
+//!    membership size (`aws_trace::membership_size`); the live cluster
+//!    is the corresponding prefix of the base cluster;
+//! 2. **re-plan** — through the PR-1 planner registry interface with a
+//!    shared [`PlanCache`], so recurring memberships are hash lookups,
+//!    not DP solves;
+//! 3. **migrate** — `elastic::plan_migration` emits the transfer list
+//!    at both scales: the PLANNING scale (the Table-2 model's
+//!    parameter count, for reported traffic) and the EXECUTED scale
+//!    (the running trainer's flat state), and
+//!    `elastic::apply_migration` applies the latter to the resident
+//!    Adam shards — peer copies for survivors, checkpoint restores for
+//!    ranks whose old owner departed;
+//! 4. **resume** — [`Trainer::adopt`] installs the new membership and
+//!    training continues on the same corpus stream; with the native
+//!    backend's exact gradient summation, parameters stay bitwise on
+//!    the single-worker reference trajectory across every migration
+//!    (asserted in `tests/elastic_session.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cluster::{aws_trace, Cluster, Node};
+use crate::coordinator::{elastic, Workload};
+use crate::exec::{NativeExecutor, StepTimeModel, SurrogateSpec};
+use crate::optimizer::Assignment;
+use crate::plan::{PlanCache, Planner};
+use crate::sharding::ShardLayout;
+use crate::trainer::adam::{AdamConfig, AdamShard};
+use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
+use crate::util::error::{anyhow, Result};
+
+/// Session configuration. `model`/`batch` drive the PLANNING scale
+/// (profiles, DP, migration-traffic accounting); `surrogate` is the
+/// EXECUTED model the native backend actually trains.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Table-2 model used for profiling and planning.
+    pub model: String,
+    /// Global batch, held constant across churn (what keeps the data
+    /// stream — and the reference trajectory — membership-invariant).
+    pub batch: usize,
+    /// Training steps to run after each membership change.
+    pub steps_per_event: usize,
+    pub seed: u64,
+    pub adam: AdamConfig,
+    /// Smallest membership a churn event may shrink to; 0 = auto
+    /// (two below the full cluster, at least 1).
+    pub min_gpus: usize,
+    /// The native backend's executed model.
+    pub surrogate: SurrogateSpec,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            model: "BERT-Large".into(),
+            batch: 64,
+            steps_per_event: 5,
+            seed: 42,
+            adam: AdamConfig::default(),
+            min_gpus: 0,
+            surrogate: SurrogateSpec::default(),
+        }
+    }
+}
+
+/// What one churn event did.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    pub event: usize,
+    pub hour: usize,
+    /// Membership size after the event.
+    pub gpus: usize,
+    /// True when the re-plan was served by the shared [`PlanCache`].
+    pub from_cache: bool,
+    pub solve_seconds: f64,
+    /// Planning-scale migration traffic (16 B per Table-2 parameter).
+    pub migration_bytes: f64,
+    /// Executed-scale elements actually copied between shards or
+    /// restored from the checkpoint.
+    pub moved_state_elems: usize,
+    pub steps: usize,
+    pub mean_loss: f64,
+    /// Steps/sec under the executor's timing hook (simulated when a
+    /// `StepTimeModel` is attached).
+    pub steps_per_sec: f64,
+}
+
+/// A running elastic trainer; see the module docs.
+pub struct Session {
+    base: Cluster,
+    cfg: SessionConfig,
+    planner: Arc<dyn Planner>,
+    cache: PlanCache,
+    /// Per-membership-size workloads (profile + fingerprint), memoized
+    /// so recurring sizes reuse the exact same `PlanContext`.
+    workloads: BTreeMap<usize, Workload>,
+    trainer: Trainer,
+    current_size: usize,
+    current_asg: Assignment,
+    pub reports: Vec<EventReport>,
+}
+
+/// The first `k` GPUs of `base` in canonical (node, slot) order,
+/// reconstructed as a cluster (empty nodes dropped). Deterministic, so
+/// a recurring size yields a fingerprint-identical cluster — the
+/// property the plan cache keys on.
+pub fn prefix_cluster(base: &Cluster, k: usize) -> Cluster {
+    assert!(k >= 1 && k <= base.num_gpus());
+    let mut nodes = Vec::new();
+    let mut left = k;
+    for n in &base.nodes {
+        if left == 0 {
+            break;
+        }
+        let take = left.min(n.gpus.len());
+        if take > 0 {
+            nodes.push(Node {
+                name: n.name.clone(),
+                gpus: n.gpus[..take].to_vec(),
+                intra_bw_gbps: n.intra_bw_gbps,
+            });
+        }
+        left -= take;
+    }
+    Cluster {
+        name: format!("{}[..{k}]", base.name),
+        nodes,
+        inter_bw_gbps: base.inter_bw_gbps,
+    }
+}
+
+fn ensure_workload<'a>(
+    workloads: &'a mut BTreeMap<usize, Workload>,
+    base: &Cluster,
+    model: &str,
+    seed: u64,
+    k: usize,
+) -> Result<&'a Workload> {
+    if !workloads.contains_key(&k) {
+        let w = Workload::prepare(prefix_cluster(base, k), model, seed)
+            .map_err(|e| anyhow!(e.to_string()))?;
+        workloads.insert(k, w);
+    }
+    Ok(&workloads[&k])
+}
+
+impl Session {
+    /// Start a session on the full `base` cluster: profile, plan (the
+    /// first cache entry), and stand up the native trainer.
+    pub fn new(
+        base: Cluster,
+        planner: Arc<dyn Planner>,
+        cfg: SessionConfig,
+    ) -> Result<Session> {
+        let n = base.num_gpus();
+        if n == 0 {
+            return Err(anyhow!("empty base cluster"));
+        }
+        let cache = PlanCache::new();
+        let mut workloads = BTreeMap::new();
+        let (asg, workers, timer) = {
+            let w = ensure_workload(
+                &mut workloads, &base, &cfg.model, cfg.seed, n,
+            )?;
+            let outcome = cache
+                .get_or_plan(&*planner, &w.ctx(cfg.batch))
+                .map_err(|e| anyhow!(e.to_string()))?;
+            let asg = outcome.assignment.ok_or_else(|| {
+                anyhow!(
+                    "planner '{}' yields no per-GPU assignment; a live \
+                     session needs one",
+                    planner.name()
+                )
+            })?;
+            let names: Vec<String> = w
+                .cluster
+                .gpus()
+                .iter()
+                .map(|g| g.spec.name.clone())
+                .collect();
+            let workers = Trainer::workers_from_assignment(&asg, &names);
+            let timer =
+                StepTimeModel::from_oracle(&w.oracle, w.model.layers);
+            (asg, workers, timer)
+        };
+        let exec = NativeExecutor::new(cfg.surrogate.clone())
+            .with_timer(timer);
+        let tcfg = TrainConfig {
+            steps: cfg.steps_per_event,
+            seed: cfg.seed,
+            adam: cfg.adam,
+            corpus_branch: 4,
+            log_every: 0,
+        };
+        let trainer = Trainer::from_executor(Box::new(exec), workers, tcfg)?;
+        Ok(Session {
+            base,
+            cfg,
+            planner,
+            cache,
+            workloads,
+            trainer,
+            current_size: n,
+            current_asg: asg,
+            reports: Vec::new(),
+        })
+    }
+
+    fn min_gpus(&self) -> usize {
+        let n = self.base.num_gpus();
+        if self.cfg.min_gpus >= 1 {
+            self.cfg.min_gpus.min(n)
+        } else {
+            n.saturating_sub(2).max(1)
+        }
+    }
+
+    /// Membership sizes for the next `events` hours of the AWS
+    /// availability trace.
+    pub fn churn_sizes(&self, events: usize) -> Vec<usize> {
+        let profiles = aws_trace::default_profiles();
+        let trace =
+            aws_trace::generate(self.cfg.seed, events, &profiles);
+        let (lo, hi) = (self.min_gpus(), self.base.num_gpus());
+        trace
+            .iter()
+            .map(|h| aws_trace::membership_size(h, lo, hi))
+            .collect()
+    }
+
+    /// One full churn event: re-plan for `size` GPUs, migrate the live
+    /// training state onto the new layout, resume for
+    /// `steps_per_event` steps.
+    pub fn step_event(&mut self, hour: usize, size: usize)
+        -> Result<EventReport> {
+        let size = size.clamp(1, self.base.num_gpus());
+        // Prefix memberships: new rank i is the same physical GPU as
+        // old rank i while it existed; ranks past the old size are
+        // fresh arrivals (checkpoint-restore targets).
+        let survivors: Vec<Option<usize>> = (0..size)
+            .map(|i| if i < self.current_size { Some(i) } else { None })
+            .collect();
+        ensure_workload(
+            &mut self.workloads,
+            &self.base,
+            &self.cfg.model,
+            self.cfg.seed,
+            size,
+        )?;
+        let (re, names) = {
+            let old_w = &self.workloads[&self.current_size];
+            let new_w = &self.workloads[&size];
+            let re = elastic::replan(
+                &self.current_asg,
+                &old_w.profile,
+                &new_w.ctx(self.cfg.batch),
+                &survivors,
+                &*self.planner,
+                Some(&self.cache),
+            )
+            .map_err(|e| anyhow!(e.to_string()))?;
+            let names: Vec<String> = new_w
+                .cluster
+                .gpus()
+                .iter()
+                .map(|g| g.spec.name.clone())
+                .collect();
+            (re, names)
+        };
+
+        // Executed-scale migration: same r_i division, applied to the
+        // trainer's actual flat state. A recurring membership that
+        // re-plans to the EXACT running assignment (the cache-hit
+        // steady state) is a true no-op: skip the checkpoint/copy/adopt
+        // churn entirely.
+        let unchanged = size == self.current_size
+            && re.assignment == self.current_asg;
+        let moved = if unchanged {
+            0
+        } else {
+            let old_layout = self.trainer.layout().clone();
+            let new_ratios: Vec<f64> = re
+                .assignment
+                .per_gpu
+                .iter()
+                .map(|g| g.state_ratio)
+                .collect();
+            let new_layout =
+                ShardLayout::by_ratios(old_layout.len(), &new_ratios);
+            let (transfers, _resident, moved) = elastic::plan_migration(
+                &old_layout, &new_layout, &survivors,
+            );
+            let ck = self.trainer.checkpoint();
+            let old_m: Vec<&[f32]> = self
+                .trainer
+                .shards()
+                .iter()
+                .map(|s| s.m.as_slice())
+                .collect();
+            let new_m = elastic::apply_migration(
+                &old_layout, &old_m, &new_layout, &survivors, &transfers,
+                &ck.adam_m,
+            );
+            let old_v: Vec<&[f32]> = self
+                .trainer
+                .shards()
+                .iter()
+                .map(|s| s.v.as_slice())
+                .collect();
+            let new_v = elastic::apply_migration(
+                &old_layout, &old_v, &new_layout, &survivors, &transfers,
+                &ck.adam_v,
+            );
+            let shards: Vec<AdamShard> = new_m
+                .into_iter()
+                .zip(new_v)
+                .map(|(m, v)| AdamShard {
+                    m,
+                    v,
+                    step: ck.step,
+                    cfg: self.cfg.adam,
+                })
+                .collect();
+            let workers =
+                Trainer::workers_from_assignment(&re.assignment, &names);
+            self.trainer.adopt(workers, shards)?;
+            moved
+        };
+
+        // Resume training on the migrated state.
+        let step_base = self.trainer.history.len();
+        let mut loss_acc = 0f64;
+        let mut secs = 0f64;
+        for s in 0..self.cfg.steps_per_event {
+            let st = self.trainer.step(step_base + s)?;
+            loss_acc += st.mean_loss;
+            secs += st.wall_seconds;
+        }
+        let steps = self.cfg.steps_per_event;
+        let report = EventReport {
+            event: self.reports.len(),
+            hour,
+            gpus: size,
+            from_cache: re.from_cache,
+            solve_seconds: re.solve_seconds,
+            migration_bytes: re.migration_bytes(),
+            moved_state_elems: moved,
+            steps,
+            mean_loss: if steps > 0 { loss_acc / steps as f64 } else { 0.0 },
+            steps_per_sec: if secs > 0.0 { steps as f64 / secs } else { 0.0 },
+        };
+        self.current_asg = re.assignment;
+        self.current_size = size;
+        self.reports.push(report.clone());
+        Ok(report)
+    }
+
+    /// Drive `events` churn events straight off the availability trace.
+    pub fn run(&mut self, events: usize) -> Result<Vec<EventReport>> {
+        let sizes = self.churn_sizes(events);
+        for (hour, size) in sizes.into_iter().enumerate() {
+            self.step_event(hour, size)?;
+        }
+        Ok(self.reports.clone())
+    }
+
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn current_size(&self) -> usize {
+        self.current_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::CephaloPlanner;
+    use crate::testkit::tiny_cluster;
+
+    #[test]
+    fn prefix_cluster_takes_canonical_order() {
+        let base = Cluster::cluster_a();
+        let p3 = prefix_cluster(&base, 3);
+        assert_eq!(p3.num_gpus(), 3);
+        assert_eq!(p3.nodes.len(), 1);
+        let names: Vec<String> =
+            p3.gpus().iter().map(|g| g.spec.name.clone()).collect();
+        assert_eq!(names, vec!["L4", "L4", "A6000"]);
+        // Crossing the node boundary keeps both nodes.
+        let p5 = prefix_cluster(&base, 5);
+        assert_eq!(p5.nodes.len(), 2);
+        assert_eq!(p5.nodes[1].gpus.len(), 1);
+        // Deterministic (fingerprint-stable for the plan cache).
+        assert_eq!(format!("{:?}", prefix_cluster(&base, 3).nodes),
+                   format!("{:?}", p3.nodes));
+    }
+
+    #[test]
+    fn session_runs_trace_driven_events() {
+        let cfg = SessionConfig {
+            batch: 8,
+            steps_per_event: 2,
+            seed: 7,
+            min_gpus: 1,
+            ..Default::default()
+        };
+        let mut s = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg,
+        )
+        .unwrap();
+        let sizes = s.churn_sizes(4);
+        assert_eq!(sizes.len(), 4);
+        assert!(sizes.iter().all(|&k| (1..=2).contains(&k)));
+        let reports = s.run(4).unwrap();
+        assert_eq!(reports.len(), 4);
+        assert_eq!(s.trainer().history.len(), 8);
+        // 4 events over at most 2 memberships: the cache must hit.
+        assert!(
+            s.cache().hits() >= 1,
+            "recurring memberships should be cache hits"
+        );
+        for r in &reports {
+            assert!(r.mean_loss.is_finite() && r.mean_loss > 0.0);
+            assert!(r.steps_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn shrink_then_regrow_migrates_state_both_ways() {
+        let cfg = SessionConfig {
+            batch: 8,
+            steps_per_event: 1,
+            seed: 3,
+            min_gpus: 1,
+            ..Default::default()
+        };
+        let mut s = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg,
+        )
+        .unwrap();
+        assert_eq!(s.current_size(), 2);
+        let down = s.step_event(0, 1).unwrap();
+        assert_eq!(down.gpus, 1);
+        assert_eq!(s.trainer().layout().num_ranks(), 1);
+        // The survivor inherits everything it did not already hold.
+        assert!(down.moved_state_elems > 0);
+        let up = s.step_event(1, 2).unwrap();
+        assert_eq!(up.gpus, 2);
+        assert_eq!(s.trainer().layout().num_ranks(), 2);
+        assert!(up.moved_state_elems > 0);
+        // Re-entering a seen membership is a cache hit.
+        assert!(up.from_cache);
+    }
+}

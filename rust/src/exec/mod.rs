@@ -1,0 +1,120 @@
+//! The exec subsystem: ONE interface over every training-step backend.
+//!
+//! PR 1 put every *planner* behind `plan::Planner`; this module does the
+//! same for *executors*. Cephalo's training step is a fixed numeric
+//! pipeline — uneven batch split → per-worker gradient accumulation →
+//! uneven ReduceScatter over the `r_i` shard layout → sharded Adam →
+//! uneven AllGather — and the only backend-specific piece is "given the
+//! parameters and each worker's batch share, produce each worker's
+//! summed gradients". [`StepExecutor`] captures exactly that seam, so
+//! the trainer, the elastic [`crate::coordinator::session::Session`]
+//! and the CLI are generic over the execution substrate (the
+//! Zorse/HexiScale decoupling — see PAPERS.md):
+//!
+//! * [`NativeExecutor`] — dependency-free, always compiled: real f32
+//!   gradients of a small built-in quadratic surrogate model, with
+//!   per-step durations takeable from the `SyntheticOracle` via
+//!   [`StepTimeModel`]. This is what lets the default (no-`xla`) build
+//!   run live end-to-end elastic training.
+//! * [`PjrtExecutor`] (`xla` feature) — the AOT-compiled JAX grad step
+//!   through PJRT, moved behind the trait from the old hard-wired
+//!   trainer; only this backend stays feature-gated.
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use native::{NativeExecutor, StepTimeModel, SurrogateSpec};
+#[cfg(feature = "xla")]
+pub use pjrt::PjrtExecutor;
+
+use crate::util::error::Result;
+
+/// One training step's raw outcome, before the collective pipeline.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// One FULL-flat-length gradient vector per worker: the sum-loss
+    /// gradients accumulated over that worker's batch share (Eq. 1's
+    /// numerator; the trainer applies the 1/tokens scale after the
+    /// ReduceScatter).
+    pub worker_grads: Vec<Vec<f32>>,
+    /// Sum of per-token losses across all workers.
+    pub loss_sum: f64,
+    /// Total tokens contributing to `loss_sum` (the Eq.-1 denominator).
+    pub token_count: f64,
+}
+
+/// A training-step backend: everything the generic trainer needs to run
+/// the Cephalo numeric pipeline against some execution substrate.
+///
+/// Implementations must be `Send` so a trainer can migrate across
+/// threads (the elastic session, benches).
+pub trait StepExecutor: Send {
+    /// Short backend name ("native", "pjrt") for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// Element count per parameter tensor, in ABI order — drives
+    /// flatten/unflatten, shard layouts and checkpoints.
+    fn param_sizes(&self) -> &[usize];
+
+    /// Vocabulary the training corpus must sample from.
+    fn vocab(&self) -> usize;
+
+    /// Sequence length of one sample row.
+    fn seq_len(&self) -> usize;
+
+    /// Deterministic parameter init (same seed -> bitwise-same params).
+    fn init_params(&self, seed: u64) -> Vec<Vec<f32>>;
+
+    /// Run one step: `parts[i]` is worker i's `(tokens, targets)` batch
+    /// share (row count implied by `len / seq_len`, possibly zero).
+    /// Returns per-worker full-length flat gradients.
+    fn run_step(
+        &mut self,
+        params: &[Vec<f32>],
+        parts: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<StepOutput>;
+
+    /// Timing hook: the per-step duration to report, given the
+    /// per-worker batch shares and the measured wall time. Real
+    /// backends return the wall time; simulation-backed ones substitute
+    /// modeled durations (see [`StepTimeModel`]).
+    fn step_seconds(&self, batches: &[usize], measured_wall: f64) -> f64 {
+        let _ = batches;
+        measured_wall
+    }
+
+    /// Preferred rows per evaluation batch (backends with compiled
+    /// batch variants constrain this).
+    fn eval_rows(&self) -> usize {
+        8
+    }
+
+    /// `(loss_sum, token_count)` over one batch at `params`, no update.
+    fn eval_loss(
+        &mut self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64)>;
+
+    /// Total flat parameter length.
+    fn flat_len(&self) -> usize {
+        self.param_sizes().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trait_is_object_safe_and_boxable() {
+        let exec: Box<dyn StepExecutor> =
+            Box::new(NativeExecutor::new(SurrogateSpec::default()));
+        assert_eq!(exec.name(), "native");
+        assert_eq!(exec.flat_len(), exec.param_sizes().iter().sum());
+        // The default timing hook passes wall time through.
+        assert_eq!(exec.step_seconds(&[4, 4], 1.25), 1.25);
+    }
+}

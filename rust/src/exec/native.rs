@@ -1,0 +1,453 @@
+//! Dependency-free training backend: real f32 gradients of a small
+//! built-in differentiable model, exact under resharding.
+//!
+//! The surrogate is an embedding-regression quadratic: parameters are a
+//! `vocab x dim` table plus a shared `dim` bias; each token position
+//! predicts `p = table[token] + bias` and pays the least-squares loss
+//! `0.5 * ||p - v(target)||^2` against a fixed dyadic target vector
+//! derived from the Markov corpus's next token. The gradient is the
+//! textbook residual `p - v(target)`, so the loss descends toward the
+//! chain's conditional mean — a meaningful curve with zero external
+//! dependencies.
+//!
+//! ## Why gradients are quantized (and why that buys bitwise elasticity)
+//!
+//! f32 addition is not associative, so an FSDP gradient sum normally
+//! depends on how the batch was split across workers and on the ring
+//! schedule — which would make "params after a migration match a
+//! single-worker reference" only approximately true. This backend
+//! quantizes every per-token gradient contribution onto the dyadic grid
+//! `k / 256` with `|k| <= 2048` (see [`quantize`]). All partial sums of
+//! up to [`MAX_STEP_TOKENS`] such terms are integers `<= 2^24` in grid
+//! units, which f32 represents EXACTLY — so gradient summation becomes
+//! associative and commutative, and any worker split, ring order or
+//! shard layout produces bit-identical totals. That is the property the
+//! live elastic session's acceptance test leans on.
+
+use crate::perfmodel::ComputeOracle;
+use crate::util::error::{anyhow, Result};
+
+use super::{StepExecutor, StepOutput};
+
+/// Gradient grid: contributions are multiples of 1/256, clamped to
+/// [-8, 8] (so `k/256` with `|k| <= 2048`).
+const GRID: f32 = 256.0;
+const CLAMP_UNITS: f32 = 2048.0;
+
+/// Max tokens in one step such that every partial gradient sum stays
+/// exactly representable: tokens * 8 * 256 <= 2^24.
+pub const MAX_STEP_TOKENS: usize = 8192;
+
+/// Snap a gradient contribution onto the exact-summation grid.
+#[inline]
+fn quantize(g: f32) -> f32 {
+    (g * GRID).round().clamp(-CLAMP_UNITS, CLAMP_UNITS) / GRID
+}
+
+/// Dyadic regression target for (next-token, component): multiples of
+/// 1/16 in [-0.5, 0.5], exactly representable.
+#[inline]
+fn target_value(target: i32, j: usize) -> f32 {
+    let k = (target as i64 * (j as i64 + 1)).rem_euclid(17);
+    k as f32 / 16.0 - 0.5
+}
+
+/// Shape of the built-in surrogate model.
+#[derive(Debug, Clone)]
+pub struct SurrogateSpec {
+    pub vocab: usize,
+    pub dim: usize,
+    pub seq_len: usize,
+}
+
+impl Default for SurrogateSpec {
+    fn default() -> Self {
+        Self { vocab: 64, dim: 32, seq_len: 16 }
+    }
+}
+
+/// Simulated per-step durations for the timing hook: worker i's share
+/// of `b_i` samples costs `b_i * per_sample_seconds[i]`; the step takes
+/// the slowest worker plus a fixed collective term. Built from the same
+/// `SyntheticOracle` the planner profiled, so reported steps/sec track
+/// the planned heterogeneity.
+#[derive(Debug, Clone)]
+pub struct StepTimeModel {
+    pub per_sample_seconds: Vec<f64>,
+    pub fixed_seconds: f64,
+}
+
+impl StepTimeModel {
+    /// Per-sample cost from the oracle: one fwd+bwd layer pass at m=1,
+    /// times the layer count.
+    pub fn from_oracle(
+        oracle: &(dyn ComputeOracle + Sync),
+        layers: usize,
+    ) -> StepTimeModel {
+        let per_sample_seconds = (0..oracle.num_gpus())
+            .map(|g| {
+                (oracle.fwd_latency(g, 1) + oracle.bwd_latency(g, 1))
+                    * layers as f64
+            })
+            .collect();
+        StepTimeModel { per_sample_seconds, fixed_seconds: 0.0 }
+    }
+
+    /// Simulated duration of one step with the given batch shares
+    /// (workers are indexed against the model's GPU order; prefix
+    /// memberships use a prefix of it).
+    pub fn step_seconds(&self, batches: &[usize]) -> f64 {
+        let slowest = batches
+            .iter()
+            .zip(&self.per_sample_seconds)
+            .map(|(&b, &s)| b as f64 * s)
+            .fold(0.0f64, f64::max);
+        slowest + self.fixed_seconds
+    }
+}
+
+/// The dependency-free backend. See the module docs for the model and
+/// the exact-summation contract.
+pub struct NativeExecutor {
+    spec: SurrogateSpec,
+    sizes: Vec<usize>,
+    timer: Option<StepTimeModel>,
+}
+
+impl NativeExecutor {
+    pub fn new(spec: SurrogateSpec) -> NativeExecutor {
+        assert!(spec.vocab >= 2 && spec.dim >= 1 && spec.seq_len >= 1);
+        let sizes = vec![spec.vocab * spec.dim, spec.dim];
+        NativeExecutor { spec, sizes, timer: None }
+    }
+
+    /// Attach simulated step durations (the `SyntheticOracle` timing
+    /// hook); without one, wall time is reported.
+    pub fn with_timer(mut self, timer: StepTimeModel) -> NativeExecutor {
+        self.timer = Some(timer);
+        self
+    }
+
+    pub fn spec(&self) -> &SurrogateSpec {
+        &self.spec
+    }
+
+    /// One worker's pass: accumulate quantized per-token gradients into
+    /// a full-length flat vector; returns (grads, loss_sum, tokens).
+    fn worker_pass(
+        &self,
+        table: &[f32],
+        bias: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let d = self.spec.dim;
+        let v = self.spec.vocab;
+        let mut g = vec![0f32; v * d + d];
+        let mut loss = 0f64;
+        for (&x, &y) in tokens.iter().zip(targets) {
+            let xi = x as usize;
+            if x < 0 || xi >= v {
+                return Err(anyhow!("token {x} outside vocab {v}"));
+            }
+            let row = xi * d;
+            for j in 0..d {
+                let r = table[row + j] + bias[j] - target_value(y, j);
+                loss += 0.5 * (r as f64) * (r as f64);
+                let q = quantize(r);
+                g[row + j] += q;
+                g[v * d + j] += q;
+            }
+        }
+        Ok((g, loss, tokens.len() as f64))
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        if params.len() != 2
+            || params[0].len() != self.sizes[0]
+            || params[1].len() != self.sizes[1]
+        {
+            return Err(anyhow!(
+                "params do not match the surrogate shape \
+                 [{} x {}, {}]",
+                self.spec.vocab,
+                self.spec.dim,
+                self.spec.dim
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl StepExecutor for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn param_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.spec.seq_len
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        // Table ~ N(0, 0.02), bias zero — the same convention as the
+        // PJRT manifest init (weights random, biases zero).
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut table = vec![0f32; self.sizes[0]];
+        rng.fill_normal(&mut table, 0.02);
+        vec![table, vec![0f32; self.sizes[1]]]
+    }
+
+    fn run_step(
+        &mut self,
+        params: &[Vec<f32>],
+        parts: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<StepOutput> {
+        self.check_params(params)?;
+        let seq = self.spec.seq_len;
+        let total_tokens: usize =
+            parts.iter().map(|(t, _)| t.len()).sum();
+        if total_tokens == 0 {
+            return Err(anyhow!("empty step: no worker has any rows"));
+        }
+        if total_tokens > MAX_STEP_TOKENS {
+            return Err(anyhow!(
+                "{total_tokens} tokens/step exceeds the exact-summation \
+                 bound {MAX_STEP_TOKENS} (shrink batch or seq_len)"
+            ));
+        }
+        for (tokens, targets) in parts {
+            if tokens.len() != targets.len() || tokens.len() % seq != 0 {
+                return Err(anyhow!("malformed batch share"));
+            }
+        }
+        let table = &params[0];
+        let bias = &params[1];
+        // One scoped thread per worker, joined in rank order so the f64
+        // loss accumulation stays deterministic.
+        let this: &NativeExecutor = self;
+        let results: Vec<Result<(Vec<f32>, f64, f64)>> =
+            std::thread::scope(|scope| {
+                parts
+                    .iter()
+                    .map(|(tokens, targets)| {
+                        scope.spawn(move || {
+                            this.worker_pass(table, bias, tokens, targets)
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().unwrap())
+                    .collect()
+            });
+        let mut worker_grads = Vec::with_capacity(parts.len());
+        let mut loss_sum = 0f64;
+        let mut token_count = 0f64;
+        for r in results {
+            let (g, ls, cnt) = r?;
+            worker_grads.push(g);
+            loss_sum += ls;
+            token_count += cnt;
+        }
+        Ok(StepOutput { worker_grads, loss_sum, token_count })
+    }
+
+    fn step_seconds(&self, batches: &[usize], measured_wall: f64) -> f64 {
+        match &self.timer {
+            Some(t) => t.step_seconds(batches),
+            None => measured_wall,
+        }
+    }
+
+    fn eval_loss(
+        &mut self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64)> {
+        self.check_params(params)?;
+        let d = self.spec.dim;
+        let v = self.spec.vocab;
+        let mut loss = 0f64;
+        for (&x, &y) in tokens.iter().zip(targets) {
+            let xi = x as usize;
+            if x < 0 || xi >= v {
+                return Err(anyhow!("token {x} outside vocab {v}"));
+            }
+            for j in 0..d {
+                let r = params[0][xi * d + j] + params[1][j]
+                    - target_value(y, j);
+                loss += 0.5 * (r as f64) * (r as f64);
+            }
+        }
+        Ok((loss, tokens.len() as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::data::{split_batch, Corpus};
+
+    fn sample(batch: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let spec = SurrogateSpec::default();
+        let mut corpus = Corpus::new(spec.vocab, 4, seed);
+        corpus.sample_batch(batch, spec.seq_len)
+    }
+
+    /// Elementwise f32 sum of worker gradients in the given rank order.
+    fn sum_grads(grads: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0f32; grads[0].len()];
+        for g in grads {
+            for (o, x) in out.iter_mut().zip(g) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn quantize_is_exact_on_the_grid() {
+        assert_eq!(quantize(0.0), 0.0);
+        assert_eq!(quantize(1.0), 1.0);
+        assert_eq!(quantize(100.0), 8.0); // clamp
+        assert_eq!(quantize(-100.0), -8.0);
+        // 3/256 snaps to itself; midpoints round deterministically.
+        let g = 3.0 / 256.0;
+        assert_eq!(quantize(g), g);
+        // Result is always k/256 with integer k.
+        for &x in &[0.1f32, -0.37, 2.7182, 7.99, -7.99] {
+            let q = quantize(x);
+            assert_eq!((q * 256.0).fract(), 0.0, "{x} -> {q}");
+            assert!((q - x).abs() <= 0.5 / 256.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn target_values_are_dyadic_and_bounded() {
+        for y in 0..64i32 {
+            for j in 0..32usize {
+                let t = target_value(y, j);
+                assert!((-0.5..=0.5).contains(&t));
+                assert_eq!((t * 16.0).fract(), 0.0, "non-dyadic {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_splits_sum_bitwise_identically() {
+        // The exact-summation contract: any batch split produces the
+        // same gradient total, bit for bit, in any summation order.
+        let mut exec = NativeExecutor::new(SurrogateSpec::default());
+        let params = exec.init_params(3);
+        let seq = exec.seq_len();
+        let (tokens, targets) = sample(8, 5);
+        let splits: [&[usize]; 3] = [&[8], &[3, 5], &[1, 1, 6]];
+        let mut totals: Vec<Vec<f32>> = Vec::new();
+        for sizes in splits {
+            let parts = split_batch(&tokens, &targets, seq, sizes);
+            let out = exec.run_step(&params, &parts).unwrap();
+            assert_eq!(out.worker_grads.len(), sizes.len());
+            assert_eq!(out.token_count, 8.0 * seq as f64);
+            totals.push(sum_grads(&out.worker_grads));
+            // Reversed summation order must not change a single bit.
+            let mut rev = out.worker_grads.clone();
+            rev.reverse();
+            assert_eq!(sum_grads(&rev), *totals.last().unwrap());
+        }
+        assert_eq!(totals[0], totals[1]);
+        assert_eq!(totals[1], totals[2]);
+    }
+
+    #[test]
+    fn gradients_descend_the_surrogate_loss() {
+        // Deterministic corpus (branch 1): the surrogate's least-squares
+        // optimum has near-zero irreducible loss, so SGD on the
+        // quantized gradients must drive the fixed-batch loss way down.
+        let spec = SurrogateSpec::default();
+        let mut exec = NativeExecutor::new(spec.clone());
+        let mut params = exec.init_params(7);
+        let seq = exec.seq_len();
+        let mut corpus = Corpus::new(spec.vocab, 1, 9);
+        let (tokens, targets) = corpus.sample_batch(16, seq);
+        let parts = split_batch(&tokens, &targets, seq, &[16]);
+        let first = exec.run_step(&params, &parts).unwrap();
+        // Plain SGD on the quantized gradients (Eq.-1 scaling).
+        for _ in 0..300 {
+            let out = exec.run_step(&params, &parts).unwrap();
+            let inv = 1.0 / out.token_count as f32;
+            let g = &out.worker_grads[0];
+            let mut off = 0;
+            for p in params.iter_mut() {
+                for (pi, gi) in p.iter_mut().zip(&g[off..]) {
+                    *pi -= gi * inv; // lr = 1.0
+                }
+                off += p.len();
+            }
+        }
+        let last = exec.run_step(&params, &parts).unwrap();
+        assert!(
+            last.loss_sum < 0.5 * first.loss_sum,
+            "loss did not descend: {} -> {}",
+            first.loss_sum,
+            last.loss_sum
+        );
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let mut exec = NativeExecutor::new(SurrogateSpec::default());
+        let params = exec.init_params(1);
+        // Out-of-vocab token.
+        let bad = vec![(vec![999i32; 16], vec![0i32; 16])];
+        assert!(exec.run_step(&params, &bad).is_err());
+        // Empty step.
+        let empty = vec![(Vec::new(), Vec::new())];
+        assert!(exec.run_step(&params, &empty).is_err());
+        // Wrong param shape.
+        let wrong = vec![vec![0f32; 3]];
+        let good = vec![(vec![0i32; 16], vec![0i32; 16])];
+        assert!(exec.run_step(&wrong, &good).is_err());
+        // Token budget.
+        let spec = exec.spec().clone();
+        let rows = MAX_STEP_TOKENS / spec.seq_len + 1;
+        let huge = vec![(
+            vec![0i32; rows * spec.seq_len],
+            vec![0i32; rows * spec.seq_len],
+        )];
+        assert!(exec.run_step(&params, &huge).is_err());
+    }
+
+    #[test]
+    fn timer_substitutes_simulated_durations() {
+        let timer = StepTimeModel {
+            per_sample_seconds: vec![0.5, 0.1],
+            fixed_seconds: 0.25,
+        };
+        assert_eq!(timer.step_seconds(&[2, 8]), 1.0 + 0.25);
+        let exec = NativeExecutor::new(SurrogateSpec::default())
+            .with_timer(timer);
+        assert_eq!(exec.step_seconds(&[2, 8], 99.0), 1.25);
+    }
+
+    #[test]
+    fn eval_loss_matches_run_step_loss() {
+        let mut exec = NativeExecutor::new(SurrogateSpec::default());
+        let params = exec.init_params(4);
+        let seq = exec.seq_len();
+        let (tokens, targets) = sample(4, 2);
+        let parts = split_batch(&tokens, &targets, seq, &[4]);
+        let out = exec.run_step(&params, &parts).unwrap();
+        let (loss, count) =
+            exec.eval_loss(&params, &tokens, &targets).unwrap();
+        assert_eq!(count, out.token_count);
+        assert!((loss - out.loss_sum).abs() < 1e-9 * loss.abs().max(1.0));
+    }
+}

@@ -1,0 +1,163 @@
+//! PJRT-backed [`StepExecutor`]: the AOT-compiled JAX grad step,
+//! moved behind the executor trait from the old hard-wired trainer.
+//!
+//! Only this file (plus `runtime::engine`/`runtime::service`) remains
+//! behind the `xla` feature — the trainer, collectives, Adam,
+//! checkpointing and the elastic session all build and run without it.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::{ExecHandle, ExecService, Manifest};
+use crate::util::error::Result;
+
+use super::{StepExecutor, StepOutput};
+
+pub struct PjrtExecutor {
+    service: ExecService,
+    sizes: Vec<usize>,
+}
+
+impl PjrtExecutor {
+    /// Load artifacts from `dir` and compile the grad-step and loss
+    /// entry points.
+    pub fn start(dir: &Path) -> Result<PjrtExecutor> {
+        let service = ExecService::start(dir, &["grad_step", "loss"])?;
+        let sizes = service.manifest().param_sizes();
+        Ok(PjrtExecutor { service, sizes })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.service.manifest()
+    }
+
+    pub fn platform(&self) -> &str {
+        self.service.platform()
+    }
+}
+
+impl StepExecutor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn param_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn vocab(&self) -> usize {
+        self.service.manifest().model.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.service.manifest().model.seq_len
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        crate::trainer::init_params(self.service.manifest(), seed)
+    }
+
+    fn run_step(
+        &mut self,
+        params: &[Vec<f32>],
+        parts: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<StepOutput> {
+        let manifest = self.service.manifest().clone();
+        let seq = manifest.model.seq_len;
+        let flat_len: usize = self.sizes.iter().sum();
+        // Upload the step's parameters to the device once; workers then
+        // run microbatches against the device-resident copy.
+        let handle = self.service.handle();
+        handle.set_params(Arc::new(params.to_vec()))?;
+        // Worker threads: microbatch loops with local accumulation,
+        // funneling through the exec service's device queue.
+        let results: Vec<Result<(Vec<f32>, f64, f64)>> =
+            std::thread::scope(|scope| {
+                let mut joins = Vec::new();
+                for (tokens, targets) in parts {
+                    let handle = handle.clone();
+                    let manifest = manifest.clone();
+                    let sizes = self.sizes.clone();
+                    let batch = tokens.len() / seq;
+                    joins.push(scope.spawn(move || {
+                        worker_grad_pass(
+                            &handle, &manifest, &sizes, tokens, targets,
+                            batch, flat_len,
+                        )
+                    }));
+                }
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+        let mut worker_grads = Vec::with_capacity(parts.len());
+        let mut loss_sum = 0f64;
+        let mut token_count = 0f64;
+        for r in results {
+            let (g, ls, cnt) = r?;
+            worker_grads.push(g);
+            loss_sum += ls;
+            token_count += cnt;
+        }
+        Ok(StepOutput { worker_grads, loss_sum, token_count })
+    }
+
+    fn eval_rows(&self) -> usize {
+        *self.service.manifest().microbatches.iter().max().unwrap_or(&1)
+    }
+
+    fn eval_loss(
+        &mut self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64)> {
+        let seq = self.service.manifest().model.seq_len;
+        let rows = tokens.len() / seq;
+        let handle = self.service.handle();
+        handle.set_params(Arc::new(params.to_vec()))?;
+        let (ls, cnt) =
+            handle.loss(tokens.to_vec(), targets.to_vec(), rows)?;
+        Ok((ls as f64, cnt as f64))
+    }
+}
+
+/// One worker's full pass: decompose the batch into available
+/// microbatch sizes, run grad steps, sum gradients into a flat vector.
+#[allow(clippy::too_many_arguments)]
+fn worker_grad_pass(
+    handle: &ExecHandle,
+    manifest: &Manifest,
+    sizes: &[usize],
+    tokens: &[i32],
+    targets: &[i32],
+    batch: usize,
+    flat_len: usize,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let seq = manifest.model.seq_len;
+    let mut flat_grad = vec![0f32; flat_len];
+    let mut loss_sum = 0f64;
+    let mut token_count = 0f64;
+    let mut row = 0usize;
+    for m in manifest.decompose_batch(batch) {
+        let lo = row * seq;
+        let hi = (row + m) * seq;
+        let out = handle.grad_step(
+            tokens[lo..hi].to_vec(),
+            targets[lo..hi].to_vec(),
+            m,
+        )?;
+        // Accumulate (sum-loss gradients add exactly).
+        let mut off = 0usize;
+        for (g, &sz) in out.grads.iter().zip(sizes) {
+            debug_assert_eq!(g.len(), sz);
+            for (acc, v) in flat_grad[off..off + sz].iter_mut().zip(g) {
+                *acc += v;
+            }
+            off += sz;
+        }
+        loss_sum += out.loss_sum as f64;
+        token_count += out.token_count as f64;
+        row += m;
+    }
+    debug_assert_eq!(row, batch);
+    Ok((flat_grad, loss_sum, token_count))
+}

@@ -30,6 +30,17 @@
 //! makes elastic re-planning over recurring memberships near-free) and
 //! grids of (planner, batch) solves run in parallel via
 //! [`plan::sweep`]. See DESIGN.md §Plan subsystem.
+//!
+//! Symmetrically, every training-step backend implements the
+//! [`exec::StepExecutor`] trait: the dependency-free
+//! [`exec::NativeExecutor`] runs the full numeric FSDP pipeline (uneven
+//! split → grad accumulation → ring ReduceScatter → sharded Adam → ring
+//! AllGather) in the default build, and the PJRT engine is just another
+//! backend behind the same trait (`xla` feature). On top of both,
+//! [`coordinator::session::Session`] runs LIVE elastic training:
+//! aws-trace churn → re-plan through the registry + cache → apply the
+//! state-migration transfer list → resume. See DESIGN.md §Exec
+//! subsystem.
 
 pub mod benchkit;
 pub mod cli;
@@ -45,6 +56,7 @@ pub mod util;
 pub mod baselines;
 pub mod collectives;
 pub mod coordinator;
+pub mod exec;
 pub mod plan;
 pub mod runtime;
 pub mod trainer;

@@ -93,6 +93,21 @@ impl Gen {
         xs
     }
 
+    /// A ratio vector of length n where a random subset of entries is
+    /// EXACTLY zero (at least one stays positive) — the `r_i = 0`
+    /// empty-shard layouts the ring collectives and migration planner
+    /// must survive. Not normalized; `ShardLayout::by_ratios` does that.
+    pub fn sparse_ratios(&mut self, n: usize) -> Vec<f64> {
+        let mut xs = self.ratios(n);
+        let keep = self.rng.range(0, n);
+        for (i, x) in xs.iter_mut().enumerate() {
+            if i != keep && self.rng.bool(0.5) {
+                *x = 0.0;
+            }
+        }
+        xs
+    }
+
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }

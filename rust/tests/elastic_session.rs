@@ -1,0 +1,150 @@
+//! Acceptance: `cargo test` in the DEFAULT (no-`xla`) build runs a live
+//! elastic training session end to end — ≥3 churn events with real
+//! state migration — and after every migration the parameters are
+//! BITWISE-identical to a single-worker reference trained on the same
+//! batches. Recurring memberships must be served by the PlanCache.
+//!
+//! Why bitwise equality is even possible: the native backend quantizes
+//! per-token gradient contributions onto a dyadic grid whose partial
+//! sums are exactly representable in f32 (see `exec::native`), so
+//! gradient summation is associative — any worker split, ring schedule
+//! or shard layout yields the same totals, and Adam/allgather are
+//! elementwise from there.
+
+use std::sync::Arc;
+
+use cephalo::coordinator::session::{Session, SessionConfig};
+use cephalo::exec::{NativeExecutor, SurrogateSpec};
+use cephalo::plan::CephaloPlanner;
+use cephalo::testkit::tiny_cluster;
+use cephalo::trainer::{TrainConfig, Trainer, WorkerSpec};
+
+const SEED: u64 = 11;
+const BATCH: usize = 8;
+const STEPS_PER_EVENT: usize = 3;
+
+fn session() -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        ..Default::default()
+    };
+    Session::new(
+        tiny_cluster(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("session starts on the tiny cluster")
+}
+
+fn reference() -> Trainer {
+    // One worker, the whole batch, the whole state — same surrogate,
+    // seed and corpus stream as the session's trainer.
+    let cfg = TrainConfig {
+        steps: 0,
+        seed: SEED,
+        log_every: 0,
+        ..Default::default()
+    };
+    Trainer::from_executor(
+        Box::new(NativeExecutor::new(SurrogateSpec::default())),
+        vec![WorkerSpec {
+            batch: BATCH,
+            state_ratio: 1.0,
+            name: "solo".into(),
+        }],
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn live_session_stays_bitwise_on_the_reference_trajectory() {
+    let mut session = session();
+    let mut reference = reference();
+    assert_eq!(
+        session.trainer().params(),
+        reference.params(),
+        "same seed must give the same init"
+    );
+
+    // Explicit churn: shrink to 1 GPU, regrow to 2, repeat — five
+    // events, four real migrations, both recurring memberships seen
+    // twice or more.
+    let churn = [2usize, 1, 2, 1, 2];
+    for (hour, &size) in churn.iter().enumerate() {
+        let report = session.step_event(hour, size).unwrap();
+        assert_eq!(report.gpus, size);
+        assert_eq!(report.steps, STEPS_PER_EVENT);
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = reference.history.len();
+            reference.step(idx).unwrap();
+        }
+        assert_eq!(
+            session.trainer().params(),
+            reference.params(),
+            "params diverged after event {hour} (membership {size})"
+        );
+        // Losses ride the same trajectory too (f64 reduction order may
+        // differ across worker counts, so compare approximately).
+        let s_loss = session.trainer().history.last().unwrap().mean_loss;
+        let r_loss = reference.history.last().unwrap().mean_loss;
+        assert!(
+            (s_loss - r_loss).abs() <= 1e-9 * s_loss.abs().max(1.0),
+            "loss diverged: {s_loss} vs {r_loss}"
+        );
+    }
+    assert!(session.trainer().history.len() >= 3 * STEPS_PER_EVENT);
+
+    // Real migrations happened: shrink events move the departed rank's
+    // shard, regrow events restore the newcomer's from the checkpoint.
+    let moved: usize = session
+        .reports
+        .iter()
+        .map(|r| r.moved_state_elems)
+        .sum();
+    assert!(moved > 0, "churn never moved any state");
+
+    // Recurring memberships are cache hits, not DP solves: 5 events
+    // over 2 memberships (the size-2 plan is already cached from
+    // session start) leaves at most one cold solve.
+    assert!(
+        session.cache().hits() >= 3,
+        "expected ≥3 plan-cache hits, got {} (misses {})",
+        session.cache().hits(),
+        session.cache().misses()
+    );
+    assert!(session.reports.iter().any(|r| r.from_cache));
+    let cold: usize = session
+        .reports
+        .iter()
+        .filter(|r| !r.from_cache)
+        .count();
+    assert!(cold <= 1, "more than one cold solve across recurrences");
+}
+
+#[test]
+fn trace_driven_session_also_matches_the_reference() {
+    // Same invariant, but with the membership sizes coming from the
+    // AWS availability trace — the actual `elastic --live` path.
+    let mut session = session();
+    let mut reference = reference();
+    let sizes = session.churn_sizes(4);
+    assert!(sizes.len() >= 3, "need ≥3 churn events");
+    for (hour, &size) in sizes.iter().enumerate() {
+        session.step_event(hour, size).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = reference.history.len();
+            reference.step(idx).unwrap();
+        }
+        assert_eq!(
+            session.trainer().params(),
+            reference.params(),
+            "params diverged after trace hour {hour} (size {size})"
+        );
+    }
+    assert!(session.cache().hits() >= 1);
+}
