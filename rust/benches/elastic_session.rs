@@ -64,7 +64,8 @@ fn main() {
 
     let mut t = Table::new(
         "Live elastic session across the churn trace (native backend)",
-        &["event", "gpus", "plan", "state moved (GB)", "sim steps/s"],
+        &["event", "gpus", "plan", "state moved (GB)", "sim steps/s",
+          "wall steps/s"],
     );
     for r in &reports {
         t.add_row(vec![
@@ -73,6 +74,7 @@ fn main() {
             String::from(if r.from_cache { "hit" } else { "solve" }),
             format!("{:.2}", r.migration_bytes / 1e9),
             format!("{:.2}", r.steps_per_sec),
+            format!("{:.2}", r.measured_steps_per_sec),
         ]);
     }
     println!("{}", t.render());

@@ -67,6 +67,13 @@ pub fn ring_allgather(shards: &[Vec<f32>], layout: &ShardLayout)
     -> Vec<f32> {
     let n = layout.num_ranks();
     assert_eq!(shards.len(), n);
+    if n == 1 {
+        // Guaranteed 1-rank fast path: the single shard IS the full
+        // vector — no staging buffer, no ring bookkeeping, and exactly
+        // the size assertion `direct_allgather` applies.
+        assert_eq!(shards[0].len(), layout.len(), "rank 0 shard size");
+        return shards[0].clone();
+    }
     // Each rank's working buffer for the full vector.
     let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![0f32; layout.len()]).collect();
     for (rank, shard) in shards.iter().enumerate() {
@@ -107,6 +114,13 @@ pub fn ring_reduce_scatter(full: &[Vec<f32>], layout: &ShardLayout)
     -> Vec<Vec<f32>> {
     let n = layout.num_ranks();
     assert_eq!(full.len(), n);
+    if n == 1 {
+        // 1-rank fast path: the sum over one contribution is the
+        // contribution itself, bit for bit (cloning preserves even
+        // -0.0 payloads, which `direct_*`'s `0.0 + x` would not).
+        assert_eq!(full[0].len(), layout.len(), "rank 0 contribution");
+        return vec![full[0].clone()];
+    }
     let mut bufs: Vec<Vec<f32>> = full.to_vec();
     for s in 0..n.saturating_sub(1) {
         // Rank r sends segment (r - s - 1 + 2n) mod n, accumulated into
@@ -296,6 +310,40 @@ mod tests {
         let rs = ring_reduce_scatter(&full, &layout);
         assert!(rs[0].is_empty() && rs[2].is_empty() && rs[3].is_empty());
         assert_eq!(rs[1], vec![6.0; 7]); // 0 + 1 + 2 + 3, exactly
+    }
+
+    #[test]
+    fn prop_single_rank_ring_is_an_identity_fast_path() {
+        // Satellite: the 1-rank ring is a guaranteed no-copy-loop fast
+        // path, consistent with `direct_*` (which used to be only
+        // accidentally true of the staging-buffer path), including the
+        // zero-length and `sparse_ratios` corners.
+        check("ring-single-rank-identity", 120, |g| {
+            let len = g.usize_in(0, 400);
+            let layout =
+                ShardLayout::by_ratios(len, &g.sparse_ratios(1));
+            assert_eq!(layout.num_ranks(), 1);
+            let shard = g.vec_f32(len, 2.0);
+            let ag = ring_allgather(&[shard.clone()], &layout);
+            assert_eq!(ag, shard, "1-rank allgather must be identity");
+            assert_eq!(ag, direct_allgather(&[shard.clone()], &layout));
+            let rs = ring_reduce_scatter(&[shard.clone()], &layout);
+            assert_eq!(rs.len(), 1);
+            assert_eq!(rs[0], shard, "1-rank reduce-scatter is identity");
+            assert_eq!(
+                rs,
+                direct_reduce_scatter(&[shard.clone()], &layout)
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 0 shard size")]
+    fn single_rank_fast_path_keeps_direct_style_assertions() {
+        // The fast path must reject malformed shards exactly like
+        // `direct_allgather` does, not silently return them.
+        let layout = ShardLayout::by_ratios(4, &[1.0]);
+        let _ = ring_allgather(&[vec![1.0, 2.0]], &layout);
     }
 
     #[test]

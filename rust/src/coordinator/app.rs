@@ -5,12 +5,13 @@ use std::sync::Arc;
 
 use crate::cli::{opt, parse, switch, usage, OptSpec};
 use crate::cluster::Cluster;
-use crate::coordinator::session::{Session, SessionConfig};
+use crate::coordinator::session::{prefix_cluster, Session, SessionConfig};
 use crate::coordinator::{elastic, Workload};
 use crate::exec::{NativeExecutor, StepTimeModel, SurrogateSpec};
 use crate::optimizer::PlanError;
 use crate::plan::{self, PlanCache, Planner, PlannerRegistry};
 use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
+use crate::transport::{self, DistConfig, DistDriver, FabricSpec};
 use crate::util::tablefmt::{fmt_throughput, Table};
 
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -27,6 +28,7 @@ pub fn main_with_args(argv: Vec<String>) -> i32 {
         "profile" => cmd_profile(&rest),
         "train" => cmd_train(&rest),
         "trace" => cmd_trace(&rest),
+        "worker" => cmd_worker(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -54,8 +56,11 @@ fn print_help() {
          runs real\n            migration + training on the native \
          backend\n  \
          profile   fit or measure performance models\n  \
-         train     real numeric training (--backend native | pjrt)\n  \
+         train     real numeric training (--backend native | pjrt,\n            \
+         --transport inproc | local | tcp)\n  \
          trace     generate the AWS availability trace (Fig. 1)\n  \
+         worker    one distributed training rank (spawned by the\n            \
+         coordinator for --transport tcp)\n  \
          help      this message\n\n\
          run `cephalo <command> --help` for options"
     );
@@ -311,6 +316,12 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
                    Some("5")));
     specs.push(opt("min-gpus", "smallest live membership (0 = auto)",
                    Some("0")));
+    specs.push(opt("transport", "live-session substrate: inproc | \
+                                 local (channel ranks) | tcp (worker \
+                                 processes)", Some("inproc")));
+    specs.push(opt("plan-cache", "JSON file to warm the plan cache \
+                                  from and persist it to (--live)",
+                   None));
     let a = parse(argv, &specs)?;
     if a.has("help") {
         println!("{}", usage(
@@ -415,12 +426,16 @@ fn cmd_elastic_live(
     let steps = a.get_usize("steps").ok_or("bad --steps")?;
     let registry = PlannerRegistry::with_defaults();
     let planner = lookup_planner(&registry, a.get("planner").unwrap())?;
+    let fabric = FabricSpec::parse(a.get("transport").unwrap())
+        .map_err(|e| e.to_string())?;
     let cfg = SessionConfig {
         model: a.get("model").unwrap().to_string(),
         batch,
         steps_per_event: steps,
         seed: a.get_u64("seed").unwrap_or(42),
         min_gpus: a.get_usize("min-gpus").unwrap_or(0),
+        fabric,
+        plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
         ..Default::default()
     };
     let cluster_name = cluster.name.clone();
@@ -434,10 +449,10 @@ fn cmd_elastic_live(
             "Live elastic session: {} @ {batch} on cluster \
              {cluster_name}, {steps} steps/event, backend {}",
             a.get("model").unwrap(),
-            session.trainer().executor_name()
+            session.backend_label()
         ),
         &["event", "gpus", "plan", "solve (s)", "state moved (GB)",
-          "loss", "steps/s"],
+          "loss", "steps/s (model)", "steps/s (wall)"],
     );
     for r in &reports {
         t.add_row(vec![
@@ -448,17 +463,23 @@ fn cmd_elastic_live(
             format!("{:.2}", r.migration_bytes / 1e9),
             format!("{:.4}", r.mean_loss),
             format!("{:.2}", r.steps_per_sec),
+            format!("{:.2}", r.measured_steps_per_sec),
         ]);
     }
     println!("{}", t.render());
     println!(
-        "plan cache: {} hits / {} misses; {} training steps survived \
-         {} membership changes",
+        "plan cache: {} hits / {} misses ({} evictions); {} training \
+         steps survived {} membership changes",
         session.cache().hits(),
         session.cache().misses(),
-        session.trainer().history.len(),
+        session.cache().evictions(),
+        session.steps_run(),
         reports.len()
     );
+    session.save_plan_cache().map_err(|e| e.to_string())?;
+    if let Some(p) = a.get("plan-cache") {
+        println!("plan cache persisted to {p}");
+    }
     Ok(())
 }
 
@@ -545,6 +566,12 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     let mut specs = common_specs();
     specs.push(opt("backend", "execution backend: native | pjrt",
                    Some("native")));
+    specs.push(opt("transport", "collective substrate: inproc (one \
+                                 address space) | local (channel ranks) \
+                                 | tcp (worker processes over loopback \
+                                 sockets)", Some("inproc")));
+    specs.push(opt("workers", "distributed ranks; trains on the first N \
+                               GPUs of the cluster (0 = all)", Some("0")));
     specs.push(opt("steps", "training steps", Some("50")));
     specs.push(opt("lr", "Adam learning rate", Some("0.001")));
     specs.push(opt("artifacts", "artifacts directory (pjrt backend)",
@@ -556,14 +583,29 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         println!("{}", usage(
             "cephalo train",
             "train for real: plan on the simulated cluster, execute the \
-             numeric FSDP pipeline on the chosen backend",
+             numeric FSDP pipeline on the chosen backend and transport",
             &specs,
         ));
         return Ok(());
     }
-    let cluster = resolve_cluster(a.get("cluster").unwrap())?;
+    let mut cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let steps = a.get_usize("steps").ok_or("bad --steps")?;
+    let fabric = FabricSpec::parse(a.get("transport").unwrap())
+        .map_err(|e| e.to_string())?;
+    let workers_flag = a.get_usize("workers").ok_or("bad --workers")?;
+    if workers_flag > 0 {
+        if workers_flag > cluster.num_gpus() {
+            return Err(format!(
+                "--workers {workers_flag} exceeds the cluster's {} GPUs",
+                cluster.num_gpus()
+            ));
+        }
+        cluster = prefix_cluster(&cluster, workers_flag);
+    }
+    if let Some(spec) = fabric {
+        return train_distributed(&a, cluster, batch, steps, spec);
+    }
 
     // Plan compute/state division on the simulated heterogeneous
     // cluster, then execute the REAL numerics on this host.
@@ -643,6 +685,121 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// `train --transport local|tcp`: plan on the simulated cluster, then
+/// run one SPMD rank per cluster GPU over the chosen fabric — worker
+/// threads over channels for `local`, spawned `cephalo worker`
+/// processes over loopback sockets for `tcp`.
+fn train_distributed(
+    a: &crate::cli::Args,
+    cluster: Cluster,
+    batch: usize,
+    steps: usize,
+    spec: FabricSpec,
+) -> Result<(), String> {
+    if a.get("backend").unwrap() != "native" {
+        return Err("--transport local|tcp runs on the native backend \
+                    only (the pjrt backend stays in-process)"
+            .into());
+    }
+    let names: Vec<String> =
+        cluster.gpus().iter().map(|g| g.spec.name.clone()).collect();
+    let world = cluster.num_gpus();
+    let seed = a.get_u64("seed").unwrap_or(42);
+    let w = Workload::prepare(cluster, a.get("model").unwrap(), seed)
+        .map_err(plan_err)?;
+    let (asg, _) = w.optimize(batch).map_err(plan_err)?;
+    let workers = Trainer::workers_from_assignment(&asg, &names);
+    crate::info!(
+        "distributed plan ({world} ranks over {}): batches {:?}, state \
+         ratios {:?}",
+        spec.label(),
+        workers.iter().map(|w| w.batch).collect::<Vec<_>>(),
+        workers
+            .iter()
+            .map(|w| (w.state_ratio * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    let dcfg = DistConfig {
+        seed,
+        adam: crate::trainer::adam::AdamConfig {
+            lr: a.get_f64("lr").unwrap_or(1e-3) as f32,
+            ..Default::default()
+        },
+        corpus_branch: 4,
+        surrogate: SurrogateSpec::default(),
+    };
+    let timer = StepTimeModel::from_oracle(&w.oracle, w.model.layers);
+    let mut driver = DistDriver::launch(spec, world, dcfg, workers)
+        .map_err(|e| e.to_string())?
+        .with_timer(timer);
+    let log_every = a.get_usize("log-every").unwrap_or(10);
+    for s in 0..steps {
+        let st = driver.step(s).map_err(|e| e.to_string())?;
+        if log_every > 0 && s % log_every == 0 {
+            crate::info!(
+                "step {:>5}  loss {:.4}  ({:.2}s modeled / {:.4}s wall, \
+                 {} tokens)",
+                s,
+                st.mean_loss,
+                st.wall_seconds,
+                st.measured_seconds,
+                st.tokens
+            );
+        }
+    }
+    let first =
+        driver.history.first().map(|s| s.mean_loss).unwrap_or(0.0);
+    let last = driver.history.last().map(|s| s.mean_loss).unwrap_or(0.0);
+    println!(
+        "transport {}: {world} ranks, loss {first:.4} -> {last:.4} over \
+         {} steps",
+        spec.label(),
+        driver.history.len()
+    );
+    if let Some(path) = a.get("loss-csv") {
+        let mut csv = String::from("step,loss,wall_seconds\n");
+        for s in &driver.history {
+            csv.push_str(&format!(
+                "{},{},{}\n",
+                s.step, s.mean_loss, s.wall_seconds
+            ));
+        }
+        std::fs::write(path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    driver.shutdown();
+    Ok(())
+}
+
+/// `cephalo worker --rank i --connect addr --world n`: one distributed
+/// training rank. Normally spawned by the coordinator (`train` /
+/// `elastic --live` with `--transport tcp`), but any rendezvous
+/// address works — including another host's.
+fn cmd_worker(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        opt("rank", "this rank (1..world; rank 0 is the coordinator)",
+            None),
+        opt("connect", "coordinator rendezvous address (host:port)", None),
+        opt("world", "total rank count including the coordinator", None),
+        switch("help", "show usage"),
+    ];
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage(
+            "cephalo worker",
+            "serve one distributed training rank until shutdown",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let rank = a.get_usize("rank").ok_or("--rank is required")?;
+    let addr = a.get("connect").ok_or("--connect is required")?;
+    let world = a.get_usize("world").ok_or("--world is required")?;
+    let t = transport::tcp::connect(addr, rank, world)
+        .map_err(|e| e.to_string())?;
+    transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
 }
 
 /// Stand up the PJRT-backed trainer (`--backend pjrt`).
@@ -784,6 +941,53 @@ mod tests {
                                 "--events", "3", "--steps", "1"])),
             0
         );
+    }
+
+    #[test]
+    fn train_distributed_local_transport_runs() {
+        // Two SPMD ranks over the channel fabric, real message plane,
+        // no processes (tcp-with-processes is exercised by the CI
+        // smoke job — spawning the test binary would re-enter libtest).
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "local",
+                                "--workers", "2", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "16",
+                                "--steps", "2", "--log-every", "0"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "bogus",
+                                "--cluster", "a", "--batch", "16"])),
+            1
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "local",
+                                "--workers", "99", "--cluster", "a",
+                                "--batch", "16"])),
+            1
+        );
+    }
+
+    #[test]
+    fn elastic_live_local_transport_runs() {
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--live", "--transport",
+                                "local", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "32",
+                                "--events", "2", "--steps", "1"])),
+            0
+        );
+    }
+
+    #[test]
+    fn worker_requires_connection_args() {
+        assert_eq!(main_with_args(sv(&["worker"])), 1);
+        assert_eq!(
+            main_with_args(sv(&["worker", "--rank", "0", "--connect",
+                                "127.0.0.1:1", "--world", "4"])),
+            1
+        );
+        assert_eq!(main_with_args(sv(&["worker", "--help"])), 0);
     }
 
     #[test]

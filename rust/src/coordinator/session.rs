@@ -1,30 +1,40 @@
 //! Live elastic training session: the Fig.-1 workflow end to end, on
 //! real numerics, in the default (no-`xla`) build.
 //!
-//! A [`Session`] owns a generic [`Trainer`] (any `exec::StepExecutor`;
-//! the native backend by default) and reacts to cluster churn the way
-//! the paper's coordinator does:
+//! A [`Session`] owns a training engine and reacts to cluster churn the
+//! way the paper's coordinator does:
 //!
 //! 1. **churn event** — an `cluster/aws_trace` hour folds onto a
 //!    membership size (`aws_trace::membership_size`); the live cluster
 //!    is the corresponding prefix of the base cluster;
 //! 2. **re-plan** — through the PR-1 planner registry interface with a
-//!    shared [`PlanCache`], so recurring memberships are hash lookups,
-//!    not DP solves;
+//!    shared [`PlanCache`] (optionally persisted to JSON, so a resumed
+//!    session keeps recurring-membership plans warm);
 //! 3. **migrate** — `elastic::plan_migration` emits the transfer list
 //!    at both scales: the PLANNING scale (the Table-2 model's
 //!    parameter count, for reported traffic) and the EXECUTED scale
-//!    (the running trainer's flat state), and
-//!    `elastic::apply_migration` applies the latter to the resident
-//!    Adam shards — peer copies for survivors, checkpoint restores for
-//!    ranks whose old owner departed;
-//! 4. **resume** — [`Trainer::adopt`] installs the new membership and
-//!    training continues on the same corpus stream; with the native
-//!    backend's exact gradient summation, parameters stay bitwise on
-//!    the single-worker reference trajectory across every migration
-//!    (asserted in `tests/elastic_session.rs`).
+//!    (the running trainer's flat state); the executed-scale list is
+//!    applied to the resident Adam shards;
+//! 4. **resume** — training continues on the same corpus stream; with
+//!    the native backend's exact gradient summation, parameters stay
+//!    bitwise on the single-worker reference trajectory across every
+//!    migration (asserted in `tests/elastic_session.rs` and
+//!    `tests/dist_session.rs`).
+//!
+//! The engine behind steps 3–4 is selected by
+//! [`SessionConfig::fabric`]:
+//!
+//! * `None` — the in-process [`Trainer`] (historical default): all
+//!    worker state in one address space, migration via
+//!    `elastic::apply_migration` + [`Trainer::adopt`].
+//! * `Some(FabricSpec)` — a [`DistDriver`]: one SPMD rank per cluster
+//!    GPU over channels (`local`) or TCP sockets (`tcp`, threads or
+//!    spawned `cephalo worker` processes), with the SAME transfer list
+//!    executed as rank-to-rank wire traffic. Both engines produce
+//!    bit-identical trajectories (DESIGN.md invariant 10).
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::cluster::{aws_trace, Cluster, Node};
@@ -34,7 +44,8 @@ use crate::optimizer::Assignment;
 use crate::plan::{PlanCache, Planner};
 use crate::sharding::ShardLayout;
 use crate::trainer::adam::{AdamConfig, AdamShard};
-use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
+use crate::trainer::{StepStats, TrainConfig, Trainer};
+use crate::transport::{DistConfig, DistDriver, FabricSpec};
 use crate::util::error::{anyhow, Result};
 
 /// Session configuration. `model`/`batch` drive the PLANNING scale
@@ -56,6 +67,14 @@ pub struct SessionConfig {
     pub min_gpus: usize,
     /// The native backend's executed model.
     pub surrogate: SurrogateSpec,
+    /// `None` = in-process trainer; `Some(spec)` = one SPMD rank per
+    /// cluster GPU over the given transport fabric.
+    pub fabric: Option<FabricSpec>,
+    /// When set, the plan cache is loaded from this JSON file at
+    /// session start (if it exists) and can be saved back with
+    /// [`Session::save_plan_cache`] — recurring memberships stay warm
+    /// across restarts.
+    pub plan_cache_path: Option<PathBuf>,
 }
 
 impl Default for SessionConfig {
@@ -68,6 +87,8 @@ impl Default for SessionConfig {
             adam: AdamConfig::default(),
             min_gpus: 0,
             surrogate: SurrogateSpec::default(),
+            fabric: None,
+            plan_cache_path: None,
         }
     }
 }
@@ -89,9 +110,22 @@ pub struct EventReport {
     pub moved_state_elems: usize,
     pub steps: usize,
     pub mean_loss: f64,
-    /// Steps/sec under the executor's timing hook (simulated when a
-    /// `StepTimeModel` is attached).
+    /// Steps/sec under the executor's `step_seconds` timing hook —
+    /// MODELED time when a `StepTimeModel` is attached (the number the
+    /// planner's throughput predictions are comparable to).
     pub steps_per_sec: f64,
+    /// Steps/sec on actually measured wall time — what this host
+    /// really executed. Kept separate from `steps_per_sec` so logs and
+    /// bench output can never conflate simulated with executed rates.
+    pub measured_steps_per_sec: f64,
+}
+
+/// The training engine behind a session: one address space, or one
+/// SPMD rank per GPU over a transport fabric (boxed: both engines are
+/// field-heavy).
+enum Engine {
+    InProcess(Box<Trainer>),
+    Dist(Box<DistDriver>),
 }
 
 /// A running elastic trainer; see the module docs.
@@ -103,7 +137,7 @@ pub struct Session {
     /// Per-membership-size workloads (profile + fingerprint), memoized
     /// so recurring sizes reuse the exact same `PlanContext`.
     workloads: BTreeMap<usize, Workload>,
-    trainer: Trainer,
+    engine: Engine,
     current_size: usize,
     current_asg: Assignment,
     pub reports: Vec<EventReport>,
@@ -155,7 +189,7 @@ fn ensure_workload<'a>(
 
 impl Session {
     /// Start a session on the full `base` cluster: profile, plan (the
-    /// first cache entry), and stand up the native trainer.
+    /// first cache entry), and stand up the training engine.
     pub fn new(
         base: Cluster,
         planner: Arc<dyn Planner>,
@@ -165,7 +199,21 @@ impl Session {
         if n == 0 {
             return Err(anyhow!("empty base cluster"));
         }
-        let cache = PlanCache::new();
+        // A plan cache is purely an optimization: an unreadable or
+        // malformed file degrades to a cold start, never a refusal.
+        let cache = match &cfg.plan_cache_path {
+            Some(p) if p.exists() => match PlanCache::load(p) {
+                Ok(c) => c,
+                Err(e) => {
+                    crate::warn!(
+                        "ignoring plan cache {}: {e}",
+                        p.display()
+                    );
+                    PlanCache::new()
+                }
+            },
+            _ => PlanCache::new(),
+        };
         let mut workloads = BTreeMap::new();
         let (asg, workers, timer) = {
             let w = ensure_workload(
@@ -192,23 +240,43 @@ impl Session {
                 StepTimeModel::from_oracle(&w.oracle, w.model.layers);
             (asg, workers, timer)
         };
-        let exec = NativeExecutor::new(cfg.surrogate.clone())
-            .with_timer(timer);
-        let tcfg = TrainConfig {
-            steps: cfg.steps_per_event,
-            seed: cfg.seed,
-            adam: cfg.adam,
-            corpus_branch: 4,
-            log_every: 0,
+        let engine = match cfg.fabric {
+            None => {
+                let exec = NativeExecutor::new(cfg.surrogate.clone())
+                    .with_timer(timer);
+                let tcfg = TrainConfig {
+                    steps: cfg.steps_per_event,
+                    seed: cfg.seed,
+                    adam: cfg.adam,
+                    corpus_branch: 4,
+                    log_every: 0,
+                };
+                Engine::InProcess(Box::new(Trainer::from_executor(
+                    Box::new(exec),
+                    workers,
+                    tcfg,
+                )?))
+            }
+            Some(spec) => {
+                let dcfg = DistConfig {
+                    seed: cfg.seed,
+                    adam: cfg.adam,
+                    corpus_branch: 4,
+                    surrogate: cfg.surrogate.clone(),
+                };
+                Engine::Dist(Box::new(
+                    DistDriver::launch(spec, n, dcfg, workers)?
+                        .with_timer(timer),
+                ))
+            }
         };
-        let trainer = Trainer::from_executor(Box::new(exec), workers, tcfg)?;
         Ok(Session {
             base,
             cfg,
             planner,
             cache,
             workloads,
-            trainer,
+            engine,
             current_size: n,
             current_asg: asg,
             reports: Vec::new(),
@@ -278,7 +346,7 @@ impl Session {
         };
 
         // Executed-scale migration: same r_i division, applied to the
-        // trainer's actual flat state. A recurring membership that
+        // engine's actual flat state. A recurring membership that
         // re-plans to the EXACT running assignment (the cache-hit
         // steady state) is a true no-op: skip the checkpoint/copy/adopt
         // churn entirely.
@@ -287,7 +355,7 @@ impl Session {
         let moved = if unchanged {
             0
         } else {
-            let old_layout = self.trainer.layout().clone();
+            let old_layout = self.layout().clone();
             let new_ratios: Vec<f64> = re
                 .assignment
                 .per_gpu
@@ -299,51 +367,62 @@ impl Session {
             let (transfers, _resident, moved) = elastic::plan_migration(
                 &old_layout, &new_layout, &survivors,
             );
-            let ck = self.trainer.checkpoint();
-            let old_m: Vec<&[f32]> = self
-                .trainer
-                .shards()
-                .iter()
-                .map(|s| s.m.as_slice())
-                .collect();
-            let new_m = elastic::apply_migration(
-                &old_layout, &old_m, &new_layout, &survivors, &transfers,
-                &ck.adam_m,
-            );
-            let old_v: Vec<&[f32]> = self
-                .trainer
-                .shards()
-                .iter()
-                .map(|s| s.v.as_slice())
-                .collect();
-            let new_v = elastic::apply_migration(
-                &old_layout, &old_v, &new_layout, &survivors, &transfers,
-                &ck.adam_v,
-            );
-            let shards: Vec<AdamShard> = new_m
-                .into_iter()
-                .zip(new_v)
-                .map(|(m, v)| AdamShard {
-                    m,
-                    v,
-                    step: ck.step,
-                    cfg: self.cfg.adam,
-                })
-                .collect();
             let workers =
                 Trainer::workers_from_assignment(&re.assignment, &names);
-            self.trainer.adopt(workers, shards)?;
+            match &mut self.engine {
+                Engine::InProcess(trainer) => {
+                    let ck = trainer.checkpoint();
+                    let old_m: Vec<&[f32]> = trainer
+                        .shards()
+                        .iter()
+                        .map(|s| s.m.as_slice())
+                        .collect();
+                    let new_m = elastic::apply_migration(
+                        &old_layout, &old_m, &new_layout, &survivors,
+                        &transfers, &ck.adam_m,
+                    );
+                    let old_v: Vec<&[f32]> = trainer
+                        .shards()
+                        .iter()
+                        .map(|s| s.v.as_slice())
+                        .collect();
+                    let new_v = elastic::apply_migration(
+                        &old_layout, &old_v, &new_layout, &survivors,
+                        &transfers, &ck.adam_v,
+                    );
+                    let shards: Vec<AdamShard> = new_m
+                        .into_iter()
+                        .zip(new_v)
+                        .map(|(m, v)| AdamShard {
+                            m,
+                            v,
+                            step: ck.step,
+                            cfg: self.cfg.adam,
+                        })
+                        .collect();
+                    trainer.adopt(workers, shards)?;
+                }
+                Engine::Dist(driver) => {
+                    // The SAME transfer list, executed as rank-to-rank
+                    // wire traffic (peer copies; departed owners are
+                    // standby processes that re-stream their ranges —
+                    // numerically the checkpoint restore).
+                    driver.migrate(workers, &survivors, &transfers)?;
+                }
+            }
             moved
         };
 
         // Resume training on the migrated state.
-        let step_base = self.trainer.history.len();
+        let step_base = self.steps_run();
         let mut loss_acc = 0f64;
-        let mut secs = 0f64;
+        let mut secs_model = 0f64;
+        let mut secs_measured = 0f64;
         for s in 0..self.cfg.steps_per_event {
-            let st = self.trainer.step(step_base + s)?;
+            let st = self.step_once(step_base + s)?;
             loss_acc += st.mean_loss;
-            secs += st.wall_seconds;
+            secs_model += st.wall_seconds;
+            secs_measured += st.measured_seconds;
         }
         let steps = self.cfg.steps_per_event;
         let report = EventReport {
@@ -356,12 +435,28 @@ impl Session {
             moved_state_elems: moved,
             steps,
             mean_loss: if steps > 0 { loss_acc / steps as f64 } else { 0.0 },
-            steps_per_sec: if secs > 0.0 { steps as f64 / secs } else { 0.0 },
+            steps_per_sec: if secs_model > 0.0 {
+                steps as f64 / secs_model
+            } else {
+                0.0
+            },
+            measured_steps_per_sec: if secs_measured > 0.0 {
+                steps as f64 / secs_measured
+            } else {
+                0.0
+            },
         };
         self.current_asg = re.assignment;
         self.current_size = size;
         self.reports.push(report.clone());
         Ok(report)
+    }
+
+    fn step_once(&mut self, step_idx: usize) -> Result<StepStats> {
+        match &mut self.engine {
+            Engine::InProcess(t) => t.step(step_idx),
+            Engine::Dist(d) => d.step(step_idx),
+        }
     }
 
     /// Drive `events` churn events straight off the availability trace.
@@ -373,8 +468,65 @@ impl Session {
         Ok(self.reports.clone())
     }
 
+    /// The in-process trainer. Only meaningful for `fabric: None`
+    /// sessions; distributed sessions have no leader-resident trainer
+    /// (use [`Session::params`] / [`Session::steps_run`] /
+    /// [`Session::backend_label`]).
     pub fn trainer(&self) -> &Trainer {
-        &self.trainer
+        match &self.engine {
+            Engine::InProcess(t) => t.as_ref(),
+            Engine::Dist(_) => panic!(
+                "trainer() on a distributed session; use params() / \
+                 steps_run() / backend_label()"
+            ),
+        }
+    }
+
+    /// The canonical full parameter copy (leader's for in-process,
+    /// rank 0's for distributed — bitwise identical on every rank).
+    pub fn params(&self) -> &[Vec<f32>] {
+        match &self.engine {
+            Engine::InProcess(t) => t.params(),
+            Engine::Dist(d) => d.params(),
+        }
+    }
+
+    /// Total training steps executed so far.
+    pub fn steps_run(&self) -> usize {
+        match &self.engine {
+            Engine::InProcess(t) => t.history.len(),
+            Engine::Dist(d) => d.history.len(),
+        }
+    }
+
+    /// The engine's current shard layout over the flat state.
+    pub fn layout(&self) -> &ShardLayout {
+        match &self.engine {
+            Engine::InProcess(t) => t.layout(),
+            Engine::Dist(d) => d.layout(),
+        }
+    }
+
+    /// Human label of the execution substrate, e.g. "native+inproc",
+    /// "native+local", "native+tcp".
+    pub fn backend_label(&self) -> String {
+        match &self.engine {
+            Engine::InProcess(t) => {
+                format!("{}+{}", t.executor_name(), t.comm_name())
+            }
+            Engine::Dist(d) => format!("native+{}", d.backend_label()),
+        }
+    }
+
+    /// Persist the plan cache to `cfg.plan_cache_path` (no-op when the
+    /// session was configured without one).
+    pub fn save_plan_cache(&self) -> Result<()> {
+        if let Some(p) = &self.cfg.plan_cache_path {
+            self.cache
+                .save(p)
+                .map_err(|e| anyhow!("saving plan cache: {e}"))?;
+        }
+        Ok(())
     }
 
     pub fn cache(&self) -> &PlanCache {
@@ -431,6 +583,8 @@ mod tests {
         let reports = s.run(4).unwrap();
         assert_eq!(reports.len(), 4);
         assert_eq!(s.trainer().history.len(), 8);
+        assert_eq!(s.steps_run(), 8);
+        assert_eq!(s.backend_label(), "native+inproc");
         // 4 events over at most 2 memberships: the cache must hit.
         assert!(
             s.cache().hits() >= 1,
@@ -439,6 +593,7 @@ mod tests {
         for r in &reports {
             assert!(r.mean_loss.is_finite() && r.mean_loss > 0.0);
             assert!(r.steps_per_sec > 0.0);
+            assert!(r.measured_steps_per_sec > 0.0);
         }
     }
 
@@ -469,5 +624,36 @@ mod tests {
         assert!(up.moved_state_elems > 0);
         // Re-entering a seen membership is a cache hit.
         assert!(up.from_cache);
+    }
+
+    #[test]
+    fn event_reports_quote_modeled_time_not_measured_wall() {
+        // Satellite regression: the per-event steps/sec must come from
+        // the executor's `step_seconds` hook (modeled durations when a
+        // StepTimeModel is attached), with measured wall kept in its
+        // own field. Modeled BERT-Large steps on simulated T4/V100
+        // hardware take ~seconds; real surrogate steps take
+        // microseconds — conflating them is off by orders of
+        // magnitude.
+        let cfg = SessionConfig {
+            batch: 8,
+            steps_per_event: 2,
+            seed: 11,
+            min_gpus: 1,
+            ..Default::default()
+        };
+        let mut s = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg,
+        )
+        .unwrap();
+        let r = s.step_event(0, 2).unwrap();
+        assert!(
+            r.measured_steps_per_sec > r.steps_per_sec * 10.0,
+            "modeled rate {} should be far below executed rate {}",
+            r.steps_per_sec,
+            r.measured_steps_per_sec
+        );
     }
 }

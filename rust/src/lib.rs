@@ -41,6 +41,15 @@
 //! aws-trace churn → re-plan through the registry + cache → apply the
 //! state-migration transfer list → resume. See DESIGN.md §Exec
 //! subsystem.
+//!
+//! Rank-to-rank communication is its own subsystem ([`transport`]): a
+//! [`transport::Transport`] trait with channel (`local`) and socket
+//! (`tcp`) backends, segmented ring collectives executed as real peer
+//! messages ([`transport::collectives`]), and an SPMD multi-process
+//! trainer ([`transport::dist`]) behind `cephalo worker` /
+//! `--transport local|tcp`. The wire is bitwise-invisible: every
+//! backend reproduces the in-process trajectory bit for bit
+//! (DESIGN.md §Transport subsystem, invariant 10).
 
 pub mod benchkit;
 pub mod cli;
@@ -60,6 +69,7 @@ pub mod exec;
 pub mod plan;
 pub mod runtime;
 pub mod trainer;
+pub mod transport;
 pub mod optimizer;
 pub mod sharding;
 pub mod sim;

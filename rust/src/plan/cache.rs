@@ -1,4 +1,4 @@
-//! Content-addressed plan memoization.
+//! Content-addressed plan memoization, LRU-bounded and persistable.
 //!
 //! A plan depends only on (cluster + fitted profile, model, batch,
 //! planner): all of it deterministic, so outcomes — including failures,
@@ -8,17 +8,32 @@
 //! so it proxies the oracle too). The elastic coordinator keeps one
 //! cache across membership changes: returning to a previously seen
 //! membership makes re-planning near-free.
+//!
+//! Live sessions over long traces accumulate one entry per
+//! (membership, batch), so the cache is bounded: least-recently-USED
+//! entries are evicted once `capacity` is exceeded (default
+//! [`DEFAULT_CAPACITY`]; 0 = unbounded). Successful outcomes can be
+//! saved to / loaded from a JSON file ([`PlanCache::save`] /
+//! [`PlanCache::load`]) so a RESUMED session starts with its
+//! recurring-membership plans warm instead of re-solving the DP.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use super::{PlanContext, PlanOutcome, Planner};
+use super::{PlanContext, PlanDiagnostics, PlanOutcome, Planner};
 use crate::cluster::Cluster;
-use crate::optimizer::PlanError;
+use crate::optimizer::{Assignment, GpuAssign, PlanError};
 use crate::perfmodel::ClusterPerfProfile;
+use crate::util::json::Json;
 
 use crate::util::fnv1a;
+
+/// Default LRU bound: comfortably above any observed live-trace
+/// working set (memberships × batches), small enough that eviction
+/// scans stay trivial.
+pub const DEFAULT_CAPACITY: usize = 64;
 
 /// Content fingerprint of everything a planner reads about the cluster:
 /// the topology (GPU specs, per-node grouping, bandwidths) and the
@@ -56,21 +71,43 @@ impl PlanKey {
     }
 }
 
+struct Entry {
+    result: Result<PlanOutcome, PlanError>,
+    /// Recency stamp (monotone ticks); smallest = evict first.
+    last_used: u64,
+}
+
 /// Thread-safe memoization of plan results (hits from `sweep` workers
 /// and the elastic coordinator are counted).
 pub struct PlanCache {
-    map: Mutex<HashMap<PlanKey, Result<PlanOutcome, PlanError>>>,
+    map: Mutex<HashMap<PlanKey, Entry>>,
+    tick: AtomicU64,
+    capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl PlanCache {
+    /// An empty cache with the default LRU bound.
     pub fn new() -> PlanCache {
+        PlanCache::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// An empty cache bounded to `capacity` entries (0 = unbounded).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
         PlanCache {
             map: Mutex::new(HashMap::new()),
+            tick: AtomicU64::new(0),
+            capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    fn stamp(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Serve from cache or run the planner and remember the result
@@ -85,9 +122,10 @@ impl PlanCache {
         ctx: &PlanContext<'_>,
     ) -> Result<PlanOutcome, PlanError> {
         let key = PlanKey::for_ctx(ctx, &planner.cache_signature());
-        if let Some(found) = self.map.lock().unwrap().get(&key) {
+        if let Some(found) = self.map.lock().unwrap().get_mut(&key) {
+            found.last_used = self.stamp();
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return match found {
+            return match &found.result {
                 Ok(outcome) => {
                     let mut out = outcome.clone();
                     out.diagnostics.cache_hit = true;
@@ -99,7 +137,24 @@ impl PlanCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let result = planner.plan(ctx);
-        self.map.lock().unwrap().insert(key, result.clone());
+        let mut map = self.map.lock().unwrap();
+        map.insert(
+            key,
+            Entry { result: result.clone(), last_used: self.stamp() },
+        );
+        if self.capacity > 0 {
+            while map.len() > self.capacity {
+                let Some(oldest) = map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                else {
+                    break;
+                };
+                map.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         result
     }
 
@@ -109,6 +164,15 @@ impl PlanCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries dropped by the LRU bound so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -122,6 +186,229 @@ impl PlanCache {
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
     }
+
+    /// Persist all SUCCESSFUL entries as JSON (failures are cheap to
+    /// re-derive and carry non-serializable error structure). Entries
+    /// are sorted for deterministic output.
+    pub fn save(&self, path: &Path) -> crate::util::error::Result<()> {
+        use std::collections::BTreeMap;
+        let map = self.map.lock().unwrap();
+        let mut rows: Vec<(&PlanKey, &PlanOutcome)> = map
+            .iter()
+            .filter_map(|(k, e)| e.result.as_ref().ok().map(|o| (k, o)))
+            .collect();
+        rows.sort_by(|(a, _), (b, _)| {
+            (&a.model, a.batch, &a.planner, a.cluster_fingerprint).cmp(&(
+                &b.model,
+                b.batch,
+                &b.planner,
+                b.cluster_fingerprint,
+            ))
+        });
+        let entries: Vec<Json> = rows
+            .into_iter()
+            .map(|(k, o)| {
+                let mut e = BTreeMap::new();
+                e.insert(
+                    "fingerprint".into(),
+                    Json::Str(format!("{:#x}", k.cluster_fingerprint)),
+                );
+                e.insert("model".into(), Json::Str(k.model.clone()));
+                e.insert("batch".into(), Json::Num(k.batch as f64));
+                e.insert("planner".into(), Json::Str(k.planner.clone()));
+                e.insert("outcome".into(), outcome_to_json(o));
+                Json::Obj(e)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Num(1.0));
+        root.insert("capacity".into(), Json::Num(self.capacity as f64));
+        root.insert("entries".into(), Json::Arr(entries));
+        // Write-then-rename so a crash mid-save can never leave a
+        // truncated file behind (the cache is an optimization; a
+        // corrupt one must not brick future sessions).
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, Json::Obj(root).render())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a cache previously written by [`PlanCache::save`]. Loaded
+    /// entries count as neither hits nor misses until touched.
+    pub fn load(path: &Path) -> crate::util::error::Result<PlanCache> {
+        use crate::util::error::anyhow;
+        let text = std::fs::read_to_string(path)?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("plan cache file missing version"))?;
+        if version != 1 {
+            return Err(anyhow!("unsupported plan cache version {version}"));
+        }
+        let capacity = root
+            .get("capacity")
+            .and_then(Json::as_usize)
+            .unwrap_or(DEFAULT_CAPACITY);
+        let cache = PlanCache::with_capacity(capacity);
+        {
+            let mut map = cache.map.lock().unwrap();
+            for e in root
+                .get("entries")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+            {
+                let fp_text = e
+                    .get("fingerprint")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing fingerprint"))?;
+                let fp = u64::from_str_radix(
+                    fp_text.trim_start_matches("0x"),
+                    16,
+                )
+                .map_err(|_| anyhow!("bad fingerprint '{fp_text}'"))?;
+                let key = PlanKey {
+                    cluster_fingerprint: fp,
+                    model: e
+                        .get("model")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry missing model"))?
+                        .to_string(),
+                    batch: e
+                        .get("batch")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("entry missing batch"))?,
+                    planner: e
+                        .get("planner")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry missing planner"))?
+                        .to_string(),
+                };
+                let outcome = outcome_from_json(
+                    e.get("outcome")
+                        .ok_or_else(|| anyhow!("entry missing outcome"))?,
+                )?;
+                let stamp = cache.tick.fetch_add(1, Ordering::Relaxed);
+                map.insert(
+                    key,
+                    Entry { result: Ok(outcome), last_used: stamp },
+                );
+            }
+        }
+        Ok(cache)
+    }
+}
+
+fn outcome_to_json(o: &PlanOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("planner".into(), Json::Str(o.planner.clone()));
+    m.insert("iter_latency".into(), Json::Num(o.iter_latency));
+    m.insert("throughput".into(), Json::Num(o.throughput));
+    m.insert("config".into(), Json::Str(o.config.clone()));
+    m.insert(
+        "assignment".into(),
+        match &o.assignment {
+            None => Json::Null,
+            Some(a) => {
+                let mut am = BTreeMap::new();
+                am.insert(
+                    "layer_latency".into(),
+                    Json::Num(a.layer_latency),
+                );
+                am.insert("iter_latency".into(), Json::Num(a.iter_latency));
+                am.insert(
+                    "per_gpu".into(),
+                    Json::Arr(
+                        a.per_gpu
+                            .iter()
+                            .map(|g| {
+                                let mut gm = BTreeMap::new();
+                                gm.insert(
+                                    "microbatch".into(),
+                                    Json::Num(g.microbatch as f64),
+                                );
+                                gm.insert(
+                                    "num_micro".into(),
+                                    Json::Num(g.num_micro as f64),
+                                );
+                                gm.insert(
+                                    "state_ratio".into(),
+                                    Json::Num(g.state_ratio),
+                                );
+                                Json::Obj(gm)
+                            })
+                            .collect(),
+                    ),
+                );
+                Json::Obj(am)
+            }
+        },
+    );
+    Json::Obj(m)
+}
+
+fn outcome_from_json(j: &Json) -> crate::util::error::Result<PlanOutcome> {
+    use crate::util::error::anyhow;
+    let field_f64 = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("outcome missing {k}"))
+    };
+    let field_str = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("outcome missing {k}"))
+    };
+    let assignment = match j.get("assignment") {
+        None | Some(Json::Null) => None,
+        Some(a) => {
+            let per_gpu = a
+                .get("per_gpu")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("assignment missing per_gpu"))?
+                .iter()
+                .map(|g| {
+                    Ok(GpuAssign {
+                        microbatch: g
+                            .get("microbatch")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("gpu missing microbatch"))?,
+                        num_micro: g
+                            .get("num_micro")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("gpu missing num_micro"))?,
+                        state_ratio: g
+                            .get("state_ratio")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| {
+                                anyhow!("gpu missing state_ratio")
+                            })?,
+                    })
+                })
+                .collect::<crate::util::error::Result<Vec<_>>>()?;
+            Some(Assignment {
+                per_gpu,
+                layer_latency: a
+                    .get("layer_latency")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("assignment missing latency"))?,
+                iter_latency: a
+                    .get("iter_latency")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("assignment missing latency"))?,
+            })
+        }
+    };
+    Ok(PlanOutcome {
+        planner: field_str("planner")?.to_string(),
+        iter_latency: field_f64("iter_latency")?,
+        throughput: field_f64("throughput")?,
+        config: field_str("config")?.to_string(),
+        assignment,
+        diagnostics: PlanDiagnostics::default(),
+    })
 }
 
 impl Default for PlanCache {
@@ -156,6 +443,7 @@ mod tests {
         assert_eq!(hit.config, miss.config);
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert_eq!(cache.len(), 1);
+        assert_eq!(cache.capacity(), DEFAULT_CAPACITY);
     }
 
     #[test]
@@ -216,5 +504,87 @@ mod tests {
             fingerprint(&w.cluster, &w.profile),
             fingerprint(&w3.cluster, &w3.profile)
         );
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry_and_rehits_after_refill() {
+        // Satellite: evict-then-rehit. Capacity 2, three distinct keys
+        // (two batches of the simulated planner + the predicted
+        // variant): touching batch 8 keeps it warm, so inserting the
+        // third key evicts batch 16 — the least recently USED, not the
+        // least recently inserted. Re-planning 16 is a fresh miss that
+        // repopulates, after which it hits again.
+        let w = workload();
+        let cache = PlanCache::with_capacity(2);
+        let sim = CephaloPlanner::default();
+        let pred = CephaloPlanner { simulate: false, ..Default::default() };
+        cache.get_or_plan(&sim, &w.ctx(8)).unwrap(); // miss
+        cache.get_or_plan(&sim, &w.ctx(16)).unwrap(); // miss
+        cache.get_or_plan(&sim, &w.ctx(8)).unwrap(); // hit (8 warm)
+        assert_eq!(cache.evictions(), 0);
+        cache.get_or_plan(&pred, &w.ctx(8)).unwrap(); // miss, evicts 16
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        let h8 = cache.get_or_plan(&sim, &w.ctx(8)).unwrap();
+        assert!(h8.diagnostics.cache_hit, "batch 8 should have survived");
+        let m16 = cache.get_or_plan(&sim, &w.ctx(16)).unwrap();
+        assert!(!m16.diagnostics.cache_hit, "batch 16 was evicted");
+        let h16 = cache.get_or_plan(&sim, &w.ctx(16)).unwrap();
+        assert!(h16.diagnostics.cache_hit, "refilled entry must re-hit");
+        assert!(cache.evictions() >= 2);
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let w = workload();
+        let cache = PlanCache::with_capacity(0);
+        let sim = CephaloPlanner::default();
+        let pred = CephaloPlanner { simulate: false, ..Default::default() };
+        for batch in [8usize, 16] {
+            cache.get_or_plan(&sim, &w.ctx(batch)).unwrap();
+            cache.get_or_plan(&pred, &w.ctx(batch)).unwrap();
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn save_load_round_trip_serves_warm_hits() {
+        // Satellite: a resumed session keeps recurring-membership
+        // plans warm — save after solving, load into a fresh cache,
+        // and the same context is a HIT with a byte-equal assignment.
+        let w = workload();
+        let cache = PlanCache::new();
+        let planner = CephaloPlanner::default();
+        let solved = cache.get_or_plan(&planner, &w.ctx(8)).unwrap();
+        let path = std::env::temp_dir().join("ceph_plan_cache.json");
+        cache.save(&path).unwrap();
+
+        let warm = PlanCache::load(&path).unwrap();
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm.capacity(), DEFAULT_CAPACITY);
+        let hit = warm.get_or_plan(&planner, &w.ctx(8)).unwrap();
+        assert!(hit.diagnostics.cache_hit, "loaded entry must hit");
+        assert_eq!(hit.assignment, solved.assignment);
+        assert_eq!(hit.iter_latency, solved.iter_latency);
+        assert_eq!(hit.throughput, solved.throughput);
+        assert_eq!(hit.config, solved.config);
+        assert_eq!((warm.hits(), warm.misses()), (1, 0));
+
+        // A different batch still misses (and then caches normally).
+        let other = warm.get_or_plan(&planner, &w.ctx(16)).unwrap();
+        assert!(!other.diagnostics.cache_hit);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_malformed_files() {
+        let dir = std::env::temp_dir();
+        let bad = dir.join("ceph_plan_cache_bad.json");
+        std::fs::write(&bad, "{\"version\": 99, \"entries\": []}").unwrap();
+        assert!(PlanCache::load(&bad).is_err());
+        std::fs::write(&bad, "not json").unwrap();
+        assert!(PlanCache::load(&bad).is_err());
+        let _ = std::fs::remove_file(&bad);
     }
 }

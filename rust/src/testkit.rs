@@ -38,6 +38,27 @@ pub fn tiny_cluster() -> crate::cluster::Cluster {
     }
 }
 
+/// A 3-GPU variant of [`tiny_cluster`] (T4 + V100 + P40 on one node):
+/// the smallest cluster whose ring has a middle rank, used by the
+/// distributed-session parity tests (3 transport ranks).
+pub fn tiny_cluster3() -> crate::cluster::Cluster {
+    use crate::cluster::catalog::find;
+    use crate::cluster::{Cluster, Node};
+    Cluster {
+        name: "tiny3".into(),
+        nodes: vec![Node {
+            name: "n0".into(),
+            gpus: vec![
+                find("T4").unwrap(),
+                find("V100").unwrap(),
+                find("P40").unwrap(),
+            ],
+            intra_bw_gbps: 64.0,
+        }],
+        inter_bw_gbps: 50.0,
+    }
+}
+
 /// Per-case generator handed to properties.
 pub struct Gen {
     rng: Rng,

@@ -1,0 +1,246 @@
+//! The trainer's collective engine seam: the hot path (gradient
+//! ReduceScatter, parameter AllGather) behind one small trait, so the
+//! leader-resident [`crate::trainer::Trainer`] can run its collectives
+//! either as in-process array transforms (the historical default) or
+//! as real message traffic over a [`Transport`] fabric.
+//!
+//! Both engines are bit-identical by construction (DESIGN.md
+//! invariant 10): `FabricRing` drives
+//! `transport::collectives::ring_*`, whose ring schedule and
+//! accumulation order match `collectives::ring_*` exactly.
+
+use crate::collectives;
+use crate::sharding::ShardLayout;
+use crate::transport::{self, LocalFabric, Transport};
+use crate::util::error::{anyhow, Result};
+
+/// What the trainer needs from a collective substrate.
+pub trait CollectiveEngine: Send {
+    /// Label for logs ("inproc", "fabric:local", "fabric:tcp").
+    fn name(&self) -> &'static str;
+
+    /// Per-rank full-length contributions in, per-rank summed shards
+    /// out (rank order).
+    fn reduce_scatter(
+        &mut self,
+        full: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Per-rank shards in, the reassembled full vector out.
+    fn allgather(
+        &mut self,
+        shards: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<f32>>;
+}
+
+/// The historical default: deterministic in-process ring transforms.
+pub struct InProcessRing;
+
+impl CollectiveEngine for InProcessRing {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn reduce_scatter(
+        &mut self,
+        full: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(collectives::ring_reduce_scatter(full, layout))
+    }
+
+    fn allgather(
+        &mut self,
+        shards: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<f32>> {
+        Ok(collectives::ring_allgather(shards, layout))
+    }
+}
+
+/// Transport-backed engine: one endpoint per worker rank; every
+/// collective runs as N−1 rounds of real peer messages, one scoped
+/// thread per rank. Supports shrunken groups (elastic memberships use
+/// a prefix of the endpoints).
+pub struct FabricRing {
+    endpoints: Vec<Box<dyn Transport>>,
+    label: &'static str,
+}
+
+impl FabricRing {
+    pub fn new(endpoints: Vec<Box<dyn Transport>>) -> Result<FabricRing> {
+        if endpoints.is_empty() {
+            return Err(anyhow!("fabric engine needs at least one endpoint"));
+        }
+        for (i, ep) in endpoints.iter().enumerate() {
+            if ep.rank() != i {
+                return Err(anyhow!(
+                    "endpoint {i} reports rank {}; pass endpoints in \
+                     rank order",
+                    ep.rank()
+                ));
+            }
+        }
+        let label = match endpoints[0].backend() {
+            "local" => "fabric:local",
+            "tcp" => "fabric:tcp",
+            _ => "fabric",
+        };
+        Ok(FabricRing { endpoints, label })
+    }
+
+    /// Channel-backed fabric for `world` ranks.
+    pub fn local(world: usize) -> Result<FabricRing> {
+        let eps = LocalFabric::new(world)
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Transport>)
+            .collect();
+        FabricRing::new(eps)
+    }
+
+    /// TCP-loopback fabric for `world` ranks (threaded handshake).
+    pub fn tcp_loopback(world: usize) -> Result<FabricRing> {
+        FabricRing::new(transport::tcp::thread_fabric(world)?)
+    }
+
+    fn check_group(&self, layout: &ShardLayout) -> Result<usize> {
+        let group = layout.num_ranks();
+        if group > self.endpoints.len() {
+            return Err(anyhow!(
+                "layout wants {group} ranks, fabric has {}",
+                self.endpoints.len()
+            ));
+        }
+        Ok(group)
+    }
+}
+
+impl CollectiveEngine for FabricRing {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn reduce_scatter(
+        &mut self,
+        full: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<Vec<f32>>> {
+        let group = self.check_group(layout)?;
+        if full.len() != group {
+            return Err(anyhow!(
+                "{} contributions for a {group}-rank layout",
+                full.len()
+            ));
+        }
+        let results: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self.endpoints[..group]
+                .iter_mut()
+                .zip(full)
+                .map(|(ep, mine)| {
+                    scope.spawn(move || {
+                        transport::collectives::ring_reduce_scatter(
+                            ep.as_mut(),
+                            mine,
+                            layout,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        results.into_iter().collect()
+    }
+
+    fn allgather(
+        &mut self,
+        shards: &[Vec<f32>],
+        layout: &ShardLayout,
+    ) -> Result<Vec<f32>> {
+        let group = self.check_group(layout)?;
+        if shards.len() != group {
+            return Err(anyhow!(
+                "{} shards for a {group}-rank layout",
+                shards.len()
+            ));
+        }
+        let results: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self.endpoints[..group]
+                .iter_mut()
+                .zip(shards)
+                .map(|(ep, mine)| {
+                    scope.spawn(move || {
+                        transport::collectives::ring_allgather(
+                            ep.as_mut(),
+                            mine,
+                            layout,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut gathered = results.into_iter().collect::<Result<Vec<_>>>()?;
+        // Every rank converged to the same full vector; rank 0's copy
+        // is the leader's.
+        Ok(gathered.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_and_data() -> (ShardLayout, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let layout = ShardLayout::by_ratios(11, &[0.5, 0.0, 0.5]);
+        let full: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..11).map(|i| (r * 31 + i) as f32 * 0.25).collect())
+            .collect();
+        let shards: Vec<Vec<f32>> = (0..3)
+            .map(|r| {
+                let range = layout.range(r);
+                full[0][range].to_vec()
+            })
+            .collect();
+        (layout, full, shards)
+    }
+
+    #[test]
+    fn fabric_engines_match_the_inprocess_engine_bitwise() {
+        let (layout, full, shards) = layout_and_data();
+        let mut inproc = InProcessRing;
+        let expect_rs = inproc.reduce_scatter(&full, &layout).unwrap();
+        let expect_ag = inproc.allgather(&shards, &layout).unwrap();
+        for mut engine in [
+            FabricRing::local(3).unwrap(),
+            FabricRing::tcp_loopback(3).unwrap(),
+        ] {
+            let rs = engine.reduce_scatter(&full, &layout).unwrap();
+            assert_eq!(rs, expect_rs, "{} RS diverged", engine.name());
+            let ag = engine.allgather(&shards, &layout).unwrap();
+            assert_eq!(ag, expect_ag, "{} AG diverged", engine.name());
+        }
+    }
+
+    #[test]
+    fn fabric_supports_prefix_groups() {
+        // 3 endpoints, 2-rank layout: only the prefix participates.
+        let layout = ShardLayout::by_ratios(6, &[0.5, 0.5]);
+        let shards = vec![vec![1f32, 2., 3.], vec![4f32, 5., 6.]];
+        let mut engine = FabricRing::local(3).unwrap();
+        let ag = engine.allgather(&shards, &layout).unwrap();
+        assert_eq!(ag, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn arity_mismatches_error() {
+        let layout = ShardLayout::by_ratios(4, &[0.5, 0.5]);
+        let mut engine = FabricRing::local(1).unwrap();
+        assert!(engine
+            .reduce_scatter(&[vec![0.0; 4], vec![0.0; 4]], &layout)
+            .is_err());
+        let mut small = FabricRing::local(2).unwrap();
+        assert!(small.allgather(&[vec![0.0; 2]], &layout).is_err());
+    }
+}

@@ -9,9 +9,12 @@
 //! 2. the [`crate::exec::StepExecutor`] backend runs every worker's
 //!    share and returns per-worker SUM-loss gradients — numerically
 //!    identical to layered gradient accumulation (addition commutes);
-//! 3. gradients are combined with a real uneven ReduceScatter
-//!    (`collectives::ring_reduce_scatter` over the `r_i` shard layout)
-//!    and scaled once by 1/(global token count) — Eq. 1 exactly;
+//! 3. gradients are combined with a real uneven ReduceScatter over the
+//!    `r_i` shard layout, routed through the pluggable
+//!    [`comm::CollectiveEngine`] — in-process rings by default, a
+//!    [`crate::transport::Transport`] fabric (channels or TCP sockets)
+//!    via [`Trainer::with_comm`] — and scaled once by 1/(global token
+//!    count), Eq. 1 exactly;
 //! 4. each worker applies sharded Adam to its own state shard;
 //! 5. an uneven `ring_allgather` rebuilds the full parameter vector.
 //!
@@ -24,15 +27,16 @@
 
 pub mod adam;
 pub mod checkpoint;
+pub mod comm;
 pub mod data;
 
-use crate::collectives::{ring_allgather, ring_reduce_scatter};
 use crate::exec::StepExecutor;
 use crate::optimizer::Assignment;
 use crate::runtime::Manifest;
 use crate::sharding::ShardLayout;
 use crate::util::error::{anyhow, Result};
 use adam::{AdamConfig, AdamShard};
+use comm::{CollectiveEngine, InProcessRing};
 use data::Corpus;
 
 /// One worker's static role.
@@ -75,13 +79,23 @@ pub struct StepStats {
     pub step: usize,
     pub mean_loss: f64,
     pub tokens: f64,
-    /// Step duration as reported by the executor's timing hook: wall
-    /// time for real backends, modeled time for simulation-backed ones.
+    /// Step duration as reported by the executor's timing hook
+    /// (`StepExecutor::step_seconds`): wall time for real backends,
+    /// modeled time for simulation-backed ones. This is the number
+    /// logs and per-event reports must quote.
     pub wall_seconds: f64,
+    /// The actually measured wall time of the step, regardless of any
+    /// attached timing model — kept separate so simulated steps/sec
+    /// and executed steps/sec can never be conflated.
+    pub measured_seconds: f64,
 }
 
 pub struct Trainer {
     exec: Box<dyn StepExecutor>,
+    /// The collective substrate for the hot path (gradient RS +
+    /// parameter AG): in-process rings by default, a transport fabric
+    /// via [`Trainer::with_comm`].
+    comm: Box<dyn CollectiveEngine>,
     workers: Vec<WorkerSpec>,
     cfg: TrainConfig,
     /// Leader's full parameter copy, one flat vec per tensor.
@@ -117,6 +131,7 @@ impl Trainer {
         let params = exec.init_params(cfg.seed);
         Ok(Trainer {
             exec,
+            comm: Box::new(InProcessRing),
             workers,
             cfg,
             params,
@@ -173,6 +188,20 @@ impl Trainer {
         self.exec.name()
     }
 
+    /// Swap the collective substrate (must be installed before
+    /// training; both engines are bitwise-equivalent, so mid-run swaps
+    /// are safe too — just unusual).
+    pub fn with_comm(mut self, comm: Box<dyn CollectiveEngine>) -> Trainer {
+        self.comm = comm;
+        self
+    }
+
+    /// Label of the collective engine in use ("inproc",
+    /// "fabric:local", "fabric:tcp").
+    pub fn comm_name(&self) -> &'static str {
+        self.comm.name()
+    }
+
     pub fn workers(&self) -> &[WorkerSpec] {
         &self.workers
     }
@@ -213,10 +242,12 @@ impl Trainer {
             return Err(anyhow!("backend reported zero tokens"));
         }
 
-        // Uneven ReduceScatter of gradients onto the state shards, then
-        // the Eq.-1 scale by 1/(global token count).
+        // Uneven ReduceScatter of gradients onto the state shards
+        // (through the collective engine — in-process rings or a real
+        // transport fabric), then the Eq.-1 scale by 1/(global token
+        // count).
         let mut grad_shards =
-            ring_reduce_scatter(&out.worker_grads, &self.layout);
+            self.comm.reduce_scatter(&out.worker_grads, &self.layout)?;
         let inv = 1.0 / out.token_count as f32;
         for shard in grad_shards.iter_mut() {
             for g in shard.iter_mut() {
@@ -257,16 +288,16 @@ impl Trainer {
         let shard_views: Vec<Vec<f32>> = (0..self.workers.len())
             .map(|r| flat[self.layout.range(r)].to_vec())
             .collect();
-        let gathered = ring_allgather(&shard_views, &self.layout);
+        let gathered = self.comm.allgather(&shard_views, &self.layout)?;
         self.params = unflatten(&gathered, &self.sizes);
 
+        let measured = t0.elapsed().as_secs_f64();
         let stats = StepStats {
             step: step_idx,
             mean_loss: out.loss_sum / out.token_count,
             tokens: out.token_count,
-            wall_seconds: self
-                .exec
-                .step_seconds(&batches, t0.elapsed().as_secs_f64()),
+            wall_seconds: self.exec.step_seconds(&batches, measured),
+            measured_seconds: measured,
         };
         self.history.push(stats.clone());
         Ok(stats)
@@ -428,7 +459,7 @@ pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
-fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
+pub(crate) fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(flat_len);
     for t in tensors {
         out.extend_from_slice(t);
@@ -436,7 +467,7 @@ fn flatten(tensors: &[Vec<f32>], flat_len: usize) -> Vec<f32> {
     out
 }
 
-fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
+pub(crate) fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
     let mut out = Vec::with_capacity(sizes.len());
     let mut off = 0usize;
     for &sz in sizes {
@@ -548,6 +579,38 @@ mod tests {
                 uneven.params(),
                 single.params(),
                 "params diverged at step {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_comm_engines_train_bitwise_identically() {
+        // The tentpole's trainer rewiring: the SAME hot path over
+        // in-process rings, a channel fabric, and a TCP-loopback
+        // fabric — three collective substrates, one trajectory, bit
+        // for bit.
+        let workers = || vec![w(3, 0.7, "fast"), w(1, 0.3, "slow")];
+        let mut inproc = native_trainer(workers(), quiet(5));
+        let mut local = native_trainer(workers(), quiet(5))
+            .with_comm(Box::new(comm::FabricRing::local(2).unwrap()));
+        let mut tcp = native_trainer(workers(), quiet(5))
+            .with_comm(Box::new(comm::FabricRing::tcp_loopback(2).unwrap()));
+        assert_eq!(inproc.comm_name(), "inproc");
+        assert_eq!(local.comm_name(), "fabric:local");
+        assert_eq!(tcp.comm_name(), "fabric:tcp");
+        for s in 0..3 {
+            inproc.step(s).unwrap();
+            local.step(s).unwrap();
+            tcp.step(s).unwrap();
+            assert_eq!(
+                inproc.params(),
+                local.params(),
+                "channel fabric diverged at step {s}"
+            );
+            assert_eq!(
+                inproc.params(),
+                tcp.params(),
+                "tcp fabric diverged at step {s}"
             );
         }
     }

@@ -1,0 +1,256 @@
+//! Segmented ring collectives as actual peer messages (§3.3 over the
+//! wire).
+//!
+//! Same schedule as the in-process `crate::collectives::ring_*` — in
+//! step `s` rank `r` forwards segment `(r − s) mod n` (AllGather) or
+//! the partial sum of segment `(r − s − 1) mod n` (ReduceScatter) to
+//! rank `r + 1` — but executed by each rank against its own
+//! [`Transport`] endpoint, N−1 rounds of real sends and receives.
+//! Empty segments (`r_i = 0` ranks) are skipped symmetrically on both
+//! sides, exactly the zero-byte-chunk behavior of the in-process rings.
+//!
+//! **Bitwise contract (DESIGN.md invariant 10).** The ReduceScatter
+//! accumulation order around the ring is identical to the in-process
+//! implementation's, and AllGather only copies, so for any input these
+//! functions produce bit-identical results to `collectives::ring_*` —
+//! property-tested over channel and socket fabrics in
+//! `tests/transport_parity.rs`. That is what makes a transport backend
+//! invisible to the training trajectory.
+//!
+//! Collectives are **group-scoped**: the group is
+//! `layout.num_ranks()`, which may be smaller than the transport's
+//! world (elastic memberships are prefixes of the process world);
+//! ranks outside the group must simply not call in.
+
+use crate::sharding::ShardLayout;
+use crate::util::error::{anyhow, Result};
+
+use super::Transport;
+
+fn check_group(t: &dyn Transport, layout: &ShardLayout) -> Result<usize> {
+    let n = layout.num_ranks();
+    if n == 0 {
+        return Err(anyhow!("empty shard layout"));
+    }
+    if n > t.world_size() {
+        return Err(anyhow!(
+            "layout wants {n} ranks but the fabric only has {}",
+            t.world_size()
+        ));
+    }
+    if t.rank() >= n {
+        return Err(anyhow!(
+            "rank {} is outside the {n}-rank collective group",
+            t.rank()
+        ));
+    }
+    Ok(n)
+}
+
+/// Ring AllGather: `shard` is this rank's segment; returns the full
+/// vector (identical on every participating rank).
+pub fn ring_allgather(
+    t: &mut dyn Transport,
+    shard: &[f32],
+    layout: &ShardLayout,
+) -> Result<Vec<f32>> {
+    let n = check_group(t, layout)?;
+    let me = t.rank();
+    if shard.len() != layout.size(me) {
+        return Err(anyhow!(
+            "rank {me} shard holds {} elems, layout wants {}",
+            shard.len(),
+            layout.size(me)
+        ));
+    }
+    let mut buf = vec![0f32; layout.len()];
+    buf[layout.range(me)].copy_from_slice(shard);
+    if n == 1 {
+        return Ok(buf);
+    }
+    let next = (me + 1) % n;
+    let prev = (me + n - 1) % n;
+    for s in 0..n - 1 {
+        // Send the segment received last step (own segment at s = 0)…
+        let seg_send = (me + n - s) % n;
+        let send_range = layout.range(seg_send);
+        if !send_range.is_empty() {
+            t.send_f32(next, &buf[send_range])?;
+        }
+        // …and take delivery of the predecessor's forward.
+        let seg_recv = (me + 2 * n - 1 - s) % n;
+        let recv_range = layout.range(seg_recv);
+        if !recv_range.is_empty() {
+            let data = t.recv_f32(prev)?;
+            if data.len() != recv_range.len() {
+                return Err(anyhow!(
+                    "allgather step {s}: rank {prev} sent {} elems for a \
+                     {}-elem segment",
+                    data.len(),
+                    recv_range.len()
+                ));
+            }
+            buf[recv_range].copy_from_slice(&data);
+        }
+    }
+    Ok(buf)
+}
+
+/// Ring ReduceScatter: `full` is this rank's full-length contribution;
+/// returns this rank's segment of the element-wise sum.
+pub fn ring_reduce_scatter(
+    t: &mut dyn Transport,
+    full: &[f32],
+    layout: &ShardLayout,
+) -> Result<Vec<f32>> {
+    let n = check_group(t, layout)?;
+    let me = t.rank();
+    if full.len() != layout.len() {
+        return Err(anyhow!(
+            "rank {me} contribution holds {} elems, layout wants {}",
+            full.len(),
+            layout.len()
+        ));
+    }
+    let mut acc = full.to_vec();
+    if n == 1 {
+        return Ok(acc);
+    }
+    let next = (me + 1) % n;
+    let prev = (me + n - 1) % n;
+    for s in 0..n - 1 {
+        // Forward the partial sum accumulated so far for segment
+        // (me − s − 1) mod n; the segment received at step s − 1.
+        let seg_send = (me + 2 * n - s - 1) % n;
+        let send_range = layout.range(seg_send);
+        if !send_range.is_empty() {
+            t.send_f32(next, &acc[send_range])?;
+        }
+        // Accumulate the predecessor's partial into ours — the SAME
+        // `*o += v` order as the in-process ring, so sums are bitwise
+        // identical.
+        let seg_recv = (me + 2 * n - s - 2) % n;
+        let recv_range = layout.range(seg_recv);
+        if !recv_range.is_empty() {
+            let data = t.recv_f32(prev)?;
+            if data.len() != recv_range.len() {
+                return Err(anyhow!(
+                    "reduce-scatter step {s}: rank {prev} sent {} elems \
+                     for a {}-elem segment",
+                    data.len(),
+                    recv_range.len()
+                ));
+            }
+            for (o, v) in acc[recv_range].iter_mut().zip(&data) {
+                *o += v;
+            }
+        }
+    }
+    Ok(acc[layout.range(me)].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives as inproc;
+    use crate::transport::LocalFabric;
+    use crate::transport::Transport;
+
+    /// Run a closure per rank over a fresh local fabric, returning the
+    /// per-rank results in rank order.
+    fn on_fabric<T: Send>(
+        world: usize,
+        f: impl Fn(&mut dyn Transport) -> T + Sync,
+    ) -> Vec<T> {
+        let eps = LocalFabric::new(world);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    let f = &f;
+                    s.spawn(move || f(&mut ep))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn allgather_matches_inprocess_on_uneven_layout() {
+        let layout = ShardLayout::by_ratios(10, &[0.5, 0.0, 0.3, 0.2]);
+        let shards: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..layout.size(r)).map(|i| (r * 100 + i) as f32).collect())
+            .collect();
+        let expect = inproc::ring_allgather(&shards, &layout);
+        let got = on_fabric(4, |t| {
+            ring_allgather(t, &shards[t.rank()], &layout).unwrap()
+        });
+        for g in got {
+            assert_eq!(g, expect);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_matches_inprocess_bitwise() {
+        let layout = ShardLayout::by_ratios(9, &[0.2, 0.5, 0.3]);
+        let full: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..9).map(|i| 0.1 * (r as f32 + 1.0) * i as f32).collect())
+            .collect();
+        let expect = inproc::ring_reduce_scatter(&full, &layout);
+        let got = on_fabric(3, |t| {
+            ring_reduce_scatter(t, &full[t.rank()], &layout).unwrap()
+        });
+        for (rank, (e, g)) in expect.iter().zip(&got).enumerate() {
+            let eb: Vec<u32> = e.iter().map(|x| x.to_bits()).collect();
+            let gb: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(eb, gb, "rank {rank} sum differs bitwise");
+        }
+    }
+
+    #[test]
+    fn single_rank_group_is_a_local_noop() {
+        let layout = ShardLayout::by_ratios(5, &[1.0]);
+        let shard: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let got = on_fabric(1, |t| {
+            let ag = ring_allgather(t, &shard, &layout).unwrap();
+            let rs = ring_reduce_scatter(t, &shard, &layout).unwrap();
+            (ag, rs)
+        });
+        assert_eq!(got[0].0, shard);
+        assert_eq!(got[0].1, shard);
+    }
+
+    #[test]
+    fn group_can_be_smaller_than_the_world() {
+        // 4-rank fabric, 2-rank collective group: ranks 2 and 3 sit
+        // out; the group result matches the in-process reference.
+        let layout = ShardLayout::by_ratios(6, &[0.5, 0.5]);
+        let shards = [vec![1f32, 2., 3.], vec![4f32, 5., 6.]];
+        let expect = inproc::ring_allgather(
+            &[shards[0].clone(), shards[1].clone()],
+            &layout,
+        );
+        let got = on_fabric(4, |t| {
+            if t.rank() < 2 {
+                Some(ring_allgather(t, &shards[t.rank()], &layout).unwrap())
+            } else {
+                // Outside the group: calling in is an error, not UB.
+                assert!(ring_allgather(t, &[], &layout).is_err());
+                None
+            }
+        });
+        assert_eq!(got[0].as_ref().unwrap(), &expect);
+        assert_eq!(got[1].as_ref().unwrap(), &expect);
+    }
+
+    #[test]
+    fn size_mismatches_are_rejected() {
+        let layout = ShardLayout::by_ratios(4, &[0.5, 0.5]);
+        let got = on_fabric(2, |t| {
+            let bad_shard = ring_allgather(t, &[1.0], &layout).is_err();
+            let bad_full = ring_reduce_scatter(t, &[1.0], &layout).is_err();
+            (bad_shard, bad_full)
+        });
+        assert!(got.iter().all(|&(a, b)| a && b));
+    }
+}

@@ -1,0 +1,983 @@
+//! Multi-process training: the SPMD rank engine, the `cephalo worker`
+//! serving loop, and the coordinator-side driver.
+//!
+//! Every rank — the coordinator's resident rank 0 and each worker
+//! thread/process — runs the SAME per-step pipeline as the in-process
+//! [`crate::trainer::Trainer`], but against its own state and a
+//! [`Transport`] endpoint:
+//!
+//! 1. sample the global batch from the shared-seed corpus (ALL ranks,
+//!    standby included, so a rank that rejoins after churn is still on
+//!    the same data stream);
+//! 2. run the native backend on this rank's batch share only;
+//! 3. ring ReduceScatter the gradients over the wire
+//!    ([`super::collectives`]), scale by 1/tokens (Eq. 1);
+//! 4. sharded Adam on this rank's `r_i` shard;
+//! 5. ring AllGather the updated parameters.
+//!
+//! Because the native backend's gradient summation is exact (dyadic
+//! quantization, `exec::native`) and the wire collectives are
+//! bit-identical to the in-process rings, the distributed trajectory is
+//! BITWISE the in-process (and single-worker) trajectory — asserted in
+//! `tests/dist_session.rs`.
+//!
+//! Membership churn: the coordinator broadcasts a [`MigrateCmd`]
+//! carrying the new membership and the `elastic::plan_migration`
+//! transfer list; survivors keep their resident overlap, peers stream
+//! moved ranges rank-to-rank, and ranges whose owner left the
+//! membership are re-streamed by the (still running, now standby)
+//! process that holds them — numerically identical to the in-process
+//! session's checkpoint restore. Command/data frames are FIFO per
+//! peer, so no barrier is needed between commands.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::elastic::Transfer;
+use crate::exec::native::MAX_STEP_TOKENS;
+use crate::exec::{NativeExecutor, StepExecutor, StepTimeModel, SurrogateSpec};
+use crate::sharding::ShardLayout;
+use crate::trainer::adam::{AdamConfig, AdamShard};
+use crate::trainer::data::{split_batch, Corpus};
+use crate::trainer::{flatten, unflatten, StepStats, WorkerSpec};
+use crate::transport::{collectives as wire, LocalFabric, Transport};
+use crate::util::error::{anyhow, Result};
+
+/// Which fabric a distributed run is built on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricSpec {
+    /// In-process channels, worker ranks as threads (`--transport
+    /// local`). Zero syscalls; the message plane is still real.
+    Local,
+    /// TCP loopback sockets, worker ranks as threads — the shape tests
+    /// and benches use (real sockets, one process).
+    TcpThreads,
+    /// TCP sockets, worker ranks as SPAWNED `cephalo worker` processes
+    /// (`--transport tcp`). Requires the running executable to BE the
+    /// cephalo binary: workers are spawned as `current_exe() worker
+    /// --rank i --connect addr --world n`.
+    TcpProcesses,
+}
+
+impl FabricSpec {
+    /// Parse a `--transport` CLI value; `None` for the in-process
+    /// (transport-less) trainer.
+    pub fn parse(s: &str) -> Result<Option<FabricSpec>> {
+        match s {
+            "inproc" => Ok(None),
+            "local" => Ok(Some(FabricSpec::Local)),
+            "tcp" => Ok(Some(FabricSpec::TcpProcesses)),
+            other => Err(anyhow!(
+                "unknown transport '{other}' (inproc | local | tcp)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FabricSpec::Local => "local",
+            FabricSpec::TcpThreads => "tcp",
+            FabricSpec::TcpProcesses => "tcp",
+        }
+    }
+}
+
+/// Everything a rank needs to stand itself up, broadcast in `INIT`.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub seed: u64,
+    pub adam: AdamConfig,
+    pub corpus_branch: usize,
+    pub surrogate: SurrogateSpec,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            adam: AdamConfig::default(),
+            corpus_branch: 4,
+            surrogate: SurrogateSpec::default(),
+        }
+    }
+}
+
+/// A membership change, broadcast by the coordinator.
+#[derive(Debug, Clone)]
+pub struct MigrateCmd {
+    pub new_membership: Vec<WorkerSpec>,
+    /// `survivors[new_rank]` = the old rank of the same physical
+    /// worker. Over a transport, memberships are prefixes of the fixed
+    /// process world, so survivor entries must be identity (`Some(i)`
+    /// at index `i`) or `None` for ranks entering the membership.
+    pub survivors: Vec<Option<usize>>,
+    pub transfers: Vec<Transfer>,
+    /// Adam step counter carried onto rebuilt shards.
+    pub adam_step: u64,
+}
+
+// ---- command wire codec (length-prefixed LE, no serde) --------------
+
+const OP_INIT: u8 = 1;
+const OP_STEP: u8 = 2;
+const OP_MIGRATE: u8 = 3;
+const OP_SHUTDOWN: u8 = 4;
+
+#[derive(Default)]
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+    fn u64(&mut self, x: u64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn i64(&mut self, x: i64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f64(&mut self, x: f64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, i: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(anyhow!("truncated command frame"));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn put_membership(w: &mut W, m: &[WorkerSpec]) {
+    w.u64(m.len() as u64);
+    for spec in m {
+        w.u64(spec.batch as u64);
+        w.f64(spec.state_ratio);
+    }
+}
+
+fn get_membership(r: &mut R<'_>) -> Result<Vec<WorkerSpec>> {
+    let n = r.u64()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let batch = r.u64()? as usize;
+        let state_ratio = r.f64()?;
+        out.push(WorkerSpec { batch, state_ratio, name: format!("rank{i}") });
+    }
+    Ok(out)
+}
+
+fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
+    let mut w = W::default();
+    w.u8(OP_INIT);
+    w.u64(cfg.seed);
+    w.u64(cfg.corpus_branch as u64);
+    w.u64(cfg.surrogate.vocab as u64);
+    w.u64(cfg.surrogate.dim as u64);
+    w.u64(cfg.surrogate.seq_len as u64);
+    w.f64(cfg.adam.lr as f64);
+    w.f64(cfg.adam.beta1 as f64);
+    w.f64(cfg.adam.beta2 as f64);
+    w.f64(cfg.adam.eps as f64);
+    w.f64(cfg.adam.weight_decay as f64);
+    put_membership(&mut w, membership);
+    w.0
+}
+
+fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
+    let seed = r.u64()?;
+    let corpus_branch = r.u64()? as usize;
+    let surrogate = SurrogateSpec {
+        vocab: r.u64()? as usize,
+        dim: r.u64()? as usize,
+        seq_len: r.u64()? as usize,
+    };
+    let adam = AdamConfig {
+        lr: r.f64()? as f32,
+        beta1: r.f64()? as f32,
+        beta2: r.f64()? as f32,
+        eps: r.f64()? as f32,
+        weight_decay: r.f64()? as f32,
+    };
+    let membership = get_membership(r)?;
+    Ok((DistConfig { seed, adam, corpus_branch, surrogate }, membership))
+}
+
+fn encode_migrate(cmd: &MigrateCmd) -> Vec<u8> {
+    let mut w = W::default();
+    w.u8(OP_MIGRATE);
+    w.u64(cmd.adam_step);
+    put_membership(&mut w, &cmd.new_membership);
+    w.u64(cmd.survivors.len() as u64);
+    for s in &cmd.survivors {
+        w.i64(s.map(|x| x as i64).unwrap_or(-1));
+    }
+    w.u64(cmd.transfers.len() as u64);
+    for t in &cmd.transfers {
+        w.i64(t.from.map(|x| x as i64).unwrap_or(-1));
+        w.u64(t.to as u64);
+        w.u64(t.start as u64);
+        w.u64(t.len as u64);
+    }
+    w.0
+}
+
+fn decode_migrate(r: &mut R<'_>) -> Result<MigrateCmd> {
+    let adam_step = r.u64()?;
+    let new_membership = get_membership(r)?;
+    let n = r.u64()? as usize;
+    let mut survivors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = r.i64()?;
+        survivors.push(if s < 0 { None } else { Some(s as usize) });
+    }
+    let nt = r.u64()? as usize;
+    let mut transfers = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        let from = r.i64()?;
+        transfers.push(Transfer {
+            from: if from < 0 { None } else { Some(from as usize) },
+            to: r.u64()? as usize,
+            start: r.u64()? as usize,
+            len: r.u64()? as usize,
+        });
+    }
+    Ok(MigrateCmd { new_membership, survivors, transfers, adam_step })
+}
+
+/// The old-layout owner of flat position `pos` (the process that holds
+/// the bytes, whether or not it is still in the membership).
+fn owner_of(layout: &ShardLayout, pos: usize) -> Result<usize> {
+    (0..layout.num_ranks())
+        .find(|&r| layout.range(r).contains(&pos))
+        .ok_or_else(|| anyhow!("flat position {pos} outside the layout"))
+}
+
+fn layout_of(membership: &[WorkerSpec], flat_len: usize) -> ShardLayout {
+    // EXACTLY Trainer::from_executor's derivation, so the dist and
+    // in-process shard boundaries agree bit for bit.
+    let ratios: Vec<f64> =
+        membership.iter().map(|w| w.state_ratio.max(0.0)).collect();
+    ShardLayout::by_ratios(flat_len, &ratios)
+}
+
+/// One rank's SPMD training state.
+pub struct DistRank {
+    rank: usize,
+    exec: NativeExecutor,
+    corpus: Corpus,
+    params: Vec<Vec<f32>>,
+    sizes: Vec<usize>,
+    membership: Vec<WorkerSpec>,
+    layout: ShardLayout,
+    /// `None` while this rank is standby (outside the membership).
+    shard: Option<AdamShard>,
+    adam: AdamConfig,
+}
+
+impl DistRank {
+    pub fn init(
+        rank: usize,
+        cfg: &DistConfig,
+        membership: Vec<WorkerSpec>,
+    ) -> Result<DistRank> {
+        if membership.is_empty() {
+            return Err(anyhow!("need at least one member rank"));
+        }
+        let exec = NativeExecutor::new(cfg.surrogate.clone());
+        let sizes = exec.param_sizes().to_vec();
+        let flat_len: usize = sizes.iter().sum();
+        let params = exec.init_params(cfg.seed);
+        let corpus = Corpus::new(exec.vocab(), cfg.corpus_branch, cfg.seed);
+        let layout = layout_of(&membership, flat_len);
+        let shard = (rank < membership.len())
+            .then(|| AdamShard::new(layout.size(rank), cfg.adam));
+        Ok(DistRank {
+            rank,
+            exec,
+            corpus,
+            params,
+            sizes,
+            membership,
+            layout,
+            shard,
+            adam: cfg.adam,
+        })
+    }
+
+    pub fn membership(&self) -> &[WorkerSpec] {
+        &self.membership
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    fn flat_len(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// One SPMD step; returns this rank's `(loss_sum, token_count)`
+    /// contribution (zeros for standby ranks, which only advance the
+    /// corpus stream).
+    pub fn step(&mut self, t: &mut dyn Transport) -> Result<(f64, f64)> {
+        let seq = self.exec.seq_len();
+        let b: usize = self.membership.iter().map(|w| w.batch).sum();
+        if b == 0 {
+            return Err(anyhow!("global batch is zero"));
+        }
+        // Every rank samples the SAME global batch (shared corpus
+        // stream) — standby ranks too, so rejoining keeps alignment.
+        let (tokens, targets) = self.corpus.sample_batch(b, seq);
+        let group = self.membership.len();
+        if self.rank >= group {
+            return Ok((0.0, 0.0));
+        }
+        if b * seq > MAX_STEP_TOKENS {
+            return Err(anyhow!(
+                "{} tokens/step exceeds the exact-summation bound \
+                 {MAX_STEP_TOKENS} (shrink batch or seq_len)",
+                b * seq
+            ));
+        }
+        let batches: Vec<usize> =
+            self.membership.iter().map(|w| w.batch).collect();
+        let parts = split_batch(&tokens, &targets, seq, &batches);
+        let (my_tokens, my_targets) = parts
+            .into_iter()
+            .nth(self.rank)
+            .expect("rank within membership");
+
+        let flat_len = self.flat_len();
+        let (my_grad, my_loss, my_count) = if my_tokens.is_empty() {
+            // A state-only rank (b_i = 0) contributes an exact zero
+            // vector — bitwise what `worker_pass` returns on no rows.
+            (vec![0f32; flat_len], 0.0, 0.0)
+        } else {
+            let part = vec![(my_tokens, my_targets)];
+            let out = self.exec.run_step(&self.params, &part)?;
+            let g = out
+                .worker_grads
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("backend returned no gradients"))?;
+            (g, out.loss_sum, out.token_count)
+        };
+
+        // Eq.-1 denominator: the GLOBAL token count, known to all ranks
+        // from the membership (sums of exact integers — identical to
+        // the leader's f64 accumulation).
+        let token_count = (b * seq) as f64;
+
+        let mut grad_shard =
+            wire::ring_reduce_scatter(t, &my_grad, &self.layout)?;
+        let inv = 1.0 / token_count as f32;
+        for g in grad_shard.iter_mut() {
+            *g *= inv;
+        }
+
+        let mut flat = flatten(&self.params, flat_len);
+        let range = self.layout.range(self.rank);
+        let shard = self
+            .shard
+            .as_mut()
+            .ok_or_else(|| anyhow!("active rank {} has no shard", self.rank))?;
+        shard.update(&mut flat[range.clone()], &grad_shard);
+
+        let shard_view = flat[range].to_vec();
+        let gathered = wire::ring_allgather(t, &shard_view, &self.layout)?;
+        self.params = unflatten(&gathered, &self.sizes);
+        Ok((my_loss, my_count))
+    }
+
+    /// Apply a membership change: local resident copy, peer transfers
+    /// over the wire, params stream to ranks entering the membership.
+    pub fn migrate(
+        &mut self,
+        t: &mut dyn Transport,
+        cmd: &MigrateCmd,
+    ) -> Result<()> {
+        if cmd.new_membership.is_empty() {
+            return Err(anyhow!("migration to an empty membership"));
+        }
+        if cmd.survivors.len() != cmd.new_membership.len() {
+            return Err(anyhow!(
+                "{} survivor entries for {} members",
+                cmd.survivors.len(),
+                cmd.new_membership.len()
+            ));
+        }
+        for (i, s) in cmd.survivors.iter().enumerate() {
+            if let Some(j) = s {
+                if *j != i {
+                    return Err(anyhow!(
+                        "non-prefix survivor map (new rank {i} was old \
+                         rank {j}): transport ranks are pinned to \
+                         process ranks"
+                    ));
+                }
+            }
+        }
+        let flat_len = self.flat_len();
+        let old_layout = self.layout.clone();
+        let new_layout = layout_of(&cmd.new_membership, flat_len);
+        let new_group = cmd.new_membership.len();
+        let is_active = self.rank < new_group;
+
+        // Resident prefill: the overlap of my old and new ranges never
+        // leaves this rank (mirrors `elastic::apply_migration`).
+        let mut new_m = vec![0f32; if is_active { new_layout.size(self.rank) } else { 0 }];
+        let mut new_v = vec![0f32; new_m.len()];
+        if is_active && cmd.survivors[self.rank].is_some() {
+            let old = self
+                .shard
+                .as_ref()
+                .ok_or_else(|| anyhow!("survivor {} has no shard", self.rank))?;
+            let nr = new_layout.range(self.rank);
+            let or = old_layout.range(self.rank);
+            let lo = nr.start.max(or.start);
+            let hi = nr.end.min(or.end);
+            if lo < hi {
+                new_m[lo - nr.start..hi - nr.start]
+                    .copy_from_slice(&old.m[lo - or.start..hi - or.start]);
+                new_v[lo - nr.start..hi - nr.start]
+                    .copy_from_slice(&old.v[lo - or.start..hi - or.start]);
+            }
+        }
+
+        // The transfer list, in list order on every rank (frames are
+        // FIFO per pair, sends never block: deadlock-free by
+        // induction on list position).
+        for tr in &cmd.transfers {
+            let src = owner_of(&old_layout, tr.start)?;
+            if tr.start + tr.len > old_layout.range(src).end {
+                return Err(anyhow!(
+                    "transfer [{}, +{}) spans old-shard boundaries",
+                    tr.start,
+                    tr.len
+                ));
+            }
+            if self.rank == src {
+                let old = self.shard.as_ref().ok_or_else(|| {
+                    anyhow!("transfer source {src} holds no shard")
+                })?;
+                let a = tr.start - old_layout.range(src).start;
+                t.send_f32(tr.to, &old.m[a..a + tr.len])?;
+                t.send_f32(tr.to, &old.v[a..a + tr.len])?;
+            }
+            if is_active && self.rank == tr.to {
+                let nr = new_layout.range(self.rank);
+                if tr.start < nr.start || tr.start + tr.len > nr.end {
+                    return Err(anyhow!(
+                        "transfer [{}, +{}) outside rank {}'s new range",
+                        tr.start,
+                        tr.len,
+                        self.rank
+                    ));
+                }
+                let a = tr.start - nr.start;
+                let m_in = t.recv_f32(src)?;
+                let v_in = t.recv_f32(src)?;
+                if m_in.len() != tr.len || v_in.len() != tr.len {
+                    return Err(anyhow!(
+                        "transfer payload mismatch: got {}+{} elems, \
+                         wanted {}",
+                        m_in.len(),
+                        v_in.len(),
+                        tr.len
+                    ));
+                }
+                new_m[a..a + tr.len].copy_from_slice(&m_in);
+                new_v[a..a + tr.len].copy_from_slice(&v_in);
+            }
+        }
+
+        // Ranks ENTERING the membership receive the current full
+        // parameters from rank 0 (bitwise-identical on every active
+        // rank, so any source would do).
+        let flat = flatten(&self.params, flat_len);
+        for (r, surv) in cmd.survivors.iter().enumerate() {
+            if surv.is_some() {
+                continue;
+            }
+            if self.rank == 0 {
+                t.send_f32(r, &flat)?;
+            }
+            if self.rank == r {
+                let data = t.recv_f32(0)?;
+                if data.len() != flat_len {
+                    return Err(anyhow!(
+                        "param stream holds {} elems, wanted {flat_len}",
+                        data.len()
+                    ));
+                }
+                self.params = unflatten(&data, &self.sizes);
+            }
+        }
+
+        self.membership = cmd.new_membership.clone();
+        self.layout = new_layout;
+        self.shard = is_active.then(|| AdamShard {
+            m: new_m,
+            v: new_v,
+            step: cmd.adam_step,
+            cfg: self.adam,
+        });
+        Ok(())
+    }
+}
+
+/// The `cephalo worker` serving loop: execute coordinator commands
+/// until `SHUTDOWN` (or the coordinator disconnects, which surfaces as
+/// an error — fail-stop).
+pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
+    let rank = t.rank();
+    if rank == 0 {
+        return Err(anyhow!("rank 0 is the coordinator, not a worker"));
+    }
+    let mut state: Option<DistRank> = None;
+    let mut next_step: u64 = 0;
+    loop {
+        let cmd = t.recv_bytes(0)?;
+        let mut r = R::new(&cmd);
+        match r.u8()? {
+            OP_INIT => {
+                let (cfg, membership) = decode_init(&mut r)?;
+                state = Some(DistRank::init(rank, &cfg, membership)?);
+                next_step = 0;
+            }
+            OP_STEP => {
+                // The step index doubles as a desync check: corpus
+                // alignment requires EXACTLY one sample per step, so a
+                // skipped or replayed command must fail loudly instead
+                // of training on silently divergent batches.
+                let idx = r.u64()?;
+                if idx != next_step {
+                    return Err(anyhow!(
+                        "step desync at rank {rank}: coordinator says \
+                         step {idx}, expected {next_step}"
+                    ));
+                }
+                next_step += 1;
+                let st = state
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("STEP before INIT"))?;
+                let active = rank < st.membership().len();
+                let (loss, count) = st.step(t.as_mut())?;
+                if active {
+                    let mut w = W::default();
+                    w.f64(loss);
+                    w.f64(count);
+                    t.send_bytes(0, &w.0)?;
+                }
+            }
+            OP_MIGRATE => {
+                let mc = decode_migrate(&mut r)?;
+                state
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("MIGRATE before INIT"))?
+                    .migrate(t.as_mut(), &mc)?;
+            }
+            OP_SHUTDOWN => return Ok(()),
+            op => return Err(anyhow!("unknown command op {op}")),
+        }
+    }
+}
+
+/// Coordinator-side handle on a distributed run: rank 0's own
+/// [`DistRank`] plus the broadcast/collect plumbing and the worker
+/// threads/processes behind it.
+pub struct DistDriver {
+    t: Box<dyn Transport>,
+    rank0: DistRank,
+    world: usize,
+    spec: FabricSpec,
+    timer: Option<StepTimeModel>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    children: Vec<std::process::Child>,
+    down: bool,
+    pub history: Vec<StepStats>,
+}
+
+impl DistDriver {
+    /// Stand up the fabric, spawn worker ranks, broadcast `INIT`.
+    /// `membership` must have at most `world` entries (standby ranks
+    /// idle until a migration admits them).
+    pub fn launch(
+        spec: FabricSpec,
+        world: usize,
+        cfg: DistConfig,
+        membership: Vec<WorkerSpec>,
+    ) -> Result<DistDriver> {
+        if world < 1 {
+            return Err(anyhow!("world size must be at least 1"));
+        }
+        if membership.is_empty() || membership.len() > world {
+            return Err(anyhow!(
+                "membership of {} ranks does not fit a {world}-rank world",
+                membership.len()
+            ));
+        }
+        let (t, threads, children) = match spec {
+            FabricSpec::Local => {
+                let mut eps = LocalFabric::new(world);
+                let rest = eps.split_off(1);
+                let t0: Box<dyn Transport> = Box::new(eps.remove(0));
+                let threads = rest
+                    .into_iter()
+                    .map(|ep| {
+                        std::thread::spawn(move || {
+                            if let Err(e) = worker_loop(Box::new(ep)) {
+                                crate::warn!("local worker exited: {e}");
+                            }
+                        })
+                    })
+                    .collect();
+                (t0, threads, Vec::new())
+            }
+            FabricSpec::TcpThreads => {
+                let rz = crate::transport::tcp::Rendezvous::bind(
+                    "127.0.0.1:0",
+                    world,
+                )?;
+                let addr = rz.local_addr()?;
+                let threads = (1..world)
+                    .map(|r| {
+                        let addr = addr.clone();
+                        std::thread::spawn(move || {
+                            match crate::transport::tcp::connect(
+                                &addr, r, world,
+                            ) {
+                                Ok(t) => {
+                                    if let Err(e) = worker_loop(Box::new(t)) {
+                                        crate::warn!(
+                                            "tcp worker {r} exited: {e}"
+                                        );
+                                    }
+                                }
+                                Err(e) => crate::warn!(
+                                    "tcp worker {r} never joined: {e}"
+                                ),
+                            }
+                        })
+                    })
+                    .collect();
+                let t0: Box<dyn Transport> = Box::new(rz.establish()?);
+                (t0, threads, Vec::new())
+            }
+            FabricSpec::TcpProcesses => {
+                let rz = crate::transport::tcp::Rendezvous::bind(
+                    "127.0.0.1:0",
+                    world,
+                )?;
+                let addr = rz.local_addr()?;
+                let exe = std::env::current_exe()?;
+                let children = (1..world)
+                    .map(|r| {
+                        std::process::Command::new(&exe)
+                            .args([
+                                "worker",
+                                "--rank",
+                                &r.to_string(),
+                                "--connect",
+                                &addr,
+                                "--world",
+                                &world.to_string(),
+                            ])
+                            .spawn()
+                    })
+                    .collect::<std::io::Result<Vec<_>>>()?;
+                let t0: Box<dyn Transport> = Box::new(rz.establish()?);
+                (t0, Vec::new(), children)
+            }
+        };
+        let mut t = t;
+        let init = encode_init(&cfg, &membership);
+        for r in 1..world {
+            t.send_bytes(r, &init)?;
+        }
+        let rank0 = DistRank::init(0, &cfg, membership)?;
+        Ok(DistDriver {
+            t,
+            rank0,
+            world,
+            spec,
+            timer: None,
+            threads,
+            children,
+            down: false,
+            history: Vec::new(),
+        })
+    }
+
+    /// Attach simulated step durations (the `StepExecutor::step_seconds`
+    /// hook for the dist path — keeps `--live` reports on modeled time).
+    pub fn with_timer(mut self, timer: StepTimeModel) -> DistDriver {
+        self.timer = Some(timer);
+        self
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn backend_label(&self) -> &'static str {
+        self.spec.label()
+    }
+
+    pub fn membership(&self) -> &[WorkerSpec] {
+        self.rank0.membership()
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        self.rank0.params()
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        self.rank0.layout()
+    }
+
+    /// Adam step counter of the running shards (all active ranks
+    /// agree; rank 0 is always active).
+    pub fn adam_step(&self) -> u64 {
+        self.rank0.shard.as_ref().map(|s| s.step).unwrap_or(0)
+    }
+
+    /// Drive one global step: broadcast, run rank 0's share, fold in
+    /// worker losses (rank order — the leader's f64 accumulation
+    /// order). `step_idx` labels the returned stats; the wire carries
+    /// the driver's own monotone step counter, which every worker
+    /// checks against its local count (corpus-alignment desync guard).
+    pub fn step(&mut self, step_idx: usize) -> Result<StepStats> {
+        let t0 = Instant::now();
+        let group = self.rank0.membership().len();
+        let batches: Vec<usize> =
+            self.rank0.membership().iter().map(|w| w.batch).collect();
+        let mut w = W::default();
+        w.u8(OP_STEP);
+        w.u64(self.history.len() as u64);
+        for r in 1..self.world {
+            self.t.send_bytes(r, &w.0)?;
+        }
+        let (mut loss_sum, mut token_count) =
+            self.rank0.step(self.t.as_mut())?;
+        for r in 1..group {
+            let reply = self.t.recv_bytes(r)?;
+            let mut rd = R::new(&reply);
+            loss_sum += rd.f64()?;
+            token_count += rd.f64()?;
+        }
+        if token_count <= 0.0 {
+            return Err(anyhow!("distributed step saw no tokens"));
+        }
+        let measured = t0.elapsed().as_secs_f64();
+        let stats = StepStats {
+            step: step_idx,
+            mean_loss: loss_sum / token_count,
+            tokens: token_count,
+            wall_seconds: match &self.timer {
+                Some(m) => m.step_seconds(&batches),
+                None => measured,
+            },
+            measured_seconds: measured,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Broadcast and execute a membership change.
+    pub fn migrate(
+        &mut self,
+        new_membership: Vec<WorkerSpec>,
+        survivors: &[Option<usize>],
+        transfers: &[Transfer],
+    ) -> Result<()> {
+        if new_membership.len() > self.world {
+            return Err(anyhow!(
+                "membership of {} ranks does not fit a {}-rank world",
+                new_membership.len(),
+                self.world
+            ));
+        }
+        let cmd = MigrateCmd {
+            new_membership,
+            survivors: survivors.to_vec(),
+            transfers: transfers.to_vec(),
+            adam_step: self.adam_step(),
+        };
+        let frame = encode_migrate(&cmd);
+        for r in 1..self.world {
+            self.t.send_bytes(r, &frame)?;
+        }
+        self.rank0.migrate(self.t.as_mut(), &cmd)
+    }
+
+    /// Stop every worker rank and reap threads/processes. Idempotent;
+    /// also run on drop.
+    pub fn shutdown(&mut self) {
+        if !self.down {
+            self.down = true;
+            for r in 1..self.world {
+                let _ = self.t.send_bytes(r, &[OP_SHUTDOWN]);
+            }
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        for mut c in self.children.drain(..) {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    _ => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DistDriver {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn member(batch: usize, ratio: f64) -> WorkerSpec {
+        WorkerSpec { batch, state_ratio: ratio, name: "m".into() }
+    }
+
+    #[test]
+    fn command_frames_round_trip() {
+        let cfg = DistConfig { seed: 9, corpus_branch: 3, ..Default::default() };
+        let membership = vec![member(3, 0.7), member(1, 0.3)];
+        let frame = encode_init(&cfg, &membership);
+        let mut r = R::new(&frame);
+        assert_eq!(r.u8().unwrap(), OP_INIT);
+        let (back, mem) = decode_init(&mut r).unwrap();
+        assert_eq!(back.seed, 9);
+        assert_eq!(back.corpus_branch, 3);
+        assert_eq!(back.adam.lr, cfg.adam.lr);
+        assert_eq!(back.surrogate.vocab, cfg.surrogate.vocab);
+        assert_eq!(mem.len(), 2);
+        assert_eq!(mem[0].batch, 3);
+        assert_eq!(mem[1].state_ratio, 0.3);
+
+        let mc = MigrateCmd {
+            new_membership: vec![member(4, 1.0)],
+            survivors: vec![Some(0)],
+            transfers: vec![
+                Transfer { from: None, to: 0, start: 5, len: 7 },
+                Transfer { from: Some(1), to: 0, start: 12, len: 1 },
+            ],
+            adam_step: 17,
+        };
+        let frame = encode_migrate(&mc);
+        let mut r = R::new(&frame);
+        assert_eq!(r.u8().unwrap(), OP_MIGRATE);
+        let back = decode_migrate(&mut r).unwrap();
+        assert_eq!(back.adam_step, 17);
+        assert_eq!(back.survivors, vec![Some(0)]);
+        assert_eq!(back.transfers, mc.transfers);
+        assert_eq!(back.new_membership.len(), 1);
+
+        // Truncated frames error instead of panicking.
+        let mut r = R::new(&frame[..4]);
+        let _ = r.u8();
+        assert!(decode_migrate(&mut r).is_err());
+    }
+
+    #[test]
+    fn local_driver_matches_single_worker_reference() {
+        use crate::exec::{NativeExecutor, SurrogateSpec};
+        use crate::trainer::{TrainConfig, Trainer};
+
+        let cfg = DistConfig { seed: 5, ..Default::default() };
+        let membership = vec![member(3, 0.7), member(1, 0.3)];
+        let mut driver =
+            DistDriver::launch(FabricSpec::Local, 2, cfg, membership)
+                .unwrap();
+
+        let tcfg = TrainConfig {
+            steps: 0,
+            seed: 5,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut reference = Trainer::from_executor(
+            Box::new(NativeExecutor::new(SurrogateSpec::default())),
+            vec![member(4, 1.0)],
+            tcfg,
+        )
+        .unwrap();
+
+        assert_eq!(driver.params(), reference.params());
+        for s in 0..3 {
+            let st = driver.step(s).unwrap();
+            reference.step(s).unwrap();
+            assert!(st.mean_loss.is_finite() && st.mean_loss > 0.0);
+            assert_eq!(
+                driver.params(),
+                reference.params(),
+                "diverged at step {s}"
+            );
+        }
+        driver.shutdown();
+    }
+
+    #[test]
+    fn timer_substitutes_modeled_step_time() {
+        let cfg = DistConfig::default();
+        let driver = DistDriver::launch(
+            FabricSpec::Local,
+            1,
+            cfg,
+            vec![member(2, 1.0)],
+        )
+        .unwrap();
+        let mut driver = driver.with_timer(StepTimeModel {
+            per_sample_seconds: vec![10.0],
+            fixed_seconds: 1.0,
+        });
+        let st = driver.step(0).unwrap();
+        assert_eq!(st.wall_seconds, 21.0); // 2 samples x 10s + 1s fixed
+        assert!(st.measured_seconds < 5.0, "measured wall should be real");
+    }
+}

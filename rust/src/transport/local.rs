@@ -1,0 +1,181 @@
+//! In-process channel transport — the zero-dependency default fabric.
+//!
+//! A [`LocalFabric`] wires `world²` unbounded `std::sync::mpsc`
+//! channels into per-(src, dst) FIFO lanes and hands back one
+//! [`LocalTransport`] endpoint per rank. Endpoints are `Send`, so the
+//! usual pattern is one endpoint per worker thread. Unbounded channels
+//! mean sends never block, which is what makes the sequential
+//! send-then-recv discipline of the ring collectives and migration
+//! loops deadlock-free (see DESIGN.md §Transport).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::{expect_bytes, expect_f32, Frame, Transport};
+use crate::util::error::{anyhow, Result};
+
+/// Constructor for a fully connected in-process fabric.
+pub struct LocalFabric;
+
+impl LocalFabric {
+    /// Build `world` connected endpoints; index == rank. Self-lanes are
+    /// included, so `send_*(me, ..)` / `recv_*(me)` work.
+    pub fn new(world: usize) -> Vec<LocalTransport> {
+        assert!(world >= 1, "fabric needs at least one rank");
+        // txs[src][dst] is the sender of the src->dst lane;
+        // rxs[dst][src] the matching receiver.
+        let mut txs: Vec<Vec<Sender<Frame>>> =
+            (0..world).map(|_| Vec::with_capacity(world)).collect();
+        let mut rxs: Vec<Vec<Receiver<Frame>>> =
+            (0..world).map(|_| Vec::with_capacity(world)).collect();
+        // dst outer / src inner: every txs[src] gains one entry per
+        // dst (in dst order), every rxs[dst] one entry per src (in src
+        // order), so both index by the peer rank.
+        for dst in 0..world {
+            for src in 0..world {
+                let (tx, rx) = channel();
+                txs[src].push(tx);
+                rxs[dst].push(rx);
+            }
+        }
+        let mut out = Vec::with_capacity(world);
+        for (rank, (senders, inbox)) in
+            txs.into_iter().zip(rxs).enumerate()
+        {
+            out.push(LocalTransport { rank, world, senders, inbox });
+        }
+        out
+    }
+}
+
+/// One rank's endpoint in a [`LocalFabric`].
+pub struct LocalTransport {
+    rank: usize,
+    world: usize,
+    /// `senders[dst]` — this rank's lane to each destination.
+    senders: Vec<Sender<Frame>>,
+    /// `inbox[src]` — the receive side of each source's lane to us.
+    inbox: Vec<Receiver<Frame>>,
+}
+
+impl LocalTransport {
+    fn check_peer(&self, peer: usize, verb: &str) -> Result<()> {
+        if peer >= self.world {
+            return Err(anyhow!(
+                "{verb} rank {peer} out of range (world {})",
+                self.world
+            ));
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, to: usize, frame: Frame) -> Result<()> {
+        self.check_peer(to, "send to")?;
+        self.senders[to]
+            .send(frame)
+            .map_err(|_| anyhow!("rank {to} hung up (channel closed)"))
+    }
+
+    fn pull(&mut self, from: usize) -> Result<Frame> {
+        self.check_peer(from, "recv from")?;
+        self.inbox[from]
+            .recv()
+            .map_err(|_| anyhow!("rank {from} hung up (channel closed)"))
+    }
+}
+
+impl Transport for LocalTransport {
+    fn backend(&self) -> &'static str {
+        "local"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        self.push(to, Frame::F32(data.to_vec()))
+    }
+
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        let f = self.pull(from)?;
+        expect_f32(f, from)
+    }
+
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        self.push(to, Frame::Bytes(data.to_vec()))
+    }
+
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        let f = self.pull(from)?;
+        expect_bytes(f, from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_route_between_ranks_and_self() {
+        let mut eps = LocalFabric::new(3);
+        let mut c = eps.pop().unwrap(); // rank 2
+        let mut b = eps.pop().unwrap(); // rank 1
+        let mut a = eps.pop().unwrap(); // rank 0
+        assert_eq!((a.rank(), b.rank(), c.rank()), (0, 1, 2));
+        assert_eq!(a.world_size(), 3);
+        assert_eq!(a.backend(), "local");
+
+        a.send_f32(1, &[1.0, -0.0]).unwrap();
+        a.send_bytes(1, &[7]).unwrap();
+        c.send_f32(1, &[9.0]).unwrap();
+        // Per-source FIFO, demultiplexed by src.
+        assert_eq!(b.recv_f32(2).unwrap(), vec![9.0]);
+        let xs = b.recv_f32(0).unwrap();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![7]);
+
+        // Self-send round-trips.
+        b.send_bytes(1, &[1, 2]).unwrap();
+        assert_eq!(b.recv_bytes(1).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn type_mismatch_and_bad_rank_error() {
+        let mut eps = LocalFabric::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[1]).unwrap();
+        assert!(b.recv_f32(0).is_err());
+        assert!(a.send_f32(5, &[1.0]).is_err());
+        assert!(a.recv_bytes(9).is_err());
+    }
+
+    #[test]
+    fn hung_up_peer_is_an_error_not_a_hang() {
+        let mut eps = LocalFabric::new(2);
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        drop(b);
+        assert!(a.send_f32(1, &[1.0]).is_err());
+        assert!(a.recv_f32(1).is_err());
+    }
+
+    #[test]
+    fn barrier_releases_all_ranks() {
+        let eps = LocalFabric::new(4);
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        ep.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! The transport subsystem: a real inter-rank message plane.
+//!
+//! Everything before this module runs the paper's "cluster" inside one
+//! address space — the ring collectives are deterministic array
+//! transforms, the elastic session migrates Adam shards with
+//! `copy_from_slice`. This module makes rank-to-rank communication a
+//! first-class abstraction so the SAME trainer pipeline spans threads,
+//! processes and (over TCP) hosts:
+//!
+//! * [`Transport`] — typed, length-prefixed frames (f32 vectors and raw
+//!   bytes) between ranks, plus a barrier and rank/world metadata.
+//!   Fail-stop semantics: any send/recv error means the peer is gone
+//!   and the step that observed it returns the error.
+//! * [`local::LocalFabric`] / [`local::LocalTransport`] — in-process
+//!   channels (`std::sync::mpsc`), the zero-dependency default.
+//! * [`tcp::TcpTransport`] — loopback/LAN sockets (`std::net` only)
+//!   with a tiny rendezvous + full-mesh handshake protocol.
+//! * [`collectives`] — the segmented ring AllGather / ReduceScatter
+//!   over the uneven `ShardLayout`, executed as actual N−1 rounds of
+//!   peer messages, bit-identical to the in-process
+//!   `crate::collectives::ring_*` (the native backend's dyadic
+//!   exact-summation contract makes that testable bitwise — DESIGN.md
+//!   invariant 10: *the wire is bitwise-invisible*).
+//! * [`dist`] — the SPMD per-rank training engine
+//!   (`dist::DistRank`), the `cephalo worker` serving loop
+//!   (`dist::worker_loop`) and the coordinator-side driver
+//!   (`dist::DistDriver`) that spawns worker threads or processes and
+//!   routes `elastic::apply_migration` transfer lists over the wire.
+//!
+//! ## Frame format
+//!
+//! On the wire (TCP) every frame is `[tag: u8][len: u64 LE][payload]`;
+//! tag 0 = raw bytes, tag 1 = f32 vector (payload is `4 × count`
+//! little-endian bytes). In-process transports carry the same frames as
+//! enum values without serialization. A `recv_f32` that dequeues a
+//! bytes frame (or vice versa) is a protocol error, not a silent
+//! reinterpretation — SPMD lockstep means both sides always agree on
+//! the next frame type.
+
+pub mod collectives;
+pub mod dist;
+pub mod local;
+pub mod tcp;
+
+pub use dist::{worker_loop, DistConfig, DistDriver, FabricSpec};
+pub use local::{LocalFabric, LocalTransport};
+pub use tcp::{Rendezvous, TcpTransport};
+
+use crate::util::error::{anyhow, Result};
+
+/// One in-flight message. In-process transports pass these by value;
+/// the TCP transport (de)serializes them with [`encode_frame`] /
+/// `read_frame`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Bytes(Vec<u8>),
+    F32(Vec<f32>),
+}
+
+/// Wire tag for a [`Frame::Bytes`] payload.
+pub const TAG_BYTES: u8 = 0;
+/// Wire tag for a [`Frame::F32`] payload.
+pub const TAG_F32: u8 = 1;
+
+/// The single byte exchanged by the default [`Transport::barrier`].
+const BARRIER_TOKEN: u8 = 0xB7;
+
+/// Point-to-point message transport between `world_size` ranks.
+///
+/// Implementations must be `Send` (endpoints move onto worker threads)
+/// and support self-sends (`send_*(rank, ..)` followed by
+/// `recv_*(rank)`), which keeps migration transfer loops free of
+/// special cases. Frames between a (src, dst) pair are FIFO; frames
+/// from different sources are independently ordered, and `recv_*(from)`
+/// demultiplexes by source rank.
+pub trait Transport: Send {
+    /// Backend label ("local", "tcp") for logs and reports.
+    fn backend(&self) -> &'static str;
+
+    /// This endpoint's rank in `0..world_size`.
+    fn rank(&self) -> usize;
+
+    /// Total number of ranks in the fabric.
+    fn world_size(&self) -> usize;
+
+    /// Send an f32 vector to `to` (FIFO per destination).
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()>;
+
+    /// Receive the next f32 frame from `from` (blocking).
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>>;
+
+    /// Send a raw byte frame to `to`.
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()>;
+
+    /// Receive the next byte frame from `from` (blocking).
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>>;
+
+    /// Block until every rank has entered the barrier. Default:
+    /// gather-to-0 then release, built on the point-to-point frames.
+    fn barrier(&mut self) -> Result<()> {
+        let n = self.world_size();
+        if n <= 1 {
+            return Ok(());
+        }
+        if self.rank() == 0 {
+            for r in 1..n {
+                let tok = self.recv_bytes(r)?;
+                if tok != [BARRIER_TOKEN] {
+                    return Err(anyhow!(
+                        "barrier desync: rank {r} sent a non-barrier \
+                         frame ({} bytes)",
+                        tok.len()
+                    ));
+                }
+            }
+            for r in 1..n {
+                self.send_bytes(r, &[BARRIER_TOKEN])?;
+            }
+        } else {
+            self.send_bytes(0, &[BARRIER_TOKEN])?;
+            let tok = self.recv_bytes(0)?;
+            if tok != [BARRIER_TOKEN] {
+                return Err(anyhow!("barrier desync at rank 0 release"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serialize an f32 slice as little-endian bytes (the wire layout of a
+/// [`Frame::F32`] payload).
+pub fn f32s_to_le_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; errors on a ragged length.
+pub fn f32s_from_le_bytes(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(anyhow!("f32 frame of {} bytes is not 4-aligned", b.len()));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Render a frame in wire format: `[tag][len u64 LE][payload]`.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let (tag, payload) = match frame {
+        Frame::Bytes(b) => (TAG_BYTES, b.clone()),
+        Frame::F32(xs) => (TAG_F32, f32s_to_le_bytes(xs)),
+    };
+    let mut out = Vec::with_capacity(9 + payload.len());
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Helpers shared by the concrete transports: dequeue a frame and
+/// demand a specific variant.
+pub(crate) fn expect_f32(frame: Frame, from: usize) -> Result<Vec<f32>> {
+    match frame {
+        Frame::F32(xs) => Ok(xs),
+        Frame::Bytes(b) => Err(anyhow!(
+            "protocol desync: expected an f32 frame from rank {from}, \
+             got {} raw bytes",
+            b.len()
+        )),
+    }
+}
+
+pub(crate) fn expect_bytes(frame: Frame, from: usize) -> Result<Vec<u8>> {
+    match frame {
+        Frame::Bytes(b) => Ok(b),
+        Frame::F32(xs) => Err(anyhow!(
+            "protocol desync: expected a byte frame from rank {from}, \
+             got {} f32s",
+            xs.len()
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trips_bitwise_through_le_bytes() {
+        let xs = vec![0.0f32, -0.0, 1.5, -3.25e-7, f32::MIN_POSITIVE];
+        let b = f32s_to_le_bytes(&xs);
+        assert_eq!(b.len(), xs.len() * 4);
+        let back = f32s_from_le_bytes(&b).unwrap();
+        // Bitwise, not approximate: compare the bit patterns.
+        let bits: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+        let back_bits: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, back_bits);
+        assert!(f32s_from_le_bytes(&b[..3]).is_err());
+    }
+
+    #[test]
+    fn frames_encode_with_tag_and_length() {
+        let f = Frame::F32(vec![1.0, 2.0]);
+        let w = encode_frame(&f);
+        assert_eq!(w[0], TAG_F32);
+        assert_eq!(u64::from_le_bytes(w[1..9].try_into().unwrap()), 8);
+        assert_eq!(w.len(), 9 + 8);
+        let b = encode_frame(&Frame::Bytes(vec![9, 9]));
+        assert_eq!(b[0], TAG_BYTES);
+        assert_eq!(b.len(), 9 + 2);
+    }
+
+    #[test]
+    fn expect_helpers_reject_cross_type_frames() {
+        assert!(expect_f32(Frame::Bytes(vec![1]), 0).is_err());
+        assert!(expect_bytes(Frame::F32(vec![1.0]), 0).is_err());
+        assert_eq!(expect_f32(Frame::F32(vec![2.0]), 0).unwrap(), vec![2.0]);
+        assert_eq!(expect_bytes(Frame::Bytes(vec![3]), 0).unwrap(), vec![3]);
+    }
+}

@@ -1,0 +1,465 @@
+//! TCP socket transport (`std::net` only): loopback or LAN ranks with
+//! a tiny rendezvous + full-mesh handshake.
+//!
+//! ## Rendezvous protocol
+//!
+//! Rank 0 hosts a [`Rendezvous`] listener at a well-known address (the
+//! `--connect` address handed to `cephalo worker`). Establishment runs
+//! in three phases, all length-prefixed little-endian:
+//!
+//! 1. **register** — every rank binds its own *data* listener on an
+//!    ephemeral port, then ranks 1..N connect to the rendezvous
+//!    address and send `[rank: u64][addr_len: u64][addr bytes]`.
+//! 2. **table** — once all N−1 registrations arrive, rank 0 answers
+//!    each with the full address table `[world: u64]` +
+//!    `world × [len: u64][addr bytes]` (rank 0's data address at
+//!    index 0) and drops the rendezvous streams.
+//! 3. **mesh** — every pair gets exactly one TCP stream: rank i
+//!    connects to the data listener of every j < i (sending
+//!    `[i: u64]` as a hello) and accepts one connection from every
+//!    j > i. A reader thread per stream drains frames into per-source
+//!    FIFO queues, so writes on the protocol path never block on a
+//!    slow receiver (the discipline that keeps the ring and migration
+//!    loops deadlock-free).
+//!
+//! Failure semantics are fail-stop: a vanished peer surfaces as an
+//! error from the next `send_*`/`recv_*` touching it, never as silent
+//! corruption — frames are typed and length-checked.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use super::{
+    expect_bytes, expect_f32, f32s_from_le_bytes, f32s_to_le_bytes, Frame,
+    Transport, TAG_BYTES, TAG_F32,
+};
+use crate::util::error::{anyhow, Result};
+
+/// Frames above this are a protocol error, not an allocation request.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+/// Rendezvous/handshake strings above this are rejected.
+const MAX_ADDR_BYTES: usize = 4096;
+/// Connect retry budget: the listener side binds before advertising,
+/// so retries only cover transient refusals (SYN backlog overflow).
+const CONNECT_ATTEMPTS: usize = 250;
+const CONNECT_BACKOFF: Duration = Duration::from_millis(20);
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_string(r: &mut impl Read) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    if len > MAX_ADDR_BYTES {
+        return Err(anyhow!("handshake string of {len} bytes rejected"));
+    }
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).map_err(|e| anyhow!("bad handshake utf-8: {e}"))
+}
+
+fn write_string(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+/// Read one wire frame; `Ok(None)` on a clean EOF at a frame boundary.
+fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut tag = [0u8; 1];
+    if let Err(e) = r.read_exact(&mut tag) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            return Ok(None);
+        }
+        return Err(e.into());
+    }
+    let len = read_u64(r)? as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(anyhow!("oversized frame: {len} bytes"));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    match tag[0] {
+        TAG_BYTES => Ok(Some(Frame::Bytes(payload))),
+        TAG_F32 => Ok(Some(Frame::F32(f32s_from_le_bytes(&payload)?))),
+        t => Err(anyhow!("unknown frame tag {t}")),
+    }
+}
+
+fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(CONNECT_BACKOFF);
+            }
+        }
+    }
+    Err(anyhow!(
+        "could not connect to {addr} after {CONNECT_ATTEMPTS} attempts: {}",
+        last.map(|e| e.to_string()).unwrap_or_default()
+    ))
+}
+
+/// One reader thread per mesh stream: drain frames into the per-source
+/// queue until EOF or error (either way the sender drops and `recv_*`
+/// reports the peer as gone). Decode errors are logged before the
+/// thread exits so a protocol desync is distinguishable from a peer
+/// that simply went away.
+fn spawn_reader(stream: TcpStream, tx: Sender<Frame>) {
+    std::thread::spawn(move || {
+        let mut r = BufReader::new(stream);
+        loop {
+            match read_frame(&mut r) {
+                Ok(Some(frame)) => {
+                    if tx.send(frame).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) => break, // clean EOF at a frame boundary
+                Err(e) => {
+                    crate::warn!("tcp transport reader stopping: {e}");
+                    break;
+                }
+            }
+        }
+    });
+}
+
+/// Phase-3 mesh formation, shared by rank 0 and workers.
+fn mesh(
+    rank: usize,
+    world: usize,
+    table: &[String],
+    data_listener: TcpListener,
+) -> Result<TcpTransport> {
+    let mut inbox = Vec::with_capacity(world);
+    let mut senders: Vec<Option<Sender<Frame>>> = Vec::with_capacity(world);
+    for _ in 0..world {
+        let (tx, rx) = channel();
+        senders.push(Some(tx));
+        inbox.push(rx);
+    }
+    let self_tx = senders[rank].take().expect("own sender present");
+    let mut peers: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+
+    // Connect DOWN the table; the hello names our rank.
+    for peer in 0..rank {
+        let mut s = connect_retry(&table[peer])?;
+        let _ = s.set_nodelay(true);
+        write_u64(&mut s, rank as u64)?;
+        let tx = senders[peer].take().expect("peer sender unclaimed");
+        spawn_reader(s.try_clone()?, tx);
+        peers[peer] = Some(s);
+    }
+    // Accept UP: one stream from every higher rank, identified by its
+    // hello.
+    for _ in rank + 1..world {
+        let (mut s, _) = data_listener.accept()?;
+        let _ = s.set_nodelay(true);
+        let peer = read_u64(&mut s)? as usize;
+        if peer <= rank || peer >= world {
+            return Err(anyhow!(
+                "mesh hello from unexpected rank {peer} (we are {rank} \
+                 of {world})"
+            ));
+        }
+        let tx = senders[peer]
+            .take()
+            .ok_or_else(|| anyhow!("duplicate mesh stream from rank {peer}"))?;
+        spawn_reader(s.try_clone()?, tx);
+        peers[peer] = Some(s);
+    }
+    Ok(TcpTransport { rank, world, peers, inbox, self_tx })
+}
+
+/// Rank 0's side of the rendezvous: bind, advertise, establish.
+pub struct Rendezvous {
+    listener: TcpListener,
+    world: usize,
+}
+
+impl Rendezvous {
+    /// Bind the rendezvous listener (use port 0 for an ephemeral port,
+    /// then read the real one back with [`Rendezvous::local_addr`]).
+    pub fn bind(addr: &str, world: usize) -> Result<Rendezvous> {
+        if world < 1 {
+            return Err(anyhow!("world size must be at least 1"));
+        }
+        let listener = TcpListener::bind(addr)?;
+        Ok(Rendezvous { listener, world })
+    }
+
+    /// The address workers must `--connect` to.
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr()?.to_string())
+    }
+
+    /// Collect all registrations, broadcast the table, form the mesh;
+    /// returns rank 0's endpoint. Blocks until every worker connects.
+    pub fn establish(self) -> Result<TcpTransport> {
+        let world = self.world;
+        let ip = self.listener.local_addr()?.ip();
+        let data_listener = TcpListener::bind((ip, 0))?;
+        let mut table: Vec<String> = vec![String::new(); world];
+        table[0] = data_listener.local_addr()?.to_string();
+        let mut pending: Vec<TcpStream> = Vec::with_capacity(world - 1);
+        for _ in 1..world {
+            let (mut s, _) = self.listener.accept()?;
+            let rank = read_u64(&mut s)? as usize;
+            if rank == 0 || rank >= world {
+                return Err(anyhow!(
+                    "registration from invalid rank {rank} (world {world})"
+                ));
+            }
+            if !table[rank].is_empty() {
+                return Err(anyhow!("rank {rank} registered twice"));
+            }
+            table[rank] = read_string(&mut s)?;
+            pending.push(s);
+        }
+        for s in pending.iter_mut() {
+            write_u64(s, world as u64)?;
+            for a in &table {
+                write_string(s, a)?;
+            }
+        }
+        drop(pending);
+        mesh(0, world, &table, data_listener)
+    }
+}
+
+/// A worker rank's side: register with the rendezvous at `addr`, learn
+/// the table, form the mesh. `rank` must be in `1..world`.
+pub fn connect(addr: &str, rank: usize, world: usize) -> Result<TcpTransport> {
+    if rank == 0 || rank >= world {
+        return Err(anyhow!(
+            "worker rank must be in 1..{world}, got {rank} (rank 0 is \
+             the coordinator)"
+        ));
+    }
+    let mut rz = connect_retry(addr)?;
+    let ip = rz.local_addr()?.ip();
+    let data_listener = TcpListener::bind((ip, 0))?;
+    write_u64(&mut rz, rank as u64)?;
+    write_string(&mut rz, &data_listener.local_addr()?.to_string())?;
+    let n = read_u64(&mut rz)? as usize;
+    if n != world {
+        return Err(anyhow!(
+            "rendezvous world mismatch: coordinator says {n}, we say {world}"
+        ));
+    }
+    let mut table = Vec::with_capacity(world);
+    for _ in 0..world {
+        table.push(read_string(&mut rz)?);
+    }
+    drop(rz);
+    mesh(rank, world, &table, data_listener)
+}
+
+/// Stand up a full TCP-loopback fabric inside one process, one thread
+/// per connecting rank — the shape used by tests and benches (worker
+/// PROCESSES use [`Rendezvous`]/[`connect`] directly via
+/// `cephalo worker`). `endpoints[r]` has rank `r`.
+pub fn thread_fabric(world: usize) -> Result<Vec<Box<dyn Transport>>> {
+    let rz = Rendezvous::bind("127.0.0.1:0", world)?;
+    let addr = rz.local_addr()?;
+    let handles: Vec<_> = (1..world)
+        .map(|r| {
+            let addr = addr.clone();
+            std::thread::spawn(move || connect(&addr, r, world))
+        })
+        .collect();
+    let rank0 = rz.establish()?;
+    let mut eps: Vec<Box<dyn Transport>> = Vec::with_capacity(world);
+    eps.push(Box::new(rank0));
+    for h in handles {
+        let t = h
+            .join()
+            .map_err(|_| anyhow!("rendezvous connect thread panicked"))??;
+        eps.push(Box::new(t));
+    }
+    Ok(eps)
+}
+
+/// One rank's endpoint in a TCP mesh.
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    /// Write side of the mesh stream to each peer (`None` at our own
+    /// index — self-sends short-circuit through `self_tx`).
+    peers: Vec<Option<TcpStream>>,
+    /// Per-source frame queues fed by the reader threads.
+    inbox: Vec<Receiver<Frame>>,
+    self_tx: Sender<Frame>,
+}
+
+impl TcpTransport {
+    fn write_wire(&mut self, to: usize, tag: u8, payload: &[u8]) -> Result<()> {
+        if to >= self.world {
+            return Err(anyhow!(
+                "send to rank {to} out of range (world {})",
+                self.world
+            ));
+        }
+        let s = self.peers[to].as_mut().expect("mesh is fully connected");
+        let mut header = [0u8; 9];
+        header[0] = tag;
+        header[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        s.write_all(&header)?;
+        s.write_all(payload)?;
+        Ok(())
+    }
+
+    fn pull(&mut self, from: usize) -> Result<Frame> {
+        if from >= self.world {
+            return Err(anyhow!(
+                "recv from rank {from} out of range (world {})",
+                self.world
+            ));
+        }
+        self.inbox[from]
+            .recv()
+            .map_err(|_| anyhow!("rank {from} disconnected"))
+    }
+}
+
+impl Drop for TcpTransport {
+    /// Shut both directions of every mesh stream down so OUR reader
+    /// threads (which hold `try_clone`d handles of the same sockets)
+    /// and the remote peers' readers all observe EOF and exit —
+    /// without this, dropped endpoints would strand one blocked
+    /// reader thread per peer for the life of the process.
+    fn drop(&mut self) {
+        for s in self.peers.iter().flatten() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn backend(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        if to == self.rank {
+            return self
+                .self_tx
+                .send(Frame::F32(data.to_vec()))
+                .map_err(|_| anyhow!("self queue closed"));
+        }
+        self.write_wire(to, TAG_F32, &f32s_to_le_bytes(data))
+    }
+
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        let f = self.pull(from)?;
+        expect_f32(f, from)
+    }
+
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        if to == self.rank {
+            return self
+                .self_tx
+                .send(Frame::Bytes(data.to_vec()))
+                .map_err(|_| anyhow!("self queue closed"));
+        }
+        self.write_wire(to, TAG_BYTES, data)
+    }
+
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        let f = self.pull(from)?;
+        expect_bytes(f, from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_mesh_routes_typed_frames() {
+        let mut eps = thread_fabric(3).unwrap();
+        for (r, ep) in eps.iter().enumerate() {
+            assert_eq!(ep.rank(), r);
+            assert_eq!(ep.world_size(), 3);
+            assert_eq!(ep.backend(), "tcp");
+        }
+        // Split borrows: drive each endpoint from its own thread.
+        std::thread::scope(|s| {
+            let mut it = eps.iter_mut();
+            let a = it.next().unwrap();
+            let b = it.next().unwrap();
+            let c = it.next().unwrap();
+            s.spawn(move || {
+                a.send_f32(1, &[1.0, -0.0]).unwrap();
+                a.send_bytes(1, &[7, 8]).unwrap();
+                assert_eq!(a.recv_bytes(2).unwrap(), vec![3]);
+            });
+            s.spawn(move || {
+                let xs = b.recv_f32(0).unwrap();
+                assert_eq!(xs.len(), 2);
+                assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(b.recv_bytes(0).unwrap(), vec![7, 8]);
+                // Self-send round-trips.
+                b.send_f32(1, &[4.5]).unwrap();
+                assert_eq!(b.recv_f32(1).unwrap(), vec![4.5]);
+            });
+            s.spawn(move || {
+                c.send_bytes(0, &[3]).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn barrier_over_sockets_releases_everyone() {
+        let eps = thread_fabric(4).unwrap();
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    for _ in 0..2 {
+                        ep.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn type_mismatch_is_a_protocol_error() {
+        let mut eps = thread_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[1]).unwrap();
+        assert!(b.recv_f32(0).is_err());
+        drop(a);
+        // Peer gone: recv reports disconnection instead of hanging.
+        assert!(b.recv_bytes(0).is_err());
+    }
+
+    #[test]
+    fn invalid_worker_ranks_are_rejected() {
+        assert!(connect("127.0.0.1:1", 0, 4).is_err());
+        assert!(connect("127.0.0.1:1", 4, 4).is_err());
+        assert!(Rendezvous::bind("127.0.0.1:0", 0).is_err());
+    }
+}

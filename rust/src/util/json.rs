@@ -97,6 +97,71 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Render to compact JSON text. Numbers use Rust's shortest
+    /// round-trip float formatting, so `parse(render(x)) == x` for
+    /// every finite value (non-finite floats render as `null`, which
+    /// JSON has no representation for).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -335,6 +400,24 @@ mod tests {
             Json::parse("\"\\u0041\"").unwrap(),
             Json::Str("A".to_string())
         );
+    }
+
+    #[test]
+    fn render_round_trips_through_parse() {
+        let j = Json::parse(
+            r#"{"a": [1, -2.5, true, null], "s": "x\"y\nz", "o": {}}"#,
+        )
+        .unwrap();
+        let text = j.render();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // Floats round-trip exactly via shortest formatting.
+        let x = 0.1f64 + 0.2;
+        let n = Json::Num(x);
+        let back = Json::parse(&n.render()).unwrap();
+        assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits());
+        // Non-finite floats degrade to null instead of emitting
+        // unparseable text.
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
     }
 
     #[test]

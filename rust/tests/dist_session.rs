@@ -1,0 +1,160 @@
+//! Acceptance (tentpole): a 3-rank TCP-loopback training run — real
+//! sockets, real rendezvous, real wire collectives — of ≥ 3 steps
+//! including ≥ 1 elastic re-plan with state migration over the
+//! transport, produces BITWISE-identical parameters to (a) the same
+//! session over in-process channels (`LocalTransport`), (b) the
+//! historical in-process trainer, and (c) a single-worker reference —
+//! all in the default (no-`xla`) build.
+//!
+//! This is DESIGN.md invariant 10 ("the wire is bitwise-invisible") at
+//! full system scope: planner registry + plan cache + migration
+//! transfer lists + SPMD wire training, three substrates, one
+//! trajectory.
+
+use std::sync::Arc;
+
+use cephalo::coordinator::session::{Session, SessionConfig};
+use cephalo::exec::{NativeExecutor, SurrogateSpec};
+use cephalo::plan::CephaloPlanner;
+use cephalo::testkit::tiny_cluster3;
+use cephalo::trainer::{TrainConfig, Trainer, WorkerSpec};
+use cephalo::transport::FabricSpec;
+
+const SEED: u64 = 13;
+const BATCH: usize = 8;
+const STEPS_PER_EVENT: usize = 2;
+
+fn session(fabric: Option<FabricSpec>) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric,
+        ..Default::default()
+    };
+    Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("session starts on the 3-GPU cluster")
+}
+
+fn reference() -> Trainer {
+    // One worker, the whole batch, the whole state — same surrogate,
+    // seed and corpus stream as every session engine.
+    let cfg = TrainConfig {
+        steps: 0,
+        seed: SEED,
+        log_every: 0,
+        ..Default::default()
+    };
+    Trainer::from_executor(
+        Box::new(NativeExecutor::new(SurrogateSpec::default())),
+        vec![WorkerSpec {
+            batch: BATCH,
+            state_ratio: 1.0,
+            name: "solo".into(),
+        }],
+        cfg,
+    )
+    .unwrap()
+}
+
+#[test]
+fn tcp_session_is_bitwise_identical_to_local_inprocess_and_reference() {
+    let mut tcp = session(Some(FabricSpec::TcpThreads));
+    let mut local = session(Some(FabricSpec::Local));
+    let mut inproc = session(None);
+    let mut reference = reference();
+
+    assert_eq!(tcp.backend_label(), "native+tcp");
+    assert_eq!(local.backend_label(), "native+local");
+    assert_eq!(
+        tcp.params(),
+        reference.params(),
+        "same seed must give the same init on every substrate"
+    );
+    assert_eq!(local.params(), reference.params());
+    assert_eq!(inproc.params(), reference.params());
+
+    // Explicit churn: 3 -> 2 (shrink: the departed rank's Adam shard
+    // moves over the wire) -> 3 (regrow: the rejoining rank receives
+    // params + state ranges) -> 2 again (the recurring membership must
+    // be a plan-cache hit).
+    let churn = [2usize, 3, 2];
+    for (hour, &size) in churn.iter().enumerate() {
+        let rt = tcp.step_event(hour, size).unwrap();
+        let rl = local.step_event(hour, size).unwrap();
+        let ri = inproc.step_event(hour, size).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = reference.history.len();
+            reference.step(idx).unwrap();
+        }
+        assert_eq!(rt.gpus, size);
+        assert_eq!(
+            tcp.params(),
+            inproc.params(),
+            "tcp diverged from in-process after event {hour} \
+             (membership {size})"
+        );
+        assert_eq!(
+            local.params(),
+            inproc.params(),
+            "local diverged from in-process after event {hour}"
+        );
+        assert_eq!(
+            inproc.params(),
+            reference.params(),
+            "in-process diverged from the single-worker reference \
+             after event {hour}"
+        );
+        // All three engines executed the SAME migration volume.
+        assert_eq!(rt.moved_state_elems, ri.moved_state_elems);
+        assert_eq!(rl.moved_state_elems, ri.moved_state_elems);
+        // Losses ride the same trajectory (worker count changes the
+        // f64 reduction grouping, so compare approximately).
+        assert!(
+            (rt.mean_loss - ri.mean_loss).abs()
+                <= 1e-9 * ri.mean_loss.abs().max(1.0),
+            "loss diverged: tcp {} vs inproc {}",
+            rt.mean_loss,
+            ri.mean_loss
+        );
+    }
+
+    // ≥ 3 steps ran, and at least one event really moved state.
+    assert!(tcp.steps_run() >= 3);
+    assert_eq!(tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
+    let moved: usize =
+        tcp.reports.iter().map(|r| r.moved_state_elems).sum();
+    assert!(moved > 0, "churn never moved any state over the wire");
+
+    // Recurring memberships are cache hits, not DP solves.
+    assert!(
+        tcp.cache().hits() >= 1,
+        "returning to a seen membership must hit the plan cache"
+    );
+    assert!(tcp.reports.iter().any(|r| r.from_cache));
+}
+
+#[test]
+fn trace_driven_tcp_session_matches_the_inprocess_session() {
+    // Same invariant with membership sizes from the AWS availability
+    // trace — the actual `elastic --live --transport tcp` path.
+    let mut tcp = session(Some(FabricSpec::TcpThreads));
+    let mut inproc = session(None);
+    let sizes = tcp.churn_sizes(3);
+    assert!(sizes.len() >= 3);
+    for (hour, &size) in sizes.iter().enumerate() {
+        tcp.step_event(hour, size).unwrap();
+        inproc.step_event(hour, size).unwrap();
+        assert_eq!(
+            tcp.params(),
+            inproc.params(),
+            "diverged after trace hour {hour} (size {size})"
+        );
+    }
+}

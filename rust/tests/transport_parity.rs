@@ -1,0 +1,134 @@
+//! Satellite: transport parity. The segmented ring collectives over a
+//! REAL message plane — in-process channels (`LocalTransport`) and
+//! loopback sockets (`TcpTransport`, threaded ranks) — are
+//! BITWISE-equal to the in-process `collectives::ring_*` and to the
+//! `direct_*` references, over uneven and zero-`r_i` layouts.
+//! DESIGN.md invariants 8/9 extended to the wire (invariant 10: the
+//! wire is bitwise-invisible).
+
+use cephalo::collectives as inproc;
+use cephalo::sharding::ShardLayout;
+use cephalo::testkit::{check, Gen};
+use cephalo::transport::{collectives as wire, LocalFabric, Transport};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one collective round over an already-built fabric: each
+/// endpoint executes `f` on its own thread; results in rank order.
+fn run_ranks<T: Send>(
+    eps: Vec<Box<dyn Transport>>,
+    f: impl Fn(&mut dyn Transport) -> T + Sync,
+) -> Vec<T> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let f = &f;
+                s.spawn(move || f(ep.as_mut()))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn local_fabric(world: usize) -> Vec<Box<dyn Transport>> {
+    LocalFabric::new(world)
+        .into_iter()
+        .map(|e| Box::new(e) as Box<dyn Transport>)
+        .collect()
+}
+
+/// One parity case: random (possibly sparse) layout, random data; both
+/// collectives over the given fabric against both references.
+fn parity_case(g: &mut Gen, eps: Vec<Box<dyn Transport>>) {
+    let n = eps.len();
+    let len = g.usize_in(0, 300);
+    let ratios = if g.bool() { g.ratios(n) } else { g.sparse_ratios(n) };
+    let layout = ShardLayout::by_ratios(len, &ratios);
+
+    let shards: Vec<Vec<f32>> = (0..n)
+        .map(|r| g.vec_f32(layout.size(r), 2.0))
+        .collect();
+    let full: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, 2.0)).collect();
+
+    let expect_ag = inproc::ring_allgather(&shards, &layout);
+    assert_eq!(expect_ag, inproc::direct_allgather(&shards, &layout));
+    let expect_rs = inproc::ring_reduce_scatter(&full, &layout);
+
+    let got = run_ranks(eps, |t| {
+        let r = t.rank();
+        let ag = wire::ring_allgather(t, &shards[r], &layout).unwrap();
+        let rs = wire::ring_reduce_scatter(t, &full[r], &layout).unwrap();
+        (ag, rs)
+    });
+    for (r, (ag, rs)) in got.iter().enumerate() {
+        assert_eq!(
+            bits(ag),
+            bits(&expect_ag),
+            "rank {r} allgather differs from the in-process ring"
+        );
+        assert_eq!(
+            bits(rs),
+            bits(&expect_rs[r]),
+            "rank {r} reduce-scatter differs bitwise"
+        );
+    }
+    // The wire RS also agrees with direct_* within float tolerance
+    // (direct uses a different, non-ring summation order).
+    let direct = inproc::direct_reduce_scatter(&full, &layout);
+    for (r, (_, rs)) in got.iter().enumerate() {
+        for (i, (a, b)) in direct[r].iter().zip(rs).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                "rank {r} elem {i}: direct {a} vs wire {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_local_fabric_collectives_match_inprocess_bitwise() {
+    check("wire-parity-local", 60, |g| {
+        let n = g.usize_in(1, 6);
+        parity_case(g, local_fabric(n));
+    });
+}
+
+#[test]
+fn prop_tcp_loopback_collectives_match_inprocess_bitwise() {
+    // Fewer cases than the channel fabric: every case pays a full
+    // rendezvous + mesh handshake over real sockets.
+    check("wire-parity-tcp", 12, |g| {
+        let n = g.usize_in(2, 5);
+        let eps = cephalo::transport::tcp::thread_fabric(n).unwrap();
+        parity_case(g, eps);
+    });
+}
+
+#[test]
+fn composed_rs_then_ag_over_sockets_is_an_allreduce() {
+    // Invariant 4's composition, now over a socket fabric: RS then AG
+    // equals the direct AllReduce (tolerance: summation order).
+    let n = 4;
+    let layout = ShardLayout::by_ratios(37, &[0.4, 0.0, 0.35, 0.25]);
+    let full: Vec<Vec<f32>> = (0..n)
+        .map(|r| (0..37).map(|i| ((r + 1) * (i + 1)) as f32 * 0.01).collect())
+        .collect();
+    let expect = inproc::direct_allreduce(&full, &layout);
+    let eps = cephalo::transport::tcp::thread_fabric(n).unwrap();
+    let got = run_ranks(eps, |t| {
+        let shard =
+            wire::ring_reduce_scatter(t, &full[t.rank()], &layout).unwrap();
+        wire::ring_allgather(t, &shard, &layout).unwrap()
+    });
+    for (r, g) in got.iter().enumerate() {
+        for (i, (a, b)) in expect.iter().zip(g).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                "rank {r} elem {i}: {a} vs {b}"
+            );
+        }
+    }
+}
