@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
         adam: AdamConfig { lr: preset.lr, ..Default::default() },
         corpus_branch: 4,
         log_every: 10,
+        ..Default::default()
     };
     let mut trainer = Trainer::new(&dir, workers, cfg)?;
     let m = Manifest::load(&dir)

@@ -1,0 +1,158 @@
+//! Param-shard memory bench: per-rank parameter/state bytes under
+//! leader-resident vs fully-sharded residency — the tentpole's memory
+//! claim measured at both scales:
+//!
+//! * PLANNING scale: the Table-2 model's accounting on a real DP
+//!   assignment (`memory::ParamResidency`), per GPU;
+//! * EXECUTED scale: live native trainers in both residencies, with
+//!   the measured resident weight bytes per rank and steps/sec (the
+//!   head-of-step gather replaces the tail AllGather, so throughput
+//!   should be within noise).
+//!
+//! `--quick` shrinks the run for CI smoke; `--json <path>` writes the
+//! tables as a JSON artifact — the seed for a perf-trajectory gate.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use cephalo::cluster::Cluster;
+use cephalo::coordinator::Workload;
+use cephalo::exec::{NativeExecutor, SurrogateSpec};
+use cephalo::memory::ParamResidency;
+use cephalo::trainer::{TrainConfig, Trainer, WorkerSpec};
+use cephalo::util::json::Json;
+use cephalo::util::tablefmt::Table;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn main() {
+    let (quick, json_path) = cephalo::benchkit::bench_args();
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    // ---- Planning scale: cluster A, BERT-Large, the DP's division ----
+    let w = Workload::prepare(Cluster::cluster_a(), "BERT-Large", 42)
+        .expect("workload");
+    let (asg, _) = w.optimize(64).expect("solvable");
+    let total = w.profile.total_params;
+    let mut t = Table::new(
+        "Per-GPU parameter/state bytes (GB): leader-resident vs \
+         fully-sharded, BERT-Large on cluster A @ 64",
+        &["gpu", "r_i", "params leader", "params sharded",
+          "state leader", "state sharded"],
+    );
+    for (i, g) in asg.per_gpu.iter().enumerate() {
+        let (ld, sh) =
+            (ParamResidency::LeaderResident, ParamResidency::FullySharded);
+        t.add_row(vec![
+            i.to_string(),
+            format!("{:.3}", g.state_ratio),
+            format!("{:.3}", ld.param_bytes(total, g.state_ratio) / 1e9),
+            format!("{:.3}", sh.param_bytes(total, g.state_ratio) / 1e9),
+            format!(
+                "{:.3}",
+                ld.per_gpu_state_bytes(total, g.state_ratio) / 1e9
+            ),
+            format!(
+                "{:.3}",
+                sh.per_gpu_state_bytes(total, g.state_ratio) / 1e9
+            ),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("scale".into(), Json::Str("planning".into()));
+        row.insert("gpu".into(), num(i as f64));
+        row.insert("state_ratio".into(), num(g.state_ratio));
+        row.insert(
+            "param_bytes_leader".into(),
+            num(ParamResidency::LeaderResident
+                .param_bytes(total, g.state_ratio)),
+        );
+        row.insert(
+            "param_bytes_sharded".into(),
+            num(ParamResidency::FullySharded
+                .param_bytes(total, g.state_ratio)),
+        );
+        json_rows.push(Json::Obj(row));
+    }
+    println!("{}", t.render());
+
+    // ---- Executed scale: live trainers in both residencies ----
+    let steps = if quick { 3 } else { 20 };
+    let workers = || {
+        vec![
+            WorkerSpec { batch: 3, state_ratio: 0.6, name: "big".into() },
+            WorkerSpec { batch: 3, state_ratio: 0.3, name: "mid".into() },
+            WorkerSpec { batch: 2, state_ratio: 0.1, name: "small".into() },
+        ]
+    };
+    let bench = |shard_params: bool| -> (Vec<usize>, f64) {
+        let cfg = TrainConfig {
+            steps: 0,
+            seed: 7,
+            log_every: 0,
+            shard_params,
+            ..Default::default()
+        };
+        let mut tr = Trainer::from_executor(
+            Box::new(NativeExecutor::new(SurrogateSpec::default())),
+            workers(),
+            cfg,
+        )
+        .expect("trainer");
+        let t0 = Instant::now();
+        for s in 0..steps {
+            tr.step(s).expect("step");
+        }
+        let sps = steps as f64 / t0.elapsed().as_secs_f64();
+        (tr.param_bytes_per_worker(), sps)
+    };
+    let (leader_bytes, leader_sps) = bench(false);
+    let (sharded_bytes, sharded_sps) = bench(true);
+    let mut t = Table::new(
+        &format!(
+            "Measured resident weight bytes per rank (native surrogate, \
+             {steps} steps)"
+        ),
+        &["residency", "rank 0", "rank 1", "rank 2", "steps/s"],
+    );
+    for (label, bytes, sps) in [
+        ("leader", &leader_bytes, leader_sps),
+        ("sharded", &sharded_bytes, sharded_sps),
+    ] {
+        t.add_row(vec![
+            label.to_string(),
+            bytes[0].to_string(),
+            bytes[1].to_string(),
+            bytes[2].to_string(),
+            format!("{sps:.1}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("scale".into(), Json::Str("executed".into()));
+        row.insert("residency".into(), Json::Str(label.into()));
+        row.insert(
+            "param_bytes".into(),
+            Json::Arr(bytes.iter().map(|&b| num(b as f64)).collect()),
+        );
+        row.insert("steps_per_sec".into(), num(sps));
+        json_rows.push(Json::Obj(row));
+    }
+    println!("{}", t.render());
+
+    // Shape checks: sharded bytes partition the total; leader bytes
+    // replicate it on every rank.
+    let total_bytes: usize = sharded_bytes.iter().sum();
+    assert_eq!(total_bytes, leader_bytes[0]);
+    assert!(leader_bytes.iter().all(|&b| b == leader_bytes[0]));
+    assert!(sharded_bytes[0] > sharded_bytes[2]);
+    println!(
+        "shape check: sharded ranks partition {total_bytes} weight \
+         bytes; every leader rank replicates them  [ok]"
+    );
+
+    if let Some(path) = json_path {
+        cephalo::benchkit::write_json_rows(
+            &path, "param_shard_mem", quick, json_rows,
+        );
+    }
+}

@@ -6,10 +6,12 @@
 //! N−1 hops, so a full AllGather or ReduceScatter moves
 //! `(N−1) × len × 4` bytes.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use cephalo::sharding::ShardLayout;
 use cephalo::transport::{collectives as wire, LocalFabric, Transport};
+use cephalo::util::json::Json;
 use cephalo::util::tablefmt::Table;
 
 const WORLD: usize = 4;
@@ -59,6 +61,7 @@ fn gbps(bytes: f64, secs: f64) -> String {
 }
 
 fn main() {
+    let (quick, json_path) = cephalo::benchkit::bench_args();
     let mut local = local_fabric();
     let mut tcp = cephalo::transport::tcp::thread_fabric(WORLD)
         .expect("loopback fabric");
@@ -70,10 +73,16 @@ fn main() {
         ),
         &["elems", "AG local", "AG tcp", "RS local", "RS tcp"],
     );
-    for shift in [10u32, 14, 17] {
+    let shifts: &[u32] = if quick { &[10, 14] } else { &[10, 14, 17] };
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &shift in shifts {
         let len = 1usize << shift;
         let layout = ShardLayout::even(len, WORLD);
-        let iters = ((1usize << 19) / len).clamp(3, 64);
+        let iters = if quick {
+            3
+        } else {
+            ((1usize << 19) / len).clamp(3, 64)
+        };
         let bytes = ((WORLD - 1) * len * 4) as f64;
         let ag_l = time_round(&mut local, &layout, iters, false);
         let ag_t = time_round(&mut tcp, &layout, iters, false);
@@ -86,10 +95,23 @@ fn main() {
             gbps(bytes, rs_l),
             gbps(bytes, rs_t),
         ]);
+        let mut row = BTreeMap::new();
+        row.insert("elems".into(), Json::Num(len as f64));
+        row.insert("bytes_per_round".into(), Json::Num(bytes));
+        row.insert("ag_local_gbps".into(), Json::Num(bytes / ag_l / 1e9));
+        row.insert("ag_tcp_gbps".into(), Json::Num(bytes / ag_t / 1e9));
+        row.insert("rs_local_gbps".into(), Json::Num(bytes / rs_l / 1e9));
+        row.insert("rs_tcp_gbps".into(), Json::Num(bytes / rs_t / 1e9));
+        json_rows.push(Json::Obj(row));
     }
     println!("{}", t.render());
     println!(
         "shape check: both fabrics completed every round over uneven \
          thread scheduling  [ok]"
     );
+    if let Some(path) = json_path {
+        cephalo::benchkit::write_json_rows(
+            &path, "transport", quick, json_rows,
+        );
+    }
 }

@@ -107,6 +107,43 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Shared CLI surface for the self-driving benches: `--quick` shrinks
+/// the run for CI smoke; `--json <path>` names the artifact file
+/// (missing value is a loud error, not a silent no-op).
+pub fn bench_args() -> (bool, Option<String>) {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json = args.iter().position(|a| a == "--json").map(|i| {
+        let path = args
+            .get(i + 1)
+            .unwrap_or_else(|| panic!("--json needs a path"));
+        if path.starts_with("--") {
+            panic!("--json needs a path, got flag '{path}'");
+        }
+        path.clone()
+    });
+    (quick, json)
+}
+
+/// Write a bench's `{bench, quick, rows}` JSON artifact to `path` —
+/// the table shape the CI `bench-smoke` job uploads.
+pub fn write_json_rows(
+    path: &str,
+    bench: &str,
+    quick: bool,
+    rows: Vec<crate::util::json::Json>,
+) {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str(bench.to_string()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("rows".to_string(), Json::Arr(rows));
+    std::fs::write(path, Json::Obj(root).render())
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

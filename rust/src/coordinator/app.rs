@@ -319,6 +319,10 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     specs.push(opt("transport", "live-session substrate: inproc | \
                                  local (channel ranks) | tcp (worker \
                                  processes)", Some("inproc")));
+    specs.push(switch("shard-params", "fully-sharded parameters: no \
+                                       leader-resident weight copy; \
+                                       migrations move weight ranges \
+                                       too (--live)"));
     specs.push(opt("plan-cache", "JSON file to warm the plan cache \
                                   from and persist it to (--live)",
                    None));
@@ -435,6 +439,7 @@ fn cmd_elastic_live(
         seed: a.get_u64("seed").unwrap_or(42),
         min_gpus: a.get_usize("min-gpus").unwrap_or(0),
         fabric,
+        shard_params: a.has("shard-params"),
         plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
         ..Default::default()
     };
@@ -572,6 +577,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
                                  sockets)", Some("inproc")));
     specs.push(opt("workers", "distributed ranks; trains on the first N \
                                GPUs of the cluster (0 = all)", Some("0")));
+    specs.push(switch("shard-params", "fully-sharded parameters: each \
+                                       rank holds only its r_i weight \
+                                       slice, gathered per step"));
     specs.push(opt("steps", "training steps", Some("50")));
     specs.push(opt("lr", "Adam learning rate", Some("0.001")));
     specs.push(opt("artifacts", "artifacts directory (pjrt backend)",
@@ -637,6 +645,7 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         },
         corpus_branch: 4,
         log_every: a.get_usize("log-every").unwrap_or(10),
+        shard_params: a.has("shard-params"),
     };
     let backend = a.get("backend").unwrap().to_string();
     let mut trainer = match backend.as_str() {
@@ -659,14 +668,20 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
             ))
         }
     };
-    let flat_params: usize =
-        trainer.params().iter().map(Vec::len).sum();
     println!(
-        "backend {}: {} params, corpus entropy {:.3} nats",
+        "backend {}: {} params ({} residency), corpus entropy {:.3} nats",
         trainer.executor_name(),
-        flat_params,
+        trainer.num_params(),
+        if trainer.is_sharded() { "fully-sharded" } else { "leader" },
         trainer.corpus_entropy()
     );
+    if trainer.is_sharded() {
+        let pb = trainer.param_bytes_per_worker();
+        crate::info!(
+            "per-rank resident weight bytes (scale with r_i): {:?}",
+            pb
+        );
+    }
     let history = trainer.run().map_err(|e| e.to_string())?;
     let first = history.first().map(|s| s.mean_loss).unwrap_or(0.0);
     let last = history.last().map(|s| s.mean_loss).unwrap_or(0.0);
@@ -729,6 +744,7 @@ fn train_distributed(
         },
         corpus_branch: 4,
         surrogate: SurrogateSpec::default(),
+        shard_params: a.has("shard-params"),
     };
     let timer = StepTimeModel::from_oracle(&w.oracle, w.model.layers);
     let mut driver = DistDriver::launch(spec, world, dcfg, workers)
@@ -965,6 +981,36 @@ mod tests {
                                 "--workers", "99", "--cluster", "a",
                                 "--batch", "16"])),
             1
+        );
+    }
+
+    #[test]
+    fn train_sharded_params_runs_on_both_engines() {
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "native",
+                                "--shard-params", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "16",
+                                "--steps", "2", "--log-every", "0"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "local",
+                                "--workers", "2", "--shard-params",
+                                "--cluster", "a", "--model", "BERT-Large",
+                                "--batch", "16", "--steps", "2",
+                                "--log-every", "0"])),
+            0
+        );
+    }
+
+    #[test]
+    fn elastic_live_sharded_params_runs() {
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--live", "--shard-params",
+                                "--cluster", "a", "--model", "BERT-Large",
+                                "--batch", "32", "--events", "2",
+                                "--steps", "1"])),
+            0
         );
     }
 

@@ -70,6 +70,11 @@ pub struct SessionConfig {
     /// `None` = in-process trainer; `Some(spec)` = one SPMD rank per
     /// cluster GPU over the given transport fabric.
     pub fabric: Option<FabricSpec>,
+    /// Fully-sharded parameters: no leader-resident weight copy; each
+    /// rank keeps only its `r_i` slice and migrations move weight
+    /// ranges alongside the Adam moments. Bitwise-identical to the
+    /// leader-resident default (DESIGN.md invariant 11).
+    pub shard_params: bool,
     /// When set, the plan cache is loaded from this JSON file at
     /// session start (if it exists) and can be saved back with
     /// [`Session::save_plan_cache`] — recurring memberships stay warm
@@ -88,6 +93,7 @@ impl Default for SessionConfig {
             min_gpus: 0,
             surrogate: SurrogateSpec::default(),
             fabric: None,
+            shard_params: false,
             plan_cache_path: None,
         }
     }
@@ -250,6 +256,7 @@ impl Session {
                     adam: cfg.adam,
                     corpus_branch: 4,
                     log_every: 0,
+                    shard_params: cfg.shard_params,
                 };
                 Engine::InProcess(Box::new(Trainer::from_executor(
                     Box::new(exec),
@@ -263,6 +270,7 @@ impl Session {
                     adam: cfg.adam,
                     corpus_branch: 4,
                     surrogate: cfg.surrogate.clone(),
+                    shard_params: cfg.shard_params,
                 };
                 Engine::Dist(Box::new(
                     DistDriver::launch(spec, n, dcfg, workers)?
@@ -390,6 +398,22 @@ impl Session {
                         &old_layout, &old_v, &new_layout, &survivors,
                         &transfers, &ck.adam_v,
                     );
+                    // Fully-sharded trainers migrate the WEIGHTS with
+                    // the same transfer list (the checkpoint's
+                    // assembled params stand in for departed owners,
+                    // exactly like the moment restores).
+                    let new_params = trainer.param_shards().map(|old_p| {
+                        let flat_ref = crate::trainer::flatten(
+                            &ck.params,
+                            old_layout.len(),
+                        );
+                        let views: Vec<&[f32]> =
+                            old_p.iter().map(|s| s.as_slice()).collect();
+                        elastic::apply_migration(
+                            &old_layout, &views, &new_layout, &survivors,
+                            &transfers, &flat_ref,
+                        )
+                    });
                     let shards: Vec<AdamShard> = new_m
                         .into_iter()
                         .zip(new_v)
@@ -400,7 +424,7 @@ impl Session {
                             cfg: self.cfg.adam,
                         })
                         .collect();
-                    trainer.adopt(workers, shards)?;
+                    trainer.adopt(workers, shards, new_params)?;
                 }
                 Engine::Dist(driver) => {
                     // The SAME transfer list, executed as rank-to-rank
@@ -482,12 +506,14 @@ impl Session {
         }
     }
 
-    /// The canonical full parameter copy (leader's for in-process,
-    /// rank 0's for distributed — bitwise identical on every rank).
-    pub fn params(&self) -> &[Vec<f32>] {
-        match &self.engine {
-            Engine::InProcess(t) => t.params(),
-            Engine::Dist(d) => d.params(),
+    /// The canonical full parameters, assembled on demand — an explicit
+    /// export in every mode (leader copy, in-process shard
+    /// concatenation, or the distributed COLLECT broadcast), bitwise
+    /// identical across all of them.
+    pub fn params(&mut self) -> Result<Vec<Vec<f32>>> {
+        match &mut self.engine {
+            Engine::InProcess(t) => Ok(t.gather_params()),
+            Engine::Dist(d) => d.gather_params(),
         }
     }
 

@@ -13,12 +13,83 @@
 /// Bytes of training state per parameter with fp32 Adam (§2.3).
 pub const BYTES_PER_PARAM_STATE: f64 = 16.0;
 
+/// The fp32 weight slice of the 16 B/param state (replicated on every
+/// rank under leader-resident parameters).
+pub const BYTES_PER_PARAM_WEIGHTS: f64 = 4.0;
+
 /// Fraction of physical memory the optimizer will plan into (§3.2).
 pub const MEM_UTIL_CAP: f64 = 0.80;
 
 /// Training-state bytes for a parameter count.
 pub fn state_bytes(params: f64) -> f64 {
     params * BYTES_PER_PARAM_STATE
+}
+
+/// How the fp32 weights are held across ranks — the accounting switch
+/// behind the tentpole's "larger models" claim. The gradient + Adam
+/// moments (12 B/param) are always sharded by `r_i`; the 4 B/param
+/// weights either shard with them (ZeRO-3 style, the paper's §2.3
+/// model) or sit replicated on every rank (the historical
+/// leader-resident trainer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParamResidency {
+    /// Weights shard with the rest of the state: per-GPU state is
+    /// `r_i × 16 B/param` and shrinks with `r_i`.
+    #[default]
+    FullySharded,
+    /// A full fp32 weight copy is resident on every rank: per-GPU state
+    /// is `4 B/param + r_i × 12 B/param` — the honest accounting of the
+    /// pre-sharding trainer, kept for comparison sweeps.
+    LeaderResident,
+}
+
+impl ParamResidency {
+    /// Per-GPU bytes that do NOT shrink with `r_i` (the replicated
+    /// weight copy under leader residency; nothing when fully sharded).
+    pub fn fixed_bytes(&self, total_params: f64) -> f64 {
+        match self {
+            ParamResidency::FullySharded => 0.0,
+            ParamResidency::LeaderResident => {
+                total_params * BYTES_PER_PARAM_WEIGHTS
+            }
+        }
+    }
+
+    /// Total bytes distributed across GPUs by the `r_i` vector.
+    pub fn sharded_bytes(&self, total_params: f64) -> f64 {
+        match self {
+            ParamResidency::FullySharded => state_bytes(total_params),
+            ParamResidency::LeaderResident => {
+                state_bytes(total_params)
+                    - total_params * BYTES_PER_PARAM_WEIGHTS
+            }
+        }
+    }
+
+    /// Per-GPU training-state bytes for a rank holding ratio `r`.
+    pub fn per_gpu_state_bytes(&self, total_params: f64, r: f64) -> f64 {
+        self.fixed_bytes(total_params) + r * self.sharded_bytes(total_params)
+    }
+
+    /// Per-GPU parameter (weight) bytes only — proportional to `r`
+    /// when fully sharded, constant when leader-resident.
+    pub fn param_bytes(&self, total_params: f64, r: f64) -> f64 {
+        match self {
+            ParamResidency::FullySharded => {
+                total_params * BYTES_PER_PARAM_WEIGHTS * r
+            }
+            ParamResidency::LeaderResident => {
+                total_params * BYTES_PER_PARAM_WEIGHTS
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ParamResidency::FullySharded => "sharded",
+            ParamResidency::LeaderResident => "leader",
+        }
+    }
 }
 
 /// Usable planning capacity for a GPU.
@@ -98,6 +169,29 @@ mod tests {
     #[test]
     fn adam_state_is_16_bytes_per_param() {
         assert_eq!(state_bytes(1e9), 16e9);
+    }
+
+    #[test]
+    fn residency_accounting_splits_the_16_bytes() {
+        let p = 1e9;
+        let sh = ParamResidency::FullySharded;
+        let ld = ParamResidency::LeaderResident;
+        // Fully sharded: everything scales with r.
+        assert_eq!(sh.per_gpu_state_bytes(p, 0.25), 4e9);
+        assert_eq!(sh.param_bytes(p, 0.25), 1e9);
+        assert_eq!(sh.fixed_bytes(p), 0.0);
+        // Leader-resident: 4 B/param replicated + 12 B/param sharded.
+        assert_eq!(ld.per_gpu_state_bytes(p, 0.25), 4e9 + 3e9);
+        assert_eq!(ld.param_bytes(p, 0.25), 4e9);
+        assert_eq!(ld.param_bytes(p, 0.0), 4e9);
+        // Both modes account the same aggregate state.
+        assert_eq!(
+            sh.fixed_bytes(p) + sh.sharded_bytes(p),
+            ld.fixed_bytes(p) + ld.sharded_bytes(p)
+        );
+        // A rank with r = 0 holds NOTHING when fully sharded.
+        assert_eq!(sh.per_gpu_state_bytes(p, 0.0), 0.0);
+        assert!(ld.per_gpu_state_bytes(p, 0.0) > 0.0);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //!   table for backtracking.
 
 use super::{Assignment, GpuAssign, PlanError};
-use crate::memory::{state_bytes, usable_capacity};
+use crate::memory::{state_bytes, usable_capacity, ParamResidency};
 use crate::perfmodel::ClusterPerfProfile;
 
 /// Tunables for the solver.
@@ -29,11 +29,27 @@ pub struct DpOptimizer {
     /// Upper bound on microbatch size considered (0 = no bound beyond
     /// memory).
     pub max_microbatch: usize,
+    /// Parameter-residency accounting for the memory constraints:
+    /// fully sharded (default, the §2.3 model — per-GPU state shrinks
+    /// with `r_i`) or leader-resident (a replicated 4 B/param weight
+    /// copy charges every GPU — the pre-sharding trainer's footprint).
+    ///
+    /// DELIBERATELY not wired to the trainer's `shard_params` flag:
+    /// planning stays on the paper's model in both execution modes so
+    /// a sharded run and its leader-resident reference solve to the
+    /// SAME assignment (that shared plan is what makes the invariant-11
+    /// bitwise comparison well-posed). Leader-resident accounting is a
+    /// comparison mode for sweeps, not an execution default.
+    pub residency: ParamResidency,
 }
 
 impl Default for DpOptimizer {
     fn default() -> Self {
-        Self { granularity: 0, max_microbatch: 0 }
+        Self {
+            granularity: 0,
+            max_microbatch: 0,
+            residency: ParamResidency::FullySharded,
+        }
     }
 }
 
@@ -74,11 +90,14 @@ impl DpOptimizer {
         let bq = batch / q; // table width in quanta
 
         // Per-GPU max microbatch (in quanta) under the 80% memory cap,
-        // leaving no room for state (state may go elsewhere).
+        // leaving no room for SHARDED state (that may go elsewhere) but
+        // always charging the residency's fixed bytes (the replicated
+        // weight copy never goes elsewhere).
+        let fixed = self.residency.fixed_bytes(profile.total_params);
         let mut m_max = vec![0usize; n];
         for (i, g) in profile.per_gpu.iter().enumerate() {
             let cap = usable_capacity(g.capacity);
-            let mm = g.mem.max_microbatch(cap, 0.0).unwrap_or(0);
+            let mm = g.mem.max_microbatch(cap, fixed).unwrap_or(0);
             let mut mq = mm / q;
             if self.max_microbatch > 0 {
                 mq = mq.min(self.max_microbatch / q.max(1));
@@ -91,7 +110,10 @@ impl DpOptimizer {
 
         // k upper bound: sum of per-GPU max microbatches, batch, and the
         // aggregate memory budget (constraint III) expressed in quanta.
-        let total_state = state_bytes(profile.total_params);
+        // Under leader residency the replicated copies charge n x fixed
+        // and only the sharded remainder is distributable.
+        let total_state =
+            n as f64 * fixed + self.residency.sharded_bytes(profile.total_params);
         let total_cap: f64 = profile
             .per_gpu
             .iter()
@@ -125,7 +147,11 @@ impl DpOptimizer {
             ));
         }
 
-        let even_share = profile.even_state_share();
+        // Even per-GPU resident state share for the uneven-collective
+        // switch: identical to `profile.even_state_share()` when fully
+        // sharded; leader residency adds the replicated copy.
+        let even_share = fixed
+            + self.residency.sharded_bytes(profile.total_params) / n as f64;
         let ag = profile.unit_allgather();
         let rs = profile.unit_reduce_scatter();
         let ag_u = profile.unit_allgather_uneven();
@@ -199,7 +225,7 @@ impl DpOptimizer {
                     row_min = base;
                     for mq in 1..=m_max[i].min(k_prefix - k) {
                         let (f1, b1, mem) = per_m[mq];
-                        if mem > cap {
+                        if mem + fixed > cap {
                             break;
                         }
                         // Uneven collectives when the even state share
@@ -279,7 +305,11 @@ impl DpOptimizer {
         }
 
         // State partition (greedy, §2.4) fills the ratios.
-        super::greedy::partition_state(profile, &mut per_gpu)?;
+        super::greedy::partition_state_resident(
+            profile,
+            &mut per_gpu,
+            self.residency,
+        )?;
 
         let mut asg = Assignment {
             per_gpu,
@@ -422,7 +452,7 @@ mod tests {
         for batch in [4usize, 6, 9, 12] {
             let (asg, _) = DpOptimizer {
                 granularity: 1,
-                max_microbatch: 0,
+                ..Default::default()
             }
             .solve(&p, batch)
             .unwrap();
@@ -468,10 +498,43 @@ mod tests {
         assert_eq!(1000 % stats.granularity, 0);
         asg.validate(&p, 1000).unwrap();
         // An explicit non-divisor granularity still errors loudly.
-        let err = DpOptimizer { granularity: 3, max_microbatch: 0 }
+        let err = DpOptimizer { granularity: 3, ..Default::default() }
             .solve(&p, 1000)
             .unwrap_err();
         assert!(err.to_string().contains("not divisible"));
+    }
+
+    #[test]
+    fn sharded_residency_admits_what_leader_residency_cannot() {
+        // The tentpole's memory claim, planner-side: on the residency
+        // window (see `testkit::apply_residency_window`) every GPU
+        // fits its compute plus a fully-sharded state share, but not a
+        // replicated weight copy.
+        let cluster = crate::testkit::window8_cluster();
+        let mut p = profile_for(&cluster, "BERT-Large");
+        crate::testkit::apply_residency_window(&mut p);
+        // Fully sharded: feasible (per-GPU state shrinks with r_i).
+        let sharded = DpOptimizer::default()
+            .solve(&p, 8)
+            .expect("fully-sharded accounting must admit this config");
+        sharded
+            .0
+            .validate_resident(&p, 8, ParamResidency::FullySharded)
+            .expect("sharded accounting fits");
+        // Leader-resident: the replicated copy alone exceeds every
+        // GPU's headroom -> a clean OOM, not a solver artifact.
+        let leader = DpOptimizer {
+            residency: ParamResidency::LeaderResident,
+            ..Default::default()
+        };
+        let err = leader.solve(&p, 8).unwrap_err();
+        assert!(err.is_oom(), "expected OOM, got: {err}");
+        // And the sharded plan itself fails leader-resident validation.
+        let verr = sharded
+            .0
+            .validate_resident(&p, 8, ParamResidency::LeaderResident)
+            .unwrap_err();
+        assert!(verr.is_oom(), "expected OOM, got: {verr}");
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::{GpuAssign, PlanError};
-use crate::memory::{state_bytes, usable_capacity};
+use crate::memory::{usable_capacity, ParamResidency};
 use crate::perfmodel::ClusterPerfProfile;
 
 /// Number of quanta the state is divided into for the greedy loop.
@@ -49,27 +49,43 @@ impl Ord for Entry {
 }
 
 /// Fill `per_gpu[i].state_ratio` in place. Compute assignments
-/// (microbatch sizes) must already be set.
+/// (microbatch sizes) must already be set. Fully-sharded accounting
+/// (the paper's §2.3 model); see [`partition_state_resident`] for the
+/// leader-resident comparison mode.
 pub fn partition_state(
     profile: &ClusterPerfProfile,
     per_gpu: &mut [GpuAssign],
 ) -> Result<(), PlanError> {
+    partition_state_resident(profile, per_gpu, ParamResidency::FullySharded)
+}
+
+/// [`partition_state`] under an explicit parameter residency: the
+/// residency's fixed bytes (a replicated weight copy under
+/// `LeaderResident`) charge every GPU up front, and only the sharded
+/// remainder is distributed by the greedy loop.
+pub fn partition_state_resident(
+    profile: &ClusterPerfProfile,
+    per_gpu: &mut [GpuAssign],
+    residency: ParamResidency,
+) -> Result<(), PlanError> {
     let n = per_gpu.len();
     assert_eq!(n, profile.num_gpus());
-    let total_state = state_bytes(profile.total_params);
+    let fixed = residency.fixed_bytes(profile.total_params);
+    let total_state = residency.sharded_bytes(profile.total_params);
     let quantum = total_state / QUANTA as f64;
 
-    // Fixed compute memory per GPU.
+    // Fixed memory per GPU: compute plus any non-sharded state.
     let compute: Vec<f64> = per_gpu
         .iter()
         .zip(&profile.per_gpu)
         .map(|(g, m)| {
-            if g.microbatch > 0 {
-                m.mem.predict(g.microbatch)
-            } else {
-                // Idle GPUs still hold framework state.
-                m.mem.intercept
-            }
+            fixed
+                + if g.microbatch > 0 {
+                    m.mem.predict(g.microbatch)
+                } else {
+                    // Idle GPUs still hold framework state.
+                    m.mem.intercept
+                }
         })
         .collect();
     let caps: Vec<f64> = profile
@@ -120,7 +136,7 @@ pub fn max_utilization(
     per_gpu: &[GpuAssign],
     ratios: &[f64],
 ) -> f64 {
-    let total_state = state_bytes(profile.total_params);
+    let total_state = crate::memory::state_bytes(profile.total_params);
     per_gpu
         .iter()
         .zip(&profile.per_gpu)
@@ -214,6 +230,48 @@ mod tests {
                 "alternative {alt_util} beats greedy {greedy_util}"
             );
         });
+    }
+
+    #[test]
+    fn leader_residency_charges_every_gpu_for_the_weight_copy() {
+        let p = profile();
+        let ld = ParamResidency::LeaderResident;
+        let fixed = ld.fixed_bytes(p.total_params);
+        assert!(fixed > 0.0);
+        let mut a = assigns(&[2; 8]);
+        partition_state_resident(&p, &mut a, ld).unwrap();
+        let sum: f64 = a.iter().map(|g| g.state_ratio).sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        // Every GPU fits with the replicated copy charged up front.
+        let rest = ld.sharded_bytes(p.total_params);
+        for (g, m) in a.iter().zip(&p.per_gpu) {
+            let used = m.mem.predict(2) + fixed + g.state_ratio * rest;
+            assert!(used <= usable_capacity(m.capacity) * (1.0 + 1e-9));
+        }
+        // Charging more total memory cannot lower the achievable max
+        // utilization: leader-resident is never better than sharded.
+        let mut sh = assigns(&[2; 8]);
+        partition_state(&p, &mut sh).unwrap();
+        let util = |per: &[GpuAssign], res: ParamResidency| {
+            per.iter()
+                .zip(&p.per_gpu)
+                .map(|(g, m)| {
+                    (m.mem.predict(2)
+                        + res.per_gpu_state_bytes(
+                            p.total_params,
+                            g.state_ratio,
+                        ))
+                        / usable_capacity(m.capacity)
+                })
+                .fold(0.0, f64::max)
+        };
+        // (0.01 tolerance: both greedy results sit within one quantum
+        // of their optima, same slack as invariant 6.)
+        assert!(
+            util(&a, ld) + 0.01
+                >= util(&sh, ParamResidency::FullySharded),
+            "replicated weights should never reduce peak utilization"
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod dp;
 pub mod greedy;
 
 pub use dp::{DpOptimizer, DpStats};
-pub use greedy::partition_state;
+pub use greedy::{partition_state, partition_state_resident};
 
 use crate::perfmodel::ClusterPerfProfile;
 
@@ -50,8 +50,25 @@ impl Assignment {
     }
 
     /// Sanity checks against a profile; used by tests and the trainer.
+    /// Fully-sharded parameter accounting (the §2.3 model).
     pub fn validate(&self, profile: &ClusterPerfProfile, batch: usize)
         -> Result<(), PlanError> {
+        self.validate_resident(
+            profile,
+            batch,
+            crate::memory::ParamResidency::FullySharded,
+        )
+    }
+
+    /// [`Assignment::validate`] under an explicit parameter residency:
+    /// leader-resident accounting charges every GPU the replicated
+    /// 4 B/param weight copy on top of its `r_i` share of the rest.
+    pub fn validate_resident(
+        &self,
+        profile: &ClusterPerfProfile,
+        batch: usize,
+        residency: crate::memory::ParamResidency,
+    ) -> Result<(), PlanError> {
         if self.per_gpu.len() != profile.num_gpus() {
             return Err(PlanError::Internal("gpu count mismatch".into()));
         }
@@ -68,8 +85,6 @@ impl Assignment {
             )));
         }
         // Per-GPU memory: compute + assigned state within the 80% cap.
-        let total_state =
-            crate::memory::state_bytes(profile.total_params);
         for (i, (g, m)) in
             self.per_gpu.iter().zip(&profile.per_gpu).enumerate()
         {
@@ -78,7 +93,11 @@ impl Assignment {
             } else {
                 0.0
             };
-            let used = compute + g.state_ratio * total_state;
+            let used = compute
+                + residency.per_gpu_state_bytes(
+                    profile.total_params,
+                    g.state_ratio,
+                );
             let cap = crate::memory::usable_capacity(m.capacity);
             if used > cap * (1.0 + 1e-9) {
                 return Err(PlanError::oom(i, used, cap));

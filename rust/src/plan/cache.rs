@@ -12,10 +12,13 @@
 //! Live sessions over long traces accumulate one entry per
 //! (membership, batch), so the cache is bounded: least-recently-USED
 //! entries are evicted once `capacity` is exceeded (default
-//! [`DEFAULT_CAPACITY`]; 0 = unbounded). Successful outcomes can be
-//! saved to / loaded from a JSON file ([`PlanCache::save`] /
-//! [`PlanCache::load`]) so a RESUMED session starts with its
-//! recurring-membership plans warm instead of re-solving the DP.
+//! [`DEFAULT_CAPACITY`]; 0 = unbounded). Entries persist to JSON
+//! ([`PlanCache::save`] / [`PlanCache::load`]) so a RESUMED session
+//! starts with its recurring-membership plans warm instead of
+//! re-solving the DP — successes AND clean failure verdicts (OOM,
+//! infeasible): a reloaded cache must not re-run configurations it
+//! already knows cannot fit. Internal errors are never persisted (they
+//! describe the solver, not the inputs).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -187,16 +190,22 @@ impl PlanCache {
         self.map.lock().unwrap().clear();
     }
 
-    /// Persist all SUCCESSFUL entries as JSON (failures are cheap to
-    /// re-derive and carry non-serializable error structure). Entries
-    /// are sorted for deterministic output.
+    /// Persist entries as JSON: every success, plus clean FAILURE
+    /// verdicts (OOM / infeasible — properties of the inputs, so a
+    /// reloaded cache must not re-solve known-infeasible configs).
+    /// Internal errors are skipped. Entries are sorted for
+    /// deterministic output.
     pub fn save(&self, path: &Path) -> crate::util::error::Result<()> {
         use std::collections::BTreeMap;
         let map = self.map.lock().unwrap();
-        let mut rows: Vec<(&PlanKey, &PlanOutcome)> = map
-            .iter()
-            .filter_map(|(k, e)| e.result.as_ref().ok().map(|o| (k, o)))
-            .collect();
+        let mut rows: Vec<(&PlanKey, &Result<PlanOutcome, PlanError>)> =
+            map.iter()
+                .filter(|(_, e)| match &e.result {
+                    Ok(_) => true,
+                    Err(err) => is_clean_failure(err),
+                })
+                .map(|(k, e)| (k, &e.result))
+                .collect();
         rows.sort_by(|(a, _), (b, _)| {
             (&a.model, a.batch, &a.planner, a.cluster_fingerprint).cmp(&(
                 &b.model,
@@ -207,7 +216,7 @@ impl PlanCache {
         });
         let entries: Vec<Json> = rows
             .into_iter()
-            .map(|(k, o)| {
+            .map(|(k, res)| {
                 let mut e = BTreeMap::new();
                 e.insert(
                     "fingerprint".into(),
@@ -216,12 +225,19 @@ impl PlanCache {
                 e.insert("model".into(), Json::Str(k.model.clone()));
                 e.insert("batch".into(), Json::Num(k.batch as f64));
                 e.insert("planner".into(), Json::Str(k.planner.clone()));
-                e.insert("outcome".into(), outcome_to_json(o));
+                match res {
+                    Ok(o) => {
+                        e.insert("outcome".into(), outcome_to_json(o));
+                    }
+                    Err(err) => {
+                        e.insert("error".into(), error_to_json(err));
+                    }
+                }
                 Json::Obj(e)
             })
             .collect();
         let mut root = BTreeMap::new();
-        root.insert("version".into(), Json::Num(1.0));
+        root.insert("version".into(), Json::Num(2.0));
         root.insert("capacity".into(), Json::Num(self.capacity as f64));
         root.insert("entries".into(), Json::Arr(entries));
         // Write-then-rename so a crash mid-save can never leave a
@@ -244,7 +260,8 @@ impl PlanCache {
             .get("version")
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow!("plan cache file missing version"))?;
-        if version != 1 {
+        // v1 carried successes only; v2 adds persisted failure verdicts.
+        if version != 1 && version != 2 {
             return Err(anyhow!("unsupported plan cache version {version}"));
         }
         let capacity = root
@@ -285,19 +302,119 @@ impl PlanCache {
                         .ok_or_else(|| anyhow!("entry missing planner"))?
                         .to_string(),
                 };
-                let outcome = outcome_from_json(
-                    e.get("outcome")
-                        .ok_or_else(|| anyhow!("entry missing outcome"))?,
-                )?;
+                let result = match (e.get("outcome"), e.get("error")) {
+                    (Some(o), _) => Ok(outcome_from_json(o)?),
+                    (None, Some(err)) => Err(error_from_json(err)?),
+                    (None, None) => {
+                        return Err(anyhow!(
+                            "entry carries neither outcome nor error"
+                        ))
+                    }
+                };
                 let stamp = cache.tick.fetch_add(1, Ordering::Relaxed);
-                map.insert(
-                    key,
-                    Entry { result: Ok(outcome), last_used: stamp },
-                );
+                map.insert(key, Entry { result, last_used: stamp });
             }
         }
         Ok(cache)
     }
+}
+
+/// Failures worth persisting: verdicts about the INPUTS (OOM,
+/// infeasible), possibly planner-tagged. Internal errors describe the
+/// solver and must be re-derived fresh.
+fn is_clean_failure(e: &PlanError) -> bool {
+    matches!(
+        e.untagged(),
+        PlanError::OutOfMemory { .. } | PlanError::Infeasible(_)
+    )
+}
+
+/// Finite numbers round-trip as JSON numbers; the DP's sentinel
+/// infinities render as `null` and decode back to infinity.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn error_to_json(e: &PlanError) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    match e {
+        PlanError::OutOfMemory { gpu, needed, capacity, config } => {
+            m.insert("kind".into(), Json::Str("oom".into()));
+            m.insert("gpu".into(), Json::Num(*gpu as f64));
+            m.insert("needed".into(), num_or_null(*needed));
+            m.insert("capacity".into(), num_or_null(*capacity));
+            if let Some(c) = config {
+                m.insert("config".into(), Json::Str(c.clone()));
+            }
+        }
+        PlanError::Infeasible(s) => {
+            m.insert("kind".into(), Json::Str("infeasible".into()));
+            m.insert("message".into(), Json::Str(s.clone()));
+        }
+        PlanError::Internal(s) => {
+            m.insert("kind".into(), Json::Str("internal".into()));
+            m.insert("message".into(), Json::Str(s.clone()));
+        }
+        PlanError::Tagged { planner, inner } => {
+            m.insert("kind".into(), Json::Str("tagged".into()));
+            m.insert("planner".into(), Json::Str(planner.clone()));
+            m.insert("inner".into(), error_to_json(inner));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn error_from_json(j: &Json) -> crate::util::error::Result<PlanError> {
+    use crate::util::error::anyhow;
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("error entry missing kind"))?;
+    let msg = |j: &Json| {
+        j.get("message")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("error entry missing message"))
+    };
+    Ok(match kind {
+        "oom" => PlanError::OutOfMemory {
+            gpu: j
+                .get("gpu")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("oom entry missing gpu"))?,
+            needed: j
+                .get("needed")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::INFINITY),
+            capacity: j
+                .get("capacity")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::INFINITY),
+            config: j
+                .get("config")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        },
+        "infeasible" => PlanError::Infeasible(msg(j)?),
+        "internal" => PlanError::Internal(msg(j)?),
+        "tagged" => PlanError::Tagged {
+            planner: j
+                .get("planner")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tagged entry missing planner"))?
+                .to_string(),
+            inner: Box::new(error_from_json(
+                j.get("inner")
+                    .ok_or_else(|| anyhow!("tagged entry missing inner"))?,
+            )?),
+        },
+        other => return Err(anyhow!("unknown error kind '{other}'")),
+    })
 }
 
 fn outcome_to_json(o: &PlanOutcome) -> Json {
@@ -575,6 +692,54 @@ mod tests {
         let other = warm.get_or_plan(&planner, &w.ctx(16)).unwrap();
         assert!(!other.diagnostics.cache_hit);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn oom_verdicts_persist_and_reload_without_resolving() {
+        // Satellite (ROADMAP follow-up): clean failures are properties
+        // of the inputs, so a reloaded cache serves them as hits — a
+        // known-infeasible config is never re-run.
+        let w = Workload::prepare(tiny_cluster(), "Llama 7B", 42).unwrap();
+        let cache = PlanCache::new();
+        let planner = CephaloPlanner::default();
+        let verdict = cache.get_or_plan(&planner, &w.ctx(8)).unwrap_err();
+        let path =
+            std::env::temp_dir().join("ceph_plan_cache_verdicts.json");
+        cache.save(&path).unwrap();
+
+        let warm = PlanCache::load(&path).unwrap();
+        assert_eq!(warm.len(), 1);
+        let again = warm.get_or_plan(&planner, &w.ctx(8)).unwrap_err();
+        assert_eq!(again, verdict, "reloaded verdict must be identical");
+        assert_eq!(
+            (warm.hits(), warm.misses()),
+            (1, 0),
+            "a persisted verdict must be a hit, not a re-solve"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn error_json_round_trips_every_clean_kind() {
+        for e in [
+            PlanError::oom(3, f64::INFINITY, 0.0),
+            PlanError::oom_in(1, 20e9, 10e9, "micro=16 x 2"),
+            PlanError::Infeasible("batch 7 not divisible".into()),
+            PlanError::oom(0, 5e9, 4e9).tagged("Whale"),
+            PlanError::Infeasible("x".into()).tagged("HAP"),
+        ] {
+            let back = error_from_json(&Json::parse(
+                &error_to_json(&e).render(),
+            )
+            .unwrap())
+            .unwrap();
+            assert_eq!(back, e, "round trip changed {e}");
+            assert!(is_clean_failure(&e));
+        }
+        assert!(!is_clean_failure(&PlanError::Internal("bug".into())));
+        assert!(!is_clean_failure(
+            &PlanError::Internal("bug".into()).tagged("Cephalo")
+        ));
     }
 
     #[test]

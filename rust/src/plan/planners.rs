@@ -41,9 +41,10 @@ impl Planner for CephaloPlanner {
 
     fn cache_signature(&self) -> String {
         format!(
-            "Cephalo/g={}/mm={}/sim={}/{:?}",
+            "Cephalo/g={}/mm={}/res={}/sim={}/{:?}",
             self.opts.granularity,
             self.opts.max_microbatch,
+            self.opts.residency.label(),
             self.simulate,
             self.variant
         )

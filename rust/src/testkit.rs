@@ -59,6 +59,41 @@ pub fn tiny_cluster3() -> crate::cluster::Cluster {
     }
 }
 
+/// An 8x-P40 single-node cluster for the parameter-residency window
+/// tests (n = 8 is the smallest uniform size where the window below
+/// exists unconditionally). Pair with [`apply_residency_window`].
+pub fn window8_cluster() -> crate::cluster::Cluster {
+    use crate::cluster::catalog::find;
+    use crate::cluster::{Cluster, Node};
+    Cluster {
+        name: "window8".into(),
+        nodes: vec![Node {
+            name: "n0".into(),
+            gpus: vec![find("P40").unwrap(); 8],
+            intra_bw_gbps: 64.0,
+        }],
+        inter_bw_gbps: 50.0,
+    }
+}
+
+/// Shrink a fitted profile's capacities onto the residency window:
+/// each GPU fits m = 1 compute plus 1.3x an even share of the fully
+/// sharded 16 B/param state — but NOT a replicated 4 B/param weight
+/// copy. With n GPUs the window needs `4 > 1.3 x 16/n`, i.e. n > 5.2,
+/// so on [`window8_cluster`] it exists for ANY oracle magnitudes, by
+/// construction. Used by the planner-residency acceptance tests
+/// (`optimizer::dp` unit + `tests/plan_system.rs` sweep).
+pub fn apply_residency_window(
+    profile: &mut crate::perfmodel::ClusterPerfProfile,
+) {
+    let n = profile.per_gpu.len() as f64;
+    let share = crate::memory::state_bytes(profile.total_params) / n;
+    for g in profile.per_gpu.iter_mut() {
+        let usable = g.mem.predict(1) + 1.3 * share;
+        g.capacity = usable / crate::memory::MEM_UTIL_CAP;
+    }
+}
+
 /// Per-case generator handed to properties.
 pub struct Gen {
     rng: Rng,

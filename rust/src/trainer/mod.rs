@@ -18,6 +18,21 @@
 //! 4. each worker applies sharded Adam to its own state shard;
 //! 5. an uneven `ring_allgather` rebuilds the full parameter vector.
 //!
+//! **Parameter residency** ([`TrainConfig::shard_params`]): by default
+//! the trainer keeps the historical leader-resident full weight copy
+//! (step 5 rebuilds it every step). With `shard_params = true` the
+//! weights shard exactly like the Adam moments: each rank holds only
+//! its `r_i` slice, the step MATERIALIZES the full weights with the
+//! same ring AllGather (moved from the step's tail to its head) and
+//! frees them when the step ends, and the optimizer updates the local
+//! slice in place. Per-rank parameter bytes then scale with `r_i`
+//! (DESIGN.md invariant 11); the full vector is only assembled on
+//! explicit export ([`Trainer::gather_params`], checkpoints). Both
+//! residencies produce BITWISE-identical trajectories: gathering the
+//! shards at step start reproduces, bit for bit, the full vector the
+//! leader-resident path carried over from the previous step's tail
+//! AllGather.
+//!
 //! The pipeline itself (this file) is backend-agnostic and always
 //! compiled: `cephalo train --backend native` drives it with the
 //! dependency-free `exec::NativeExecutor`, and the elastic session
@@ -59,6 +74,11 @@ pub struct TrainConfig {
     /// Markov-corpus branching factor (lower = easier).
     pub corpus_branch: usize,
     pub log_every: usize,
+    /// Fully-sharded parameters: drop the leader-resident weight copy
+    /// and keep only per-rank `r_i` slices, gathering full weights
+    /// transiently per step (see the module docs). Bitwise-identical
+    /// to the default leader-resident mode.
+    pub shard_params: bool,
 }
 
 impl Default for TrainConfig {
@@ -69,6 +89,7 @@ impl Default for TrainConfig {
             adam: AdamConfig::default(),
             corpus_branch: 4,
             log_every: 10,
+            shard_params: false,
         }
     }
 }
@@ -90,6 +111,16 @@ pub struct StepStats {
     pub measured_seconds: f64,
 }
 
+/// Where the fp32 weights live between steps.
+enum ParamStore {
+    /// Historical default: the leader's full parameter copy, one flat
+    /// vec per tensor (executor ABI shapes).
+    Leader(Vec<Vec<f32>>),
+    /// Fully sharded: rank r holds only `layout.range(r)` of the flat
+    /// parameter vector; no full copy exists between steps.
+    Sharded(Vec<Vec<f32>>),
+}
+
 pub struct Trainer {
     exec: Box<dyn StepExecutor>,
     /// The collective substrate for the hot path (gradient RS +
@@ -98,8 +129,9 @@ pub struct Trainer {
     comm: Box<dyn CollectiveEngine>,
     workers: Vec<WorkerSpec>,
     cfg: TrainConfig,
-    /// Leader's full parameter copy, one flat vec per tensor.
-    params: Vec<Vec<f32>>,
+    /// The weights, leader-resident or fully sharded per
+    /// [`TrainConfig::shard_params`].
+    params: ParamStore,
     /// Tensor sizes (executor ABI order) for flatten/unflatten.
     sizes: Vec<usize>,
     /// Shard layout over the flat parameter vector (by r_i).
@@ -128,7 +160,20 @@ impl Trainer {
             .map(|r| AdamShard::new(layout.size(r), cfg.adam))
             .collect();
         let corpus = Corpus::new(exec.vocab(), cfg.corpus_branch, cfg.seed);
-        let params = exec.init_params(cfg.seed);
+        let init = exec.init_params(cfg.seed);
+        let params = if cfg.shard_params {
+            // Slice the deterministic init into per-rank shards and
+            // drop the full copy — from here on full weights exist only
+            // transiently inside a step.
+            let flat = flatten(&init, flat_len);
+            ParamStore::Sharded(
+                (0..workers.len())
+                    .map(|r| flat[layout.range(r)].to_vec())
+                    .collect(),
+            )
+        } else {
+            ParamStore::Leader(init)
+        };
         Ok(Trainer {
             exec,
             comm: Box::new(InProcessRing),
@@ -229,8 +274,25 @@ impl Trainer {
             self.workers.iter().map(|w| w.batch).collect();
         let parts = data::split_batch(&tokens, &targets, seq, &batches);
 
+        // Materialize the full weights: the resident leader copy, or —
+        // fully sharded — a transient ring AllGather of the per-rank
+        // slices, bitwise the vector the leader path carried over from
+        // the previous step's tail AllGather. Freed at step end.
+        let materialized: Option<Vec<Vec<f32>>> = match &self.params {
+            ParamStore::Leader(_) => None,
+            ParamStore::Sharded(shards) => {
+                let flat = self.comm.allgather(shards, &self.layout)?;
+                Some(unflatten(&flat, &self.sizes))
+            }
+        };
+        let full: &[Vec<f32>] = match (&materialized, &self.params) {
+            (Some(m), _) => m,
+            (None, ParamStore::Leader(p)) => p,
+            (None, ParamStore::Sharded(_)) => unreachable!(),
+        };
+
         // Backend: per-worker batch shares -> per-worker summed grads.
-        let out = self.exec.run_step(&self.params, &parts)?;
+        let out = self.exec.run_step(full, &parts)?;
         if out.worker_grads.len() != self.workers.len() {
             return Err(anyhow!(
                 "backend returned {} gradient sets for {} workers",
@@ -255,41 +317,61 @@ impl Trainer {
             }
         }
 
-        // Sharded Adam in parallel, on a flattened parameter copy.
-        let flat_len: usize = self.sizes.iter().sum();
-        let mut flat = flatten(&self.params, flat_len);
-        {
-            let layout = &self.layout;
-            let mut param_slices: Vec<&mut [f32]> = Vec::new();
-            let mut rest: &mut [f32] = &mut flat;
-            let mut consumed = 0usize;
-            for r in 0..self.workers.len() {
-                let range = layout.range(r);
-                let (head, tail) = rest.split_at_mut(range.len());
-                debug_assert_eq!(range.start, consumed);
-                consumed += range.len();
-                param_slices.push(head);
-                rest = tail;
-            }
-            std::thread::scope(|scope| {
-                for ((shard, grads), pslice) in self
-                    .shards
-                    .iter_mut()
-                    .zip(&grad_shards)
-                    .zip(param_slices.into_iter())
+        // Sharded Adam in parallel.
+        match &mut self.params {
+            ParamStore::Leader(params) => {
+                // Historical path: update a flattened copy, then the
+                // tail AllGather rebuilds the full parameter vector on
+                // all ranks (leader keeps one canonical copy).
+                let flat_len: usize = self.sizes.iter().sum();
+                let mut flat = flatten(params, flat_len);
                 {
-                    scope.spawn(move || shard.update(pslice, grads));
+                    let layout = &self.layout;
+                    let mut param_slices: Vec<&mut [f32]> = Vec::new();
+                    let mut rest: &mut [f32] = &mut flat;
+                    let mut consumed = 0usize;
+                    for r in 0..self.workers.len() {
+                        let range = layout.range(r);
+                        let (head, tail) = rest.split_at_mut(range.len());
+                        debug_assert_eq!(range.start, consumed);
+                        consumed += range.len();
+                        param_slices.push(head);
+                        rest = tail;
+                    }
+                    std::thread::scope(|scope| {
+                        for ((shard, grads), pslice) in self
+                            .shards
+                            .iter_mut()
+                            .zip(&grad_shards)
+                            .zip(param_slices.into_iter())
+                        {
+                            scope.spawn(move || shard.update(pslice, grads));
+                        }
+                    });
                 }
-            });
+                let shard_views: Vec<Vec<f32>> = (0..self.workers.len())
+                    .map(|r| flat[self.layout.range(r)].to_vec())
+                    .collect();
+                let rebuilt =
+                    self.comm.allgather(&shard_views, &self.layout)?;
+                *params = unflatten(&rebuilt, &self.sizes);
+            }
+            ParamStore::Sharded(shards) => {
+                // Fully sharded: each rank updates its own resident
+                // slice in place; no tail AllGather, no full copy — the
+                // materialized weights drop at the end of this step.
+                std::thread::scope(|scope| {
+                    for ((shard, grads), pshard) in self
+                        .shards
+                        .iter_mut()
+                        .zip(&grad_shards)
+                        .zip(shards.iter_mut())
+                    {
+                        scope.spawn(move || shard.update(pshard, grads));
+                    }
+                });
+            }
         }
-
-        // AllGather rebuilds the full parameter vector on all ranks
-        // (leader keeps one canonical copy).
-        let shard_views: Vec<Vec<f32>> = (0..self.workers.len())
-            .map(|r| flat[self.layout.range(r)].to_vec())
-            .collect();
-        let gathered = self.comm.allgather(&shard_views, &self.layout)?;
-        self.params = unflatten(&gathered, &self.sizes);
 
         let measured = t0.elapsed().as_secs_f64();
         let stats = StepStats {
@@ -320,8 +402,19 @@ impl Trainer {
         Ok(self.history.clone())
     }
 
-    /// Evaluate mean loss on fresh batches (no update).
+    /// Evaluate mean loss on fresh batches (no update). Sharded mode
+    /// materializes the weights once for the whole evaluation; leader
+    /// mode borrows the resident copy (no clone).
     pub fn eval_loss(&mut self, batches: usize) -> Result<f64> {
+        let gathered: Option<Vec<Vec<f32>>> = match &self.params {
+            ParamStore::Leader(_) => None,
+            ParamStore::Sharded(_) => Some(self.gather_params()),
+        };
+        let params: &[Vec<f32>] = match (&gathered, &self.params) {
+            (Some(g), _) => g,
+            (None, ParamStore::Leader(p)) => p,
+            (None, ParamStore::Sharded(_)) => unreachable!(),
+        };
         let seq = self.exec.seq_len();
         let rows = self.exec.eval_rows().max(1);
         let mut total = 0f64;
@@ -329,7 +422,7 @@ impl Trainer {
         for _ in 0..batches {
             let (tokens, targets) = self.corpus.sample_batch(rows, seq);
             let (ls, cnt) =
-                self.exec.eval_loss(&self.params, &tokens, &targets)?;
+                self.exec.eval_loss(params, &tokens, &targets)?;
             total += ls;
             count += cnt;
         }
@@ -339,8 +432,53 @@ impl Trainer {
         Ok(total / count)
     }
 
+    /// The leader-resident full parameters. Panics on a fully-sharded
+    /// trainer — no resident copy exists by design; use
+    /// [`Trainer::gather_params`] for an explicit export.
     pub fn params(&self) -> &[Vec<f32>] {
-        &self.params
+        match &self.params {
+            ParamStore::Leader(p) => p,
+            ParamStore::Sharded(_) => panic!(
+                "fully-sharded trainer holds no resident full parameter \
+                 copy; use gather_params() for an explicit export"
+            ),
+        }
+    }
+
+    /// Assemble the full parameter tensors — an EXPLICIT export, the
+    /// only place a fully-sharded trainer reconstitutes the weights
+    /// outside a step. Shard concatenation is bitwise the ring
+    /// AllGather result, so both residencies export identical tensors.
+    pub fn gather_params(&self) -> Vec<Vec<f32>> {
+        match &self.params {
+            ParamStore::Leader(p) => p.clone(),
+            ParamStore::Sharded(shards) => {
+                let mut flat =
+                    Vec::with_capacity(self.sizes.iter().sum());
+                for s in shards {
+                    flat.extend_from_slice(s);
+                }
+                unflatten(&flat, &self.sizes)
+            }
+        }
+    }
+
+    /// The per-rank parameter slices (`Some` only in sharded mode).
+    pub fn param_shards(&self) -> Option<&[Vec<f32>]> {
+        match &self.params {
+            ParamStore::Leader(_) => None,
+            ParamStore::Sharded(shards) => Some(shards),
+        }
+    }
+
+    /// True when the weights are fully sharded (no leader copy).
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.params, ParamStore::Sharded(_))
+    }
+
+    /// Total parameter count (flat length), valid in both residencies.
+    pub fn num_params(&self) -> usize {
+        self.sizes.iter().sum()
     }
 
     /// Per-worker training-state bytes (the 16 B/param split by r_i) —
@@ -351,8 +489,25 @@ impl Trainer {
             .collect()
     }
 
+    /// Per-worker RESIDENT parameter bytes: proportional to `r_i` in
+    /// sharded mode (4 B x shard elements), the full 4 B x total on
+    /// every worker in leader mode — the measured counterpart of
+    /// `memory::ParamResidency::param_bytes`.
+    pub fn param_bytes_per_worker(&self) -> Vec<usize> {
+        match &self.params {
+            ParamStore::Leader(_) => {
+                vec![self.num_params() * 4; self.workers.len()]
+            }
+            ParamStore::Sharded(shards) => {
+                shards.iter().map(|s| s.len() * 4).collect()
+            }
+        }
+    }
+
     /// Assemble a leader-view checkpoint (full params + gathered Adam
-    /// moments over the flat parameter space).
+    /// moments over the flat parameter space). In sharded mode the
+    /// parameter assembly is an explicit export (the checkpoint is the
+    /// ONE artifact that is always layout-independent).
     pub fn checkpoint(&self) -> checkpoint::Checkpoint {
         let flat_len: usize = self.sizes.iter().sum();
         let mut adam_m = vec![0f32; flat_len];
@@ -366,7 +521,7 @@ impl Trainer {
         }
         checkpoint::Checkpoint {
             step,
-            params: self.params.clone(),
+            params: self.gather_params(),
             adam_m,
             adam_v,
         }
@@ -375,7 +530,9 @@ impl Trainer {
     /// Restore params + optimizer state from a checkpoint. The shard
     /// layout may differ from the one the checkpoint was written under —
     /// exactly the elastic-replan resume path
-    /// (`coordinator::elastic`).
+    /// (`coordinator::elastic`). A fully-sharded trainer re-slices the
+    /// checkpoint's parameters into its own layout; no full copy is
+    /// retained.
     pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
         ck.validate()?;
         let sizes: Vec<usize> = ck.params.iter().map(Vec::len).collect();
@@ -384,7 +541,16 @@ impl Trainer {
                 "checkpoint tensor sizes do not match the executor"
             ));
         }
-        self.params = ck.params.clone();
+        match &mut self.params {
+            ParamStore::Leader(p) => *p = ck.params.clone(),
+            ParamStore::Sharded(shards) => {
+                let flat_len: usize = sizes.iter().sum();
+                let flat = flatten(&ck.params, flat_len);
+                for (r, s) in shards.iter_mut().enumerate() {
+                    *s = flat[self.layout.range(r)].to_vec();
+                }
+            }
+        }
         for (r, shard) in self.shards.iter_mut().enumerate() {
             let range = self.layout.range(r);
             shard.m.copy_from_slice(&ck.adam_m[range.clone()]);
@@ -397,12 +563,18 @@ impl Trainer {
     /// Adopt a new worker membership after an elastic re-plan: install
     /// the layout derived from the new state ratios and the migrated
     /// Adam shards (built by `coordinator::elastic::apply_migration`).
-    /// The leader-resident parameter copy carries over unchanged;
-    /// training resumes on the next [`Trainer::step`].
+    ///
+    /// In leader-resident mode the full parameter copy carries over
+    /// unchanged and `param_shards` must be `None`. In fully-sharded
+    /// mode the weights migrate exactly like the moments: pass the
+    /// re-sliced per-rank parameter shards (same `apply_migration`
+    /// transfer list, applied to the flat weight vector). Training
+    /// resumes on the next [`Trainer::step`].
     pub fn adopt(
         &mut self,
         workers: Vec<WorkerSpec>,
         shards: Vec<AdamShard>,
+        param_shards: Option<Vec<Vec<f32>>>,
     ) -> Result<()> {
         if workers.is_empty() {
             return Err(anyhow!("need at least one worker"));
@@ -426,6 +598,43 @@ impl Trainer {
                     layout.size(r)
                 ));
             }
+        }
+        match (&self.params, &param_shards) {
+            (ParamStore::Leader(_), Some(_)) => {
+                return Err(anyhow!(
+                    "leader-resident trainer adopts no parameter shards \
+                     (the full copy carries over)"
+                ));
+            }
+            (ParamStore::Sharded(_), None) => {
+                return Err(anyhow!(
+                    "fully-sharded trainer needs migrated parameter \
+                     shards (there is no leader copy to fall back on)"
+                ));
+            }
+            (ParamStore::Sharded(_), Some(ps)) => {
+                if ps.len() != workers.len() {
+                    return Err(anyhow!(
+                        "{} parameter shards for {} workers",
+                        ps.len(),
+                        workers.len()
+                    ));
+                }
+                for (r, s) in ps.iter().enumerate() {
+                    if s.len() != layout.size(r) {
+                        return Err(anyhow!(
+                            "migrated parameter shard {r} holds {} \
+                             elems, layout wants {}",
+                            s.len(),
+                            layout.size(r)
+                        ));
+                    }
+                }
+            }
+            (ParamStore::Leader(_), None) => {}
+        }
+        if let Some(ps) = param_shards {
+            self.params = ParamStore::Sharded(ps);
         }
         self.workers = workers;
         self.layout = layout;
@@ -546,6 +755,7 @@ mod tests {
             log_every: 0,
             adam: AdamConfig { lr: 3e-2, ..Default::default() },
             corpus_branch: 2,
+            ..Default::default()
         };
         let mut t = native_trainer(workers, cfg);
         let hist = t.run().unwrap();
@@ -694,7 +904,7 @@ mod tests {
         // Mismatched shard sizes are rejected.
         let bad = vec![AdamShard::new(1, AdamConfig::default())];
         assert!(t
-            .adopt(vec![w(4, 1.0, "solo")], bad)
+            .adopt(vec![w(4, 1.0, "solo")], bad, None)
             .is_err());
         // A well-formed single-rank adoption passes and trains on.
         let ck = t.checkpoint();
@@ -704,7 +914,15 @@ mod tests {
             step: ck.step,
             cfg: AdamConfig::default(),
         };
-        t.adopt(vec![w(4, 1.0, "solo")], vec![solo]).unwrap();
+        // A leader-resident trainer rejects parameter shards ...
+        assert!(t
+            .adopt(
+                vec![w(4, 1.0, "solo")],
+                vec![solo.clone()],
+                Some(vec![vec![0.0; flat_len]]),
+            )
+            .is_err());
+        t.adopt(vec![w(4, 1.0, "solo")], vec![solo], None).unwrap();
         assert_eq!(t.layout().sizes(), vec![flat_len]);
         assert_eq!(t.global_batch(), 4);
         t.step(1).unwrap();
@@ -717,5 +935,180 @@ mod tests {
         let loss = t.eval_loss(2).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert_eq!(t.params(), &before[..]);
+    }
+
+    fn quiet_sharded(seed: u64) -> TrainConfig {
+        TrainConfig { shard_params: true, ..quiet(seed) }
+    }
+
+    #[test]
+    fn fully_sharded_matches_leader_resident_bitwise() {
+        // The tentpole invariant at unit scale: dropping the leader
+        // copy changes WHERE the weights live, not one bit of the
+        // trajectory — across every collective substrate.
+        let workers = || {
+            vec![
+                w(3, 0.7, "fast"),
+                w(1, 0.3, "slow"),
+                w(2, 0.0, "stateless"),
+            ]
+        };
+        let mut leader = native_trainer(workers(), quiet(9));
+        let mut sharded = native_trainer(workers(), quiet_sharded(9));
+        let mut sharded_tcp = native_trainer(workers(), quiet_sharded(9))
+            .with_comm(Box::new(comm::FabricRing::tcp_loopback(3).unwrap()));
+        assert!(!leader.is_sharded());
+        assert!(sharded.is_sharded());
+        assert_eq!(sharded.gather_params(), leader.gather_params());
+        for s in 0..4 {
+            leader.step(s).unwrap();
+            sharded.step(s).unwrap();
+            sharded_tcp.step(s).unwrap();
+            assert_eq!(
+                sharded.gather_params(),
+                leader.gather_params(),
+                "sharded diverged from leader at step {s}"
+            );
+            assert_eq!(
+                sharded_tcp.gather_params(),
+                leader.gather_params(),
+                "sharded-over-tcp diverged at step {s}"
+            );
+        }
+        // Per-rank parameter bytes scale with r_i in sharded mode (the
+        // r_i = 0 rank holds ZERO weight bytes), but are the full copy
+        // on every rank in leader mode.
+        let sb = sharded.param_bytes_per_worker();
+        let lb = leader.param_bytes_per_worker();
+        let total = leader.num_params() * 4;
+        assert_eq!(sb.iter().sum::<usize>(), total);
+        assert!(sb[0] > sb[1], "bigger r_i must hold more weight bytes");
+        assert_eq!(sb[2], 0, "r_i = 0 rank holds no weights");
+        assert_eq!(lb, vec![total; 3]);
+        // And the resident copy is genuinely gone.
+        assert!(sharded.param_shards().is_some());
+        assert!(leader.param_shards().is_none());
+    }
+
+    #[test]
+    fn sharded_checkpoint_roundtrip_across_layout_change() {
+        // Satellite: save from a fully-sharded trainer under layout A,
+        // restore into a fully-sharded trainer under layout B (and a
+        // leader-resident one), bitwise against the reference.
+        let mut a = native_trainer(
+            vec![w(4, 0.5, "a0"), w(2, 0.3, "a1"), w(2, 0.2, "a2")],
+            quiet_sharded(23),
+        );
+        for s in 0..3 {
+            a.step(s).unwrap();
+        }
+        let ck = a.checkpoint();
+        assert_eq!(ck.step, 3);
+        let tmp =
+            std::env::temp_dir().join("ceph_sharded_layout_change.ckpt");
+        ck.save(&tmp).unwrap();
+        let loaded = checkpoint::Checkpoint::load(&tmp).unwrap();
+        assert_eq!(loaded, ck);
+
+        // Restore under a DIFFERENT sharded layout (2 ranks).
+        let mut b = native_trainer(
+            vec![w(5, 0.35, "b0"), w(3, 0.65, "b1")],
+            quiet_sharded(23),
+        );
+        b.restore(&loaded).unwrap();
+        assert_eq!(b.gather_params(), a.gather_params());
+        // Re-exporting from B's shards reproduces the checkpoint bit
+        // for bit even though every shard boundary moved.
+        let re = b.checkpoint();
+        assert_eq!(re, ck);
+
+        // And a LEADER-resident restore of the same checkpoint stays on
+        // the identical trajectory when both continue training.
+        let mut l = native_trainer(vec![w(8, 1.0, "solo")], quiet(23));
+        l.restore(&loaded).unwrap();
+        for s in 3..6 {
+            b.step(s).unwrap();
+            l.step(s).unwrap();
+            assert_eq!(
+                b.gather_params(),
+                l.gather_params(),
+                "sharded restore diverged at step {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_adopt_migrates_weights_with_the_moments() {
+        use crate::coordinator::elastic;
+        // Shrink 2 -> 1 via the real migration plumbing: the transfer
+        // list re-slices Adam m/v AND the weight vector; the adopted
+        // trainer continues bitwise on a leader-resident reference.
+        let mut t = native_trainer(
+            vec![w(3, 0.6, "x"), w(1, 0.4, "y")],
+            quiet_sharded(31),
+        );
+        let mut reference =
+            native_trainer(vec![w(4, 1.0, "solo")], quiet(31));
+        for s in 0..2 {
+            t.step(s).unwrap();
+            reference.step(s).unwrap();
+        }
+        let flat_len = t.num_params();
+        let old_layout = t.layout().clone();
+        let new_layout = ShardLayout::by_ratios(flat_len, &[1.0]);
+        let survivors = vec![Some(0)];
+        let (transfers, _resident, moved) = elastic::plan_migration(
+            &old_layout, &new_layout, &survivors,
+        );
+        assert!(moved > 0);
+        let ck = t.checkpoint();
+        let flat_ref = flatten(&ck.params, flat_len);
+        let old_p: Vec<&[f32]> = t
+            .param_shards()
+            .unwrap()
+            .iter()
+            .map(|s| s.as_slice())
+            .collect();
+        let new_p = elastic::apply_migration(
+            &old_layout, &old_p, &new_layout, &survivors, &transfers,
+            &flat_ref,
+        );
+        let old_m: Vec<&[f32]> =
+            t.shards().iter().map(|s| s.m.as_slice()).collect();
+        let new_m = elastic::apply_migration(
+            &old_layout, &old_m, &new_layout, &survivors, &transfers,
+            &ck.adam_m,
+        );
+        let old_v: Vec<&[f32]> =
+            t.shards().iter().map(|s| s.v.as_slice()).collect();
+        let new_v = elastic::apply_migration(
+            &old_layout, &old_v, &new_layout, &survivors, &transfers,
+            &ck.adam_v,
+        );
+        let shards: Vec<AdamShard> = new_m
+            .into_iter()
+            .zip(new_v)
+            .map(|(m, v)| AdamShard {
+                m,
+                v,
+                step: ck.step,
+                cfg: AdamConfig::default(),
+            })
+            .collect();
+        // A sharded trainer refuses to adopt WITHOUT weight shards ...
+        assert!(t
+            .adopt(vec![w(4, 1.0, "solo")], shards.clone(), None)
+            .is_err());
+        t.adopt(vec![w(4, 1.0, "solo")], shards, Some(new_p)).unwrap();
+        assert!(t.is_sharded());
+        for s in 2..5 {
+            t.step(s).unwrap();
+            reference.step(s).unwrap();
+            assert_eq!(
+                t.gather_params(),
+                reference.gather_params(),
+                "post-migration trajectory diverged at step {s}"
+            );
+        }
     }
 }

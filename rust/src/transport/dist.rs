@@ -88,6 +88,11 @@ pub struct DistConfig {
     pub adam: AdamConfig,
     pub corpus_branch: usize,
     pub surrogate: SurrogateSpec,
+    /// Fully-sharded parameters: every rank holds only its `r_i` slice
+    /// of the weights, materializing the full vector per step with the
+    /// wire AllGather (mirrors [`crate::trainer::TrainConfig`]'s flag;
+    /// bitwise-identical either way).
+    pub shard_params: bool,
 }
 
 impl Default for DistConfig {
@@ -97,6 +102,7 @@ impl Default for DistConfig {
             adam: AdamConfig::default(),
             corpus_branch: 4,
             surrogate: SurrogateSpec::default(),
+            shard_params: false,
         }
     }
 }
@@ -121,6 +127,10 @@ const OP_INIT: u8 = 1;
 const OP_STEP: u8 = 2;
 const OP_MIGRATE: u8 = 3;
 const OP_SHUTDOWN: u8 = 4;
+/// Explicit parameter export (fully-sharded runs only): every active
+/// rank streams its weight slice to rank 0, which assembles the full
+/// vector — the wire counterpart of `Trainer::gather_params`.
+const OP_COLLECT: u8 = 5;
 
 #[derive(Default)]
 struct W(Vec<u8>);
@@ -203,6 +213,7 @@ fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
     w.f64(cfg.adam.beta2 as f64);
     w.f64(cfg.adam.eps as f64);
     w.f64(cfg.adam.weight_decay as f64);
+    w.u8(u8::from(cfg.shard_params));
     put_membership(&mut w, membership);
     w.0
 }
@@ -222,8 +233,12 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
         eps: r.f64()? as f32,
         weight_decay: r.f64()? as f32,
     };
+    let shard_params = r.u8()? != 0;
     let membership = get_membership(r)?;
-    Ok((DistConfig { seed, adam, corpus_branch, surrogate }, membership))
+    Ok((
+        DistConfig { seed, adam, corpus_branch, surrogate, shard_params },
+        membership,
+    ))
 }
 
 fn encode_migrate(cmd: &MigrateCmd) -> Vec<u8> {
@@ -289,6 +304,9 @@ pub struct DistRank {
     rank: usize,
     exec: NativeExecutor,
     corpus: Corpus,
+    /// Leader-resident mode: the full parameters, rebuilt every step by
+    /// the tail AllGather. EMPTY in fully-sharded mode (no rank holds a
+    /// full copy between steps).
     params: Vec<Vec<f32>>,
     sizes: Vec<usize>,
     membership: Vec<WorkerSpec>,
@@ -296,6 +314,10 @@ pub struct DistRank {
     /// `None` while this rank is standby (outside the membership).
     shard: Option<AdamShard>,
     adam: AdamConfig,
+    /// Fully-sharded weights: this rank's `layout.range(rank)` slice
+    /// (`None` for standby ranks and in leader-resident mode).
+    param_shard: Option<Vec<f32>>,
+    shard_params: bool,
 }
 
 impl DistRank {
@@ -310,11 +332,23 @@ impl DistRank {
         let exec = NativeExecutor::new(cfg.surrogate.clone());
         let sizes = exec.param_sizes().to_vec();
         let flat_len: usize = sizes.iter().sum();
-        let params = exec.init_params(cfg.seed);
+        let init = exec.init_params(cfg.seed);
         let corpus = Corpus::new(exec.vocab(), cfg.corpus_branch, cfg.seed);
         let layout = layout_of(&membership, flat_len);
-        let shard = (rank < membership.len())
-            .then(|| AdamShard::new(layout.size(rank), cfg.adam));
+        let active = rank < membership.len();
+        let shard =
+            active.then(|| AdamShard::new(layout.size(rank), cfg.adam));
+        let (params, param_shard) = if cfg.shard_params {
+            // Keep only this rank's slice of the deterministic init;
+            // the full copy never survives init.
+            let flat = crate::trainer::flatten(&init, flat_len);
+            (
+                Vec::new(),
+                active.then(|| flat[layout.range(rank)].to_vec()),
+            )
+        } else {
+            (init, None)
+        };
         Ok(DistRank {
             rank,
             exec,
@@ -325,6 +359,8 @@ impl DistRank {
             layout,
             shard,
             adam: cfg.adam,
+            param_shard,
+            shard_params: cfg.shard_params,
         })
     }
 
@@ -332,8 +368,24 @@ impl DistRank {
         &self.membership
     }
 
+    /// The leader-resident full parameters (empty in sharded mode —
+    /// use the COLLECT path / `DistDriver::gather_params`).
     pub fn params(&self) -> &[Vec<f32>] {
         &self.params
+    }
+
+    /// This rank's weight slice (`Some` only in fully-sharded mode on
+    /// active ranks).
+    pub fn param_shard_view(&self) -> Option<&[f32]> {
+        self.param_shard.as_deref()
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.shard_params
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -376,13 +428,30 @@ impl DistRank {
             .expect("rank within membership");
 
         let flat_len = self.flat_len();
+        // Materialize the full weights: resident in leader mode; in
+        // fully-sharded mode a head-of-step wire AllGather of the
+        // per-rank slices — bitwise the vector the leader path rebuilt
+        // at the previous step's tail. Freed when the step returns.
+        let materialized: Option<Vec<Vec<f32>>> = if self.shard_params {
+            let mine = self.param_shard.as_deref().ok_or_else(|| {
+                anyhow!("active rank {} has no parameter shard", self.rank)
+            })?;
+            let flat = wire::ring_allgather(t, mine, &self.layout)?;
+            Some(unflatten(&flat, &self.sizes))
+        } else {
+            None
+        };
+        let full: &[Vec<f32>] = match &materialized {
+            Some(m) => m,
+            None => &self.params,
+        };
         let (my_grad, my_loss, my_count) = if my_tokens.is_empty() {
             // A state-only rank (b_i = 0) contributes an exact zero
             // vector — bitwise what `worker_pass` returns on no rows.
             (vec![0f32; flat_len], 0.0, 0.0)
         } else {
             let part = vec![(my_tokens, my_targets)];
-            let out = self.exec.run_step(&self.params, &part)?;
+            let out = self.exec.run_step(full, &part)?;
             let g = out
                 .worker_grads
                 .into_iter()
@@ -403,18 +472,46 @@ impl DistRank {
             *g *= inv;
         }
 
-        let mut flat = flatten(&self.params, flat_len);
         let range = self.layout.range(self.rank);
         let shard = self
             .shard
             .as_mut()
             .ok_or_else(|| anyhow!("active rank {} has no shard", self.rank))?;
-        shard.update(&mut flat[range.clone()], &grad_shard);
-
-        let shard_view = flat[range].to_vec();
-        let gathered = wire::ring_allgather(t, &shard_view, &self.layout)?;
-        self.params = unflatten(&gathered, &self.sizes);
+        if self.shard_params {
+            // Update the resident slice in place; no tail AllGather —
+            // the next step's head gather re-materializes.
+            let mut mine = self.param_shard.take().ok_or_else(|| {
+                anyhow!("active rank {} has no parameter shard", self.rank)
+            })?;
+            shard.update(&mut mine, &grad_shard);
+            self.param_shard = Some(mine);
+        } else {
+            let mut flat = flatten(&self.params, flat_len);
+            shard.update(&mut flat[range.clone()], &grad_shard);
+            let shard_view = flat[range].to_vec();
+            let gathered =
+                wire::ring_allgather(t, &shard_view, &self.layout)?;
+            self.params = unflatten(&gathered, &self.sizes);
+        }
         Ok((my_loss, my_count))
+    }
+
+    /// Ship this rank's weight slice to rank 0 — the worker half of the
+    /// COLLECT export (fully-sharded runs only). Standby ranks and
+    /// empty slices stay silent; the coordinator skips them by layout.
+    pub fn send_param_shard(&self, t: &mut dyn Transport) -> Result<()> {
+        if !self.shard_params {
+            return Err(anyhow!("COLLECT on a leader-resident rank"));
+        }
+        if self.rank >= self.membership.len()
+            || self.layout.size(self.rank) == 0
+        {
+            return Ok(());
+        }
+        let mine = self.param_shard.as_deref().ok_or_else(|| {
+            anyhow!("active rank {} has no parameter shard", self.rank)
+        })?;
+        t.send_f32(0, mine)
     }
 
     /// Apply a membership change: local resident copy, peer transfers
@@ -452,9 +549,13 @@ impl DistRank {
         let is_active = self.rank < new_group;
 
         // Resident prefill: the overlap of my old and new ranges never
-        // leaves this rank (mirrors `elastic::apply_migration`).
+        // leaves this rank (mirrors `elastic::apply_migration`). In
+        // fully-sharded mode the weight slice migrates exactly like the
+        // moments — same ranges, same transfer list.
         let mut new_m = vec![0f32; if is_active { new_layout.size(self.rank) } else { 0 }];
         let mut new_v = vec![0f32; new_m.len()];
+        let mut new_w =
+            vec![0f32; if self.shard_params { new_m.len() } else { 0 }];
         if is_active && cmd.survivors[self.rank].is_some() {
             let old = self
                 .shard
@@ -469,6 +570,17 @@ impl DistRank {
                     .copy_from_slice(&old.m[lo - or.start..hi - or.start]);
                 new_v[lo - nr.start..hi - nr.start]
                     .copy_from_slice(&old.v[lo - or.start..hi - or.start]);
+                if self.shard_params {
+                    let w = self.param_shard.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "survivor {} has no parameter shard",
+                            self.rank
+                        )
+                    })?;
+                    new_w[lo - nr.start..hi - nr.start].copy_from_slice(
+                        &w[lo - or.start..hi - or.start],
+                    );
+                }
             }
         }
 
@@ -491,6 +603,15 @@ impl DistRank {
                 let a = tr.start - old_layout.range(src).start;
                 t.send_f32(tr.to, &old.m[a..a + tr.len])?;
                 t.send_f32(tr.to, &old.v[a..a + tr.len])?;
+                if self.shard_params {
+                    let w = self.param_shard.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "transfer source {src} holds no parameter \
+                             shard"
+                        )
+                    })?;
+                    t.send_f32(tr.to, &w[a..a + tr.len])?;
+                }
             }
             if is_active && self.rank == tr.to {
                 let nr = new_layout.range(self.rank);
@@ -516,29 +637,45 @@ impl DistRank {
                 }
                 new_m[a..a + tr.len].copy_from_slice(&m_in);
                 new_v[a..a + tr.len].copy_from_slice(&v_in);
+                if self.shard_params {
+                    let w_in = t.recv_f32(src)?;
+                    if w_in.len() != tr.len {
+                        return Err(anyhow!(
+                            "weight transfer holds {} elems, wanted {}",
+                            w_in.len(),
+                            tr.len
+                        ));
+                    }
+                    new_w[a..a + tr.len].copy_from_slice(&w_in);
+                }
             }
         }
 
-        // Ranks ENTERING the membership receive the current full
-        // parameters from rank 0 (bitwise-identical on every active
-        // rank, so any source would do).
-        let flat = flatten(&self.params, flat_len);
-        for (r, surv) in cmd.survivors.iter().enumerate() {
-            if surv.is_some() {
-                continue;
-            }
-            if self.rank == 0 {
-                t.send_f32(r, &flat)?;
-            }
-            if self.rank == r {
-                let data = t.recv_f32(0)?;
-                if data.len() != flat_len {
-                    return Err(anyhow!(
-                        "param stream holds {} elems, wanted {flat_len}",
-                        data.len()
-                    ));
+        // Leader-resident only: ranks ENTERING the membership receive
+        // the current full parameters from rank 0 (bitwise-identical on
+        // every active rank, so any source would do). Fully-sharded
+        // ranks need no such stream — an entering rank's entire weight
+        // slice is covered by the transfer list above (ownership of
+        // every element it now holds changed by definition).
+        if !self.shard_params {
+            let flat = flatten(&self.params, flat_len);
+            for (r, surv) in cmd.survivors.iter().enumerate() {
+                if surv.is_some() {
+                    continue;
                 }
-                self.params = unflatten(&data, &self.sizes);
+                if self.rank == 0 {
+                    t.send_f32(r, &flat)?;
+                }
+                if self.rank == r {
+                    let data = t.recv_f32(0)?;
+                    if data.len() != flat_len {
+                        return Err(anyhow!(
+                            "param stream holds {} elems, wanted {flat_len}",
+                            data.len()
+                        ));
+                    }
+                    self.params = unflatten(&data, &self.sizes);
+                }
             }
         }
 
@@ -550,6 +687,11 @@ impl DistRank {
             step: cmd.adam_step,
             cfg: self.adam,
         });
+        self.param_shard = if self.shard_params && is_active {
+            Some(new_w)
+        } else {
+            None
+        };
         Ok(())
     }
 }
@@ -605,6 +747,12 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
                     .ok_or_else(|| anyhow!("MIGRATE before INIT"))?
                     .migrate(t.as_mut(), &mc)?;
             }
+            OP_COLLECT => {
+                state
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("COLLECT before INIT"))?
+                    .send_param_shard(t.as_mut())?;
+            }
             OP_SHUTDOWN => return Ok(()),
             op => return Err(anyhow!("unknown command op {op}")),
         }
@@ -619,6 +767,7 @@ pub struct DistDriver {
     rank0: DistRank,
     world: usize,
     spec: FabricSpec,
+    sharded: bool,
     timer: Option<StepTimeModel>,
     threads: Vec<std::thread::JoinHandle<()>>,
     children: Vec<std::process::Child>,
@@ -723,12 +872,14 @@ impl DistDriver {
         for r in 1..world {
             t.send_bytes(r, &init)?;
         }
+        let sharded = cfg.shard_params;
         let rank0 = DistRank::init(0, &cfg, membership)?;
         Ok(DistDriver {
             t,
             rank0,
             world,
             spec,
+            sharded,
             timer: None,
             threads,
             children,
@@ -756,8 +907,58 @@ impl DistDriver {
         self.rank0.membership()
     }
 
+    /// Rank 0's resident full parameters. Panics on a fully-sharded
+    /// run (no rank holds a full copy by design) — use
+    /// [`DistDriver::gather_params`] for an explicit wire export.
     pub fn params(&self) -> &[Vec<f32>] {
+        if self.sharded {
+            panic!(
+                "fully-sharded run holds no resident full parameters; \
+                 use gather_params() (COLLECT export)"
+            );
+        }
         self.rank0.params()
+    }
+
+    /// True when the run shards its weights (no leader copy anywhere).
+    pub fn is_sharded(&self) -> bool {
+        self.sharded
+    }
+
+    /// Export the full parameters — rank 0's resident copy on a
+    /// leader-resident run; on a fully-sharded run a COLLECT broadcast
+    /// streams every active rank's weight slice to rank 0, which
+    /// assembles the flat vector (the ONLY place a sharded run
+    /// reconstitutes the weights outside a step).
+    pub fn gather_params(&mut self) -> Result<Vec<Vec<f32>>> {
+        if !self.sharded {
+            return Ok(self.rank0.params().to_vec());
+        }
+        for r in 1..self.world {
+            self.t.send_bytes(r, &[OP_COLLECT])?;
+        }
+        let layout = self.rank0.layout().clone();
+        let group = self.rank0.membership().len();
+        let mut flat = vec![0f32; layout.len()];
+        let mine = self.rank0.param_shard_view().ok_or_else(|| {
+            anyhow!("rank 0 is active but holds no parameter shard")
+        })?;
+        flat[layout.range(0)].copy_from_slice(mine);
+        for r in 1..group {
+            if layout.size(r) == 0 {
+                continue;
+            }
+            let s = self.t.recv_f32(r)?;
+            if s.len() != layout.size(r) {
+                return Err(anyhow!(
+                    "rank {r} streamed {} weight elems, layout wants {}",
+                    s.len(),
+                    layout.size(r)
+                ));
+            }
+            flat[layout.range(r)].copy_from_slice(&s);
+        }
+        Ok(unflatten(&flat, self.rank0.sizes()))
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -960,6 +1161,39 @@ mod tests {
             );
         }
         driver.shutdown();
+    }
+
+    #[test]
+    fn sharded_driver_matches_replicated_driver_bitwise() {
+        // Fully-sharded SPMD ranks (head-of-step wire AllGather, no
+        // resident full copy anywhere) ride the replicated trajectory
+        // bit for bit; gather_params() is the COLLECT export.
+        let membership = || vec![member(3, 0.7), member(1, 0.3)];
+        let cfg = DistConfig { seed: 5, ..Default::default() };
+        let shcfg = DistConfig {
+            seed: 5,
+            shard_params: true,
+            ..Default::default()
+        };
+        let mut rep =
+            DistDriver::launch(FabricSpec::Local, 2, cfg, membership())
+                .unwrap();
+        let mut sh =
+            DistDriver::launch(FabricSpec::Local, 2, shcfg, membership())
+                .unwrap();
+        assert!(sh.is_sharded() && !rep.is_sharded());
+        assert_eq!(sh.gather_params().unwrap(), rep.params());
+        for s in 0..3 {
+            rep.step(s).unwrap();
+            sh.step(s).unwrap();
+            assert_eq!(
+                sh.gather_params().unwrap(),
+                rep.params(),
+                "sharded run diverged at step {s}"
+            );
+        }
+        rep.shutdown();
+        sh.shutdown();
     }
 
     #[test]

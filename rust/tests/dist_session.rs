@@ -9,7 +9,11 @@
 //! This is DESIGN.md invariant 10 ("the wire is bitwise-invisible") at
 //! full system scope: planner registry + plan cache + migration
 //! transfer lists + SPMD wire training, three substrates, one
-//! trajectory.
+//! trajectory. The fully-sharded tests extend it to invariant 11: with
+//! `shard_params`, NO rank holds a leader-resident weight copy, the
+//! weights migrate over the wire alongside the Adam moments, and the
+//! trajectory still matches the leader-resident reference bit for bit
+//! across churn on every transport.
 
 use std::sync::Arc;
 
@@ -24,7 +28,7 @@ const SEED: u64 = 13;
 const BATCH: usize = 8;
 const STEPS_PER_EVENT: usize = 2;
 
-fn session(fabric: Option<FabricSpec>) -> Session {
+fn session_with(fabric: Option<FabricSpec>, shard_params: bool) -> Session {
     let cfg = SessionConfig {
         model: "BERT-Large".into(),
         batch: BATCH,
@@ -32,6 +36,7 @@ fn session(fabric: Option<FabricSpec>) -> Session {
         seed: SEED,
         min_gpus: 1,
         fabric,
+        shard_params,
         ..Default::default()
     };
     Session::new(
@@ -40,6 +45,10 @@ fn session(fabric: Option<FabricSpec>) -> Session {
         cfg,
     )
     .expect("session starts on the 3-GPU cluster")
+}
+
+fn session(fabric: Option<FabricSpec>) -> Session {
+    session_with(fabric, false)
 }
 
 fn reference() -> Trainer {
@@ -73,12 +82,12 @@ fn tcp_session_is_bitwise_identical_to_local_inprocess_and_reference() {
     assert_eq!(tcp.backend_label(), "native+tcp");
     assert_eq!(local.backend_label(), "native+local");
     assert_eq!(
-        tcp.params(),
+        tcp.params().unwrap(),
         reference.params(),
         "same seed must give the same init on every substrate"
     );
-    assert_eq!(local.params(), reference.params());
-    assert_eq!(inproc.params(), reference.params());
+    assert_eq!(local.params().unwrap(), reference.params());
+    assert_eq!(inproc.params().unwrap(), reference.params());
 
     // Explicit churn: 3 -> 2 (shrink: the departed rank's Adam shard
     // moves over the wire) -> 3 (regrow: the rejoining rank receives
@@ -95,18 +104,18 @@ fn tcp_session_is_bitwise_identical_to_local_inprocess_and_reference() {
         }
         assert_eq!(rt.gpus, size);
         assert_eq!(
-            tcp.params(),
-            inproc.params(),
+            tcp.params().unwrap(),
+            inproc.params().unwrap(),
             "tcp diverged from in-process after event {hour} \
              (membership {size})"
         );
         assert_eq!(
-            local.params(),
-            inproc.params(),
+            local.params().unwrap(),
+            inproc.params().unwrap(),
             "local diverged from in-process after event {hour}"
         );
         assert_eq!(
-            inproc.params(),
+            inproc.params().unwrap(),
             reference.params(),
             "in-process diverged from the single-worker reference \
              after event {hour}"
@@ -152,9 +161,87 @@ fn trace_driven_tcp_session_matches_the_inprocess_session() {
         tcp.step_event(hour, size).unwrap();
         inproc.step_event(hour, size).unwrap();
         assert_eq!(
-            tcp.params(),
-            inproc.params(),
+            tcp.params().unwrap(),
+            inproc.params().unwrap(),
             "diverged after trace hour {hour} (size {size})"
         );
     }
+}
+
+#[test]
+fn fully_sharded_sessions_match_the_leader_resident_reference() {
+    // Acceptance (tentpole, invariant 11): fully-sharded sessions on
+    // ALL THREE substrates — in-process, channel fabric, TCP-loopback
+    // sockets — ride the leader-resident reference trajectory bit for
+    // bit across ≥ 3 churn events, with weight ranges migrating
+    // alongside the Adam moments (and re-streamed by standby ranks
+    // for departed owners). No engine holds a leader copy: params()
+    // is an explicit export (COLLECT over the wire).
+    let mut sh_tcp = session_with(Some(FabricSpec::TcpThreads), true);
+    let mut sh_local = session_with(Some(FabricSpec::Local), true);
+    let mut sh_inproc = session_with(None, true);
+    let mut leader = session(None); // the leader-resident reference
+    let mut solo = reference();
+
+    assert!(sh_inproc.trainer().is_sharded());
+    assert!(!leader.trainer().is_sharded());
+    assert_eq!(sh_tcp.params().unwrap(), solo.params());
+    assert_eq!(sh_local.params().unwrap(), solo.params());
+    assert_eq!(sh_inproc.params().unwrap(), solo.params());
+
+    // Per-rank resident weight bytes scale with r_i (the in-process
+    // engine exposes the measured shards directly).
+    let pb = sh_inproc.trainer().param_bytes_per_worker();
+    let total: usize = pb.iter().sum();
+    assert_eq!(total, sh_inproc.trainer().num_params() * 4);
+    assert!(
+        pb.iter().any(|&b| b < total),
+        "no single rank may hold the full weight copy: {pb:?}"
+    );
+
+    // ≥ 3 churn events: shrink (weights of the departed rank stream
+    // over the wire), regrow (the rejoining rank's slice is rebuilt
+    // from transfers alone — no full-param stream exists), recur
+    // (cache hit).
+    let churn = [2usize, 3, 2];
+    for (hour, &size) in churn.iter().enumerate() {
+        let rt = sh_tcp.step_event(hour, size).unwrap();
+        let rl = sh_local.step_event(hour, size).unwrap();
+        let ri = sh_inproc.step_event(hour, size).unwrap();
+        let rd = leader.step_event(hour, size).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = solo.history.len();
+            solo.step(idx).unwrap();
+        }
+        assert_eq!(
+            sh_tcp.params().unwrap(),
+            solo.params(),
+            "sharded tcp diverged after event {hour} (size {size})"
+        );
+        assert_eq!(
+            sh_local.params().unwrap(),
+            solo.params(),
+            "sharded local diverged after event {hour}"
+        );
+        assert_eq!(
+            sh_inproc.params().unwrap(),
+            solo.params(),
+            "sharded in-process diverged after event {hour}"
+        );
+        assert_eq!(
+            leader.params().unwrap(),
+            solo.params(),
+            "leader-resident reference diverged after event {hour}"
+        );
+        // Sharded and leader-resident engines plan the SAME migration
+        // volume — the transfer list is residency-independent.
+        assert_eq!(rt.moved_state_elems, rd.moved_state_elems);
+        assert_eq!(rl.moved_state_elems, rd.moved_state_elems);
+        assert_eq!(ri.moved_state_elems, rd.moved_state_elems);
+    }
+    let moved: usize =
+        sh_tcp.reports.iter().map(|r| r.moved_state_elems).sum();
+    assert!(moved > 0, "churn never moved any sharded weights");
+    assert!(sh_tcp.reports.iter().any(|r| r.from_cache));
+    assert_eq!(sh_tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
 }

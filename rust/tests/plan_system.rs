@@ -144,6 +144,62 @@ fn sweep_grid_is_deterministic_and_ordered() {
 }
 
 #[test]
+fn sweep_admits_sharded_configs_that_oom_under_leader_residency() {
+    // Acceptance (tentpole): with fully-sharded parameter accounting
+    // the planner admits a configuration that OOMs under the old
+    // leader-resident accounting — the "supports larger models" half
+    // of the abstract, planner-side.
+    use cephalo::memory::ParamResidency;
+    use cephalo::optimizer::DpOptimizer;
+    use cephalo::plan::PlanContext;
+    use cephalo::testkit::{apply_residency_window, window8_cluster};
+    use std::sync::Arc;
+
+    // The shared residency window: every GPU fits its compute plus a
+    // fully-sharded state share, but not a replicated weight copy
+    // (see `testkit::apply_residency_window` for the construction).
+    let w = Workload::prepare(window8_cluster(), "BERT-Large", 42)
+        .unwrap();
+    let mut profile = w.profile.clone();
+    apply_residency_window(&mut profile);
+    let ctx =
+        PlanContext::new(&w.cluster, &w.model, &profile, &w.oracle, 0);
+    let sharded: Arc<dyn Planner> = Arc::new(CephaloPlanner {
+        simulate: false,
+        ..Default::default()
+    });
+    let leader: Arc<dyn Planner> = Arc::new(CephaloPlanner {
+        opts: DpOptimizer {
+            residency: ParamResidency::LeaderResident,
+            ..Default::default()
+        },
+        simulate: false,
+        ..Default::default()
+    });
+    let cells = sweep(&ctx, &[sharded, leader], &[8], None);
+    assert_eq!(cells.len(), 2);
+    // Sharded accounting admits the config...
+    let admitted = cells[0]
+        .result
+        .as_ref()
+        .expect("fully-sharded accounting must admit this config");
+    let asg = admitted.assignment.as_ref().unwrap();
+    asg.validate_resident(&profile, 8, ParamResidency::FullySharded)
+        .expect("sharded accounting fits");
+    // ...and per-GPU parameter bytes are proportional to r_i.
+    let total = profile.total_params;
+    for g in &asg.per_gpu {
+        assert_eq!(
+            ParamResidency::FullySharded.param_bytes(total, g.state_ratio),
+            total * 4.0 * g.state_ratio
+        );
+    }
+    // Leader-resident accounting OOMs on the same inputs.
+    let err = cells[1].result.as_ref().unwrap_err();
+    assert!(err.is_oom(), "expected leader-resident OOM, got: {err}");
+}
+
+#[test]
 fn oom_errors_name_planner_and_configuration() {
     // Whale fully replicates GPT 2.7B's ~44 GB state: guaranteed OOM on
     // cluster A, and the error must say who and which config.

@@ -225,6 +225,7 @@ fn short_training_run_descends() {
             ..Default::default()
         },
         corpus_branch: 4,
+        ..Default::default()
     };
     let workers = vec![
         WorkerSpec { batch: 3, state_ratio: 0.5, name: "a".into() },
@@ -300,8 +301,12 @@ fn checkpoint_resume_across_different_sharding() {
         return;
     }
     let dir = default_artifacts_dir();
-    let cfg = TrainConfig { steps: 2, seed: 21, log_every: 0,
-                            ..Default::default() };
+    let cfg = TrainConfig {
+        steps: 2,
+        seed: 21,
+        log_every: 0,
+        ..Default::default()
+    };
     let mut a = Trainer::new(
         &dir,
         vec![
