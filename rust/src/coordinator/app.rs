@@ -11,7 +11,10 @@ use crate::exec::{NativeExecutor, StepTimeModel, SurrogateSpec};
 use crate::optimizer::PlanError;
 use crate::plan::{self, PlanCache, Planner, PlannerRegistry};
 use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
-use crate::transport::{self, DistConfig, DistDriver, FabricSpec};
+use crate::transport::{
+    self, ChaosConfig, ChaosTransport, CrashMode, DistConfig, DistDriver,
+    FabricSpec, FaultPlan,
+};
 use crate::util::tablefmt::{fmt_throughput, Table};
 
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -326,6 +329,15 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     specs.push(opt("plan-cache", "JSON file to warm the plan cache \
                                   from and persist it to (--live)",
                    None));
+    specs.push(switch("ft", "fault tolerance: heartbeat liveness \
+                             polling + optimizer-state mirroring on \
+                             rank 0 (--live, distributed fabrics)"));
+    specs.push(opt("chaos", "deterministic fault injection (--live): \
+                             seed=N[,crash=K][,first=S][,stride=D]\
+                             [,delay=P][,delay_ms=M][,dup=P]; \
+                             implies --ft", None));
+    specs.push(opt("chaos-log", "write the fault plan and recovery \
+                                 timings as JSON here (--live)", None));
     let a = parse(argv, &specs)?;
     if a.has("help") {
         println!("{}", usage(
@@ -339,6 +351,15 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     if cluster.num_gpus() < 2 {
         return Err("elastic demo needs at least 2 GPUs".into());
+    }
+    if !a.has("live")
+        && (a.has("ft")
+            || a.get("chaos").is_some()
+            || a.get("chaos-log").is_some())
+    {
+        return Err("--ft / --chaos / --chaos-log apply to --live \
+                    sessions only"
+            .into());
     }
     if a.has("live") {
         return cmd_elastic_live(&a, cluster);
@@ -441,6 +462,8 @@ fn cmd_elastic_live(
         fabric,
         shard_params: a.has("shard-params"),
         plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
+        ft: a.has("ft"),
+        chaos: a.get("chaos").map(String::from),
         ..Default::default()
     };
     let cluster_name = cluster.name.clone();
@@ -481,11 +504,72 @@ fn cmd_elastic_live(
         session.steps_run(),
         reports.len()
     );
+    if !session.recoveries.is_empty() {
+        let mut rt = Table::new(
+            "Fault recoveries (heartbeat detection, cached re-plan, \
+             wire migration)",
+            &["hour", "step", "dead ranks", "gpus after", "detect (ms)",
+              "replan (ms)", "migrate (ms)"],
+        );
+        for r in &session.recoveries {
+            rt.add_row(vec![
+                r.hour.to_string(),
+                r.step.to_string(),
+                format!("{:?}", r.ranks),
+                r.gpus.to_string(),
+                format!("{:.2}", r.detect_ms),
+                format!("{:.2}", r.replan_ms),
+                format!("{:.2}", r.migrate_ms),
+            ]);
+        }
+        println!("{}", rt.render());
+    }
+    if let Some(path) = a.get("chaos-log") {
+        write_chaos_log(path, &session)?;
+        println!("chaos log written to {path}");
+    }
     session.save_plan_cache().map_err(|e| e.to_string())?;
     if let Some(p) = a.get("plan-cache") {
         println!("plan cache persisted to {p}");
     }
     Ok(())
+}
+
+/// `--chaos-log`: the generated fault plan plus per-recovery timings,
+/// serialized as one JSON object (the CI chaos-smoke artifact).
+fn write_chaos_log(path: &str, session: &Session) -> Result<(), String> {
+    use std::collections::BTreeMap;
+
+    use crate::util::json::Json;
+
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "fault_plan".to_string(),
+        session.fault_plan().map_or(Json::Null, FaultPlan::to_json),
+    );
+    let recoveries: Vec<Json> = session
+        .recoveries
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("hour".to_string(), Json::Num(r.hour as f64));
+            o.insert("step".to_string(), Json::Num(r.step as f64));
+            o.insert(
+                "dead_ranks".to_string(),
+                Json::Arr(
+                    r.ranks.iter().map(|x| Json::Num(*x as f64)).collect(),
+                ),
+            );
+            o.insert("gpus_after".to_string(), Json::Num(r.gpus as f64));
+            o.insert("detect_ms".to_string(), Json::Num(r.detect_ms));
+            o.insert("replan_ms".to_string(), Json::Num(r.replan_ms));
+            o.insert("migrate_ms".to_string(), Json::Num(r.migrate_ms));
+            Json::Obj(o)
+        })
+        .collect();
+    obj.insert("recoveries".to_string(), Json::Arr(recoveries));
+    std::fs::write(path, Json::Obj(obj).render())
+        .map_err(|e| e.to_string())
 }
 
 fn cmd_profile(argv: &[String]) -> Result<(), String> {
@@ -799,6 +883,9 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             None),
         opt("connect", "coordinator rendezvous address (host:port)", None),
         opt("world", "total rank count including the coordinator", None),
+        opt("chaos", "deterministic fault injection spec (forwarded by \
+                      the coordinator; an injected crash aborts this \
+                      process)", None),
         switch("help", "show usage"),
     ];
     let a = parse(argv, &specs)?;
@@ -815,7 +902,21 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
     let world = a.get_usize("world").ok_or("--world is required")?;
     let t = transport::tcp::connect(addr, rank, world)
         .map_err(|e| e.to_string())?;
-    transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
+    match a.get("chaos") {
+        Some(spec) => {
+            let (seed, ccfg) =
+                ChaosConfig::parse(spec).map_err(|e| e.to_string())?;
+            let plan = FaultPlan::generate(seed, world, &ccfg);
+            // Abort mode: an injected crash is a real process death
+            // (exit 137, as if kill -9), so the coordinator exercises
+            // the same detection path a preempted instance would.
+            let t = ChaosTransport::new(t, &plan, CrashMode::Abort);
+            transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
+        }
+        None => {
+            transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
+        }
+    }
 }
 
 /// Stand up the PJRT-backed trainer (`--backend pjrt`).
@@ -1022,6 +1123,46 @@ mod tests {
                                 "BERT-Large", "--batch", "32",
                                 "--events", "2", "--steps", "1"])),
             0
+        );
+    }
+
+    #[test]
+    fn elastic_live_chaos_session_recovers_and_logs() {
+        let log = std::env::temp_dir().join("cephalo_chaos_cli.json");
+        let log_s = log.to_str().unwrap().to_string();
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--live", "--transport",
+                                "local", "--cluster", "a", "--model",
+                                "BERT-Large", "--batch", "32",
+                                "--events", "3", "--steps", "2",
+                                "--chaos",
+                                "seed=5,crash=1,first=1,delay=0,dup=0",
+                                "--chaos-log", &log_s])),
+            0
+        );
+        let text = std::fs::read_to_string(&log).unwrap();
+        std::fs::remove_file(&log).ok();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert!(j.get("fault_plan").is_some());
+        let recs = j.get("recoveries").unwrap().as_arr().unwrap();
+        assert!(!recs.is_empty(), "chaos crash must be recovered from");
+        assert!(recs[0].get("detect_ms").is_some());
+    }
+
+    #[test]
+    fn chaos_flags_require_a_live_distributed_session() {
+        // Chaos on the offline churn demo is meaningless.
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--cluster", "a", "--chaos",
+                                "seed=1"])),
+            1
+        );
+        // ... and the in-process fabric has no ranks to kill.
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--live", "--cluster", "a",
+                                "--batch", "32", "--events", "1",
+                                "--steps", "1", "--chaos", "seed=1"])),
+            1
         );
     }
 

@@ -33,9 +33,20 @@
 //!    executed as rank-to-rank wire traffic. Both engines produce
 //!    bit-identical trajectories (DESIGN.md invariant 10).
 
+//! Fault tolerance: with [`SessionConfig::ft`] (or a chaos spec) on a
+//! distributed fabric, the session polls the driver's failure detector
+//! before every migration and every step. A detected-dead rank is
+//! synthesized into the SAME elastic departure path as a trace-driven
+//! shrink — re-plan via the cache, wire-migrate with rank 0's mirror
+//! substituting for the corpse — so a crash-recovered session is
+//! bitwise identical to one that planned the same membership change
+//! gracefully (DESIGN.md invariant 12). Dead ranks clamp `max_live`,
+//! so later regrow events never re-admit a corpse.
+
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cluster::{aws_trace, Cluster, Node};
 use crate::coordinator::{elastic, Workload};
@@ -45,7 +56,9 @@ use crate::plan::{PlanCache, Planner};
 use crate::sharding::ShardLayout;
 use crate::trainer::adam::{AdamConfig, AdamShard};
 use crate::trainer::{StepStats, TrainConfig, Trainer};
-use crate::transport::{DistConfig, DistDriver, FabricSpec};
+use crate::transport::{
+    ChaosConfig, ChaosOpts, DistConfig, DistDriver, FabricSpec, FaultPlan,
+};
 use crate::util::error::{anyhow, Result};
 
 /// Session configuration. `model`/`batch` drive the PLANNING scale
@@ -80,6 +93,16 @@ pub struct SessionConfig {
     /// [`Session::save_plan_cache`] — recurring memberships stay warm
     /// across restarts.
     pub plan_cache_path: Option<PathBuf>,
+    /// Fault-tolerant mode (distributed fabrics only): keep the rank-0
+    /// state mirror, probe liveness at step boundaries, and recover
+    /// detected-dead ranks through the elastic departure path. Implied
+    /// by `chaos`.
+    pub ft: bool,
+    /// Deterministic fault injection: a `seed=N[,crash=..,..]` spec
+    /// (see [`ChaosConfig::parse`]) wrapping every worker endpoint in a
+    /// seeded [`crate::transport::ChaosTransport`]. Requires a
+    /// distributed fabric.
+    pub chaos: Option<String>,
 }
 
 impl Default for SessionConfig {
@@ -95,6 +118,8 @@ impl Default for SessionConfig {
             fabric: None,
             shard_params: false,
             plan_cache_path: None,
+            ft: false,
+            chaos: None,
         }
     }
 }
@@ -126,6 +151,39 @@ pub struct EventReport {
     pub measured_steps_per_sec: f64,
 }
 
+/// What one crash recovery did (ft sessions; one entry per
+/// failure-detector poll that found newly dead ranks).
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Trace hour of the enclosing churn event.
+    pub hour: usize,
+    /// Global steps executed when the failure was detected.
+    pub step: usize,
+    /// The newly dead ranks, ascending.
+    pub ranks: Vec<usize>,
+    /// Membership size after recovery.
+    pub gpus: usize,
+    /// Wall time the liveness poll took to return the verdict.
+    pub detect_ms: f64,
+    /// Wall time of the (cache-assisted) re-plan; 0 when the dead
+    /// ranks were standby and no migration was needed.
+    pub replan_ms: f64,
+    /// Wall time of the wire migration; 0 when no migration was
+    /// needed.
+    pub migrate_ms: f64,
+}
+
+/// Re-plan + migrate bookkeeping shared by churn events and crash
+/// recovery.
+struct MigrationStats {
+    from_cache: bool,
+    solve_seconds: f64,
+    migration_bytes: f64,
+    moved: usize,
+    replan_ms: f64,
+    migrate_ms: f64,
+}
+
 /// The training engine behind a session: one address space, or one
 /// SPMD rank per GPU over a transport fabric (boxed: both engines are
 /// field-heavy).
@@ -146,7 +204,14 @@ pub struct Session {
     engine: Engine,
     current_size: usize,
     current_asg: Assignment,
+    /// Largest membership the session may still use: `min(dead) ` over
+    /// every rank declared dead (dead ranks are never re-admitted, and
+    /// memberships must stay canonical prefixes).
+    max_live: usize,
+    /// The generated fault schedule, when chaos injection is on.
+    fault_plan: Option<FaultPlan>,
     pub reports: Vec<EventReport>,
+    pub recoveries: Vec<RecoveryReport>,
 }
 
 /// The first `k` GPUs of `base` in canonical (node, slot) order,
@@ -246,8 +311,15 @@ impl Session {
                 StepTimeModel::from_oracle(&w.oracle, w.model.layers);
             (asg, workers, timer)
         };
+        let mut fault_plan = None;
         let engine = match cfg.fabric {
             None => {
+                if cfg.ft || cfg.chaos.is_some() {
+                    return Err(anyhow!(
+                        "fault tolerance / chaos need a distributed \
+                         fabric (--transport local|tcp)"
+                    ));
+                }
                 let exec = NativeExecutor::new(cfg.surrogate.clone())
                     .with_timer(timer);
                 let tcfg = TrainConfig {
@@ -271,10 +343,25 @@ impl Session {
                     corpus_branch: 4,
                     surrogate: cfg.surrogate.clone(),
                     shard_params: cfg.shard_params,
+                    ft: cfg.ft || cfg.chaos.is_some(),
+                };
+                let chaos = match &cfg.chaos {
+                    Some(chaos_spec) => {
+                        let (cseed, ccfg) = ChaosConfig::parse(chaos_spec)?;
+                        let plan = FaultPlan::generate(cseed, n, &ccfg);
+                        fault_plan = Some(plan.clone());
+                        Some(ChaosOpts {
+                            plan,
+                            cli_spec: Some(chaos_spec.clone()),
+                        })
+                    }
+                    None => None,
                 };
                 Engine::Dist(Box::new(
-                    DistDriver::launch(spec, n, dcfg, workers)?
-                        .with_timer(timer),
+                    DistDriver::launch_with_chaos(
+                        spec, n, dcfg, workers, chaos,
+                    )?
+                    .with_timer(timer),
                 ))
             }
         };
@@ -287,7 +374,10 @@ impl Session {
             engine,
             current_size: n,
             current_asg: asg,
+            max_live: n,
+            fault_plan,
             reports: Vec::new(),
+            recoveries: Vec::new(),
         })
     }
 
@@ -313,12 +403,11 @@ impl Session {
             .collect()
     }
 
-    /// One full churn event: re-plan for `size` GPUs, migrate the live
-    /// training state onto the new layout, resume for
-    /// `steps_per_event` steps.
-    pub fn step_event(&mut self, hour: usize, size: usize)
-        -> Result<EventReport> {
-        let size = size.clamp(1, self.base.num_gpus());
+    /// Re-plan for `size` GPUs and migrate the engine onto the new
+    /// layout — the shared backbone of churn events AND crash
+    /// recovery. Updates `current_asg`/`current_size`.
+    fn replan_and_migrate(&mut self, size: usize)
+        -> Result<MigrationStats> {
         // Prefix memberships: new rank i is the same physical GPU as
         // old rank i while it existed; ranks past the old size are
         // fresh arrivals (checkpoint-restore targets).
@@ -332,6 +421,7 @@ impl Session {
             self.cfg.seed,
             size,
         )?;
+        let t_plan = Instant::now();
         let (re, names) = {
             let old_w = &self.workloads[&self.current_size];
             let new_w = &self.workloads[&size];
@@ -352,6 +442,7 @@ impl Session {
                 .collect();
             (re, names)
         };
+        let replan_ms = t_plan.elapsed().as_secs_f64() * 1e3;
 
         // Executed-scale migration: same r_i division, applied to the
         // engine's actual flat state. A recurring membership that
@@ -360,6 +451,7 @@ impl Session {
         // churn entirely.
         let unchanged = size == self.current_size
             && re.assignment == self.current_asg;
+        let t_mig = Instant::now();
         let moved = if unchanged {
             0
         } else {
@@ -429,34 +521,109 @@ impl Session {
                 Engine::Dist(driver) => {
                     // The SAME transfer list, executed as rank-to-rank
                     // wire traffic (peer copies; departed owners are
-                    // standby processes that re-stream their ranges —
+                    // standby processes — or, once declared dead, the
+                    // rank-0 mirror — re-streaming their ranges,
                     // numerically the checkpoint restore).
                     driver.migrate(workers, &survivors, &transfers)?;
                 }
             }
             moved
         };
-
-        // Resume training on the migrated state.
-        let step_base = self.steps_run();
-        let mut loss_acc = 0f64;
-        let mut secs_model = 0f64;
-        let mut secs_measured = 0f64;
-        for s in 0..self.cfg.steps_per_event {
-            let st = self.step_once(step_base + s)?;
-            loss_acc += st.mean_loss;
-            secs_model += st.wall_seconds;
-            secs_measured += st.measured_seconds;
-        }
-        let steps = self.cfg.steps_per_event;
-        let report = EventReport {
-            event: self.reports.len(),
-            hour,
-            gpus: size,
+        let migrate_ms = t_mig.elapsed().as_secs_f64() * 1e3;
+        let stats = MigrationStats {
             from_cache: re.from_cache,
             solve_seconds: re.solve_seconds,
             migration_bytes: re.migration_bytes(),
-            moved_state_elems: moved,
+            moved,
+            replan_ms,
+            migrate_ms,
+        };
+        self.current_asg = re.assignment;
+        self.current_size = size;
+        Ok(stats)
+    }
+
+    /// Poll the distributed failure detector and recover from any
+    /// newly dead ranks: clamp `max_live`, and — when a dead rank is
+    /// inside the current membership — synthesize the SAME elastic
+    /// departure a graceful shrink would take (re-plan + wire migrate
+    /// with the mirror standing in for the corpse). No-op on
+    /// in-process engines and non-ft drivers.
+    fn recover_failures(&mut self, hour: usize) -> Result<()> {
+        let t_detect = Instant::now();
+        let newly = match &mut self.engine {
+            Engine::Dist(d) => d.poll_failures(),
+            Engine::InProcess(_) => Vec::new(),
+        };
+        if newly.is_empty() {
+            return Ok(());
+        }
+        let detect_ms = t_detect.elapsed().as_secs_f64() * 1e3;
+        for &d in &newly {
+            if d == 0 {
+                return Err(anyhow!("coordinator rank cannot die"));
+            }
+            self.max_live = self.max_live.min(d);
+        }
+        crate::warn!(
+            "rank(s) {newly:?} declared dead at step {}; max membership \
+             now {}",
+            self.steps_run(),
+            self.max_live
+        );
+        let (replan_ms, migrate_ms) = if self.current_size > self.max_live
+        {
+            let st = self.replan_and_migrate(self.max_live)?;
+            (st.replan_ms, st.migrate_ms)
+        } else {
+            // Dead ranks were standby: nothing to migrate, the clamp
+            // alone keeps them out of future memberships.
+            (0.0, 0.0)
+        };
+        self.recoveries.push(RecoveryReport {
+            hour,
+            step: self.steps_run(),
+            ranks: newly,
+            gpus: self.current_size,
+            detect_ms,
+            replan_ms,
+            migrate_ms,
+        });
+        Ok(())
+    }
+
+    /// One full churn event: re-plan for `size` GPUs, migrate the live
+    /// training state onto the new layout, resume for
+    /// `steps_per_event` steps. In ft mode the failure detector is
+    /// polled before the migration and before every step, so a crash
+    /// surfaces as a synthesized departure at the next step boundary.
+    pub fn step_event(&mut self, hour: usize, size: usize)
+        -> Result<EventReport> {
+        self.recover_failures(hour)?;
+        let size = size.clamp(1, self.max_live);
+        let st = self.replan_and_migrate(size)?;
+
+        // Resume training on the migrated state.
+        let mut loss_acc = 0f64;
+        let mut secs_model = 0f64;
+        let mut secs_measured = 0f64;
+        let mut steps = 0usize;
+        for _ in 0..self.cfg.steps_per_event {
+            self.recover_failures(hour)?;
+            let stats = self.step_once(self.steps_run())?;
+            steps += 1;
+            loss_acc += stats.mean_loss;
+            secs_model += stats.wall_seconds;
+            secs_measured += stats.measured_seconds;
+        }
+        let report = EventReport {
+            event: self.reports.len(),
+            hour,
+            gpus: self.current_size,
+            from_cache: st.from_cache,
+            solve_seconds: st.solve_seconds,
+            migration_bytes: st.migration_bytes,
+            moved_state_elems: st.moved,
             steps,
             mean_loss: if steps > 0 { loss_acc / steps as f64 } else { 0.0 },
             steps_per_sec: if secs_model > 0.0 {
@@ -470,8 +637,6 @@ impl Session {
                 0.0
             },
         };
-        self.current_asg = re.assignment;
-        self.current_size = size;
         self.reports.push(report.clone());
         Ok(report)
     }
@@ -562,6 +727,16 @@ impl Session {
     pub fn current_size(&self) -> usize {
         self.current_size
     }
+
+    /// Largest membership still admissible (shrinks as ranks die).
+    pub fn max_live(&self) -> usize {
+        self.max_live
+    }
+
+    /// The generated chaos schedule, when fault injection is on.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault_plan.as_ref()
+    }
 }
 
 #[cfg(test)]
@@ -650,6 +825,71 @@ mod tests {
         assert!(up.moved_state_elems > 0);
         // Re-entering a seen membership is a cache hit.
         assert!(up.from_cache);
+    }
+
+    #[test]
+    fn chaos_session_recovers_and_stays_on_the_reference_trajectory() {
+        // Tentpole closure at the session level: a local-fabric ft
+        // session with an injected rank-1 crash turns the death into a
+        // synthesized shrink (mirror-backed wire migration), clamps
+        // future memberships below the corpse, and stays bitwise on
+        // the in-process session's trajectory (invariants 10 + 12).
+        let cfg = |fabric, chaos: Option<&str>| SessionConfig {
+            batch: 8,
+            steps_per_event: 2,
+            seed: 7,
+            min_gpus: 1,
+            fabric,
+            chaos: chaos.map(|s| s.into()),
+            ..Default::default()
+        };
+        let mut chaotic = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg(
+                Some(FabricSpec::Local),
+                Some("seed=5,crash=1,first=1,delay=0,dup=0"),
+            ),
+        )
+        .unwrap();
+        let mut reference = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg(None, None),
+        )
+        .unwrap();
+        for hour in 0..3 {
+            chaotic.step_event(hour, 2).unwrap();
+            reference.step_event(hour, 2).unwrap();
+        }
+        // Rank 1 crashed after completing global step 1; the next
+        // boundary poll caught it.
+        assert_eq!(chaotic.recoveries.len(), 1);
+        assert_eq!(chaotic.recoveries[0].ranks, vec![1]);
+        assert_eq!(chaotic.recoveries[0].step, 2);
+        assert_eq!(chaotic.max_live(), 1);
+        assert_eq!(chaotic.current_size(), 1, "corpse never re-admitted");
+        assert!(chaotic.fault_plan().is_some());
+        assert_eq!(chaotic.steps_run(), reference.steps_run());
+        assert_eq!(
+            chaotic.params().unwrap(),
+            reference.params().unwrap(),
+            "crash-recovered session left the reference trajectory"
+        );
+    }
+
+    #[test]
+    fn chaos_without_a_fabric_is_rejected() {
+        let cfg = SessionConfig {
+            chaos: Some("seed=1".into()),
+            ..Default::default()
+        };
+        assert!(Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            cfg
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,7 +11,9 @@
 
 use crate::collectives;
 use crate::sharding::ShardLayout;
-use crate::transport::{self, LocalFabric, Transport};
+use crate::transport::{
+    self, ChaosTransport, CrashMode, FaultPlan, LocalFabric, Transport,
+};
 use crate::util::error::{anyhow, Result};
 
 /// What the trainer needs from a collective substrate.
@@ -103,6 +105,37 @@ impl FabricRing {
     /// TCP-loopback fabric for `world` ranks (threaded handshake).
     pub fn tcp_loopback(world: usize) -> Result<FabricRing> {
         FabricRing::new(transport::tcp::thread_fabric(world)?)
+    }
+
+    /// Wrap every endpoint in deterministic fault injection driven by
+    /// `plan` (per-rank seeded delay/dup noise; crashes surface as
+    /// typed errors). Injected faults must be bitwise-invisible to the
+    /// collectives — DESIGN.md invariant 10 extended to a lossy-looking
+    /// wire — which the parity tests assert against the clean engines.
+    pub fn chaotic(
+        endpoints: Vec<Box<dyn Transport>>,
+        plan: &FaultPlan,
+    ) -> Result<FabricRing> {
+        let eps = endpoints
+            .into_iter()
+            .map(|e| {
+                Box::new(ChaosTransport::new(e, plan, CrashMode::Error))
+                    as Box<dyn Transport>
+            })
+            .collect();
+        FabricRing::new(eps)
+    }
+
+    /// Channel-backed fabric with chaos middleware on every rank.
+    pub fn chaotic_local(
+        world: usize,
+        plan: &FaultPlan,
+    ) -> Result<FabricRing> {
+        let eps = LocalFabric::new(world)
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Transport>)
+            .collect();
+        FabricRing::chaotic(eps, plan)
     }
 
     fn check_group(&self, layout: &ShardLayout) -> Result<usize> {
@@ -220,6 +253,42 @@ mod tests {
             assert_eq!(rs, expect_rs, "{} RS diverged", engine.name());
             let ag = engine.allgather(&shards, &layout).unwrap();
             assert_eq!(ag, expect_ag, "{} AG diverged", engine.name());
+        }
+    }
+
+    #[test]
+    fn chaotic_fabric_matches_the_clean_engines_bitwise() {
+        // Delay + duplicate noise on every rank of both wire fabrics.
+        // Invariant 10 extended: a lossy-looking wire is still bitwise
+        // invisible to the collectives.
+        let (layout, full, shards) = layout_and_data();
+        let mut inproc = InProcessRing;
+        let expect_rs = inproc.reduce_scatter(&full, &layout).unwrap();
+        let expect_ag = inproc.allgather(&shards, &layout).unwrap();
+        let plan = FaultPlan::generate(
+            21,
+            3,
+            &crate::transport::ChaosConfig {
+                crash_ranks: 0,
+                first_crash_step: 0,
+                crash_step_stride: 1,
+                delay_prob: 0.5,
+                max_delay_ms: 1,
+                dup_prob: 0.5,
+            },
+        );
+        for mut engine in [
+            FabricRing::chaotic_local(3, &plan).unwrap(),
+            FabricRing::chaotic(
+                transport::tcp::thread_fabric(3).unwrap(),
+                &plan,
+            )
+            .unwrap(),
+        ] {
+            let rs = engine.reduce_scatter(&full, &layout).unwrap();
+            assert_eq!(rs, expect_rs, "{} chaotic RS diverged", engine.name());
+            let ag = engine.allgather(&shards, &layout).unwrap();
+            assert_eq!(ag, expect_ag, "{} chaotic AG diverged", engine.name());
         }
     }
 

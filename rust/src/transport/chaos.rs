@@ -1,0 +1,566 @@
+//! Deterministic fault injection: [`ChaosTransport`] wraps any fabric
+//! and perturbs it according to a seeded, replayable [`FaultPlan`].
+//!
+//! The injected fault classes, and why each is safe to replay:
+//!
+//! * **delay** — seeded per-rank sleeps before sends/receives. Purely
+//!   temporal: bitwise-invisible by construction, so delay-only chaos
+//!   must leave every trajectory identical (tested in
+//!   `tests/transport_parity.rs`).
+//! * **duplicate** — after a send, re-transmit the last frame
+//!   byte-for-byte via [`Transport::resend_last`]. The TCP receiver's
+//!   sequence dedup drops it; fabrics without wire-level dedup no-op
+//!   the resend. Either way: invisible.
+//! * **corrupt** — flip one byte of an outgoing frame AFTER its CRC
+//!   was computed ([`Transport::corrupt_next_send`]). Restricted to
+//!   PING replies so the corruption-⇒-death conversion always lands at
+//!   a step boundary — the victim has already delivered its step
+//!   results, so recovery stays bitwise.
+//! * **crash** — after fully completing step `k` (reply and
+//!   fault-tolerance sync sent), the rank dies on its next command
+//!   fetch: [`CrashMode::Error`] returns a typed
+//!   [`TransportError::ChaosCrash`] (thread-mode workers), while
+//!   [`CrashMode::Abort`] calls `std::process::exit(137)` — a genuine
+//!   abrupt process death, socket torn down mid-mesh, exactly what
+//!   `kill -9` leaves behind.
+//! * **drop-shutdown** — swallow the coordinator's SHUTDOWN frame, the
+//!   lost-teardown-message case that used to hang
+//!   `DistDriver::shutdown` (regression-tested in
+//!   `tests/dist_session.rs`).
+//!
+//! Crash faults only make sense on worker ranks (rank 0 is the
+//! coordinator), and the step counter is driven by DECODING the
+//! coordinator's step commands off the wire — the middleware needs no
+//! cooperation from the training code, so the same wrapper serves
+//! thread workers, process workers and bare fabric tests.
+
+use crate::transport::dist::{OP_PING, OP_SHUTDOWN, OP_STEP};
+use crate::transport::{Transport, TransportError};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+
+/// Seed-mixing constant for [`FaultPlan::generate`] (so a chaos seed
+/// never collides with the training seed's streams).
+const PLAN_SEED_MIX: u64 = 0xC4A0_5F00;
+
+/// What a crash fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashMode {
+    /// Return a typed [`TransportError::ChaosCrash`] from the command
+    /// fetch — the thread-worker form (a process exit would kill the
+    /// whole test harness).
+    Error,
+    /// `std::process::exit(137)` — the process-worker form; 137 is the
+    /// shell's code for SIGKILL, because that is what this simulates.
+    Abort,
+}
+
+/// The faults assigned to one rank. All fields public so tests can
+/// construct precise schedules directly; [`FaultPlan::generate`]
+/// derives them from a seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankFaults {
+    pub rank: usize,
+    /// Crash on the next command fetch after COMPLETING this global
+    /// step (the reply and ft-sync frames for the step are already
+    /// out).
+    pub crash_after_step: Option<u64>,
+    /// Corrupt the next PING reply once this global step has
+    /// completed.
+    pub corrupt_pong_after_step: Option<u64>,
+    /// Swallow the coordinator's SHUTDOWN frame.
+    pub drop_shutdown: bool,
+    /// Probability of a seeded sleep before each transport op.
+    pub delay_prob: f64,
+    /// Sleeps are uniform in `0..=max_delay_ms` milliseconds.
+    pub max_delay_ms: u64,
+    /// Probability of re-transmitting a frame after sending it.
+    pub dup_prob: f64,
+}
+
+impl RankFaults {
+    /// No faults at all for `rank`.
+    pub fn quiet(rank: usize) -> Self {
+        RankFaults {
+            rank,
+            crash_after_step: None,
+            corrupt_pong_after_step: None,
+            drop_shutdown: false,
+            delay_prob: 0.0,
+            max_delay_ms: 0,
+            dup_prob: 0.0,
+        }
+    }
+
+    fn is_quiet(&self) -> bool {
+        self == &RankFaults::quiet(self.rank)
+    }
+}
+
+/// Knobs for [`FaultPlan::generate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// How many of the HIGHEST worker ranks receive crash faults.
+    /// Crashing top-down keeps every surviving membership a canonical
+    /// prefix, which is what lets recovery reuse the graceful-churn
+    /// machinery unchanged (DESIGN.md §Fault model).
+    pub crash_ranks: usize,
+    /// Global step after which the first (highest) rank crashes.
+    pub first_crash_step: u64,
+    /// Minimum spacing between successive crash steps; the generator
+    /// adds seeded jitter on top.
+    pub crash_step_stride: u64,
+    pub delay_prob: f64,
+    pub max_delay_ms: u64,
+    pub dup_prob: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            crash_ranks: 1,
+            first_crash_step: 1,
+            crash_step_stride: 2,
+            delay_prob: 0.05,
+            max_delay_ms: 2,
+            dup_prob: 0.05,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse a CLI chaos spec: comma-separated `key=value` pairs with
+    /// a mandatory `seed` — e.g. `seed=7,crash=2,first=1,stride=2`.
+    /// Returns `(seed, config)`.
+    pub fn parse(spec: &str) -> Result<(u64, ChaosConfig)> {
+        let mut seed: Option<u64> = None;
+        let mut cfg = ChaosConfig::default();
+        fn parsed<V: std::str::FromStr>(
+            key: &str,
+            value: &str,
+        ) -> Result<V>
+        where
+            V::Err: std::fmt::Display,
+        {
+            value.parse().map_err(|e| {
+                crate::anyhow!("chaos {key}={value}: {e}")
+            })
+        }
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                crate::anyhow!("chaos spec `{part}` is not key=value")
+            })?;
+            match key {
+                "seed" => seed = Some(parsed(key, value)?),
+                "crash" => cfg.crash_ranks = parsed(key, value)?,
+                "first" => cfg.first_crash_step = parsed(key, value)?,
+                "stride" => cfg.crash_step_stride = parsed(key, value)?,
+                "delay" => cfg.delay_prob = parsed(key, value)?,
+                "delay_ms" => cfg.max_delay_ms = parsed(key, value)?,
+                "dup" => cfg.dup_prob = parsed(key, value)?,
+                _ => {
+                    return Err(crate::anyhow!(
+                        "unknown chaos key `{key}` (try seed/crash/first/\
+                         stride/delay/delay_ms/dup)"
+                    ))
+                }
+            }
+        }
+        let seed = seed
+            .ok_or_else(|| crate::anyhow!("chaos spec needs seed=<n>"))?;
+        Ok((seed, cfg))
+    }
+}
+
+/// A complete, replayable fault schedule for one world. Equality is
+/// structural, so "same seed ⇒ same plan" is directly assertable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// `faults[rank]` — rank 0 (the coordinator) is always quiet.
+    pub faults: Vec<RankFaults>,
+}
+
+impl FaultPlan {
+    /// An all-quiet plan (tests mutate individual ranks for precise
+    /// schedules).
+    pub fn quiet(world: usize) -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            faults: (0..world).map(RankFaults::quiet).collect(),
+        }
+    }
+
+    /// Derive a schedule from `seed`: crashes on the HIGHEST worker
+    /// ranks at strictly increasing step thresholds (seeded jitter on
+    /// the spacing), delay/dup noise on every worker. Pure in
+    /// `(seed, world, cfg)` — the replayability contract.
+    pub fn generate(seed: u64, world: usize, cfg: &ChaosConfig) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ PLAN_SEED_MIX);
+        let mut faults: Vec<RankFaults> =
+            (0..world).map(RankFaults::quiet).collect();
+        for f in faults.iter_mut().skip(1) {
+            f.delay_prob = cfg.delay_prob;
+            f.max_delay_ms = cfg.max_delay_ms;
+            f.dup_prob = cfg.dup_prob;
+        }
+        let n_crash = cfg.crash_ranks.min(world.saturating_sub(1));
+        let mut step = cfg.first_crash_step;
+        for i in 0..n_crash {
+            faults[world - 1 - i].crash_after_step = Some(step);
+            let stride = cfg.crash_step_stride.max(1);
+            step += stride + rng.range(0, stride as usize + 1) as u64;
+        }
+        FaultPlan { seed, faults }
+    }
+
+    pub fn world(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// The faults for one rank (quiet if out of range).
+    pub fn for_rank(&self, rank: usize) -> RankFaults {
+        self.faults
+            .get(rank)
+            .cloned()
+            .unwrap_or_else(|| RankFaults::quiet(rank))
+    }
+
+    /// Render the schedule for the chaos-smoke JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("seed".into(), Json::Num(self.seed as f64));
+        let ranks: Vec<Json> = self
+            .faults
+            .iter()
+            .filter(|f| !f.is_quiet())
+            .map(|f| {
+                let mut o = BTreeMap::new();
+                o.insert("rank".into(), Json::Num(f.rank as f64));
+                if let Some(s) = f.crash_after_step {
+                    o.insert("crash_after_step".into(), Json::Num(s as f64));
+                }
+                if let Some(s) = f.corrupt_pong_after_step {
+                    o.insert(
+                        "corrupt_pong_after_step".into(),
+                        Json::Num(s as f64),
+                    );
+                }
+                if f.drop_shutdown {
+                    o.insert("drop_shutdown".into(), Json::Bool(true));
+                }
+                if f.delay_prob > 0.0 {
+                    o.insert("delay_prob".into(), Json::Num(f.delay_prob));
+                    o.insert(
+                        "max_delay_ms".into(),
+                        Json::Num(f.max_delay_ms as f64),
+                    );
+                }
+                if f.dup_prob > 0.0 {
+                    o.insert("dup_prob".into(), Json::Num(f.dup_prob));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("faults".into(), Json::Arr(ranks));
+        Json::Obj(obj)
+    }
+}
+
+/// Fault-injecting middleware over any [`Transport`] (see module
+/// docs). One wrapper per endpoint, carrying that rank's slice of the
+/// plan plus a rank-forked RNG for the probabilistic faults.
+pub struct ChaosTransport<T: Transport> {
+    inner: T,
+    faults: RankFaults,
+    mode: CrashMode,
+    rng: Rng,
+    /// Set once the step named by `crash_after_step` has been decoded;
+    /// the NEXT command fetch dies.
+    crash_armed: bool,
+    /// Step threshold seen for `corrupt_pong_after_step`; the next
+    /// PING reply goes out corrupted.
+    corrupt_armed: bool,
+    /// The step index that armed the crash (for the typed error).
+    armed_at_step: u64,
+}
+
+impl<T: Transport> ChaosTransport<T> {
+    /// Wrap `inner` with its rank's faults from `plan`.
+    pub fn new(inner: T, plan: &FaultPlan, mode: CrashMode) -> Self {
+        let rank = inner.rank();
+        let faults = plan.for_rank(rank);
+        // Per-rank stream: same plan seed, disjoint delay/dup draws.
+        let rng = Rng::new(
+            plan.seed ^ PLAN_SEED_MIX ^ (rank as u64).wrapping_mul(0x9E37),
+        );
+        ChaosTransport {
+            inner,
+            faults,
+            mode,
+            rng,
+            crash_armed: false,
+            corrupt_armed: false,
+            armed_at_step: 0,
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn maybe_delay(&mut self) {
+        if self.faults.delay_prob > 0.0
+            && self.rng.bool(self.faults.delay_prob)
+        {
+            let ms = self
+                .rng
+                .range(0, self.faults.max_delay_ms as usize + 1);
+            if ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    ms as u64,
+                ));
+            }
+        }
+    }
+
+    fn maybe_dup(&mut self, to: usize) {
+        if self.faults.dup_prob > 0.0 && self.rng.bool(self.faults.dup_prob) {
+            // Best effort: a failed duplicate is still a duplicate
+            // fault (the original went through).
+            let _ = self.inner.resend_last(to);
+        }
+    }
+
+    fn crash(&mut self) -> crate::util::error::Error {
+        if self.mode == CrashMode::Abort {
+            // Simulated kill -9: no unwinding, no socket teardown
+            // beyond what the OS does for a dead process.
+            std::process::exit(137);
+        }
+        TransportError::ChaosCrash {
+            rank: self.inner.rank(),
+            step: self.armed_at_step,
+        }
+        .into()
+    }
+
+    /// Inspect a command frame from the coordinator: advance the step
+    /// counter and arm step-keyed faults. Returns `false` if the frame
+    /// must be SWALLOWED (drop-shutdown fault).
+    fn observe_command(&mut self, frame: &[u8]) -> bool {
+        match frame.first() {
+            Some(&OP_STEP) if frame.len() >= 9 => {
+                let step = u64::from_le_bytes(
+                    frame[1..9].try_into().expect("8 bytes"),
+                );
+                if self.faults.crash_after_step == Some(step) {
+                    self.crash_armed = true;
+                    self.armed_at_step = step;
+                }
+                if self.faults.corrupt_pong_after_step == Some(step) {
+                    self.corrupt_armed = true;
+                }
+                true
+            }
+            Some(&OP_SHUTDOWN) if self.faults.drop_shutdown => false,
+            _ => true,
+        }
+    }
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    fn backend(&self) -> &'static str {
+        self.inner.backend()
+    }
+
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world_size(&self) -> usize {
+        self.inner.world_size()
+    }
+
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        self.maybe_delay();
+        self.inner.send_f32(to, data)?;
+        self.maybe_dup(to);
+        Ok(())
+    }
+
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        self.maybe_delay();
+        self.inner.recv_f32(from)
+    }
+
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        self.maybe_delay();
+        if to == 0
+            && self.corrupt_armed
+            && data.first() == Some(&OP_PING)
+        {
+            // Corrupt exactly one PING reply, then disarm: the
+            // coordinator's CRC check converts this into a dead-rank
+            // verdict at a clean step boundary.
+            self.corrupt_armed = false;
+            self.inner.corrupt_next_send(0);
+        }
+        self.inner.send_bytes(to, data)?;
+        self.maybe_dup(to);
+        Ok(())
+    }
+
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        loop {
+            if from == 0 && self.crash_armed {
+                return Err(self.crash());
+            }
+            self.maybe_delay();
+            let frame = self.inner.recv_bytes(from)?;
+            if from == 0 && !self.observe_command(&frame) {
+                continue; // swallowed (drop-shutdown fault)
+            }
+            return Ok(frame);
+        }
+    }
+
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        if from == 0 && self.crash_armed {
+            return Err(self.crash());
+        }
+        self.inner.recv_bytes_timeout(from, timeout_ms)
+    }
+
+    fn peer_closed(&self, rank: usize) -> bool {
+        self.inner.peer_closed(rank)
+    }
+
+    fn close(&mut self) {
+        self.inner.close();
+    }
+
+    fn resend_last(&mut self, to: usize) -> Result<()> {
+        self.inner.resend_last(to)
+    }
+
+    fn corrupt_next_send(&mut self, to: usize) {
+        self.inner.corrupt_next_send(to);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_pure_in_seed_world_and_config() {
+        let cfg = ChaosConfig { crash_ranks: 3, ..Default::default() };
+        let a = FaultPlan::generate(7, 5, &cfg);
+        let b = FaultPlan::generate(7, 5, &cfg);
+        assert_eq!(a, b, "same seed must give the same plan");
+        let c = FaultPlan::generate(8, 5, &cfg);
+        assert_ne!(a, c, "different seeds must be able to differ");
+    }
+
+    #[test]
+    fn crashes_land_on_the_highest_ranks_at_increasing_steps() {
+        let cfg = ChaosConfig { crash_ranks: 3, ..Default::default() };
+        let plan = FaultPlan::generate(42, 5, &cfg);
+        assert_eq!(plan.for_rank(0).crash_after_step, None);
+        assert_eq!(plan.for_rank(1).crash_after_step, None);
+        let s4 = plan.for_rank(4).crash_after_step.unwrap();
+        let s3 = plan.for_rank(3).crash_after_step.unwrap();
+        let s2 = plan.for_rank(2).crash_after_step.unwrap();
+        assert!(
+            s4 < s3 && s3 < s2,
+            "descending ranks must crash at increasing steps: \
+             {s4} {s3} {s2}"
+        );
+        // Crash count never exceeds the worker count.
+        let small = FaultPlan::generate(42, 2, &cfg);
+        let crashed = small
+            .faults
+            .iter()
+            .filter(|f| f.crash_after_step.is_some())
+            .count();
+        assert_eq!(crashed, 1);
+    }
+
+    #[test]
+    fn chaos_spec_parses_and_rejects_garbage() {
+        let (seed, cfg) = ChaosConfig::parse("seed=7").unwrap();
+        assert_eq!(seed, 7);
+        assert_eq!(cfg, ChaosConfig::default());
+        let (seed, cfg) =
+            ChaosConfig::parse("seed=9,crash=2,first=3,stride=4,dup=0.5")
+                .unwrap();
+        assert_eq!(seed, 9);
+        assert_eq!(cfg.crash_ranks, 2);
+        assert_eq!(cfg.first_crash_step, 3);
+        assert_eq!(cfg.crash_step_stride, 4);
+        assert_eq!(cfg.dup_prob, 0.5);
+        assert!(ChaosConfig::parse("crash=2").is_err(), "seed is required");
+        assert!(ChaosConfig::parse("seed=x").is_err());
+        assert!(ChaosConfig::parse("seed=1,zap=2").is_err());
+    }
+
+    #[test]
+    fn schedule_json_names_only_faulted_ranks() {
+        let mut plan = FaultPlan::quiet(3);
+        plan.faults[2].crash_after_step = Some(4);
+        let rendered = plan.to_json().render();
+        assert!(rendered.contains("\"crash_after_step\":4"));
+        assert!(rendered.contains("\"rank\":2"));
+        assert!(!rendered.contains("\"rank\":1"), "quiet ranks omitted");
+    }
+
+    #[test]
+    fn crash_fires_on_the_fetch_after_the_armed_step() {
+        use crate::transport::LocalFabric;
+        let mut eps = LocalFabric::new(2);
+        let worker = eps.pop().unwrap();
+        let mut driver = eps.pop().unwrap();
+        let mut plan = FaultPlan::quiet(2);
+        plan.faults[1].crash_after_step = Some(3);
+        let mut chaotic =
+            ChaosTransport::new(worker, &plan, CrashMode::Error);
+
+        // Step 3's command frame: [OP_STEP][3 u64 LE].
+        let mut cmd = vec![OP_STEP];
+        cmd.extend_from_slice(&3u64.to_le_bytes());
+        driver.send_bytes(1, &cmd).unwrap();
+        driver.send_bytes(1, &[9, 9]).unwrap(); // some later frame
+        // The armed step's own frame is DELIVERED (the worker must
+        // complete the step)...
+        assert_eq!(chaotic.recv_bytes(0).unwrap(), cmd);
+        // ...and the NEXT fetch dies with the typed error.
+        let err = chaotic.recv_bytes(0).unwrap_err().to_string();
+        assert!(
+            err.contains("chaos: rank 1 crashed after step 3"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn drop_shutdown_swallows_the_frame_and_keeps_listening() {
+        use crate::transport::LocalFabric;
+        let mut eps = LocalFabric::new(2);
+        let worker = eps.pop().unwrap();
+        let mut driver = eps.pop().unwrap();
+        let mut plan = FaultPlan::quiet(2);
+        plan.faults[1].drop_shutdown = true;
+        let mut chaotic =
+            ChaosTransport::new(worker, &plan, CrashMode::Error);
+        driver.send_bytes(1, &[OP_SHUTDOWN]).unwrap();
+        driver.send_bytes(1, &[7, 7]).unwrap();
+        // The SHUTDOWN vanished; the next frame is what surfaces.
+        assert_eq!(chaotic.recv_bytes(0).unwrap(), vec![7, 7]);
+    }
+}

@@ -29,7 +29,21 @@
 //! process that holds them — numerically identical to the in-process
 //! session's checkpoint restore. Command/data frames are FIFO per
 //! peer, so no barrier is needed between commands.
+//!
+//! Fault tolerance (`DistConfig::ft`): after every step each active
+//! worker streams its post-step Adam moments (and, fully-sharded, its
+//! weight slice) to rank 0, which folds them into a flat-indexed
+//! [`Mirror`]. When [`DistDriver::poll_failures`] declares a rank dead
+//! (closed lane, or an unanswered `PING` within the timeout), the next
+//! [`MigrateCmd`] carries the dead set and every rank substitutes rank
+//! 0's mirror for the dead owner in the transfer loop — so a crashed
+//! rank's state migrates EXACTLY like a graceful departure's, and the
+//! recovered trajectory is bitwise the never-crashed one (DESIGN.md
+//! invariant 12). Crashes are detected at step boundaries only: a rank
+//! that died mid-step fails the step itself (fail-stop), because a
+//! half-participated collective has no consistent state to recover.
 
+use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::elastic::Transfer;
@@ -39,7 +53,10 @@ use crate::sharding::ShardLayout;
 use crate::trainer::adam::{AdamConfig, AdamShard};
 use crate::trainer::data::{split_batch, Corpus};
 use crate::trainer::{flatten, unflatten, StepStats, WorkerSpec};
-use crate::transport::{collectives as wire, LocalFabric, Transport};
+use crate::transport::{
+    collectives as wire, ChaosTransport, CrashMode, FaultPlan, LocalFabric,
+    Transport,
+};
 use crate::util::error::{anyhow, Result};
 
 /// Which fabric a distributed run is built on.
@@ -93,6 +110,13 @@ pub struct DistConfig {
     /// wire AllGather (mirrors [`crate::trainer::TrainConfig`]'s flag;
     /// bitwise-identical either way).
     pub shard_params: bool,
+    /// Fault tolerance: workers stream post-step optimizer state (and,
+    /// fully-sharded, weight slices) to rank 0's [`Mirror`] every step,
+    /// and the driver probes liveness so a dead rank's ranges can be
+    /// re-streamed from the mirror (see the module docs). Off by
+    /// default — the sync costs one extra model-sized transfer per
+    /// step per rank.
+    pub ft: bool,
 }
 
 impl Default for DistConfig {
@@ -103,6 +127,7 @@ impl Default for DistConfig {
             corpus_branch: 4,
             surrogate: SurrogateSpec::default(),
             shard_params: false,
+            ft: false,
         }
     }
 }
@@ -119,18 +144,34 @@ pub struct MigrateCmd {
     pub transfers: Vec<Transfer>,
     /// Adam step counter carried onto rebuilt shards.
     pub adam_step: u64,
+    /// Ranks declared dead by the coordinator. Transfers whose
+    /// old-layout owner is in this set are served by rank 0 from the ft
+    /// [`Mirror`] instead — every rank computes the same substitution,
+    /// so nobody waits on a corpse.
+    pub dead: Vec<usize>,
 }
 
 // ---- command wire codec (length-prefixed LE, no serde) --------------
 
 const OP_INIT: u8 = 1;
-const OP_STEP: u8 = 2;
+pub(crate) const OP_STEP: u8 = 2;
 const OP_MIGRATE: u8 = 3;
-const OP_SHUTDOWN: u8 = 4;
+pub(crate) const OP_SHUTDOWN: u8 = 4;
 /// Explicit parameter export (fully-sharded runs only): every active
 /// rank streams its weight slice to rank 0, which assembles the full
 /// vector — the wire counterpart of `Trainer::gather_params`.
 const OP_COLLECT: u8 = 5;
+/// Liveness probe: the coordinator sends `[OP_PING]`, a live worker
+/// echoes `[OP_PING]` back. Pings never touch a worker's step counter,
+/// so they are transparent to the corpus-alignment desync guard.
+pub(crate) const OP_PING: u8 = 6;
+
+/// How long [`DistDriver::poll_failures`] waits for a `PING` echo
+/// before declaring the rank dead. Probes run at step boundaries when
+/// every live worker is blocked on `recv`, so a live echo arrives in
+/// microseconds; the margin covers scheduler jitter and chaos-injected
+/// delivery delays.
+const PING_TIMEOUT_MS: u64 = 2000;
 
 #[derive(Default)]
 struct W(Vec<u8>);
@@ -214,6 +255,7 @@ fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
     w.f64(cfg.adam.eps as f64);
     w.f64(cfg.adam.weight_decay as f64);
     w.u8(u8::from(cfg.shard_params));
+    w.u8(u8::from(cfg.ft));
     put_membership(&mut w, membership);
     w.0
 }
@@ -234,9 +276,10 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
         weight_decay: r.f64()? as f32,
     };
     let shard_params = r.u8()? != 0;
+    let ft = r.u8()? != 0;
     let membership = get_membership(r)?;
     Ok((
-        DistConfig { seed, adam, corpus_branch, surrogate, shard_params },
+        DistConfig { seed, adam, corpus_branch, surrogate, shard_params, ft },
         membership,
     ))
 }
@@ -256,6 +299,10 @@ fn encode_migrate(cmd: &MigrateCmd) -> Vec<u8> {
         w.u64(t.to as u64);
         w.u64(t.start as u64);
         w.u64(t.len as u64);
+    }
+    w.u64(cmd.dead.len() as u64);
+    for d in &cmd.dead {
+        w.u64(*d as u64);
     }
     w.0
 }
@@ -280,7 +327,12 @@ fn decode_migrate(r: &mut R<'_>) -> Result<MigrateCmd> {
             len: r.u64()? as usize,
         });
     }
-    Ok(MigrateCmd { new_membership, survivors, transfers, adam_step })
+    let nd = r.u64()? as usize;
+    let mut dead = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        dead.push(r.u64()? as usize);
+    }
+    Ok(MigrateCmd { new_membership, survivors, transfers, adam_step, dead })
 }
 
 /// The old-layout owner of flat position `pos` (the process that holds
@@ -297,6 +349,18 @@ fn layout_of(membership: &[WorkerSpec], flat_len: usize) -> ShardLayout {
     let ratios: Vec<f64> =
         membership.iter().map(|w| w.state_ratio.max(0.0)).collect();
     ShardLayout::by_ratios(flat_len, &ratios)
+}
+
+/// Rank 0's flat-indexed copy of every rank's post-step state, kept
+/// current by [`DistRank::ft_sync`]. Flat positions, not ranks, index
+/// the mirror, so it is valid across membership changes; after step k
+/// it holds exactly the bytes each rank held at the k/k+1 boundary.
+/// `w` is populated only in fully-sharded mode — leader-resident runs
+/// already keep the full weights on rank 0.
+struct Mirror {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    w: Option<Vec<f32>>,
 }
 
 /// One rank's SPMD training state.
@@ -318,6 +382,10 @@ pub struct DistRank {
     /// (`None` for standby ranks and in leader-resident mode).
     param_shard: Option<Vec<f32>>,
     shard_params: bool,
+    /// Fault tolerance on: run the per-step [`DistRank::ft_sync`].
+    ft: bool,
+    /// Rank 0 with `ft` only: the cluster-state mirror.
+    mirror: Option<Mirror>,
 }
 
 impl DistRank {
@@ -338,17 +406,23 @@ impl DistRank {
         let active = rank < membership.len();
         let shard =
             active.then(|| AdamShard::new(layout.size(rank), cfg.adam));
-        let (params, param_shard) = if cfg.shard_params {
-            // Keep only this rank's slice of the deterministic init;
-            // the full copy never survives init.
+        let mirrors = rank == 0 && cfg.ft;
+        let (params, param_shard, mirror_w) = if cfg.shard_params {
+            // Keep only this rank's slice of the deterministic init —
+            // except on a mirroring rank 0, where the full flat copy
+            // survives as the mirror's weight plane (it must: after a
+            // crash nobody else holds the dead rank's slice).
             let flat = crate::trainer::flatten(&init, flat_len);
-            (
-                Vec::new(),
-                active.then(|| flat[layout.range(rank)].to_vec()),
-            )
+            let ps = active.then(|| flat[layout.range(rank)].to_vec());
+            (Vec::new(), ps, mirrors.then_some(flat))
         } else {
-            (init, None)
+            (init, None, None)
         };
+        let mirror = mirrors.then(|| Mirror {
+            m: vec![0f32; flat_len],
+            v: vec![0f32; flat_len],
+            w: mirror_w,
+        });
         Ok(DistRank {
             rank,
             exec,
@@ -361,6 +435,8 @@ impl DistRank {
             adam: cfg.adam,
             param_shard,
             shard_params: cfg.shard_params,
+            ft: cfg.ft,
+            mirror,
         })
     }
 
@@ -514,6 +590,92 @@ impl DistRank {
         t.send_f32(0, mine)
     }
 
+    /// Per-step mirror sync (ft runs only; no-op otherwise). Active
+    /// workers stream their post-step moments (and, fully-sharded,
+    /// weight slice) to rank 0; rank 0 folds every live range into the
+    /// [`Mirror`]. Pure copies on the side — the training trajectory
+    /// never reads the mirror, so the sync is bitwise-invisible.
+    ///
+    /// Frame order is safe by per-lane FIFO: a worker's step reply
+    /// (bytes) precedes its ft frames (f32), and the driver folds all
+    /// replies before rank 0 receives here.
+    pub fn ft_sync(&mut self, t: &mut dyn Transport) -> Result<()> {
+        if !self.ft {
+            return Ok(());
+        }
+        let group = self.membership.len();
+        if self.rank != 0 {
+            if self.rank >= group || self.layout.size(self.rank) == 0 {
+                return Ok(());
+            }
+            let shard = self.shard.as_ref().ok_or_else(|| {
+                anyhow!("active rank {} has no shard", self.rank)
+            })?;
+            t.send_f32(0, &shard.m)?;
+            t.send_f32(0, &shard.v)?;
+            if self.shard_params {
+                let w = self.param_shard.as_deref().ok_or_else(|| {
+                    anyhow!(
+                        "active rank {} has no parameter shard",
+                        self.rank
+                    )
+                })?;
+                t.send_f32(0, w)?;
+            }
+            return Ok(());
+        }
+        let mirror = self
+            .mirror
+            .as_mut()
+            .ok_or_else(|| anyhow!("ft_sync on rank 0 without a mirror"))?;
+        if let Some(shard) = self.shard.as_ref() {
+            let r0 = self.layout.range(0);
+            mirror.m[r0.clone()].copy_from_slice(&shard.m);
+            mirror.v[r0.clone()].copy_from_slice(&shard.v);
+            if let (Some(w), Some(mw)) =
+                (self.param_shard.as_deref(), mirror.w.as_mut())
+            {
+                mw[r0].copy_from_slice(w);
+            }
+        }
+        for r in 1..group {
+            let sz = self.layout.size(r);
+            if sz == 0 {
+                continue;
+            }
+            let range = self.layout.range(r);
+            let m_in = t.recv_f32(r)?;
+            let v_in = t.recv_f32(r)?;
+            if m_in.len() != sz || v_in.len() != sz {
+                return Err(anyhow!(
+                    "ft sync from rank {r} holds {}+{} elems, wanted {sz}",
+                    m_in.len(),
+                    v_in.len()
+                ));
+            }
+            mirror.m[range.clone()].copy_from_slice(&m_in);
+            mirror.v[range.clone()].copy_from_slice(&v_in);
+            if self.shard_params {
+                let w_in = t.recv_f32(r)?;
+                if w_in.len() != sz {
+                    return Err(anyhow!(
+                        "ft weight sync from rank {r} holds {} elems, \
+                         wanted {sz}",
+                        w_in.len()
+                    ));
+                }
+                mirror
+                    .w
+                    .as_mut()
+                    .ok_or_else(|| {
+                        anyhow!("sharded ft mirror has no weight plane")
+                    })?[range]
+                    .copy_from_slice(&w_in);
+            }
+        }
+        Ok(())
+    }
+
     /// Apply a membership change: local resident copy, peer transfers
     /// over the wire, params stream to ranks entering the membership.
     pub fn migrate(
@@ -586,31 +748,60 @@ impl DistRank {
 
         // The transfer list, in list order on every rank (frames are
         // FIFO per pair, sends never block: deadlock-free by
-        // induction on list position).
+        // induction on list position). A DEAD owner's ranges are served
+        // by rank 0 from the ft mirror — same list position, same
+        // payloads the corpse would have sent (the mirror holds its
+        // boundary state), so the recovered bytes are bitwise the
+        // graceful-departure bytes. Every rank (including ranks
+        // declared dead that are in fact still running) computes the
+        // same substitution, so nobody waits on the corpse.
         for tr in &cmd.transfers {
-            let src = owner_of(&old_layout, tr.start)?;
-            if tr.start + tr.len > old_layout.range(src).end {
+            let owner = owner_of(&old_layout, tr.start)?;
+            if tr.start + tr.len > old_layout.range(owner).end {
                 return Err(anyhow!(
                     "transfer [{}, +{}) spans old-shard boundaries",
                     tr.start,
                     tr.len
                 ));
             }
+            let dead_src = cmd.dead.contains(&owner);
+            let src = if dead_src { 0 } else { owner };
             if self.rank == src {
-                let old = self.shard.as_ref().ok_or_else(|| {
-                    anyhow!("transfer source {src} holds no shard")
-                })?;
-                let a = tr.start - old_layout.range(src).start;
-                t.send_f32(tr.to, &old.m[a..a + tr.len])?;
-                t.send_f32(tr.to, &old.v[a..a + tr.len])?;
-                if self.shard_params {
-                    let w = self.param_shard.as_ref().ok_or_else(|| {
+                if dead_src {
+                    let mirror = self.mirror.as_ref().ok_or_else(|| {
                         anyhow!(
-                            "transfer source {src} holds no parameter \
-                             shard"
+                            "dead owner {owner}'s transfer needs the ft \
+                             mirror"
                         )
                     })?;
-                    t.send_f32(tr.to, &w[a..a + tr.len])?;
+                    let s = tr.start..tr.start + tr.len;
+                    t.send_f32(tr.to, &mirror.m[s.clone()])?;
+                    t.send_f32(tr.to, &mirror.v[s.clone()])?;
+                    if self.shard_params {
+                        let w = mirror.w.as_deref().ok_or_else(|| {
+                            anyhow!(
+                                "sharded ft mirror has no weight plane"
+                            )
+                        })?;
+                        t.send_f32(tr.to, &w[s])?;
+                    }
+                } else {
+                    let old = self.shard.as_ref().ok_or_else(|| {
+                        anyhow!("transfer source {src} holds no shard")
+                    })?;
+                    let a = tr.start - old_layout.range(src).start;
+                    t.send_f32(tr.to, &old.m[a..a + tr.len])?;
+                    t.send_f32(tr.to, &old.v[a..a + tr.len])?;
+                    if self.shard_params {
+                        let w =
+                            self.param_shard.as_ref().ok_or_else(|| {
+                                anyhow!(
+                                    "transfer source {src} holds no \
+                                     parameter shard"
+                                )
+                            })?;
+                        t.send_f32(tr.to, &w[a..a + tr.len])?;
+                    }
                 }
             }
             if is_active && self.rank == tr.to {
@@ -739,6 +930,13 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
                     w.f64(count);
                     t.send_bytes(0, &w.0)?;
                 }
+                // Reply first, mirror second: per-lane FIFO then
+                // guarantees the driver folds the loss before rank 0
+                // receives this rank's ft frames.
+                st.ft_sync(t.as_mut())?;
+            }
+            OP_PING => {
+                t.send_bytes(0, &[OP_PING])?;
             }
             OP_MIGRATE => {
                 let mc = decode_migrate(&mut r)?;
@@ -759,6 +957,20 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
     }
 }
 
+/// Chaos injection request for [`DistDriver::launch_with_chaos`]:
+/// every WORKER endpoint is wrapped in a
+/// [`crate::transport::ChaosTransport`] driven by `plan` (rank 0 — the
+/// coordinator — is never wrapped). Thread fabrics crash via
+/// [`CrashMode::Error`]; spawned worker processes regenerate the plan
+/// from `cli_spec` and crash for real via [`CrashMode::Abort`].
+#[derive(Debug, Clone)]
+pub struct ChaosOpts {
+    pub plan: FaultPlan,
+    /// The `--chaos` spec string handed to spawned `cephalo worker`
+    /// processes; required for [`FabricSpec::TcpProcesses`].
+    pub cli_spec: Option<String>,
+}
+
 /// Coordinator-side handle on a distributed run: rank 0's own
 /// [`DistRank`] plus the broadcast/collect plumbing and the worker
 /// threads/processes behind it.
@@ -768,9 +980,18 @@ pub struct DistDriver {
     world: usize,
     spec: FabricSpec,
     sharded: bool,
+    ft: bool,
+    /// Ranks declared dead by [`DistDriver::poll_failures`]. Dead
+    /// ranks are skipped by every broadcast except the final
+    /// best-effort `SHUTDOWN` (a rank declared dead may still be
+    /// running, e.g. after a one-sided lane failure).
+    dead: BTreeSet<usize>,
     timer: Option<StepTimeModel>,
     threads: Vec<std::thread::JoinHandle<()>>,
     children: Vec<std::process::Child>,
+    /// TCP fabrics keep the rendezvous endpoint alive for the run's
+    /// lifetime, so losing workers never tears down the meeting point.
+    _rz: Option<crate::transport::tcp::Rendezvous>,
     down: bool,
     pub history: Vec<StepStats>,
 }
@@ -785,6 +1006,18 @@ impl DistDriver {
         cfg: DistConfig,
         membership: Vec<WorkerSpec>,
     ) -> Result<DistDriver> {
+        Self::launch_with_chaos(spec, world, cfg, membership, None)
+    }
+
+    /// [`DistDriver::launch`] with deterministic fault injection on
+    /// the worker endpoints (see [`ChaosOpts`]).
+    pub fn launch_with_chaos(
+        spec: FabricSpec,
+        world: usize,
+        cfg: DistConfig,
+        membership: Vec<WorkerSpec>,
+        chaos: Option<ChaosOpts>,
+    ) -> Result<DistDriver> {
         if world < 1 {
             return Err(anyhow!("world size must be at least 1"));
         }
@@ -794,7 +1027,19 @@ impl DistDriver {
                 membership.len()
             ));
         }
-        let (t, threads, children) = match spec {
+        let wrap = |ep: Box<dyn Transport>,
+                    chaos: &Option<ChaosOpts>|
+         -> Box<dyn Transport> {
+            match chaos {
+                Some(ch) => Box::new(ChaosTransport::new(
+                    ep,
+                    &ch.plan,
+                    CrashMode::Error,
+                )),
+                None => ep,
+            }
+        };
+        let (t, threads, children, rz) = match spec {
             FabricSpec::Local => {
                 let mut eps = LocalFabric::new(world);
                 let rest = eps.split_off(1);
@@ -802,14 +1047,15 @@ impl DistDriver {
                 let threads = rest
                     .into_iter()
                     .map(|ep| {
+                        let ep = wrap(Box::new(ep), &chaos);
                         std::thread::spawn(move || {
-                            if let Err(e) = worker_loop(Box::new(ep)) {
+                            if let Err(e) = worker_loop(ep) {
                                 crate::warn!("local worker exited: {e}");
                             }
                         })
                     })
                     .collect();
-                (t0, threads, Vec::new())
+                (t0, threads, Vec::new(), None)
             }
             FabricSpec::TcpThreads => {
                 let rz = crate::transport::tcp::Rendezvous::bind(
@@ -820,12 +1066,14 @@ impl DistDriver {
                 let threads = (1..world)
                     .map(|r| {
                         let addr = addr.clone();
+                        let chaos = chaos.clone();
                         std::thread::spawn(move || {
                             match crate::transport::tcp::connect(
                                 &addr, r, world,
                             ) {
                                 Ok(t) => {
-                                    if let Err(e) = worker_loop(Box::new(t)) {
+                                    let ep = wrap(Box::new(t), &chaos);
+                                    if let Err(e) = worker_loop(ep) {
                                         crate::warn!(
                                             "tcp worker {r} exited: {e}"
                                         );
@@ -839,7 +1087,7 @@ impl DistDriver {
                     })
                     .collect();
                 let t0: Box<dyn Transport> = Box::new(rz.establish()?);
-                (t0, threads, Vec::new())
+                (t0, threads, Vec::new(), Some(rz))
             }
             FabricSpec::TcpProcesses => {
                 let rz = crate::transport::tcp::Rendezvous::bind(
@@ -848,6 +1096,17 @@ impl DistDriver {
                 )?;
                 let addr = rz.local_addr()?;
                 let exe = std::env::current_exe()?;
+                let mut extra: Vec<String> = Vec::new();
+                if let Some(ch) = &chaos {
+                    let spec = ch.cli_spec.clone().ok_or_else(|| {
+                        anyhow!(
+                            "process fabric chaos needs a --chaos spec \
+                             string (ChaosOpts::cli_spec)"
+                        )
+                    })?;
+                    extra.push("--chaos".into());
+                    extra.push(spec);
+                }
                 let children = (1..world)
                     .map(|r| {
                         std::process::Command::new(&exe)
@@ -860,11 +1119,12 @@ impl DistDriver {
                                 "--world",
                                 &world.to_string(),
                             ])
+                            .args(&extra)
                             .spawn()
                     })
                     .collect::<std::io::Result<Vec<_>>>()?;
                 let t0: Box<dyn Transport> = Box::new(rz.establish()?);
-                (t0, Vec::new(), children)
+                (t0, Vec::new(), children, Some(rz))
             }
         };
         let mut t = t;
@@ -873,6 +1133,7 @@ impl DistDriver {
             t.send_bytes(r, &init)?;
         }
         let sharded = cfg.shard_params;
+        let ft = cfg.ft;
         let rank0 = DistRank::init(0, &cfg, membership)?;
         Ok(DistDriver {
             t,
@@ -880,9 +1141,12 @@ impl DistDriver {
             world,
             spec,
             sharded,
+            ft,
+            dead: BTreeSet::new(),
             timer: None,
             threads,
             children,
+            _rz: rz,
             down: false,
             history: Vec::new(),
         })
@@ -934,7 +1198,7 @@ impl DistDriver {
         if !self.sharded {
             return Ok(self.rank0.params().to_vec());
         }
-        for r in 1..self.world {
+        for r in self.live_workers() {
             self.t.send_bytes(r, &[OP_COLLECT])?;
         }
         let layout = self.rank0.layout().clone();
@@ -971,6 +1235,52 @@ impl DistDriver {
         self.rank0.shard.as_ref().map(|s| s.step).unwrap_or(0)
     }
 
+    /// True when the run keeps the rank-0 mirror and probes liveness.
+    pub fn is_ft(&self) -> bool {
+        self.ft
+    }
+
+    /// Ranks declared dead so far, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.dead.iter().copied().collect()
+    }
+
+    /// Worker ranks not declared dead, ascending.
+    fn live_workers(&self) -> Vec<usize> {
+        (1..self.world).filter(|r| !self.dead.contains(r)).collect()
+    }
+
+    /// Probe every live worker rank (active AND standby) and declare
+    /// unresponsive ones dead; returns the NEWLY dead ranks,
+    /// ascending. Only meaningful between steps — ft runs call this at
+    /// step boundaries, when every live worker is blocked on `recv`
+    /// and answers a `PING` immediately. A rank is declared dead on
+    /// hard evidence (closed/suspected lane, failed send) or an echo
+    /// timeout ([`PING_TIMEOUT_MS`]). No-op unless `ft` is on.
+    pub fn poll_failures(&mut self) -> Vec<usize> {
+        if !self.ft {
+            return Vec::new();
+        }
+        let mut newly = Vec::new();
+        for r in self.live_workers() {
+            let alive = if self.t.peer_closed(r) {
+                false
+            } else if self.t.send_bytes(r, &[OP_PING]).is_err() {
+                false
+            } else {
+                matches!(
+                    self.t.recv_bytes_timeout(r, PING_TIMEOUT_MS),
+                    Ok(Some(ref pong)) if pong.as_slice() == [OP_PING]
+                )
+            };
+            if !alive {
+                self.dead.insert(r);
+                newly.push(r);
+            }
+        }
+        newly
+    }
+
     /// Drive one global step: broadcast, run rank 0's share, fold in
     /// worker losses (rank order — the leader's f64 accumulation
     /// order). `step_idx` labels the returned stats; the wire carries
@@ -984,7 +1294,7 @@ impl DistDriver {
         let mut w = W::default();
         w.u8(OP_STEP);
         w.u64(self.history.len() as u64);
-        for r in 1..self.world {
+        for r in self.live_workers() {
             self.t.send_bytes(r, &w.0)?;
         }
         let (mut loss_sum, mut token_count) =
@@ -995,6 +1305,7 @@ impl DistDriver {
             loss_sum += rd.f64()?;
             token_count += rd.f64()?;
         }
+        self.rank0.ft_sync(self.t.as_mut())?;
         if token_count <= 0.0 {
             return Err(anyhow!("distributed step saw no tokens"));
         }
@@ -1032,9 +1343,10 @@ impl DistDriver {
             survivors: survivors.to_vec(),
             transfers: transfers.to_vec(),
             adam_step: self.adam_step(),
+            dead: self.dead_ranks(),
         };
         let frame = encode_migrate(&cmd);
-        for r in 1..self.world {
+        for r in self.live_workers() {
             self.t.send_bytes(r, &frame)?;
         }
         self.rank0.migrate(self.t.as_mut(), &cmd)
@@ -1042,12 +1354,21 @@ impl DistDriver {
 
     /// Stop every worker rank and reap threads/processes. Idempotent;
     /// also run on drop.
+    ///
+    /// Teardown is crash-proof by construction: `SHUTDOWN` goes
+    /// best-effort to EVERY rank (dead included — a rank we declared
+    /// dead may still be running on a half-broken lane), then the
+    /// coordinator endpoint is CLOSED before any join. Closing cascades
+    /// a hangup to every worker blocked on `recv`, so a rank that never
+    /// got its `SHUTDOWN` frame exits on the transport error instead of
+    /// wedging the join forever.
     pub fn shutdown(&mut self) {
         if !self.down {
             self.down = true;
             for r in 1..self.world {
                 let _ = self.t.send_bytes(r, &[OP_SHUTDOWN]);
             }
+            self.t.close();
         }
         for h in self.threads.drain(..) {
             let _ = h.join();
@@ -1087,7 +1408,12 @@ mod tests {
 
     #[test]
     fn command_frames_round_trip() {
-        let cfg = DistConfig { seed: 9, corpus_branch: 3, ..Default::default() };
+        let cfg = DistConfig {
+            seed: 9,
+            corpus_branch: 3,
+            ft: true,
+            ..Default::default()
+        };
         let membership = vec![member(3, 0.7), member(1, 0.3)];
         let frame = encode_init(&cfg, &membership);
         let mut r = R::new(&frame);
@@ -1097,6 +1423,7 @@ mod tests {
         assert_eq!(back.corpus_branch, 3);
         assert_eq!(back.adam.lr, cfg.adam.lr);
         assert_eq!(back.surrogate.vocab, cfg.surrogate.vocab);
+        assert!(back.ft);
         assert_eq!(mem.len(), 2);
         assert_eq!(mem[0].batch, 3);
         assert_eq!(mem[1].state_ratio, 0.3);
@@ -1109,6 +1436,7 @@ mod tests {
                 Transfer { from: Some(1), to: 0, start: 12, len: 1 },
             ],
             adam_step: 17,
+            dead: vec![2, 3],
         };
         let frame = encode_migrate(&mc);
         let mut r = R::new(&frame);
@@ -1118,6 +1446,7 @@ mod tests {
         assert_eq!(back.survivors, vec![Some(0)]);
         assert_eq!(back.transfers, mc.transfers);
         assert_eq!(back.new_membership.len(), 1);
+        assert_eq!(back.dead, vec![2, 3]);
 
         // Truncated frames error instead of panicking.
         let mut r = R::new(&frame[..4]);
@@ -1194,6 +1523,119 @@ mod tests {
         }
         rep.shutdown();
         sh.shutdown();
+    }
+
+    #[test]
+    fn ft_crash_recovery_matches_the_graceful_departure_bitwise() {
+        // Invariant 12 at the driver level: a rank-2 crash (chaos,
+        // detected by poll_failures, state re-streamed from rank 0's
+        // mirror) converges bitwise with the SAME membership change
+        // executed gracefully (rank 2 alive as the standby source) —
+        // leader-resident and fully-sharded.
+        use crate::coordinator::elastic::plan_migration;
+        use crate::transport::chaos::ChaosConfig;
+
+        for shard_params in [false, true] {
+            let membership =
+                || vec![member(2, 0.5), member(1, 0.3), member(1, 0.2)];
+            let cfg = DistConfig {
+                seed: 11,
+                shard_params,
+                ft: true,
+                ..Default::default()
+            };
+            // Rank 2 self-crashes on its first fetch after completing
+            // step 1 (reply and mirror sync included).
+            let plan = FaultPlan::generate(
+                7,
+                3,
+                &ChaosConfig {
+                    crash_ranks: 1,
+                    first_crash_step: 1,
+                    crash_step_stride: 1,
+                    delay_prob: 0.0,
+                    max_delay_ms: 0,
+                    dup_prob: 0.0,
+                },
+            );
+            assert_eq!(plan.for_rank(2).crash_after_step, Some(1));
+            let mut chaotic = DistDriver::launch_with_chaos(
+                FabricSpec::Local,
+                3,
+                cfg.clone(),
+                membership(),
+                Some(ChaosOpts { plan, cli_spec: None }),
+            )
+            .unwrap();
+            let mut graceful =
+                DistDriver::launch(FabricSpec::Local, 3, cfg, membership())
+                    .unwrap();
+
+            for s in 0..2 {
+                chaotic.step(s).unwrap();
+                graceful.step(s).unwrap();
+            }
+            assert_eq!(chaotic.poll_failures(), vec![2]);
+            assert_eq!(chaotic.dead_ranks(), vec![2]);
+            assert!(graceful.poll_failures().is_empty());
+
+            let new_membership = vec![member(2, 0.6), member(1, 0.4)];
+            let survivors = vec![Some(0), Some(1)];
+            for d in [&mut chaotic, &mut graceful] {
+                let old = d.layout().clone();
+                let new = layout_of(&new_membership, old.len());
+                let (transfers, _, _) =
+                    plan_migration(&old, &new, &survivors);
+                d.migrate(new_membership.clone(), &survivors, &transfers)
+                    .unwrap();
+            }
+            for s in 2..4 {
+                chaotic.step(s).unwrap();
+                graceful.step(s).unwrap();
+            }
+            assert_eq!(
+                chaotic.gather_params().unwrap(),
+                graceful.gather_params().unwrap(),
+                "crash recovery diverged (shard_params={shard_params})"
+            );
+            chaotic.shutdown();
+            graceful.shutdown();
+        }
+    }
+
+    #[test]
+    fn shutdown_is_bounded_with_a_crashed_and_a_deaf_worker() {
+        // Satellite 4 regression: rank 1 is already dead (crashed at
+        // step 0) and rank 2 swallows its SHUTDOWN frame. The old
+        // teardown joined forever on rank 2; closing the coordinator
+        // endpoint now cascades a hangup that unblocks it.
+        use crate::transport::chaos::RankFaults;
+
+        let mut plan = FaultPlan::quiet(3);
+        plan.faults[1].crash_after_step = Some(0);
+        plan.faults[2] = RankFaults {
+            drop_shutdown: true,
+            ..RankFaults::quiet(2)
+        };
+        let cfg = DistConfig { seed: 3, ft: true, ..Default::default() };
+        let membership =
+            vec![member(2, 0.5), member(1, 0.3), member(1, 0.2)];
+        let mut d = DistDriver::launch_with_chaos(
+            FabricSpec::Local,
+            3,
+            cfg,
+            membership,
+            Some(ChaosOpts { plan, cli_spec: None }),
+        )
+        .unwrap();
+        d.step(0).unwrap();
+        assert_eq!(d.poll_failures(), vec![1]);
+        let t0 = Instant::now();
+        d.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "teardown must not hang on dead or deaf workers"
+        );
     }
 
     #[test]

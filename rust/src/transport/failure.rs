@@ -1,0 +1,179 @@
+//! Heartbeat-fed failure detection for the TCP fabric.
+//!
+//! A [`FailureDetector`] is pure bookkeeping: reader threads call
+//! [`FailureDetector::beat`] whenever any frame (heartbeat or data)
+//! arrives from a peer, and [`FailureDetector::mark_closed`] when a
+//! stream dies (EOF, reset, CRC failure). Liveness verdicts are then a
+//! threshold query over the last-seen clock. The clock is INJECTED
+//! (`now_ms` arguments) rather than read from the wall internally, so
+//! the suspicion logic is unit-testable without sleeping — the unit
+//! tests below are satellite 2 of the fault-model issue: no false
+//! positive below the suspicion threshold, guaranteed detection above
+//! it.
+//!
+//! All state is atomic; the detector is shared between the heartbeat
+//! thread, the per-stream reader threads and the driver's probe loop
+//! behind one `Arc` with no locks.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Default suspicion threshold: a peer silent for this long is
+/// suspect. Heartbeats tick every [`crate::transport::tcp`] ~50 ms, so
+/// this tolerates ~40 consecutive missed beats — far above scheduler
+/// jitter on a loaded CI box.
+pub const DEFAULT_SUSPECT_AFTER_MS: u64 = 2000;
+
+struct PeerState {
+    /// Milliseconds-clock of the last frame seen from this peer.
+    last_seen_ms: AtomicU64,
+    /// Hard evidence the peer is gone (EOF / reset / corrupt frame).
+    closed: AtomicBool,
+}
+
+/// Per-peer liveness bookkeeping (see module docs).
+pub struct FailureDetector {
+    peers: Vec<PeerState>,
+    suspect_after_ms: u64,
+}
+
+impl FailureDetector {
+    /// A detector over `world` peers, all last-seen at clock 0.
+    pub fn new(world: usize, suspect_after_ms: u64) -> Self {
+        let peers = (0..world)
+            .map(|_| PeerState {
+                last_seen_ms: AtomicU64::new(0),
+                closed: AtomicBool::new(false),
+            })
+            .collect();
+        Self { peers, suspect_after_ms }
+    }
+
+    pub fn world(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn suspect_after_ms(&self) -> u64 {
+        self.suspect_after_ms
+    }
+
+    /// Record evidence of life from `peer` at clock `now_ms`. The
+    /// clock must be monotone per caller; concurrent beats race
+    /// benignly (max of the two survives long enough to matter).
+    pub fn beat(&self, peer: usize, now_ms: u64) {
+        if let Some(p) = self.peers.get(peer) {
+            p.last_seen_ms.fetch_max(now_ms, Ordering::Relaxed);
+        }
+    }
+
+    /// Record hard evidence that `peer`'s connection is gone. Closed
+    /// is sticky: no later beat resurrects the peer (a new incarnation
+    /// would need a new mesh, which this fabric does not re-admit —
+    /// see DESIGN.md §Fault model).
+    pub fn mark_closed(&self, peer: usize) {
+        if let Some(p) = self.peers.get(peer) {
+            p.closed.store(true, Ordering::Release);
+        }
+    }
+
+    /// Hard-closed verdict (EOF / reset / corrupt frame observed).
+    pub fn is_closed(&self, peer: usize) -> bool {
+        self.peers
+            .get(peer)
+            .map(|p| p.closed.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Suspicion verdict at clock `now_ms`: hard-closed, or silent for
+    /// longer than the threshold.
+    pub fn suspected(&self, peer: usize, now_ms: u64) -> bool {
+        match self.peers.get(peer) {
+            None => false,
+            Some(p) => {
+                p.closed.load(Ordering::Acquire)
+                    || now_ms.saturating_sub(
+                        p.last_seen_ms.load(Ordering::Relaxed),
+                    ) > self.suspect_after_ms
+            }
+        }
+    }
+
+    /// All peers suspected at clock `now_ms`, ascending.
+    pub fn suspects(&self, now_ms: u64) -> Vec<usize> {
+        (0..self.peers.len())
+            .filter(|&p| self.suspected(p, now_ms))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_false_positive_below_the_suspicion_threshold() {
+        // Satellite 2a: delays strictly below the threshold never
+        // trip the detector, however many of them occur.
+        let d = FailureDetector::new(3, 100);
+        let mut now = 0u64;
+        for _ in 0..50 {
+            // Every peer beats, then the clock advances by a delay
+            // just inside the bound.
+            for p in 0..3 {
+                d.beat(p, now);
+            }
+            now += 100; // elapsed == threshold is NOT "> threshold"
+            for p in 0..3 {
+                assert!(!d.suspected(p, now), "false positive at {now}");
+            }
+        }
+        assert!(d.suspects(now).is_empty());
+    }
+
+    #[test]
+    fn silence_beyond_the_threshold_is_always_detected() {
+        // Satellite 2b: a peer silent for threshold+1 is suspected no
+        // matter how alive it was before.
+        let d = FailureDetector::new(4, 100);
+        for p in 0..4 {
+            d.beat(p, 1000);
+        }
+        d.beat(2, 1050); // rank 2 stays chatty a little longer
+        assert!(!d.suspected(1, 1100));
+        assert!(d.suspected(1, 1101), "rank 1 silent 101ms > 100ms");
+        assert!(!d.suspected(2, 1101), "rank 2 beat at 1050");
+        assert!(d.suspected(2, 1151));
+        assert_eq!(d.suspects(1101), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn closed_is_sticky_and_immediate() {
+        let d = FailureDetector::new(2, 1000);
+        d.beat(1, 5);
+        assert!(!d.suspected(1, 6));
+        d.mark_closed(1);
+        assert!(d.is_closed(1));
+        assert!(d.suspected(1, 6), "closed trumps a fresh beat");
+        d.beat(1, 7); // a late frame cannot resurrect the peer
+        assert!(d.suspected(1, 8));
+        assert!(!d.is_closed(0));
+    }
+
+    #[test]
+    fn beats_are_monotone_under_reordering() {
+        // A stale beat (older clock) must not rewind last-seen.
+        let d = FailureDetector::new(1, 10);
+        d.beat(0, 100);
+        d.beat(0, 40); // delivered out of order
+        assert!(!d.suspected(0, 105));
+        assert!(d.suspected(0, 111));
+    }
+
+    #[test]
+    fn out_of_range_peers_are_inert() {
+        let d = FailureDetector::new(1, 10);
+        d.beat(9, 100);
+        d.mark_closed(9);
+        assert!(!d.is_closed(9));
+        assert!(!d.suspected(9, 1000));
+    }
+}

@@ -8,7 +8,8 @@
 //! send-then-recv discipline of the ring collectives and migration
 //! loops deadlock-free (see DESIGN.md §Transport).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use super::{expect_bytes, expect_f32, Frame, Transport};
 use crate::util::error::{anyhow, Result};
@@ -41,7 +42,13 @@ impl LocalFabric {
         for (rank, (senders, inbox)) in
             txs.into_iter().zip(rxs).enumerate()
         {
-            out.push(LocalTransport { rank, world, senders, inbox });
+            out.push(LocalTransport {
+                rank,
+                world,
+                senders,
+                inbox,
+                closed: false,
+            });
         }
         out
     }
@@ -55,6 +62,8 @@ pub struct LocalTransport {
     senders: Vec<Sender<Frame>>,
     /// `inbox[src]` — the receive side of each source's lane to us.
     inbox: Vec<Receiver<Frame>>,
+    /// Set by [`Transport::close`]: sends fail, peers see hangups.
+    closed: bool,
 }
 
 impl LocalTransport {
@@ -70,6 +79,9 @@ impl LocalTransport {
 
     fn push(&mut self, to: usize, frame: Frame) -> Result<()> {
         self.check_peer(to, "send to")?;
+        if self.closed {
+            return Err(anyhow!("rank {} endpoint is closed", self.rank));
+        }
         self.senders[to]
             .send(frame)
             .map_err(|_| anyhow!("rank {to} hung up (channel closed)"))
@@ -112,6 +124,31 @@ impl Transport for LocalTransport {
     fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
         let f = self.pull(from)?;
         expect_bytes(f, from)
+    }
+
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        self.check_peer(from, "recv from")?;
+        match self.inbox[from].recv_timeout(Duration::from_millis(timeout_ms))
+        {
+            Ok(f) => expect_bytes(f, from).map(Some),
+            // Timeout and a hung-up peer both mean "no answer" — the
+            // probe loop treats either as silence.
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn close(&mut self) {
+        // Dropping every sender disconnects all outgoing lanes, so any
+        // peer blocked on `recv_*(self.rank)` wakes with a hangup
+        // error instead of waiting forever. `push` guards on `closed`
+        // before indexing the (now empty) sender list.
+        self.closed = true;
+        self.senders = Vec::new();
     }
 }
 
@@ -163,6 +200,32 @@ mod tests {
         drop(b);
         assert!(a.send_f32(1, &[1.0]).is_err());
         assert!(a.recv_f32(1).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_returns_none_on_silence_and_some_on_frames() {
+        let mut eps = LocalFabric::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert_eq!(a.recv_bytes_timeout(1, 5).unwrap(), None);
+        b.send_bytes(0, &[42]).unwrap();
+        assert_eq!(a.recv_bytes_timeout(1, 1000).unwrap(), Some(vec![42]));
+        // A hung-up peer is "no answer", not an error, on this path.
+        drop(b);
+        assert_eq!(a.recv_bytes_timeout(1, 5).unwrap(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_peers_and_fails_later_sends() {
+        let mut eps = LocalFabric::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let waiter = std::thread::spawn(move || a.recv_bytes(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        b.close();
+        assert!(waiter.join().unwrap().is_err(), "close must wake peers");
+        assert!(b.send_bytes(0, &[1]).is_err());
+        assert!(b.send_bytes(1, &[1]).is_err(), "self-sends fail too");
     }
 
     #[test]

@@ -27,26 +27,117 @@
 //!   (`dist::DistDriver`) that spawns worker threads or processes and
 //!   routes `elastic::apply_migration` transfer lists over the wire.
 //!
+//! * [`chaos::ChaosTransport`] — deterministic fault-injection
+//!   middleware over any fabric: seeded delays, duplicate frames, frame
+//!   corruption and crash-at-step-k schedules from a replayable
+//!   [`chaos::FaultPlan`].
+//! * [`failure::FailureDetector`] — heartbeat bookkeeping behind the
+//!   TCP fabric's per-peer liveness verdicts.
+//!
 //! ## Frame format
 //!
-//! On the wire (TCP) every frame is `[tag: u8][len: u64 LE][payload]`;
+//! On the wire (TCP, v2) every frame is
+//! `[tag: u8][seq: u64 LE][len: u64 LE][payload][crc32: u32 LE]`;
 //! tag 0 = raw bytes, tag 1 = f32 vector (payload is `4 × count`
-//! little-endian bytes). In-process transports carry the same frames as
-//! enum values without serialization. A `recv_f32` that dequeues a
-//! bytes frame (or vice versa) is a protocol error, not a silent
-//! reinterpretation — SPMD lockstep means both sides always agree on
-//! the next frame type.
+//! little-endian bytes), tag 2 = heartbeat (empty payload, seq 0,
+//! consumed by the reader thread and never surfaced to `recv_*`). The
+//! CRC32 (IEEE) covers tag through payload; a mismatch is a typed
+//! [`TransportError::Corrupt`] and closes the lane — the peer then
+//! LOOKS dead, which routes corruption into the same recovery path as
+//! a crash. Per-lane sequence numbers start at 1 and must arrive
+//! gap-free; a duplicate (seq ≤ last seen) is silently dropped, which
+//! is what makes duplicate-frame fault injection bitwise-invisible.
+//! In-process transports carry the same frames as enum values without
+//! serialization. A `recv_f32` that dequeues a bytes frame (or vice
+//! versa) is a protocol error, not a silent reinterpretation — SPMD
+//! lockstep means both sides always agree on the next frame type.
 
+pub mod chaos;
 pub mod collectives;
 pub mod dist;
+pub mod failure;
 pub mod local;
 pub mod tcp;
 
-pub use dist::{worker_loop, DistConfig, DistDriver, FabricSpec};
+pub use chaos::{ChaosConfig, ChaosTransport, CrashMode, FaultPlan};
+pub use dist::{worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec};
+pub use failure::FailureDetector;
 pub use local::{LocalFabric, LocalTransport};
 pub use tcp::{Rendezvous, TcpTransport};
 
 use crate::util::error::{anyhow, Result};
+
+/// Typed transport-layer failures. Converts into the crate-wide opaque
+/// [`crate::util::error::Error`] via its blanket `From<E: std::error::Error>`,
+/// so fabric code can `?` these while tests still match on the variant
+/// at the layer that produced it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// A frame's CRC32 check failed: `expected` from the trailer,
+    /// `got` recomputed over the received bytes.
+    Corrupt { from: usize, expected: u32, got: u32 },
+    /// A lane's sequence numbers skipped ahead — at least one frame
+    /// was lost in flight.
+    SeqGap { from: usize, expected: u64, got: u64 },
+    /// The peer's connection is closed (EOF, reset, or declared dead
+    /// by the failure detector).
+    PeerClosed { rank: usize },
+    /// A bounded wait elapsed without a frame.
+    Timeout { from: usize, after_ms: u64 },
+    /// A `ChaosTransport` crash fault fired (thread-mode crash).
+    ChaosCrash { rank: usize, step: u64 },
+    /// Any other protocol violation.
+    Protocol { detail: String },
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Corrupt { from, expected, got } => write!(
+                f,
+                "corrupt frame from rank {from}: crc32 {got:#010x} != \
+                 expected {expected:#010x}"
+            ),
+            TransportError::SeqGap { from, expected, got } => write!(
+                f,
+                "sequence gap from rank {from}: expected seq {expected}, \
+                 got {got} (frame lost)"
+            ),
+            TransportError::PeerClosed { rank } => {
+                write!(f, "rank {rank} connection closed (peer dead)")
+            }
+            TransportError::Timeout { from, after_ms } => write!(
+                f,
+                "no frame from rank {from} within {after_ms} ms"
+            ),
+            TransportError::ChaosCrash { rank, step } => write!(
+                f,
+                "chaos: rank {rank} crashed after step {step}"
+            ),
+            TransportError::Protocol { detail } => {
+                write!(f, "transport protocol error: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
+/// on every v2 TCP frame. Table-free bitwise form: this runs on
+/// command-sized frames and heartbeats far more often than on bulk
+/// tensor traffic, and the bulk path is dominated by the socket.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
 
 /// One in-flight message. In-process transports pass these by value;
 /// the TCP transport (de)serializes them with [`encode_frame`] /
@@ -95,6 +186,55 @@ pub trait Transport: Send {
     /// Receive the next byte frame from `from` (blocking).
     fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>>;
 
+    /// Bounded-wait receive: `Ok(Some(frame))` if a byte frame arrives
+    /// within `timeout_ms`, `Ok(None)` if the wait elapses OR the peer
+    /// is already gone (both mean "no answer" to a liveness probe —
+    /// the caller consults [`Transport::peer_closed`] to distinguish).
+    /// Default: degrade to a blocking receive, mapping errors to
+    /// `Ok(None)` so probing a fabric without timeout support is safe.
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        let _ = timeout_ms;
+        match self.recv_bytes(from) {
+            Ok(b) => Ok(Some(b)),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Whether the fabric KNOWS this peer's connection is gone (EOF,
+    /// reset, heartbeat expiry). `false` means "no evidence", not
+    /// "alive" — fabrics without liveness tracking always say `false`.
+    fn peer_closed(&self, rank: usize) -> bool {
+        let _ = rank;
+        false
+    }
+
+    /// Tear down this endpoint's lanes so every peer blocked on a
+    /// receive from us wakes with an error instead of hanging. After
+    /// `close`, sends from this endpoint fail. Default: no-op.
+    fn close(&mut self) {}
+
+    /// Re-transmit the last frame sent to `to` byte-for-byte (same
+    /// sequence number on the wire, so the receiver's dedup drops it).
+    /// The duplicate-frame fault injector calls this; fabrics without
+    /// wire-level dedup leave it a no-op so a "duplicate" never becomes
+    /// a double delivery.
+    fn resend_last(&mut self, to: usize) -> Result<()> {
+        let _ = to;
+        Ok(())
+    }
+
+    /// Arm a one-shot payload corruption on the NEXT frame sent to
+    /// `to` (one byte flipped after the checksum is computed). Fault
+    /// injection only; fabrics without a checksum to violate leave it
+    /// a no-op.
+    fn corrupt_next_send(&mut self, to: usize) {
+        let _ = to;
+    }
+
     /// Block until every rank has entered the barrier. Default:
     /// gather-to-0 then release, built on the point-to-point frames.
     fn barrier(&mut self) -> Result<()> {
@@ -124,6 +264,57 @@ pub trait Transport: Send {
             }
         }
         Ok(())
+    }
+}
+
+/// Boxed endpoints are endpoints, so middleware like
+/// [`ChaosTransport`] can wrap a `Box<dyn Transport>`. Every method
+/// forwards — INCLUDING the defaulted ones, which would otherwise
+/// shadow the inner fabric's overrides (a boxed TCP endpoint must keep
+/// its real timeouts, liveness and dedup).
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn backend(&self) -> &'static str {
+        (**self).backend()
+    }
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+    fn world_size(&self) -> usize {
+        (**self).world_size()
+    }
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        (**self).send_f32(to, data)
+    }
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        (**self).recv_f32(from)
+    }
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        (**self).send_bytes(to, data)
+    }
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        (**self).recv_bytes(from)
+    }
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        (**self).recv_bytes_timeout(from, timeout_ms)
+    }
+    fn peer_closed(&self, rank: usize) -> bool {
+        (**self).peer_closed(rank)
+    }
+    fn close(&mut self) {
+        (**self).close()
+    }
+    fn resend_last(&mut self, to: usize) -> Result<()> {
+        (**self).resend_last(to)
+    }
+    fn corrupt_next_send(&mut self, to: usize) {
+        (**self).corrupt_next_send(to)
+    }
+    fn barrier(&mut self) -> Result<()> {
+        (**self).barrier()
     }
 }
 
@@ -211,6 +402,28 @@ mod tests {
         let b = encode_frame(&Frame::Bytes(vec![9, 9]));
         assert_eq!(b[0], TAG_BYTES);
         assert_eq!(b.len(), 9 + 2);
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The canonical CRC-32/IEEE check: crc32("123456789").
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // One flipped bit changes the checksum.
+        assert_ne!(crc32(b"\x00"), crc32(b"\x01"));
+    }
+
+    #[test]
+    fn transport_errors_render_and_compare() {
+        let e = TransportError::Corrupt { from: 2, expected: 1, got: 9 };
+        assert!(e.to_string().contains("corrupt frame from rank 2"));
+        assert_eq!(e, e.clone());
+        let g = TransportError::SeqGap { from: 1, expected: 4, got: 6 };
+        assert!(g.to_string().contains("sequence gap"));
+        // The blanket conversion into the crate error keeps the text.
+        let op: crate::util::error::Error =
+            TransportError::PeerClosed { rank: 3 }.into();
+        assert!(op.to_string().contains("rank 3 connection closed"));
     }
 
     #[test]

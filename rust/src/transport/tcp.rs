@@ -1,5 +1,6 @@
 //! TCP socket transport (`std::net` only): loopback or LAN ranks with
-//! a tiny rendezvous + full-mesh handshake.
+//! a tiny rendezvous + full-mesh handshake, checksummed framing and
+//! heartbeat-based failure detection.
 //!
 //! ## Rendezvous protocol
 //!
@@ -22,29 +23,75 @@
 //!    slow receiver (the discipline that keeps the ring and migration
 //!    loops deadlock-free).
 //!
-//! Failure semantics are fail-stop: a vanished peer surfaces as an
-//! error from the next `send_*`/`recv_*` touching it, never as silent
-//! corruption — frames are typed and length-checked.
+//! The rendezvous endpoint OUTLIVES the workers it meshed:
+//! [`Rendezvous::establish`] borrows rather than consumes, so the
+//! coordinator can keep the listener bound across a whole session and
+//! survivors of a membership change could re-register against the same
+//! well-known address (the `DistDriver` holds the endpoint for exactly
+//! this reason).
+//!
+//! ## Failure semantics (v2)
+//!
+//! Every data frame carries a per-lane sequence number and a CRC32
+//! trailer (layout in `transport` module docs). A heartbeat thread per
+//! endpoint writes a `TAG_HB` frame to every peer roughly every
+//! [`HEARTBEAT_EVERY`]; arrival of ANY frame feeds the shared
+//! [`FailureDetector`], whose verdicts surface through
+//! [`Transport::peer_closed`]. Detection is layered:
+//!
+//! * **hard** — EOF, reset, a CRC mismatch or a sequence gap kills the
+//!   reader thread, which marks the peer closed. A corrupt frame is
+//!   therefore EXACTLY as fatal as a crash, never a silent bad
+//!   gradient (typed as [`TransportError::Corrupt`]).
+//! * **soft** — a peer silent past the detector's suspicion threshold
+//!   (no heartbeats, no data) is suspected even while its socket looks
+//!   open — the kill -9 case where FIN never arrives.
+//!
+//! Retry policy: CONNECTION establishment retries with exponential
+//! backoff under a deadline ([`connect_retry`]). In-stream frame
+//! writes are single-attempt under a write timeout: a partially
+//! written frame cannot be resumed (the receiver's CRC + sequence
+//! checks would reject any resync), so a failed or timed-out write
+//! marks the peer closed and fails fast into the session's recovery
+//! path instead of retrying blind.
 
 use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::{
-    expect_bytes, expect_f32, f32s_from_le_bytes, f32s_to_le_bytes, Frame,
-    Transport, TAG_BYTES, TAG_F32,
+    crc32, expect_bytes, expect_f32, f32s_from_le_bytes, f32s_to_le_bytes,
+    FailureDetector, Frame, Transport, TransportError, TAG_BYTES, TAG_F32,
 };
+use crate::transport::failure::DEFAULT_SUSPECT_AFTER_MS;
 use crate::util::error::{anyhow, Result};
+
+/// Wire tag for heartbeat frames (empty payload, seq 0; consumed by
+/// the reader thread, never surfaced to `recv_*`).
+pub const TAG_HB: u8 = 2;
 
 /// Frames above this are a protocol error, not an allocation request.
 const MAX_FRAME_BYTES: usize = 1 << 30;
 /// Rendezvous/handshake strings above this are rejected.
 const MAX_ADDR_BYTES: usize = 4096;
-/// Connect retry budget: the listener side binds before advertising,
-/// so retries only cover transient refusals (SYN backlog overflow).
-const CONNECT_ATTEMPTS: usize = 250;
-const CONNECT_BACKOFF: Duration = Duration::from_millis(20);
+/// Connection-establishment retry policy: exponential backoff from
+/// [`CONNECT_BACKOFF_START`] doubling to [`CONNECT_BACKOFF_MAX`],
+/// bounded by a total deadline.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+const CONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
+const CONNECT_BACKOFF_MAX: Duration = Duration::from_millis(500);
+/// Heartbeat cadence; the detector's suspicion threshold
+/// (`DEFAULT_SUSPECT_AFTER_MS`) tolerates ~40 missed beats.
+const HEARTBEAT_EVERY: Duration = Duration::from_millis(50);
+/// In-stream writes time out after this (a peer that stopped reading
+/// with a full receive buffer must not wedge the sender forever).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// `resend_last` caches the last frame per lane only up to this size —
+/// duplicate injection targets command traffic, not bulk tensors.
+const DUP_CACHE_MAX_BYTES: usize = 1 << 16;
 
 fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
@@ -73,56 +120,163 @@ fn write_string(w: &mut impl Write, s: &str) -> Result<()> {
     Ok(())
 }
 
-/// Read one wire frame; `Ok(None)` on a clean EOF at a frame boundary.
-fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
-    let mut tag = [0u8; 1];
-    if let Err(e) = r.read_exact(&mut tag) {
+/// Assemble a v2 wire frame:
+/// `[tag][seq u64 LE][len u64 LE][payload][crc32 u32 LE]`, the CRC
+/// covering everything before it. Public so the fault-injection tests
+/// can record and replay real frames.
+pub fn encode_wire_frame(tag: u8, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 + payload.len() + 4);
+    out.push(tag);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse and verify one complete v2 wire frame. Returns the typed
+/// [`TransportError`] directly (no opaque wrapping) so corruption is
+/// distinguishable from every other failure at the layer that found
+/// it: a bad CRC is [`TransportError::Corrupt`], a malformed envelope
+/// is [`TransportError::Protocol`].
+pub fn decode_wire_frame(
+    buf: &[u8],
+    from: usize,
+) -> std::result::Result<(u8, u64, Vec<u8>), TransportError> {
+    if buf.len() < 21 {
+        return Err(TransportError::Protocol {
+            detail: format!("frame of {} bytes is below minimum 21", buf.len()),
+        });
+    }
+    let tag = buf[0];
+    let seq = u64::from_le_bytes(buf[1..9].try_into().expect("8 bytes"));
+    let len = u64::from_le_bytes(buf[9..17].try_into().expect("8 bytes"));
+    let len = len as usize;
+    if len > MAX_FRAME_BYTES || buf.len() != 17 + len + 4 {
+        return Err(TransportError::Protocol {
+            detail: format!(
+                "frame length {len} does not match envelope of {} bytes",
+                buf.len()
+            ),
+        });
+    }
+    let body = &buf[..17 + len];
+    let expected =
+        u32::from_le_bytes(buf[17 + len..].try_into().expect("4 bytes"));
+    let got = crc32(body);
+    if got != expected {
+        return Err(TransportError::Corrupt { from, expected, got });
+    }
+    Ok((tag, seq, buf[17..17 + len].to_vec()))
+}
+
+/// Read one wire frame off a stream; `Ok(None)` on a clean EOF at a
+/// frame boundary. CRC and envelope verification run through
+/// [`decode_wire_frame`], so the error text carries the typed variant.
+fn read_wire_frame(
+    r: &mut impl Read,
+    from: usize,
+) -> Result<Option<(u8, u64, Vec<u8>)>> {
+    let mut first = [0u8; 1];
+    if let Err(e) = r.read_exact(&mut first) {
         if e.kind() == std::io::ErrorKind::UnexpectedEof {
             return Ok(None);
         }
         return Err(e.into());
     }
-    let len = read_u64(r)? as usize;
-    if len > MAX_FRAME_BYTES {
+    let mut rest = [0u8; 16];
+    r.read_exact(&mut rest)?;
+    let len = u64::from_le_bytes(rest[8..16].try_into().expect("8 bytes"));
+    if len as usize > MAX_FRAME_BYTES {
         return Err(anyhow!("oversized frame: {len} bytes"));
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    match tag[0] {
-        TAG_BYTES => Ok(Some(Frame::Bytes(payload))),
-        TAG_F32 => Ok(Some(Frame::F32(f32s_from_le_bytes(&payload)?))),
+    let total = 17 + len as usize + 4;
+    let mut buf = vec![0u8; total];
+    buf[0] = first[0];
+    buf[1..17].copy_from_slice(&rest);
+    r.read_exact(&mut buf[17..])?;
+    let (tag, seq, payload) = decode_wire_frame(&buf, from)?;
+    Ok(Some((tag, seq, payload)))
+}
+
+fn frame_from_parts(tag: u8, payload: Vec<u8>) -> Result<Frame> {
+    match tag {
+        TAG_BYTES => Ok(Frame::Bytes(payload)),
+        TAG_F32 => Ok(Frame::F32(f32s_from_le_bytes(&payload)?)),
         t => Err(anyhow!("unknown frame tag {t}")),
     }
 }
 
+/// Bounded-retry connect with exponential backoff (the listener side
+/// binds before advertising, so retries cover transient refusals and
+/// slow-to-schedule peers, not indefinite absence).
 fn connect_retry(addr: &str) -> Result<TcpStream> {
-    let mut last = None;
-    for _ in 0..CONNECT_ATTEMPTS {
+    let start = Instant::now();
+    let mut backoff = CONNECT_BACKOFF_START;
+    loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                last = Some(e);
-                std::thread::sleep(CONNECT_BACKOFF);
+                if start.elapsed() >= CONNECT_DEADLINE {
+                    return Err(anyhow!(
+                        "could not connect to {addr} within {:?}: {e}",
+                        CONNECT_DEADLINE
+                    ));
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(CONNECT_BACKOFF_MAX);
             }
         }
     }
-    Err(anyhow!(
-        "could not connect to {addr} after {CONNECT_ATTEMPTS} attempts: {}",
-        last.map(|e| e.to_string()).unwrap_or_default()
-    ))
 }
 
 /// One reader thread per mesh stream: drain frames into the per-source
-/// queue until EOF or error (either way the sender drops and `recv_*`
-/// reports the peer as gone). Decode errors are logged before the
-/// thread exits so a protocol desync is distinguishable from a peer
-/// that simply went away.
-fn spawn_reader(stream: TcpStream, tx: Sender<Frame>) {
+/// queue until EOF or error, feeding the failure detector on every
+/// arrival. Heartbeats are consumed here; data frames are dedup'd by
+/// sequence number (duplicate ⇒ dropped, gap ⇒ fatal). Any exit path
+/// marks the peer closed — EOF, reset, CRC mismatch and sequence gaps
+/// all funnel into the same "peer is gone" verdict.
+fn spawn_reader(
+    stream: TcpStream,
+    from: usize,
+    tx: Sender<Frame>,
+    detector: Arc<FailureDetector>,
+    epoch: Instant,
+) {
     std::thread::spawn(move || {
         let mut r = BufReader::new(stream);
+        let mut last_seq = 0u64;
         loop {
-            match read_frame(&mut r) {
-                Ok(Some(frame)) => {
+            match read_wire_frame(&mut r, from) {
+                Ok(Some((tag, seq, payload))) => {
+                    detector.beat(from, epoch.elapsed().as_millis() as u64);
+                    if tag == TAG_HB {
+                        continue;
+                    }
+                    if seq <= last_seq {
+                        // A re-transmitted frame: already delivered.
+                        continue;
+                    }
+                    if seq != last_seq + 1 {
+                        let e = TransportError::SeqGap {
+                            from,
+                            expected: last_seq + 1,
+                            got: seq,
+                        };
+                        crate::warn!("tcp transport reader stopping: {e}");
+                        break;
+                    }
+                    last_seq = seq;
+                    let frame = match frame_from_parts(tag, payload) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            crate::warn!(
+                                "tcp transport reader stopping: {e}"
+                            );
+                            break;
+                        }
+                    };
                     if tx.send(frame).is_err() {
                         break;
                     }
@@ -134,7 +288,22 @@ fn spawn_reader(stream: TcpStream, tx: Sender<Frame>) {
                 }
             }
         }
+        detector.mark_closed(from);
     });
+}
+
+/// One outgoing lane: the shared write half plus per-lane tx state.
+/// The stream is behind a mutex because the heartbeat thread writes
+/// concurrently with protocol sends; every frame goes out as ONE
+/// pre-assembled `write_all` under the lock, so frames never
+/// interleave.
+struct TxLane {
+    stream: Arc<Mutex<TcpStream>>,
+    tx_seq: u64,
+    /// Last command-sized frame, byte-for-byte (same seq), for
+    /// duplicate-frame fault injection.
+    last_frame: Option<Vec<u8>>,
+    corrupt_next: bool,
 }
 
 /// Phase-3 mesh formation, shared by rank 0 and workers.
@@ -152,22 +321,37 @@ fn mesh(
         inbox.push(rx);
     }
     let self_tx = senders[rank].take().expect("own sender present");
-    let mut peers: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    let detector =
+        Arc::new(FailureDetector::new(world, DEFAULT_SUSPECT_AFTER_MS));
+    let epoch = Instant::now();
+    let mut lanes: Vec<Option<TxLane>> = (0..world).map(|_| None).collect();
+
+    let mut install = |peer: usize, s: TcpStream| -> Result<()> {
+        let _ = s.set_nodelay(true);
+        let _ = s.set_write_timeout(Some(WRITE_TIMEOUT));
+        let tx = senders[peer]
+            .take()
+            .ok_or_else(|| anyhow!("duplicate mesh stream from rank {peer}"))?;
+        spawn_reader(s.try_clone()?, peer, tx, Arc::clone(&detector), epoch);
+        lanes[peer] = Some(TxLane {
+            stream: Arc::new(Mutex::new(s)),
+            tx_seq: 0,
+            last_frame: None,
+            corrupt_next: false,
+        });
+        Ok(())
+    };
 
     // Connect DOWN the table; the hello names our rank.
     for peer in 0..rank {
         let mut s = connect_retry(&table[peer])?;
-        let _ = s.set_nodelay(true);
         write_u64(&mut s, rank as u64)?;
-        let tx = senders[peer].take().expect("peer sender unclaimed");
-        spawn_reader(s.try_clone()?, tx);
-        peers[peer] = Some(s);
+        install(peer, s)?;
     }
     // Accept UP: one stream from every higher rank, identified by its
     // hello.
     for _ in rank + 1..world {
         let (mut s, _) = data_listener.accept()?;
-        let _ = s.set_nodelay(true);
         let peer = read_u64(&mut s)? as usize;
         if peer <= rank || peer >= world {
             return Err(anyhow!(
@@ -175,13 +359,50 @@ fn mesh(
                  of {world})"
             ));
         }
-        let tx = senders[peer]
-            .take()
-            .ok_or_else(|| anyhow!("duplicate mesh stream from rank {peer}"))?;
-        spawn_reader(s.try_clone()?, tx);
-        peers[peer] = Some(s);
+        install(peer, s)?;
     }
-    Ok(TcpTransport { rank, world, peers, inbox, self_tx })
+
+    // One heartbeat thread per endpoint, ticking every lane.
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_frame = encode_wire_frame(TAG_HB, 0, &[]);
+    let hb_lanes: Vec<(usize, Arc<Mutex<TcpStream>>)> = lanes
+        .iter()
+        .enumerate()
+        .filter_map(|(p, l)| {
+            l.as_ref().map(|l| (p, Arc::clone(&l.stream)))
+        })
+        .collect();
+    let hb_thread = {
+        let stop = Arc::clone(&hb_stop);
+        let detector = Arc::clone(&detector);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                for (peer, stream) in &hb_lanes {
+                    if detector.is_closed(*peer) {
+                        continue;
+                    }
+                    if let Ok(mut s) = stream.lock() {
+                        if s.write_all(&hb_frame).is_err() {
+                            detector.mark_closed(*peer);
+                        }
+                    }
+                }
+                std::thread::sleep(HEARTBEAT_EVERY);
+            }
+        })
+    };
+
+    Ok(TcpTransport {
+        rank,
+        world,
+        lanes,
+        inbox,
+        self_tx,
+        detector,
+        epoch,
+        hb_stop,
+        hb_thread: Some(hb_thread),
+    })
 }
 
 /// Rank 0's side of the rendezvous: bind, advertise, establish.
@@ -208,7 +429,10 @@ impl Rendezvous {
 
     /// Collect all registrations, broadcast the table, form the mesh;
     /// returns rank 0's endpoint. Blocks until every worker connects.
-    pub fn establish(self) -> Result<TcpTransport> {
+    /// Borrows rather than consumes: the endpoint stays bound, so it
+    /// outlives the mesh it formed and can establish again after a
+    /// membership change.
+    pub fn establish(&self) -> Result<TcpTransport> {
         let world = self.world;
         let ip = self.listener.local_addr()?.ip();
         let data_listener = TcpListener::bind((ip, 0))?;
@@ -297,15 +521,25 @@ pub fn thread_fabric(world: usize) -> Result<Vec<Box<dyn Transport>>> {
 pub struct TcpTransport {
     rank: usize,
     world: usize,
-    /// Write side of the mesh stream to each peer (`None` at our own
-    /// index — self-sends short-circuit through `self_tx`).
-    peers: Vec<Option<TcpStream>>,
+    /// Write lane to each peer (`None` at our own index — self-sends
+    /// short-circuit through `self_tx`).
+    lanes: Vec<Option<TxLane>>,
     /// Per-source frame queues fed by the reader threads.
     inbox: Vec<Receiver<Frame>>,
     self_tx: Sender<Frame>,
+    /// Shared liveness verdicts (readers + heartbeat thread + us).
+    detector: Arc<FailureDetector>,
+    /// Zero point of the detector's millisecond clock.
+    epoch: Instant,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl TcpTransport {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
     fn write_wire(&mut self, to: usize, tag: u8, payload: &[u8]) -> Result<()> {
         if to >= self.world {
             return Err(anyhow!(
@@ -313,12 +547,31 @@ impl TcpTransport {
                 self.world
             ));
         }
-        let s = self.peers[to].as_mut().expect("mesh is fully connected");
-        let mut header = [0u8; 9];
-        header[0] = tag;
-        header[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-        s.write_all(&header)?;
-        s.write_all(payload)?;
+        if self.detector.is_closed(to) {
+            return Err(TransportError::PeerClosed { rank: to }.into());
+        }
+        let lane = self.lanes[to].as_mut().expect("mesh is fully connected");
+        lane.tx_seq += 1;
+        let mut buf = encode_wire_frame(tag, lane.tx_seq, payload);
+        if lane.corrupt_next {
+            lane.corrupt_next = false;
+            // Flip one payload byte AFTER the CRC was computed, so the
+            // receiver's check must fire; empty payloads flip the tag.
+            let idx = if payload.is_empty() { 0 } else { 17 };
+            buf[idx] ^= 0x01;
+        }
+        lane.last_frame =
+            (buf.len() <= DUP_CACHE_MAX_BYTES).then(|| buf.clone());
+        let mut s = lane
+            .stream
+            .lock()
+            .map_err(|_| anyhow!("lane {to} mutex poisoned"))?;
+        if let Err(e) = s.write_all(&buf) {
+            // Single-attempt policy (see module docs): a failed or
+            // timed-out frame write is unrecoverable mid-stream.
+            self.detector.mark_closed(to);
+            return Err(anyhow!("send to rank {to} failed: {e}"));
+        }
         Ok(())
     }
 
@@ -331,20 +584,30 @@ impl TcpTransport {
         }
         self.inbox[from]
             .recv()
-            .map_err(|_| anyhow!("rank {from} disconnected"))
+            .map_err(|_| TransportError::PeerClosed { rank: from }.into())
+    }
+
+    fn close_impl(&mut self) {
+        self.hb_stop.store(true, Ordering::Release);
+        if let Some(h) = self.hb_thread.take() {
+            let _ = h.join();
+        }
+        // Shut both directions of every mesh stream down so OUR reader
+        // threads (which hold `try_clone`d handles of the same
+        // sockets) and the remote peers' readers all observe EOF and
+        // exit — without this, dropped endpoints would strand one
+        // blocked reader thread per peer for the life of the process.
+        for lane in self.lanes.iter().flatten() {
+            if let Ok(s) = lane.stream.lock() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
     }
 }
 
 impl Drop for TcpTransport {
-    /// Shut both directions of every mesh stream down so OUR reader
-    /// threads (which hold `try_clone`d handles of the same sockets)
-    /// and the remote peers' readers all observe EOF and exit —
-    /// without this, dropped endpoints would strand one blocked
-    /// reader thread per peer for the life of the process.
     fn drop(&mut self) {
-        for s in self.peers.iter().flatten() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
-        }
+        self.close_impl();
     }
 }
 
@@ -389,6 +652,61 @@ impl Transport for TcpTransport {
     fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
         let f = self.pull(from)?;
         expect_bytes(f, from)
+    }
+
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        if from >= self.world {
+            return Err(anyhow!(
+                "recv from rank {from} out of range (world {})",
+                self.world
+            ));
+        }
+        match self.inbox[from].recv_timeout(Duration::from_millis(timeout_ms))
+        {
+            Ok(f) => expect_bytes(f, from).map(Some),
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn peer_closed(&self, rank: usize) -> bool {
+        self.detector.is_closed(rank)
+            || self.detector.suspected(rank, self.now_ms())
+    }
+
+    fn close(&mut self) {
+        self.close_impl();
+    }
+
+    fn resend_last(&mut self, to: usize) -> Result<()> {
+        if to >= self.world || to == self.rank {
+            return Ok(());
+        }
+        let lane = self.lanes[to].as_mut().expect("mesh is fully connected");
+        let Some(buf) = lane.last_frame.clone() else {
+            return Ok(()); // nothing cached (bulk frame or no sends yet)
+        };
+        let mut s = lane
+            .stream
+            .lock()
+            .map_err(|_| anyhow!("lane {to} mutex poisoned"))?;
+        if let Err(e) = s.write_all(&buf) {
+            self.detector.mark_closed(to);
+            return Err(anyhow!("resend to rank {to} failed: {e}"));
+        }
+        Ok(())
+    }
+
+    fn corrupt_next_send(&mut self, to: usize) {
+        if to < self.world && to != self.rank {
+            if let Some(lane) = self.lanes[to].as_mut() {
+                lane.corrupt_next = true;
+            }
+        }
     }
 }
 
@@ -461,5 +779,84 @@ mod tests {
         assert!(connect("127.0.0.1:1", 0, 4).is_err());
         assert!(connect("127.0.0.1:1", 4, 4).is_err());
         assert!(Rendezvous::bind("127.0.0.1:0", 0).is_err());
+    }
+
+    #[test]
+    fn wire_frames_round_trip_and_reject_corruption() {
+        // Satellite 3, unit scope: record a real frame, corrupt one
+        // byte, and the decode failure is the TYPED corrupt variant —
+        // not a panic, not a silently wrong payload.
+        let payload = vec![5u8, 6, 7, 8];
+        let buf = encode_wire_frame(TAG_BYTES, 42, &payload);
+        let (tag, seq, body) = decode_wire_frame(&buf, 1).unwrap();
+        assert_eq!((tag, seq), (TAG_BYTES, 42));
+        assert_eq!(body, payload);
+
+        for idx in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[idx] ^= 0x10;
+            let err = decode_wire_frame(&bad, 1).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    TransportError::Corrupt { from: 1, .. }
+                        | TransportError::Protocol { .. }
+                ),
+                "byte {idx}: unexpected error {err}"
+            );
+        }
+        // A truncated envelope is a protocol error, not a CRC error.
+        assert!(matches!(
+            decode_wire_frame(&buf[..10], 0).unwrap_err(),
+            TransportError::Protocol { .. }
+        ));
+    }
+
+    #[test]
+    fn duplicate_frames_are_dropped_by_sequence_dedup() {
+        let mut eps = thread_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[1]).unwrap();
+        a.resend_last(1).unwrap(); // same bytes, same seq
+        a.send_bytes(1, &[2]).unwrap();
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![1]);
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![2]);
+        // The duplicate was dropped, not queued.
+        assert_eq!(b.recv_bytes_timeout(0, 50).unwrap(), None);
+    }
+
+    #[test]
+    fn corrupt_frame_kills_the_lane_and_marks_the_peer_dead() {
+        let mut eps = thread_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.corrupt_next_send(1);
+        a.send_bytes(1, &[9, 9, 9]).unwrap();
+        // b's reader hits the CRC mismatch: the frame never surfaces,
+        // the lane closes, and the peer is declared dead.
+        assert!(b.recv_bytes(0).is_err());
+        assert!(b.peer_closed(0), "corruption must mark the peer closed");
+    }
+
+    #[test]
+    fn heartbeats_keep_idle_peers_alive_and_eof_marks_them_dead() {
+        let mut eps = thread_fabric(2).unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        // Idle well past several heartbeat intervals: still alive.
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(!a.peer_closed(1));
+        assert!(!b.peer_closed(0));
+        // Dropping b closes its sockets; a's reader sees EOF.
+        drop(b);
+        let t0 = Instant::now();
+        while !a.peer_closed(1) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "EOF never surfaced as peer_closed"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
     }
 }

@@ -15,6 +15,12 @@
 //! trajectory still matches the leader-resident reference bit for bit
 //! across churn on every transport.
 
+//! PR 6 extends the scope to fail-stop faults: a chaos-injected crash
+//! on the socket fabric is detected by the liveness poll, re-planned,
+//! and its state re-streamed from the rank-0 mirror — and the session
+//! STILL rides the single-worker reference trajectory bit for bit
+//! (DESIGN.md invariant 12: crash recovery ≡ graceful departure).
+
 use std::sync::Arc;
 
 use cephalo::coordinator::session::{Session, SessionConfig};
@@ -49,6 +55,53 @@ fn session_with(fabric: Option<FabricSpec>, shard_params: bool) -> Session {
 
 fn session(fabric: Option<FabricSpec>) -> Session {
     session_with(fabric, false)
+}
+
+/// A 5-GPU single-node cluster: enough worker ranks to absorb three
+/// injected crashes (ranks 4, 3, 2) and still hold a 2-rank quorum.
+fn tiny5_cluster() -> cephalo::cluster::Cluster {
+    use cephalo::cluster::catalog::find;
+    use cephalo::cluster::{Cluster, Node};
+    Cluster {
+        name: "tiny5".into(),
+        nodes: vec![Node {
+            name: "n0".into(),
+            gpus: vec![
+                find("T4").unwrap(),
+                find("V100").unwrap(),
+                find("P40").unwrap(),
+                find("P100").unwrap(),
+                find("L4").unwrap(),
+            ],
+            intra_bw_gbps: 64.0,
+        }],
+        inter_bw_gbps: 50.0,
+    }
+}
+
+/// A session on the 5-GPU cluster, optionally under a chaos schedule.
+fn session5(
+    fabric: Option<FabricSpec>,
+    shard_params: bool,
+    chaos: Option<&str>,
+) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric,
+        shard_params,
+        chaos: chaos.map(String::from),
+        ..Default::default()
+    };
+    Session::new(
+        tiny5_cluster(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("session starts on the 5-GPU cluster")
 }
 
 fn reference() -> Trainer {
@@ -244,4 +297,150 @@ fn fully_sharded_sessions_match_the_leader_resident_reference() {
     assert!(moved > 0, "churn never moved any sharded weights");
     assert!(sh_tcp.reports.iter().any(|r| r.from_cache));
     assert_eq!(sh_tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
+}
+
+#[test]
+fn chaotic_tcp_sessions_survive_three_crashes_bitwise() {
+    // Acceptance (tentpole): three injected worker crashes on the real
+    // socket fabric, leader-resident AND fully-sharded. Every crash is
+    // detected by the liveness poll, the membership is re-planned, and
+    // the dead rank's Adam state (and weight slice, when sharded) is
+    // re-streamed from the rank-0 mirror over the wire. The session
+    // never leaves the single-worker reference trajectory, and ends
+    // bitwise equal to a session that never saw a fault — DESIGN.md
+    // invariant 12 at full system scope.
+    for shard_params in [false, true] {
+        let mut chaotic = session5(
+            Some(FabricSpec::TcpThreads),
+            shard_params,
+            Some("seed=3,crash=3,first=1,stride=2,delay=0,dup=0"),
+        );
+        let mut graceful = session5(None, shard_params, None);
+        let mut solo = reference();
+        assert!(chaotic.fault_plan().is_some());
+        assert_eq!(chaotic.params().unwrap(), solo.params());
+
+        // Crash steps: rank 4 after step 1, then ranks 3 and 2 at
+        // stride-2 spacing plus jitter — the last lands by step 9, so
+        // 7 events (14 steps) cover every detection with margin.
+        let events = 7;
+        for hour in 0..events {
+            chaotic.step_event(hour, 5).unwrap();
+            graceful.step_event(hour, 5).unwrap();
+            for _ in 0..STEPS_PER_EVENT {
+                let idx = solo.history.len();
+                solo.step(idx).unwrap();
+            }
+            assert_eq!(
+                chaotic.params().unwrap(),
+                solo.params(),
+                "chaotic session left the reference trajectory after \
+                 hour {hour} (shard_params={shard_params})"
+            );
+        }
+
+        // All three scheduled crashes were detected, one poll each,
+        // shrinking the membership 4 -> 3 -> 2.
+        assert_eq!(
+            chaotic.recoveries.len(),
+            3,
+            "expected one recovery per scheduled crash \
+             (shard_params={shard_params}): {:?}",
+            chaotic.recoveries
+        );
+        let mut dead: Vec<usize> = chaotic
+            .recoveries
+            .iter()
+            .flat_map(|r| r.ranks.clone())
+            .collect();
+        dead.sort_unstable();
+        assert_eq!(dead, vec![2, 3, 4]);
+        assert_eq!(
+            chaotic.recoveries.iter().map(|r| r.gpus).collect::<Vec<_>>(),
+            vec![4, 3, 2]
+        );
+        assert_eq!(chaotic.max_live(), 2);
+        assert_eq!(chaotic.current_size(), 2);
+
+        // Invariant 12: the crash-recovered session is bitwise equal
+        // to the fault-free session (membership is invisible, so the
+        // graceful run's intact 5-rank group rides the same path).
+        assert_eq!(chaotic.steps_run(), graceful.steps_run());
+        assert_eq!(
+            chaotic.params().unwrap(),
+            graceful.params().unwrap(),
+            "crash recovery diverged from the fault-free session \
+             (shard_params={shard_params})"
+        );
+    }
+}
+
+#[test]
+fn corrupted_frame_declares_the_rank_dead_and_recovery_stays_bitwise() {
+    // Satellite: wire corruption is a fail-stop event, not silent data
+    // damage. Rank 2's PING reply has one byte flipped after its CRC
+    // was computed; the coordinator's checksum verification kills the
+    // lane, the liveness poll declares the rank dead, and the session
+    // recovers from the mirror — bitwise equal to a graceful departure
+    // of the same rank.
+    use cephalo::coordinator::elastic::plan_migration;
+    use cephalo::sharding::ShardLayout;
+    use cephalo::transport::{
+        ChaosOpts, DistConfig, DistDriver, FaultPlan,
+    };
+
+    let member = |batch: usize, ratio: f64| WorkerSpec {
+        batch,
+        state_ratio: ratio,
+        name: String::new(),
+    };
+    let membership =
+        || vec![member(4, 0.5), member(2, 0.3), member(2, 0.2)];
+    let mut plan = FaultPlan::quiet(3);
+    plan.faults[2].corrupt_pong_after_step = Some(0);
+    let cfg = DistConfig { seed: 5, ft: true, ..Default::default() };
+    let mut corrupted = DistDriver::launch_with_chaos(
+        FabricSpec::TcpThreads,
+        3,
+        cfg.clone(),
+        membership(),
+        Some(ChaosOpts { plan, cli_spec: None }),
+    )
+    .unwrap();
+    let mut graceful =
+        DistDriver::launch(FabricSpec::TcpThreads, 3, cfg, membership())
+            .unwrap();
+
+    corrupted.step(0).unwrap();
+    graceful.step(0).unwrap();
+    assert_eq!(
+        corrupted.poll_failures(),
+        vec![2],
+        "a CRC-failed frame must fail the sender's liveness check"
+    );
+    assert!(graceful.poll_failures().is_empty());
+
+    // Same shrink on both drivers; the corrupted one must source the
+    // departed rank's ranges from the mirror (the rank is a zombie:
+    // alive but excluded), the graceful one streams from rank 2.
+    let new_membership = vec![member(4, 0.6), member(4, 0.4)];
+    let survivors = vec![Some(0), Some(1)];
+    for d in [&mut corrupted, &mut graceful] {
+        let old = d.layout().clone();
+        let new = ShardLayout::by_ratios(old.len(), &[0.6, 0.4]);
+        let (transfers, _, _) = plan_migration(&old, &new, &survivors);
+        d.migrate(new_membership.clone(), &survivors, &transfers)
+            .unwrap();
+    }
+    for s in 1..3 {
+        corrupted.step(s).unwrap();
+        graceful.step(s).unwrap();
+    }
+    assert_eq!(
+        corrupted.gather_params().unwrap(),
+        graceful.gather_params().unwrap(),
+        "corruption-triggered recovery diverged from the graceful path"
+    );
+    corrupted.shutdown();
+    graceful.shutdown();
 }
