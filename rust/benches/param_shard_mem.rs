@@ -150,6 +150,86 @@ fn main() {
          bytes; every leader rank replicates them  [ok]"
     );
 
+    // ---- Transient gather peak: whole-model vs FSDP units ----
+    // The FSDP-unit claim, measured: the per-rank peak of TRANSIENTLY
+    // materialized parameter bytes scales with the largest unit (plus
+    // the double-buffered prefetch and the bias tail), not with total
+    // parameters.
+    let units: usize = cephalo::benchkit::bench_opt("fsdp-units")
+        .map(|s| s.parse().expect("bad --fsdp-units"))
+        .unwrap_or(4);
+    let peak_bench = |fsdp_units: usize| -> (usize, usize, usize) {
+        let cfg = TrainConfig {
+            steps: 0,
+            seed: 7,
+            log_every: 0,
+            shard_params: true,
+            fsdp_units,
+            ..Default::default()
+        };
+        let mut tr = Trainer::from_executor(
+            Box::new(NativeExecutor::new(SurrogateSpec::default())),
+            workers(),
+            cfg,
+        )
+        .expect("trainer");
+        for s in 0..steps {
+            tr.step(s).expect("step");
+        }
+        let ul = tr.units();
+        let tail = ul.unit_len(ul.num_units() - 1);
+        (
+            tr.peak_materialized_elems() * 4,
+            ul.largest_unit() * 4,
+            tail * 4,
+        )
+    };
+    let (whole_peak, _, _) = peak_bench(1);
+    let (unit_peak, largest_bytes, tail_bytes) = peak_bench(units);
+    let mut t = Table::new(
+        &format!(
+            "Per-rank transient gather peak (bytes): whole-model vs \
+             {units} FSDP units"
+        ),
+        &["gather", "peak bytes", "largest unit", "bound (2u + tail)"],
+    );
+    t.add_row(vec![
+        "whole".into(),
+        whole_peak.to_string(),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.add_row(vec![
+        format!("{units} units"),
+        unit_peak.to_string(),
+        largest_bytes.to_string(),
+        (2 * largest_bytes + tail_bytes).to_string(),
+    ]);
+    println!("{}", t.render());
+    for (fsdp_units, peak, largest, tail) in [
+        (1usize, whole_peak, whole_peak, 0usize),
+        (units, unit_peak, largest_bytes, tail_bytes),
+    ] {
+        let mut row = BTreeMap::new();
+        row.insert("scale".into(), Json::Str("transient".into()));
+        row.insert("fsdp_units".into(), num(fsdp_units as f64));
+        row.insert("peak_param_bytes".into(), num(peak as f64));
+        row.insert("largest_unit_bytes".into(), num(largest as f64));
+        row.insert("tail_bytes".into(), num(tail as f64));
+        json_rows.push(Json::Obj(row));
+    }
+    // Whole-model gather materializes every weight byte; the unit
+    // schedule's peak is bounded by the prefetch pair + tail, strictly
+    // below the model.
+    assert_eq!(whole_peak, total_bytes);
+    assert!(unit_peak <= 2 * largest_bytes + tail_bytes);
+    assert!(unit_peak < whole_peak);
+    println!(
+        "shape check: {units}-unit peak {unit_peak} B scales with the \
+         largest unit ({largest_bytes} B), not the model \
+         ({whole_peak} B)  [ok]"
+    );
+
     if let Some(path) = json_path {
         cephalo::benchkit::write_json_rows(
             &path, "param_shard_mem", quick, json_rows,

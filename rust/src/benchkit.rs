@@ -144,6 +144,297 @@ pub fn write_json_rows(
     println!("wrote {path}");
 }
 
+/// Value of a `--<name> <value>` option on the bench command line.
+pub fn bench_opt(name: &str) -> Option<String> {
+    let flag = format!("--{name}");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    args.iter().position(|a| *a == flag).map(|i| {
+        let val = args
+            .get(i + 1)
+            .unwrap_or_else(|| panic!("{flag} needs a value"));
+        if val.starts_with("--") {
+            panic!("{flag} needs a value, got flag '{val}'");
+        }
+        val.clone()
+    })
+}
+
+// ---------------------------------------------------------------------
+// Perf-trajectory gate: compare two `BENCH_*.json` artifacts of the
+// same bench and fail on regression. Deterministic metrics (bytes,
+// element counts, peaks, ratios) must match exactly; rate metrics
+// (GB/s, steps/sec) jitter per key on quick runs, so the gate checks
+// their aggregate — the geometric mean of current/baseline ratios —
+// against the noise band.
+// ---------------------------------------------------------------------
+
+/// Fractional regression of the aggregate rate metric that still
+/// counts as scheduler noise rather than a perf loss.
+pub const RATE_NOISE_BAND: f64 = 0.40;
+
+/// How a metric is judged by the gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Deterministic accounting — any change is a regression.
+    Exact,
+    /// Throughput-like — higher is better, judged in aggregate.
+    Rate,
+    /// Reported but never gated.
+    Info,
+}
+
+/// One flattened `(key, value)` sample from a bench row.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub key: String,
+    pub class: MetricClass,
+    pub value: f64,
+}
+
+/// Classify a row field by its name.
+pub fn metric_class(field: &str) -> MetricClass {
+    if field.contains("bytes")
+        || field.contains("elems")
+        || field.contains("peak")
+        || field.contains("ratio")
+    {
+        MetricClass::Exact
+    } else if field.contains("gbps") || field.contains("per_sec") {
+        MetricClass::Rate
+    } else {
+        MetricClass::Info
+    }
+}
+
+/// Numeric fields that name the row rather than measure it.
+const ID_NUM_KEYS: [&str; 4] = ["gpu", "elems", "units", "fsdp_units"];
+
+/// Flatten bench rows into stably-keyed metrics: each row's identity
+/// prefix is built from its string fields plus the id-like numeric
+/// fields, and every remaining numeric (or numeric-array) field
+/// becomes one metric under that prefix. Sorted by key, so equal rows
+/// always flatten identically regardless of row order.
+pub fn flatten_metrics(rows: &[crate::util::json::Json]) -> Vec<Metric> {
+    use crate::util::json::Json;
+    let mut out: Vec<Metric> = Vec::new();
+    for row in rows {
+        let Json::Obj(obj) = row else { continue };
+        let mut id: Vec<String> = Vec::new();
+        for (k, v) in obj.iter() {
+            match v {
+                Json::Str(s) => id.push(format!("{k}={s}")),
+                Json::Num(n) if ID_NUM_KEYS.contains(&k.as_str()) => {
+                    id.push(format!("{k}={n}"));
+                }
+                _ => {}
+            }
+        }
+        let prefix = id.join(",");
+        let mut push = |name: String, value: f64| {
+            let class = metric_class(&name);
+            let key = if prefix.is_empty() {
+                name
+            } else {
+                format!("{prefix}:{name}")
+            };
+            out.push(Metric { key, class, value });
+        };
+        for (k, v) in obj.iter() {
+            match v {
+                Json::Num(n) if !ID_NUM_KEYS.contains(&k.as_str()) => {
+                    push(k.clone(), *n);
+                }
+                Json::Arr(xs) => {
+                    for (i, x) in xs.iter().enumerate() {
+                        if let Json::Num(n) = x {
+                            push(format!("{k}[{i}]"), *n);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out.sort_by(|a, b| a.key.cmp(&b.key));
+    out
+}
+
+/// The gate's verdict over one baseline/current pair.
+#[derive(Debug)]
+pub struct GateReport {
+    /// Exact metrics whose values drifted (`key: baseline -> current`).
+    pub exact_failures: Vec<String>,
+    /// Baseline metrics absent from the current run.
+    pub missing: Vec<String>,
+    /// `(key, current/baseline)` for every rate metric.
+    pub rate_ratios: Vec<(String, f64)>,
+    /// Geometric mean of the rate ratios (1.0 when there are none).
+    pub rate_geomean: f64,
+    pub pass: bool,
+}
+
+/// Compare flattened metrics. Exact metrics must match bit for bit;
+/// the aggregate rate ratio must stay within [`RATE_NOISE_BAND`].
+pub fn compare_metrics(
+    baseline: &[Metric],
+    current: &[Metric],
+) -> GateReport {
+    use std::collections::BTreeMap;
+    let cur: BTreeMap<&str, &Metric> =
+        current.iter().map(|m| (m.key.as_str(), m)).collect();
+    let mut exact_failures = Vec::new();
+    let mut missing = Vec::new();
+    let mut rate_ratios = Vec::new();
+    for b in baseline {
+        let Some(c) = cur.get(b.key.as_str()) else {
+            missing.push(b.key.clone());
+            continue;
+        };
+        match b.class {
+            MetricClass::Exact => {
+                if c.value.to_bits() != b.value.to_bits() {
+                    exact_failures.push(format!(
+                        "{}: {} -> {}",
+                        b.key, b.value, c.value
+                    ));
+                }
+            }
+            MetricClass::Rate => {
+                if b.value > 0.0 && c.value.is_finite() {
+                    rate_ratios.push((b.key.clone(), c.value / b.value));
+                }
+            }
+            MetricClass::Info => {}
+        }
+    }
+    let rate_geomean = if rate_ratios.is_empty() {
+        1.0
+    } else {
+        let logs: Vec<f64> =
+            rate_ratios.iter().map(|(_, r)| r.ln()).collect();
+        crate::util::stats::mean(&logs).exp()
+    };
+    let pass = exact_failures.is_empty()
+        && missing.is_empty()
+        && rate_geomean >= 1.0 - RATE_NOISE_BAND;
+    GateReport {
+        exact_failures,
+        missing,
+        rate_ratios,
+        rate_geomean,
+        pass,
+    }
+}
+
+impl GateReport {
+    /// Serialize the verdict (the CI artifact).
+    pub fn to_json(&self, bench: &str) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str(bench.to_string()));
+        o.insert("pass".to_string(), Json::Bool(self.pass));
+        o.insert(
+            "rate_geomean".to_string(),
+            Json::Num(self.rate_geomean),
+        );
+        o.insert(
+            "rate_noise_band".to_string(),
+            Json::Num(RATE_NOISE_BAND),
+        );
+        o.insert(
+            "exact_failures".to_string(),
+            Json::Arr(
+                self.exact_failures
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "missing".to_string(),
+            Json::Arr(
+                self.missing.iter().map(|s| Json::Str(s.clone())).collect(),
+            ),
+        );
+        o.insert(
+            "rates".to_string(),
+            Json::Arr(
+                self.rate_ratios
+                    .iter()
+                    .map(|(k, r)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("key".to_string(), Json::Str(k.clone()));
+                        m.insert("ratio".to_string(), Json::Num(*r));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Compare two bench artifacts on disk (same bench, two runs), write
+/// the verdict JSON to `out_path` if given, and return whether the
+/// gate passed.
+pub fn gate_files(
+    baseline_path: &str,
+    current_path: &str,
+    out_path: Option<&str>,
+) -> Result<bool, String> {
+    use crate::util::json::Json;
+    let load = |p: &str| -> Result<(String, Vec<Json>), String> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("reading {p}: {e}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("parsing {p}: {e}"))?;
+        let bench = j
+            .get("bench")
+            .and_then(|b| b.as_str())
+            .ok_or_else(|| format!("{p}: missing 'bench'"))?
+            .to_string();
+        let rows = j
+            .get("rows")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| format!("{p}: missing 'rows'"))?
+            .to_vec();
+        Ok((bench, rows))
+    };
+    let (b_bench, b_rows) = load(baseline_path)?;
+    let (c_bench, c_rows) = load(current_path)?;
+    if b_bench != c_bench {
+        return Err(format!(
+            "bench mismatch: baseline '{b_bench}' vs current '{c_bench}'"
+        ));
+    }
+    let report = compare_metrics(
+        &flatten_metrics(&b_rows),
+        &flatten_metrics(&c_rows),
+    );
+    if let Some(path) = out_path {
+        std::fs::write(path, report.to_json(&b_bench).render())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+    }
+    for f in &report.exact_failures {
+        println!("REGRESSION (exact): {f}");
+    }
+    for m in &report.missing {
+        println!("REGRESSION (missing metric): {m}");
+    }
+    println!(
+        "{}: {} exact drift(s), {} missing, rate geomean {:.3} \
+         (band {:.2}) -> {}",
+        b_bench,
+        report.exact_failures.len(),
+        report.missing.len(),
+        report.rate_geomean,
+        RATE_NOISE_BAND,
+        if report.pass { "PASS" } else { "FAIL" }
+    );
+    Ok(report.pass)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +463,142 @@ mod tests {
         let md = b.render_markdown("t");
         assert!(md.contains("| a |"));
         assert!(md.contains("| b |"));
+    }
+
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    fn row(pairs: &[(&str, Json)]) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in pairs {
+            m.insert(k.to_string(), v.clone());
+        }
+        Json::Obj(m)
+    }
+
+    fn sample_rows(gbps: f64, bytes: f64) -> Vec<Json> {
+        vec![
+            row(&[
+                ("elems", Json::Num(1024.0)),
+                ("bytes_per_round", Json::Num(bytes)),
+                ("ag_local_gbps", Json::Num(gbps)),
+            ]),
+            row(&[
+                ("scale", Json::Str("executed".into())),
+                ("residency", Json::Str("sharded".into())),
+                (
+                    "param_bytes",
+                    Json::Arr(vec![Json::Num(8.0), Json::Num(4.0)]),
+                ),
+                ("steps_per_sec", Json::Num(100.0)),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn metrics_flatten_with_stable_keys_and_classes() {
+        let ms = flatten_metrics(&sample_rows(2.0, 4096.0));
+        let keys: Vec<&str> =
+            ms.iter().map(|m| m.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "elems=1024:ag_local_gbps",
+                "elems=1024:bytes_per_round",
+                "residency=sharded,scale=executed:param_bytes[0]",
+                "residency=sharded,scale=executed:param_bytes[1]",
+                "residency=sharded,scale=executed:steps_per_sec",
+            ]
+        );
+        assert_eq!(ms[0].class, MetricClass::Rate);
+        assert_eq!(ms[1].class, MetricClass::Exact);
+        assert_eq!(ms[2].class, MetricClass::Exact);
+        assert_eq!(ms[4].class, MetricClass::Rate);
+    }
+
+    #[test]
+    fn gate_passes_identical_runs_and_rate_jitter_within_band() {
+        let base = flatten_metrics(&sample_rows(2.0, 4096.0));
+        let same = compare_metrics(&base, &base);
+        assert!(same.pass);
+        assert_eq!(same.rate_geomean, 1.0);
+        // A 30% aggregate rate dip is inside the 40% noise band.
+        let jittered = flatten_metrics(&{
+            let mut rows = sample_rows(1.4, 4096.0);
+            if let Json::Obj(m) = &mut rows[1] {
+                m.insert("steps_per_sec".into(), Json::Num(70.0));
+            }
+            rows
+        });
+        assert!(compare_metrics(&base, &jittered).pass);
+    }
+
+    #[test]
+    fn gate_fails_exact_drift_missing_metrics_and_rate_collapse() {
+        let base = flatten_metrics(&sample_rows(2.0, 4096.0));
+        // Deterministic accounting drifted: always a regression.
+        let drifted = flatten_metrics(&sample_rows(2.0, 8192.0));
+        let r = compare_metrics(&base, &drifted);
+        assert!(!r.pass);
+        assert_eq!(r.exact_failures.len(), 1);
+        // A metric vanished.
+        let fewer = flatten_metrics(&sample_rows(2.0, 4096.0)[..1]);
+        assert!(!compare_metrics(&base, &fewer).pass);
+        // Rates collapsed beyond the band.
+        let slow = flatten_metrics(&{
+            let mut rows = sample_rows(1.0, 4096.0);
+            if let Json::Obj(m) = &mut rows[1] {
+                m.insert("steps_per_sec".into(), Json::Num(50.0));
+            }
+            rows
+        });
+        let r = compare_metrics(&base, &slow);
+        assert!(!r.pass);
+        assert!(r.exact_failures.is_empty());
+        assert!((r.rate_geomean - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_files_round_trip_writes_the_verdict() {
+        let dir = std::env::temp_dir();
+        let bp = dir.join("cephalo_gate_base.json");
+        let cp = dir.join("cephalo_gate_cur.json");
+        let vp = dir.join("cephalo_gate_verdict.json");
+        let write = |p: &std::path::Path, rows: Vec<Json>| {
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(), Json::Str("t".into()));
+            root.insert("quick".to_string(), Json::Bool(true));
+            root.insert("rows".to_string(), Json::Arr(rows));
+            std::fs::write(p, Json::Obj(root).render()).unwrap();
+        };
+        write(&bp, sample_rows(2.0, 4096.0));
+        write(&cp, sample_rows(1.9, 4096.0));
+        let pass = gate_files(
+            bp.to_str().unwrap(),
+            cp.to_str().unwrap(),
+            Some(vp.to_str().unwrap()),
+        )
+        .unwrap();
+        assert!(pass);
+        let verdict =
+            Json::parse(&std::fs::read_to_string(&vp).unwrap()).unwrap();
+        assert_eq!(verdict.get("pass").unwrap().as_bool(), Some(true));
+        assert_eq!(verdict.get("bench").unwrap().as_str(), Some("t"));
+        assert!(verdict.get("rate_geomean").unwrap().as_f64().is_some());
+        // Mismatched bench names are a loud error, not a silent pass.
+        write(&cp, sample_rows(2.0, 4096.0));
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("other".into()));
+        root.insert("rows".to_string(), Json::Arr(Vec::new()));
+        std::fs::write(&bp, Json::Obj(root).render()).unwrap();
+        assert!(gate_files(
+            bp.to_str().unwrap(),
+            cp.to_str().unwrap(),
+            None
+        )
+        .is_err());
+        for p in [&bp, &cp, &vp] {
+            std::fs::remove_file(p).ok();
+        }
     }
 }

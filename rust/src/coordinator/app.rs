@@ -32,6 +32,7 @@ pub fn main_with_args(argv: Vec<String>) -> i32 {
         "train" => cmd_train(&rest),
         "trace" => cmd_trace(&rest),
         "worker" => cmd_worker(&rest),
+        "bench-gate" => cmd_bench_gate(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -64,6 +65,8 @@ fn print_help() {
          trace     generate the AWS availability trace (Fig. 1)\n  \
          worker    one distributed training rank (spawned by the\n            \
          coordinator for --transport tcp)\n  \
+         bench-gate  compare two BENCH_*.json runs; non-zero exit on\n            \
+         perf regression beyond the noise band\n  \
          help      this message\n\n\
          run `cephalo <command> --help` for options"
     );
@@ -94,6 +97,37 @@ fn resolve_cluster(name: &str) -> Result<Cluster, String> {
 
 fn plan_err(e: PlanError) -> String {
     e.to_string()
+}
+
+/// Fully-sharded parameters are the DEFAULT for training commands:
+/// `--leader-params` opts back into the historical leader-resident
+/// engine, and `--shard-params` is kept as an accepted no-op for
+/// scripts written against the old default. Safe to flip because the
+/// sharded trajectory is bitwise-identical either way (DESIGN.md
+/// invariants 11 and 13).
+fn shard_params_flag(a: &crate::cli::Args) -> Result<bool, String> {
+    if a.has("leader-params") && a.has("shard-params") {
+        return Err(
+            "--leader-params and --shard-params are mutually exclusive"
+                .into(),
+        );
+    }
+    Ok(!a.has("leader-params"))
+}
+
+/// The `--fsdp-units` / `--leader-params` / `--shard-params` trio
+/// shared by `train` and `elastic --live`.
+fn sharding_specs(specs: &mut Vec<OptSpec>) {
+    specs.push(opt("fsdp-units", "cut the per-step parameter gather \
+                                  into this many per-layer FSDP units \
+                                  (prefetched + freed unit-by-unit; \
+                                  1 = whole-model gather)", Some("1")));
+    specs.push(switch("shard-params", "fully-sharded parameters \
+                                       (the default; accepted for \
+                                       compatibility)"));
+    specs.push(switch("leader-params", "opt out of fully-sharded \
+                                        parameters: keep the historical \
+                                        leader-resident weight copy"));
 }
 
 fn cmd_optimize(argv: &[String]) -> Result<(), String> {
@@ -322,10 +356,7 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     specs.push(opt("transport", "live-session substrate: inproc | \
                                  local (channel ranks) | tcp (worker \
                                  processes)", Some("inproc")));
-    specs.push(switch("shard-params", "fully-sharded parameters: no \
-                                       leader-resident weight copy; \
-                                       migrations move weight ranges \
-                                       too (--live)"));
+    sharding_specs(&mut specs);
     specs.push(opt("plan-cache", "JSON file to warm the plan cache \
                                   from and persist it to (--live)",
                    None));
@@ -460,7 +491,8 @@ fn cmd_elastic_live(
         seed: a.get_u64("seed").unwrap_or(42),
         min_gpus: a.get_usize("min-gpus").unwrap_or(0),
         fabric,
-        shard_params: a.has("shard-params"),
+        shard_params: shard_params_flag(a)?,
+        fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
         plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
         ft: a.has("ft"),
         chaos: a.get("chaos").map(String::from),
@@ -661,9 +693,7 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
                                  sockets)", Some("inproc")));
     specs.push(opt("workers", "distributed ranks; trains on the first N \
                                GPUs of the cluster (0 = all)", Some("0")));
-    specs.push(switch("shard-params", "fully-sharded parameters: each \
-                                       rank holds only its r_i weight \
-                                       slice, gathered per step"));
+    sharding_specs(&mut specs);
     specs.push(opt("steps", "training steps", Some("50")));
     specs.push(opt("lr", "Adam learning rate", Some("0.001")));
     specs.push(opt("artifacts", "artifacts directory (pjrt backend)",
@@ -729,7 +759,8 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         },
         corpus_branch: 4,
         log_every: a.get_usize("log-every").unwrap_or(10),
-        shard_params: a.has("shard-params"),
+        shard_params: shard_params_flag(&a)?,
+        fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
     };
     let backend = a.get("backend").unwrap().to_string();
     let mut trainer = match backend.as_str() {
@@ -828,7 +859,9 @@ fn train_distributed(
         },
         corpus_branch: 4,
         surrogate: SurrogateSpec::default(),
-        shard_params: a.has("shard-params"),
+        shard_params: shard_params_flag(a)?,
+        ft: false,
+        fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
     };
     let timer = StepTimeModel::from_oracle(&w.oracle, w.model.layers);
     let mut driver = DistDriver::launch(spec, world, dcfg, workers)
@@ -917,6 +950,39 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
         }
     }
+}
+
+/// `bench-gate --baseline <json> --current <json> [--out <verdict>]`:
+/// the perf-trajectory gate. Deterministic metrics (bytes/elems/peak/
+/// ratio keys) must match exactly; the aggregate of rate metrics may
+/// not regress beyond `benchkit::RATE_NOISE_BAND`. Non-zero exit on
+/// regression, so CI can wire it directly after a bench run.
+fn cmd_bench_gate(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        opt("baseline", "BENCH_*.json from the reference run", None),
+        opt("current", "BENCH_*.json from the candidate run", None),
+        opt("out", "write the comparison verdict JSON here", None),
+        switch("help", "show usage"),
+    ];
+    let a = parse(argv, &specs)?;
+    if a.has("help") {
+        println!("{}", usage(
+            "cephalo bench-gate",
+            "fail on perf regression between two bench artifacts",
+            &specs,
+        ));
+        return Ok(());
+    }
+    let baseline = a.get("baseline").ok_or("--baseline is required")?;
+    let current = a.get("current").ok_or("--current is required")?;
+    let pass =
+        crate::benchkit::gate_files(baseline, current, a.get("out"))?;
+    if !pass {
+        return Err(format!(
+            "perf gate failed: {current} regressed against {baseline}"
+        ));
+    }
+    Ok(())
 }
 
 /// Stand up the PJRT-backed trainer (`--backend pjrt`).
@@ -1105,6 +1171,43 @@ mod tests {
     }
 
     #[test]
+    fn train_unit_sharded_runs_on_both_engines() {
+        // Sharding is the default now; --fsdp-units cuts the gather.
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "native",
+                                "--fsdp-units", "4", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "16",
+                                "--steps", "2", "--log-every", "0"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "local",
+                                "--workers", "2", "--fsdp-units", "4",
+                                "--cluster", "a", "--model", "BERT-Large",
+                                "--batch", "16", "--steps", "2",
+                                "--log-every", "0"])),
+            0
+        );
+    }
+
+    #[test]
+    fn leader_params_opts_out_and_conflicts_with_shard_params() {
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "native",
+                                "--leader-params", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "16",
+                                "--steps", "2", "--log-every", "0"])),
+            0
+        );
+        assert_eq!(
+            main_with_args(sv(&["train", "--backend", "native",
+                                "--leader-params", "--shard-params",
+                                "--cluster", "a", "--batch", "16"])),
+            1
+        );
+    }
+
+    #[test]
     fn elastic_live_sharded_params_runs() {
         assert_eq!(
             main_with_args(sv(&["elastic", "--live", "--shard-params",
@@ -1205,6 +1308,47 @@ mod tests {
     #[test]
     fn trace_runs() {
         assert_eq!(main_with_args(sv(&["trace", "--hours", "3"])), 0);
+    }
+
+    #[test]
+    fn bench_gate_cli_passes_and_fails() {
+        let dir = std::env::temp_dir();
+        let bp = dir.join("cephalo_cli_gate_base.json");
+        let cp = dir.join("cephalo_cli_gate_cur.json");
+        let vp = dir.join("cephalo_cli_gate_verdict.json");
+        let write = |p: &std::path::Path, bytes: f64| {
+            std::fs::write(
+                p,
+                format!(
+                    "{{\"bench\":\"t\",\"quick\":true,\"rows\":\
+                     [{{\"elems\":64,\"bytes_per_round\":{bytes},\
+                     \"ag_local_gbps\":2.0}}]}}"
+                ),
+            )
+            .unwrap();
+        };
+        write(&bp, 256.0);
+        write(&cp, 256.0);
+        assert_eq!(
+            main_with_args(sv(&["bench-gate",
+                                "--baseline", bp.to_str().unwrap(),
+                                "--current", cp.to_str().unwrap(),
+                                "--out", vp.to_str().unwrap()])),
+            0
+        );
+        assert!(vp.exists());
+        // Deterministic accounting drifted -> gate fails loudly.
+        write(&cp, 512.0);
+        assert_eq!(
+            main_with_args(sv(&["bench-gate",
+                                "--baseline", bp.to_str().unwrap(),
+                                "--current", cp.to_str().unwrap()])),
+            1
+        );
+        assert_eq!(main_with_args(sv(&["bench-gate"])), 1);
+        for p in [&bp, &cp, &vp] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

@@ -88,6 +88,12 @@ pub struct SessionConfig {
     /// ranges alongside the Adam moments. Bitwise-identical to the
     /// leader-resident default (DESIGN.md invariant 11).
     pub shard_params: bool,
+    /// FSDP unit count for sharded engines: split the parameters into
+    /// this many per-layer groups and gather/free them one at a time
+    /// (next unit prefetched during compute) instead of materializing
+    /// the whole model per step. `<= 1` keeps whole-model gather.
+    /// Bitwise-identical either way (DESIGN.md invariant 13).
+    pub fsdp_units: usize,
     /// When set, the plan cache is loaded from this JSON file at
     /// session start (if it exists) and can be saved back with
     /// [`Session::save_plan_cache`] — recurring memberships stay warm
@@ -117,6 +123,7 @@ impl Default for SessionConfig {
             surrogate: SurrogateSpec::default(),
             fabric: None,
             shard_params: false,
+            fsdp_units: 1,
             plan_cache_path: None,
             ft: false,
             chaos: None,
@@ -329,6 +336,7 @@ impl Session {
                     corpus_branch: 4,
                     log_every: 0,
                     shard_params: cfg.shard_params,
+                    fsdp_units: cfg.fsdp_units,
                 };
                 Engine::InProcess(Box::new(Trainer::from_executor(
                     Box::new(exec),
@@ -343,6 +351,7 @@ impl Session {
                     corpus_branch: 4,
                     surrogate: cfg.surrogate.clone(),
                     shard_params: cfg.shard_params,
+                    fsdp_units: cfg.fsdp_units,
                     ft: cfg.ft || cfg.chaos.is_some(),
                 };
                 let chaos = match &cfg.chaos {

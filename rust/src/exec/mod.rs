@@ -28,7 +28,7 @@ pub use native::{NativeExecutor, StepTimeModel, SurrogateSpec};
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtExecutor;
 
-use crate::util::error::Result;
+use crate::util::error::{anyhow, Result};
 
 /// One training step's raw outcome, before the collective pipeline.
 #[derive(Debug, Clone)]
@@ -42,6 +42,25 @@ pub struct StepOutput {
     pub loss_sum: f64,
     /// Total tokens contributing to `loss_sum` (the Eq.-1 denominator).
     pub token_count: f64,
+}
+
+/// One FSDP unit's slice of a step, for unit-pipelined execution (the
+/// ZeRO overlap discipline): gradients for the materialized unit plus
+/// each worker's PARTIAL gradient for the resident tail. Because tail
+/// contributions are dyadic-quantized, summing the partials across
+/// units is bitwise the whole-step tail gradient.
+#[derive(Debug, Clone)]
+pub struct UnitStepOutput {
+    /// One unit-length gradient vector per worker.
+    pub worker_unit_grads: Vec<Vec<f32>>,
+    /// One tail-length partial gradient per worker, from this unit's
+    /// tokens only.
+    pub worker_tail_grads: Vec<Vec<f32>>,
+    /// f64 loss over the tokens this unit owns. Units partition the
+    /// tokens, so the per-unit losses sum to the step loss — but in a
+    /// different f64 order than [`StepOutput::loss_sum`], so the sums
+    /// may differ in the last bits (parameters never do).
+    pub loss_sum: f64,
 }
 
 /// A training-step backend: everything the generic trainer needs to run
@@ -101,6 +120,41 @@ pub trait StepExecutor: Send {
     /// Total flat parameter length.
     fn flat_len(&self) -> usize {
         self.param_sizes().iter().sum()
+    }
+
+    /// Length of the flat-vector PREFIX that can be cut into FSDP
+    /// units (0 = unit-pipelined execution unsupported; callers fall
+    /// back to whole-model gather). For the native surrogate this is
+    /// the `vocab x dim` embedding table; the remainder (the bias) is
+    /// the resident tail, materialized whole for the step.
+    fn unit_region(&self) -> usize {
+        0
+    }
+
+    /// Unit cuts must land on multiples of this (the embedding row
+    /// width for the native backend), so each token's parameters live
+    /// in exactly one unit.
+    fn unit_alignment(&self) -> usize {
+        1
+    }
+
+    /// Run ONE unit's slice of the step: `unit_params` is the
+    /// materialized `unit` range of the flat vector, `tail` the
+    /// materialized suffix past [`Self::unit_region`]. Executing every
+    /// unit and summing the tail partials reproduces [`Self::run_step`]
+    /// bitwise (gradients; loss up to f64 ordering).
+    fn run_unit_step(
+        &mut self,
+        unit: std::ops::Range<usize>,
+        unit_params: &[f32],
+        tail: &[f32],
+        parts: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<UnitStepOutput> {
+        let _ = (unit, unit_params, tail, parts);
+        Err(anyhow!(
+            "backend '{}' does not support unit-pipelined execution",
+            self.name()
+        ))
     }
 }
 

@@ -27,7 +27,7 @@
 use crate::perfmodel::ComputeOracle;
 use crate::util::error::{anyhow, Result};
 
-use super::{StepExecutor, StepOutput};
+use super::{StepExecutor, StepOutput, UnitStepOutput};
 
 /// Gradient grid: contributions are multiples of 1/256, clamped to
 /// [-8, 8] (so `k/256` with `|k| <= 2048`).
@@ -162,6 +162,47 @@ impl NativeExecutor {
         Ok((g, loss, tokens.len() as f64))
     }
 
+    /// One worker's unit pass over a token chunk: accumulate the
+    /// quantized gradients of the tokens whose embedding row lies in
+    /// `rows` into the caller-provided `unit_g` (unit-local layout) and
+    /// `tail_g` (bias); returns the f64 loss of the touched tokens.
+    /// Chunking the token axis lets the distributed step drive a
+    /// prefetch AllGather round between chunks — summation stays exact
+    /// on the dyadic grid, so the chunk size never changes a bit.
+    pub fn unit_pass_chunk(
+        &self,
+        rows: std::ops::Range<usize>,
+        unit_params: &[f32],
+        bias: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        unit_g: &mut [f32],
+        tail_g: &mut [f32],
+    ) -> Result<f64> {
+        let d = self.spec.dim;
+        let v = self.spec.vocab;
+        let mut loss = 0f64;
+        for (&x, &y) in tokens.iter().zip(targets) {
+            let xi = x as usize;
+            if x < 0 || xi >= v {
+                return Err(anyhow!("token {x} outside vocab {v}"));
+            }
+            if !rows.contains(&xi) {
+                continue;
+            }
+            let base = (xi - rows.start) * d;
+            for j in 0..d {
+                let r =
+                    unit_params[base + j] + bias[j] - target_value(y, j);
+                loss += 0.5 * (r as f64) * (r as f64);
+                let q = quantize(r);
+                unit_g[base + j] += q;
+                tail_g[j] += q;
+            }
+        }
+        Ok(loss)
+    }
+
     fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
         if params.len() != 2
             || params[0].len() != self.sizes[0]
@@ -264,6 +305,101 @@ impl StepExecutor for NativeExecutor {
             Some(t) => t.step_seconds(batches),
             None => measured_wall,
         }
+    }
+
+    fn unit_region(&self) -> usize {
+        self.sizes[0]
+    }
+
+    fn unit_alignment(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn run_unit_step(
+        &mut self,
+        unit: std::ops::Range<usize>,
+        unit_params: &[f32],
+        tail: &[f32],
+        parts: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<UnitStepOutput> {
+        let d = self.spec.dim;
+        let region = self.sizes[0];
+        if unit.start > unit.end
+            || unit.end > region
+            || unit.start % d != 0
+            || unit.end % d != 0
+        {
+            return Err(anyhow!(
+                "unit [{}, {}) is not a row-aligned slice of the \
+                 {region}-element table",
+                unit.start,
+                unit.end
+            ));
+        }
+        if unit_params.len() != unit.len() || tail.len() != self.sizes[1] {
+            return Err(anyhow!(
+                "unit/tail params do not match the unit shape \
+                 ({} + {} elems, wanted {} + {})",
+                unit_params.len(),
+                tail.len(),
+                unit.len(),
+                self.sizes[1]
+            ));
+        }
+        let seq = self.spec.seq_len;
+        let total_tokens: usize =
+            parts.iter().map(|(t, _)| t.len()).sum();
+        if total_tokens > MAX_STEP_TOKENS {
+            return Err(anyhow!(
+                "{total_tokens} tokens/step exceeds the exact-summation \
+                 bound {MAX_STEP_TOKENS} (shrink batch or seq_len)"
+            ));
+        }
+        for (tokens, targets) in parts {
+            if tokens.len() != targets.len() || tokens.len() % seq != 0 {
+                return Err(anyhow!("malformed batch share"));
+            }
+        }
+        let rows = unit.start / d..unit.end / d;
+        // Same worker-thread shape as `run_step`, joined in rank order
+        // so the f64 loss stays deterministic.
+        let this: &NativeExecutor = self;
+        let results: Vec<Result<(Vec<f32>, Vec<f32>, f64)>> =
+            std::thread::scope(|scope| {
+                parts
+                    .iter()
+                    .map(|(tokens, targets)| {
+                        let rows = rows.clone();
+                        scope.spawn(move || {
+                            let mut ug = vec![0f32; unit_params.len()];
+                            let mut bg = vec![0f32; tail.len()];
+                            let loss = this.unit_pass_chunk(
+                                rows,
+                                unit_params,
+                                tail,
+                                tokens,
+                                targets,
+                                &mut ug,
+                                &mut bg,
+                            )?;
+                            Ok((ug, bg, loss))
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|j| j.join().unwrap())
+                    .collect()
+            });
+        let mut worker_unit_grads = Vec::with_capacity(parts.len());
+        let mut worker_tail_grads = Vec::with_capacity(parts.len());
+        let mut loss_sum = 0f64;
+        for r in results {
+            let (ug, bg, ls) = r?;
+            worker_unit_grads.push(ug);
+            worker_tail_grads.push(bg);
+            loss_sum += ls;
+        }
+        Ok(UnitStepOutput { worker_unit_grads, worker_tail_grads, loss_sum })
     }
 
     fn eval_loss(
@@ -435,6 +571,105 @@ mod tests {
         let exec = NativeExecutor::new(SurrogateSpec::default())
             .with_timer(timer);
         assert_eq!(exec.step_seconds(&[2, 8], 99.0), 1.25);
+    }
+
+    #[test]
+    fn unit_steps_reassemble_the_whole_step_bitwise() {
+        // Invariant 13 at the executor level: cutting the table into
+        // row-aligned units, running each unit's slice of the step and
+        // reassembling (concat unit grads, sum tail partials) must be
+        // bitwise the monolithic step's gradients.
+        let mut exec = NativeExecutor::new(SurrogateSpec::default());
+        let params = exec.init_params(11);
+        let seq = exec.seq_len();
+        let (tokens, targets) = sample(6, 13);
+        let parts = split_batch(&tokens, &targets, seq, &[2, 4]);
+        let whole = exec.run_step(&params, &parts).unwrap();
+        let d = exec.spec().dim;
+        let region = exec.unit_region();
+        assert_eq!(region, exec.param_sizes()[0]);
+        assert_eq!(exec.unit_alignment(), d);
+        for units in [1usize, 3, 7] {
+            // Row cuts scaled to elements: even row split times d.
+            let row_cuts =
+                crate::sharding::ShardLayout::even(region / d, units);
+            let cuts: Vec<usize> =
+                row_cuts.bounds.iter().map(|&b| b * d).collect();
+            let mut table_g: Vec<Vec<f32>> =
+                vec![Vec::new(); parts.len()];
+            let mut bias_g: Vec<Vec<f32>> =
+                vec![vec![0f32; d]; parts.len()];
+            let mut loss = 0f64;
+            for c in cuts.windows(2) {
+                let unit = c[0]..c[1];
+                let out = exec
+                    .run_unit_step(
+                        unit.clone(),
+                        &params[0][unit],
+                        &params[1],
+                        &parts,
+                    )
+                    .unwrap();
+                loss += out.loss_sum;
+                for (w, ug) in out.worker_unit_grads.iter().enumerate() {
+                    table_g[w].extend_from_slice(ug);
+                }
+                for (w, bg) in out.worker_tail_grads.iter().enumerate() {
+                    for (o, x) in bias_g[w].iter_mut().zip(bg) {
+                        *o += x;
+                    }
+                }
+            }
+            for w in 0..parts.len() {
+                assert_eq!(
+                    table_g[w],
+                    whole.worker_grads[w][..region],
+                    "{units} units, worker {w}: table grads diverge"
+                );
+                assert_eq!(
+                    bias_g[w],
+                    whole.worker_grads[w][region..],
+                    "{units} units, worker {w}: bias grads diverge"
+                );
+            }
+            // The loss sums the same per-token terms in a different f64
+            // order — equal up to rounding, not bitwise.
+            assert!(
+                (loss - whole.loss_sum).abs()
+                    < 1e-9 * whole.loss_sum.abs().max(1.0),
+                "{units} units: loss {loss} vs {}",
+                whole.loss_sum
+            );
+        }
+    }
+
+    #[test]
+    fn unit_step_rejects_misaligned_and_misshapen_units() {
+        let mut exec = NativeExecutor::new(SurrogateSpec::default());
+        let params = exec.init_params(2);
+        let seq = exec.seq_len();
+        let (tokens, targets) = sample(2, 3);
+        let parts = split_batch(&tokens, &targets, seq, &[2]);
+        let d = exec.spec().dim;
+        // Cut not on a row boundary.
+        let bad = 1..d + 1;
+        assert!(exec
+            .run_unit_step(bad, &params[0][1..d + 1], &params[1], &parts)
+            .is_err());
+        // Unit params length disagrees with the range.
+        assert!(exec
+            .run_unit_step(0..d, &params[0][..d - 1], &params[1], &parts)
+            .is_err());
+        // Past the table.
+        let region = exec.unit_region();
+        assert!(exec
+            .run_unit_step(
+                region..region + d,
+                &params[1],
+                &params[1],
+                &parts
+            )
+            .is_err());
     }
 
     #[test]

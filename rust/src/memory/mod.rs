@@ -34,23 +34,40 @@ pub fn state_bytes(params: f64) -> f64 {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ParamResidency {
     /// Weights shard with the rest of the state: per-GPU state is
-    /// `r_i × 16 B/param` and shrinks with `r_i`.
+    /// `r_i × 16 B/param` and shrinks with `r_i`. This is the paper's
+    /// idealized §2.3 model — it does NOT charge the transient
+    /// materialization buffer the executor needs while computing.
     #[default]
     FullySharded,
     /// A full fp32 weight copy is resident on every rank: per-GPU state
     /// is `4 B/param + r_i × 12 B/param` — the honest accounting of the
     /// pre-sharding trainer, kept for comparison sweeps.
     LeaderResident,
+    /// Honest accounting of the whole-model-gather execution (PR 5):
+    /// state shards with `r_i` but every step materializes ALL weights
+    /// at once, so each rank transiently carries a full 4 B/param
+    /// gather buffer on top of its share.
+    WholeModelGather,
+    /// FSDP-unit execution: the model is split into `units` parameter
+    /// groups and at most two units (the computing one plus the
+    /// prefetched one) are materialized at a time, so the transient
+    /// peak is `2 × 4 B/param / units` instead of the full copy.
+    UnitSharded { units: usize },
 }
 
 impl ParamResidency {
-    /// Per-GPU bytes that do NOT shrink with `r_i` (the replicated
-    /// weight copy under leader residency; nothing when fully sharded).
+    /// Per-GPU bytes that do NOT shrink with `r_i`: the replicated
+    /// weight copy under leader residency, the transient gather buffer
+    /// under whole-model gather, the double-buffered unit pair under
+    /// unit sharding; nothing for the idealized fully-sharded model.
     pub fn fixed_bytes(&self, total_params: f64) -> f64 {
+        let weights = total_params * BYTES_PER_PARAM_WEIGHTS;
         match self {
             ParamResidency::FullySharded => 0.0,
-            ParamResidency::LeaderResident => {
-                total_params * BYTES_PER_PARAM_WEIGHTS
+            ParamResidency::LeaderResident => weights,
+            ParamResidency::WholeModelGather => weights,
+            ParamResidency::UnitSharded { units } => {
+                2.0 * weights / (*units).max(1) as f64
             }
         }
     }
@@ -58,7 +75,11 @@ impl ParamResidency {
     /// Total bytes distributed across GPUs by the `r_i` vector.
     pub fn sharded_bytes(&self, total_params: f64) -> f64 {
         match self {
-            ParamResidency::FullySharded => state_bytes(total_params),
+            ParamResidency::FullySharded
+            | ParamResidency::WholeModelGather
+            | ParamResidency::UnitSharded { .. } => {
+                state_bytes(total_params)
+            }
             ParamResidency::LeaderResident => {
                 state_bytes(total_params)
                     - total_params * BYTES_PER_PARAM_WEIGHTS
@@ -71,16 +92,27 @@ impl ParamResidency {
         self.fixed_bytes(total_params) + r * self.sharded_bytes(total_params)
     }
 
-    /// Per-GPU parameter (weight) bytes only — proportional to `r`
-    /// when fully sharded, constant when leader-resident.
+    /// Per-GPU PEAK parameter (weight) bytes — proportional to `r`
+    /// when fully sharded, constant when leader-resident; the
+    /// execution-honest modes add their transient materialization
+    /// buffer on top of the resident shard.
     pub fn param_bytes(&self, total_params: f64, r: f64) -> f64 {
+        let weights = total_params * BYTES_PER_PARAM_WEIGHTS;
         match self {
-            ParamResidency::FullySharded => {
-                total_params * BYTES_PER_PARAM_WEIGHTS * r
+            ParamResidency::FullySharded => weights * r,
+            ParamResidency::LeaderResident => weights,
+            ParamResidency::WholeModelGather => weights * r + weights,
+            ParamResidency::UnitSharded { units } => {
+                weights * r + 2.0 * weights / (*units).max(1) as f64
             }
-            ParamResidency::LeaderResident => {
-                total_params * BYTES_PER_PARAM_WEIGHTS
-            }
+        }
+    }
+
+    /// The FSDP-unit count, when this residency has one.
+    pub fn units(&self) -> Option<usize> {
+        match self {
+            ParamResidency::UnitSharded { units } => Some(*units),
+            _ => None,
         }
     }
 
@@ -88,6 +120,8 @@ impl ParamResidency {
         match self {
             ParamResidency::FullySharded => "sharded",
             ParamResidency::LeaderResident => "leader",
+            ParamResidency::WholeModelGather => "gather",
+            ParamResidency::UnitSharded { .. } => "unit",
         }
     }
 }
@@ -192,6 +226,31 @@ mod tests {
         // A rank with r = 0 holds NOTHING when fully sharded.
         assert_eq!(sh.per_gpu_state_bytes(p, 0.0), 0.0);
         assert!(ld.per_gpu_state_bytes(p, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn execution_honest_residencies_charge_the_transient_peak() {
+        let p = 1e9;
+        let gather = ParamResidency::WholeModelGather;
+        let unit = ParamResidency::UnitSharded { units: 8 };
+        // Whole-model gather: a full 4 B/param buffer on every rank,
+        // on top of the r-scaled 16 B/param state.
+        assert_eq!(gather.fixed_bytes(p), 4e9);
+        assert_eq!(gather.per_gpu_state_bytes(p, 0.25), 4e9 + 4e9);
+        assert_eq!(gather.param_bytes(p, 0.25), 4e9 + 1e9);
+        // Unit sharding: only a double-buffered unit pair is transient.
+        assert_eq!(unit.fixed_bytes(p), 1e9);
+        assert_eq!(unit.per_gpu_state_bytes(p, 0.25), 1e9 + 4e9);
+        assert_eq!(unit.param_bytes(p, 0.25), 1e9 + 1e9);
+        assert_eq!(unit.units(), Some(8));
+        assert_eq!(gather.units(), None);
+        // More units -> strictly smaller transient peak; the peak
+        // approaches the idealized fully-sharded model from above.
+        let fine = ParamResidency::UnitSharded { units: 64 };
+        assert!(fine.fixed_bytes(p) < unit.fixed_bytes(p));
+        assert!(fine.fixed_bytes(p) < gather.fixed_bytes(p));
+        assert_eq!(unit.label(), "unit");
+        assert_eq!(gather.label(), "gather");
     }
 
     #[test]

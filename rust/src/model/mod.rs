@@ -47,6 +47,34 @@ impl TransformerSpec {
             + 2 * self.d_model
     }
 
+    /// Per-FSDP-unit parameter counts: the layer stack split into
+    /// `units` contiguous groups, as even as layer granularity allows
+    /// (`units` is clamped to `[1, layers]`); embeddings + LM head
+    /// ride with the first group. The transient gather peak of a
+    /// unit-sharded step scales with the LARGEST entry — not with
+    /// total parameters — which is what buys the capacity window that
+    /// whole-model gather cannot fit.
+    pub fn unit_param_counts(&self, units: usize) -> Vec<usize> {
+        let units = units.clamp(1, self.layers.max(1));
+        let per_layer = self.params_per_layer();
+        let embed = self.vocab * self.d_model * 2 + 2 * self.d_model;
+        let mut counts = vec![0usize; units];
+        for l in 0..self.layers {
+            counts[l * units / self.layers] += per_layer;
+        }
+        counts[0] += embed;
+        counts
+    }
+
+    /// `max(unit_param_counts(units))`: the per-unit transient-peak
+    /// driver in the planner's memory model.
+    pub fn largest_unit_params(&self, units: usize) -> usize {
+        self.unit_param_counts(units)
+            .into_iter()
+            .max()
+            .unwrap_or(self.total_params())
+    }
+
     /// Forward FLOPs for one layer on a batch of `m` sequences:
     /// QKV+O projections 8 s d^2, attention 4 s^2 d, FFN
     /// 2 * ffn_matrices * s * d * d_ff.
@@ -166,6 +194,41 @@ mod tests {
                 "{name}: expected ~{billions}B, formula gives {got:.2}B"
             );
         }
+    }
+
+    #[test]
+    fn unit_param_counts_tile_the_model_and_shrink_the_peak() {
+        let m = find_model("GPT 1.3B").unwrap();
+        // Any unit count tiles the model exactly.
+        for units in [1, 2, 3, 8, m.layers, m.layers + 5] {
+            let counts = m.unit_param_counts(units);
+            assert_eq!(
+                counts.iter().sum::<usize>(),
+                m.total_params(),
+                "units={units}"
+            );
+            assert!(counts.iter().all(|&c| c > 0), "units={units}");
+        }
+        // units=1 is the whole model; more units weakly shrink the
+        // largest unit, and at layer granularity it approaches one
+        // layer + the embedding block.
+        assert_eq!(m.unit_param_counts(1), vec![m.total_params()]);
+        let mut prev = m.largest_unit_params(1);
+        for units in 2..=m.layers {
+            let cur = m.largest_unit_params(units);
+            assert!(cur <= prev, "largest unit grew at units={units}");
+            prev = cur;
+        }
+        let embed = m.vocab * m.d_model * 2 + 2 * m.d_model;
+        assert_eq!(
+            m.largest_unit_params(m.layers),
+            m.params_per_layer() + embed
+        );
+        // Clamped above layer granularity.
+        assert_eq!(
+            m.unit_param_counts(m.layers + 9).len(),
+            m.layers
+        );
     }
 
     #[test]

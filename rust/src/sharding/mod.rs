@@ -112,6 +112,133 @@ impl ShardLayout {
     }
 }
 
+/// A partition of the flat parameter vector into contiguous FSDP
+/// units, each carrying a unit-local [`ShardLayout`] cut from the
+/// global one. Rank `r`'s slices across all units concatenate to
+/// exactly `global.range(r)`, so the resident shard is IDENTICAL
+/// whether the step gathers the whole model or one unit at a time —
+/// the structural half of DESIGN.md invariant 13 (checkpoints,
+/// migration, and adoption never see the unit dimension).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitLayout {
+    /// Unit boundaries over the flat vector:
+    /// `ubounds[u]..ubounds[u+1]` is unit u's element range.
+    pub ubounds: Vec<usize>,
+    /// Per-unit rank layouts, rebased to each unit's origin.
+    pub units: Vec<ShardLayout>,
+}
+
+impl UnitLayout {
+    /// Cut `global` into `units` contiguous, near-even units (the
+    /// remainder spreads over the first units, mirroring
+    /// [`ShardLayout::even`]). `units` is clamped to at least 1.
+    pub fn split(global: &ShardLayout, units: usize) -> UnitLayout {
+        let outer = ShardLayout::even(global.len(), units.max(1));
+        UnitLayout::from_bounds(global, outer.bounds)
+    }
+
+    /// Build a unit layout from EXPLICIT unit boundaries over `global`
+    /// (monotone, first 0, last `global.len()`). Backends with
+    /// alignment constraints (embedding-row cuts) come through here.
+    pub fn from_bounds(
+        global: &ShardLayout,
+        ubounds: Vec<usize>,
+    ) -> UnitLayout {
+        assert!(ubounds.first() == Some(&0), "unit bounds must start at 0");
+        assert_eq!(
+            *ubounds.last().unwrap(),
+            global.len(),
+            "unit bounds must end at the flat length"
+        );
+        assert!(
+            ubounds.windows(2).all(|w| w[0] <= w[1]),
+            "unit bounds must be monotone"
+        );
+        let mut unit_layouts = Vec::with_capacity(ubounds.len() - 1);
+        for w in ubounds.windows(2) {
+            let (s, e) = (w[0], w[1]);
+            let bounds: Vec<usize> = global
+                .bounds
+                .iter()
+                .map(|&b| b.clamp(s, e) - s)
+                .collect();
+            unit_layouts.push(ShardLayout { bounds });
+        }
+        UnitLayout { ubounds, units: unit_layouts }
+    }
+
+    /// The unit layout for a backend whose splittable PREFIX is
+    /// `region` elements with cuts on multiples of `align` (see
+    /// `exec::StepExecutor::unit_region`): up to `units` near-even
+    /// aligned units over the prefix, plus — when `[region, len)` is
+    /// non-empty — one final unit holding the resident tail (the
+    /// trainer gathers it whole at the head of the step). Degenerates
+    /// to [`UnitLayout::whole`] when the backend has no unit region or
+    /// one unit is asked for.
+    pub fn for_prefix(
+        global: &ShardLayout,
+        region: usize,
+        align: usize,
+        units: usize,
+    ) -> UnitLayout {
+        let len = global.len();
+        if units <= 1 || region == 0 || align == 0 || region > len {
+            return UnitLayout::whole(global);
+        }
+        let rows = region / align;
+        if rows == 0 {
+            return UnitLayout::whole(global);
+        }
+        let outer = ShardLayout::even(rows, units.min(rows));
+        let mut ubounds: Vec<usize> =
+            outer.bounds.iter().map(|&b| b * align).collect();
+        // An unaligned region remainder folds into the last prefix unit.
+        *ubounds.last_mut().unwrap() = region;
+        if region < len {
+            ubounds.push(len);
+        }
+        UnitLayout::from_bounds(global, ubounds)
+    }
+
+    /// The degenerate single-unit layout: one unit covering the whole
+    /// vector (unit-pipelined execution of this layout IS whole-model
+    /// gather).
+    pub fn whole(global: &ShardLayout) -> UnitLayout {
+        UnitLayout::split(global, 1)
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Unit u's element range in the GLOBAL flat vector.
+    pub fn unit_range(&self, u: usize) -> std::ops::Range<usize> {
+        self.ubounds[u]..self.ubounds[u + 1]
+    }
+
+    pub fn unit_len(&self, u: usize) -> usize {
+        self.ubounds[u + 1] - self.ubounds[u]
+    }
+
+    /// The unit-local shard layout for unit u.
+    pub fn unit_layout(&self, u: usize) -> &ShardLayout {
+        &self.units[u]
+    }
+
+    /// Rank `rank`'s slice of unit u, in GLOBAL flat coordinates.
+    pub fn rank_slice(&self, u: usize, rank: usize) -> std::ops::Range<usize> {
+        let local = self.units[u].range(rank);
+        let base = self.ubounds[u];
+        base + local.start..base + local.end
+    }
+
+    /// Elements in the largest unit — the per-rank transient
+    /// materialization peak is `2 × 4 B ×` this (current + prefetched).
+    pub fn largest_unit(&self) -> usize {
+        (0..self.num_units()).map(|u| self.unit_len(u)).max().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +309,89 @@ mod tests {
     fn skew_of_even_is_one_over_n() {
         let l = ShardLayout::even(100, 4);
         assert!((l.skew() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_layout_partitions_both_axes_exactly() {
+        let global = ShardLayout::by_ratios(100, &[0.6, 0.3, 0.1]);
+        let ul = UnitLayout::split(&global, 4);
+        assert_eq!(ul.num_units(), 4);
+        // Units tile the flat vector.
+        let total: usize = (0..4).map(|u| ul.unit_len(u)).sum();
+        assert_eq!(total, 100);
+        assert_eq!(ul.largest_unit(), 25);
+        // Each rank's per-unit slices concatenate to its global range.
+        for rank in 0..3 {
+            let mut covered = Vec::new();
+            for u in 0..ul.num_units() {
+                let s = ul.rank_slice(u, rank);
+                assert_eq!(
+                    s.len(),
+                    ul.unit_layout(u).size(rank),
+                    "unit {u} rank {rank}"
+                );
+                covered.extend(s);
+            }
+            let expect: Vec<usize> = global.range(rank).collect();
+            assert_eq!(covered, expect, "rank {rank} slices disagree");
+        }
+    }
+
+    #[test]
+    fn whole_unit_layout_is_the_global_layout() {
+        let global = ShardLayout::by_ratios(37, &[0.5, 0.5]);
+        let ul = UnitLayout::whole(&global);
+        assert_eq!(ul.num_units(), 1);
+        assert_eq!(ul.unit_range(0), 0..37);
+        assert_eq!(ul.unit_layout(0), &global);
+        assert_eq!(ul.largest_unit(), 37);
+    }
+
+    #[test]
+    fn prefix_unit_layout_keeps_cuts_aligned_and_tail_whole() {
+        // 8 rows of width 4 plus a 5-element tail.
+        let global = ShardLayout::by_ratios(37, &[0.7, 0.3]);
+        let ul = UnitLayout::for_prefix(&global, 32, 4, 3);
+        // 3 prefix units + the tail unit.
+        assert_eq!(ul.num_units(), 4);
+        for u in 0..3 {
+            assert_eq!(ul.unit_range(u).start % 4, 0, "unit {u} cut");
+        }
+        assert_eq!(ul.unit_range(3), 32..37);
+        // Rank slices still concatenate to the global ranges.
+        for rank in 0..2 {
+            let covered: Vec<usize> = (0..ul.num_units())
+                .flat_map(|u| ul.rank_slice(u, rank))
+                .collect();
+            let expect: Vec<usize> = global.range(rank).collect();
+            assert_eq!(covered, expect, "rank {rank}");
+        }
+        // Degenerate asks collapse to the whole layout.
+        assert_eq!(
+            UnitLayout::for_prefix(&global, 32, 4, 1),
+            UnitLayout::whole(&global)
+        );
+        assert_eq!(
+            UnitLayout::for_prefix(&global, 0, 4, 3),
+            UnitLayout::whole(&global)
+        );
+    }
+
+    #[test]
+    fn prop_unit_layout_covers_every_rank_range() {
+        check("unit-layout-cover", 200, |g| {
+            let n = g.usize_in(1, 6);
+            let len = g.usize_in(0, 5_000);
+            let units = g.usize_in(1, 12);
+            let global = ShardLayout::by_ratios(len.max(1), &g.ratios(n));
+            let ul = UnitLayout::split(&global, units);
+            assert_eq!(ul.num_units(), units);
+            for rank in 0..n {
+                let sum: usize = (0..units)
+                    .map(|u| ul.unit_layout(u).size(rank))
+                    .sum();
+                assert_eq!(sum, global.size(rank));
+            }
+        });
     }
 }

@@ -94,6 +94,30 @@ pub fn apply_residency_window(
     }
 }
 
+/// Shrink a fitted profile's capacities onto the FSDP-UNIT residency
+/// window: each GPU fits m = 1 compute plus 1.1x (the double-buffered
+/// unit pair `2 x 4 B/param / units` + an even share of the fully
+/// sharded 16 B/param state) — but NOT the whole-model gather buffer
+/// (a full 4 B/param on every rank). On [`window8_cluster`] with
+/// `units` >= 16 the window is strictly wider than the one
+/// [`apply_residency_window`] builds, so it exists whenever that one
+/// does. Used by the FSDP-unit capacity acceptance tests
+/// (`tests/plan_system.rs`).
+pub fn apply_unit_residency_window(
+    profile: &mut crate::perfmodel::ClusterPerfProfile,
+    units: usize,
+) {
+    let n = profile.per_gpu.len() as f64;
+    let p = profile.total_params;
+    let fixed = crate::memory::ParamResidency::UnitSharded { units }
+        .fixed_bytes(p);
+    let share = crate::memory::state_bytes(p) / n;
+    for g in profile.per_gpu.iter_mut() {
+        let usable = g.mem.predict(1) + 1.1 * (fixed + share);
+        g.capacity = usable / crate::memory::MEM_UTIL_CAP;
+    }
+}
+
 /// Per-case generator handed to properties.
 pub struct Gen {
     rng: Rng,

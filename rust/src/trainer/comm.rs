@@ -10,7 +10,7 @@
 //! accumulation order match `collectives::ring_*` exactly.
 
 use crate::collectives;
-use crate::sharding::ShardLayout;
+use crate::sharding::{ShardLayout, UnitLayout};
 use crate::transport::{
     self, ChaosTransport, CrashMode, FaultPlan, LocalFabric, Transport,
 };
@@ -35,6 +35,38 @@ pub trait CollectiveEngine: Send {
         shards: &[Vec<f32>],
         layout: &ShardLayout,
     ) -> Result<Vec<f32>>;
+
+    /// Gather ONE FSDP unit: cut each rank's unit-local slice out of
+    /// its GLOBAL parameter shard, then AllGather over the unit's own
+    /// rebased layout. Provided — engines only ever see flat layouts,
+    /// so every substrate (in-process, channel, TCP, chaotic) gets the
+    /// unit dimension for free. The per-unit gradient ReduceScatter
+    /// needs no counterpart: unit-length contributions go straight
+    /// through [`CollectiveEngine::reduce_scatter`] with
+    /// `units.unit_layout(u)`.
+    fn allgather_unit(
+        &mut self,
+        global_shards: &[Vec<f32>],
+        global: &ShardLayout,
+        units: &UnitLayout,
+        u: usize,
+    ) -> Result<Vec<f32>> {
+        if global_shards.len() != global.num_ranks() {
+            return Err(anyhow!(
+                "{} shards for a {}-rank layout",
+                global_shards.len(),
+                global.num_ranks()
+            ));
+        }
+        let slices: Vec<Vec<f32>> = (0..global.num_ranks())
+            .map(|r| {
+                let base = global.range(r).start;
+                let s = units.rank_slice(u, r);
+                global_shards[r][s.start - base..s.end - base].to_vec()
+            })
+            .collect();
+        self.allgather(&slices, units.unit_layout(u))
+    }
 }
 
 /// The historical default: deterministic in-process ring transforms.
@@ -289,6 +321,34 @@ mod tests {
             assert_eq!(rs, expect_rs, "{} chaotic RS diverged", engine.name());
             let ag = engine.allgather(&shards, &layout).unwrap();
             assert_eq!(ag, expect_ag, "{} chaotic AG diverged", engine.name());
+        }
+    }
+
+    #[test]
+    fn unit_gather_reassembles_each_unit_from_global_shards() {
+        // The unit dimension: gathering unit u from the per-rank
+        // GLOBAL shards yields exactly that slice of the full vector,
+        // on every engine, including units where some rank owns
+        // nothing.
+        let (layout, full, shards) = layout_and_data();
+        let units = UnitLayout::split(&layout, 3);
+        let mut engines: Vec<Box<dyn CollectiveEngine>> = vec![
+            Box::new(InProcessRing),
+            Box::new(FabricRing::local(3).unwrap()),
+            Box::new(FabricRing::tcp_loopback(3).unwrap()),
+        ];
+        for engine in engines.iter_mut() {
+            for u in 0..units.num_units() {
+                let got = engine
+                    .allgather_unit(&shards, &layout, &units, u)
+                    .unwrap();
+                assert_eq!(
+                    got,
+                    full[0][units.unit_range(u)].to_vec(),
+                    "{} unit {u} diverged",
+                    engine.name()
+                );
+            }
         }
     }
 

@@ -48,7 +48,7 @@ pub mod data;
 use crate::exec::StepExecutor;
 use crate::optimizer::Assignment;
 use crate::runtime::Manifest;
-use crate::sharding::ShardLayout;
+use crate::sharding::{ShardLayout, UnitLayout};
 use crate::util::error::{anyhow, Result};
 use adam::{AdamConfig, AdamShard};
 use comm::{CollectiveEngine, InProcessRing};
@@ -79,6 +79,15 @@ pub struct TrainConfig {
     /// transiently per step (see the module docs). Bitwise-identical
     /// to the default leader-resident mode.
     pub shard_params: bool,
+    /// Number of FSDP units to cut the executor's shardable parameter
+    /// prefix into (`<= 1` = whole-model gather). Only meaningful with
+    /// `shard_params` on an executor that supports unit-pipelined
+    /// execution: the step then materializes one unit at a time (plus
+    /// the prefetched next unit and the resident tail) instead of the
+    /// full weights, so transient parameter memory scales with the
+    /// LARGEST UNIT, not the total parameter count. Bitwise-identical
+    /// to whole-model gather (DESIGN.md invariant 13).
+    pub fsdp_units: usize,
 }
 
 impl Default for TrainConfig {
@@ -90,6 +99,7 @@ impl Default for TrainConfig {
             corpus_branch: 4,
             log_every: 10,
             shard_params: false,
+            fsdp_units: 1,
         }
     }
 }
@@ -136,8 +146,20 @@ pub struct Trainer {
     sizes: Vec<usize>,
     /// Shard layout over the flat parameter vector (by r_i).
     layout: ShardLayout,
+    /// FSDP unit plan over `layout`: a single whole unit unless
+    /// `cfg.fsdp_units > 1` on a sharded trainer whose executor
+    /// supports unit-pipelined execution.
+    units: UnitLayout,
     shards: Vec<AdamShard>,
     corpus: Corpus,
+    /// Persistent whole-model gather scratch (executor ABI shapes),
+    /// reused across steps so the sharded hot path performs no
+    /// per-step full-weight allocation (the head-of-step AllGather
+    /// overwrites every element).
+    gather: Vec<Vec<f32>>,
+    /// High-water mark of transiently materialized parameter elements
+    /// on any rank (see [`Trainer::peak_materialized_elems`]).
+    peak_param_elems: usize,
     pub history: Vec<StepStats>,
 }
 
@@ -174,6 +196,7 @@ impl Trainer {
         } else {
             ParamStore::Leader(init)
         };
+        let units = Trainer::unit_plan(exec.as_ref(), &layout, &cfg);
         Ok(Trainer {
             exec,
             comm: Box::new(InProcessRing),
@@ -182,10 +205,34 @@ impl Trainer {
             params,
             sizes,
             layout,
+            units,
             shards,
             corpus,
+            gather: Vec::new(),
+            peak_param_elems: 0,
             history: Vec::new(),
         })
+    }
+
+    /// The FSDP unit plan for a layout: units engage only when the
+    /// weights are sharded, more than one unit is requested, and the
+    /// executor exposes a shardable prefix; everything else degrades
+    /// to one whole-model unit (= the historical gather).
+    fn unit_plan(
+        exec: &dyn StepExecutor,
+        layout: &ShardLayout,
+        cfg: &TrainConfig,
+    ) -> UnitLayout {
+        if cfg.shard_params && cfg.fsdp_units > 1 {
+            UnitLayout::for_prefix(
+                layout,
+                exec.unit_region(),
+                exec.unit_alignment(),
+                cfg.fsdp_units,
+            )
+        } else {
+            UnitLayout::whole(layout)
+        }
     }
 
     /// PJRT convenience constructor: load AOT artifacts from
@@ -256,6 +303,21 @@ impl Trainer {
         &self.layout
     }
 
+    /// The FSDP unit plan in force (a single whole unit outside
+    /// unit-pipelined mode).
+    pub fn units(&self) -> &UnitLayout {
+        &self.units
+    }
+
+    /// High-water mark of TRANSIENTLY materialized parameter elements
+    /// on any rank across the steps run so far: the full flat length
+    /// under whole-model gather, tail + two units (current +
+    /// prefetched) under unit sharding, and 0 on a leader-resident
+    /// trainer (its full copy is resident, not transient).
+    pub fn peak_materialized_elems(&self) -> usize {
+        self.peak_param_elems
+    }
+
     /// The per-rank Adam shards (resident training state).
     pub fn shards(&self) -> &[AdamShard] {
         &self.shards
@@ -274,21 +336,33 @@ impl Trainer {
             self.workers.iter().map(|w| w.batch).collect();
         let parts = data::split_batch(&tokens, &targets, seq, &batches);
 
+        // Unit-pipelined FSDP path: gather/compute/free one unit at a
+        // time instead of materializing the full weights (engaged by
+        // `fsdp_units > 1` on a sharded trainer; bitwise-identical —
+        // DESIGN.md invariant 13).
+        if self.units.num_units() > 1 {
+            return self.step_units(step_idx, t0, &parts, &batches);
+        }
+
         // Materialize the full weights: the resident leader copy, or —
         // fully sharded — a transient ring AllGather of the per-rank
-        // slices, bitwise the vector the leader path carried over from
-        // the previous step's tail AllGather. Freed at step end.
-        let materialized: Option<Vec<Vec<f32>>> = match &self.params {
-            ParamStore::Leader(_) => None,
-            ParamStore::Sharded(shards) => {
-                let flat = self.comm.allgather(shards, &self.layout)?;
-                Some(unflatten(&flat, &self.sizes))
+        // slices into the persistent scratch (reused across steps; the
+        // gather overwrites every element), bitwise the vector the
+        // leader path carried over from the previous step's tail
+        // AllGather.
+        let use_gather = matches!(self.params, ParamStore::Sharded(_));
+        if let ParamStore::Sharded(shards) = &self.params {
+            let flat = self.comm.allgather(shards, &self.layout)?;
+            self.peak_param_elems = self.peak_param_elems.max(flat.len());
+            unflatten_into(&flat, &self.sizes, &mut self.gather);
+        }
+        let full: &[Vec<f32>] = if use_gather {
+            &self.gather
+        } else {
+            match &self.params {
+                ParamStore::Leader(p) => p,
+                ParamStore::Sharded(_) => unreachable!(),
             }
-        };
-        let full: &[Vec<f32>] = match (&materialized, &self.params) {
-            (Some(m), _) => m,
-            (None, ParamStore::Leader(p)) => p,
-            (None, ParamStore::Sharded(_)) => unreachable!(),
         };
 
         // Backend: per-worker batch shares -> per-worker summed grads.
@@ -379,6 +453,176 @@ impl Trainer {
             mean_loss: out.loss_sum / out.token_count,
             tokens: out.token_count,
             wall_seconds: self.exec.step_seconds(&batches, measured),
+            measured_seconds: measured,
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// The unit-pipelined step (ZeRO-style FSDP units): AllGather unit
+    /// k+1 while unit k computes, free each unit right after its
+    /// gradients are reduce-scattered, and keep the resident tail
+    /// (the executor's non-unit suffix) materialized for the whole
+    /// step. Per-unit gradient shards concatenate — in unit order —
+    /// exactly to each rank's global `r_i` shard, and dyadic
+    /// quantization makes every partial sum exactly associative, so
+    /// the trajectory is BITWISE the whole-model-gather one; only the
+    /// f64 loss accumulation order differs (last-bit loss jitter,
+    /// never parameters).
+    fn step_units(
+        &mut self,
+        step_idx: usize,
+        t0: std::time::Instant,
+        parts: &[(Vec<i32>, Vec<i32>)],
+        batches: &[usize],
+    ) -> Result<StepStats> {
+        let n = self.workers.len();
+        let flat_len: usize = self.sizes.iter().sum();
+        let nu = self.units.num_units();
+        let region = self.exec.unit_region().min(flat_len);
+        let tail_is_unit = region < flat_len;
+        let table_units = nu - usize::from(tail_is_unit);
+        let token_count: f64 =
+            parts.iter().map(|(t, _)| t.len()).sum::<usize>() as f64;
+        if token_count <= 0.0 {
+            return Err(anyhow!("backend reported zero tokens"));
+        }
+
+        let mut loss_sum = 0f64;
+        let mut peak = 0usize;
+        // One per-rank gradient shard list PER UNIT, in unit order.
+        let mut unit_grad_shards: Vec<Vec<Vec<f32>>> =
+            Vec::with_capacity(nu);
+        {
+            let pshards: &[Vec<f32>] = match &self.params {
+                ParamStore::Leader(_) => {
+                    return Err(anyhow!(
+                        "unit-pipelined step requires sharded params"
+                    ));
+                }
+                ParamStore::Sharded(s) => s,
+            };
+            let ul = &self.units;
+            // The tail (e.g. the native surrogate's bias) stays
+            // materialized across every unit; its per-unit partial
+            // gradients sum exactly (dyadic grid).
+            let tail: Vec<f32> = if tail_is_unit {
+                self.comm.allgather_unit(
+                    pshards,
+                    &self.layout,
+                    ul,
+                    nu - 1,
+                )?
+            } else {
+                Vec::new()
+            };
+            let mut tail_acc: Vec<Vec<f32>> =
+                vec![vec![0f32; tail.len()]; n];
+            let mut current = self.comm.allgather_unit(
+                pshards,
+                &self.layout,
+                ul,
+                0,
+            )?;
+            for k in 0..table_units {
+                // Prefetch unit k+1 before computing unit k — the
+                // in-process schedule mirrors the wire overlap
+                // (transport::dist drives the gather rounds between
+                // compute chunks), so the transient peak holds TWO
+                // units plus the tail.
+                let next = if k + 1 < table_units {
+                    Some(self.comm.allgather_unit(
+                        pshards,
+                        &self.layout,
+                        ul,
+                        k + 1,
+                    )?)
+                } else {
+                    None
+                };
+                peak = peak.max(
+                    tail.len()
+                        + current.len()
+                        + next.as_ref().map_or(0, Vec::len),
+                );
+                let out = self.exec.run_unit_step(
+                    ul.unit_range(k),
+                    &current,
+                    &tail,
+                    parts,
+                )?;
+                if out.worker_unit_grads.len() != n
+                    || out.worker_tail_grads.len() != n
+                {
+                    return Err(anyhow!(
+                        "backend returned {} unit gradient sets for {} \
+                         workers",
+                        out.worker_unit_grads.len(),
+                        n
+                    ));
+                }
+                loss_sum += out.loss_sum;
+                for (acc, g) in tail_acc.iter_mut().zip(&out.worker_tail_grads)
+                {
+                    for (o, v) in acc.iter_mut().zip(g) {
+                        *o += v;
+                    }
+                }
+                // Unit k is done: free its weights, reduce-scatter its
+                // gradients onto the owning ranks.
+                drop(current);
+                unit_grad_shards.push(self.comm.reduce_scatter(
+                    &out.worker_unit_grads,
+                    ul.unit_layout(k),
+                )?);
+                current = next.unwrap_or_default();
+            }
+            if tail_is_unit {
+                unit_grad_shards.push(self.comm.reduce_scatter(
+                    &tail_acc,
+                    ul.unit_layout(nu - 1),
+                )?);
+            }
+        }
+
+        // Each rank's global gradient shard is its per-unit slices
+        // concatenated in unit order (they tile layout.range(r)
+        // exactly), then the Eq.-1 scale.
+        let inv = 1.0 / token_count as f32;
+        let grad_shards: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut g = Vec::with_capacity(self.layout.size(r));
+                for per_unit in &unit_grad_shards {
+                    g.extend_from_slice(&per_unit[r]);
+                }
+                for x in g.iter_mut() {
+                    *x *= inv;
+                }
+                g
+            })
+            .collect();
+
+        // Sharded Adam in place, exactly like the whole-gather path.
+        if let ParamStore::Sharded(shards) = &mut self.params {
+            std::thread::scope(|scope| {
+                for ((shard, grads), pshard) in self
+                    .shards
+                    .iter_mut()
+                    .zip(&grad_shards)
+                    .zip(shards.iter_mut())
+                {
+                    scope.spawn(move || shard.update(pshard, grads));
+                }
+            });
+        }
+        self.peak_param_elems = self.peak_param_elems.max(peak);
+
+        let measured = t0.elapsed().as_secs_f64();
+        let stats = StepStats {
+            step: step_idx,
+            mean_loss: loss_sum / token_count,
+            tokens: token_count,
+            wall_seconds: self.exec.step_seconds(batches, measured),
             measured_seconds: measured,
         };
         self.history.push(stats.clone());
@@ -636,6 +880,11 @@ impl Trainer {
         if let Some(ps) = param_shards {
             self.params = ParamStore::Sharded(ps);
         }
+        // The unit plan follows the layout (same region and unit
+        // count, new rank boundaries), so unit-sharded training
+        // resumes seamlessly after an elastic re-plan.
+        self.units =
+            Trainer::unit_plan(self.exec.as_ref(), &layout, &self.cfg);
         self.workers = workers;
         self.layout = layout;
         self.shards = shards;
@@ -685,6 +934,24 @@ pub(crate) fn unflatten(flat: &[f32], sizes: &[usize]) -> Vec<Vec<f32>> {
     }
     debug_assert_eq!(off, flat.len());
     out
+}
+
+/// [`unflatten`] into a reusable ABI-shaped buffer: after the first
+/// call the buffer keeps its capacity, so steady-state steps allocate
+/// nothing for the materialized weights.
+pub(crate) fn unflatten_into(
+    flat: &[f32],
+    sizes: &[usize],
+    out: &mut Vec<Vec<f32>>,
+) {
+    out.resize(sizes.len(), Vec::new());
+    let mut off = 0usize;
+    for (t, &sz) in out.iter_mut().zip(sizes) {
+        t.clear();
+        t.extend_from_slice(&flat[off..off + sz]);
+        off += sz;
+    }
+    debug_assert_eq!(off, flat.len());
 }
 
 #[cfg(test)]
@@ -1110,5 +1377,72 @@ mod tests {
                 "post-migration trajectory diverged at step {s}"
             );
         }
+    }
+
+    fn quiet_units(seed: u64, units: usize) -> TrainConfig {
+        TrainConfig { fsdp_units: units, ..quiet_sharded(seed) }
+    }
+
+    #[test]
+    fn unit_sharded_steps_match_whole_model_gather_bitwise() {
+        // DESIGN.md invariant 13 at unit scale: cutting the gather
+        // into per-layer FSDP units (prefetch unit k+1 while unit k
+        // computes, free after its ReduceScatter) changes WHEN weights
+        // are materialized, not one bit of the trajectory — across
+        // unit counts, collective engines, and against the
+        // leader-resident reference. Loss is deliberately not
+        // compared: per-unit f64 accumulation reorders the sum
+        // (parameters never move).
+        let workers =
+            || vec![w(3, 0.6, "a"), w(1, 0.4, "b"), w(2, 0.0, "c")];
+        let mut whole = native_trainer(workers(), quiet_sharded(17));
+        let mut units4 = native_trainer(workers(), quiet_units(17, 4));
+        let mut units7 = native_trainer(workers(), quiet_units(17, 7))
+            .with_comm(Box::new(comm::FabricRing::local(3).unwrap()));
+        let mut leader = native_trainer(workers(), quiet(17));
+        assert_eq!(whole.units().num_units(), 1);
+        // 4 table units + the resident-tail (bias) unit.
+        assert_eq!(units4.units().num_units(), 5);
+        // fsdp_units without shard_params degrades to one whole unit.
+        let ignored = native_trainer(
+            workers(),
+            TrainConfig { fsdp_units: 4, ..quiet(17) },
+        );
+        assert_eq!(ignored.units().num_units(), 1);
+
+        for s in 0..4 {
+            whole.step(s).unwrap();
+            units4.step(s).unwrap();
+            units7.step(s).unwrap();
+            leader.step(s).unwrap();
+            assert_eq!(
+                units4.gather_params(),
+                whole.gather_params(),
+                "units=4 diverged from whole-model gather at step {s}"
+            );
+            assert_eq!(
+                units7.gather_params(),
+                leader.gather_params(),
+                "units=7 over the channel fabric diverged at step {s}"
+            );
+        }
+
+        // Transient parameter memory: the whole-gather path
+        // materializes every element; the unit path holds at most TWO
+        // table units (current + prefetched) plus the tail.
+        let total = whole.num_params();
+        assert_eq!(whole.peak_materialized_elems(), total);
+        assert_eq!(leader.peak_materialized_elems(), 0);
+        let peak = units4.peak_materialized_elems();
+        let ul = units4.units();
+        let tail_len = ul.unit_len(ul.num_units() - 1);
+        assert!(
+            peak <= 2 * ul.largest_unit() + tail_len,
+            "unit peak {peak} exceeds two units + tail"
+        );
+        assert!(
+            peak < total,
+            "unit peak {peak} must undercut the full gather ({total})"
+        );
     }
 }

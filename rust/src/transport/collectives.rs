@@ -9,13 +9,30 @@
 //! Empty segments (`r_i = 0` ranks) are skipped symmetrically on both
 //! sides, exactly the zero-byte-chunk behavior of the in-process rings.
 //!
+//! **Non-blocking rounds.** Each collective is a round-stepped state
+//! machine ([`AllGatherOp`], [`ReduceScatterOp`]): `start` captures the
+//! inputs, every `step_round` drives exactly ONE ring round (one send +
+//! one receive), and `finish` yields the result. Because the op does
+//! not own the endpoint, several in-flight ops can interleave their
+//! rounds on one endpoint — the FSDP-unit pipeline gathers unit k+1
+//! while unit k computes by alternating their rounds. The only rule:
+//! every participating rank must drive its in-flight ops in the SAME
+//! program order (per-peer message delivery is FIFO, so identical
+//! round interleavings match sends to receives; divergent orders would
+//! cross-wire payloads). The blocking `ring_*` functions below are
+//! start/step-to-completion/finish wrappers and behave exactly as
+//! before.
+//!
 //! **Bitwise contract (DESIGN.md invariant 10).** The ReduceScatter
 //! accumulation order around the ring is identical to the in-process
 //! implementation's, and AllGather only copies, so for any input these
 //! functions produce bit-identical results to `collectives::ring_*` —
 //! property-tested over channel and socket fabrics in
 //! `tests/transport_parity.rs`. That is what makes a transport backend
-//! invisible to the training trajectory.
+//! invisible to the training trajectory. The accumulate kernel runs in
+//! fixed-size chunks (a known trip count the compiler can vectorize),
+//! which is bitwise-free: the sum is elementwise, so chunking changes
+//! no per-element addition order.
 //!
 //! Collectives are **group-scoped**: the group is
 //! `layout.num_ranks()`, which may be smaller than the transport's
@@ -47,39 +64,90 @@ fn check_group(t: &dyn Transport, layout: &ShardLayout) -> Result<usize> {
     Ok(n)
 }
 
-/// Ring AllGather: `shard` is this rank's segment; returns the full
-/// vector (identical on every participating rank).
-pub fn ring_allgather(
-    t: &mut dyn Transport,
-    shard: &[f32],
-    layout: &ShardLayout,
-) -> Result<Vec<f32>> {
-    let n = check_group(t, layout)?;
-    let me = t.rank();
-    if shard.len() != layout.size(me) {
-        return Err(anyhow!(
-            "rank {me} shard holds {} elems, layout wants {}",
-            shard.len(),
-            layout.size(me)
-        ));
+/// Chunk width for the ReduceScatter accumulate kernel: a fixed inner
+/// trip count the compiler unrolls and vectorizes. Elementwise adds
+/// have no cross-element order, so chunking is bitwise-invisible.
+const ADD_CHUNK: usize = 1024;
+
+/// `acc[i] += data[i]`, chunked for autovectorization.
+pub(crate) fn add_assign(acc: &mut [f32], data: &[f32]) {
+    debug_assert_eq!(acc.len(), data.len());
+    let mut a = acc.chunks_exact_mut(ADD_CHUNK);
+    let mut d = data.chunks_exact(ADD_CHUNK);
+    for (ac, dc) in (&mut a).zip(&mut d) {
+        for i in 0..ADD_CHUNK {
+            ac[i] += dc[i];
+        }
     }
-    let mut buf = vec![0f32; layout.len()];
-    buf[layout.range(me)].copy_from_slice(shard);
-    if n == 1 {
-        return Ok(buf);
+    for (o, v) in a.into_remainder().iter_mut().zip(d.remainder()) {
+        *o += v;
     }
-    let next = (me + 1) % n;
-    let prev = (me + n - 1) % n;
-    for s in 0..n - 1 {
-        // Send the segment received last step (own segment at s = 0)…
-        let seg_send = (me + n - s) % n;
-        let send_range = layout.range(seg_send);
+}
+
+/// An in-flight ring AllGather. See the module docs for the
+/// interleaving contract.
+pub struct AllGatherOp {
+    layout: ShardLayout,
+    buf: Vec<f32>,
+    me: usize,
+    n: usize,
+    round: usize,
+}
+
+impl AllGatherOp {
+    /// Begin an AllGather of this rank's `shard` under `layout`.
+    pub fn start(
+        t: &dyn Transport,
+        shard: &[f32],
+        layout: &ShardLayout,
+    ) -> Result<AllGatherOp> {
+        AllGatherOp::start_into(t, shard, layout, Vec::new())
+    }
+
+    /// [`AllGatherOp::start`] reusing `scratch` as the gather buffer
+    /// (resized to `layout.len()`; prior contents are irrelevant —
+    /// every live segment is overwritten by the copy-in or a round).
+    pub fn start_into(
+        t: &dyn Transport,
+        shard: &[f32],
+        layout: &ShardLayout,
+        mut scratch: Vec<f32>,
+    ) -> Result<AllGatherOp> {
+        let n = check_group(t, layout)?;
+        let me = t.rank();
+        if shard.len() != layout.size(me) {
+            return Err(anyhow!(
+                "rank {me} shard holds {} elems, layout wants {}",
+                shard.len(),
+                layout.size(me)
+            ));
+        }
+        scratch.resize(layout.len(), 0.0);
+        scratch[layout.range(me)].copy_from_slice(shard);
+        Ok(AllGatherOp { layout: layout.clone(), buf: scratch, me, n, round: 0 })
+    }
+
+    /// All N−1 rounds driven?
+    pub fn is_done(&self) -> bool {
+        self.round + 1 >= self.n
+    }
+
+    /// Drive one ring round (one send + one receive). Returns whether
+    /// the op is now complete; calling on a complete op is a no-op.
+    pub fn step_round(&mut self, t: &mut dyn Transport) -> Result<bool> {
+        if self.is_done() {
+            return Ok(true);
+        }
+        let (n, me, s) = (self.n, self.me, self.round);
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        // Send the segment received last round (own segment at s = 0)…
+        let send_range = self.layout.range((me + n - s) % n);
         if !send_range.is_empty() {
-            t.send_f32(next, &buf[send_range])?;
+            t.send_f32(next, &self.buf[send_range])?;
         }
         // …and take delivery of the predecessor's forward.
-        let seg_recv = (me + 2 * n - 1 - s) % n;
-        let recv_range = layout.range(seg_recv);
+        let recv_range = self.layout.range((me + 2 * n - 1 - s) % n);
         if !recv_range.is_empty() {
             let data = t.recv_f32(prev)?;
             if data.len() != recv_range.len() {
@@ -90,47 +158,80 @@ pub fn ring_allgather(
                     recv_range.len()
                 ));
             }
-            buf[recv_range].copy_from_slice(&data);
+            self.buf[recv_range].copy_from_slice(&data);
         }
+        self.round += 1;
+        Ok(self.is_done())
     }
-    Ok(buf)
+
+    /// The gathered full vector (identical on every participating
+    /// rank). Errors if rounds are still outstanding.
+    pub fn finish(self) -> Result<Vec<f32>> {
+        if !self.is_done() {
+            return Err(anyhow!(
+                "allgather finished with {} of {} rounds undriven",
+                self.n - 1 - self.round,
+                self.n - 1
+            ));
+        }
+        Ok(self.buf)
+    }
 }
 
-/// Ring ReduceScatter: `full` is this rank's full-length contribution;
-/// returns this rank's segment of the element-wise sum.
-pub fn ring_reduce_scatter(
-    t: &mut dyn Transport,
-    full: &[f32],
-    layout: &ShardLayout,
-) -> Result<Vec<f32>> {
-    let n = check_group(t, layout)?;
-    let me = t.rank();
-    if full.len() != layout.len() {
-        return Err(anyhow!(
-            "rank {me} contribution holds {} elems, layout wants {}",
-            full.len(),
-            layout.len()
-        ));
+/// An in-flight ring ReduceScatter. See the module docs for the
+/// interleaving contract.
+pub struct ReduceScatterOp {
+    layout: ShardLayout,
+    acc: Vec<f32>,
+    me: usize,
+    n: usize,
+    round: usize,
+}
+
+impl ReduceScatterOp {
+    /// Begin a ReduceScatter of this rank's full-length contribution.
+    pub fn start(
+        t: &dyn Transport,
+        full: &[f32],
+        layout: &ShardLayout,
+    ) -> Result<ReduceScatterOp> {
+        let n = check_group(t, layout)?;
+        let me = t.rank();
+        if full.len() != layout.len() {
+            return Err(anyhow!(
+                "rank {me} contribution holds {} elems, layout wants {}",
+                full.len(),
+                layout.len()
+            ));
+        }
+        Ok(ReduceScatterOp { layout: layout.clone(), acc: full.to_vec(), me, n, round: 0 })
     }
-    let mut acc = full.to_vec();
-    if n == 1 {
-        return Ok(acc);
+
+    /// All N−1 rounds driven?
+    pub fn is_done(&self) -> bool {
+        self.round + 1 >= self.n
     }
-    let next = (me + 1) % n;
-    let prev = (me + n - 1) % n;
-    for s in 0..n - 1 {
+
+    /// Drive one ring round (one send + one accumulate). Returns
+    /// whether the op is now complete; calling on a complete op is a
+    /// no-op.
+    pub fn step_round(&mut self, t: &mut dyn Transport) -> Result<bool> {
+        if self.is_done() {
+            return Ok(true);
+        }
+        let (n, me, s) = (self.n, self.me, self.round);
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
         // Forward the partial sum accumulated so far for segment
         // (me − s − 1) mod n; the segment received at step s − 1.
-        let seg_send = (me + 2 * n - s - 1) % n;
-        let send_range = layout.range(seg_send);
+        let send_range = self.layout.range((me + 2 * n - s - 1) % n);
         if !send_range.is_empty() {
-            t.send_f32(next, &acc[send_range])?;
+            t.send_f32(next, &self.acc[send_range])?;
         }
         // Accumulate the predecessor's partial into ours — the SAME
         // `*o += v` order as the in-process ring, so sums are bitwise
         // identical.
-        let seg_recv = (me + 2 * n - s - 2) % n;
-        let recv_range = layout.range(seg_recv);
+        let recv_range = self.layout.range((me + 2 * n - s - 2) % n);
         if !recv_range.is_empty() {
             let data = t.recv_f32(prev)?;
             if data.len() != recv_range.len() {
@@ -141,12 +242,50 @@ pub fn ring_reduce_scatter(
                     recv_range.len()
                 ));
             }
-            for (o, v) in acc[recv_range].iter_mut().zip(&data) {
-                *o += v;
-            }
+            add_assign(&mut self.acc[recv_range], &data);
         }
+        self.round += 1;
+        Ok(self.is_done())
     }
-    Ok(acc[layout.range(me)].to_vec())
+
+    /// This rank's segment of the element-wise sum. Errors if rounds
+    /// are still outstanding.
+    pub fn finish(self) -> Result<Vec<f32>> {
+        if !self.is_done() {
+            return Err(anyhow!(
+                "reduce-scatter finished with {} of {} rounds undriven",
+                self.n - 1 - self.round,
+                self.n - 1
+            ));
+        }
+        Ok(self.acc[self.layout.range(self.me)].to_vec())
+    }
+}
+
+/// Ring AllGather: `shard` is this rank's segment; returns the full
+/// vector (identical on every participating rank). Blocking wrapper
+/// over [`AllGatherOp`].
+pub fn ring_allgather(
+    t: &mut dyn Transport,
+    shard: &[f32],
+    layout: &ShardLayout,
+) -> Result<Vec<f32>> {
+    let mut op = AllGatherOp::start(t, shard, layout)?;
+    while !op.step_round(t)? {}
+    op.finish()
+}
+
+/// Ring ReduceScatter: `full` is this rank's full-length contribution;
+/// returns this rank's segment of the element-wise sum. Blocking
+/// wrapper over [`ReduceScatterOp`].
+pub fn ring_reduce_scatter(
+    t: &mut dyn Transport,
+    full: &[f32],
+    layout: &ShardLayout,
+) -> Result<Vec<f32>> {
+    let mut op = ReduceScatterOp::start(t, full, layout)?;
+    while !op.step_round(t)? {}
+    op.finish()
 }
 
 #[cfg(test)]
@@ -252,5 +391,97 @@ mod tests {
             (bad_shard, bad_full)
         });
         assert!(got.iter().all(|&(a, b)| a && b));
+    }
+
+    #[test]
+    fn chunked_add_matches_scalar_add_bitwise() {
+        // Odd length crossing several chunk boundaries.
+        let n = ADD_CHUNK * 3 + 37;
+        let mut acc: Vec<f32> =
+            (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let data: Vec<f32> =
+            (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut scalar = acc.clone();
+        for (o, v) in scalar.iter_mut().zip(&data) {
+            *o += v;
+        }
+        add_assign(&mut acc, &data);
+        let ab: Vec<u32> = acc.iter().map(|x| x.to_bits()).collect();
+        let sb: Vec<u32> = scalar.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, sb);
+    }
+
+    #[test]
+    fn two_ops_interleave_rounds_on_one_endpoint() {
+        // The overlap substrate: an AllGather (next unit's weights)
+        // and a ReduceScatter (previous unit's grads) run round-by-
+        // round interleaved on the SAME endpoint, and both match the
+        // in-process references bitwise. Every rank drives the two ops
+        // in the same program order, which is the whole contract.
+        let la = ShardLayout::by_ratios(10, &[0.5, 0.0, 0.3, 0.2]);
+        let lb = ShardLayout::by_ratios(13, &[0.25, 0.25, 0.25, 0.25]);
+        let shards: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..la.size(r)).map(|i| (r * 100 + i) as f32).collect())
+            .collect();
+        let fulls: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..13).map(|i| 0.25 * (r * 7 + i) as f32).collect())
+            .collect();
+        let expect_ag = inproc::ring_allgather(&shards, &la);
+        let expect_rs = inproc::ring_reduce_scatter(&fulls, &lb);
+        let got = on_fabric(4, |t| {
+            let mut ag = AllGatherOp::start(t, &shards[t.rank()], &la).unwrap();
+            let mut rs =
+                ReduceScatterOp::start(t, &fulls[t.rank()], &lb).unwrap();
+            // Alternate single rounds until both complete.
+            loop {
+                let a = ag.step_round(t).unwrap();
+                let b = rs.step_round(t).unwrap();
+                if a && b {
+                    break;
+                }
+            }
+            (ag.finish().unwrap(), rs.finish().unwrap())
+        });
+        for (rank, (ag, rs)) in got.iter().enumerate() {
+            assert_eq!(ag, &expect_ag, "rank {rank} AG diverged");
+            assert_eq!(rs, &expect_rs[rank], "rank {rank} RS diverged");
+        }
+    }
+
+    #[test]
+    fn unfinished_ops_refuse_to_finish() {
+        let layout = ShardLayout::by_ratios(6, &[0.5, 0.5]);
+        let shards = [vec![1f32, 2., 3.], vec![4f32, 5., 6.]];
+        let got = on_fabric(2, |t| {
+            let op = AllGatherOp::start(t, &shards[t.rank()], &layout).unwrap();
+            let premature = op.finish().is_err();
+            // Drain the ring properly so the peer is not left hanging.
+            let full =
+                ring_allgather(t, &shards[t.rank()], &layout).unwrap();
+            (premature, full)
+        });
+        assert!(got.iter().all(|(p, _)| *p));
+        assert_eq!(got[0].1, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn scratch_reuse_overwrites_stale_contents() {
+        let layout = ShardLayout::by_ratios(6, &[0.5, 0.5]);
+        let shards = [vec![1f32, 2., 3.], vec![4f32, 5., 6.]];
+        let got = on_fabric(2, |t| {
+            // Poisoned oversized scratch: result must not see it.
+            let scratch = vec![f32::NAN; 64];
+            let mut op = AllGatherOp::start_into(
+                t,
+                &shards[t.rank()],
+                &layout,
+                scratch,
+            )
+            .unwrap();
+            while !op.step_round(t).unwrap() {}
+            op.finish().unwrap()
+        });
+        assert_eq!(got[0], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(got[1], got[0]);
     }
 }

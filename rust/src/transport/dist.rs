@@ -49,10 +49,12 @@ use std::time::{Duration, Instant};
 use crate::coordinator::elastic::Transfer;
 use crate::exec::native::MAX_STEP_TOKENS;
 use crate::exec::{NativeExecutor, StepExecutor, StepTimeModel, SurrogateSpec};
-use crate::sharding::ShardLayout;
+use crate::sharding::{ShardLayout, UnitLayout};
 use crate::trainer::adam::{AdamConfig, AdamShard};
 use crate::trainer::data::{split_batch, Corpus};
-use crate::trainer::{flatten, unflatten, StepStats, WorkerSpec};
+use crate::trainer::{
+    flatten, unflatten, unflatten_into, StepStats, WorkerSpec,
+};
 use crate::transport::{
     collectives as wire, ChaosTransport, CrashMode, FaultPlan, LocalFabric,
     Transport,
@@ -117,6 +119,14 @@ pub struct DistConfig {
     /// default — the sync costs one extra model-sized transfer per
     /// step per rank.
     pub ft: bool,
+    /// FSDP units for the sharded step (`<= 1` = whole-model gather):
+    /// each rank gathers unit k+1's weights on the wire WHILE unit k
+    /// computes (round-stepped [`wire::AllGatherOp`] driven between
+    /// compute chunks), frees each unit after use, and reduce-scatters
+    /// its gradients per unit. Transient parameter memory then scales
+    /// with the largest unit; the trajectory stays bitwise the
+    /// whole-gather one (DESIGN.md invariant 13).
+    pub fsdp_units: usize,
 }
 
 impl Default for DistConfig {
@@ -128,6 +138,7 @@ impl Default for DistConfig {
             surrogate: SurrogateSpec::default(),
             shard_params: false,
             ft: false,
+            fsdp_units: 1,
         }
     }
 }
@@ -256,6 +267,7 @@ fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
     w.f64(cfg.adam.weight_decay as f64);
     w.u8(u8::from(cfg.shard_params));
     w.u8(u8::from(cfg.ft));
+    w.u64(cfg.fsdp_units as u64);
     put_membership(&mut w, membership);
     w.0
 }
@@ -277,9 +289,18 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
     };
     let shard_params = r.u8()? != 0;
     let ft = r.u8()? != 0;
+    let fsdp_units = r.u64()? as usize;
     let membership = get_membership(r)?;
     Ok((
-        DistConfig { seed, adam, corpus_branch, surrogate, shard_params, ft },
+        DistConfig {
+            seed,
+            adam,
+            corpus_branch,
+            surrogate,
+            shard_params,
+            ft,
+            fsdp_units,
+        },
         membership,
     ))
 }
@@ -351,6 +372,69 @@ fn layout_of(membership: &[WorkerSpec], flat_len: usize) -> ShardLayout {
     ShardLayout::by_ratios(flat_len, &ratios)
 }
 
+/// EXACTLY `Trainer::unit_plan`'s derivation, so the dist and
+/// in-process unit boundaries agree bit for bit.
+fn unit_plan(
+    exec: &NativeExecutor,
+    layout: &ShardLayout,
+    shard_params: bool,
+    fsdp_units: usize,
+) -> UnitLayout {
+    if shard_params && fsdp_units > 1 {
+        UnitLayout::for_prefix(
+            layout,
+            exec.unit_region(),
+            exec.unit_alignment(),
+            fsdp_units,
+        )
+    } else {
+        UnitLayout::whole(layout)
+    }
+}
+
+/// Events traced by [`drive_overlapped`], in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapEvent {
+    /// One compute chunk ran.
+    Compute,
+    /// One ring round of the prefetch AllGather was driven.
+    CommRound,
+}
+
+/// The compute/comm overlap scheduler: run `chunks` compute chunks,
+/// driving one ring round of the `prefetch` AllGather after each (unit
+/// k's compute interleaved with unit k+1's gather on the same
+/// endpoint), then drain the remaining rounds. Only ONE collective is
+/// ever in flight, so ranks may run different chunk counts (uneven
+/// `b_i`) without violating the op-interleaving contract — the wire
+/// sees the same op order everywhere, just at different times.
+/// `trace` records the interleaving for tests.
+pub(crate) fn drive_overlapped(
+    t: &mut dyn Transport,
+    mut prefetch: Option<&mut wire::AllGatherOp>,
+    chunks: usize,
+    mut compute_chunk: impl FnMut(usize) -> Result<()>,
+    mut trace: impl FnMut(OverlapEvent),
+) -> Result<()> {
+    for c in 0..chunks {
+        compute_chunk(c)?;
+        trace(OverlapEvent::Compute);
+        if let Some(op) = prefetch.as_deref_mut() {
+            if !op.is_done() {
+                op.step_round(t)?;
+                trace(OverlapEvent::CommRound);
+            }
+        }
+    }
+    if let Some(op) = prefetch {
+        while !op.is_done() {
+            op.step_round(t)?;
+            trace(OverlapEvent::CommRound);
+        }
+    }
+    Ok(())
+}
+
 /// Rank 0's flat-indexed copy of every rank's post-step state, kept
 /// current by [`DistRank::ft_sync`]. Flat positions, not ranks, index
 /// the mirror, so it is valid across membership changes; after step k
@@ -382,10 +466,21 @@ pub struct DistRank {
     /// (`None` for standby ranks and in leader-resident mode).
     param_shard: Option<Vec<f32>>,
     shard_params: bool,
+    /// Requested FSDP unit count (`<= 1` = whole-model gather).
+    fsdp_units: usize,
+    /// The unit plan over `layout`; rebuilt on every migration.
+    units: UnitLayout,
     /// Fault tolerance on: run the per-step [`DistRank::ft_sync`].
     ft: bool,
     /// Rank 0 with `ft` only: the cluster-state mirror.
     mirror: Option<Mirror>,
+    /// Flat gather scratch, recycled across steps (and across units
+    /// within a step) so the sharded hot path performs no per-step
+    /// full-weight allocation.
+    scratch: Vec<f32>,
+    /// ABI-shaped materialized-weights buffer for the whole-gather
+    /// path, reused across steps.
+    full_scratch: Vec<Vec<f32>>,
 }
 
 impl DistRank {
@@ -423,6 +518,12 @@ impl DistRank {
             v: vec![0f32; flat_len],
             w: mirror_w,
         });
+        let units = unit_plan(
+            &exec,
+            &layout,
+            cfg.shard_params,
+            cfg.fsdp_units,
+        );
         Ok(DistRank {
             rank,
             exec,
@@ -435,8 +536,12 @@ impl DistRank {
             adam: cfg.adam,
             param_shard,
             shard_params: cfg.shard_params,
+            fsdp_units: cfg.fsdp_units,
+            units,
             ft: cfg.ft,
             mirror,
+            scratch: Vec::new(),
+            full_scratch: Vec::new(),
         })
     }
 
@@ -503,24 +608,38 @@ impl DistRank {
             .nth(self.rank)
             .expect("rank within membership");
 
+        // Unit-pipelined FSDP path: per-unit wire gathers overlapped
+        // with compute instead of one whole-model gather.
+        if self.units.num_units() > 1 {
+            return self.step_units(t, &my_tokens, &my_targets, b);
+        }
+
         let flat_len = self.flat_len();
         // Materialize the full weights: resident in leader mode; in
         // fully-sharded mode a head-of-step wire AllGather of the
         // per-rank slices — bitwise the vector the leader path rebuilt
-        // at the previous step's tail. Freed when the step returns.
-        let materialized: Option<Vec<Vec<f32>>> = if self.shard_params {
+        // at the previous step's tail. The gather lands in persistent
+        // scratch buffers (recycled step to step — the gather
+        // overwrites every element), so the hot path performs no
+        // per-step full-weight allocation.
+        let use_scratch = self.shard_params;
+        if self.shard_params {
             let mine = self.param_shard.as_deref().ok_or_else(|| {
                 anyhow!("active rank {} has no parameter shard", self.rank)
             })?;
-            let flat = wire::ring_allgather(t, mine, &self.layout)?;
-            Some(unflatten(&flat, &self.sizes))
-        } else {
-            None
-        };
-        let full: &[Vec<f32>] = match &materialized {
-            Some(m) => m,
-            None => &self.params,
-        };
+            let mut op = wire::AllGatherOp::start_into(
+                &*t,
+                mine,
+                &self.layout,
+                std::mem::take(&mut self.scratch),
+            )?;
+            while !op.step_round(t)? {}
+            let flat = op.finish()?;
+            unflatten_into(&flat, &self.sizes, &mut self.full_scratch);
+            self.scratch = flat;
+        }
+        let full: &[Vec<f32>] =
+            if use_scratch { &self.full_scratch } else { &self.params };
         let (my_grad, my_loss, my_count) = if my_tokens.is_empty() {
             // A state-only rank (b_i = 0) contributes an exact zero
             // vector — bitwise what `worker_pass` returns on no rows.
@@ -570,6 +689,160 @@ impl DistRank {
             self.params = unflatten(&gathered, &self.sizes);
         }
         Ok((my_loss, my_count))
+    }
+
+    /// The unit-pipelined SPMD step: gather unit k+1's weights on the
+    /// wire WHILE unit k computes (one [`wire::AllGatherOp`] round
+    /// between per-row compute chunks, via [`drive_overlapped`]), free
+    /// each unit after its gradients are reduce-scattered, and keep
+    /// only the tail (the executor's non-unit suffix) materialized
+    /// across the step. The wire sees a strictly sequential op order —
+    /// tail AG, AG 0, AG 1, RS 0, AG 2, RS 1, … — identical on every
+    /// rank; only compute overlaps communication, so uneven `b_i`
+    /// chunk counts cannot violate the op-interleaving contract.
+    /// Per-unit gradient shards concatenate exactly to the global
+    /// `r_i` shard and the dyadic grid makes every partial sum exactly
+    /// associative, so the trajectory is BITWISE the whole-gather one
+    /// (DESIGN.md invariant 13); only the f64 loss accumulation order
+    /// differs (last bits, never parameters). Freed unit buffers are
+    /// recycled into the next gather — steady state allocates no
+    /// weight-sized buffers.
+    fn step_units(
+        &mut self,
+        t: &mut dyn Transport,
+        my_tokens: &[i32],
+        my_targets: &[i32],
+        b: usize,
+    ) -> Result<(f64, f64)> {
+        let seq = self.exec.seq_len();
+        let flat_len = self.flat_len();
+        let me = self.rank;
+        let nu = self.units.num_units();
+        let region = self.exec.unit_region().min(flat_len);
+        let d = self.exec.unit_alignment().max(1);
+        let tail_is_unit = region < flat_len;
+        let table_units = nu - usize::from(tail_is_unit);
+        let my_rows = my_tokens.len() / seq;
+        let token_count = (b * seq) as f64;
+
+        let mut loss = 0f64;
+        let mut pieces: Vec<Vec<f32>> = Vec::with_capacity(nu);
+        {
+            let mine = self.param_shard.as_deref().ok_or_else(|| {
+                anyhow!("active rank {me} has no parameter shard")
+            })?;
+            let base = self.layout.range(me).start;
+            let ul = &self.units;
+            let slice = |u: usize| -> &[f32] {
+                let s = ul.rank_slice(u, me);
+                &mine[s.start - base..s.end - base]
+            };
+            // Head-of-step tail gather (tiny — the native surrogate's
+            // bias), then unit 0, both blocking: nothing to overlap
+            // with yet.
+            let tail: Vec<f32> = if tail_is_unit {
+                wire::ring_allgather(
+                    t,
+                    slice(nu - 1),
+                    ul.unit_layout(nu - 1),
+                )?
+            } else {
+                Vec::new()
+            };
+            let mut tail_g = vec![0f32; tail.len()];
+            let mut spare = std::mem::take(&mut self.scratch);
+            let mut current = {
+                let mut op = wire::AllGatherOp::start_into(
+                    &*t,
+                    slice(0),
+                    ul.unit_layout(0),
+                    spare,
+                )?;
+                while !op.step_round(t)? {}
+                op.finish()?
+            };
+            spare = Vec::new();
+            for k in 0..table_units {
+                let mut next_op = if k + 1 < table_units {
+                    Some(wire::AllGatherOp::start_into(
+                        &*t,
+                        slice(k + 1),
+                        ul.unit_layout(k + 1),
+                        std::mem::take(&mut spare),
+                    )?)
+                } else {
+                    None
+                };
+                // Compute unit k row by row, driving one gather round
+                // of unit k+1 between rows, then drain the gather.
+                let urange = ul.unit_range(k);
+                let rows = urange.start / d..urange.end / d;
+                let mut unit_g = vec![0f32; urange.len()];
+                drive_overlapped(
+                    t,
+                    next_op.as_mut(),
+                    my_rows,
+                    |c| {
+                        let tk = &my_tokens[c * seq..(c + 1) * seq];
+                        let tg = &my_targets[c * seq..(c + 1) * seq];
+                        loss += self.exec.unit_pass_chunk(
+                            rows.clone(),
+                            &current,
+                            &tail,
+                            tk,
+                            tg,
+                            &mut unit_g,
+                            &mut tail_g,
+                        )?;
+                        Ok(())
+                    },
+                    |_| {},
+                )?;
+                // Unit k is done: recycle its buffer, reduce-scatter
+                // its gradients onto the owning ranks.
+                spare = current;
+                pieces.push(wire::ring_reduce_scatter(
+                    t,
+                    &unit_g,
+                    ul.unit_layout(k),
+                )?);
+                current = match next_op {
+                    Some(op) => op.finish()?,
+                    None => Vec::new(),
+                };
+            }
+            if tail_is_unit {
+                pieces.push(wire::ring_reduce_scatter(
+                    t,
+                    &tail_g,
+                    ul.unit_layout(nu - 1),
+                )?);
+            }
+            self.scratch = spare;
+        }
+
+        // This rank's global gradient shard is its per-unit slices
+        // concatenated in unit order (they tile layout.range(me)
+        // exactly), then the Eq.-1 scale — bitwise the whole-gather
+        // ReduceScatter by exact associativity.
+        let mut grad_shard: Vec<f32> =
+            Vec::with_capacity(self.layout.size(me));
+        for p in &pieces {
+            grad_shard.extend_from_slice(p);
+        }
+        let inv = 1.0 / token_count as f32;
+        for g in grad_shard.iter_mut() {
+            *g *= inv;
+        }
+        let shard = self.shard.as_mut().ok_or_else(|| {
+            anyhow!("active rank {me} has no shard")
+        })?;
+        let mut mine = self.param_shard.take().ok_or_else(|| {
+            anyhow!("active rank {me} has no parameter shard")
+        })?;
+        shard.update(&mut mine, &grad_shard);
+        self.param_shard = Some(mine);
+        Ok((loss, my_tokens.len() as f64))
     }
 
     /// Ship this rank's weight slice to rank 0 — the worker half of the
@@ -871,6 +1144,15 @@ impl DistRank {
         }
 
         self.membership = cmd.new_membership.clone();
+        // Unit boundaries are layout-relative: rebuild them against the
+        // post-migration shard layout so the next step's per-unit rank
+        // slices tile the NEW ranges.
+        self.units = unit_plan(
+            &self.exec,
+            &new_layout,
+            self.shard_params,
+            self.fsdp_units,
+        );
         self.layout = new_layout;
         self.shard = is_active.then(|| AdamShard {
             m: new_m,
@@ -1412,6 +1694,7 @@ mod tests {
             seed: 9,
             corpus_branch: 3,
             ft: true,
+            fsdp_units: 5,
             ..Default::default()
         };
         let membership = vec![member(3, 0.7), member(1, 0.3)];
@@ -1424,6 +1707,7 @@ mod tests {
         assert_eq!(back.adam.lr, cfg.adam.lr);
         assert_eq!(back.surrogate.vocab, cfg.surrogate.vocab);
         assert!(back.ft);
+        assert_eq!(back.fsdp_units, 5);
         assert_eq!(mem.len(), 2);
         assert_eq!(mem[0].batch, 3);
         assert_eq!(mem[1].state_ratio, 0.3);
@@ -1523,6 +1807,124 @@ mod tests {
         }
         rep.shutdown();
         sh.shutdown();
+    }
+
+    #[test]
+    fn overlap_scheduler_interleaves_gather_rounds_with_compute() {
+        // The scheduler's contract, observed directly: with an N-rank
+        // AllGather (N-1 rounds) prefetching behind N-1 compute
+        // chunks, every chunk is followed by exactly one wire round —
+        // the comm fully hides behind compute, no trailing drain.
+        let layout = ShardLayout::by_ratios(8, &[0.25, 0.25, 0.25, 0.25]);
+        let shards: Vec<Vec<f32>> = (0..4)
+            .map(|me| vec![(me * 10) as f32, (me * 10 + 1) as f32])
+            .collect();
+        let eps = LocalFabric::new(4);
+        let results: Vec<(Vec<OverlapEvent>, Vec<f32>)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = eps
+                    .into_iter()
+                    .map(|mut ep| {
+                        let shards = &shards;
+                        let layout = &layout;
+                        s.spawn(move || {
+                            let t: &mut dyn Transport = &mut ep;
+                            let mut op = wire::AllGatherOp::start(
+                                &*t,
+                                &shards[t.rank()],
+                                layout,
+                            )
+                            .unwrap();
+                            let mut events = Vec::new();
+                            let mut computed = 0usize;
+                            drive_overlapped(
+                                t,
+                                Some(&mut op),
+                                3,
+                                |_| {
+                                    computed += 1;
+                                    Ok(())
+                                },
+                                |e| events.push(e),
+                            )
+                            .unwrap();
+                            assert_eq!(computed, 3);
+                            (events, op.finish().unwrap())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        let expect_full: Vec<f32> =
+            vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0, 30.0, 31.0];
+        for (events, full) in results {
+            assert_eq!(
+                events,
+                vec![
+                    OverlapEvent::Compute,
+                    OverlapEvent::CommRound,
+                    OverlapEvent::Compute,
+                    OverlapEvent::CommRound,
+                    OverlapEvent::Compute,
+                    OverlapEvent::CommRound,
+                ]
+            );
+            assert_eq!(full, expect_full);
+        }
+    }
+
+    #[test]
+    fn unit_sharded_driver_matches_whole_gather_bitwise() {
+        // Invariant 13 at the driver level: the unit-pipelined step
+        // (per-unit wire gathers overlapped with compute, per-unit
+        // reduce-scatters) rides the whole-model-gather trajectory bit
+        // for bit, across an elastic migration (unit boundaries are
+        // rebuilt against the new layout).
+        use crate::coordinator::elastic::plan_migration;
+
+        let membership =
+            || vec![member(2, 0.5), member(1, 0.3), member(1, 0.2)];
+        let whole_cfg = DistConfig {
+            seed: 7,
+            shard_params: true,
+            ..Default::default()
+        };
+        let unit_cfg = DistConfig { fsdp_units: 4, ..whole_cfg.clone() };
+        let mut whole =
+            DistDriver::launch(FabricSpec::Local, 3, whole_cfg, membership())
+                .unwrap();
+        let mut units =
+            DistDriver::launch(FabricSpec::Local, 3, unit_cfg, membership())
+                .unwrap();
+        for s in 0..2 {
+            whole.step(s).unwrap();
+            units.step(s).unwrap();
+            assert_eq!(
+                units.gather_params().unwrap(),
+                whole.gather_params().unwrap(),
+                "unit-sharded run diverged at step {s}"
+            );
+        }
+        let new_membership = vec![member(2, 0.6), member(2, 0.4)];
+        let survivors = vec![Some(0), Some(1)];
+        for d in [&mut whole, &mut units] {
+            let old = d.layout().clone();
+            let new = layout_of(&new_membership, old.len());
+            let (transfers, _, _) = plan_migration(&old, &new, &survivors);
+            d.migrate(new_membership.clone(), &survivors, &transfers)
+                .unwrap();
+        }
+        for s in 2..4 {
+            whole.step(s).unwrap();
+            units.step(s).unwrap();
+            assert_eq!(
+                units.gather_params().unwrap(),
+                whole.gather_params().unwrap(),
+                "unit-sharded run diverged at step {s} (post-migration)"
+            );
+        }
+        whole.shutdown();
+        units.shutdown();
     }
 
     #[test]

@@ -123,12 +123,14 @@ impl std::fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
-/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
-/// on every v2 TCP frame. Table-free bitwise form: this runs on
-/// command-sized frames and heartbeats far more often than on bulk
-/// tensor traffic, and the bulk path is dominated by the socket.
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut crc: u32 = 0xFFFF_FFFF;
+/// Seed for the streaming CRC form ([`crc32_update`]).
+pub const CRC32_INIT: u32 = 0xFFFF_FFFF;
+
+/// Streaming CRC32: fold `data` into a running state (seed
+/// [`CRC32_INIT`], finalize with bitwise NOT). The TCP sender uses
+/// this to checksum a frame split across header/payload/trailer
+/// regions without concatenating them into a staging buffer.
+pub fn crc32_update(mut crc: u32, data: &[u8]) -> u32 {
     for &b in data {
         crc ^= b as u32;
         for _ in 0..8 {
@@ -136,7 +138,15 @@ pub fn crc32(data: &[u8]) -> u32 {
             crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
         }
     }
-    !crc
+    crc
+}
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
+/// on every v2 TCP frame. Table-free bitwise form: this runs on
+/// command-sized frames and heartbeats far more often than on bulk
+/// tensor traffic, and the bulk path is dominated by the socket.
+pub fn crc32(data: &[u8]) -> u32 {
+    !crc32_update(CRC32_INIT, data)
 }
 
 /// One in-flight message. In-process transports pass these by value;

@@ -55,7 +55,7 @@
 //! marks the peer closed and fails fast into the session's recovery
 //! path instead of retrying blind.
 
-use std::io::{BufReader, Read, Write};
+use std::io::{BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -63,8 +63,9 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{
-    crc32, expect_bytes, expect_f32, f32s_from_le_bytes, f32s_to_le_bytes,
-    FailureDetector, Frame, Transport, TransportError, TAG_BYTES, TAG_F32,
+    crc32, crc32_update, expect_bytes, expect_f32, f32s_from_le_bytes,
+    f32s_to_le_bytes, FailureDetector, Frame, Transport, TransportError,
+    CRC32_INIT, TAG_BYTES, TAG_F32,
 };
 use crate::transport::failure::DEFAULT_SUSPECT_AFTER_MS;
 use crate::util::error::{anyhow, Result};
@@ -133,6 +134,45 @@ pub fn encode_wire_frame(tag: u8, seq: u64, payload: &[u8]) -> Vec<u8> {
     let crc = crc32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
     out
+}
+
+/// `write_all` for a frame split across three regions, as vectored
+/// writes (the kernel sees header + payload + CRC in one syscall on
+/// the happy path). Partial writes retry by re-slicing each region's
+/// unsent suffix — a stable-Rust stand-in for `write_all_vectored`.
+fn write_frame_vectored(
+    w: &mut impl Write,
+    header: &[u8],
+    payload: &[u8],
+    trailer: &[u8],
+) -> std::io::Result<()> {
+    let parts = [header, payload, trailer];
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut off = 0usize;
+    while off < total {
+        let mut bufs = Vec::with_capacity(3);
+        let mut skip = off;
+        for p in parts {
+            if skip >= p.len() {
+                skip -= p.len();
+                continue;
+            }
+            bufs.push(IoSlice::new(&p[skip..]));
+            skip = 0;
+        }
+        match w.write_vectored(&bufs) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write whole frame",
+                ));
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Parse and verify one complete v2 wire frame. Returns the typed
@@ -552,23 +592,54 @@ impl TcpTransport {
         }
         let lane = self.lanes[to].as_mut().expect("mesh is fully connected");
         lane.tx_seq += 1;
-        let mut buf = encode_wire_frame(tag, lane.tx_seq, payload);
-        if lane.corrupt_next {
-            lane.corrupt_next = false;
-            // Flip one payload byte AFTER the CRC was computed, so the
-            // receiver's check must fire; empty payloads flip the tag.
-            let idx = if payload.is_empty() { 0 } else { 17 };
-            buf[idx] ^= 0x01;
+        let seq = lane.tx_seq;
+        let framed = 17 + payload.len() + 4;
+        if framed <= DUP_CACHE_MAX_BYTES || lane.corrupt_next {
+            // Command-sized traffic (and fault injection, which must
+            // flip a byte of the ASSEMBLED frame): contiguous path, so
+            // the exact bytes can be cached for `resend_last`.
+            let mut buf = encode_wire_frame(tag, seq, payload);
+            if lane.corrupt_next {
+                lane.corrupt_next = false;
+                // Flip one payload byte AFTER the CRC was computed, so
+                // the receiver's check must fire; empty payloads flip
+                // the tag.
+                let idx = if payload.is_empty() { 0 } else { 17 };
+                buf[idx] ^= 0x01;
+            }
+            lane.last_frame =
+                (buf.len() <= DUP_CACHE_MAX_BYTES).then(|| buf.clone());
+            let mut s = lane
+                .stream
+                .lock()
+                .map_err(|_| anyhow!("lane {to} mutex poisoned"))?;
+            if let Err(e) = s.write_all(&buf) {
+                // Single-attempt policy (see module docs): a failed or
+                // timed-out frame write is unrecoverable mid-stream.
+                self.detector.mark_closed(to);
+                return Err(anyhow!("send to rank {to} failed: {e}"));
+            }
+            return Ok(());
         }
-        lane.last_frame =
-            (buf.len() <= DUP_CACHE_MAX_BYTES).then(|| buf.clone());
+        // Bulk tensor frame: stream the CRC over header + payload and
+        // issue a vectored write of the three regions — the payload is
+        // never copied into a frame-sized staging buffer. Bulk frames
+        // were never dup-cached (see `DUP_CACHE_MAX_BYTES`).
+        lane.last_frame = None;
+        let mut header = [0u8; 17];
+        header[0] = tag;
+        header[1..9].copy_from_slice(&seq.to_le_bytes());
+        header[9..17]
+            .copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        let crc = !crc32_update(crc32_update(CRC32_INIT, &header), payload);
+        let trailer = crc.to_le_bytes();
         let mut s = lane
             .stream
             .lock()
             .map_err(|_| anyhow!("lane {to} mutex poisoned"))?;
-        if let Err(e) = s.write_all(&buf) {
-            // Single-attempt policy (see module docs): a failed or
-            // timed-out frame write is unrecoverable mid-stream.
+        if let Err(e) =
+            write_frame_vectored(&mut *s, &header, payload, &trailer)
+        {
             self.detector.mark_closed(to);
             return Err(anyhow!("send to rank {to} failed: {e}"));
         }
@@ -810,6 +881,48 @@ mod tests {
             decode_wire_frame(&buf[..10], 0).unwrap_err(),
             TransportError::Protocol { .. }
         ));
+    }
+
+    #[test]
+    fn vectored_writer_survives_short_writes() {
+        // A sink that accepts ONE byte per call forces the re-slicing
+        // path on every boundary, including mid-region and
+        // region-straddling offsets.
+        struct OneByte(Vec<u8>);
+        impl Write for OneByte {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if buf.is_empty() {
+                    return Ok(0);
+                }
+                self.0.push(buf[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = OneByte(Vec::new());
+        write_frame_vectored(&mut w, &[1, 2], &[3, 4, 5], &[6]).unwrap();
+        assert_eq!(w.0, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn bulk_frames_take_the_vectored_path_and_skip_the_dup_cache() {
+        // 20k f32s = 80 KB payload, well past DUP_CACHE_MAX_BYTES: the
+        // frame goes out as header + payload + CRC vectored regions
+        // and must arrive bit-exact. Bulk frames are not dup-cached,
+        // so a following resend_last is a no-op, and the next
+        // command frame's sequence number still lines up.
+        let mut eps = thread_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let big: Vec<f32> = (0..20_000).map(|i| i as f32 * 0.5).collect();
+        a.send_f32(1, &big).unwrap();
+        assert_eq!(b.recv_f32(0).unwrap(), big);
+        a.resend_last(1).unwrap();
+        a.send_bytes(1, &[1]).unwrap();
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![1]);
+        assert_eq!(b.recv_bytes_timeout(0, 50).unwrap(), None);
     }
 
     #[test]

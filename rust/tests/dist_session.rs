@@ -57,6 +57,28 @@ fn session(fabric: Option<FabricSpec>) -> Session {
     session_with(fabric, false)
 }
 
+/// A fully-sharded session with the gather cut into `fsdp_units`
+/// per-layer units (prefetch overlap + per-unit free).
+fn session_units(fabric: Option<FabricSpec>, fsdp_units: usize) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric,
+        shard_params: true,
+        fsdp_units,
+        ..Default::default()
+    };
+    Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("session starts on the 3-GPU cluster")
+}
+
 /// A 5-GPU single-node cluster: enough worker ranks to absorb three
 /// injected crashes (ranks 4, 3, 2) and still hold a 2-rank quorum.
 fn tiny5_cluster() -> cephalo::cluster::Cluster {
@@ -297,6 +319,95 @@ fn fully_sharded_sessions_match_the_leader_resident_reference() {
     assert!(moved > 0, "churn never moved any sharded weights");
     assert!(sh_tcp.reports.iter().any(|r| r.from_cache));
     assert_eq!(sh_tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
+}
+
+#[test]
+fn unit_sharded_sessions_match_the_whole_gather_reference() {
+    // Acceptance (tentpole, invariant 13): cutting the per-step gather
+    // into per-layer FSDP units — AllGather unit k+1 in the background
+    // while unit k computes, free each unit after its ReduceScatter —
+    // changes WHEN parameters are materialized, not one bit of the
+    // trajectory. Unit-sharded sessions on all three substrates ride
+    // the whole-gather and single-worker reference trajectories bit
+    // for bit across ≥ 3 churn events (≥ 2 migrations), while the
+    // transient parameter peak drops from the full flat length to the
+    // double-buffered unit pair plus the tail.
+    let mut u_tcp = session_units(Some(FabricSpec::TcpThreads), 4);
+    let mut u_local = session_units(Some(FabricSpec::Local), 4);
+    let mut u_inproc = session_units(None, 4);
+    let mut whole = session_with(None, true); // whole-model gather
+    let mut solo = reference();
+
+    // The in-process engine really runs the unit pipeline; the
+    // whole-gather reference really does not.
+    assert!(u_inproc.trainer().units().num_units() > 1);
+    assert_eq!(whole.trainer().units().num_units(), 1);
+    assert_eq!(u_tcp.params().unwrap(), solo.params());
+    assert_eq!(u_local.params().unwrap(), solo.params());
+    assert_eq!(u_inproc.params().unwrap(), solo.params());
+
+    // Shrink (unit slices of the departed rank stream over the wire),
+    // regrow, recur (plan-cache hit) — the unit plan is rebuilt on
+    // every membership change.
+    let churn = [2usize, 3, 2];
+    for (hour, &size) in churn.iter().enumerate() {
+        let rt = u_tcp.step_event(hour, size).unwrap();
+        let rl = u_local.step_event(hour, size).unwrap();
+        let ri = u_inproc.step_event(hour, size).unwrap();
+        let rw = whole.step_event(hour, size).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = solo.history.len();
+            solo.step(idx).unwrap();
+        }
+        assert_eq!(
+            u_tcp.params().unwrap(),
+            solo.params(),
+            "unit-sharded tcp diverged after event {hour} (size {size})"
+        );
+        assert_eq!(
+            u_local.params().unwrap(),
+            solo.params(),
+            "unit-sharded local diverged after event {hour}"
+        );
+        assert_eq!(
+            u_inproc.params().unwrap(),
+            solo.params(),
+            "unit-sharded in-process diverged after event {hour}"
+        );
+        assert_eq!(
+            whole.params().unwrap(),
+            solo.params(),
+            "whole-gather reference diverged after event {hour}"
+        );
+        // The unit grouping is invisible to the migration planner:
+        // every engine moves the SAME state volume.
+        assert_eq!(rt.moved_state_elems, rw.moved_state_elems);
+        assert_eq!(rl.moved_state_elems, rw.moved_state_elems);
+        assert_eq!(ri.moved_state_elems, rw.moved_state_elems);
+    }
+
+    // Transient parameter peak: the whole-gather engine materialized
+    // every element; the unit engine held at most two table units
+    // (current + prefetched) plus the tail.
+    let flat = u_inproc.trainer().num_params();
+    assert_eq!(whole.trainer().peak_materialized_elems(), flat);
+    let ul = u_inproc.trainer().units();
+    let tail_len = ul.unit_len(ul.num_units() - 1);
+    let peak = u_inproc.trainer().peak_materialized_elems();
+    assert!(peak > 0, "unit engine never materialized anything");
+    assert!(
+        peak <= 2 * ul.largest_unit() + tail_len,
+        "unit peak {peak} exceeds two units + tail \
+         ({} + {tail_len})",
+        2 * ul.largest_unit()
+    );
+    assert!(peak < flat, "unit peak must undercut the whole gather");
+
+    let moved: usize =
+        u_tcp.reports.iter().map(|r| r.moved_state_elems).sum();
+    assert!(moved > 0, "churn never moved any unit-sharded weights");
+    assert!(u_tcp.reports.iter().any(|r| r.from_cache));
+    assert_eq!(u_tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
 }
 
 #[test]

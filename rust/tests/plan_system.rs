@@ -200,6 +200,79 @@ fn sweep_admits_sharded_configs_that_oom_under_leader_residency() {
 }
 
 #[test]
+fn sweep_admits_unit_sharded_configs_that_oom_under_whole_gather() {
+    // Acceptance (FSDP units): with per-unit transient accounting the
+    // planner admits a configuration that OOMs under whole-model
+    // gather — the peak parameter bytes scale with the largest unit,
+    // not with the model.
+    use cephalo::memory::ParamResidency;
+    use cephalo::optimizer::DpOptimizer;
+    use cephalo::plan::PlanContext;
+    use cephalo::testkit::{apply_unit_residency_window, window8_cluster};
+    use std::sync::Arc;
+
+    let units = 16;
+    // The unit residency window: every GPU fits its compute plus the
+    // double-buffered unit pair and a state share, but not a
+    // whole-model gather buffer (see `apply_unit_residency_window`).
+    let w = Workload::prepare(window8_cluster(), "BERT-Large", 42)
+        .unwrap();
+    let mut profile = w.profile.clone();
+    apply_unit_residency_window(&mut profile, units);
+    let ctx =
+        PlanContext::new(&w.cluster, &w.model, &profile, &w.oracle, 0);
+    let unit: Arc<dyn Planner> = Arc::new(CephaloPlanner {
+        opts: DpOptimizer {
+            residency: ParamResidency::UnitSharded { units },
+            ..Default::default()
+        },
+        simulate: false,
+        ..Default::default()
+    });
+    let gather: Arc<dyn Planner> = Arc::new(CephaloPlanner {
+        opts: DpOptimizer {
+            residency: ParamResidency::WholeModelGather,
+            ..Default::default()
+        },
+        simulate: false,
+        ..Default::default()
+    });
+    let cells = sweep(&ctx, &[unit, gather], &[8], None);
+    assert_eq!(cells.len(), 2);
+    // Unit accounting admits the config and validates under it...
+    let admitted = cells[0]
+        .result
+        .as_ref()
+        .expect("unit-sharded accounting must admit this config");
+    let asg = admitted.assignment.as_ref().unwrap();
+    asg.validate_resident(
+        &profile,
+        8,
+        ParamResidency::UnitSharded { units },
+    )
+    .expect("unit accounting fits");
+    // ...with per-GPU peak parameter bytes = resident shard + the
+    // double-buffered unit pair, strictly below the gather peak.
+    let total = profile.total_params;
+    let unit_res = ParamResidency::UnitSharded { units };
+    for g in &asg.per_gpu {
+        assert_eq!(
+            unit_res.param_bytes(total, g.state_ratio),
+            total * 4.0 * g.state_ratio
+                + 2.0 * total * 4.0 / units as f64
+        );
+        assert!(
+            unit_res.param_bytes(total, g.state_ratio)
+                < ParamResidency::WholeModelGather
+                    .param_bytes(total, g.state_ratio)
+        );
+    }
+    // Whole-model gather OOMs on the same inputs.
+    let err = cells[1].result.as_ref().unwrap_err();
+    assert!(err.is_oom(), "expected whole-gather OOM, got: {err}");
+}
+
+#[test]
 fn oom_errors_name_planner_and_configuration() {
     // Whale fully replicates GPT 2.7B's ~44 GB state: guaranteed OOM on
     // cluster A, and the error must say who and which config.
