@@ -4,7 +4,10 @@
 //! fabric and TCP loopback, leader-resident and fully-sharded.
 //!
 //! Every run replays the SAME seeded fault schedule, so rows are
-//! comparable across fabrics and across commits.
+//! comparable across fabrics and across commits. The byte/element
+//! columns (migration bytes, mirror-sourced state elements) are
+//! deterministic accounting, not timings — the perf gate pins them
+//! exactly; a drift means the recovery path moved different data.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -77,7 +80,7 @@ fn main() {
     let mut t = Table::new(
         "Crash recovery latency (per detected failure)",
         &["fabric", "residency", "step", "dead", "gpus", "detect (ms)",
-          "replan (ms)", "migrate (ms)"],
+          "replan (ms)", "migrate (ms)", "migr bytes", "moved elems"],
     );
     let mut json_rows: Vec<Json> = Vec::new();
     let cases = [
@@ -102,11 +105,16 @@ fn main() {
                 format!("{:.2}", r.detect_ms),
                 format!("{:.2}", r.replan_ms),
                 format!("{:.2}", r.migrate_ms),
+                format!("{:.0}", r.migration_bytes),
+                r.moved_state_elems.to_string(),
             ]);
             let mut row = BTreeMap::new();
             row.insert("fabric".into(), Json::Str(fabric_label.into()));
             row.insert("residency".into(), Json::Str(mode.into()));
-            row.insert("step".into(), Json::Num(r.step as f64));
+            // As a string, `step` joins the row's identity prefix, so
+            // each recovery of a (fabric, residency) case keeps its
+            // own Exact metrics instead of colliding on flatten.
+            row.insert("step".into(), Json::Str(r.step.to_string()));
             row.insert(
                 "dead_ranks".into(),
                 Json::Arr(
@@ -117,6 +125,14 @@ fn main() {
             row.insert("detect_ms".into(), Json::Num(r.detect_ms));
             row.insert("replan_ms".into(), Json::Num(r.replan_ms));
             row.insert("migrate_ms".into(), Json::Num(r.migrate_ms));
+            row.insert(
+                "migration_bytes".into(),
+                Json::Num(r.migration_bytes),
+            );
+            row.insert(
+                "moved_state_elems".into(),
+                Json::Num(r.moved_state_elems as f64),
+            );
             json_rows.push(Json::Obj(row));
         }
     }

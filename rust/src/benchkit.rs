@@ -169,8 +169,10 @@ pub fn bench_opt(name: &str) -> Option<String> {
 // ---------------------------------------------------------------------
 
 /// Fractional regression of the aggregate rate metric that still
-/// counts as scheduler noise rather than a perf loss.
-pub const RATE_NOISE_BAND: f64 = 0.40;
+/// counts as scheduler noise rather than a perf loss. Tightened from
+/// 0.40 once the quick-mode benches raised their iteration counts
+/// enough to average out single-scheduler-hiccup jitter.
+pub const RATE_NOISE_BAND: f64 = 0.25;
 
 /// How a metric is judged by the gate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -522,11 +524,11 @@ mod tests {
         let same = compare_metrics(&base, &base);
         assert!(same.pass);
         assert_eq!(same.rate_geomean, 1.0);
-        // A 30% aggregate rate dip is inside the 40% noise band.
+        // A 20% aggregate rate dip is inside the 25% noise band.
         let jittered = flatten_metrics(&{
-            let mut rows = sample_rows(1.4, 4096.0);
+            let mut rows = sample_rows(1.6, 4096.0);
             if let Json::Obj(m) = &mut rows[1] {
-                m.insert("steps_per_sec".into(), Json::Num(70.0));
+                m.insert("steps_per_sec".into(), Json::Num(80.0));
             }
             rows
         });

@@ -93,6 +93,15 @@ impl Cluster {
         }
     }
 
+    /// The slowest intra-node link in the cluster — the conservative
+    /// per-edge bandwidth of the runtime's same-host (shm) fast path.
+    pub fn intra_bw_min_gbps(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.intra_bw_gbps)
+            .fold(f64::INFINITY, f64::min)
+    }
+
     /// §4.1 Cluster A: 2 machines (8 GPUs) over a 50 Gbps link.
     /// Machine 1: 2×L4, 1×A6000, 1×P40; machine 2: 2×P40, 2×P100.
     pub fn cluster_a() -> Cluster {

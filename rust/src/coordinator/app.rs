@@ -13,7 +13,8 @@ use crate::plan::{self, PlanCache, Planner, PlannerRegistry};
 use crate::trainer::{TrainConfig, Trainer, WorkerSpec};
 use crate::transport::{
     self, ChaosConfig, ChaosTransport, CrashMode, DistConfig, DistDriver,
-    FabricSpec, FaultPlan,
+    FabricSpec, FaultPlan, HostTopology, HybridTransport, ShmTransport,
+    Transport,
 };
 use crate::util::tablefmt::{fmt_throughput, Table};
 
@@ -61,10 +62,10 @@ fn print_help() {
          backend\n  \
          profile   fit or measure performance models\n  \
          train     real numeric training (--backend native | pjrt,\n            \
-         --transport inproc | local | tcp)\n  \
+         --transport inproc | local | tcp | shm | hybrid)\n  \
          trace     generate the AWS availability trace (Fig. 1)\n  \
          worker    one distributed training rank (spawned by the\n            \
-         coordinator for --transport tcp)\n  \
+         coordinator for --transport tcp | shm | hybrid)\n  \
          bench-gate  compare two BENCH_*.json runs; non-zero exit on\n            \
          perf regression beyond the noise band\n  \
          help      this message\n\n\
@@ -113,6 +114,21 @@ fn shard_params_flag(a: &crate::cli::Args) -> Result<bool, String> {
         );
     }
     Ok(!a.has("leader-params"))
+}
+
+/// Parse `--hosts` (comma-separated host ids, one per rank) against
+/// the fabric's world size. `None` when the flag is absent — every
+/// rank on one host.
+fn parse_hosts(
+    a: &crate::cli::Args,
+    world: usize,
+) -> Result<Option<Vec<u64>>, String> {
+    match a.get("hosts") {
+        Some(spec) => {
+            Ok(Some(HostTopology::parse(spec, world)?.hosts().to_vec()))
+        }
+        None => Ok(None),
+    }
 }
 
 /// The `--fsdp-units` / `--leader-params` / `--shard-params` trio
@@ -355,7 +371,14 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
                    Some("0")));
     specs.push(opt("transport", "live-session substrate: inproc | \
                                  local (channel ranks) | tcp (worker \
-                                 processes)", Some("inproc")));
+                                 processes) | shm (worker processes \
+                                 over /dev/shm rings) | hybrid \
+                                 (tcp mesh + shm same-host lanes)",
+                   Some("inproc")));
+    specs.push(opt("hosts", "rank → host-id map for --transport \
+                             hybrid, comma-separated (e.g. 0,0,1,1); \
+                             same-host lanes ride shm and rings walk \
+                             a locality-sorted order", None));
     sharding_specs(&mut specs);
     specs.push(opt("plan-cache", "JSON file to warm the plan cache \
                                   from and persist it to (--live)",
@@ -496,6 +519,7 @@ fn cmd_elastic_live(
         plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
         ft: a.has("ft"),
         chaos: a.get("chaos").map(String::from),
+        hosts: parse_hosts(&a, cluster.num_gpus())?,
         ..Default::default()
     };
     let cluster_name = cluster.name.clone();
@@ -690,7 +714,14 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     specs.push(opt("transport", "collective substrate: inproc (one \
                                  address space) | local (channel ranks) \
                                  | tcp (worker processes over loopback \
-                                 sockets)", Some("inproc")));
+                                 sockets) | shm (worker processes over \
+                                 /dev/shm ring buffers) | hybrid (tcp \
+                                 mesh + shm same-host fast path)",
+                   Some("inproc")));
+    specs.push(opt("hosts", "rank → host-id map for --transport \
+                             hybrid, comma-separated (e.g. 0,0,1,1); \
+                             same-host lanes ride shm and rings walk \
+                             a locality-sorted order", None));
     specs.push(opt("workers", "distributed ranks; trains on the first N \
                                GPUs of the cluster (0 = all)", Some("0")));
     sharding_specs(&mut specs);
@@ -817,10 +848,12 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// `train --transport local|tcp`: plan on the simulated cluster, then
-/// run one SPMD rank per cluster GPU over the chosen fabric — worker
-/// threads over channels for `local`, spawned `cephalo worker`
-/// processes over loopback sockets for `tcp`.
+/// `train --transport local|tcp|shm|hybrid`: plan on the simulated
+/// cluster, then run one SPMD rank per cluster GPU over the chosen
+/// fabric — worker threads over channels for `local`, spawned
+/// `cephalo worker` processes over loopback sockets for `tcp`, over
+/// `/dev/shm` ring buffers for `shm`, and locality-routed (shm lanes
+/// within a host, TCP across, rings walked host-by-host) for `hybrid`.
 fn train_distributed(
     a: &crate::cli::Args,
     cluster: Cluster,
@@ -829,8 +862,9 @@ fn train_distributed(
     spec: FabricSpec,
 ) -> Result<(), String> {
     if a.get("backend").unwrap() != "native" {
-        return Err("--transport local|tcp runs on the native backend \
-                    only (the pjrt backend stays in-process)"
+        return Err("distributed transports (--transport local | tcp | \
+                    shm | hybrid) run on the native backend only (the \
+                    pjrt backend stays in-process)"
             .into());
     }
     let names: Vec<String> =
@@ -862,6 +896,7 @@ fn train_distributed(
         shard_params: shard_params_flag(a)?,
         ft: false,
         fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
+        hosts: parse_hosts(a, world)?,
     };
     let timer = StepTimeModel::from_oracle(&w.oracle, w.model.layers);
     let mut driver = DistDriver::launch(spec, world, dcfg, workers)
@@ -906,15 +941,25 @@ fn train_distributed(
     Ok(())
 }
 
-/// `cephalo worker --rank i --connect addr --world n`: one distributed
-/// training rank. Normally spawned by the coordinator (`train` /
-/// `elastic --live` with `--transport tcp`), but any rendezvous
-/// address works — including another host's.
+/// `cephalo worker --rank i [--connect addr] [--shm-dir d] --world n`:
+/// one distributed training rank. Normally spawned by the coordinator
+/// (`train` / `elastic --live` with `--transport tcp | shm | hybrid`),
+/// but any rendezvous address works — including another host's. The
+/// fabric follows from which endpoints are given: `--connect` alone is
+/// TCP, `--shm-dir` alone is shared memory, both together form the
+/// hybrid fabric (shm lanes to the peers `--hosts` marks as same-host,
+/// TCP to the rest).
 fn cmd_worker(argv: &[String]) -> Result<(), String> {
     let specs = vec![
         opt("rank", "this rank (1..world; rank 0 is the coordinator)",
             None),
-        opt("connect", "coordinator rendezvous address (host:port)", None),
+        opt("connect", "coordinator rendezvous address (host:port); \
+                        required unless --shm-dir is given alone", None),
+        opt("shm-dir", "shared-memory lane directory (same-host ranks \
+                        only); with --connect, forms the hybrid fabric",
+            None),
+        opt("hosts", "rank → host-id map for the hybrid fabric, \
+                      comma-separated; defaults to all-same-host", None),
         opt("world", "total rank count including the coordinator", None),
         opt("chaos", "deterministic fault injection spec (forwarded by \
                       the coordinator; an injected crash aborts this \
@@ -931,10 +976,41 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
         return Ok(());
     }
     let rank = a.get_usize("rank").ok_or("--rank is required")?;
-    let addr = a.get("connect").ok_or("--connect is required")?;
     let world = a.get_usize("world").ok_or("--world is required")?;
-    let t = transport::tcp::connect(addr, rank, world)
-        .map_err(|e| e.to_string())?;
+    let t: Box<dyn Transport> = match (a.get("connect"), a.get("shm-dir"))
+    {
+        (Some(addr), None) => Box::new(
+            transport::tcp::connect(addr, rank, world)
+                .map_err(|e| e.to_string())?,
+        ),
+        (None, Some(dir)) => Box::new(
+            ShmTransport::attach(std::path::Path::new(dir), rank, world)
+                .map_err(|e| e.to_string())?,
+        ),
+        (Some(addr), Some(dir)) => {
+            let topo = match a.get("hosts") {
+                Some(spec) => HostTopology::parse(spec, world)?,
+                None => HostTopology::single_host(world),
+            };
+            let tcp = transport::tcp::connect(addr, rank, world)
+                .map_err(|e| e.to_string())?;
+            Box::new(
+                HybridTransport::wrap(
+                    Box::new(tcp),
+                    std::path::Path::new(dir),
+                    topo,
+                )
+                .map_err(|e| e.to_string())?,
+            )
+        }
+        (None, None) => {
+            return Err(
+                "one of --connect / --shm-dir is required (both for \
+                 the hybrid fabric)"
+                    .into(),
+            )
+        }
+    };
     match a.get("chaos") {
         Some(spec) => {
             let (seed, ccfg) =
@@ -946,9 +1022,7 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             let t = ChaosTransport::new(t, &plan, CrashMode::Abort);
             transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
         }
-        None => {
-            transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
-        }
+        None => transport::worker_loop(t).map_err(|e| e.to_string()),
     }
 }
 

@@ -98,6 +98,8 @@ impl Workload {
             oracle: &self.oracle,
             batch,
             cluster_fingerprint: self.fingerprint,
+            intra_gbps: self.cluster.intra_bw_min_gbps(),
+            inter_gbps: self.cluster.inter_bw_gbps,
         }
     }
 

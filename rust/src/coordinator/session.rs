@@ -109,6 +109,10 @@ pub struct SessionConfig {
     /// seeded [`crate::transport::ChaosTransport`]. Requires a
     /// distributed fabric.
     pub chaos: Option<String>,
+    /// Rank → host-id map for hybrid fabrics (`--hosts`): same-host
+    /// lanes ride shm, rings walk a locality-sorted order. `None` =
+    /// single host. Forwarded verbatim into [`DistConfig::hosts`].
+    pub hosts: Option<Vec<u64>>,
 }
 
 impl Default for SessionConfig {
@@ -127,6 +131,7 @@ impl Default for SessionConfig {
             plan_cache_path: None,
             ft: false,
             chaos: None,
+            hosts: None,
         }
     }
 }
@@ -178,6 +183,12 @@ pub struct RecoveryReport {
     /// Wall time of the wire migration; 0 when no migration was
     /// needed.
     pub migrate_ms: f64,
+    /// Planning-scale migration traffic (16 B per Table-2 parameter);
+    /// deterministic, so the perf gate can pin it exactly.
+    pub migration_bytes: f64,
+    /// Executed-scale state elements re-sourced over the wire — ranges
+    /// owned by the corpse come from its mirror. Deterministic.
+    pub moved_state_elems: usize,
 }
 
 /// Re-plan + migrate bookkeeping shared by churn events and crash
@@ -353,6 +364,7 @@ impl Session {
                     shard_params: cfg.shard_params,
                     fsdp_units: cfg.fsdp_units,
                     ft: cfg.ft || cfg.chaos.is_some(),
+                    hosts: cfg.hosts.clone(),
                 };
                 let chaos = match &cfg.chaos {
                     Some(chaos_spec) => {
@@ -580,15 +592,32 @@ impl Session {
             self.steps_run(),
             self.max_live
         );
-        let (replan_ms, migrate_ms) = if self.current_size > self.max_live
-        {
-            let st = self.replan_and_migrate(self.max_live)?;
-            (st.replan_ms, st.migrate_ms)
-        } else {
-            // Dead ranks were standby: nothing to migrate, the clamp
-            // alone keeps them out of future memberships.
-            (0.0, 0.0)
-        };
+        let (replan_ms, migrate_ms, migration_bytes, moved) =
+            if self.current_size > self.max_live {
+                let st = self.replan_and_migrate(self.max_live)?;
+                (st.replan_ms, st.migrate_ms, st.migration_bytes, st.moved)
+            } else {
+                // Dead ranks were standby: nothing to migrate, the clamp
+                // alone keeps them out of future memberships.
+                (0.0, 0.0, 0.0, 0)
+            };
+        // Dead ranks are never re-admitted, so plans for memberships
+        // larger than `max_live` can never be served again: age their
+        // fingerprints out of the cache (counted apart from LRU).
+        let live: Vec<u64> = self
+            .workloads
+            .iter()
+            .filter(|(size, _)| **size <= self.max_live)
+            .map(|(_, w)| w.fingerprint)
+            .collect();
+        let aged = self.cache.retain_fingerprints(&live);
+        if aged > 0 {
+            crate::info!(
+                "aged {aged} cached plan(s) for unreachable memberships \
+                 (> {} ranks) out of the plan cache",
+                self.max_live
+            );
+        }
         self.recoveries.push(RecoveryReport {
             hour,
             step: self.steps_run(),
@@ -597,6 +626,8 @@ impl Session {
             detect_ms,
             replan_ms,
             migrate_ms,
+            migration_bytes,
+            moved_state_elems: moved,
         });
         Ok(())
     }

@@ -19,6 +19,7 @@
 
 use super::{Assignment, GpuAssign, PlanError};
 use crate::memory::{state_bytes, usable_capacity, ParamResidency};
+use crate::perfmodel::collective::UNEVEN_OVERHEAD;
 use crate::perfmodel::ClusterPerfProfile;
 
 /// Tunables for the solver.
@@ -152,10 +153,15 @@ impl DpOptimizer {
         // sharded; leader residency adds the replicated copy.
         let even_share = fixed
             + self.residency.sharded_bytes(profile.total_params) / n as f64;
-        let ag = profile.unit_allgather();
-        let rs = profile.unit_reduce_scatter();
-        let ag_u = profile.unit_allgather_uneven();
-        let rs_u = profile.unit_reduce_scatter_uneven();
+        // Comm is charged by edge class for the LOCALITY-ORDERED ring
+        // the runtime walks (transport::collectives::RingOrder): one
+        // cross-host chunk per NIC per step, so the price is bitwise
+        // the classic bottleneck time and `brute_force` (which charges
+        // the classic model) stays an exact oracle for this DP.
+        let ag = profile.unit_allgather_ordered();
+        let rs = profile.unit_reduce_scatter_ordered();
+        let ag_u = ag * (1.0 + UNEVEN_OVERHEAD);
+        let rs_u = rs * (1.0 + UNEVEN_OVERHEAD);
 
         let width = bq + 1;
         let kw = k_max + 1;

@@ -19,6 +19,14 @@ pub struct CollectiveModel {
     pub bus_bytes_per_sec: f64,
     /// Per-ring-step latency (link latency + kernel launch), seconds.
     pub step_latency_s: f64,
+    /// Intra-host link bandwidth in bytes/s (the fabric the runtime's
+    /// shm fast path rides); equals `bus_bytes_per_sec` on one host.
+    pub intra_bytes_per_sec: f64,
+    /// Cross-host link bandwidth in bytes/s; equals `bus_bytes_per_sec`
+    /// when the ring spans hosts.
+    pub inter_bytes_per_sec: f64,
+    /// Distinct hosts on the ring (1 = everything local).
+    pub hosts: usize,
 }
 
 impl CollectiveModel {
@@ -31,7 +39,18 @@ impl CollectiveModel {
         // Multi-node rings pay NIC/switch latency per step; intra-node
         // rings only kernel-launch + PCIe latency.
         let step = if cluster.nodes.len() > 1 { 20e-6 } else { 6e-6 };
-        CollectiveModel { ranks, bus_bytes_per_sec: bw, step_latency_s: step }
+        CollectiveModel {
+            ranks,
+            bus_bytes_per_sec: bw,
+            step_latency_s: step,
+            intra_bytes_per_sec: gbps_to_bytes_per_sec(
+                cluster.intra_bw_min_gbps(),
+            ),
+            inter_bytes_per_sec: gbps_to_bytes_per_sec(
+                cluster.inter_bw_gbps,
+            ),
+            hosts: cluster.nodes.len(),
+        }
     }
 
     /// Ring AllGather latency for a collective of `bytes` total
@@ -59,6 +78,38 @@ impl CollectiveModel {
         self.reduce_scatter(bytes) * (1.0 + UNEVEN_OVERHEAD)
     }
 
+    /// Ring time for a LOCALITY-ORDERED ring (the schedule the runtime
+    /// walks via `transport::collectives::RingOrder`): hosts are
+    /// traversed contiguously, so each host's NIC carries exactly one
+    /// outbound chunk per ring step and the bottleneck is the plain
+    /// inter-host link — numerically the classic bottleneck model.
+    pub fn allgather_ordered(&self, bytes: f64) -> f64 {
+        self.ring_time_classed(bytes, 1.0)
+    }
+
+    pub fn reduce_scatter_ordered(&self, bytes: f64) -> f64 {
+        self.ring_time_classed(bytes, 1.0)
+    }
+
+    /// Ring time for a locality-OBLIVIOUS ring in its worst
+    /// interleaving: every hop crosses hosts, so each host's NIC is
+    /// shared by all `ranks/hosts` of its members' outbound chunks per
+    /// step. The ordered/scattered gap is what topology-sorted rings
+    /// buy (ISSUE 8); on one host both collapse to the same time.
+    pub fn allgather_scattered(&self, bytes: f64) -> f64 {
+        self.ring_time_classed(bytes, self.cross_per_host())
+    }
+
+    pub fn reduce_scatter_scattered(&self, bytes: f64) -> f64 {
+        self.ring_time_classed(bytes, self.cross_per_host())
+    }
+
+    /// Outbound cross-host chunks per NIC per step in the worst
+    /// (alternating-host) ring order.
+    fn cross_per_host(&self) -> f64 {
+        (self.ranks as f64 / self.hosts.max(1) as f64).ceil().max(1.0)
+    }
+
     fn ring_time(&self, bytes: f64) -> f64 {
         if self.ranks <= 1 {
             return 0.0;
@@ -67,6 +118,26 @@ impl CollectiveModel {
         let steps = n - 1.0;
         steps * self.step_latency_s
             + bytes * (steps / n) / self.bus_bytes_per_sec
+    }
+
+    /// Ring time charged by edge class: cross-host hops share each
+    /// host's NIC among `cross_per_host` concurrent chunks; intra-host
+    /// hops are never the bottleneck (same stance as the classic
+    /// model, which prices multi-node rings off the inter-node link
+    /// alone). With `cross_per_host` = 1 this is EXACTLY the classic
+    /// bottleneck time; with one host there are no cross edges at all.
+    fn ring_time_classed(&self, bytes: f64, cross_per_host: f64) -> f64 {
+        if self.ranks <= 1 {
+            return 0.0;
+        }
+        let n = self.ranks as f64;
+        let steps = n - 1.0;
+        let link = if self.hosts > 1 {
+            self.inter_bytes_per_sec / cross_per_host.max(1.0)
+        } else {
+            self.intra_bytes_per_sec
+        };
+        steps * self.step_latency_s + bytes * (steps / n) / link
     }
 
     /// Point-to-point transfer time over a link of `gbps`.
@@ -94,6 +165,9 @@ mod tests {
             ranks: 8,
             bus_bytes_per_sec: 6.25e9, // 50 Gbps
             step_latency_s: 20e-6,
+            intra_bytes_per_sec: 12.0e9, // 96 Gbps PCIe
+            inter_bytes_per_sec: 6.25e9,
+            hosts: 2,
         }
     }
 
@@ -111,9 +185,14 @@ mod tests {
             ranks: 1,
             bus_bytes_per_sec: 1e9,
             step_latency_s: 1e-5,
+            intra_bytes_per_sec: 1e9,
+            inter_bytes_per_sec: 1e9,
+            hosts: 1,
         };
         assert_eq!(m.allgather(1e9), 0.0);
         assert_eq!(m.allreduce(1e9), 0.0);
+        assert_eq!(m.allgather_ordered(1e9), 0.0);
+        assert_eq!(m.allgather_scattered(1e9), 0.0);
     }
 
     #[test]
@@ -151,6 +230,68 @@ mod tests {
         // 1 GB AllGather: bw term = 1e9 * (7/8) / 6.25e9 = 0.14 s.
         let t = m.allgather(1e9);
         assert!((t - 0.14).abs() / 0.14 < 0.01);
+    }
+
+    #[test]
+    fn ordered_ring_matches_the_classic_bottleneck_bitwise() {
+        // The invariant the DP relies on: charging the locality-ordered
+        // schedule changes NO existing number — one cross chunk per NIC
+        // per step leaves the plain inter-host link as the bottleneck.
+        let m = model();
+        for bytes in [1e3, 100e6, 1e9] {
+            assert_eq!(
+                m.allgather_ordered(bytes).to_bits(),
+                m.allgather(bytes).to_bits()
+            );
+            assert_eq!(
+                m.reduce_scatter_ordered(bytes).to_bits(),
+                m.reduce_scatter(bytes).to_bits()
+            );
+        }
+        let a = CollectiveModel::from_cluster(&Cluster::cluster_a());
+        assert_eq!(a.hosts, 2);
+        assert_eq!(
+            a.allgather_ordered(500e6).to_bits(),
+            a.allgather(500e6).to_bits()
+        );
+        // Single host: ordered also collapses to the classic time.
+        let one = crate::testkit::tiny_cluster();
+        let m1 = CollectiveModel::from_cluster(&one);
+        assert_eq!(
+            m1.allgather_ordered(500e6).to_bits(),
+            m1.allgather(500e6).to_bits()
+        );
+    }
+
+    #[test]
+    fn scattered_ring_pays_for_nic_sharing() {
+        // 8 ranks on 2 hosts, worst interleaving: 4 outbound cross
+        // chunks share each NIC, so the bandwidth term is 4x ordered.
+        let m = model();
+        let bytes = 1e9;
+        let lat = 7.0 * m.step_latency_s;
+        let ordered = m.allgather_ordered(bytes) - lat;
+        let scattered = m.allgather_scattered(bytes) - lat;
+        assert!((scattered / ordered - 4.0).abs() < 1e-9);
+        assert!(
+            m.reduce_scatter_scattered(bytes)
+                > m.reduce_scatter_ordered(bytes)
+        );
+        // One host: no cross edges, no penalty.
+        let local = CollectiveModel { hosts: 1, ..model() };
+        assert_eq!(
+            local.allgather_scattered(bytes).to_bits(),
+            local.allgather_ordered(bytes).to_bits()
+        );
+    }
+
+    #[test]
+    fn from_cluster_splits_edge_classes() {
+        let a = CollectiveModel::from_cluster(&Cluster::cluster_a());
+        // Cluster A: 96 Gbps slowest PCIe, 50 Gbps inter-node link.
+        assert!((a.intra_bytes_per_sec - 12e9).abs() < 1.0);
+        assert!((a.inter_bytes_per_sec - 6.25e9).abs() < 1.0);
+        assert_eq!(a.inter_bytes_per_sec, a.bus_bytes_per_sec);
     }
 
     #[test]

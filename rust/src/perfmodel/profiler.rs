@@ -54,6 +54,27 @@ impl ClusterPerfProfile {
         self.collective.reduce_scatter_uneven(self.unit_params * 4.0)
     }
 
+    /// Per-unit collectives priced for the LOCALITY-ORDERED ring the
+    /// runtime actually walks (`transport::collectives::RingOrder`):
+    /// one cross-host chunk per NIC per step. Bitwise equal to the
+    /// classic bottleneck price — the scattered variants below are the
+    /// counterfactual an unordered ring would pay.
+    pub fn unit_allgather_ordered(&self) -> f64 {
+        self.collective.allgather_ordered(self.unit_params * 4.0)
+    }
+
+    pub fn unit_reduce_scatter_ordered(&self) -> f64 {
+        self.collective.reduce_scatter_ordered(self.unit_params * 4.0)
+    }
+
+    pub fn unit_allgather_scattered(&self) -> f64 {
+        self.collective.allgather_scattered(self.unit_params * 4.0)
+    }
+
+    pub fn unit_reduce_scatter_scattered(&self) -> f64 {
+        self.collective.reduce_scatter_scattered(self.unit_params * 4.0)
+    }
+
     /// Even training-state share per GPU in bytes.
     pub fn even_state_share(&self) -> f64 {
         crate::memory::state_bytes(self.total_params)

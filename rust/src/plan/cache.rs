@@ -89,6 +89,7 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    stale_evictions: AtomicU64,
 }
 
 impl PlanCache {
@@ -106,6 +107,7 @@ impl PlanCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            stale_evictions: AtomicU64::new(0),
         }
     }
 
@@ -172,6 +174,28 @@ impl PlanCache {
     /// Entries dropped by the LRU bound so far.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Entries dropped by [`PlanCache::retain_fingerprints`] so far —
+    /// counted apart from LRU eviction so logs can attribute WHY an
+    /// entry left the cache (recency pressure vs. unreachable cluster).
+    pub fn stale_evictions(&self) -> u64 {
+        self.stale_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Age-out: drop every entry whose cluster fingerprint is not in
+    /// `live` — the memberships the session's remaining trace window
+    /// can still produce (dead ranks are never re-admitted, so plans
+    /// for larger memberships can never be served again). Returns the
+    /// number dropped; they count as stale evictions, not LRU ones.
+    pub fn retain_fingerprints(&self, live: &[u64]) -> usize {
+        let mut map = self.map.lock().unwrap();
+        let before = map.len();
+        map.retain(|k, _| live.contains(&k.cluster_fingerprint));
+        let dropped = before - map.len();
+        self.stale_evictions
+            .fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
     }
 
     pub fn capacity(&self) -> usize {
@@ -715,6 +739,50 @@ mod tests {
             (warm.hits(), warm.misses()),
             (1, 0),
             "a persisted verdict must be a hit, not a re-solve"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_age_out_drops_stale_entries_across_reload() {
+        // Satellite: entries for memberships the trace window can no
+        // longer produce are aged out — and STAY gone after a
+        // save/load cycle, so a resumed session never reloads plans
+        // for unreachable clusters.
+        let w2 = workload();
+        // Same topology, different oracle seed: a fingerprint-distinct
+        // cluster standing in for a membership that left the window.
+        let w1 =
+            Workload::prepare(tiny_cluster(), "BERT-Large", 43).unwrap();
+        assert_ne!(w1.fingerprint, w2.fingerprint);
+        let cache = PlanCache::new();
+        let planner = CephaloPlanner::default();
+        cache.get_or_plan(&planner, &w2.ctx(8)).unwrap();
+        cache.get_or_plan(&planner, &w1.ctx(8)).unwrap();
+        assert_eq!(cache.len(), 2);
+
+        // The w2 membership leaves the trace window for good.
+        let dropped = cache.retain_fingerprints(&[w1.fingerprint]);
+        assert_eq!(dropped, 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stale_evictions(), 1);
+        assert_eq!(cache.evictions(), 0, "not an LRU eviction");
+
+        let path = std::env::temp_dir().join("ceph_plan_cache_aged.json");
+        cache.save(&path).unwrap();
+        let warm = PlanCache::load(&path).unwrap();
+        assert_eq!(warm.len(), 1);
+        let hit = warm.get_or_plan(&planner, &w1.ctx(8)).unwrap();
+        assert!(hit.diagnostics.cache_hit, "live entry survives reload");
+        let stale = warm.get_or_plan(&planner, &w2.ctx(8)).unwrap();
+        assert!(
+            !stale.diagnostics.cache_hit,
+            "aged-out fingerprint must be gone after reload"
+        );
+        // Retaining everything currently live drops nothing.
+        assert_eq!(
+            warm.retain_fingerprints(&[w1.fingerprint, w2.fingerprint]),
+            0
         );
         let _ = std::fs::remove_file(&path);
     }

@@ -57,6 +57,12 @@ pub struct PlanContext<'a> {
     /// Content fingerprint of (cluster, profile), precomputed so cache
     /// lookups are a hash probe instead of an O(profile) re-render.
     pub cluster_fingerprint: u64,
+    /// Same-host fabric bandwidth in Gbps (slowest intra-node link) —
+    /// the per-edge rate of the runtime's shm fast path, for planners
+    /// that charge comm by edge class.
+    pub intra_gbps: f64,
+    /// Cross-host fabric bandwidth in Gbps (the inter-node link).
+    pub inter_gbps: f64,
 }
 
 impl<'a> PlanContext<'a> {
@@ -74,6 +80,8 @@ impl<'a> PlanContext<'a> {
             oracle,
             batch,
             cluster_fingerprint: fingerprint(cluster, profile),
+            intra_gbps: cluster.intra_bw_min_gbps(),
+            inter_gbps: cluster.inter_bw_gbps,
         }
     }
 }
@@ -155,5 +163,7 @@ mod tests {
             (a.join().unwrap(), b.join().unwrap())
         });
         assert_eq!(both, (8, 2));
+        // Edge-class bandwidths mirror the cluster's links.
+        assert_eq!((ctx.intra_gbps, ctx.inter_gbps), (64.0, 50.0));
     }
 }

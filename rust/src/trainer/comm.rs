@@ -11,8 +11,10 @@
 
 use crate::collectives;
 use crate::sharding::{ShardLayout, UnitLayout};
+use crate::transport::collectives::RingOrder;
 use crate::transport::{
-    self, ChaosTransport, CrashMode, FaultPlan, LocalFabric, Transport,
+    self, ChaosTransport, CrashMode, FaultPlan, HostTopology, LocalFabric,
+    ShmFabric, Transport,
 };
 use crate::util::error::{anyhow, Result};
 
@@ -101,6 +103,11 @@ impl CollectiveEngine for InProcessRing {
 pub struct FabricRing {
     endpoints: Vec<Box<dyn Transport>>,
     label: &'static str,
+    /// When set, every collective walks the locality-sorted ring order
+    /// derived from this host map (same-host ranks adjacent — only
+    /// `num_hosts` of the N−1 hops per round cross hosts). `None`
+    /// keeps the classic rank-order ring.
+    topo: Option<HostTopology>,
 }
 
 impl FabricRing {
@@ -120,9 +127,34 @@ impl FabricRing {
         let label = match endpoints[0].backend() {
             "local" => "fabric:local",
             "tcp" => "fabric:tcp",
+            "shm" => "fabric:shm",
+            "hybrid" => "fabric:hybrid",
             _ => "fabric",
         };
-        Ok(FabricRing { endpoints, label })
+        Ok(FabricRing { endpoints, label, topo: None })
+    }
+
+    /// Walk every collective in the locality-sorted order for `topo`
+    /// instead of rank order. The reorder is bitwise-invisible on the
+    /// native backend's dyadic grid (DESIGN.md invariant 10).
+    pub fn with_topology(mut self, topo: HostTopology) -> Result<FabricRing> {
+        if topo.world_size() != self.endpoints.len() {
+            return Err(anyhow!(
+                "host map names {} ranks, fabric has {}",
+                topo.world_size(),
+                self.endpoints.len()
+            ));
+        }
+        self.topo = Some(topo);
+        Ok(self)
+    }
+
+    /// The ring order for a `group`-rank collective.
+    fn order(&self, group: usize) -> RingOrder {
+        match &self.topo {
+            Some(t) => RingOrder::from_topology(t, group),
+            None => RingOrder::identity(group.max(1)),
+        }
     }
 
     /// Channel-backed fabric for `world` ranks.
@@ -137,6 +169,31 @@ impl FabricRing {
     /// TCP-loopback fabric for `world` ranks (threaded handshake).
     pub fn tcp_loopback(world: usize) -> Result<FabricRing> {
         FabricRing::new(transport::tcp::thread_fabric(world)?)
+    }
+
+    /// Shared-memory fabric for `world` ranks (mmap ring lanes).
+    pub fn shm(world: usize) -> Result<FabricRing> {
+        let eps = ShmFabric::new(world)?
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn Transport>)
+            .collect();
+        FabricRing::new(eps)
+    }
+
+    /// Locality-routed fabric: shm lanes within a host, TCP loopback
+    /// across, rings walked in the locality-sorted order for `hosts`.
+    pub fn hybrid(hosts: Vec<u64>) -> Result<FabricRing> {
+        let topo = HostTopology::new(hosts);
+        let dir = transport::shm::fresh_dir();
+        let slow = transport::tcp::thread_fabric(topo.world_size())?;
+        let eps: Vec<Box<dyn Transport>> = slow
+            .into_iter()
+            .map(|ep| {
+                transport::HybridTransport::wrap(ep, &dir, topo.clone())
+                    .map(|h| Box::new(h) as Box<dyn Transport>)
+            })
+            .collect::<Result<_>>()?;
+        FabricRing::new(eps)?.with_topology(topo)
     }
 
     /// Wrap every endpoint in deterministic fault injection driven by
@@ -199,16 +256,19 @@ impl CollectiveEngine for FabricRing {
                 full.len()
             ));
         }
+        let order = self.order(group);
         let results: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self.endpoints[..group]
                 .iter_mut()
                 .zip(full)
                 .map(|(ep, mine)| {
+                    let order = &order;
                     scope.spawn(move || {
-                        transport::collectives::ring_reduce_scatter(
+                        transport::collectives::ring_reduce_scatter_ordered(
                             ep.as_mut(),
                             mine,
                             layout,
+                            order,
                         )
                     })
                 })
@@ -230,16 +290,19 @@ impl CollectiveEngine for FabricRing {
                 shards.len()
             ));
         }
+        let order = self.order(group);
         let results: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self.endpoints[..group]
                 .iter_mut()
                 .zip(shards)
                 .map(|(ep, mine)| {
+                    let order = &order;
                     scope.spawn(move || {
-                        transport::collectives::ring_allgather(
+                        transport::collectives::ring_allgather_ordered(
                             ep.as_mut(),
                             mine,
                             layout,
+                            order,
                         )
                     })
                 })
@@ -322,6 +385,38 @@ mod tests {
             let ag = engine.allgather(&shards, &layout).unwrap();
             assert_eq!(ag, expect_ag, "{} chaotic AG diverged", engine.name());
         }
+    }
+
+    #[test]
+    fn shm_and_hybrid_engines_match_the_inprocess_engine_bitwise() {
+        // The fast-path fabrics: pure shm (identity ring) and hybrid
+        // with an interleaved host map (locality-REORDERED ring). The
+        // data is dyadic (quarter-integers), so the reordered RS
+        // accumulation is exactly associative — bitwise invisible.
+        let (layout, full, shards) = layout_and_data();
+        let mut inproc = InProcessRing;
+        let expect_rs = inproc.reduce_scatter(&full, &layout).unwrap();
+        let expect_ag = inproc.allgather(&shards, &layout).unwrap();
+        for mut engine in [
+            FabricRing::shm(3).unwrap(),
+            FabricRing::hybrid(vec![0, 1, 0]).unwrap(),
+        ] {
+            let rs = engine.reduce_scatter(&full, &layout).unwrap();
+            assert_eq!(rs, expect_rs, "{} RS diverged", engine.name());
+            let ag = engine.allgather(&shards, &layout).unwrap();
+            assert_eq!(ag, expect_ag, "{} AG diverged", engine.name());
+        }
+    }
+
+    #[test]
+    fn topology_must_match_the_fabric_world() {
+        let ring = FabricRing::local(3).unwrap();
+        assert!(ring.with_topology(HostTopology::new(vec![0, 1])).is_err());
+        let ring = FabricRing::local(3).unwrap();
+        let named = ring
+            .with_topology(HostTopology::new(vec![0, 1, 0]))
+            .unwrap();
+        assert_eq!(named.name(), "fabric:local");
     }
 
     #[test]

@@ -38,11 +38,88 @@
 //! `layout.num_ranks()`, which may be smaller than the transport's
 //! world (elastic memberships are prefixes of the process world);
 //! ranks outside the group must simply not call in.
+//!
+//! **Ring order.** The ring need not walk rank order: every op takes a
+//! [`RingOrder`] — a shared permutation of the group — and steps
+//! position-wise around it (successor of the rank at position `p` is
+//! the rank at `p + 1`). A locality-sorted order
+//! ([`super::topology::HostTopology::ring_order`]) puts same-host
+//! ranks adjacent, so only `num_hosts` of the N−1 hops per round cross
+//! the slow fabric. The identity order reproduces the classic schedule
+//! move for move. Reordering permutes WHICH peer each round talks to,
+//! not segment ownership (rank `r` still owns `layout.range(r)`), and
+//! it permutes the ReduceScatter accumulation order — bitwise-neutral
+//! for training because the native backend's dyadic grid makes f32
+//! summation exactly associative (invariant 10 extension, see
+//! DESIGN.md §Transport).
 
 use crate::sharding::ShardLayout;
 use crate::util::error::{anyhow, Result};
 
+use super::topology::HostTopology;
 use super::Transport;
+
+/// A ring traversal order: a permutation of the `n` group ranks,
+/// shared by every participant (all ranks must construct the SAME
+/// order — it is a pure function of the host map, so no coordination
+/// is needed). Position `p`'s successor is position `p + 1 mod n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RingOrder {
+    order: Vec<usize>,
+    pos_of: Vec<usize>,
+}
+
+impl RingOrder {
+    /// Rank order itself — the classic ring.
+    pub fn identity(n: usize) -> RingOrder {
+        RingOrder::new((0..n).collect())
+    }
+
+    /// An explicit permutation of `0..order.len()`.
+    pub fn new(order: Vec<usize>) -> RingOrder {
+        let n = order.len();
+        assert!(n > 0, "ring order must name at least one rank");
+        let mut pos_of = vec![usize::MAX; n];
+        for (p, &r) in order.iter().enumerate() {
+            assert!(
+                r < n && pos_of[r] == usize::MAX,
+                "ring order {order:?} is not a permutation of 0..{n}"
+            );
+            pos_of[r] = p;
+        }
+        RingOrder { order, pos_of }
+    }
+
+    /// The locality-sorted order for the first `group` ranks of a
+    /// topology: same-host ranks adjacent, `num_hosts` cross edges.
+    pub fn from_topology(topo: &HostTopology, group: usize) -> RingOrder {
+        RingOrder::new(topo.ring_order(group))
+    }
+
+    /// Number of ranks on the ring.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Whether this is the classic rank-order ring.
+    pub fn is_identity(&self) -> bool {
+        self.order.iter().enumerate().all(|(p, &r)| p == r)
+    }
+
+    /// The rank sitting at ring position `p`.
+    fn at(&self, p: usize) -> usize {
+        self.order[p]
+    }
+
+    /// The ring position of rank `r`.
+    fn pos(&self, r: usize) -> usize {
+        self.pos_of[r]
+    }
+}
 
 fn check_group(t: &dyn Transport, layout: &ShardLayout) -> Result<usize> {
     let n = layout.num_ranks();
@@ -89,13 +166,15 @@ pub(crate) fn add_assign(acc: &mut [f32], data: &[f32]) {
 pub struct AllGatherOp {
     layout: ShardLayout,
     buf: Vec<f32>,
-    me: usize,
+    order: RingOrder,
+    pos: usize,
     n: usize,
     round: usize,
 }
 
 impl AllGatherOp {
-    /// Begin an AllGather of this rank's `shard` under `layout`.
+    /// Begin an AllGather of this rank's `shard` under `layout`,
+    /// walking the classic rank-order ring.
     pub fn start(
         t: &dyn Transport,
         shard: &[f32],
@@ -111,10 +190,29 @@ impl AllGatherOp {
         t: &dyn Transport,
         shard: &[f32],
         layout: &ShardLayout,
+        scratch: Vec<f32>,
+    ) -> Result<AllGatherOp> {
+        let order = RingOrder::identity(layout.num_ranks().max(1));
+        AllGatherOp::start_into_ordered(t, shard, layout, scratch, &order)
+    }
+
+    /// [`AllGatherOp::start_into`] walking `order` instead of rank
+    /// order. Every participating rank must pass the same order.
+    pub fn start_into_ordered(
+        t: &dyn Transport,
+        shard: &[f32],
+        layout: &ShardLayout,
         mut scratch: Vec<f32>,
+        order: &RingOrder,
     ) -> Result<AllGatherOp> {
         let n = check_group(t, layout)?;
         let me = t.rank();
+        if order.len() != n {
+            return Err(anyhow!(
+                "ring order names {} ranks, layout has {n}",
+                order.len()
+            ));
+        }
         if shard.len() != layout.size(me) {
             return Err(anyhow!(
                 "rank {me} shard holds {} elems, layout wants {}",
@@ -124,7 +222,14 @@ impl AllGatherOp {
         }
         scratch.resize(layout.len(), 0.0);
         scratch[layout.range(me)].copy_from_slice(shard);
-        Ok(AllGatherOp { layout: layout.clone(), buf: scratch, me, n, round: 0 })
+        Ok(AllGatherOp {
+            layout: layout.clone(),
+            buf: scratch,
+            order: order.clone(),
+            pos: order.pos(me),
+            n,
+            round: 0,
+        })
     }
 
     /// All N−1 rounds driven?
@@ -138,16 +243,17 @@ impl AllGatherOp {
         if self.is_done() {
             return Ok(true);
         }
-        let (n, me, s) = (self.n, self.me, self.round);
-        let next = (me + 1) % n;
-        let prev = (me + n - 1) % n;
+        let (n, p, s) = (self.n, self.pos, self.round);
+        let next = self.order.at((p + 1) % n);
+        let prev = self.order.at((p + n - 1) % n);
         // Send the segment received last round (own segment at s = 0)…
-        let send_range = self.layout.range((me + n - s) % n);
+        let send_range = self.layout.range(self.order.at((p + n - s) % n));
         if !send_range.is_empty() {
             t.send_f32(next, &self.buf[send_range])?;
         }
         // …and take delivery of the predecessor's forward.
-        let recv_range = self.layout.range((me + 2 * n - 1 - s) % n);
+        let recv_range =
+            self.layout.range(self.order.at((p + 2 * n - 1 - s) % n));
         if !recv_range.is_empty() {
             let data = t.recv_f32(prev)?;
             if data.len() != recv_range.len() {
@@ -184,19 +290,42 @@ pub struct ReduceScatterOp {
     layout: ShardLayout,
     acc: Vec<f32>,
     me: usize,
+    order: RingOrder,
+    pos: usize,
     n: usize,
     round: usize,
 }
 
 impl ReduceScatterOp {
-    /// Begin a ReduceScatter of this rank's full-length contribution.
+    /// Begin a ReduceScatter of this rank's full-length contribution,
+    /// walking the classic rank-order ring.
     pub fn start(
         t: &dyn Transport,
         full: &[f32],
         layout: &ShardLayout,
     ) -> Result<ReduceScatterOp> {
+        let order = RingOrder::identity(layout.num_ranks().max(1));
+        ReduceScatterOp::start_ordered(t, full, layout, &order)
+    }
+
+    /// [`ReduceScatterOp::start`] walking `order` instead of rank
+    /// order. NOTE: the accumulation order around the ring follows the
+    /// traversal, so a non-identity order is only bitwise-neutral on
+    /// exactly-associative data (the dyadic grid — see module docs).
+    pub fn start_ordered(
+        t: &dyn Transport,
+        full: &[f32],
+        layout: &ShardLayout,
+        order: &RingOrder,
+    ) -> Result<ReduceScatterOp> {
         let n = check_group(t, layout)?;
         let me = t.rank();
+        if order.len() != n {
+            return Err(anyhow!(
+                "ring order names {} ranks, layout has {n}",
+                order.len()
+            ));
+        }
         if full.len() != layout.len() {
             return Err(anyhow!(
                 "rank {me} contribution holds {} elems, layout wants {}",
@@ -204,7 +333,15 @@ impl ReduceScatterOp {
                 layout.len()
             ));
         }
-        Ok(ReduceScatterOp { layout: layout.clone(), acc: full.to_vec(), me, n, round: 0 })
+        Ok(ReduceScatterOp {
+            layout: layout.clone(),
+            acc: full.to_vec(),
+            me,
+            order: order.clone(),
+            pos: order.pos(me),
+            n,
+            round: 0,
+        })
     }
 
     /// All N−1 rounds driven?
@@ -219,19 +356,21 @@ impl ReduceScatterOp {
         if self.is_done() {
             return Ok(true);
         }
-        let (n, me, s) = (self.n, self.me, self.round);
-        let next = (me + 1) % n;
-        let prev = (me + n - 1) % n;
-        // Forward the partial sum accumulated so far for segment
-        // (me − s − 1) mod n; the segment received at step s − 1.
-        let send_range = self.layout.range((me + 2 * n - s - 1) % n);
+        let (n, p, s) = (self.n, self.pos, self.round);
+        let next = self.order.at((p + 1) % n);
+        let prev = self.order.at((p + n - 1) % n);
+        // Forward the partial sum accumulated so far for the segment
+        // at ring position (p − s − 1); the one received at step s − 1.
+        let send_range =
+            self.layout.range(self.order.at((p + 2 * n - s - 1) % n));
         if !send_range.is_empty() {
             t.send_f32(next, &self.acc[send_range])?;
         }
         // Accumulate the predecessor's partial into ours — the SAME
         // `*o += v` order as the in-process ring, so sums are bitwise
-        // identical.
-        let recv_range = self.layout.range((me + 2 * n - s - 2) % n);
+        // identical (on an identity order; see `start_ordered`).
+        let recv_range =
+            self.layout.range(self.order.at((p + 2 * n - s - 2) % n));
         if !recv_range.is_empty() {
             let data = t.recv_f32(prev)?;
             if data.len() != recv_range.len() {
@@ -284,6 +423,34 @@ pub fn ring_reduce_scatter(
     layout: &ShardLayout,
 ) -> Result<Vec<f32>> {
     let mut op = ReduceScatterOp::start(t, full, layout)?;
+    while !op.step_round(t)? {}
+    op.finish()
+}
+
+/// [`ring_allgather`] walking an explicit ring order (every rank must
+/// pass the same one).
+pub fn ring_allgather_ordered(
+    t: &mut dyn Transport,
+    shard: &[f32],
+    layout: &ShardLayout,
+    order: &RingOrder,
+) -> Result<Vec<f32>> {
+    let mut op =
+        AllGatherOp::start_into_ordered(t, shard, layout, Vec::new(), order)?;
+    while !op.step_round(t)? {}
+    op.finish()
+}
+
+/// [`ring_reduce_scatter`] walking an explicit ring order (every rank
+/// must pass the same one; see [`ReduceScatterOp::start_ordered`] for
+/// the associativity caveat).
+pub fn ring_reduce_scatter_ordered(
+    t: &mut dyn Transport,
+    full: &[f32],
+    layout: &ShardLayout,
+    order: &RingOrder,
+) -> Result<Vec<f32>> {
+    let mut op = ReduceScatterOp::start_ordered(t, full, layout, order)?;
     while !op.step_round(t)? {}
     op.finish()
 }
@@ -391,6 +558,78 @@ mod tests {
             (bad_shard, bad_full)
         });
         assert!(got.iter().all(|&(a, b)| a && b));
+    }
+
+    #[test]
+    fn identity_order_is_the_classic_schedule() {
+        assert!(RingOrder::identity(4).is_identity());
+        assert!(!RingOrder::new(vec![0, 2, 1]).is_identity());
+        let layout = ShardLayout::by_ratios(10, &[0.5, 0.0, 0.3, 0.2]);
+        let shards: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..layout.size(r)).map(|i| (r * 100 + i) as f32).collect())
+            .collect();
+        let expect = inproc::ring_allgather(&shards, &layout);
+        let order = RingOrder::identity(4);
+        let got = on_fabric(4, |t| {
+            ring_allgather_ordered(t, &shards[t.rank()], &layout, &order)
+                .unwrap()
+        });
+        for g in got {
+            assert_eq!(g, expect);
+        }
+    }
+
+    #[test]
+    fn reordered_ring_gathers_and_reduces_the_same_values() {
+        // A locality-style permutation: the gathered vector is
+        // identical bitwise (AllGather only copies), and the RS sums
+        // match bitwise on exactly-summable (integer-valued) data —
+        // the dyadic-grid argument for locality reordering.
+        let layout = ShardLayout::by_ratios(11, &[0.3, 0.2, 0.0, 0.3, 0.2]);
+        let order = RingOrder::new(vec![0, 2, 4, 1, 3]);
+        let shards: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..layout.size(r)).map(|i| (r * 50 + i) as f32).collect())
+            .collect();
+        let fulls: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..11).map(|i| (r * 13 + i) as f32).collect())
+            .collect();
+        let expect_ag = inproc::ring_allgather(&shards, &layout);
+        let expect_rs = inproc::ring_reduce_scatter(&fulls, &layout);
+        let got = on_fabric(5, |t| {
+            let ag = ring_allgather_ordered(
+                t,
+                &shards[t.rank()],
+                &layout,
+                &order,
+            )
+            .unwrap();
+            let rs =
+                ring_reduce_scatter_ordered(t, &fulls[t.rank()], &layout, &order)
+                    .unwrap();
+            (ag, rs)
+        });
+        for (rank, (ag, rs)) in got.iter().enumerate() {
+            let ab: Vec<u32> = ag.iter().map(|x| x.to_bits()).collect();
+            let eb: Vec<u32> = expect_ag.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, eb, "rank {rank} AG diverged under reorder");
+            let rb: Vec<u32> = rs.iter().map(|x| x.to_bits()).collect();
+            let xb: Vec<u32> =
+                expect_rs[rank].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(rb, xb, "rank {rank} RS diverged under reorder");
+        }
+    }
+
+    #[test]
+    fn order_shape_mismatch_and_bad_permutations_are_rejected() {
+        let layout = ShardLayout::by_ratios(4, &[0.5, 0.5]);
+        let order = RingOrder::identity(3);
+        let got = on_fabric(2, |t| {
+            let shard = vec![0.0f32; layout.size(t.rank())];
+            ring_allgather_ordered(t, &shard, &layout, &order).is_err()
+        });
+        assert!(got.iter().all(|&e| e));
+        let dup = std::panic::catch_unwind(|| RingOrder::new(vec![0, 0, 2]));
+        assert!(dup.is_err(), "duplicate ranks must be rejected");
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //! half-participated collective has no consistent state to recover.
 
 use std::collections::BTreeSet;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::elastic::Transfer;
@@ -56,7 +57,8 @@ use crate::trainer::{
     flatten, unflatten, unflatten_into, StepStats, WorkerSpec,
 };
 use crate::transport::{
-    collectives as wire, ChaosTransport, CrashMode, FaultPlan, LocalFabric,
+    collectives as wire, ChaosTransport, CrashMode, FaultPlan,
+    HostTopology, HybridTransport, LocalFabric, ShmFabric, ShmTransport,
     Transport,
 };
 use crate::util::error::{anyhow, Result};
@@ -75,6 +77,23 @@ pub enum FabricSpec {
     /// cephalo binary: workers are spawned as `current_exe() worker
     /// --rank i --connect addr --world n`.
     TcpProcesses,
+    /// Shared-memory ring buffers under `/dev/shm`, worker ranks as
+    /// threads — what the shm parity tests and benches use (one
+    /// process, real mmap lanes).
+    ShmThreads,
+    /// Shared-memory ring buffers, worker ranks as SPAWNED `cephalo
+    /// worker` processes (`--transport shm`). All ranks must share
+    /// this host; workers attach the coordinator's lane directory via
+    /// `--shm-dir`.
+    ShmProcesses,
+    /// Locality-routed two-tier fabric, worker ranks as threads: shm
+    /// lanes between same-host ranks (per [`DistConfig::hosts`]), TCP
+    /// loopback sockets across hosts.
+    HybridThreads,
+    /// Locality-routed fabric with SPAWNED worker processes
+    /// (`--transport hybrid`): the fault-tolerant TCP mesh everywhere,
+    /// plus shm fast-path lanes between same-host ranks.
+    HybridProcesses,
 }
 
 impl FabricSpec {
@@ -85,8 +104,11 @@ impl FabricSpec {
             "inproc" => Ok(None),
             "local" => Ok(Some(FabricSpec::Local)),
             "tcp" => Ok(Some(FabricSpec::TcpProcesses)),
+            "shm" => Ok(Some(FabricSpec::ShmProcesses)),
+            "hybrid" => Ok(Some(FabricSpec::HybridProcesses)),
             other => Err(anyhow!(
-                "unknown transport '{other}' (inproc | local | tcp)"
+                "unknown transport '{other}' (inproc | local | tcp | \
+                 shm | hybrid)"
             )),
         }
     }
@@ -96,6 +118,10 @@ impl FabricSpec {
             FabricSpec::Local => "local",
             FabricSpec::TcpThreads => "tcp",
             FabricSpec::TcpProcesses => "tcp",
+            FabricSpec::ShmThreads => "shm",
+            FabricSpec::ShmProcesses => "shm",
+            FabricSpec::HybridThreads => "hybrid",
+            FabricSpec::HybridProcesses => "hybrid",
         }
     }
 }
@@ -127,6 +153,16 @@ pub struct DistConfig {
     /// with the largest unit; the trajectory stays bitwise the
     /// whole-gather one (DESIGN.md invariant 13).
     pub fsdp_units: usize,
+    /// Rank → host-id map for locality routing (`--hosts`); `None` =
+    /// every rank on one host. Hybrid fabrics route same-host traffic
+    /// over shm lanes by this map, and ring collectives walk a
+    /// locality-sorted [`wire::RingOrder`] derived from it, so only
+    /// `num_hosts` of the N−1 ring hops cross the slow fabric. The
+    /// reorder permutes traversal, never shard ownership, and the
+    /// dyadic gradient grid keeps the reduce-scatter sums exactly
+    /// associative — so the trajectory stays BITWISE the
+    /// identity-order one (DESIGN.md invariant 10).
+    pub hosts: Option<Vec<u64>>,
 }
 
 impl Default for DistConfig {
@@ -139,6 +175,7 @@ impl Default for DistConfig {
             shard_params: false,
             ft: false,
             fsdp_units: 1,
+            hosts: None,
         }
     }
 }
@@ -268,6 +305,16 @@ fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
     w.u8(u8::from(cfg.shard_params));
     w.u8(u8::from(cfg.ft));
     w.u64(cfg.fsdp_units as u64);
+    match &cfg.hosts {
+        Some(h) => {
+            w.u8(1);
+            w.u64(h.len() as u64);
+            for &id in h {
+                w.u64(id);
+            }
+        }
+        None => w.u8(0),
+    }
     put_membership(&mut w, membership);
     w.0
 }
@@ -290,6 +337,16 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
     let shard_params = r.u8()? != 0;
     let ft = r.u8()? != 0;
     let fsdp_units = r.u64()? as usize;
+    let hosts = if r.u8()? != 0 {
+        let n = r.u64()? as usize;
+        let mut h = Vec::with_capacity(n);
+        for _ in 0..n {
+            h.push(r.u64()?);
+        }
+        Some(h)
+    } else {
+        None
+    };
     let membership = get_membership(r)?;
     Ok((
         DistConfig {
@@ -300,6 +357,7 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
             shard_params,
             ft,
             fsdp_units,
+            hosts,
         },
         membership,
     ))
@@ -370,6 +428,47 @@ fn layout_of(membership: &[WorkerSpec], flat_len: usize) -> ShardLayout {
     let ratios: Vec<f64> =
         membership.iter().map(|w| w.state_ratio.max(0.0)).collect();
     ShardLayout::by_ratios(flat_len, &ratios)
+}
+
+/// The locality-sorted ring order for a `group`-rank membership:
+/// same-host ranks adjacent per the topology, identity without one.
+/// Memberships are prefixes of the process world, so the host map may
+/// name MORE ranks than the group — never fewer.
+fn ring_order(
+    topo: &Option<HostTopology>,
+    group: usize,
+) -> Result<wire::RingOrder> {
+    match topo {
+        Some(t) => {
+            if t.world_size() < group {
+                return Err(anyhow!(
+                    "host map names {} ranks, membership has {group}",
+                    t.world_size()
+                ));
+            }
+            Ok(wire::RingOrder::from_topology(t, group))
+        }
+        None => Ok(wire::RingOrder::identity(group.max(1))),
+    }
+}
+
+/// The host map a hybrid fabric routes by: `DistConfig::hosts`
+/// verbatim (it must cover the whole process world), or everyone on
+/// one host when unset — a degenerate-but-valid map where every lane
+/// takes the shm fast path.
+fn hybrid_topology(cfg: &DistConfig, world: usize) -> Result<HostTopology> {
+    match &cfg.hosts {
+        Some(h) => {
+            if h.len() != world {
+                return Err(anyhow!(
+                    "host map names {} ranks, fabric has {world}",
+                    h.len()
+                ));
+            }
+            Ok(HostTopology::new(h.clone()))
+        }
+        None => Ok(HostTopology::single_host(world)),
+    }
 }
 
 /// EXACTLY `Trainer::unit_plan`'s derivation, so the dist and
@@ -470,6 +569,12 @@ pub struct DistRank {
     fsdp_units: usize,
     /// The unit plan over `layout`; rebuilt on every migration.
     units: UnitLayout,
+    /// Host topology for locality-sorted rings (`None` = identity).
+    topo: Option<HostTopology>,
+    /// The ring order over the current membership, rebuilt on every
+    /// migration — same-host ranks adjacent, so only `num_hosts` of
+    /// the N−1 ring hops cross the slow fabric.
+    order: wire::RingOrder,
     /// Fault tolerance on: run the per-step [`DistRank::ft_sync`].
     ft: bool,
     /// Rank 0 with `ft` only: the cluster-state mirror.
@@ -524,6 +629,9 @@ impl DistRank {
             cfg.shard_params,
             cfg.fsdp_units,
         );
+        let topo =
+            cfg.hosts.as_ref().map(|h| HostTopology::new(h.clone()));
+        let order = ring_order(&topo, membership.len())?;
         Ok(DistRank {
             rank,
             exec,
@@ -538,6 +646,8 @@ impl DistRank {
             shard_params: cfg.shard_params,
             fsdp_units: cfg.fsdp_units,
             units,
+            topo,
+            order,
             ft: cfg.ft,
             mirror,
             scratch: Vec::new(),
@@ -627,11 +737,12 @@ impl DistRank {
             let mine = self.param_shard.as_deref().ok_or_else(|| {
                 anyhow!("active rank {} has no parameter shard", self.rank)
             })?;
-            let mut op = wire::AllGatherOp::start_into(
+            let mut op = wire::AllGatherOp::start_into_ordered(
                 &*t,
                 mine,
                 &self.layout,
                 std::mem::take(&mut self.scratch),
+                &self.order,
             )?;
             while !op.step_round(t)? {}
             let flat = op.finish()?;
@@ -660,8 +771,12 @@ impl DistRank {
         // the leader's f64 accumulation).
         let token_count = (b * seq) as f64;
 
-        let mut grad_shard =
-            wire::ring_reduce_scatter(t, &my_grad, &self.layout)?;
+        let mut grad_shard = wire::ring_reduce_scatter_ordered(
+            t,
+            &my_grad,
+            &self.layout,
+            &self.order,
+        )?;
         let inv = 1.0 / token_count as f32;
         for g in grad_shard.iter_mut() {
             *g *= inv;
@@ -684,8 +799,12 @@ impl DistRank {
             let mut flat = flatten(&self.params, flat_len);
             shard.update(&mut flat[range.clone()], &grad_shard);
             let shard_view = flat[range].to_vec();
-            let gathered =
-                wire::ring_allgather(t, &shard_view, &self.layout)?;
+            let gathered = wire::ring_allgather_ordered(
+                t,
+                &shard_view,
+                &self.layout,
+                &self.order,
+            )?;
             self.params = unflatten(&gathered, &self.sizes);
         }
         Ok((my_loss, my_count))
@@ -741,10 +860,11 @@ impl DistRank {
             // bias), then unit 0, both blocking: nothing to overlap
             // with yet.
             let tail: Vec<f32> = if tail_is_unit {
-                wire::ring_allgather(
+                wire::ring_allgather_ordered(
                     t,
                     slice(nu - 1),
                     ul.unit_layout(nu - 1),
+                    &self.order,
                 )?
             } else {
                 Vec::new()
@@ -752,11 +872,12 @@ impl DistRank {
             let mut tail_g = vec![0f32; tail.len()];
             let mut spare = std::mem::take(&mut self.scratch);
             let mut current = {
-                let mut op = wire::AllGatherOp::start_into(
+                let mut op = wire::AllGatherOp::start_into_ordered(
                     &*t,
                     slice(0),
                     ul.unit_layout(0),
                     spare,
+                    &self.order,
                 )?;
                 while !op.step_round(t)? {}
                 op.finish()?
@@ -764,11 +885,12 @@ impl DistRank {
             spare = Vec::new();
             for k in 0..table_units {
                 let mut next_op = if k + 1 < table_units {
-                    Some(wire::AllGatherOp::start_into(
+                    Some(wire::AllGatherOp::start_into_ordered(
                         &*t,
                         slice(k + 1),
                         ul.unit_layout(k + 1),
                         std::mem::take(&mut spare),
+                        &self.order,
                     )?)
                 } else {
                     None
@@ -801,10 +923,11 @@ impl DistRank {
                 // Unit k is done: recycle its buffer, reduce-scatter
                 // its gradients onto the owning ranks.
                 spare = current;
-                pieces.push(wire::ring_reduce_scatter(
+                pieces.push(wire::ring_reduce_scatter_ordered(
                     t,
                     &unit_g,
                     ul.unit_layout(k),
+                    &self.order,
                 )?);
                 current = match next_op {
                     Some(op) => op.finish()?,
@@ -812,10 +935,11 @@ impl DistRank {
                 };
             }
             if tail_is_unit {
-                pieces.push(wire::ring_reduce_scatter(
+                pieces.push(wire::ring_reduce_scatter_ordered(
                     t,
                     &tail_g,
                     ul.unit_layout(nu - 1),
+                    &self.order,
                 )?);
             }
             self.scratch = spare;
@@ -1144,6 +1268,9 @@ impl DistRank {
         }
 
         self.membership = cmd.new_membership.clone();
+        // The ring order is membership-relative: rebuild it so the
+        // next step's rings stay locality-sorted over the NEW group.
+        self.order = ring_order(&self.topo, self.membership.len())?;
         // Unit boundaries are layout-relative: rebuild them against the
         // post-migration shard layout so the next step's per-unit rank
         // slices tile the NEW ranges.
@@ -1249,7 +1376,10 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
 pub struct ChaosOpts {
     pub plan: FaultPlan,
     /// The `--chaos` spec string handed to spawned `cephalo worker`
-    /// processes; required for [`FabricSpec::TcpProcesses`].
+    /// processes; required for [`FabricSpec::TcpProcesses`] and
+    /// [`FabricSpec::HybridProcesses`]. ([`FabricSpec::ShmProcesses`]
+    /// rejects chaos outright: an aborted process never closes its shm
+    /// lanes and pure shm has no liveness fabric to notice.)
     pub cli_spec: Option<String>,
 }
 
@@ -1274,6 +1404,10 @@ pub struct DistDriver {
     /// TCP fabrics keep the rendezvous endpoint alive for the run's
     /// lifetime, so losing workers never tears down the meeting point.
     _rz: Option<crate::transport::tcp::Rendezvous>,
+    /// Process fabrics with shm lanes: the lane directory, swept after
+    /// the children are reaped (a killed worker never unlinks its
+    /// inbound lane files, so per-endpoint cleanup is not enough).
+    shm_dir: Option<PathBuf>,
     down: bool,
     pub history: Vec<StepStats>,
 }
@@ -1321,7 +1455,7 @@ impl DistDriver {
                 None => ep,
             }
         };
-        let (t, threads, children, rz) = match spec {
+        let (t, threads, children, rz, shm_dir) = match spec {
             FabricSpec::Local => {
                 let mut eps = LocalFabric::new(world);
                 let rest = eps.split_off(1);
@@ -1337,7 +1471,129 @@ impl DistDriver {
                         })
                     })
                     .collect();
-                (t0, threads, Vec::new(), None)
+                (t0, threads, Vec::new(), None, None)
+            }
+            FabricSpec::ShmThreads => {
+                let mut eps = ShmFabric::new(world)?;
+                let rest = eps.split_off(1);
+                let t0: Box<dyn Transport> = Box::new(eps.remove(0));
+                let threads = rest
+                    .into_iter()
+                    .map(|ep| {
+                        let ep = wrap(Box::new(ep), &chaos);
+                        std::thread::spawn(move || {
+                            if let Err(e) = worker_loop(ep) {
+                                crate::warn!("shm worker exited: {e}");
+                            }
+                        })
+                    })
+                    .collect();
+                (t0, threads, Vec::new(), None, None)
+            }
+            FabricSpec::HybridThreads => {
+                let topo = hybrid_topology(&cfg, world)?;
+                let dir = crate::transport::shm::fresh_dir();
+                let slow = crate::transport::tcp::thread_fabric(world)?;
+                let mut eps = slow
+                    .into_iter()
+                    .map(|s| HybridTransport::wrap(s, &dir, topo.clone()))
+                    .collect::<Result<Vec<_>>>()?;
+                let rest = eps.split_off(1);
+                let t0: Box<dyn Transport> = Box::new(eps.remove(0));
+                let threads = rest
+                    .into_iter()
+                    .map(|ep| {
+                        let ep = wrap(Box::new(ep), &chaos);
+                        std::thread::spawn(move || {
+                            if let Err(e) = worker_loop(ep) {
+                                crate::warn!("hybrid worker exited: {e}");
+                            }
+                        })
+                    })
+                    .collect();
+                (t0, threads, Vec::new(), None, None)
+            }
+            FabricSpec::ShmProcesses => {
+                if chaos.is_some() {
+                    // A chaos-aborted process never closes its shm
+                    // lanes, and pure shm has no liveness fabric to
+                    // notice — blocked recvs would park forever.
+                    return Err(anyhow!(
+                        "process-crash chaos needs a liveness fabric; \
+                         use --transport hybrid (or tcp)"
+                    ));
+                }
+                let dir = crate::transport::shm::fresh_dir();
+                let exe = std::env::current_exe()?;
+                let children = (1..world)
+                    .map(|r| {
+                        std::process::Command::new(&exe)
+                            .args([
+                                "worker",
+                                "--rank",
+                                &r.to_string(),
+                                "--shm-dir",
+                                &dir.display().to_string(),
+                                "--world",
+                                &world.to_string(),
+                            ])
+                            .spawn()
+                    })
+                    .collect::<std::io::Result<Vec<_>>>()?;
+                let t0: Box<dyn Transport> =
+                    Box::new(ShmTransport::attach(&dir, 0, world)?);
+                (t0, Vec::new(), children, None, Some(dir))
+            }
+            FabricSpec::HybridProcesses => {
+                let topo = hybrid_topology(&cfg, world)?;
+                let rz = crate::transport::tcp::Rendezvous::bind(
+                    "127.0.0.1:0",
+                    world,
+                )?;
+                let addr = rz.local_addr()?;
+                let dir = crate::transport::shm::fresh_dir();
+                let hosts_spec = topo
+                    .hosts()
+                    .iter()
+                    .map(|h| h.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let exe = std::env::current_exe()?;
+                let mut extra: Vec<String> = Vec::new();
+                if let Some(ch) = &chaos {
+                    let spec = ch.cli_spec.clone().ok_or_else(|| {
+                        anyhow!(
+                            "process fabric chaos needs a --chaos spec \
+                             string (ChaosOpts::cli_spec)"
+                        )
+                    })?;
+                    extra.push("--chaos".into());
+                    extra.push(spec);
+                }
+                let children = (1..world)
+                    .map(|r| {
+                        std::process::Command::new(&exe)
+                            .args([
+                                "worker",
+                                "--rank",
+                                &r.to_string(),
+                                "--connect",
+                                &addr,
+                                "--world",
+                                &world.to_string(),
+                                "--shm-dir",
+                                &dir.display().to_string(),
+                                "--hosts",
+                                &hosts_spec,
+                            ])
+                            .args(&extra)
+                            .spawn()
+                    })
+                    .collect::<std::io::Result<Vec<_>>>()?;
+                let slow: Box<dyn Transport> = Box::new(rz.establish()?);
+                let t0: Box<dyn Transport> =
+                    Box::new(HybridTransport::wrap(slow, &dir, topo)?);
+                (t0, Vec::new(), children, Some(rz), Some(dir))
             }
             FabricSpec::TcpThreads => {
                 let rz = crate::transport::tcp::Rendezvous::bind(
@@ -1369,7 +1625,7 @@ impl DistDriver {
                     })
                     .collect();
                 let t0: Box<dyn Transport> = Box::new(rz.establish()?);
-                (t0, threads, Vec::new(), Some(rz))
+                (t0, threads, Vec::new(), Some(rz), None)
             }
             FabricSpec::TcpProcesses => {
                 let rz = crate::transport::tcp::Rendezvous::bind(
@@ -1406,7 +1662,7 @@ impl DistDriver {
                     })
                     .collect::<std::io::Result<Vec<_>>>()?;
                 let t0: Box<dyn Transport> = Box::new(rz.establish()?);
-                (t0, Vec::new(), children, Some(rz))
+                (t0, Vec::new(), children, Some(rz), None)
             }
         };
         let mut t = t;
@@ -1429,6 +1685,7 @@ impl DistDriver {
             threads,
             children,
             _rz: rz,
+            shm_dir,
             down: false,
             history: Vec::new(),
         })
@@ -1671,6 +1928,12 @@ impl DistDriver {
                 }
             }
         }
+        if let Some(dir) = self.shm_dir.take() {
+            // Workers are gone; sweep lane files a killed rank never
+            // unlinked. Rank 0's own mmaps stay valid (unlink does not
+            // tear down live mappings).
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 }
 
@@ -1695,6 +1958,7 @@ mod tests {
             corpus_branch: 3,
             ft: true,
             fsdp_units: 5,
+            hosts: Some(vec![4, 4, 9]),
             ..Default::default()
         };
         let membership = vec![member(3, 0.7), member(1, 0.3)];
@@ -1708,9 +1972,18 @@ mod tests {
         assert_eq!(back.surrogate.vocab, cfg.surrogate.vocab);
         assert!(back.ft);
         assert_eq!(back.fsdp_units, 5);
+        assert_eq!(back.hosts.as_deref(), Some(&[4, 4, 9][..]));
         assert_eq!(mem.len(), 2);
         assert_eq!(mem[0].batch, 3);
         assert_eq!(mem[1].state_ratio, 0.3);
+
+        // The absent host map round-trips as absent.
+        let bare = DistConfig::default();
+        let frame = encode_init(&bare, &membership);
+        let mut r = R::new(&frame);
+        assert_eq!(r.u8().unwrap(), OP_INIT);
+        let (back, _) = decode_init(&mut r).unwrap();
+        assert_eq!(back.hosts, None);
 
         let mc = MigrateCmd {
             new_membership: vec![member(4, 1.0)],
@@ -1925,6 +2198,199 @@ mod tests {
         }
         whole.shutdown();
         units.shutdown();
+    }
+
+    #[test]
+    fn shm_and_hybrid_drivers_match_the_local_driver_bitwise() {
+        // Invariant 10 over the new fabrics: the shm rings and the
+        // locality-routed hybrid fabric (hosts [0,1,0] — same-host
+        // ranks 0 and 2 adjacent in the ring, exercised with unit
+        // pipelining) carry the SAME fully-sharded trajectory as the
+        // in-process channel fabric, bit for bit, across an elastic
+        // migration.
+        use crate::coordinator::elastic::plan_migration;
+
+        let membership =
+            || vec![member(2, 0.5), member(1, 0.3), member(1, 0.2)];
+        let cfg = DistConfig {
+            seed: 13,
+            shard_params: true,
+            ..Default::default()
+        };
+        let hybrid_cfg = DistConfig {
+            fsdp_units: 4,
+            hosts: Some(vec![0, 1, 0]),
+            ..cfg.clone()
+        };
+        let mut local = DistDriver::launch(
+            FabricSpec::Local,
+            3,
+            cfg.clone(),
+            membership(),
+        )
+        .unwrap();
+        let mut shm = DistDriver::launch(
+            FabricSpec::ShmThreads,
+            3,
+            cfg,
+            membership(),
+        )
+        .unwrap();
+        let mut hybrid = DistDriver::launch(
+            FabricSpec::HybridThreads,
+            3,
+            hybrid_cfg,
+            membership(),
+        )
+        .unwrap();
+        assert_eq!(shm.backend_label(), "shm");
+        assert_eq!(hybrid.backend_label(), "hybrid");
+        for s in 0..2 {
+            local.step(s).unwrap();
+            shm.step(s).unwrap();
+            hybrid.step(s).unwrap();
+            let want = local.gather_params().unwrap();
+            assert_eq!(
+                shm.gather_params().unwrap(),
+                want,
+                "shm diverged at step {s}"
+            );
+            assert_eq!(
+                hybrid.gather_params().unwrap(),
+                want,
+                "hybrid diverged at step {s}"
+            );
+        }
+        let new_membership = vec![member(2, 0.6), member(2, 0.4)];
+        let survivors = vec![Some(0), Some(1)];
+        for d in [&mut local, &mut shm, &mut hybrid] {
+            let old = d.layout().clone();
+            let new = layout_of(&new_membership, old.len());
+            let (transfers, _, _) = plan_migration(&old, &new, &survivors);
+            d.migrate(new_membership.clone(), &survivors, &transfers)
+                .unwrap();
+        }
+        for s in 2..4 {
+            local.step(s).unwrap();
+            shm.step(s).unwrap();
+            hybrid.step(s).unwrap();
+            let want = local.gather_params().unwrap();
+            assert_eq!(
+                shm.gather_params().unwrap(),
+                want,
+                "shm diverged at step {s} (post-migration)"
+            );
+            assert_eq!(
+                hybrid.gather_params().unwrap(),
+                want,
+                "hybrid diverged at step {s} (post-migration)"
+            );
+        }
+        local.shutdown();
+        shm.shutdown();
+        hybrid.shutdown();
+    }
+
+    #[test]
+    fn hybrid_chaos_crash_recovery_matches_graceful_local_bitwise() {
+        // Invariants 10 + 12 composed: chaos middleware over the
+        // locality-routed fabric — the crashed rank shares a host with
+        // the coordinator, so its death surfaces through the shm
+        // closed flag and the TCP detector — recovers onto the SAME
+        // bits as the graceful trajectory on the channel fabric.
+        use crate::coordinator::elastic::plan_migration;
+        use crate::transport::chaos::ChaosConfig;
+
+        let membership =
+            || vec![member(2, 0.5), member(1, 0.3), member(1, 0.2)];
+        let cfg = DistConfig {
+            seed: 11,
+            shard_params: true,
+            ft: true,
+            ..Default::default()
+        };
+        let hybrid_cfg =
+            DistConfig { hosts: Some(vec![0, 1, 0]), ..cfg.clone() };
+        let plan = FaultPlan::generate(
+            7,
+            3,
+            &ChaosConfig {
+                crash_ranks: 1,
+                first_crash_step: 1,
+                crash_step_stride: 1,
+                delay_prob: 0.0,
+                max_delay_ms: 0,
+                dup_prob: 0.0,
+            },
+        );
+        assert_eq!(plan.for_rank(2).crash_after_step, Some(1));
+        let mut chaotic = DistDriver::launch_with_chaos(
+            FabricSpec::HybridThreads,
+            3,
+            hybrid_cfg,
+            membership(),
+            Some(ChaosOpts { plan, cli_spec: None }),
+        )
+        .unwrap();
+        let mut graceful =
+            DistDriver::launch(FabricSpec::Local, 3, cfg, membership())
+                .unwrap();
+        for s in 0..2 {
+            chaotic.step(s).unwrap();
+            graceful.step(s).unwrap();
+        }
+        assert_eq!(chaotic.poll_failures(), vec![2]);
+        assert!(graceful.poll_failures().is_empty());
+        let new_membership = vec![member(2, 0.6), member(1, 0.4)];
+        let survivors = vec![Some(0), Some(1)];
+        for d in [&mut chaotic, &mut graceful] {
+            let old = d.layout().clone();
+            let new = layout_of(&new_membership, old.len());
+            let (transfers, _, _) = plan_migration(&old, &new, &survivors);
+            d.migrate(new_membership.clone(), &survivors, &transfers)
+                .unwrap();
+        }
+        for s in 2..4 {
+            chaotic.step(s).unwrap();
+            graceful.step(s).unwrap();
+        }
+        assert_eq!(
+            chaotic.gather_params().unwrap(),
+            graceful.gather_params().unwrap(),
+            "hybrid crash recovery diverged from the graceful local run"
+        );
+        chaotic.shutdown();
+        graceful.shutdown();
+    }
+
+    #[test]
+    fn bad_host_maps_and_shm_chaos_are_rejected_at_launch() {
+        let membership = vec![member(2, 0.5), member(1, 0.5)];
+        // Host map must cover the whole process world.
+        let cfg = DistConfig {
+            hosts: Some(vec![0]),
+            ..Default::default()
+        };
+        assert!(DistDriver::launch(
+            FabricSpec::HybridThreads,
+            2,
+            cfg,
+            membership.clone(),
+        )
+        .is_err());
+        // Pure shm has no liveness fabric for process-crash chaos.
+        let err = DistDriver::launch_with_chaos(
+            FabricSpec::ShmProcesses,
+            2,
+            DistConfig::default(),
+            membership,
+            Some(ChaosOpts {
+                plan: FaultPlan::quiet(2),
+                cli_spec: Some("seed=1".into()),
+            }),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("liveness"), "{err}");
     }
 
     #[test]

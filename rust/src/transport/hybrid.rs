@@ -1,0 +1,349 @@
+//! Locality-routed fabric: shm lanes inside a host, TCP across hosts.
+//!
+//! A [`HybridTransport`] owns two endpoints for the same rank — a
+//! [`ShmTransport`] with lanes to its same-host peers (self included)
+//! and any slower full-mesh fabric (in production the fault-tolerant
+//! TCP transport) — plus the [`HostTopology`] that decides, per peer,
+//! which one carries the traffic:
+//!
+//! > **Routing rule.** A frame to rank `p` travels shm iff
+//! > `topology.same_host(self, p)`; otherwise it travels the slow
+//! > fabric. Both sides derive the route from the same shared map, so
+//! > sender and receiver always pick the same lane — the route is a
+//! > pure function of (src, dst).
+//!
+//! FIFO holds per (src, dst) pair exactly as the [`Transport`]
+//! contract demands, because ALL frames of a pair take one lane.
+//! Liveness is the union of both fabrics: the slow fabric keeps its
+//! full mesh (heartbeats cross host boundaries AND loop within a
+//! host), so a SIGKILLed same-host peer — invisible to pure shm — is
+//! still detected by TCP heartbeat expiry. Fault-injection hooks
+//! forward to the lane that owns the peer: `resend_last` /
+//! `corrupt_next_send` are real on TCP lanes and no-ops on shm lanes
+//! (no wire dedup/CRC to exercise), which is exactly what keeps chaos
+//! middleware bitwise-invisible over the hybrid fabric too.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::shm::ShmTransport;
+use super::topology::HostTopology;
+use super::{expect_bytes, expect_f32, Frame, Transport, TransportError};
+use crate::util::error::{anyhow, Result};
+
+/// Slice of the shm poll loop: how long a blocking same-host recv
+/// waits on the fast lane before re-checking the slow fabric's
+/// liveness verdict (a SIGKILLed peer never closes its shm lane).
+const LIVENESS_SLICE_MS: u64 = 50;
+
+/// One rank's endpoint over the two-tier fabric.
+pub struct HybridTransport {
+    topo: HostTopology,
+    shm: ShmTransport,
+    slow: Box<dyn Transport>,
+}
+
+impl HybridTransport {
+    /// Compose an endpoint from its two lanes. The shm endpoint needs
+    /// lanes to (at least) every same-host peer; the slow endpoint
+    /// must cover the full mesh.
+    pub fn new(
+        topo: HostTopology,
+        shm: ShmTransport,
+        slow: Box<dyn Transport>,
+    ) -> Result<HybridTransport> {
+        let (rank, world) = (slow.rank(), slow.world_size());
+        if topo.world_size() != world || shm.world_size() != world {
+            return Err(anyhow!(
+                "hybrid fabric shape mismatch: slow fabric world {world}, \
+                 shm world {}, topology {} ranks",
+                shm.world_size(),
+                topo.world_size()
+            ));
+        }
+        if shm.rank() != rank {
+            return Err(anyhow!(
+                "hybrid fabric rank mismatch: slow {rank}, shm {}",
+                shm.rank()
+            ));
+        }
+        for p in 0..world {
+            if topo.same_host(rank, p) && !shm.has_lane(p) {
+                return Err(anyhow!(
+                    "rank {rank} shares a host with rank {p} but has no \
+                     shm lane to it"
+                ));
+            }
+        }
+        Ok(HybridTransport { topo, shm, slow })
+    }
+
+    /// Wrap a full-mesh endpoint: attach shm lanes under `dir` for
+    /// every peer on this rank's host and route by `topo`. This is the
+    /// worker-side constructor (`--transport hybrid` + `--shm-dir`).
+    pub fn wrap(
+        slow: Box<dyn Transport>,
+        dir: &Path,
+        topo: HostTopology,
+    ) -> Result<HybridTransport> {
+        let (rank, world) = (slow.rank(), slow.world_size());
+        if topo.world_size() != world {
+            return Err(anyhow!(
+                "host map names {} ranks, fabric has {world}",
+                topo.world_size()
+            ));
+        }
+        let peers: Vec<usize> =
+            (0..world).filter(|&p| topo.same_host(rank, p)).collect();
+        let shm = ShmTransport::attach_peers(dir, rank, world, &peers)?;
+        HybridTransport::new(topo, shm, slow)
+    }
+
+    /// Whether traffic to `peer` takes the shm fast path.
+    pub fn routes_via_shm(&self, peer: usize) -> bool {
+        self.topo.same_host(self.slow.rank(), peer)
+    }
+
+    /// The topology this endpoint routes by.
+    pub fn topology(&self) -> &HostTopology {
+        &self.topo
+    }
+
+    /// Blocking recv on the shm route that stays failure-aware: poll
+    /// the fast lane in slices, consulting the slow fabric's failure
+    /// detector between slices, so a caller never parks forever on a
+    /// same-host peer that died without closing its ring.
+    fn recv_frame_shm(&mut self, from: usize) -> Result<Frame> {
+        loop {
+            let deadline = Instant::now()
+                + Duration::from_millis(LIVENESS_SLICE_MS);
+            if let Some(f) = self.shm.recv_frame(from, Some(deadline))? {
+                return Ok(f);
+            }
+            if self.slow.peer_closed(from) {
+                return Err(
+                    TransportError::PeerClosed { rank: from }.into()
+                );
+            }
+        }
+    }
+}
+
+impl Transport for HybridTransport {
+    fn backend(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn rank(&self) -> usize {
+        self.slow.rank()
+    }
+
+    fn world_size(&self) -> usize {
+        self.slow.world_size()
+    }
+
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        if to >= self.world_size() {
+            return Err(anyhow!(
+                "send to rank {to} out of range (world {})",
+                self.world_size()
+            ));
+        }
+        if self.routes_via_shm(to) {
+            self.shm.send_f32(to, data)
+        } else {
+            self.slow.send_f32(to, data)
+        }
+    }
+
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        if from >= self.world_size() {
+            return Err(anyhow!(
+                "recv from rank {from} out of range (world {})",
+                self.world_size()
+            ));
+        }
+        if self.routes_via_shm(from) {
+            let f = self.recv_frame_shm(from)?;
+            expect_f32(f, from)
+        } else {
+            self.slow.recv_f32(from)
+        }
+    }
+
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        if to >= self.world_size() {
+            return Err(anyhow!(
+                "send to rank {to} out of range (world {})",
+                self.world_size()
+            ));
+        }
+        if self.routes_via_shm(to) {
+            self.shm.send_bytes(to, data)
+        } else {
+            self.slow.send_bytes(to, data)
+        }
+    }
+
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        if from >= self.world_size() {
+            return Err(anyhow!(
+                "recv from rank {from} out of range (world {})",
+                self.world_size()
+            ));
+        }
+        if self.routes_via_shm(from) {
+            let f = self.recv_frame_shm(from)?;
+            expect_bytes(f, from)
+        } else {
+            self.slow.recv_bytes(from)
+        }
+    }
+
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        if self.routes_via_shm(from) {
+            self.shm.recv_bytes_timeout(from, timeout_ms)
+        } else {
+            self.slow.recv_bytes_timeout(from, timeout_ms)
+        }
+    }
+
+    fn peer_closed(&self, rank: usize) -> bool {
+        // Union of the evidence: a cooperative close flags the shm
+        // lane, a crash trips the slow fabric's detector.
+        self.shm.peer_closed(rank) || self.slow.peer_closed(rank)
+    }
+
+    fn close(&mut self) {
+        self.shm.close();
+        self.slow.close();
+    }
+
+    fn resend_last(&mut self, to: usize) -> Result<()> {
+        if self.routes_via_shm(to) {
+            self.shm.resend_last(to)
+        } else {
+            self.slow.resend_last(to)
+        }
+    }
+
+    fn corrupt_next_send(&mut self, to: usize) {
+        if self.routes_via_shm(to) {
+            self.shm.corrupt_next_send(to)
+        } else {
+            self.slow.corrupt_next_send(to)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::local::LocalFabric;
+    use super::super::shm::{fresh_dir, ShmTransport};
+    use super::*;
+
+    /// Hybrid endpoints over a Local slow fabric: hosts `[0,0,1,1]`.
+    fn fabric(hosts: Vec<u64>) -> Vec<HybridTransport> {
+        let world = hosts.len();
+        let topo = HostTopology::new(hosts);
+        let dir = fresh_dir();
+        LocalFabric::new(world)
+            .into_iter()
+            .map(|slow| {
+                HybridTransport::wrap(
+                    Box::new(slow),
+                    &dir,
+                    topo.clone(),
+                )
+                .expect("hybrid wrap")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routes_split_by_host_and_both_lanes_deliver() {
+        let mut eps = fabric(vec![0, 0, 1, 1]);
+        assert_eq!(eps[0].backend(), "hybrid");
+        assert!(eps[0].routes_via_shm(0), "self is same-host");
+        assert!(eps[0].routes_via_shm(1));
+        assert!(!eps[0].routes_via_shm(2));
+
+        // Same-host pair (0 → 1): shm lane.
+        eps[0].send_f32(1, &[1.5, -0.0]).unwrap();
+        let (a, rest) = eps.split_at_mut(1);
+        let xs = rest[0].recv_f32(0).unwrap();
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+
+        // Cross-host pair (0 → 2): slow lane.
+        a[0].send_bytes(2, &[9, 9]).unwrap();
+        assert_eq!(rest[1].recv_bytes(0).unwrap(), vec![9, 9]);
+
+        // Self-send loops through shm.
+        a[0].send_bytes(0, &[7]).unwrap();
+        assert_eq!(a[0].recv_bytes(0).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let topo = HostTopology::new(vec![0, 0]);
+        let dir = fresh_dir();
+        let mut slow = LocalFabric::new(2);
+        let s1 = slow.pop().unwrap();
+        let shm = ShmTransport::attach(&dir, 1, 2).unwrap();
+        // Shm lane present for both same-host peers: fine.
+        assert!(HybridTransport::new(topo.clone(), shm, Box::new(s1))
+            .is_ok());
+        // Missing same-host lane: rejected.
+        let s0 = slow.pop().unwrap();
+        let partial =
+            ShmTransport::attach_peers(&fresh_dir(), 0, 2, &[0]).unwrap();
+        assert!(HybridTransport::new(topo, partial, Box::new(s0)).is_err());
+    }
+
+    #[test]
+    fn close_propagates_to_both_lanes() {
+        let mut eps = fabric(vec![0, 0]);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.close();
+        assert!(b.peer_closed(0), "shm closed flag visible to peer");
+        assert!(a.send_bytes(1, &[1]).is_err());
+        // Blocked same-host recv wakes via the shm closed flag.
+        assert!(b.recv_bytes(0).is_err());
+    }
+
+    #[test]
+    fn barrier_runs_over_mixed_routes() {
+        let eps = fabric(vec![0, 1, 0, 1]);
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        ep.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn timeout_recv_routes_by_locality() {
+        let mut eps = fabric(vec![0, 0, 1]);
+        assert_eq!(eps[0].recv_bytes_timeout(1, 5).unwrap(), None);
+        assert_eq!(eps[0].recv_bytes_timeout(2, 5).unwrap(), None);
+        eps[1].send_bytes(0, &[1]).unwrap();
+        eps[2].send_bytes(0, &[2]).unwrap();
+        assert_eq!(
+            eps[0].recv_bytes_timeout(1, 1000).unwrap(),
+            Some(vec![1])
+        );
+        assert_eq!(
+            eps[0].recv_bytes_timeout(2, 1000).unwrap(),
+            Some(vec![2])
+        );
+    }
+}

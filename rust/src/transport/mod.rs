@@ -15,6 +15,14 @@
 //!   channels (`std::sync::mpsc`), the zero-dependency default.
 //! * [`tcp::TcpTransport`] — loopback/LAN sockets (`std::net` only)
 //!   with a tiny rendezvous + full-mesh handshake protocol.
+//! * [`shm::ShmTransport`] — the same-host fast path: the same typed
+//!   frames over file-backed mmap SPSC rings under `/dev/shm`
+//!   (seqlock-style head/tail cursors, futex-free spin-then-yield).
+//! * [`hybrid::HybridTransport`] — per-peer locality routing guided by
+//!   a [`topology::HostTopology`]: same-host lanes take shm, cross-host
+//!   lanes take the fault-tolerant TCP mesh, and the ring collectives
+//!   walk a locality-sorted order so only `num_hosts` of the N−1 hops
+//!   cross the slow fabric.
 //! * [`collectives`] — the segmented ring AllGather / ReduceScatter
 //!   over the uneven `ShardLayout`, executed as actual N−1 rounds of
 //!   peer messages, bit-identical to the in-process
@@ -56,14 +64,20 @@ pub mod chaos;
 pub mod collectives;
 pub mod dist;
 pub mod failure;
+pub mod hybrid;
 pub mod local;
+pub mod shm;
 pub mod tcp;
+pub mod topology;
 
 pub use chaos::{ChaosConfig, ChaosTransport, CrashMode, FaultPlan};
 pub use dist::{worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec};
 pub use failure::FailureDetector;
+pub use hybrid::HybridTransport;
 pub use local::{LocalFabric, LocalTransport};
+pub use shm::{ShmFabric, ShmTransport};
 pub use tcp::{Rendezvous, TcpTransport};
+pub use topology::HostTopology;
 
 use crate::util::error::{anyhow, Result};
 

@@ -1,0 +1,686 @@
+//! Shared-memory transport — the same-host fast path.
+//!
+//! Same-host ranks talking over loopback TCP pay syscalls, kernel
+//! copies and NIC-stack latency for what is ultimately a memcpy. This
+//! backend carries the typed frame protocol over file-backed mmap ring
+//! buffers instead: one SPSC ring per (src, dst) lane, living in a
+//! per-fabric directory under `/dev/shm` (tmpfs — pages never touch a
+//! disk), attachable from any process on the host.
+//!
+//! ## Ring layout
+//!
+//! Each lane file is `[tail u64][head u64][closed u32]` (each on its
+//! own cache line) followed by `LANE_CAP` data bytes. `tail` counts
+//! bytes ever published (writer-owned), `head` bytes ever consumed
+//! (reader-owned) — both monotone, positions are `offset % LANE_CAP`,
+//! seqlock-style: the writer copies payload first and release-stores
+//! `tail`; the reader acquire-loads `tail` before touching data. The
+//! ring is a byte STREAM, so frames larger than the ring flow through
+//! in chunks with the writer and reader overlapped. Waits are
+//! futex-free: a bounded spin, then `yield_now` — same-host wakeups
+//! are tens of nanoseconds, a futex syscall costs more than the wait.
+//!
+//! ## Frames
+//!
+//! In-ring framing is `[tag u8][len u64 LE][payload]` — the
+//! [`encode_frame`] wire layout. No CRC and no sequence numbers: the
+//! "wire" is host memory, there is no lossy middle to checksum
+//! against, so `resend_last`/`corrupt_next_send` are no-ops (like the
+//! channel fabric) and duplicate-frame chaos injection is trivially
+//! invisible. Everything above the framing — FIFO per lane,
+//! self-sends, typed-frame desync errors, barrier — matches the other
+//! backends bitwise (DESIGN.md invariant 10).
+//!
+//! Liveness: `close` release-stores the `closed` flag on every
+//! outbound lane, so a peer blocked in `recv_*` wakes with
+//! [`TransportError::PeerClosed`] once the stream drains. A SIGKILLed
+//! process never sets the flag — pure-shm fabrics rely on cooperative
+//! close (thread workers, chaos `CrashMode::Error`); the hybrid
+//! fabric keeps TCP heartbeats for real crash detection.
+//!
+//! Dependency-free like the std-only backends: the two syscalls this
+//! needs (`mmap`/`munmap`) are declared as raw `libc` externs — std
+//! already links libc on every unix target.
+
+use std::fs::OpenOptions;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::{
+    expect_bytes, expect_f32, f32s_from_le_bytes, f32s_to_le_bytes, Frame,
+    Transport, TransportError, TAG_BYTES, TAG_F32,
+};
+use crate::util::error::{anyhow, Result};
+
+/// Data capacity of one lane ring in bytes. Larger frames stream
+/// through in chunks; 2 MiB keeps a 4-rank full mesh (16 lanes) at a
+/// comfortable 32 MiB of tmpfs.
+pub const LANE_CAP: usize = 1 << 21;
+
+/// Header region: tail / head / closed, each on its own 64-byte line.
+const HDR: usize = 256;
+const OFF_TAIL: usize = 0;
+const OFF_HEAD: usize = 64;
+const OFF_CLOSED: usize = 128;
+
+/// Hard bound on one frame, matching the TCP fabric's sanity check.
+const MAX_FRAME_BYTES: u64 = 1 << 30;
+
+mod ffi {
+    use std::os::raw::{c_int, c_void};
+    pub const PROT_READ: c_int = 0x1;
+    pub const PROT_WRITE: c_int = 0x2;
+    pub const MAP_SHARED: c_int = 0x01;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// One endpoint's view of one lane file: the mmap'd header + data
+/// region. Both ends of a lane attach the same file; creation is
+/// idempotent (`O_CREAT` without `O_EXCL` + same-size `set_len`), so
+/// neither side needs to win a race to go first.
+struct Ring {
+    base: *mut u8,
+    map_len: usize,
+    path: PathBuf,
+}
+
+// The mapping is plain shared memory driven through atomics; moving
+// the raw pointer to another thread is safe (endpoints take &mut for
+// all I/O, so a Ring is never used from two threads at once).
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn attach(path: &Path) -> Result<Ring> {
+        use std::os::unix::io::AsRawFd;
+        let map_len = HDR + LANE_CAP;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| anyhow!("shm lane {}: {e}", path.display()))?;
+        file.set_len(map_len as u64)
+            .map_err(|e| anyhow!("shm lane {}: {e}", path.display()))?;
+        let base = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                ffi::PROT_READ | ffi::PROT_WRITE,
+                ffi::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if base == ffi::map_failed() {
+            return Err(anyhow!(
+                "mmap of shm lane {} failed",
+                path.display()
+            ));
+        }
+        Ok(Ring { base: base as *mut u8, map_len, path: path.to_path_buf() })
+    }
+
+    fn word(&self, off: usize) -> &AtomicU64 {
+        unsafe { &*(self.base.add(off) as *const AtomicU64) }
+    }
+
+    fn tail(&self) -> &AtomicU64 {
+        self.word(OFF_TAIL)
+    }
+
+    fn head(&self) -> &AtomicU64 {
+        self.word(OFF_HEAD)
+    }
+
+    fn closed(&self) -> &AtomicU32 {
+        unsafe { &*(self.base.add(OFF_CLOSED) as *const AtomicU32) }
+    }
+
+    /// Copy `data` into the ring at stream offset `at` (wrapping).
+    fn put(&self, at: u64, data: &[u8]) {
+        let pos = (at % LANE_CAP as u64) as usize;
+        let first = data.len().min(LANE_CAP - pos);
+        unsafe {
+            let dst = self.base.add(HDR + pos);
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dst, first);
+            if first < data.len() {
+                std::ptr::copy_nonoverlapping(
+                    data.as_ptr().add(first),
+                    self.base.add(HDR),
+                    data.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Copy out of the ring at stream offset `at` (wrapping).
+    fn get(&self, at: u64, out: &mut [u8]) {
+        let pos = (at % LANE_CAP as u64) as usize;
+        let first = out.len().min(LANE_CAP - pos);
+        unsafe {
+            let src = self.base.add(HDR + pos);
+            std::ptr::copy_nonoverlapping(src, out.as_mut_ptr(), first);
+            if first < out.len() {
+                std::ptr::copy_nonoverlapping(
+                    self.base.add(HDR),
+                    out.as_mut_ptr().add(first),
+                    out.len() - first,
+                );
+            }
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        unsafe {
+            ffi::munmap(self.base as *mut _, self.map_len);
+        }
+    }
+}
+
+/// Futex-free wait: spin briefly (same-host producers publish within
+/// nanoseconds), then yield the timeslice so a descheduled peer can
+/// run. Never sleeps — wakeup latency stays sub-microsecond under
+/// load, and idle lanes only cost a runnable thread during waits.
+struct Backoff {
+    spins: u32,
+}
+
+impl Backoff {
+    fn new() -> Backoff {
+        Backoff { spins: 0 }
+    }
+
+    fn snooze(&mut self) {
+        if self.spins < 1 << 10 {
+            self.spins += 1;
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+fn lane_path(dir: &Path, src: usize, dst: usize) -> PathBuf {
+    dir.join(format!("lane_{src}_{dst}.ring"))
+}
+
+/// Pick the fabric directory root: tmpfs when the platform has it.
+fn shm_root() -> PathBuf {
+    let dev_shm = PathBuf::from("/dev/shm");
+    if dev_shm.is_dir() {
+        dev_shm
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// A fresh, collision-free fabric directory for this process.
+pub fn fresh_dir() -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    shm_root()
+        .join(format!("cephalo-shm-{}-{n}", std::process::id()))
+}
+
+/// Constructor for a same-host shared-memory fabric.
+pub struct ShmFabric;
+
+impl ShmFabric {
+    /// Build `world` connected endpoints in one process (threads),
+    /// full mesh including self-lanes, under a fresh directory.
+    pub fn new(world: usize) -> Result<Vec<ShmTransport>> {
+        let dir = fresh_dir();
+        (0..world)
+            .map(|r| ShmTransport::attach(&dir, r, world))
+            .collect()
+    }
+
+    /// Attach rank `rank` of a `world`-rank mesh under `dir` — the
+    /// cross-process entry (`cephalo worker --shm-dir`).
+    pub fn attach(
+        dir: &Path,
+        rank: usize,
+        world: usize,
+    ) -> Result<ShmTransport> {
+        ShmTransport::attach(dir, rank, world)
+    }
+}
+
+/// One rank's endpoint over mmap ring lanes. Lanes may cover only a
+/// subset of peers (`attach_peers`) — the hybrid fabric attaches shm
+/// lanes for same-host ranks only.
+pub struct ShmTransport {
+    rank: usize,
+    world: usize,
+    /// `out[dst]` — this rank's ring to each destination.
+    out: Vec<Option<Ring>>,
+    /// `inn[src]` — each source's ring to us.
+    inn: Vec<Option<Ring>>,
+    closed: bool,
+}
+
+impl ShmTransport {
+    /// Full-mesh attach (every peer incl. self).
+    pub fn attach(dir: &Path, rank: usize, world: usize) -> Result<Self> {
+        let peers: Vec<usize> = (0..world).collect();
+        ShmTransport::attach_peers(dir, rank, world, &peers)
+    }
+
+    /// Attach lanes to `peers` only; other ranks are unreachable
+    /// through this endpoint (the hybrid router never asks).
+    pub fn attach_peers(
+        dir: &Path,
+        rank: usize,
+        world: usize,
+        peers: &[usize],
+    ) -> Result<Self> {
+        assert!(world >= 1 && rank < world);
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("shm dir {}: {e}", dir.display()))?;
+        let mut out: Vec<Option<Ring>> = (0..world).map(|_| None).collect();
+        let mut inn: Vec<Option<Ring>> = (0..world).map(|_| None).collect();
+        for &p in peers {
+            assert!(p < world, "peer {p} out of range (world {world})");
+            out[p] = Some(Ring::attach(&lane_path(dir, rank, p))?);
+            inn[p] = Some(Ring::attach(&lane_path(dir, p, rank))?);
+        }
+        Ok(ShmTransport { rank, world, out, inn, closed: false })
+    }
+
+    /// Whether this endpoint has a lane to `peer`.
+    pub fn has_lane(&self, peer: usize) -> bool {
+        peer < self.world && self.out[peer].is_some()
+    }
+
+    fn out_lane(&self, to: usize) -> Result<&Ring> {
+        if to >= self.world {
+            return Err(anyhow!(
+                "send to rank {to} out of range (world {})",
+                self.world
+            ));
+        }
+        self.out[to]
+            .as_ref()
+            .ok_or_else(|| anyhow!("no shm lane to rank {to}"))
+    }
+
+    fn in_lane(&self, from: usize) -> Result<&Ring> {
+        if from >= self.world {
+            return Err(anyhow!(
+                "recv from rank {from} out of range (world {})",
+                self.world
+            ));
+        }
+        self.inn[from]
+            .as_ref()
+            .ok_or_else(|| anyhow!("no shm lane from rank {from}"))
+    }
+
+    /// Stream `data` into the lane, waiting for ring space as needed.
+    fn write_all(&self, to: usize, data: &[u8]) -> Result<()> {
+        let ring = self.out_lane(to)?;
+        let mut tail = ring.tail().load(Ordering::Relaxed);
+        let mut rest = data;
+        let mut wait = Backoff::new();
+        while !rest.is_empty() {
+            let head = ring.head().load(Ordering::Acquire);
+            let free = LANE_CAP - (tail - head) as usize;
+            if free == 0 {
+                wait.snooze();
+                continue;
+            }
+            let n = free.min(rest.len());
+            ring.put(tail, &rest[..n]);
+            tail += n as u64;
+            // Publish after the copy: acquire-readers of `tail` see
+            // initialized bytes (the seqlock half of the protocol).
+            ring.tail().store(tail, Ordering::Release);
+            rest = &rest[n..];
+        }
+        Ok(())
+    }
+
+    /// Fill `buf` from the lane. `deadline` bounds ONLY the wait for
+    /// the first byte (like the TCP fabric's whole-frame timeout);
+    /// once a frame starts it is read to completion. Returns false on
+    /// a clean deadline miss with nothing consumed.
+    fn read_exact(
+        &self,
+        from: usize,
+        buf: &mut [u8],
+        deadline: Option<Instant>,
+    ) -> Result<bool> {
+        let ring = self.in_lane(from)?;
+        let mut head = ring.head().load(Ordering::Relaxed);
+        let mut filled = 0usize;
+        let mut wait = Backoff::new();
+        while filled < buf.len() {
+            let tail = ring.tail().load(Ordering::Acquire);
+            let avail = (tail - head) as usize;
+            if avail == 0 {
+                if ring.closed().load(Ordering::Acquire) != 0 {
+                    // The writer closes AFTER its final tail store;
+                    // re-check so the flag never truncates a stream.
+                    if ring.tail().load(Ordering::Acquire) == head {
+                        if filled == 0 {
+                            return Err(TransportError::PeerClosed {
+                                rank: from,
+                            }
+                            .into());
+                        }
+                        return Err(anyhow!(
+                            "rank {from} closed mid-frame ({filled} of {} \
+                             bytes)",
+                            buf.len()
+                        ));
+                    }
+                    continue;
+                }
+                if filled == 0 {
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            return Ok(false);
+                        }
+                    }
+                }
+                wait.snooze();
+                continue;
+            }
+            let n = avail.min(buf.len() - filled);
+            ring.get(head, &mut buf[filled..filled + n]);
+            head += n as u64;
+            ring.head().store(head, Ordering::Release);
+            filled += n;
+        }
+        Ok(true)
+    }
+
+    fn send_frame(&mut self, to: usize, frame: &Frame) -> Result<()> {
+        if self.closed {
+            return Err(anyhow!("rank {} endpoint is closed", self.rank));
+        }
+        // Header and payload stream separately: no staging concat.
+        let (tag, payload): (u8, &[u8]) = match frame {
+            Frame::Bytes(b) => (TAG_BYTES, b),
+            Frame::F32(_) => unreachable!("f32 goes through send_f32"),
+        };
+        let mut hdr = [0u8; 9];
+        hdr[0] = tag;
+        hdr[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.write_all(to, &hdr)?;
+        self.write_all(to, payload)
+    }
+
+    pub(crate) fn recv_frame(
+        &mut self,
+        from: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Option<Frame>> {
+        let mut hdr = [0u8; 9];
+        if !self.read_exact(from, &mut hdr, deadline)? {
+            return Ok(None);
+        }
+        let tag = hdr[0];
+        let len = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
+        if len > MAX_FRAME_BYTES {
+            return Err(anyhow!(
+                "shm frame from rank {from} claims {len} bytes (cap {})",
+                MAX_FRAME_BYTES
+            ));
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.read_exact(from, &mut payload, None)?;
+        match tag {
+            TAG_BYTES => Ok(Some(Frame::Bytes(payload))),
+            TAG_F32 => Ok(Some(Frame::F32(f32s_from_le_bytes(&payload)?))),
+            t => Err(anyhow!("unknown shm frame tag {t} from rank {from}")),
+        }
+    }
+}
+
+impl Transport for ShmTransport {
+    fn backend(&self) -> &'static str {
+        "shm"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send_f32(&mut self, to: usize, data: &[f32]) -> Result<()> {
+        if self.closed {
+            return Err(anyhow!("rank {} endpoint is closed", self.rank));
+        }
+        let mut hdr = [0u8; 9];
+        hdr[0] = TAG_F32;
+        hdr[1..9].copy_from_slice(&((data.len() * 4) as u64).to_le_bytes());
+        self.write_all(to, &hdr)?;
+        self.write_all(to, &f32s_to_le_bytes(data))
+    }
+
+    fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {
+        let f = self
+            .recv_frame(from, None)?
+            .expect("blocking recv cannot time out");
+        expect_f32(f, from)
+    }
+
+    fn send_bytes(&mut self, to: usize, data: &[u8]) -> Result<()> {
+        self.send_frame(to, &Frame::Bytes(data.to_vec()))
+    }
+
+    fn recv_bytes(&mut self, from: usize) -> Result<Vec<u8>> {
+        let f = self
+            .recv_frame(from, None)?
+            .expect("blocking recv cannot time out");
+        expect_bytes(f, from)
+    }
+
+    fn recv_bytes_timeout(
+        &mut self,
+        from: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Vec<u8>>> {
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        match self.recv_frame(from, Some(deadline)) {
+            Ok(Some(f)) => expect_bytes(f, from).map(Some),
+            Ok(None) => Ok(None),
+            // A gone peer is "no answer" to a probe, like the other
+            // fabrics; the caller checks peer_closed to distinguish.
+            Err(_) => Ok(None),
+        }
+    }
+
+    fn peer_closed(&self, rank: usize) -> bool {
+        match self.inn.get(rank).and_then(|l| l.as_ref()) {
+            Some(ring) => ring.closed().load(Ordering::Acquire) != 0,
+            None => false,
+        }
+    }
+
+    fn close(&mut self) {
+        // Flag every outbound lane closed so peers blocked on us wake
+        // with PeerClosed once they drain. Ordering: any final tail
+        // store happened before this Release store.
+        self.closed = true;
+        for lane in self.out.iter().flatten() {
+            lane.closed().store(1, Ordering::Release);
+        }
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        self.close();
+        // Unlink our inbound lane files (mappings stay valid for any
+        // live peer); the last endpoint out removes the directory.
+        let mut dir = None;
+        for lane in self.inn.iter().flatten() {
+            dir = lane.path.parent().map(Path::to_path_buf);
+            let _ = std::fs::remove_file(&lane.path);
+        }
+        if let Some(d) = dir {
+            let _ = std::fs::remove_dir(&d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(world: usize) -> Vec<ShmTransport> {
+        ShmFabric::new(world).expect("shm fabric")
+    }
+
+    #[test]
+    fn frames_route_between_ranks_and_self() {
+        let mut eps = fabric(3);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert_eq!((a.rank(), b.rank(), c.rank()), (0, 1, 2));
+        assert_eq!(a.backend(), "shm");
+
+        a.send_f32(1, &[1.0, -0.0]).unwrap();
+        a.send_bytes(1, &[7]).unwrap();
+        c.send_f32(1, &[9.0]).unwrap();
+        assert_eq!(b.recv_f32(2).unwrap(), vec![9.0]);
+        let xs = b.recv_f32(0).unwrap();
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![7]);
+
+        b.send_bytes(1, &[1, 2]).unwrap();
+        assert_eq!(b.recv_bytes(1).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn type_mismatch_and_bad_rank_error() {
+        let mut eps = fabric(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[1]).unwrap();
+        assert!(b.recv_f32(0).is_err());
+        assert!(a.send_f32(5, &[1.0]).is_err());
+        assert!(a.recv_bytes(9).is_err());
+    }
+
+    #[test]
+    fn frames_larger_than_the_ring_stream_through() {
+        // 3 x LANE_CAP of payload must flow while the reader drains
+        // concurrently — the byte-stream framing, not frame-at-once.
+        let mut eps = fabric(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let big: Vec<f32> =
+            (0..(3 * LANE_CAP / 4)).map(|i| i as f32 * 0.5).collect();
+        let expect = big.clone();
+        let writer = std::thread::spawn(move || {
+            a.send_f32(1, &big).unwrap();
+            a
+        });
+        let got = b.recv_f32(0).unwrap();
+        writer.join().unwrap();
+        assert_eq!(got.len(), expect.len());
+        assert!(got
+            .iter()
+            .zip(&expect)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn close_wakes_blocked_peers_and_fails_later_sends() {
+        let mut eps = fabric(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let waiter = std::thread::spawn(move || a.recv_bytes(1));
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(waiter.join().unwrap().is_err(), "close must wake peers");
+        assert!(b.send_bytes(0, &[1]).is_err());
+    }
+
+    #[test]
+    fn queued_frames_survive_a_close() {
+        // Data published before close must drain before PeerClosed.
+        let mut eps = fabric(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[5, 6]).unwrap();
+        a.close();
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![5, 6]);
+        let err = b.recv_bytes(0).unwrap_err();
+        assert!(err.to_string().contains("closed"), "got: {err}");
+        assert!(b.peer_closed(0));
+    }
+
+    #[test]
+    fn recv_timeout_returns_none_on_silence_and_some_on_frames() {
+        let mut eps = fabric(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert_eq!(a.recv_bytes_timeout(1, 5).unwrap(), None);
+        b.send_bytes(0, &[42]).unwrap();
+        assert_eq!(a.recv_bytes_timeout(1, 1000).unwrap(), Some(vec![42]));
+        b.close();
+        assert_eq!(a.recv_bytes_timeout(1, 5).unwrap(), None);
+    }
+
+    #[test]
+    fn barrier_releases_all_ranks() {
+        let eps = fabric(4);
+        std::thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        ep.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn cross_process_style_attach_shares_the_lane_files() {
+        // Two endpoints attached separately (the worker path) see the
+        // same rings as fabric-constructed ones.
+        let dir = fresh_dir();
+        let mut a = ShmFabric::attach(&dir, 0, 2).unwrap();
+        let mut b = ShmFabric::attach(&dir, 1, 2).unwrap();
+        a.send_f32(1, &[3.5]).unwrap();
+        assert_eq!(b.recv_f32(0).unwrap(), vec![3.5]);
+        b.send_bytes(0, b"hi").unwrap();
+        assert_eq!(a.recv_bytes(1).unwrap(), b"hi".to_vec());
+    }
+
+    #[test]
+    fn partial_attach_only_reaches_named_peers() {
+        let dir = fresh_dir();
+        let t =
+            ShmTransport::attach_peers(&dir, 0, 3, &[0, 2]).unwrap();
+        assert!(t.has_lane(0) && t.has_lane(2) && !t.has_lane(1));
+        let mut t = t;
+        assert!(t.send_bytes(1, &[1]).is_err());
+    }
+}

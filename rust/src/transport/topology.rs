@@ -1,0 +1,199 @@
+//! Host topology: which physical host each rank lives on, and the
+//! locality-sorted ring order derived from it.
+//!
+//! A heterogeneous deployment typically packs several ranks per host;
+//! the intra-host fabric (shared memory, NVLink, PCIe) is an order of
+//! magnitude faster than the inter-host NIC. The ring collectives walk
+//! rank order, so an interleaved host map (h0, h1, h0, h1, ...) makes
+//! EVERY hop cross the slow fabric. [`HostTopology::ring_order`]
+//! permutes the ring so same-host ranks sit adjacent: exactly
+//! `num_hosts` of the N−1 hops cross hosts (one outbound edge per
+//! host), the rest stay local. The permutation is a pure function of
+//! the host map, so every rank derives the identical order with no
+//! extra coordination — and because the native backend's gradients
+//! live on the dyadic grid, f32 summation around ANY ring order is
+//! exactly associative, keeping the reorder bitwise-invisible
+//! (DESIGN.md invariant 10).
+
+/// Rank → host-id map for one fabric. Host ids are opaque `u64`s
+/// (`worker --host-id`, or hashes exchanged at rendezvous); equality
+/// is all that matters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostTopology {
+    hosts: Vec<u64>,
+}
+
+impl HostTopology {
+    /// Topology from an explicit rank → host map.
+    pub fn new(hosts: Vec<u64>) -> HostTopology {
+        assert!(!hosts.is_empty(), "topology needs at least one rank");
+        HostTopology { hosts }
+    }
+
+    /// Every rank on one host — the single-machine default.
+    pub fn single_host(world: usize) -> HostTopology {
+        HostTopology::new(vec![0; world])
+    }
+
+    /// Parse a comma-separated host map, e.g. `"0,0,1,1"`.
+    pub fn parse(spec: &str, world: usize) -> Result<HostTopology, String> {
+        let hosts: Vec<u64> = spec
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad host id '{t}' in '{spec}'"))
+            })
+            .collect::<Result<_, _>>()?;
+        if hosts.len() != world {
+            return Err(format!(
+                "host map '{spec}' names {} ranks, fabric has {world}",
+                hosts.len()
+            ));
+        }
+        Ok(HostTopology::new(hosts))
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// The host id rank `r` lives on.
+    pub fn host_of(&self, r: usize) -> u64 {
+        self.hosts[r]
+    }
+
+    /// The full rank → host map, e.g. for wire encoding.
+    pub fn hosts(&self) -> &[u64] {
+        &self.hosts
+    }
+
+    /// Whether two ranks share a host (the shm-routing predicate).
+    pub fn same_host(&self, a: usize, b: usize) -> bool {
+        self.hosts[a] == self.hosts[b]
+    }
+
+    /// Number of distinct hosts.
+    pub fn num_hosts(&self) -> usize {
+        let mut seen: Vec<u64> = Vec::new();
+        for &h in &self.hosts {
+            if !seen.contains(&h) {
+                seen.push(h);
+            }
+        }
+        seen.len()
+    }
+
+    /// The topology restricted to the first `k` ranks (elastic shrink
+    /// keeps memberships as canonical prefixes).
+    pub fn prefix(&self, k: usize) -> HostTopology {
+        assert!(k >= 1 && k <= self.hosts.len());
+        HostTopology::new(self.hosts[..k].to_vec())
+    }
+
+    /// Locality-sorted ring order over the first `group` ranks: hosts
+    /// appear in order of their first rank, all of a host's ranks
+    /// adjacent, ranks ascending within a host. Rank 0 is always
+    /// first, so single-host maps yield the identity order and the
+    /// schedule degrades to the classic ring. Deterministic: every
+    /// rank computes the same permutation from the shared map.
+    pub fn ring_order(&self, group: usize) -> Vec<usize> {
+        assert!(group >= 1 && group <= self.hosts.len());
+        let mut order = Vec::with_capacity(group);
+        let mut hosts_seen: Vec<u64> = Vec::new();
+        for r in 0..group {
+            let h = self.hosts[r];
+            if !hosts_seen.contains(&h) {
+                hosts_seen.push(h);
+                order.extend(
+                    (r..group).filter(|&s| self.hosts[s] == h),
+                );
+            }
+        }
+        order
+    }
+
+    /// Cross-host hops on the locality-sorted ring over the first
+    /// `group` ranks — `num_hosts` when several hosts participate
+    /// (each host has exactly one outbound cross edge), 0 otherwise.
+    pub fn cross_hops(&self, group: usize) -> usize {
+        let order = self.ring_order(group);
+        cross_edges(self, &order)
+    }
+}
+
+/// Cross-host edges of an arbitrary ring `order` (wraparound
+/// included). Public so tests can compare orders.
+pub fn cross_edges(topo: &HostTopology, order: &[usize]) -> usize {
+    if order.len() <= 1 {
+        return 0;
+    }
+    (0..order.len())
+        .filter(|&i| {
+            !topo.same_host(order[i], order[(i + 1) % order.len()])
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_host_is_the_identity_order() {
+        let t = HostTopology::single_host(5);
+        assert_eq!(t.ring_order(5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(t.ring_order(3), vec![0, 1, 2]);
+        assert_eq!(t.cross_hops(5), 0);
+        assert_eq!(t.num_hosts(), 1);
+        assert!(t.same_host(0, 4));
+    }
+
+    #[test]
+    fn interleaved_hosts_regroup_with_minimal_cross_edges() {
+        // h0: {0,2,4}, h1: {1,3,5} — the worst case for rank order
+        // (every hop crosses). Locality order groups each host.
+        let t = HostTopology::new(vec![0, 1, 0, 1, 0, 1]);
+        let order = t.ring_order(6);
+        assert_eq!(order, vec![0, 2, 4, 1, 3, 5]);
+        assert_eq!(cross_edges(&t, &order), 2);
+        // Identity order crosses on all six edges.
+        assert_eq!(cross_edges(&t, &[0, 1, 2, 3, 4, 5]), 6);
+        assert_eq!(t.cross_hops(6), t.num_hosts());
+    }
+
+    #[test]
+    fn order_is_a_permutation_and_rank0_leads() {
+        let t = HostTopology::new(vec![7, 3, 7, 9, 3, 9, 7]);
+        for group in 1..=7 {
+            let order = t.ring_order(group);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..group).collect::<Vec<_>>());
+            assert_eq!(order[0], 0, "rank 0 must lead the ring");
+            // All of a host's members are contiguous: one outbound
+            // cross edge per host (none on a single-host prefix).
+            let hosts = t.prefix(group).num_hosts();
+            assert_eq!(
+                cross_edges(&t, &order),
+                if hosts > 1 { hosts } else { 0 }
+            );
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_bad_specs() {
+        let t = HostTopology::parse("0, 0, 1", 3).unwrap();
+        assert_eq!(t.hosts(), &[0, 0, 1]);
+        assert!(HostTopology::parse("0,1", 3).is_err());
+        assert!(HostTopology::parse("0,x,1", 3).is_err());
+    }
+
+    #[test]
+    fn prefix_tracks_membership_shrink() {
+        let t = HostTopology::new(vec![0, 0, 1, 1]);
+        let p = t.prefix(2);
+        assert_eq!(p.num_hosts(), 1);
+        assert_eq!(p.ring_order(2), vec![0, 1]);
+    }
+}

@@ -126,6 +126,53 @@ fn session5(
     .expect("session starts on the 5-GPU cluster")
 }
 
+/// A hybrid-fabric session on the 3-GPU cluster under `hosts`.
+fn session_hybrid(hosts: Vec<u64>, shard_params: bool) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric: Some(FabricSpec::HybridThreads),
+        shard_params,
+        hosts: Some(hosts),
+        ..Default::default()
+    };
+    Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("hybrid session starts on the 3-GPU cluster")
+}
+
+/// A hybrid-fabric session on the 5-GPU cluster, optionally chaotic.
+fn session5_hybrid(
+    hosts: Vec<u64>,
+    shard_params: bool,
+    chaos: Option<&str>,
+) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric: Some(FabricSpec::HybridThreads),
+        shard_params,
+        hosts: Some(hosts),
+        chaos: chaos.map(String::from),
+        ..Default::default()
+    };
+    Session::new(
+        tiny5_cluster(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("hybrid session starts on the 5-GPU cluster")
+}
+
 fn reference() -> Trainer {
     // One worker, the whole batch, the whole state — same surrogate,
     // seed and corpus stream as every session engine.
@@ -408,6 +455,110 @@ fn unit_sharded_sessions_match_the_whole_gather_reference() {
     assert!(moved > 0, "churn never moved any unit-sharded weights");
     assert!(u_tcp.reports.iter().any(|r| r.from_cache));
     assert_eq!(u_tcp.steps_run(), churn.len() * STEPS_PER_EVENT);
+}
+
+#[test]
+fn shm_and_hybrid_sessions_match_the_reference_across_churn() {
+    // Tentpole acceptance (invariant 10, locality fabrics): the mmap
+    // ring fabric and the locality-routed hybrid fabric (ranks 0 and 2
+    // share a host; rank 1 is remote, so its hops ride the channel
+    // lane while 0<->2 rides shm) run the SAME churn as the tcp test —
+    // shrink, regrow, recur — and never leave the single-worker
+    // reference trajectory, leader-resident and fully-sharded.
+    for shard_params in [false, true] {
+        let mut shm =
+            session_with(Some(FabricSpec::ShmThreads), shard_params);
+        let mut hybrid = session_hybrid(vec![0, 1, 0], shard_params);
+        let mut inproc = session_with(None, shard_params);
+        let mut solo = reference();
+
+        assert_eq!(shm.backend_label(), "native+shm");
+        assert_eq!(hybrid.backend_label(), "native+hybrid");
+        assert_eq!(shm.params().unwrap(), solo.params());
+        assert_eq!(hybrid.params().unwrap(), solo.params());
+
+        let churn = [2usize, 3, 2];
+        for (hour, &size) in churn.iter().enumerate() {
+            let rs = shm.step_event(hour, size).unwrap();
+            let rh = hybrid.step_event(hour, size).unwrap();
+            let ri = inproc.step_event(hour, size).unwrap();
+            for _ in 0..STEPS_PER_EVENT {
+                let idx = solo.history.len();
+                solo.step(idx).unwrap();
+            }
+            assert_eq!(
+                shm.params().unwrap(),
+                solo.params(),
+                "shm session diverged after event {hour} (size {size}, \
+                 shard_params={shard_params})"
+            );
+            assert_eq!(
+                hybrid.params().unwrap(),
+                solo.params(),
+                "hybrid session diverged after event {hour} \
+                 (size {size}, shard_params={shard_params})"
+            );
+            // The lane split is invisible to the migration planner.
+            assert_eq!(rs.moved_state_elems, ri.moved_state_elems);
+            assert_eq!(rh.moved_state_elems, ri.moved_state_elems);
+        }
+        let moved: usize =
+            hybrid.reports.iter().map(|r| r.moved_state_elems).sum();
+        assert!(moved > 0, "churn never moved state over the fabrics");
+        assert!(hybrid.reports.iter().any(|r| r.from_cache));
+    }
+}
+
+#[test]
+fn chaotic_hybrid_session_survives_crashes_bitwise() {
+    // Invariant 12 over the locality fabric: a chaos-injected crash on
+    // a two-host hybrid mesh (the victim shares a host with a
+    // survivor, so its shm lanes die WITH its channel lanes) is
+    // detected, re-planned and mirror-restored — and the session still
+    // rides the reference trajectory bit for bit, ending equal to a
+    // fault-free run.
+    for shard_params in [false, true] {
+        let mut chaotic = session5_hybrid(
+            vec![0, 0, 0, 1, 1],
+            shard_params,
+            Some("seed=3,crash=1,first=1,stride=2,delay=0,dup=0"),
+        );
+        let mut graceful = session5(None, shard_params, None);
+        let mut solo = reference();
+        assert!(chaotic.fault_plan().is_some());
+        assert_eq!(chaotic.params().unwrap(), solo.params());
+
+        let events = 3;
+        for hour in 0..events {
+            chaotic.step_event(hour, 5).unwrap();
+            graceful.step_event(hour, 5).unwrap();
+            for _ in 0..STEPS_PER_EVENT {
+                let idx = solo.history.len();
+                solo.step(idx).unwrap();
+            }
+            assert_eq!(
+                chaotic.params().unwrap(),
+                solo.params(),
+                "chaotic hybrid session left the reference trajectory \
+                 after hour {hour} (shard_params={shard_params})"
+            );
+        }
+        assert_eq!(
+            chaotic.recoveries.len(),
+            1,
+            "expected one recovery for the scheduled crash \
+             (shard_params={shard_params}): {:?}",
+            chaotic.recoveries
+        );
+        assert_eq!(chaotic.recoveries[0].ranks, vec![4]);
+        assert_eq!(chaotic.steps_run(), graceful.steps_run());
+        assert_eq!(
+            chaotic.params().unwrap(),
+            graceful.params().unwrap(),
+            "hybrid crash recovery diverged from the fault-free \
+             session (shard_params={shard_params})"
+        );
+    }
 }
 
 #[test]

@@ -1,17 +1,21 @@
 //! Satellite: transport parity. The segmented ring collectives over a
-//! REAL message plane — in-process channels (`LocalTransport`) and
-//! loopback sockets (`TcpTransport`, threaded ranks) — are
-//! BITWISE-equal to the in-process `collectives::ring_*` and to the
-//! `direct_*` references, over uneven and zero-`r_i` layouts.
-//! DESIGN.md invariants 8/9 extended to the wire (invariant 10: the
-//! wire is bitwise-invisible).
+//! REAL message plane — in-process channels (`LocalTransport`),
+//! loopback sockets (`TcpTransport`, threaded ranks), /dev/shm ring
+//! lanes (`ShmTransport`) and the locality-routed composition
+//! (`HybridTransport`) — are BITWISE-equal to the in-process
+//! `collectives::ring_*` and to the `direct_*` references, over uneven
+//! and zero-`r_i` layouts. DESIGN.md invariants 8/9 extended to the
+//! wire (invariant 10: the wire — including which lane each hop takes
+//! and which order the ring walks — is bitwise-invisible).
 
 use cephalo::collectives as inproc;
 use cephalo::sharding::ShardLayout;
 use cephalo::testkit::{check, Gen};
+use cephalo::transport::collectives::RingOrder;
+use cephalo::transport::shm::fresh_dir;
 use cephalo::transport::{
     collectives as wire, ChaosConfig, ChaosTransport, CrashMode, FaultPlan,
-    LocalFabric, Transport,
+    HostTopology, HybridTransport, LocalFabric, ShmFabric, Transport,
 };
 
 fn bits(xs: &[f32]) -> Vec<u32> {
@@ -41,6 +45,37 @@ fn local_fabric(world: usize) -> Vec<Box<dyn Transport>> {
         .into_iter()
         .map(|e| Box::new(e) as Box<dyn Transport>)
         .collect()
+}
+
+fn shm_fabric(world: usize) -> Vec<Box<dyn Transport>> {
+    ShmFabric::new(world)
+        .expect("shm fabric")
+        .into_iter()
+        .map(|e| Box::new(e) as Box<dyn Transport>)
+        .collect()
+}
+
+/// Hybrid fabric under `topo`: same-host pairs ride fresh shm lanes,
+/// cross-host pairs the channel fabric.
+fn hybrid_fabric(topo: &HostTopology) -> Vec<Box<dyn Transport>> {
+    let dir = fresh_dir();
+    LocalFabric::new(topo.world_size())
+        .into_iter()
+        .map(|slow| {
+            Box::new(
+                HybridTransport::wrap(Box::new(slow), &dir, topo.clone())
+                    .expect("hybrid fabric"),
+            ) as Box<dyn Transport>
+        })
+        .collect()
+}
+
+/// A random host map over up to three hosts (covers all-same-host,
+/// all-distinct and mixed placements).
+fn random_topology(g: &mut Gen, world: usize) -> HostTopology {
+    HostTopology::new(
+        (0..world).map(|_| g.usize_in(0, 2) as u64).collect(),
+    )
 }
 
 /// Channel fabric with deterministic fault injection on every rank.
@@ -224,6 +259,145 @@ fn barrier_completes_under_delay_only_faults() {
         true
     });
     assert_eq!(done, vec![true; n]);
+}
+
+#[test]
+fn prop_shm_fabric_collectives_match_inprocess_bitwise() {
+    // The /dev/shm ring lanes are wire too: invariant 10 holds over
+    // mmap'd memory exactly as over channels and sockets.
+    check("wire-parity-shm", 30, |g| {
+        let n = g.usize_in(1, 5);
+        parity_case(g, shm_fabric(n));
+    });
+}
+
+#[test]
+fn prop_hybrid_fabric_collectives_match_inprocess_bitwise() {
+    // Random host maps: whichever lane each hop takes — shm for
+    // same-host pairs, the slow fabric across hosts — the collective
+    // result is bit-identical to the in-process reference.
+    check("wire-parity-hybrid", 20, |g| {
+        let n = g.usize_in(1, 5);
+        let topo = random_topology(g, n);
+        parity_case(g, hybrid_fabric(&topo));
+    });
+}
+
+#[test]
+fn prop_chaos_over_hybrid_is_bitwise_invisible() {
+    // The fault injector composes over the locality router: delay and
+    // duplicate injection on a mixed shm/channel mesh must not change
+    // a single bit.
+    check("wire-parity-hybrid-chaos", 12, |g| {
+        let n = g.usize_in(1, 4);
+        let topo = random_topology(g, n);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let plan = FaultPlan::generate(seed, n, &noise(0.3, 0.3));
+        let eps: Vec<Box<dyn Transport>> = hybrid_fabric(&topo)
+            .into_iter()
+            .map(|e| {
+                Box::new(ChaosTransport::new(e, &plan, CrashMode::Error))
+                    as Box<dyn Transport>
+            })
+            .collect();
+        parity_case(g, eps);
+    });
+}
+
+#[test]
+fn shm_lanes_preserve_fifo_self_send_and_barrier() {
+    // The point-to-point contract the collectives build on, exercised
+    // directly over mmap rings: per-pair FIFO, self-sends, per-source
+    // demultiplexing, and the gather-to-0 barrier.
+    let n = 3;
+    let done = run_ranks(shm_fabric(n), |t| {
+        let me = t.rank();
+        for to in 0..n {
+            t.send_bytes(to, &[me as u8, 1]).unwrap();
+            t.send_bytes(to, &[me as u8, 2]).unwrap();
+        }
+        t.send_f32(me, &[me as f32 * 0.5]).unwrap();
+        // Demux by source, FIFO within each source.
+        for from in (0..n).rev() {
+            assert_eq!(t.recv_bytes(from).unwrap(), vec![from as u8, 1]);
+            assert_eq!(t.recv_bytes(from).unwrap(), vec![from as u8, 2]);
+        }
+        assert_eq!(t.recv_f32(me).unwrap(), vec![me as f32 * 0.5]);
+        for _ in 0..3 {
+            t.barrier().unwrap();
+        }
+        true
+    });
+    assert_eq!(done, vec![true; n]);
+}
+
+#[test]
+fn prop_reordered_rings_are_bitwise_invisible() {
+    // The locality-sorted ring walks the ranks in topology order, not
+    // rank order. AllGather only moves bytes, so ANY order must be
+    // bitwise-equal to the classic ring; ReduceScatter re-associates
+    // the sum, so a reordered ring is run-over-run deterministic and
+    // tolerance-equal to the classic result, while the identity order
+    // collapses to the classic schedule exactly.
+    check("wire-parity-ordered", 25, |g| {
+        let n = g.usize_in(1, 5);
+        let topo = random_topology(g, n);
+        let order = RingOrder::from_topology(&topo, n);
+        let len = g.usize_in(0, 200);
+        let ratios =
+            if g.bool() { g.ratios(n) } else { g.sparse_ratios(n) };
+        let layout = ShardLayout::by_ratios(len, &ratios);
+        let shards: Vec<Vec<f32>> =
+            (0..n).map(|r| g.vec_f32(layout.size(r), 2.0)).collect();
+        let full: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(len, 2.0)).collect();
+        let expect_ag = inproc::ring_allgather(&shards, &layout);
+        let expect_rs = inproc::ring_reduce_scatter(&full, &layout);
+
+        let run = |eps: Vec<Box<dyn Transport>>, ord: RingOrder| {
+            let (shards, full, layout) = (&shards, &full, &layout);
+            run_ranks(eps, move |t| {
+                let r = t.rank();
+                let ag = wire::ring_allgather_ordered(
+                    t, &shards[r], layout, &ord,
+                )
+                .unwrap();
+                let rs = wire::ring_reduce_scatter_ordered(
+                    t, &full[r], layout, &ord,
+                )
+                .unwrap();
+                (ag, rs)
+            })
+        };
+        let got = run(hybrid_fabric(&topo), order.clone());
+        let again = run(local_fabric(n), order.clone());
+        let ident = run(local_fabric(n), RingOrder::identity(n));
+        for r in 0..n {
+            assert_eq!(
+                bits(&got[r].0),
+                bits(&expect_ag),
+                "rank {r} ordered allgather differs from classic"
+            );
+            // Reordered RS: deterministic across fabrics and runs...
+            assert_eq!(
+                bits(&got[r].1),
+                bits(&again[r].1),
+                "rank {r} ordered RS differs across fabrics"
+            );
+            // ...and numerically the same sum.
+            for (i, (a, b)) in
+                expect_rs[r].iter().zip(&got[r].1).enumerate()
+            {
+                assert!(
+                    (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                    "rank {r} elem {i}: classic {a} vs ordered {b}"
+                );
+            }
+            // The identity order IS the classic schedule, bit for bit.
+            assert_eq!(bits(&ident[r].0), bits(&expect_ag));
+            assert_eq!(bits(&ident[r].1), bits(&expect_rs[r]));
+        }
+    });
 }
 
 #[test]
