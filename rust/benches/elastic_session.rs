@@ -1,17 +1,44 @@
 //! Elastic-session bench: live steps/sec across a churn trace on the
-//! native backend, and the PlanCache payoff — cache-hit re-plans vs
-//! cold DP solves — measured through `benchkit`.
+//! native backend, the PlanCache payoff — cache-hit re-plans vs cold
+//! DP solves — and the span-tracer overhead (traced vs untraced
+//! session throughput must stay inside the perf-gate noise band).
 
 use std::sync::Arc;
 
-use cephalo::benchkit::Bencher;
+use cephalo::benchkit::{self, Bencher, RATE_NOISE_BAND};
 use cephalo::cluster::Cluster;
 use cephalo::coordinator::session::{Session, SessionConfig};
 use cephalo::coordinator::{elastic, Workload};
 use cephalo::plan::{CephaloPlanner, PlanCache, Planner};
+use cephalo::util::json::Json;
 use cephalo::util::tablefmt::Table;
 
+/// One live churn session on the in-process native backend; returns
+/// (wall steps/sec, events run). Tracing state is whatever the caller
+/// set — that is the variable under test.
+fn run_session(planner: &Arc<dyn Planner>, events: usize) -> (f64, usize) {
+    let cfg = SessionConfig {
+        batch: 64,
+        steps_per_event: 3,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut session =
+        Session::new(Cluster::cluster_a(), Arc::clone(planner), cfg)
+            .expect("session");
+    let t0 = std::time::Instant::now();
+    let reports = session.run(events).expect("live session");
+    let wall = t0.elapsed().as_secs_f64();
+    let steps = session.trainer().history.len();
+    (steps as f64 / wall, reports.len())
+}
+
 fn main() {
+    let (quick, json) = benchkit::bench_args();
+    // The session is cheap enough to run full-length even in --quick;
+    // shrinking the event count would also shrink the recurring
+    // memberships the cache-hit assertion depends on.
+    let events = 6;
     let mut b = Bencher::new(1, 7);
 
     // ---- Re-plan latency: cold solve vs recurring-membership hit ----
@@ -47,7 +74,7 @@ fn main() {
         })
         .mean_s;
 
-    // ---- Live session: steps/sec across a 6-event churn trace ----
+    // ---- Live session: steps/sec across a churn trace ----
     let planner: Arc<dyn Planner> = Arc::new(CephaloPlanner::default());
     let cfg = SessionConfig {
         batch: 64,
@@ -59,7 +86,7 @@ fn main() {
         Session::new(Cluster::cluster_a(), Arc::clone(&planner), cfg)
             .expect("session");
     let t0 = std::time::Instant::now();
-    let reports = session.run(6).expect("live session");
+    let reports = session.run(events).expect("live session");
     let wall = t0.elapsed().as_secs_f64();
 
     let mut t = Table::new(
@@ -79,13 +106,31 @@ fn main() {
     }
     println!("{}", t.render());
     let steps = session.trainer().history.len();
+    let untraced_sps = steps as f64 / wall;
     println!(
         "{steps} live steps over {} events in {wall:.2}s wall \
-         ({:.1} steps/s executed); plan cache {} hits / {} misses",
+         ({untraced_sps:.1} steps/s executed); plan cache {} hits / {} \
+         misses",
         reports.len(),
-        steps as f64 / wall,
         session.cache().hits(),
         session.cache().misses()
+    );
+    assert!(
+        session.cache().hits() >= 1,
+        "recurring memberships should hit the cache"
+    );
+    drop(session);
+
+    // ---- Tracer overhead: the same session with spans recording ----
+    cephalo::telemetry::reset();
+    cephalo::telemetry::enable();
+    let (traced_sps, _) = run_session(&planner, events);
+    cephalo::telemetry::drain();
+    let trace_events = cephalo::telemetry::take_events().len();
+    cephalo::telemetry::reset();
+    println!(
+        "tracer overhead: {untraced_sps:.1} steps/s untraced vs \
+         {traced_sps:.1} traced ({trace_events} events recorded)"
     );
     println!("{}", b.render_markdown("Elastic re-plan latency"));
 
@@ -94,8 +139,29 @@ fn main() {
         "cache hit ({hit:.6}s) should beat a cold solve ({cold:.6}s)"
     );
     assert!(
-        session.cache().hits() >= 1,
-        "recurring memberships should hit the cache"
+        traced_sps >= untraced_sps * (1.0 - RATE_NOISE_BAND),
+        "span tracing dragged the session out of the noise band: \
+         {traced_sps:.2} traced vs {untraced_sps:.2} untraced steps/s"
     );
-    println!("shape check: hit {hit:.2e}s < cold solve {cold:.2e}s  [ok]");
+    println!(
+        "shape check: hit {hit:.2e}s < cold solve {cold:.2e}s; traced \
+         within {RATE_NOISE_BAND} band  [ok]"
+    );
+
+    if let Some(path) = json {
+        use std::collections::BTreeMap;
+        let mut row = BTreeMap::new();
+        row.insert("case".to_string(),
+                   Json::Str("live_churn_session".into()));
+        row.insert("untraced_steps_per_sec".to_string(),
+                   Json::Num(untraced_sps));
+        row.insert("traced_steps_per_sec".to_string(),
+                   Json::Num(traced_sps));
+        row.insert("replan_cold_per_sec".to_string(),
+                   Json::Num(1.0 / cold.max(1e-12)));
+        row.insert("replan_cache_hit_per_sec".to_string(),
+                   Json::Num(1.0 / hit.max(1e-12)));
+        benchkit::write_json_rows(&path, "elastic_session", quick,
+                                  vec![Json::Obj(row)]);
+    }
 }

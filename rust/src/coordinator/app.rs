@@ -80,8 +80,68 @@ fn common_specs() -> Vec<OptSpec> {
         opt("model", "Table-2 model name", Some("BERT-Large")),
         opt("batch", "global batch size", Some("128")),
         opt("seed", "PRNG seed", Some("42")),
+        opt("log-level", "log threshold: error | warn | info | debug | \
+                          trace (defaults to the CEPHALO_LOG env var, \
+                          then info)", None),
         switch("help", "show usage"),
     ]
+}
+
+/// Apply `--log-level` (hard error if invalid) or the `CEPHALO_LOG`
+/// fallback before the command body runs.
+fn apply_log_level(a: &crate::cli::Args) -> Result<(), String> {
+    crate::logging::init_level(a.get("log-level")).map(|_| ())
+}
+
+/// `--trace-out`: switch the process-global span tracer on. The
+/// coordinator records as rank 0; spawned worker ranks get their own
+/// per-rank trace path forwarded by the driver.
+fn start_trace(a: &crate::cli::Args) -> Option<String> {
+    let path = a.get("trace-out").map(String::from)?;
+    crate::telemetry::enable();
+    crate::telemetry::set_rank(0);
+    Some(path)
+}
+
+/// Flush the tracer and write the Chrome trace-event JSON (Perfetto
+/// loads it directly), attaching fabric counters plus `extra` context
+/// to the trace metadata.
+fn finish_trace(
+    path: &str,
+    extra: &[(&str, crate::util::json::Json)],
+) -> Result<(), String> {
+    crate::telemetry::drain();
+    crate::telemetry::write_chrome_trace(std::path::Path::new(path), extra)
+        .map_err(|e| e.to_string())?;
+    crate::info!("trace written to {path}");
+    Ok(())
+}
+
+/// Session-report tail shared by `train --transport ...` and
+/// `elastic --live`: the planned-vs-measured skew table plus the
+/// non-zero fabric counters.
+fn print_skew_report(
+    planned: Option<&[f64]>,
+    timings: &[transport::RankTiming],
+) {
+    if timings.iter().any(|t| t.steps > 0) {
+        println!(
+            "{}",
+            crate::coordinator::report::skew_table(
+                planned.unwrap_or(&[]),
+                timings,
+            )
+        );
+    }
+    let counts = crate::telemetry::counters().snapshot();
+    let nonzero: Vec<String> = counts
+        .iter()
+        .filter(|(_, v)| **v > 0)
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    if !nonzero.is_empty() {
+        println!("fabric counters: {}", nonzero.join(" "));
+    }
 }
 
 fn resolve_cluster(name: &str) -> Result<Cluster, String> {
@@ -153,6 +213,7 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
         println!("{}", usage("cephalo optimize", "solve a workload", &specs));
         return Ok(());
     }
+    apply_log_level(&a)?;
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let w = Workload::prepare(
@@ -244,6 +305,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
                              &specs));
         return Ok(());
     }
+    apply_log_level(&a)?;
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let w = Workload::prepare(
@@ -296,6 +358,7 @@ fn cmd_plan(argv: &[String]) -> Result<(), String> {
                              "compare planning strategies", &specs));
         return Ok(());
     }
+    apply_log_level(&a)?;
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let batches: Vec<usize> = match a.get("batches") {
@@ -392,6 +455,10 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
                              implies --ft", None));
     specs.push(opt("chaos-log", "write the fault plan and recovery \
                                  timings as JSON here (--live)", None));
+    specs.push(opt("trace-out", "write a Chrome/Perfetto span trace of \
+                                 the session here; spawned worker ranks \
+                                 write <stem>.rankN.<ext> (--live)",
+                   None));
     let a = parse(argv, &specs)?;
     if a.has("help") {
         println!("{}", usage(
@@ -402,6 +469,7 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
         ));
         return Ok(());
     }
+    apply_log_level(&a)?;
     let cluster = resolve_cluster(a.get("cluster").unwrap())?;
     if cluster.num_gpus() < 2 {
         return Err("elastic demo needs at least 2 GPUs".into());
@@ -409,10 +477,11 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     if !a.has("live")
         && (a.has("ft")
             || a.get("chaos").is_some()
-            || a.get("chaos-log").is_some())
+            || a.get("chaos-log").is_some()
+            || a.get("trace-out").is_some())
     {
-        return Err("--ft / --chaos / --chaos-log apply to --live \
-                    sessions only"
+        return Err("--ft / --chaos / --chaos-log / --trace-out apply to \
+                    --live sessions only"
             .into());
     }
     if a.has("live") {
@@ -507,6 +576,7 @@ fn cmd_elastic_live(
     let planner = lookup_planner(&registry, a.get("planner").unwrap())?;
     let fabric = FabricSpec::parse(a.get("transport").unwrap())
         .map_err(|e| e.to_string())?;
+    let trace_out = start_trace(a);
     let cfg = SessionConfig {
         model: a.get("model").unwrap().to_string(),
         batch,
@@ -520,6 +590,7 @@ fn cmd_elastic_live(
         ft: a.has("ft"),
         chaos: a.get("chaos").map(String::from),
         hosts: parse_hosts(&a, cluster.num_gpus())?,
+        trace_out: trace_out.clone(),
         ..Default::default()
     };
     let cluster_name = cluster.name.clone();
@@ -580,9 +651,23 @@ fn cmd_elastic_live(
         }
         println!("{}", rt.render());
     }
+    if let Some(timings) = session.rank_timings() {
+        print_skew_report(
+            session.planned_rank_seconds().as_deref(),
+            &timings,
+        );
+    }
     if let Some(path) = a.get("chaos-log") {
         write_chaos_log(path, &session)?;
         println!("chaos log written to {path}");
+    }
+    if let Some(path) = &trace_out {
+        use crate::util::json::Json;
+        finish_trace(path, &[
+            ("command", Json::Str("elastic --live".into())),
+            ("backend", Json::Str(session.backend_label())),
+            ("events", Json::Num(reports.len() as f64)),
+        ])?;
     }
     session.save_plan_cache().map_err(|e| e.to_string())?;
     if let Some(p) = a.get("plan-cache") {
@@ -639,6 +724,7 @@ fn cmd_profile(argv: &[String]) -> Result<(), String> {
                              &specs));
         return Ok(());
     }
+    apply_log_level(&a)?;
     if a.has("real") {
         return profile_real(&a);
     }
@@ -731,6 +817,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
                    Some("artifacts")));
     specs.push(opt("log-every", "log cadence", Some("10")));
     specs.push(opt("loss-csv", "write the loss curve CSV here", None));
+    specs.push(opt("trace-out", "write a Chrome/Perfetto span trace of \
+                                 this run here; spawned worker ranks \
+                                 write <stem>.rankN.<ext>", None));
     let a = parse(argv, &specs)?;
     if a.has("help") {
         println!("{}", usage(
@@ -741,6 +830,8 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         ));
         return Ok(());
     }
+    apply_log_level(&a)?;
+    let trace_out = start_trace(&a);
     let mut cluster = resolve_cluster(a.get("cluster").unwrap())?;
     let batch = a.get_usize("batch").ok_or("bad --batch")?;
     let steps = a.get_usize("steps").ok_or("bad --steps")?;
@@ -845,6 +936,13 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         std::fs::write(path, csv).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    if let Some(path) = &trace_out {
+        use crate::util::json::Json;
+        finish_trace(path, &[
+            ("command", Json::Str("train".into())),
+            ("backend", Json::Str(trainer.executor_name().to_string())),
+        ])?;
+    }
     Ok(())
 }
 
@@ -897,6 +995,7 @@ fn train_distributed(
         ft: false,
         fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
         hosts: parse_hosts(a, world)?,
+        trace_out: a.get("trace-out").map(String::from),
     };
     let timer = StepTimeModel::from_oracle(&w.oracle, w.model.layers);
     let mut driver = DistDriver::launch(spec, world, dcfg, workers)
@@ -926,6 +1025,10 @@ fn train_distributed(
         spec.label(),
         driver.history.len()
     );
+    print_skew_report(
+        driver.planned_rank_seconds().as_deref(),
+        &driver.rank_timings(),
+    );
     if let Some(path) = a.get("loss-csv") {
         let mut csv = String::from("step,loss,wall_seconds\n");
         for s in &driver.history {
@@ -938,6 +1041,14 @@ fn train_distributed(
         println!("wrote {path}");
     }
     driver.shutdown();
+    if let Some(path) = a.get("trace-out") {
+        use crate::util::json::Json;
+        finish_trace(path, &[
+            ("command", Json::Str("train".into())),
+            ("transport", Json::Str(spec.label().to_string())),
+            ("world", Json::Num(world as f64)),
+        ])?;
+    }
     Ok(())
 }
 
@@ -964,6 +1075,11 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
         opt("chaos", "deterministic fault injection spec (forwarded by \
                       the coordinator; an injected crash aborts this \
                       process)", None),
+        opt("trace-out", "write this rank's Chrome/Perfetto span trace \
+                          here (forwarded per-rank by the coordinator's \
+                          --trace-out)", None),
+        opt("log-level", "log threshold: error | warn | info | debug | \
+                          trace (CEPHALO_LOG fallback)", None),
         switch("help", "show usage"),
     ];
     let a = parse(argv, &specs)?;
@@ -974,6 +1090,11 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             &specs,
         ));
         return Ok(());
+    }
+    apply_log_level(&a)?;
+    let trace_out = a.get("trace-out").map(String::from);
+    if trace_out.is_some() {
+        crate::telemetry::enable();
     }
     let rank = a.get_usize("rank").ok_or("--rank is required")?;
     let world = a.get_usize("world").ok_or("--world is required")?;
@@ -1011,7 +1132,7 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             )
         }
     };
-    match a.get("chaos") {
+    let result = match a.get("chaos") {
         Some(spec) => {
             let (seed, ccfg) =
                 ChaosConfig::parse(spec).map_err(|e| e.to_string())?;
@@ -1023,7 +1144,17 @@ fn cmd_worker(argv: &[String]) -> Result<(), String> {
             transport::worker_loop(Box::new(t)).map_err(|e| e.to_string())
         }
         None => transport::worker_loop(t).map_err(|e| e.to_string()),
+    };
+    if let Some(path) = &trace_out {
+        // Written on clean shutdown only; an Abort-mode chaos crash
+        // exits without flushing, exactly like a real kill -9.
+        use crate::util::json::Json;
+        finish_trace(path, &[
+            ("command", Json::Str("worker".into())),
+            ("rank", Json::Num(rank as f64)),
+        ])?;
     }
+    result
 }
 
 /// `bench-gate --baseline <json> --current <json> [--out <verdict>]`:
@@ -1423,6 +1554,64 @@ mod tests {
         for p in [&bp, &cp, &vp] {
             std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn log_level_flag_validates_and_applies() {
+        assert_eq!(
+            main_with_args(sv(&["optimize", "--cluster", "a", "--batch",
+                                "64", "--log-level", "bogus"])),
+            1
+        );
+        assert_eq!(
+            main_with_args(sv(&["optimize", "--cluster", "a", "--batch",
+                                "64", "--log-level", "warn"])),
+            0
+        );
+        assert_eq!(crate::logging::level(), crate::logging::Level::Warn);
+        crate::logging::set_level(crate::logging::Level::Info);
+    }
+
+    #[test]
+    fn trace_out_requires_a_live_elastic_session() {
+        assert_eq!(
+            main_with_args(sv(&["elastic", "--cluster", "a",
+                                "--trace-out", "unused.json"])),
+            1
+        );
+    }
+
+    #[test]
+    fn trace_out_writes_a_perfetto_trace() {
+        let _g = crate::telemetry::test_lock();
+        crate::telemetry::reset();
+        let path = std::env::temp_dir().join(format!(
+            "cephalo_cli_trace_{}.json",
+            std::process::id()
+        ));
+        let p = path.to_str().unwrap().to_string();
+        assert_eq!(
+            main_with_args(sv(&["train", "--transport", "local",
+                                "--workers", "2", "--cluster", "a",
+                                "--model", "BERT-Large", "--batch", "16",
+                                "--steps", "2", "--log-every", "0",
+                                "--trace-out", &p])),
+            0
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        crate::telemetry::reset();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let evs = j.field("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            evs.iter().any(|e| {
+                e.get("ph").and_then(|ph| ph.as_str()) == Some("X")
+            }),
+            "trace must contain complete spans"
+        );
+        let meta = j.field("metadata").unwrap();
+        assert!(meta.get("fabric_counters").is_some());
+        assert_eq!(meta.get("transport").unwrap().as_str(), Some("local"));
     }
 
     #[test]

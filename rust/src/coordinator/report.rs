@@ -66,6 +66,83 @@ pub fn outcome_cell(result: &Result<PlanOutcome, PlanError>) -> String {
     }
 }
 
+/// Planned-vs-measured per-rank skew table for a finished session.
+///
+/// `planned` is the cost model's per-step estimate for each rank (from
+/// `StepTimeModel::per_rank_seconds` over the final batch assignment);
+/// `timings` are the accumulated wire-reported measurements
+/// (`DistDriver::rank_timings`). Ranks with zero timed steps (standby
+/// or dead) print "-" in the measured columns. The slowest measured
+/// rank — the straggler the balancer should have flattened — is
+/// flagged with `*`.
+pub fn skew_table(
+    planned: &[f64],
+    timings: &[crate::transport::RankTiming],
+) -> String {
+    let mut t = crate::util::tablefmt::Table::new(
+        "planned vs measured step time (per rank)",
+        &[
+            "rank", "steps", "planned s", "measured s", "skew %",
+            "gather s", "compute s", "rs s", "wait s",
+        ],
+    );
+    let measured_mean = |rt: &crate::transport::RankTiming| {
+        if rt.steps == 0 {
+            None
+        } else {
+            Some(rt.measured_seconds / rt.steps as f64)
+        }
+    };
+    let straggler = timings
+        .iter()
+        .filter_map(|rt| measured_mean(rt).map(|m| (rt.rank, m)))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(r, _)| r);
+    for rt in timings {
+        let plan = planned.get(rt.rank).copied();
+        let (measured, skew, gather, compute, rs, wait) = match measured_mean(rt)
+        {
+            Some(m) => {
+                let n = rt.steps as f64;
+                (
+                    format!("{m:.4}"),
+                    match plan {
+                        Some(p) if p > 0.0 => {
+                            format!("{:+.1}", 100.0 * (m - p) / p)
+                        }
+                        _ => "-".to_string(),
+                    },
+                    format!("{:.4}", rt.phases.gather_s / n),
+                    format!("{:.4}", rt.phases.compute_s / n),
+                    format!("{:.4}", rt.phases.reduce_scatter_s / n),
+                    format!("{:.4}", rt.phases.overlap_wait_s / n),
+                )
+            }
+            None => (
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ),
+        };
+        let mark = if straggler == Some(rt.rank) { "*" } else { "" };
+        t.add_row(vec![
+            format!("{}{mark}", rt.rank),
+            rt.steps.to_string(),
+            plan.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
+            measured,
+            skew,
+            gather,
+            compute,
+            rs,
+            wait,
+        ]);
+    }
+    t.render()
+}
+
 /// Find one sweep cell by (planner, batch).
 pub fn find_cell<'a>(
     cells: &'a [SweepCell],
@@ -92,6 +169,39 @@ mod tests {
         assert_eq!(cell(&w, 128, SystemKind::Whale), "OOM");
         let c = cell(&w, 128, SystemKind::Cephalo);
         assert!(c.parse::<f64>().is_ok(), "{c}");
+    }
+
+    #[test]
+    fn skew_table_flags_straggler_and_handles_idle_ranks() {
+        use crate::telemetry::PhaseBreakdown;
+        use crate::transport::RankTiming;
+        let phases = PhaseBreakdown {
+            gather_s: 0.2,
+            compute_s: 0.6,
+            reduce_scatter_s: 0.2,
+            overlap_wait_s: 0.1,
+            optimizer_s: 0.05,
+        };
+        let timings = vec![
+            RankTiming { rank: 0, steps: 2, phases, measured_seconds: 2.0 },
+            RankTiming { rank: 1, steps: 2, phases, measured_seconds: 3.0 },
+            RankTiming {
+                rank: 2,
+                steps: 0,
+                phases: PhaseBreakdown::default(),
+                measured_seconds: 0.0,
+            },
+        ];
+        let table = skew_table(&[0.9, 1.0], &timings);
+        // Rank 1 is the slowest measured rank -> starred straggler.
+        assert!(table.contains("1*"), "{table}");
+        assert!(!table.contains("0*"), "{table}");
+        // Rank 0: measured mean 1.0 vs planned 0.9 -> +11.1% skew.
+        assert!(table.contains("+11.1"), "{table}");
+        // Rank 2 never stepped and has no planned entry -> dashes.
+        assert!(table.lines().any(|l| {
+            l.trim_start().starts_with('2') && l.matches('-').count() >= 6
+        }), "{table}");
     }
 
     #[test]

@@ -113,6 +113,11 @@ pub struct SessionConfig {
     /// lanes ride shm, rings walk a locality-sorted order. `None` =
     /// single host. Forwarded verbatim into [`DistConfig::hosts`].
     pub hosts: Option<Vec<u64>>,
+    /// Trace-output base path (`--trace-out`), forwarded into
+    /// [`DistConfig::trace_out`] so spawned worker processes write
+    /// per-rank traces. The coordinator's own trace file is written by
+    /// the CLI at exit.
+    pub trace_out: Option<String>,
 }
 
 impl Default for SessionConfig {
@@ -132,6 +137,7 @@ impl Default for SessionConfig {
             ft: false,
             chaos: None,
             hosts: None,
+            trace_out: None,
         }
     }
 }
@@ -365,6 +371,7 @@ impl Session {
                     fsdp_units: cfg.fsdp_units,
                     ft: cfg.ft || cfg.chaos.is_some(),
                     hosts: cfg.hosts.clone(),
+                    trace_out: cfg.trace_out.clone(),
                 };
                 let chaos = match &cfg.chaos {
                     Some(chaos_spec) => {
@@ -442,6 +449,8 @@ impl Session {
             self.cfg.seed,
             size,
         )?;
+        let sp =
+            crate::telemetry::span(crate::telemetry::CAT_REPLAN, "replan");
         let t_plan = Instant::now();
         let (re, names) = {
             let old_w = &self.workloads[&self.current_size];
@@ -464,6 +473,7 @@ impl Session {
             (re, names)
         };
         let replan_ms = t_plan.elapsed().as_secs_f64() * 1e3;
+        drop(sp);
 
         // Executed-scale migration: same r_i division, applied to the
         // engine's actual flat state. A recurring membership that
@@ -472,6 +482,8 @@ impl Session {
         // churn entirely.
         let unchanged = size == self.current_size
             && re.assignment == self.current_asg;
+        let sp =
+            crate::telemetry::span(crate::telemetry::CAT_MIGRATE, "migrate");
         let t_mig = Instant::now();
         let moved = if unchanged {
             0
@@ -551,6 +563,7 @@ impl Session {
             moved
         };
         let migrate_ms = t_mig.elapsed().as_secs_f64() * 1e3;
+        drop(sp);
         let stats = MigrationStats {
             from_cache: re.from_cache,
             solve_seconds: re.solve_seconds,
@@ -571,15 +584,20 @@ impl Session {
     /// with the mirror standing in for the corpse). No-op on
     /// in-process engines and non-ft drivers.
     fn recover_failures(&mut self, hour: usize) -> Result<()> {
+        let sp =
+            crate::telemetry::span(crate::telemetry::CAT_DETECT, "detect");
         let t_detect = Instant::now();
         let newly = match &mut self.engine {
             Engine::Dist(d) => d.poll_failures(),
             Engine::InProcess(_) => Vec::new(),
         };
+        drop(sp);
         if newly.is_empty() {
             return Ok(());
         }
         let detect_ms = t_detect.elapsed().as_secs_f64() * 1e3;
+        let _recover_sp =
+            crate::telemetry::span(crate::telemetry::CAT_RECOVER, "recover");
         for &d in &newly {
             if d == 0 {
                 return Err(anyhow!("coordinator rank cannot die"));
@@ -776,6 +794,26 @@ impl Session {
     /// The generated chaos schedule, when fault injection is on.
     pub fn fault_plan(&self) -> Option<&FaultPlan> {
         self.fault_plan.as_ref()
+    }
+
+    /// Per-rank measured timing folded by the distributed driver —
+    /// the measured side of the skew report. `None` for in-process
+    /// engines (one address space has no cross-rank skew to report).
+    pub fn rank_timings(&self) -> Option<Vec<crate::transport::RankTiming>> {
+        match &self.engine {
+            Engine::Dist(d) => Some(d.rank_timings()),
+            Engine::InProcess(_) => None,
+        }
+    }
+
+    /// Modeled per-rank step seconds for the CURRENT membership — the
+    /// planned side of the skew report. `None` for in-process engines
+    /// or drivers without a [`StepTimeModel`].
+    pub fn planned_rank_seconds(&self) -> Option<Vec<f64>> {
+        match &self.engine {
+            Engine::Dist(d) => d.planned_rank_seconds(),
+            Engine::InProcess(_) => None,
+        }
     }
 }
 

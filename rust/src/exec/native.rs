@@ -93,6 +93,18 @@ impl StepTimeModel {
         StepTimeModel { per_sample_seconds, fixed_seconds: 0.0 }
     }
 
+    /// Planned per-rank duration of one step: worker i's share costs
+    /// `b_i * per_sample_seconds[i]` plus the fixed collective term.
+    /// This is the PLANNED side of the coordinator's skew report —
+    /// compared against per-rank measured phase totals.
+    pub fn per_rank_seconds(&self, batches: &[usize]) -> Vec<f64> {
+        batches
+            .iter()
+            .zip(&self.per_sample_seconds)
+            .map(|(&b, &s)| b as f64 * s + self.fixed_seconds)
+            .collect()
+    }
+
     /// Simulated duration of one step with the given batch shares
     /// (workers are indexed against the model's GPU order; prefix
     /// memberships use a prefix of it).
@@ -274,6 +286,10 @@ impl StepExecutor for NativeExecutor {
         // One scoped thread per worker, joined in rank order so the f64
         // loss accumulation stays deterministic.
         let this: &NativeExecutor = self;
+        let sp = crate::telemetry::span(
+            crate::telemetry::CAT_COMPUTE,
+            "native step",
+        );
         let results: Vec<Result<(Vec<f32>, f64, f64)>> =
             std::thread::scope(|scope| {
                 parts
@@ -288,6 +304,7 @@ impl StepExecutor for NativeExecutor {
                     .map(|j| j.join().unwrap())
                     .collect()
             });
+        drop(sp);
         let mut worker_grads = Vec::with_capacity(parts.len());
         let mut loss_sum = 0f64;
         let mut token_count = 0f64;
@@ -364,6 +381,10 @@ impl StepExecutor for NativeExecutor {
         // Same worker-thread shape as `run_step`, joined in rank order
         // so the f64 loss stays deterministic.
         let this: &NativeExecutor = self;
+        let sp = crate::telemetry::span(
+            crate::telemetry::CAT_COMPUTE,
+            "native unit step",
+        );
         let results: Vec<Result<(Vec<f32>, Vec<f32>, f64)>> =
             std::thread::scope(|scope| {
                 parts
@@ -390,6 +411,7 @@ impl StepExecutor for NativeExecutor {
                     .map(|j| j.join().unwrap())
                     .collect()
             });
+        drop(sp);
         let mut worker_unit_grads = Vec::with_capacity(parts.len());
         let mut worker_tail_grads = Vec::with_capacity(parts.len());
         let mut loss_sum = 0f64;

@@ -71,6 +71,10 @@ impl StepExecutor for PjrtExecutor {
         handle.set_params(Arc::new(params.to_vec()))?;
         // Worker threads: microbatch loops with local accumulation,
         // funneling through the exec service's device queue.
+        let sp = crate::telemetry::span(
+            crate::telemetry::CAT_COMPUTE,
+            "pjrt step",
+        );
         let results: Vec<Result<(Vec<f32>, f64, f64)>> =
             std::thread::scope(|scope| {
                 let mut joins = Vec::new();
@@ -88,6 +92,7 @@ impl StepExecutor for PjrtExecutor {
                 }
                 joins.into_iter().map(|j| j.join().unwrap()).collect()
             });
+        drop(sp);
         let mut worker_grads = Vec::with_capacity(parts.len());
         let mut loss_sum = 0f64;
         let mut token_count = 0f64;

@@ -59,6 +59,7 @@ pub mod logging;
 pub mod memory;
 pub mod model;
 pub mod perfmodel;
+pub mod telemetry;
 pub mod testkit;
 pub mod util;
 

@@ -20,7 +20,58 @@ pub enum Level {
     Trace = 4,
 }
 
+impl Level {
+    /// Parse a CLI/env level name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for Level {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Level, String> {
+        Level::parse(s).ok_or_else(|| {
+            format!("unknown log level '{s}' (error|warn|info|debug|trace)")
+        })
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Resolve the effective level from an explicit `--log-level` value
+/// (takes precedence; invalid is a hard error) falling back to the
+/// `CEPHALO_LOG` environment variable (invalid is ignored with a
+/// warning — a bad env var should not kill a training job), then to
+/// the current default. Applies it via [`set_level`] and returns it.
+pub fn init_level(flag: Option<&str>) -> Result<Level, String> {
+    let l = match flag {
+        Some(s) => s.parse::<Level>()?,
+        None => match std::env::var("CEPHALO_LOG") {
+            Ok(env) => match Level::parse(&env) {
+                Some(l) => l,
+                None => {
+                    let cur = level();
+                    log(
+                        Level::Warn,
+                        format_args!("ignoring invalid CEPHALO_LOG='{env}'"),
+                    );
+                    cur
+                }
+            },
+            Err(_) => level(),
+        },
+    };
+    set_level(l);
+    Ok(l)
+}
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -124,10 +175,13 @@ impl MetricsRecorder {
         self.series.lock().unwrap().keys().cloned().collect()
     }
 
-    /// CSV: series,x,y per line.
+    /// CSV: series,x,y per line. Series names containing commas,
+    /// quotes, or newlines are quoted (RFC-4180 style) so per-rank
+    /// names like `rank 0, gather` can't shear the table.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("series,x,y\n");
         for (name, points) in self.series.lock().unwrap().iter() {
+            let name = escape_csv_field(name);
             for (x, y) in points {
                 out.push_str(&format!("{name},{x},{y}\n"));
             }
@@ -135,8 +189,84 @@ impl MetricsRecorder {
         out
     }
 
+    /// Fold another recorder's series into this one (per-rank
+    /// recorders → the session-level CSV). Same-named series append
+    /// in `other`'s point order.
+    pub fn merge(&self, other: &MetricsRecorder) {
+        let theirs = other.series.lock().unwrap();
+        let mut ours = self.series.lock().unwrap();
+        for (name, points) in theirs.iter() {
+            ours.entry(name.clone()).or_default().extend(points.iter().copied());
+        }
+    }
+
+    /// Parse [`to_csv`](Self::to_csv) output back (round-trip tests,
+    /// offline analysis). Rejects malformed rows.
+    pub fn from_csv(text: &str) -> Result<MetricsRecorder, String> {
+        let rec = MetricsRecorder::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 {
+                if line != "series,x,y" {
+                    return Err(format!("bad CSV header: '{line}'"));
+                }
+                continue;
+            }
+            if line.is_empty() {
+                continue;
+            }
+            let (name, rest) = parse_csv_field(line)
+                .ok_or_else(|| format!("line {}: bad series name", i + 1))?;
+            let mut nums = rest.splitn(2, ',');
+            let parse = |s: Option<&str>| {
+                s.and_then(|s| s.parse::<f64>().ok())
+                    .ok_or_else(|| format!("line {}: bad point", i + 1))
+            };
+            let x = parse(nums.next())?;
+            let y = parse(nums.next())?;
+            rec.record(&name, x, y);
+        }
+        Ok(rec)
+    }
+
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Quote a CSV field iff it contains a comma, quote, or newline;
+/// embedded quotes double per RFC 4180.
+fn escape_csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+    {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Split one CSV line into (first field unescaped, rest-after-comma).
+fn parse_csv_field(line: &str) -> Option<(String, &str)> {
+    if let Some(stripped) = line.strip_prefix('"') {
+        let mut name = String::new();
+        let mut chars = stripped.char_indices();
+        while let Some((_, c)) = chars.next() {
+            if c != '"' {
+                name.push(c);
+                continue;
+            }
+            return match chars.next() {
+                Some((_, '"')) => {
+                    name.push('"');
+                    continue;
+                }
+                Some((j, ',')) => Some((name, &stripped[j + 1..])),
+                _ => None,
+            };
+        }
+        None
+    } else {
+        let (name, rest) = line.split_once(',')?;
+        Some((name.to_string(), rest))
     }
 }
 
@@ -152,6 +282,48 @@ mod tests {
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn level_names_parse_case_insensitively() {
+        assert_eq!(Level::parse("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::parse("Warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse(" debug "), Some(Level::Debug));
+        assert_eq!(Level::parse("loud"), None);
+        assert!("error".parse::<Level>().is_ok());
+        assert!("nope".parse::<Level>().is_err());
+    }
+
+    #[test]
+    fn csv_escapes_hostile_series_names_and_round_trips() {
+        let m = MetricsRecorder::new();
+        m.record("rank 0, gather", 1.0, 2.0);
+        m.record("say \"go\"", 0.0, 1.5);
+        m.record("multi\nline", 3.0, 4.0);
+        m.record("plain", 5.0, 6.0);
+        let csv = m.to_csv();
+        assert!(csv.contains("\"rank 0, gather\",1,2\n"));
+        assert!(csv.contains("\"say \"\"go\"\"\",0,1.5\n"));
+        let back = MetricsRecorder::from_csv(&csv).expect("round trip");
+        for name in m.names() {
+            assert_eq!(back.get(&name), m.get(&name), "series '{name}'");
+        }
+        assert_eq!(back.names(), m.names());
+        assert!(MetricsRecorder::from_csv("nope\n").is_err());
+        assert!(MetricsRecorder::from_csv("series,x,y\nbad").is_err());
+    }
+
+    #[test]
+    fn merge_folds_per_rank_recorders() {
+        let session = MetricsRecorder::new();
+        session.record("loss", 0.0, 6.9);
+        let rank = MetricsRecorder::new();
+        rank.record("loss", 1.0, 6.5);
+        rank.record("rank1/gather_s", 0.0, 0.01);
+        session.merge(&rank);
+        assert_eq!(session.get("loss"), vec![(0.0, 6.9), (1.0, 6.5)]);
+        assert_eq!(session.get("rank1/gather_s").len(), 1);
     }
 
     #[test]

@@ -1,0 +1,713 @@
+//! Runtime telemetry: phase-level span tracing, per-lane fabric
+//! counters, and planned-vs-measured skew inputs — the observe side of
+//! Cephalo's observe→plan loop, zero-dependency like everything else.
+//!
+//! Three pieces:
+//!
+//! * **[`Tracer`]** — a process-global span tracer. Hot paths open
+//!   RAII [`Span`]s (categories below) or drop [`instant`] markers;
+//!   events land in THREAD-LOCAL buffers (one relaxed atomic load when
+//!   tracing is off, no lock when it is on) and drain into the global
+//!   sink at step boundaries ([`drain`]), on buffer overflow, or at
+//!   thread exit. [`write_chrome_trace`] renders the sink as Chrome
+//!   trace-event JSON — loadable in Perfetto / `chrome://tracing` —
+//!   with fabric-counter metadata attached.
+//! * **[`FabricCounters`]** — always-on relaxed atomics counting
+//!   bytes/frames per edge class (shm vs tcp), CRC failures, seq-dedup
+//!   drops, resends, heartbeats and liveness-probe RTT. Snapshotted
+//!   into session reports and trace metadata.
+//! * **[`PhaseBreakdown`]** — the per-step phase timing record
+//!   (gather / compute / reduce-scatter / overlap-wait / optimizer)
+//!   carried in `StepStats` and in the STEP wire reply, so the
+//!   coordinator can assemble a cross-rank timeline and a
+//!   planned-vs-measured skew report.
+//!
+//! **Invariant 14 (DESIGN.md): telemetry is bitwise-invisible.** Spans
+//! and counters only *read* clocks and *count* traffic; the phase
+//! fields ride the STEP reply UNCONDITIONALLY (the wire format does
+//! not depend on whether tracing is enabled), so a run with tracing
+//! on, off, or toggled mid-session produces bit-identical parameters.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+
+/// Span categories (the `cat` field in the exported trace).
+pub const CAT_GATHER: &str = "gather";
+pub const CAT_COMPUTE: &str = "compute";
+pub const CAT_REDUCE_SCATTER: &str = "reduce_scatter";
+pub const CAT_OVERLAP_WAIT: &str = "overlap_wait";
+pub const CAT_OPTIMIZER: &str = "optimizer";
+pub const CAT_MIGRATE: &str = "migrate";
+pub const CAT_REPLAN: &str = "replan";
+pub const CAT_DETECT: &str = "detect";
+pub const CAT_RECOVER: &str = "recover";
+/// Instant-event category for injected chaos faults.
+pub const CAT_FAULT: &str = "fault";
+/// Instant-event category for heartbeat / liveness suspicions.
+pub const CAT_SUSPECT: &str = "suspect";
+
+/// Trace "process" holding locally recorded spans (tid = rank).
+pub const PID_LOCAL: u32 = 0;
+/// Trace "process" holding the coordinator-assembled cross-rank step
+/// timeline (synthesized from the phase fields in STEP replies; kept
+/// on its own pid so it never partially overlaps rank-local spans).
+pub const PID_TIMELINE: u32 = 1;
+
+/// One trace event: a complete span (`dur_us: Some`) or an instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: String,
+    pub cat: &'static str,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    /// `Some(duration)` = complete span (ph "X"); `None` = instant.
+    pub dur_us: Option<f64>,
+    pub pid: u32,
+    /// Track id — the RANK that produced the event.
+    pub tid: u64,
+}
+
+/// Thread-local event buffer; drains to the global sink at step
+/// boundaries, when full, and (via `Drop`) at thread exit — so
+/// heartbeat/reader threads that never see a step boundary still
+/// surface their events.
+struct LocalBuf {
+    rank: u64,
+    events: Vec<Event>,
+}
+
+const LOCAL_FLUSH_AT: usize = 4096;
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.events.is_empty() {
+            if let Ok(mut sink) = tracer().sink.lock() {
+                sink.append(&mut self.events);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> =
+        RefCell::new(LocalBuf { rank: 0, events: Vec::new() });
+}
+
+/// The process-global tracer: an enabled flag plus the drained sink.
+pub struct Tracer {
+    enabled: AtomicBool,
+    sink: Mutex<Vec<Event>>,
+}
+
+static TRACER: Tracer =
+    Tracer { enabled: AtomicBool::new(false), sink: Mutex::new(Vec::new()) };
+
+/// The process-global [`Tracer`].
+pub fn tracer() -> &'static Tracer {
+    &TRACER
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (first telemetry call).
+pub fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+impl Tracer {
+    pub fn enable(&self) {
+        // Pin the epoch before the first span so timestamps are small.
+        let _ = epoch();
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    /// Whether span recording is on (one relaxed load — the entire
+    /// cost of a span site while tracing is off).
+    pub fn on(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    fn push(&self, e: Event) {
+        LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            l.events.push(e);
+            if l.events.len() >= LOCAL_FLUSH_AT {
+                let mut drained = std::mem::take(&mut l.events);
+                if let Ok(mut sink) = self.sink.lock() {
+                    sink.append(&mut drained);
+                }
+            }
+        });
+    }
+}
+
+/// Enable span recording process-wide.
+pub fn enable() {
+    tracer().enable();
+}
+
+/// Disable span recording (already-recorded events stay buffered).
+pub fn disable() {
+    tracer().disable();
+}
+
+/// Whether span recording is on.
+pub fn on() -> bool {
+    tracer().on()
+}
+
+/// Tag the CURRENT THREAD's events with `rank` (the trace `tid`).
+pub fn set_rank(rank: usize) {
+    LOCAL.with(|l| l.borrow_mut().rank = rank as u64);
+}
+
+/// Drain the current thread's buffer into the global sink — called at
+/// step boundaries so export sees everything without locking hot paths.
+pub fn drain() {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if !l.events.is_empty() {
+            let mut drained = std::mem::take(&mut l.events);
+            if let Ok(mut sink) = tracer().sink.lock() {
+                sink.append(&mut drained);
+            }
+        }
+    });
+}
+
+/// Steal every buffered event (current thread + global sink), sorted
+/// by timestamp. Used by export and tests; also resets the sink.
+pub fn take_events() -> Vec<Event> {
+    drain();
+    let mut events = match tracer().sink.lock() {
+        Ok(mut sink) => std::mem::take(&mut *sink),
+        Err(_) => Vec::new(),
+    };
+    events.sort_by(|a, b| {
+        a.ts_us.partial_cmp(&b.ts_us).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    events
+}
+
+/// Drop every buffered event and disable tracing — test isolation.
+pub fn reset() {
+    disable();
+    let _ = take_events();
+}
+
+/// An RAII span: records a complete ("X") event over its lifetime.
+/// Inert (and allocation-free) while tracing is off.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    inner: Option<(&'static str, String, f64)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((cat, name, start_us)) = self.inner.take() {
+            let (rank, dur) = (current_rank(), now_us() - start_us);
+            tracer().push(Event {
+                name,
+                cat,
+                ts_us: start_us,
+                dur_us: Some(dur),
+                pid: PID_LOCAL,
+                tid: rank,
+            });
+        }
+    }
+}
+
+fn current_rank() -> u64 {
+    LOCAL.with(|l| l.borrow().rank)
+}
+
+/// Open a span in `cat`; it closes (and records) when dropped.
+pub fn span(cat: &'static str, name: &str) -> Span {
+    if !on() {
+        return Span { inner: None };
+    }
+    Span { inner: Some((cat, name.to_string(), now_us())) }
+}
+
+/// Record an instant event (chaos faults, suspicions, marks).
+pub fn instant(cat: &'static str, name: &str) {
+    if !on() {
+        return;
+    }
+    tracer().push(Event {
+        name: name.to_string(),
+        cat,
+        ts_us: now_us(),
+        dur_us: None,
+        pid: PID_LOCAL,
+        tid: current_rank(),
+    });
+}
+
+/// Record a complete span with EXPLICIT coordinates — the coordinator
+/// uses this to lay out the cross-rank step timeline from the phase
+/// durations carried in STEP replies.
+pub fn complete_at(
+    cat: &'static str,
+    name: &str,
+    pid: u32,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+) {
+    if !on() {
+        return;
+    }
+    tracer().push(Event {
+        name: name.to_string(),
+        cat,
+        ts_us,
+        dur_us: Some(dur_us),
+        pid,
+        tid,
+    });
+}
+
+/// Per-step phase timings (seconds). Measured UNCONDITIONALLY — the
+/// STEP wire reply always carries these five fields, so enabling or
+/// disabling tracing can never change wire behavior (invariant 14).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub gather_s: f64,
+    pub compute_s: f64,
+    pub reduce_scatter_s: f64,
+    pub overlap_wait_s: f64,
+    pub optimizer_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub const WIRE_FIELDS: usize = 5;
+
+    /// Wire order of the five phase fields.
+    pub fn to_array(self) -> [f64; 5] {
+        [
+            self.gather_s,
+            self.compute_s,
+            self.reduce_scatter_s,
+            self.overlap_wait_s,
+            self.optimizer_s,
+        ]
+    }
+
+    pub fn from_array(a: [f64; 5]) -> PhaseBreakdown {
+        PhaseBreakdown {
+            gather_s: a[0],
+            compute_s: a[1],
+            reduce_scatter_s: a[2],
+            overlap_wait_s: a[3],
+            optimizer_s: a[4],
+        }
+    }
+
+    /// Sum of all phases (the accounted part of the step).
+    pub fn total_s(&self) -> f64 {
+        self.gather_s
+            + self.compute_s
+            + self.reduce_scatter_s
+            + self.overlap_wait_s
+            + self.optimizer_s
+    }
+
+    pub fn add(&mut self, other: &PhaseBreakdown) {
+        self.gather_s += other.gather_s;
+        self.compute_s += other.compute_s;
+        self.reduce_scatter_s += other.reduce_scatter_s;
+        self.overlap_wait_s += other.overlap_wait_s;
+        self.optimizer_s += other.optimizer_s;
+    }
+
+    /// `(category, seconds)` pairs in timeline order.
+    pub fn phases(&self) -> [(&'static str, f64); 5] {
+        [
+            (CAT_GATHER, self.gather_s),
+            (CAT_OVERLAP_WAIT, self.overlap_wait_s),
+            (CAT_COMPUTE, self.compute_s),
+            (CAT_REDUCE_SCATTER, self.reduce_scatter_s),
+            (CAT_OPTIMIZER, self.optimizer_s),
+        ]
+    }
+}
+
+/// Lay one rank's step phases onto the cross-rank timeline pid as
+/// back-to-back spans starting at `start_us`. No-op while tracing is
+/// off.
+pub fn emit_rank_step(
+    step: usize,
+    rank: usize,
+    start_us: f64,
+    p: &PhaseBreakdown,
+) {
+    if !on() {
+        return;
+    }
+    let mut at = start_us;
+    for (cat, secs) in p.phases() {
+        if secs <= 0.0 {
+            continue;
+        }
+        let dur = secs * 1e6;
+        complete_at(
+            cat,
+            &format!("step {step} {cat}"),
+            PID_TIMELINE,
+            rank as u64,
+            at,
+            dur,
+        );
+        at += dur;
+    }
+}
+
+/// Per-lane fabric counters: relaxed atomics, always on (counting is
+/// numerics-invisible and cheap), process-global — each worker
+/// process snapshots its own.
+pub struct FabricCounters {
+    pub tcp_bytes_sent: AtomicU64,
+    pub tcp_bytes_recv: AtomicU64,
+    pub tcp_frames_sent: AtomicU64,
+    pub tcp_frames_recv: AtomicU64,
+    pub shm_bytes_sent: AtomicU64,
+    pub shm_bytes_recv: AtomicU64,
+    pub shm_frames_sent: AtomicU64,
+    pub shm_frames_recv: AtomicU64,
+    /// Hybrid routing decisions per edge class.
+    pub hybrid_shm_routed: AtomicU64,
+    pub hybrid_tcp_routed: AtomicU64,
+    /// CRC-32 trailer mismatches (each one kills a lane).
+    pub crc_failures: AtomicU64,
+    /// Frames dropped by per-lane sequence dedup (duplicate injection,
+    /// retransmits).
+    pub seq_dedup_drops: AtomicU64,
+    /// `resend_last` retransmissions put on the wire.
+    pub resends: AtomicU64,
+    pub heartbeats_sent: AtomicU64,
+    pub heartbeats_recv: AtomicU64,
+    /// Last / max liveness-probe (PING→PONG) round trip, microseconds.
+    pub ping_rtt_us_last: AtomicU64,
+    pub ping_rtt_us_max: AtomicU64,
+    /// Liveness suspicions raised by the failure detector.
+    pub suspicions: AtomicU64,
+    /// Chaos faults fired (delay + dup + corrupt + crash).
+    pub chaos_faults: AtomicU64,
+}
+
+impl FabricCounters {
+    const fn new() -> FabricCounters {
+        FabricCounters {
+            tcp_bytes_sent: AtomicU64::new(0),
+            tcp_bytes_recv: AtomicU64::new(0),
+            tcp_frames_sent: AtomicU64::new(0),
+            tcp_frames_recv: AtomicU64::new(0),
+            shm_bytes_sent: AtomicU64::new(0),
+            shm_bytes_recv: AtomicU64::new(0),
+            shm_frames_sent: AtomicU64::new(0),
+            shm_frames_recv: AtomicU64::new(0),
+            hybrid_shm_routed: AtomicU64::new(0),
+            hybrid_tcp_routed: AtomicU64::new(0),
+            crc_failures: AtomicU64::new(0),
+            seq_dedup_drops: AtomicU64::new(0),
+            resends: AtomicU64::new(0),
+            heartbeats_sent: AtomicU64::new(0),
+            heartbeats_recv: AtomicU64::new(0),
+            ping_rtt_us_last: AtomicU64::new(0),
+            ping_rtt_us_max: AtomicU64::new(0),
+            suspicions: AtomicU64::new(0),
+            chaos_faults: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one liveness-probe round trip.
+    pub fn record_ping_rtt(&self, us: u64) {
+        self.ping_rtt_us_last.store(us, Ordering::Relaxed);
+        self.ping_rtt_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Name → value snapshot (deterministic order).
+    pub fn snapshot(&self) -> BTreeMap<&'static str, u64> {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &'static str, v: &AtomicU64| {
+            m.insert(k, v.load(Ordering::Relaxed));
+        };
+        put("tcp_bytes_sent", &self.tcp_bytes_sent);
+        put("tcp_bytes_recv", &self.tcp_bytes_recv);
+        put("tcp_frames_sent", &self.tcp_frames_sent);
+        put("tcp_frames_recv", &self.tcp_frames_recv);
+        put("shm_bytes_sent", &self.shm_bytes_sent);
+        put("shm_bytes_recv", &self.shm_bytes_recv);
+        put("shm_frames_sent", &self.shm_frames_sent);
+        put("shm_frames_recv", &self.shm_frames_recv);
+        put("hybrid_shm_routed", &self.hybrid_shm_routed);
+        put("hybrid_tcp_routed", &self.hybrid_tcp_routed);
+        put("crc_failures", &self.crc_failures);
+        put("seq_dedup_drops", &self.seq_dedup_drops);
+        put("resends", &self.resends);
+        put("heartbeats_sent", &self.heartbeats_sent);
+        put("heartbeats_recv", &self.heartbeats_recv);
+        put("ping_rtt_us_last", &self.ping_rtt_us_last);
+        put("ping_rtt_us_max", &self.ping_rtt_us_max);
+        put("suspicions", &self.suspicions);
+        put("chaos_faults", &self.chaos_faults);
+        m
+    }
+
+    /// The snapshot as a JSON object (trace metadata, session report).
+    pub fn to_json(&self) -> Json {
+        let m = self
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+            .collect();
+        Json::Obj(m)
+    }
+}
+
+static COUNTERS: FabricCounters = FabricCounters::new();
+
+/// The process-global fabric counters.
+pub fn counters() -> &'static FabricCounters {
+    &COUNTERS
+}
+
+/// Per-rank trace path for spawned worker processes:
+/// `trace.json` → `trace.rank3.json` (no extension: `trace.rank3`).
+pub fn rank_trace_path(base: &str, rank: usize) -> String {
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => {
+            format!("{stem}.rank{rank}.{ext}")
+        }
+        _ => format!("{base}.rank{rank}"),
+    }
+}
+
+/// Render every buffered event as Chrome trace-event JSON (the object
+/// form Perfetto loads directly), with fabric counters and
+/// `extra_metadata` attached, and write it to `path`. Consumes the
+/// buffered events.
+pub fn write_chrome_trace(
+    path: &Path,
+    extra_metadata: &[(&str, Json)],
+) -> Result<()> {
+    let events = take_events();
+    let mut tracks: BTreeSet<(u32, u64)> = BTreeSet::new();
+    for e in &events {
+        tracks.insert((e.pid, e.tid));
+    }
+    let mut arr: Vec<Json> = Vec::with_capacity(events.len() + 8);
+    for pid in [PID_LOCAL, PID_TIMELINE] {
+        if tracks.iter().any(|&(p, _)| p == pid) {
+            let label = if pid == PID_TIMELINE {
+                "cross-rank step timeline"
+            } else {
+                "rank-local spans"
+            };
+            arr.push(meta_event("process_name", pid, 0, label));
+        }
+    }
+    for &(pid, tid) in &tracks {
+        arr.push(meta_event("thread_name", pid, tid, &format!("rank {tid}")));
+    }
+    for e in &events {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(e.name.clone()));
+        o.insert("cat".into(), Json::Str(e.cat.to_string()));
+        o.insert("pid".into(), Json::Num(e.pid as f64));
+        o.insert("tid".into(), Json::Num(e.tid as f64));
+        o.insert("ts".into(), Json::Num(e.ts_us));
+        match e.dur_us {
+            Some(d) => {
+                o.insert("ph".into(), Json::Str("X".into()));
+                o.insert("dur".into(), Json::Num(d));
+            }
+            None => {
+                o.insert("ph".into(), Json::Str("i".into()));
+                o.insert("s".into(), Json::Str("t".into()));
+            }
+        }
+        arr.push(Json::Obj(o));
+    }
+    let mut meta = BTreeMap::new();
+    meta.insert("fabric_counters".to_string(), counters().to_json());
+    for (k, v) in extra_metadata {
+        meta.insert(k.to_string(), v.clone());
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(arr));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".into()));
+    root.insert("metadata".to_string(), Json::Obj(meta));
+    std::fs::write(path, Json::Obj(root).render())
+        .map_err(|e| anyhow!("writing trace to {}: {e}", path.display()))
+}
+
+fn meta_event(kind: &str, pid: u32, tid: u64, label: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(label.to_string()));
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(kind.to_string()));
+    o.insert("ph".into(), Json::Str("M".into()));
+    o.insert("pid".into(), Json::Num(pid as f64));
+    o.insert("tid".into(), Json::Num(tid as f64));
+    o.insert("args".into(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+/// The tracer is process-global: tests anywhere in the crate that
+/// enable/drain it (here and in `coordinator::app`) must serialize on
+/// this lock or they steal each other's events.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn spans_are_inert_while_disabled() {
+        let _g = lock();
+        reset();
+        {
+            let s = span(CAT_GATHER, "quiet");
+            assert!(s.inner.is_none());
+        }
+        instant(CAT_FAULT, "quiet");
+        assert!(take_events().is_empty());
+    }
+
+    #[test]
+    fn spans_and_instants_round_trip_with_rank_tids() {
+        let _g = lock();
+        reset();
+        enable();
+        set_rank(3);
+        {
+            let _outer = span(CAT_COMPUTE, "outer");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        instant(CAT_FAULT, "crash r3 s1");
+        disable();
+        let events = take_events();
+        assert_eq!(events.len(), 2);
+        let sp = events.iter().find(|e| e.dur_us.is_some()).unwrap();
+        assert_eq!((sp.cat, sp.tid), (CAT_COMPUTE, 3));
+        assert!(sp.dur_us.unwrap() >= 500.0, "slept ≥ 1ms: {sp:?}");
+        let inst = events.iter().find(|e| e.dur_us.is_none()).unwrap();
+        assert_eq!((inst.cat, inst.name.as_str()), (CAT_FAULT, "crash r3 s1"));
+        set_rank(0);
+    }
+
+    #[test]
+    fn chrome_trace_exports_parseable_nested_json() {
+        let _g = lock();
+        reset();
+        enable();
+        set_rank(1);
+        {
+            let _s = span(CAT_GATHER, "ag");
+        }
+        emit_rank_step(
+            7,
+            2,
+            100.0,
+            &PhaseBreakdown {
+                gather_s: 1e-6,
+                compute_s: 2e-6,
+                reduce_scatter_s: 1e-6,
+                overlap_wait_s: 0.0,
+                optimizer_s: 1e-6,
+            },
+        );
+        disable();
+        let dir = std::env::temp_dir()
+            .join(format!("cephalo-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.json");
+        write_chrome_trace(&path, &[("backend", Json::Str("test".into()))])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let evs = j.field("traceEvents").unwrap().as_arr().unwrap();
+        // Metadata events + the real span + 4 non-zero phases.
+        let xs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 5);
+        // Timeline spans are back to back on pid 1, tid 2.
+        let timeline: Vec<&&Json> = xs
+            .iter()
+            .filter(|e| e.get("pid").unwrap().as_f64() == Some(1.0))
+            .collect();
+        assert_eq!(timeline.len(), 4);
+        assert!(timeline
+            .iter()
+            .all(|e| e.get("tid").unwrap().as_f64() == Some(2.0)));
+        let meta = j.field("metadata").unwrap();
+        assert!(meta.get("fabric_counters").is_some());
+        assert_eq!(meta.get("backend").unwrap().as_str(), Some("test"));
+        std::fs::remove_dir_all(&dir).ok();
+        set_rank(0);
+    }
+
+    #[test]
+    fn phase_breakdown_wire_array_round_trips() {
+        let p = PhaseBreakdown {
+            gather_s: 1.0,
+            compute_s: 2.0,
+            reduce_scatter_s: 3.0,
+            overlap_wait_s: 4.0,
+            optimizer_s: 5.0,
+        };
+        assert_eq!(PhaseBreakdown::from_array(p.to_array()), p);
+        assert_eq!(p.total_s(), 15.0);
+        let mut acc = PhaseBreakdown::default();
+        acc.add(&p);
+        acc.add(&p);
+        assert_eq!(acc.gather_s, 2.0);
+    }
+
+    #[test]
+    fn counters_snapshot_and_rtt() {
+        counters().crc_failures.fetch_add(2, Ordering::Relaxed);
+        counters().record_ping_rtt(120);
+        counters().record_ping_rtt(80);
+        let snap = counters().snapshot();
+        assert!(snap["crc_failures"] >= 2);
+        assert_eq!(snap["ping_rtt_us_last"], 80);
+        assert!(snap["ping_rtt_us_max"] >= 120);
+        let j = counters().to_json();
+        assert!(j.get("tcp_bytes_sent").is_some());
+    }
+
+    #[test]
+    fn rank_trace_paths_suffix_before_the_extension() {
+        assert_eq!(rank_trace_path("trace.json", 2), "trace.rank2.json");
+        assert_eq!(rank_trace_path("out/t.json", 1), "out/t.rank1.json");
+        assert_eq!(rank_trace_path("trace", 3), "trace.rank3");
+    }
+}

@@ -49,6 +49,7 @@ use crate::exec::StepExecutor;
 use crate::optimizer::Assignment;
 use crate::runtime::Manifest;
 use crate::sharding::{ShardLayout, UnitLayout};
+use crate::telemetry::{self, PhaseBreakdown};
 use crate::util::error::{anyhow, Result};
 use adam::{AdamConfig, AdamShard};
 use comm::{CollectiveEngine, InProcessRing};
@@ -119,6 +120,12 @@ pub struct StepStats {
     /// attached timing model — kept separate so simulated steps/sec
     /// and executed steps/sec can never be conflated.
     pub measured_seconds: f64,
+    /// Per-phase wall breakdown of `measured_seconds` (gather /
+    /// compute / reduce-scatter / overlap-wait / optimizer). Measured
+    /// UNCONDITIONALLY — on the wire this rides every STEP reply
+    /// whether or not tracing is on, so telemetry can never change
+    /// wire behavior (DESIGN.md invariant 14).
+    pub phases: crate::telemetry::PhaseBreakdown,
 }
 
 /// Where the fp32 weights live between steps.
@@ -350,9 +357,14 @@ impl Trainer {
         // gather overwrites every element), bitwise the vector the
         // leader path carried over from the previous step's tail
         // AllGather.
+        let mut phases = PhaseBreakdown::default();
         let use_gather = matches!(self.params, ParamStore::Sharded(_));
         if let ParamStore::Sharded(shards) = &self.params {
+            let tg = std::time::Instant::now();
+            let sp = telemetry::span(telemetry::CAT_GATHER, "param allgather");
             let flat = self.comm.allgather(shards, &self.layout)?;
+            drop(sp);
+            phases.gather_s += tg.elapsed().as_secs_f64();
             self.peak_param_elems = self.peak_param_elems.max(flat.len());
             unflatten_into(&flat, &self.sizes, &mut self.gather);
         }
@@ -366,7 +378,9 @@ impl Trainer {
         };
 
         // Backend: per-worker batch shares -> per-worker summed grads.
+        let tc = std::time::Instant::now();
         let out = self.exec.run_step(full, &parts)?;
+        phases.compute_s += tc.elapsed().as_secs_f64();
         if out.worker_grads.len() != self.workers.len() {
             return Err(anyhow!(
                 "backend returned {} gradient sets for {} workers",
@@ -382,8 +396,13 @@ impl Trainer {
         // (through the collective engine — in-process rings or a real
         // transport fabric), then the Eq.-1 scale by 1/(global token
         // count).
+        let tr = std::time::Instant::now();
+        let sp =
+            telemetry::span(telemetry::CAT_REDUCE_SCATTER, "grad rs");
         let mut grad_shards =
             self.comm.reduce_scatter(&out.worker_grads, &self.layout)?;
+        drop(sp);
+        phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
         let inv = 1.0 / out.token_count as f32;
         for shard in grad_shards.iter_mut() {
             for g in shard.iter_mut() {
@@ -399,6 +418,11 @@ impl Trainer {
                 // all ranks (leader keeps one canonical copy).
                 let flat_len: usize = self.sizes.iter().sum();
                 let mut flat = flatten(params, flat_len);
+                let ta = std::time::Instant::now();
+                let sp = telemetry::span(
+                    telemetry::CAT_OPTIMIZER,
+                    "sharded adam",
+                );
                 {
                     let layout = &self.layout;
                     let mut param_slices: Vec<&mut [f32]> = Vec::new();
@@ -423,17 +447,31 @@ impl Trainer {
                         }
                     });
                 }
+                drop(sp);
+                phases.optimizer_s += ta.elapsed().as_secs_f64();
                 let shard_views: Vec<Vec<f32>> = (0..self.workers.len())
                     .map(|r| flat[self.layout.range(r)].to_vec())
                     .collect();
+                let tg = std::time::Instant::now();
+                let sp = telemetry::span(
+                    telemetry::CAT_GATHER,
+                    "tail allgather",
+                );
                 let rebuilt =
                     self.comm.allgather(&shard_views, &self.layout)?;
+                drop(sp);
+                phases.gather_s += tg.elapsed().as_secs_f64();
                 *params = unflatten(&rebuilt, &self.sizes);
             }
             ParamStore::Sharded(shards) => {
                 // Fully sharded: each rank updates its own resident
                 // slice in place; no tail AllGather, no full copy — the
                 // materialized weights drop at the end of this step.
+                let ta = std::time::Instant::now();
+                let sp = telemetry::span(
+                    telemetry::CAT_OPTIMIZER,
+                    "sharded adam",
+                );
                 std::thread::scope(|scope| {
                     for ((shard, grads), pshard) in self
                         .shards
@@ -444,6 +482,8 @@ impl Trainer {
                         scope.spawn(move || shard.update(pshard, grads));
                     }
                 });
+                drop(sp);
+                phases.optimizer_s += ta.elapsed().as_secs_f64();
             }
         }
 
@@ -454,7 +494,9 @@ impl Trainer {
             tokens: out.token_count,
             wall_seconds: self.exec.step_seconds(&batches, measured),
             measured_seconds: measured,
+            phases,
         };
+        telemetry::drain();
         self.history.push(stats.clone());
         Ok(stats)
     }
@@ -490,6 +532,7 @@ impl Trainer {
 
         let mut loss_sum = 0f64;
         let mut peak = 0usize;
+        let mut phases = PhaseBreakdown::default();
         // One per-rank gradient shard list PER UNIT, in unit order.
         let mut unit_grad_shards: Vec<Vec<Vec<f32>>> =
             Vec::with_capacity(nu);
@@ -506,6 +549,9 @@ impl Trainer {
             // The tail (e.g. the native surrogate's bias) stays
             // materialized across every unit; its per-unit partial
             // gradients sum exactly (dyadic grid).
+            let tg = std::time::Instant::now();
+            let sp =
+                telemetry::span(telemetry::CAT_GATHER, "tail+unit0 ag");
             let tail: Vec<f32> = if tail_is_unit {
                 self.comm.allgather_unit(
                     pshards,
@@ -524,6 +570,8 @@ impl Trainer {
                 ul,
                 0,
             )?;
+            drop(sp);
+            phases.gather_s += tg.elapsed().as_secs_f64();
             for k in 0..table_units {
                 // Prefetch unit k+1 before computing unit k — the
                 // in-process schedule mirrors the wire overlap
@@ -531,12 +579,20 @@ impl Trainer {
                 // compute chunks), so the transient peak holds TWO
                 // units plus the tail.
                 let next = if k + 1 < table_units {
-                    Some(self.comm.allgather_unit(
+                    let tg = std::time::Instant::now();
+                    let sp = telemetry::span(
+                        telemetry::CAT_GATHER,
+                        "prefetch unit ag",
+                    );
+                    let g = self.comm.allgather_unit(
                         pshards,
                         &self.layout,
                         ul,
                         k + 1,
-                    )?)
+                    )?;
+                    drop(sp);
+                    phases.gather_s += tg.elapsed().as_secs_f64();
+                    Some(g)
                 } else {
                     None
                 };
@@ -545,12 +601,14 @@ impl Trainer {
                         + current.len()
                         + next.as_ref().map_or(0, Vec::len),
                 );
+                let tc = std::time::Instant::now();
                 let out = self.exec.run_unit_step(
                     ul.unit_range(k),
                     &current,
                     &tail,
                     parts,
                 )?;
+                phases.compute_s += tc.elapsed().as_secs_f64();
                 if out.worker_unit_grads.len() != n
                     || out.worker_tail_grads.len() != n
                 {
@@ -571,17 +629,31 @@ impl Trainer {
                 // Unit k is done: free its weights, reduce-scatter its
                 // gradients onto the owning ranks.
                 drop(current);
+                let tr = std::time::Instant::now();
+                let sp = telemetry::span(
+                    telemetry::CAT_REDUCE_SCATTER,
+                    "unit rs",
+                );
                 unit_grad_shards.push(self.comm.reduce_scatter(
                     &out.worker_unit_grads,
                     ul.unit_layout(k),
                 )?);
+                drop(sp);
+                phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
                 current = next.unwrap_or_default();
             }
             if tail_is_unit {
+                let tr = std::time::Instant::now();
+                let sp = telemetry::span(
+                    telemetry::CAT_REDUCE_SCATTER,
+                    "tail rs",
+                );
                 unit_grad_shards.push(self.comm.reduce_scatter(
                     &tail_acc,
                     ul.unit_layout(nu - 1),
                 )?);
+                drop(sp);
+                phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
             }
         }
 
@@ -603,6 +675,8 @@ impl Trainer {
             .collect();
 
         // Sharded Adam in place, exactly like the whole-gather path.
+        let ta = std::time::Instant::now();
+        let sp = telemetry::span(telemetry::CAT_OPTIMIZER, "sharded adam");
         if let ParamStore::Sharded(shards) = &mut self.params {
             std::thread::scope(|scope| {
                 for ((shard, grads), pshard) in self
@@ -615,6 +689,8 @@ impl Trainer {
                 }
             });
         }
+        drop(sp);
+        phases.optimizer_s += ta.elapsed().as_secs_f64();
         self.peak_param_elems = self.peak_param_elems.max(peak);
 
         let measured = t0.elapsed().as_secs_f64();
@@ -624,7 +700,9 @@ impl Trainer {
             tokens: token_count,
             wall_seconds: self.exec.step_seconds(batches, measured),
             measured_seconds: measured,
+            phases,
         };
+        telemetry::drain();
         self.history.push(stats.clone());
         Ok(stats)
     }

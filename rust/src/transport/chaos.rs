@@ -311,6 +311,24 @@ impl<T: Transport> ChaosTransport<T> {
         self.inner
     }
 
+    /// Tally a fired fault and, when tracing, drop an instant event on
+    /// the timeline. Step-keyed faults encode `s{step}` so trace tests
+    /// can match instants against the seeded plan.
+    fn record_fault(&self, kind: &str, step: Option<u64>) {
+        use std::sync::atomic::Ordering;
+        crate::telemetry::counters()
+            .chaos_faults
+            .fetch_add(1, Ordering::Relaxed);
+        if crate::telemetry::on() {
+            let rank = self.inner.rank();
+            let name = match step {
+                Some(s) => format!("{kind} r{rank} s{s}"),
+                None => format!("{kind} r{rank}"),
+            };
+            crate::telemetry::instant(crate::telemetry::CAT_FAULT, &name);
+        }
+    }
+
     fn maybe_delay(&mut self) {
         if self.faults.delay_prob > 0.0
             && self.rng.bool(self.faults.delay_prob)
@@ -319,6 +337,7 @@ impl<T: Transport> ChaosTransport<T> {
                 .rng
                 .range(0, self.faults.max_delay_ms as usize + 1);
             if ms > 0 {
+                self.record_fault("delay", None);
                 std::thread::sleep(std::time::Duration::from_millis(
                     ms as u64,
                 ));
@@ -330,11 +349,13 @@ impl<T: Transport> ChaosTransport<T> {
         if self.faults.dup_prob > 0.0 && self.rng.bool(self.faults.dup_prob) {
             // Best effort: a failed duplicate is still a duplicate
             // fault (the original went through).
+            self.record_fault("dup", None);
             let _ = self.inner.resend_last(to);
         }
     }
 
     fn crash(&mut self) -> crate::util::error::Error {
+        self.record_fault("crash", Some(self.armed_at_step));
         if self.mode == CrashMode::Abort {
             // Simulated kill -9: no unwinding, no socket teardown
             // beyond what the OS does for a dead process.
@@ -406,6 +427,7 @@ impl<T: Transport> Transport for ChaosTransport<T> {
             // coordinator's CRC check converts this into a dead-rank
             // verdict at a clean step boundary.
             self.corrupt_armed = false;
+            self.record_fault("corrupt", None);
             self.inner.corrupt_next_send(0);
         }
         self.inner.send_bytes(to, data)?;

@@ -51,6 +51,7 @@ use crate::coordinator::elastic::Transfer;
 use crate::exec::native::MAX_STEP_TOKENS;
 use crate::exec::{NativeExecutor, StepExecutor, StepTimeModel, SurrogateSpec};
 use crate::sharding::{ShardLayout, UnitLayout};
+use crate::telemetry::{self, PhaseBreakdown};
 use crate::trainer::adam::{AdamConfig, AdamShard};
 use crate::trainer::data::{split_batch, Corpus};
 use crate::trainer::{
@@ -163,6 +164,11 @@ pub struct DistConfig {
     /// associative — so the trajectory stays BITWISE the
     /// identity-order one (DESIGN.md invariant 10).
     pub hosts: Option<Vec<u64>>,
+    /// Trace-output base path (`--trace-out`). Coordinator-side only —
+    /// NOT wire-encoded: spawned worker processes receive their
+    /// per-rank path ([`telemetry::rank_trace_path`]) as a CLI flag,
+    /// and thread workers share the coordinator's process tracer.
+    pub trace_out: Option<String>,
 }
 
 impl Default for DistConfig {
@@ -176,6 +182,7 @@ impl Default for DistConfig {
             ft: false,
             fsdp_units: 1,
             hosts: None,
+            trace_out: None,
         }
     }
 }
@@ -358,6 +365,7 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
             ft,
             fsdp_units,
             hosts,
+            trace_out: None,
         },
         membership,
     ))
@@ -468,6 +476,19 @@ fn hybrid_topology(cfg: &DistConfig, world: usize) -> Result<HostTopology> {
             Ok(HostTopology::new(h.clone()))
         }
         None => Ok(HostTopology::single_host(world)),
+    }
+}
+
+/// Per-rank `--trace-out` args for a spawned worker process: each rank
+/// writes its own trace file ([`telemetry::rank_trace_path`]); empty
+/// when tracing was not requested.
+fn trace_args(cfg: &DistConfig, rank: usize) -> Vec<String> {
+    match &cfg.trace_out {
+        Some(base) => vec![
+            "--trace-out".into(),
+            telemetry::rank_trace_path(base, rank),
+        ],
+        None => Vec::new(),
     }
 }
 
@@ -586,6 +607,9 @@ pub struct DistRank {
     /// ABI-shaped materialized-weights buffer for the whole-gather
     /// path, reused across steps.
     full_scratch: Vec<Vec<f32>>,
+    /// Phase timings of the most recent step, measured UNCONDITIONALLY
+    /// (they ride the STEP wire reply — invariant 14).
+    last_phases: PhaseBreakdown,
 }
 
 impl DistRank {
@@ -652,6 +676,7 @@ impl DistRank {
             mirror,
             scratch: Vec::new(),
             full_scratch: Vec::new(),
+            last_phases: PhaseBreakdown::default(),
         })
     }
 
@@ -687,6 +712,12 @@ impl DistRank {
         self.sizes.iter().sum()
     }
 
+    /// Phase timings of the most recent [`DistRank::step`] (zeros for
+    /// standby ranks and before the first step).
+    pub fn last_phases(&self) -> PhaseBreakdown {
+        self.last_phases
+    }
+
     /// One SPMD step; returns this rank's `(loss_sum, token_count)`
     /// contribution (zeros for standby ranks, which only advance the
     /// corpus stream).
@@ -701,6 +732,7 @@ impl DistRank {
         let (tokens, targets) = self.corpus.sample_batch(b, seq);
         let group = self.membership.len();
         if self.rank >= group {
+            self.last_phases = PhaseBreakdown::default();
             return Ok((0.0, 0.0));
         }
         if b * seq > MAX_STEP_TOKENS {
@@ -732,8 +764,11 @@ impl DistRank {
         // scratch buffers (recycled step to step — the gather
         // overwrites every element), so the hot path performs no
         // per-step full-weight allocation.
+        let mut phases = PhaseBreakdown::default();
         let use_scratch = self.shard_params;
         if self.shard_params {
+            let sp = telemetry::span(telemetry::CAT_GATHER, "param allgather");
+            let tg = Instant::now();
             let mine = self.param_shard.as_deref().ok_or_else(|| {
                 anyhow!("active rank {} has no parameter shard", self.rank)
             })?;
@@ -748,9 +783,12 @@ impl DistRank {
             let flat = op.finish()?;
             unflatten_into(&flat, &self.sizes, &mut self.full_scratch);
             self.scratch = flat;
+            phases.gather_s += tg.elapsed().as_secs_f64();
+            drop(sp);
         }
         let full: &[Vec<f32>] =
             if use_scratch { &self.full_scratch } else { &self.params };
+        let tc = Instant::now();
         let (my_grad, my_loss, my_count) = if my_tokens.is_empty() {
             // A state-only rank (b_i = 0) contributes an exact zero
             // vector — bitwise what `worker_pass` returns on no rows.
@@ -765,18 +803,23 @@ impl DistRank {
                 .ok_or_else(|| anyhow!("backend returned no gradients"))?;
             (g, out.loss_sum, out.token_count)
         };
+        phases.compute_s += tc.elapsed().as_secs_f64();
 
         // Eq.-1 denominator: the GLOBAL token count, known to all ranks
         // from the membership (sums of exact integers — identical to
         // the leader's f64 accumulation).
         let token_count = (b * seq) as f64;
 
+        let sp = telemetry::span(telemetry::CAT_REDUCE_SCATTER, "grad rs");
+        let tr = Instant::now();
         let mut grad_shard = wire::ring_reduce_scatter_ordered(
             t,
             &my_grad,
             &self.layout,
             &self.order,
         )?;
+        phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
+        drop(sp);
         let inv = 1.0 / token_count as f32;
         for g in grad_shard.iter_mut() {
             *g *= inv;
@@ -790,15 +833,25 @@ impl DistRank {
         if self.shard_params {
             // Update the resident slice in place; no tail AllGather —
             // the next step's head gather re-materializes.
+            let sp = telemetry::span(telemetry::CAT_OPTIMIZER, "sharded adam");
+            let ta = Instant::now();
             let mut mine = self.param_shard.take().ok_or_else(|| {
                 anyhow!("active rank {} has no parameter shard", self.rank)
             })?;
             shard.update(&mut mine, &grad_shard);
             self.param_shard = Some(mine);
+            phases.optimizer_s += ta.elapsed().as_secs_f64();
+            drop(sp);
         } else {
+            let sp = telemetry::span(telemetry::CAT_OPTIMIZER, "sharded adam");
+            let ta = Instant::now();
             let mut flat = flatten(&self.params, flat_len);
             shard.update(&mut flat[range.clone()], &grad_shard);
             let shard_view = flat[range].to_vec();
+            phases.optimizer_s += ta.elapsed().as_secs_f64();
+            drop(sp);
+            let sp = telemetry::span(telemetry::CAT_GATHER, "tail allgather");
+            let tg = Instant::now();
             let gathered = wire::ring_allgather_ordered(
                 t,
                 &shard_view,
@@ -806,7 +859,10 @@ impl DistRank {
                 &self.order,
             )?;
             self.params = unflatten(&gathered, &self.sizes);
+            phases.gather_s += tg.elapsed().as_secs_f64();
+            drop(sp);
         }
+        self.last_phases = phases;
         Ok((my_loss, my_count))
     }
 
@@ -845,6 +901,9 @@ impl DistRank {
         let token_count = (b * seq) as f64;
 
         let mut loss = 0f64;
+        let mut phases = PhaseBreakdown::default();
+        let mut compute_acc = 0f64;
+        let mut overlap_acc = 0f64;
         let mut pieces: Vec<Vec<f32>> = Vec::with_capacity(nu);
         {
             let mine = self.param_shard.as_deref().ok_or_else(|| {
@@ -859,6 +918,9 @@ impl DistRank {
             // Head-of-step tail gather (tiny — the native surrogate's
             // bias), then unit 0, both blocking: nothing to overlap
             // with yet.
+            let sp =
+                telemetry::span(telemetry::CAT_GATHER, "tail+unit0 ag");
+            let tg = Instant::now();
             let tail: Vec<f32> = if tail_is_unit {
                 wire::ring_allgather_ordered(
                     t,
@@ -882,6 +944,8 @@ impl DistRank {
                 while !op.step_round(t)? {}
                 op.finish()?
             };
+            phases.gather_s += tg.elapsed().as_secs_f64();
+            drop(sp);
             spare = Vec::new();
             for k in 0..table_units {
                 let mut next_op = if k + 1 < table_units {
@@ -900,6 +964,11 @@ impl DistRank {
                 let urange = ul.unit_range(k);
                 let rows = urange.start / d..urange.end / d;
                 let mut unit_g = vec![0f32; urange.len()];
+                let sp = telemetry::span(
+                    telemetry::CAT_COMPUTE,
+                    "unit compute+prefetch",
+                );
+                let td = Instant::now();
                 drive_overlapped(
                     t,
                     next_op.as_mut(),
@@ -907,6 +976,7 @@ impl DistRank {
                     |c| {
                         let tk = &my_tokens[c * seq..(c + 1) * seq];
                         let tg = &my_targets[c * seq..(c + 1) * seq];
+                        let t1 = Instant::now();
                         loss += self.exec.unit_pass_chunk(
                             rows.clone(),
                             &current,
@@ -916,31 +986,44 @@ impl DistRank {
                             &mut unit_g,
                             &mut tail_g,
                         )?;
+                        compute_acc += t1.elapsed().as_secs_f64();
                         Ok(())
                     },
                     |_| {},
                 )?;
+                overlap_acc += td.elapsed().as_secs_f64();
+                drop(sp);
                 // Unit k is done: recycle its buffer, reduce-scatter
                 // its gradients onto the owning ranks.
                 spare = current;
+                let sp =
+                    telemetry::span(telemetry::CAT_REDUCE_SCATTER, "unit rs");
+                let tr = Instant::now();
                 pieces.push(wire::ring_reduce_scatter_ordered(
                     t,
                     &unit_g,
                     ul.unit_layout(k),
                     &self.order,
                 )?);
+                phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
+                drop(sp);
                 current = match next_op {
                     Some(op) => op.finish()?,
                     None => Vec::new(),
                 };
             }
             if tail_is_unit {
+                let sp =
+                    telemetry::span(telemetry::CAT_REDUCE_SCATTER, "tail rs");
+                let tr = Instant::now();
                 pieces.push(wire::ring_reduce_scatter_ordered(
                     t,
                     &tail_g,
                     ul.unit_layout(nu - 1),
                     &self.order,
                 )?);
+                phases.reduce_scatter_s += tr.elapsed().as_secs_f64();
+                drop(sp);
             }
             self.scratch = spare;
         }
@@ -961,11 +1044,21 @@ impl DistRank {
         let shard = self.shard.as_mut().ok_or_else(|| {
             anyhow!("active rank {me} has no shard")
         })?;
+        let sp = telemetry::span(telemetry::CAT_OPTIMIZER, "sharded adam");
+        let ta = Instant::now();
         let mut mine = self.param_shard.take().ok_or_else(|| {
             anyhow!("active rank {me} has no parameter shard")
         })?;
         shard.update(&mut mine, &grad_shard);
         self.param_shard = Some(mine);
+        phases.optimizer_s += ta.elapsed().as_secs_f64();
+        drop(sp);
+        // The drive_overlapped window covers compute AND the prefetch
+        // gather rounds driven between chunks; the remainder after
+        // subtracting pure compute is time spent waiting on the wire.
+        phases.compute_s = compute_acc;
+        phases.overlap_wait_s = (overlap_acc - compute_acc).max(0.0);
+        self.last_phases = phases;
         Ok((loss, my_tokens.len() as f64))
     }
 
@@ -1304,6 +1397,9 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
     if rank == 0 {
         return Err(anyhow!("rank 0 is the coordinator, not a worker"));
     }
+    // Tag this thread's trace events with its rank (thread-fabric
+    // workers share the coordinator's process tracer).
+    telemetry::set_rank(rank);
     let mut state: Option<DistRank> = None;
     let mut next_step: u64 = 0;
     loop {
@@ -1332,17 +1428,27 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
                     .as_mut()
                     .ok_or_else(|| anyhow!("STEP before INIT"))?;
                 let active = rank < st.membership().len();
+                let ts = Instant::now();
                 let (loss, count) = st.step(t.as_mut())?;
+                let measured = ts.elapsed().as_secs_f64();
                 if active {
+                    // The reply ALWAYS carries the phase fields and the
+                    // measured step time — the wire format never
+                    // depends on whether tracing is on (invariant 14).
                     let mut w = W::default();
                     w.f64(loss);
                     w.f64(count);
+                    for p in st.last_phases().to_array() {
+                        w.f64(p);
+                    }
+                    w.f64(measured);
                     t.send_bytes(0, &w.0)?;
                 }
                 // Reply first, mirror second: per-lane FIFO then
                 // guarantees the driver folds the loss before rank 0
                 // receives this rank's ft frames.
                 st.ft_sync(t.as_mut())?;
+                telemetry::drain();
             }
             OP_PING => {
                 t.send_bytes(0, &[OP_PING])?;
@@ -1410,6 +1516,26 @@ pub struct DistDriver {
     shm_dir: Option<PathBuf>,
     down: bool,
     pub history: Vec<StepStats>,
+    /// Per-rank phase totals folded from STEP replies (rank 0 measured
+    /// locally) — the measured side of the skew report.
+    phase_totals: Vec<PhaseBreakdown>,
+    /// Per-rank accumulated measured step seconds.
+    measured_totals: Vec<f64>,
+    /// Steps each rank contributed timing for.
+    steps_timed: Vec<u64>,
+}
+
+/// One rank's accumulated measured timing, folded by the driver from
+/// the phase fields every STEP reply carries.
+#[derive(Debug, Clone)]
+pub struct RankTiming {
+    pub rank: usize,
+    /// Steps this rank contributed timing for.
+    pub steps: u64,
+    /// Accumulated phase breakdown across those steps.
+    pub phases: PhaseBreakdown,
+    /// Accumulated measured wall seconds across those steps.
+    pub measured_seconds: f64,
 }
 
 impl DistDriver {
@@ -1537,6 +1663,7 @@ impl DistDriver {
                                 "--world",
                                 &world.to_string(),
                             ])
+                            .args(trace_args(&cfg, r))
                             .spawn()
                     })
                     .collect::<std::io::Result<Vec<_>>>()?;
@@ -1587,6 +1714,7 @@ impl DistDriver {
                                 &hosts_spec,
                             ])
                             .args(&extra)
+                            .args(trace_args(&cfg, r))
                             .spawn()
                     })
                     .collect::<std::io::Result<Vec<_>>>()?;
@@ -1658,6 +1786,7 @@ impl DistDriver {
                                 &world.to_string(),
                             ])
                             .args(&extra)
+                            .args(trace_args(&cfg, r))
                             .spawn()
                     })
                     .collect::<std::io::Result<Vec<_>>>()?;
@@ -1688,7 +1817,24 @@ impl DistDriver {
             shm_dir,
             down: false,
             history: Vec::new(),
+            phase_totals: vec![PhaseBreakdown::default(); world],
+            measured_totals: vec![0.0; world],
+            steps_timed: vec![0; world],
         })
+    }
+
+    /// Per-rank measured timing folded so far (active ranks only show
+    /// non-zero steps). The measured side of the coordinator's
+    /// planned-vs-measured skew report.
+    pub fn rank_timings(&self) -> Vec<RankTiming> {
+        (0..self.world)
+            .map(|r| RankTiming {
+                rank: r,
+                steps: self.steps_timed[r],
+                phases: self.phase_totals[r],
+                measured_seconds: self.measured_totals[r],
+            })
+            .collect()
     }
 
     /// Attach simulated step durations (the `StepExecutor::step_seconds`
@@ -1696,6 +1842,21 @@ impl DistDriver {
     pub fn with_timer(mut self, timer: StepTimeModel) -> DistDriver {
         self.timer = Some(timer);
         self
+    }
+
+    /// Modeled per-rank step seconds for the CURRENT membership from
+    /// the attached [`StepTimeModel`] — the PLANNED side of the
+    /// coordinator's skew report. `None` without a timer.
+    pub fn planned_rank_seconds(&self) -> Option<Vec<f64>> {
+        self.timer.as_ref().map(|m| {
+            let batches: Vec<usize> = self
+                .rank0
+                .membership()
+                .iter()
+                .map(|w| w.batch)
+                .collect();
+            m.per_rank_seconds(&batches)
+        })
     }
 
     pub fn world(&self) -> usize {
@@ -1802,17 +1963,33 @@ impl DistDriver {
         }
         let mut newly = Vec::new();
         for r in self.live_workers() {
+            let probe = Instant::now();
             let alive = if self.t.peer_closed(r) {
                 false
             } else if self.t.send_bytes(r, &[OP_PING]).is_err() {
                 false
             } else {
-                matches!(
+                let ok = matches!(
                     self.t.recv_bytes_timeout(r, PING_TIMEOUT_MS),
                     Ok(Some(ref pong)) if pong.as_slice() == [OP_PING]
-                )
+                );
+                if ok {
+                    telemetry::counters().record_ping_rtt(
+                        probe.elapsed().as_micros() as u64,
+                    );
+                }
+                ok
             };
             if !alive {
+                telemetry::counters()
+                    .suspicions
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if telemetry::on() {
+                    telemetry::instant(
+                        telemetry::CAT_SUSPECT,
+                        &format!("suspect r{r}"),
+                    );
+                }
                 self.dead.insert(r);
                 newly.push(r);
             }
@@ -1827,6 +2004,7 @@ impl DistDriver {
     /// checks against its local count (corpus-alignment desync guard).
     pub fn step(&mut self, step_idx: usize) -> Result<StepStats> {
         let t0 = Instant::now();
+        let t0_us = telemetry::now_us();
         let group = self.rank0.membership().len();
         let batches: Vec<usize> =
             self.rank0.membership().iter().map(|w| w.batch).collect();
@@ -1838,13 +2016,32 @@ impl DistDriver {
         }
         let (mut loss_sum, mut token_count) =
             self.rank0.step(self.t.as_mut())?;
+        let rank0_measured = t0.elapsed().as_secs_f64();
+        let rank0_phases = self.rank0.last_phases();
+        self.phase_totals[0].add(&rank0_phases);
+        self.measured_totals[0] += rank0_measured;
+        self.steps_timed[0] += 1;
+        telemetry::emit_rank_step(step_idx, 0, t0_us, &rank0_phases);
         for r in 1..group {
             let reply = self.t.recv_bytes(r)?;
             let mut rd = R::new(&reply);
             loss_sum += rd.f64()?;
             token_count += rd.f64()?;
+            let mut pa = [0f64; PhaseBreakdown::WIRE_FIELDS];
+            for slot in pa.iter_mut() {
+                *slot = rd.f64()?;
+            }
+            let rp = PhaseBreakdown::from_array(pa);
+            self.phase_totals[r].add(&rp);
+            self.measured_totals[r] += rd.f64()?;
+            self.steps_timed[r] += 1;
+            // Synthesize the cross-rank timeline: every rank's phases
+            // laid from the driver's step start (replies carry
+            // durations, not wall-clock anchors).
+            telemetry::emit_rank_step(step_idx, r, t0_us, &rp);
         }
         self.rank0.ft_sync(self.t.as_mut())?;
+        telemetry::drain();
         if token_count <= 0.0 {
             return Err(anyhow!("distributed step saw no tokens"));
         }
@@ -1858,6 +2055,7 @@ impl DistDriver {
                 None => measured,
             },
             measured_seconds: measured,
+            phases: rank0_phases,
         };
         self.history.push(stats.clone());
         Ok(stats)

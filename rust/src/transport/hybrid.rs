@@ -36,6 +36,17 @@ use crate::util::error::{anyhow, Result};
 /// liveness verdict (a SIGKILLed peer never closes its shm lane).
 const LIVENESS_SLICE_MS: u64 = 50;
 
+/// Tally one outbound routing decision in the fabric counters.
+fn count_route(via_shm: bool) {
+    use std::sync::atomic::Ordering;
+    let c = crate::telemetry::counters();
+    if via_shm {
+        c.hybrid_shm_routed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        c.hybrid_tcp_routed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// One rank's endpoint over the two-tier fabric.
 pub struct HybridTransport {
     topo: HostTopology,
@@ -150,8 +161,10 @@ impl Transport for HybridTransport {
             ));
         }
         if self.routes_via_shm(to) {
+            count_route(true);
             self.shm.send_f32(to, data)
         } else {
+            count_route(false);
             self.slow.send_f32(to, data)
         }
     }
@@ -179,8 +192,10 @@ impl Transport for HybridTransport {
             ));
         }
         if self.routes_via_shm(to) {
+            count_route(true);
             self.shm.send_bytes(to, data)
         } else {
+            count_route(false);
             self.slow.send_bytes(to, data)
         }
     }

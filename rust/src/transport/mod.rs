@@ -71,7 +71,7 @@ pub mod tcp;
 pub mod topology;
 
 pub use chaos::{ChaosConfig, ChaosTransport, CrashMode, FaultPlan};
-pub use dist::{worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec};
+pub use dist::{worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec, RankTiming};
 pub use failure::FailureDetector;
 pub use hybrid::HybridTransport;
 pub use local::{LocalFabric, LocalTransport};

@@ -425,7 +425,12 @@ impl ShmTransport {
         hdr[0] = tag;
         hdr[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
         self.write_all(to, &hdr)?;
-        self.write_all(to, payload)
+        self.write_all(to, payload)?;
+        let c = crate::telemetry::counters();
+        c.shm_frames_sent.fetch_add(1, Ordering::Relaxed);
+        c.shm_bytes_sent
+            .fetch_add(9 + payload.len() as u64, Ordering::Relaxed);
+        Ok(())
     }
 
     pub(crate) fn recv_frame(
@@ -447,6 +452,9 @@ impl ShmTransport {
         }
         let mut payload = vec![0u8; len as usize];
         self.read_exact(from, &mut payload, None)?;
+        let c = crate::telemetry::counters();
+        c.shm_frames_recv.fetch_add(1, Ordering::Relaxed);
+        c.shm_bytes_recv.fetch_add(9 + len, Ordering::Relaxed);
         match tag {
             TAG_BYTES => Ok(Some(Frame::Bytes(payload))),
             TAG_F32 => Ok(Some(Frame::F32(f32s_from_le_bytes(&payload)?))),
@@ -476,7 +484,12 @@ impl Transport for ShmTransport {
         hdr[0] = TAG_F32;
         hdr[1..9].copy_from_slice(&((data.len() * 4) as u64).to_le_bytes());
         self.write_all(to, &hdr)?;
-        self.write_all(to, &f32s_to_le_bytes(data))
+        self.write_all(to, &f32s_to_le_bytes(data))?;
+        let c = crate::telemetry::counters();
+        c.shm_frames_sent.fetch_add(1, Ordering::Relaxed);
+        c.shm_bytes_sent
+            .fetch_add(9 + (data.len() * 4) as u64, Ordering::Relaxed);
+        Ok(())
     }
 
     fn recv_f32(&mut self, from: usize) -> Result<Vec<f32>> {

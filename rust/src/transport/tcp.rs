@@ -67,6 +67,7 @@ use super::{
     f32s_to_le_bytes, FailureDetector, Frame, Transport, TransportError,
     CRC32_INIT, TAG_BYTES, TAG_F32,
 };
+use crate::telemetry;
 use crate::transport::failure::DEFAULT_SUSPECT_AFTER_MS;
 use crate::util::error::{anyhow, Result};
 
@@ -206,6 +207,7 @@ pub fn decode_wire_frame(
         u32::from_le_bytes(buf[17 + len..].try_into().expect("4 bytes"));
     let got = crc32(body);
     if got != expected {
+        telemetry::counters().crc_failures.fetch_add(1, Ordering::Relaxed);
         return Err(TransportError::Corrupt { from, expected, got });
     }
     Ok((tag, seq, buf[17..17 + len].to_vec()))
@@ -291,11 +293,17 @@ fn spawn_reader(
             match read_wire_frame(&mut r, from) {
                 Ok(Some((tag, seq, payload))) => {
                     detector.beat(from, epoch.elapsed().as_millis() as u64);
+                    let c = telemetry::counters();
+                    c.tcp_frames_recv.fetch_add(1, Ordering::Relaxed);
+                    c.tcp_bytes_recv
+                        .fetch_add(21 + payload.len() as u64, Ordering::Relaxed);
                     if tag == TAG_HB {
+                        c.heartbeats_recv.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
                     if seq <= last_seq {
                         // A re-transmitted frame: already delivered.
+                        c.seq_dedup_drops.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
                     if seq != last_seq + 1 {
@@ -424,6 +432,10 @@ fn mesh(
                     if let Ok(mut s) = stream.lock() {
                         if s.write_all(&hb_frame).is_err() {
                             detector.mark_closed(*peer);
+                        } else {
+                            telemetry::counters()
+                                .heartbeats_sent
+                                .fetch_add(1, Ordering::Relaxed);
                         }
                     }
                 }
@@ -619,6 +631,9 @@ impl TcpTransport {
                 self.detector.mark_closed(to);
                 return Err(anyhow!("send to rank {to} failed: {e}"));
             }
+            let c = telemetry::counters();
+            c.tcp_frames_sent.fetch_add(1, Ordering::Relaxed);
+            c.tcp_bytes_sent.fetch_add(buf.len() as u64, Ordering::Relaxed);
             return Ok(());
         }
         // Bulk tensor frame: stream the CRC over header + payload and
@@ -643,6 +658,10 @@ impl TcpTransport {
             self.detector.mark_closed(to);
             return Err(anyhow!("send to rank {to} failed: {e}"));
         }
+        let c = telemetry::counters();
+        c.tcp_frames_sent.fetch_add(1, Ordering::Relaxed);
+        c.tcp_bytes_sent
+            .fetch_add(21 + payload.len() as u64, Ordering::Relaxed);
         Ok(())
     }
 
@@ -769,6 +788,10 @@ impl Transport for TcpTransport {
             self.detector.mark_closed(to);
             return Err(anyhow!("resend to rank {to} failed: {e}"));
         }
+        let c = telemetry::counters();
+        c.resends.fetch_add(1, Ordering::Relaxed);
+        c.tcp_frames_sent.fetch_add(1, Ordering::Relaxed);
+        c.tcp_bytes_sent.fetch_add(buf.len() as u64, Ordering::Relaxed);
         Ok(())
     }
 
@@ -923,6 +946,23 @@ mod tests {
         a.send_bytes(1, &[1]).unwrap();
         assert_eq!(b.recv_bytes(0).unwrap(), vec![1]);
         assert_eq!(b.recv_bytes_timeout(0, 50).unwrap(), None);
+    }
+
+    #[test]
+    fn fabric_counters_track_tcp_traffic() {
+        let before = telemetry::counters().snapshot();
+        let mut eps = thread_fabric(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_bytes(1, &[1, 2, 3]).unwrap();
+        assert_eq!(b.recv_bytes(0).unwrap(), vec![1, 2, 3]);
+        a.resend_last(1).unwrap();
+        let after = telemetry::counters().snapshot();
+        assert!(after["tcp_frames_sent"] > before["tcp_frames_sent"]);
+        assert!(after["tcp_bytes_sent"] >= before["tcp_bytes_sent"] + 24);
+        assert!(after["tcp_frames_recv"] > before["tcp_frames_recv"]);
+        assert!(after["tcp_bytes_recv"] > before["tcp_bytes_recv"]);
+        assert!(after["resends"] > before["resends"]);
     }
 
     #[test]

@@ -638,6 +638,71 @@ fn chaotic_tcp_sessions_survive_three_crashes_bitwise() {
 }
 
 #[test]
+fn tracing_is_bitwise_invisible_under_churn_and_chaos() {
+    // DESIGN.md invariant 14: spans and counters OBSERVE the step,
+    // they never participate in it. A session traced end to end, one
+    // traced for part of its life (toggled between events), and one
+    // never traced produce bitwise-identical parameters — across
+    // churn AND a chaos-injected crash. The runs are sequential
+    // because the tracer is process-global.
+    use cephalo::telemetry;
+
+    let run_churn = |policy: fn(usize)| {
+        let mut s = session_with(Some(FabricSpec::TcpThreads), true);
+        let churn = [2usize, 3, 2];
+        for (hour, &size) in churn.iter().enumerate() {
+            policy(hour);
+            s.step_event(hour, size).unwrap();
+        }
+        telemetry::reset();
+        s.params().unwrap()
+    };
+    let off = run_churn(|_| telemetry::disable());
+    let on = run_churn(|_| telemetry::enable());
+    let partial = run_churn(|hour| {
+        if hour % 2 == 0 {
+            telemetry::enable()
+        } else {
+            telemetry::disable()
+        }
+    });
+    assert_eq!(off, on, "tracing changed the churn trajectory");
+    assert_eq!(off, partial, "toggling tracing changed the trajectory");
+
+    // The same three policies under a scheduled crash on the socket
+    // fabric: detection, re-plan and mirror restore must also be
+    // invisible to the numerics.
+    let run_chaos = |policy: fn(usize)| {
+        let mut s = session5(
+            Some(FabricSpec::TcpThreads),
+            true,
+            Some("seed=3,crash=1,first=1,stride=2,delay=0,dup=0"),
+        );
+        for hour in 0..3 {
+            policy(hour);
+            s.step_event(hour, 5).unwrap();
+        }
+        assert_eq!(s.recoveries.len(), 1, "the seeded crash must fire");
+        telemetry::reset();
+        s.params().unwrap()
+    };
+    let c_off = run_chaos(|_| telemetry::disable());
+    let c_on = run_chaos(|_| telemetry::enable());
+    let c_partial = run_chaos(|hour| {
+        if hour % 2 == 0 {
+            telemetry::enable()
+        } else {
+            telemetry::disable()
+        }
+    });
+    assert_eq!(c_off, c_on, "tracing changed the recovery trajectory");
+    assert_eq!(
+        c_off, c_partial,
+        "toggling tracing changed the recovery trajectory"
+    );
+}
+
+#[test]
 fn corrupted_frame_declares_the_rank_dead_and_recovery_stays_bitwise() {
     // Satellite: wire corruption is a fail-stop event, not silent data
     // damage. Rank 2's PING reply has one byte flipped after its CRC

@@ -1,0 +1,214 @@
+//! Trace-output validation (invariant-14 satellites): the Chrome
+//! trace-event JSON a traced session emits is schema-valid — spans
+//! nest properly per track, timestamps are monotone, every live rank
+//! shows its gather/compute/reduce-scatter phases, the coordinator
+//! shows replan/migrate — and chaos fault instants line up with the
+//! seeded `FaultPlan`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use cephalo::coordinator::session::{Session, SessionConfig};
+use cephalo::plan::CephaloPlanner;
+use cephalo::telemetry;
+use cephalo::testkit::tiny_cluster3;
+use cephalo::transport::FabricSpec;
+use cephalo::util::json::Json;
+
+/// The tracer is process-global; every test here toggles and drains
+/// it, so they must run one at a time.
+fn lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn session(chaos: Option<&str>) -> Session {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: 8,
+        steps_per_event: 2,
+        seed: 13,
+        min_gpus: 1,
+        fabric: Some(FabricSpec::TcpThreads),
+        shard_params: true,
+        chaos: chaos.map(String::from),
+        ..Default::default()
+    };
+    Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("session starts on the 3-GPU cluster")
+}
+
+#[test]
+fn traced_session_writes_a_valid_nested_chrome_trace() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::enable();
+    let mut s = session(None);
+    // Shrink then regrow so the replan/migrate path records spans.
+    for (hour, &size) in [2usize, 3].iter().enumerate() {
+        s.step_event(hour, size).unwrap();
+    }
+    drop(s); // joins worker threads -> their buffers flush
+    let dir = std::env::temp_dir()
+        .join(format!("cephalo-trace-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("session.json");
+    telemetry::write_chrome_trace(
+        &path,
+        &[("case", Json::Str("integration".into()))],
+    )
+    .unwrap();
+    telemetry::reset();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let j = Json::parse(&text).expect("trace must be valid JSON");
+    let meta = j.field("metadata").unwrap();
+    assert!(meta.get("fabric_counters").is_some());
+    assert_eq!(meta.get("case").unwrap().as_str(), Some("integration"));
+    let evs = j.field("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+
+    // Walk every event: known phases only, timestamps monotone per
+    // track in file order, X spans collected per track for nesting.
+    let mut spans: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut cats: BTreeMap<u64, BTreeSet<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut timeline_events = 0usize;
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue;
+        }
+        assert!(ph == "X" || ph == "i", "unexpected phase '{ph}'");
+        let pid = e.get("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let last = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+        assert!(
+            ts >= *last,
+            "timestamps must be monotone per track ({pid},{tid})"
+        );
+        *last = ts;
+        if pid == 1 {
+            timeline_events += 1;
+        }
+        if ph == "X" {
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            assert!(dur >= 0.0, "negative span duration");
+            spans.entry((pid, tid)).or_default().push((ts, ts + dur));
+            if pid == 0 {
+                cats.entry(tid).or_default().insert(
+                    e.get("cat").unwrap().as_str().unwrap().to_string(),
+                );
+            }
+        }
+    }
+
+    // Spans on one track either nest or are disjoint — never straddle.
+    const EPS: f64 = 1e-3;
+    for ((pid, tid), track) in &spans {
+        let mut open: Vec<f64> = Vec::new(); // enclosing span end times
+        for &(start, end) in track {
+            while let Some(&top) = open.last() {
+                if start >= top - EPS {
+                    open.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = open.last() {
+                assert!(
+                    end <= top + EPS,
+                    "span [{start:.1},{end:.1}] straddles its parent \
+                     ending at {top:.1} on track ({pid},{tid})"
+                );
+            }
+            open.push(end);
+        }
+    }
+
+    // Every rank that stepped shows the per-phase spans; the
+    // coordinator (tid 0) also recorded the replan+migrate work; the
+    // cross-rank timeline pid carries the reply-assembled step spans.
+    for rank in 0..3u64 {
+        let c = cats
+            .get(&rank)
+            .unwrap_or_else(|| panic!("no spans for rank {rank}"));
+        for want in ["gather", "compute", "reduce_scatter"] {
+            assert!(c.contains(want), "rank {rank} missing '{want}': {c:?}");
+        }
+    }
+    for want in ["replan", "migrate"] {
+        assert!(
+            cats[&0].contains(want),
+            "coordinator missing '{want}': {:?}",
+            cats[&0]
+        );
+    }
+    assert!(timeline_events > 0, "no cross-rank timeline events");
+}
+
+#[test]
+fn chaos_fault_instants_match_the_seeded_plan() {
+    let _g = lock();
+    telemetry::reset();
+    telemetry::enable();
+    let mut s = session(Some("seed=3,crash=1,first=1,stride=2,delay=0,dup=0"));
+    let plan = s.fault_plan().expect("chaos spec seeds a plan").clone();
+    for hour in 0..3 {
+        s.step_event(hour, 3).unwrap();
+    }
+    let dead: Vec<usize> =
+        s.recoveries.iter().flat_map(|r| r.ranks.clone()).collect();
+    assert!(!dead.is_empty(), "the seeded crash must fire and recover");
+    drop(s);
+    let events = telemetry::take_events();
+    telemetry::reset();
+
+    let crashes: Vec<&telemetry::Event> = events
+        .iter()
+        .filter(|e| {
+            e.cat == "fault" && e.dur_us.is_none()
+                && e.name.starts_with("crash ")
+        })
+        .collect();
+    // Every recovered rank fired a step-keyed crash instant, at or
+    // after the step its plan scheduled.
+    for &r in &dead {
+        let scheduled = plan.faults[r]
+            .crash_after_step
+            .expect("recovered rank must have a scheduled crash");
+        let inst = crashes
+            .iter()
+            .find(|e| e.name.starts_with(&format!("crash r{r} ")))
+            .unwrap_or_else(|| {
+                panic!("no crash instant for rank {r}: {crashes:?}")
+            });
+        let fired: u64 =
+            inst.name.rsplit_once(" s").unwrap().1.parse().unwrap();
+        assert!(
+            fired >= scheduled,
+            "rank {r} crash instant at step {fired}, before its \
+             scheduled step {scheduled}"
+        );
+    }
+    // ... and no rank the plan left quiet recorded one.
+    for f in &plan.faults {
+        if f.crash_after_step.is_none() {
+            assert!(
+                !crashes
+                    .iter()
+                    .any(|e| e.name.starts_with(&format!("crash r{} ", f.rank))),
+                "unscheduled rank {} recorded a crash instant",
+                f.rank
+            );
+        }
+    }
+    // The fired fault also ticked the chaos counter.
+    assert!(telemetry::counters().snapshot()["chaos_faults"] >= 1);
+}
