@@ -8,13 +8,21 @@
 //! columns (migration bytes, mirror-sourced state elements) are
 //! deterministic accounting, not timings — the perf gate pins them
 //! exactly; a drift means the recovery path moved different data.
+//!
+//! The rejoin section measures the OTHER fate of a suspected rank:
+//! healed inside the rejoin window. A fingerprint hit resumes in
+//! place (zero elements moved); a chaos-tainted digest forces the
+//! re-stream path (the rank's state re-sourced from the mirror with
+//! no membership change). The `path` column keys the two.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use cephalo::cluster::catalog::find;
 use cephalo::cluster::{Cluster, Node};
-use cephalo::coordinator::session::{RecoveryReport, Session, SessionConfig};
+use cephalo::coordinator::session::{
+    RecoveryReport, RejoinReport, Session, SessionConfig,
+};
 use cephalo::plan::CephaloPlanner;
 use cephalo::transport::FabricSpec;
 use cephalo::util::json::Json;
@@ -65,6 +73,39 @@ fn run(
         session.step_event(hour, 5).expect("event survives its faults");
     }
     session.recoveries.clone()
+}
+
+/// One rejoin-enabled chaos session (fully-sharded, 3 ranks) to
+/// completion; returns its rejoin reports. The schedule drops one PING
+/// echo, so exactly one suspicion is raised and healed per run.
+fn run_rejoin(fabric: FabricSpec, chaos: &str) -> Vec<RejoinReport> {
+    let cfg = SessionConfig {
+        model: "BERT-Large".into(),
+        batch: 8,
+        steps_per_event: 2,
+        seed: 13,
+        min_gpus: 1,
+        fabric: Some(fabric),
+        shard_params: true,
+        chaos: Some(chaos.to_string()),
+        rejoin_window_ms: 5000,
+        ping_timeout_ms: 200,
+        ..Default::default()
+    };
+    let mut session = Session::new(
+        cephalo::testkit::tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        cfg,
+    )
+    .expect("rejoin session starts");
+    for hour in 0..2 {
+        session.step_event(hour, 3).expect("event survives its faults");
+    }
+    assert!(
+        session.recoveries.is_empty(),
+        "a healed partition must not migrate"
+    );
+    session.rejoins.clone()
 }
 
 fn main() {
@@ -139,6 +180,62 @@ fn main() {
     println!("{}", t.render());
     println!(
         "every recovery re-joined the reference trajectory bitwise \
+         (asserted in tests/dist_session.rs)  [ok]"
+    );
+
+    // Rejoin-after-partition: the drop fires at the second liveness
+    // poll; `taint` additionally corrupts the reported digest, forcing
+    // the re-stream path on the second case.
+    let mut rt = Table::new(
+        "Rejoin latency (per healed partition)",
+        &["fabric", "path", "step", "rank", "probes", "migrate (ms)",
+          "moved elems"],
+    );
+    let drop_chaos =
+        "seed=11,crash=0,delay=0,dup=0,drop_ping=2,drop_first=2";
+    let taint_chaos =
+        "seed=11,crash=0,delay=0,dup=0,drop_ping=2,drop_first=2,taint=2";
+    let rejoin_cases = [
+        (FabricSpec::TcpThreads, "tcp", drop_chaos),
+        (FabricSpec::TcpThreads, "tcp", taint_chaos),
+    ];
+    for (fabric, fabric_label, chaos) in rejoin_cases {
+        let rejoins = run_rejoin(fabric, chaos);
+        assert!(
+            !rejoins.is_empty(),
+            "the schedule must heal at least one partition"
+        );
+        for r in &rejoins {
+            let path = if r.hit { "in-place" } else { "re-stream" };
+            rt.add_row(vec![
+                fabric_label.to_string(),
+                path.to_string(),
+                r.step.to_string(),
+                r.rank.to_string(),
+                r.attempts.to_string(),
+                format!("{:.2}", r.migrate_ms),
+                r.moved_state_elems.to_string(),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("fabric".into(), Json::Str(fabric_label.into()));
+            // `path` keys the two rejoin fates into distinct metric
+            // prefixes (an in-place heal pins moved elems at 0; a
+            // re-stream pins the mirror-sourced volume).
+            row.insert("path".into(), Json::Str(path.into()));
+            row.insert("step".into(), Json::Str(r.step.to_string()));
+            row.insert("rank".into(), Json::Num(r.rank as f64));
+            row.insert("probes".into(), Json::Num(r.attempts as f64));
+            row.insert("migrate_ms".into(), Json::Num(r.migrate_ms));
+            row.insert(
+                "moved_state_elems".into(),
+                Json::Num(r.moved_state_elems as f64),
+            );
+            json_rows.push(Json::Obj(row));
+        }
+    }
+    println!("{}", rt.render());
+    println!(
+        "every rejoin stayed on the reference trajectory bitwise \
          (asserted in tests/dist_session.rs)  [ok]"
     );
     if let Some(path) = json_path {

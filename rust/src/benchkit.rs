@@ -174,6 +174,56 @@ pub fn bench_opt(name: &str) -> Option<String> {
 /// enough to average out single-scheduler-hiccup jitter.
 pub const RATE_NOISE_BAND: f64 = 0.25;
 
+/// Absolute floor pinned by the gate itself (not baseline-relative):
+/// on wire-bound transport rows the shm ring fabric must sustain at
+/// least this multiple of the loopback-TCP rate for BOTH collectives.
+/// Promoted from a bench-side assert (ROADMAP "next spend") so a
+/// regression fails `cephalo bench-gate` even when baseline and
+/// current runs are equally degraded.
+pub const SHM_TCP_MARGIN: f64 = 2.0;
+
+/// Smallest `elems` at which the shm margin applies. Below this the
+/// rounds are latency-bound and the ratio is scheduler noise; at
+/// 2^17 elems each ring segment is ~128 KiB on the wire and the
+/// fabrics separate cleanly.
+pub const SHM_MARGIN_MIN_ELEMS: f64 = 131072.0;
+
+/// Per-row floor check over a CURRENT artifact's rows: every
+/// wire-bound transport row (`elems >= `[`SHM_MARGIN_MIN_ELEMS`] with
+/// shm and tcp rate fields) must hold shm >= [`SHM_TCP_MARGIN`] x tcp
+/// on AllGather and ReduceScatter alike. Rows without those fields —
+/// every non-transport bench — are exempt. Returns one message per
+/// violated (row, collective).
+pub fn margin_failures(rows: &[crate::util::json::Json]) -> Vec<String> {
+    use crate::util::json::Json;
+    let mut out = Vec::new();
+    for row in rows {
+        let Json::Obj(obj) = row else { continue };
+        let num =
+            |k: &str| obj.get(k).and_then(|v: &Json| v.as_f64());
+        let Some(elems) = num("elems") else { continue };
+        if elems < SHM_MARGIN_MIN_ELEMS {
+            continue;
+        }
+        for (shm_k, tcp_k) in [
+            ("ag_shm_gbps", "ag_tcp_gbps"),
+            ("rs_shm_gbps", "rs_tcp_gbps"),
+        ] {
+            let (Some(shm), Some(tcp)) = (num(shm_k), num(tcp_k))
+            else {
+                continue;
+            };
+            if shm < SHM_TCP_MARGIN * tcp {
+                out.push(format!(
+                    "elems={elems}: {shm_k} {shm:.3} < \
+                     {SHM_TCP_MARGIN}x {tcp_k} {tcp:.3}"
+                ));
+            }
+        }
+    }
+    out
+}
+
 /// How a metric is judged by the gate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MetricClass {
@@ -272,6 +322,10 @@ pub struct GateReport {
     pub rate_ratios: Vec<(String, f64)>,
     /// Geometric mean of the rate ratios (1.0 when there are none).
     pub rate_geomean: f64,
+    /// Absolute-floor violations in the CURRENT run (shm < 2x TCP on a
+    /// wire-bound row — see [`margin_failures`]). Filled by
+    /// [`GateReport::apply_margins`]; empty until then.
+    pub margin_failures: Vec<String>,
     pub pass: bool,
 }
 
@@ -324,11 +378,21 @@ pub fn compare_metrics(
         missing,
         rate_ratios,
         rate_geomean,
+        margin_failures: Vec::new(),
         pass,
     }
 }
 
 impl GateReport {
+    /// Fold the per-row shm-margin floor ([`margin_failures`]) over the
+    /// CURRENT run's raw rows into the verdict. Unlike the relative
+    /// checks in [`compare_metrics`], this fails even when baseline and
+    /// current are identical — an absolute claim, not a drift check.
+    pub fn apply_margins(&mut self, current_rows: &[crate::util::json::Json]) {
+        self.margin_failures = margin_failures(current_rows);
+        self.pass = self.pass && self.margin_failures.is_empty();
+    }
+
     /// Serialize the verdict (the CI artifact).
     pub fn to_json(&self, bench: &str) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -357,6 +421,19 @@ impl GateReport {
             "missing".to_string(),
             Json::Arr(
                 self.missing.iter().map(|s| Json::Str(s.clone())).collect(),
+            ),
+        );
+        o.insert(
+            "shm_tcp_margin".to_string(),
+            Json::Num(SHM_TCP_MARGIN),
+        );
+        o.insert(
+            "margin_failures".to_string(),
+            Json::Arr(
+                self.margin_failures
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
             ),
         );
         o.insert(
@@ -410,10 +487,11 @@ pub fn gate_files(
             "bench mismatch: baseline '{b_bench}' vs current '{c_bench}'"
         ));
     }
-    let report = compare_metrics(
+    let mut report = compare_metrics(
         &flatten_metrics(&b_rows),
         &flatten_metrics(&c_rows),
     );
+    report.apply_margins(&c_rows);
     if let Some(path) = out_path {
         std::fs::write(path, report.to_json(&b_bench).render())
             .map_err(|e| format!("writing {path}: {e}"))?;
@@ -424,12 +502,16 @@ pub fn gate_files(
     for m in &report.missing {
         println!("REGRESSION (missing metric): {m}");
     }
+    for m in &report.margin_failures {
+        println!("REGRESSION (margin): {m}");
+    }
     println!(
-        "{}: {} exact drift(s), {} missing, rate geomean {:.3} \
-         (band {:.2}) -> {}",
+        "{}: {} exact drift(s), {} missing, {} margin, rate geomean \
+         {:.3} (band {:.2}) -> {}",
         b_bench,
         report.exact_failures.len(),
         report.missing.len(),
+        report.margin_failures.len(),
         report.rate_geomean,
         RATE_NOISE_BAND,
         if report.pass { "PASS" } else { "FAIL" }
@@ -558,6 +640,105 @@ mod tests {
         assert!(!r.pass);
         assert!(r.exact_failures.is_empty());
         assert!((r.rate_geomean - 0.5).abs() < 1e-12);
+    }
+
+    fn transport_row(elems: f64, shm: f64, tcp: f64) -> Json {
+        row(&[
+            ("elems", Json::Num(elems)),
+            ("ag_tcp_gbps", Json::Num(tcp)),
+            ("ag_shm_gbps", Json::Num(shm)),
+            ("rs_tcp_gbps", Json::Num(tcp)),
+            ("rs_shm_gbps", Json::Num(shm * 1.1)),
+        ])
+    }
+
+    #[test]
+    fn shm_margin_floor_is_per_row_and_wire_bound_only() {
+        // Latency-bound rows (below 2^17 elems) are exempt however bad
+        // the ratio; non-transport rows without the rate fields are
+        // skipped entirely.
+        let ok = vec![
+            transport_row(1024.0, 1.0, 3.0), // small: exempt
+            transport_row(131072.0, 8.0, 3.0), // 2.67x: holds
+            sample_rows(2.0, 4096.0)[1].clone(), // no shm/tcp fields
+        ];
+        assert!(margin_failures(&ok).is_empty());
+        // One wire-bound row below 2x fails on BOTH collectives; the
+        // healthy row alongside it stays silent.
+        let bad = vec![
+            transport_row(131072.0, 5.0, 3.0), // 1.67x: violated
+            transport_row(262144.0, 9.0, 3.0),
+        ];
+        let fails = margin_failures(&bad);
+        assert_eq!(fails.len(), 2);
+        assert!(fails[0].contains("ag_shm_gbps"), "{}", fails[0]);
+        assert!(fails[1].contains("rs_shm_gbps"), "{}", fails[1]);
+        assert!(fails[0].contains("elems=131072"));
+    }
+
+    #[test]
+    fn shm_margin_violation_fails_the_gate_verdict_json() {
+        // Satellite: the floor lives in the GATE, so identical
+        // baseline/current artifacts still FAIL when both violate it —
+        // a drift check alone would wave this through.
+        let dir = std::env::temp_dir();
+        let bp = dir.join("cephalo_margin_base.json");
+        let cp = dir.join("cephalo_margin_cur.json");
+        let vp = dir.join("cephalo_margin_verdict.json");
+        let write = |p: &std::path::Path, rows: Vec<Json>| {
+            let mut root = BTreeMap::new();
+            root.insert("bench".to_string(), Json::Str("transport".into()));
+            root.insert("rows".to_string(), Json::Arr(rows));
+            std::fs::write(p, Json::Obj(root).render()).unwrap();
+        };
+        let degraded = vec![transport_row(131072.0, 4.0, 3.0)]; // 1.33x
+        write(&bp, degraded.clone());
+        write(&cp, degraded);
+        let pass = gate_files(
+            bp.to_str().unwrap(),
+            cp.to_str().unwrap(),
+            Some(vp.to_str().unwrap()),
+        )
+        .unwrap();
+        assert!(!pass, "shm below 2x TCP must fail even with no drift");
+        let verdict =
+            Json::parse(&std::fs::read_to_string(&vp).unwrap()).unwrap();
+        assert_eq!(verdict.get("pass").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            verdict.get("shm_tcp_margin").unwrap().as_f64(),
+            Some(SHM_TCP_MARGIN)
+        );
+        let margins = verdict
+            .get("margin_failures")
+            .and_then(|m| m.as_arr())
+            .expect("verdict carries margin_failures");
+        assert_eq!(margins.len(), 2);
+        assert!(margins[0]
+            .as_str()
+            .unwrap()
+            .contains("ag_shm_gbps"));
+        // At a healthy margin the same pair passes and the verdict's
+        // failure list is empty.
+        let healthy = vec![transport_row(131072.0, 7.5, 3.0)]; // 2.5x
+        write(&bp, healthy.clone());
+        write(&cp, healthy);
+        assert!(gate_files(
+            bp.to_str().unwrap(),
+            cp.to_str().unwrap(),
+            Some(vp.to_str().unwrap()),
+        )
+        .unwrap());
+        let verdict =
+            Json::parse(&std::fs::read_to_string(&vp).unwrap()).unwrap();
+        assert_eq!(verdict.get("pass").unwrap().as_bool(), Some(true));
+        assert!(verdict
+            .get("margin_failures")
+            .and_then(|m| m.as_arr())
+            .unwrap()
+            .is_empty());
+        for p in [&bp, &cp, &vp] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

@@ -18,6 +18,8 @@ use crate::transport::{
 };
 use crate::util::tablefmt::{fmt_throughput, Table};
 
+/// CLI entry point: dispatch `argv` (without the binary name) to a
+/// subcommand and return the process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
     let Some(cmd) = argv.first().cloned() else {
         print_help();
@@ -447,11 +449,24 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
                                   from and persist it to (--live)",
                    None));
     specs.push(switch("ft", "fault tolerance: heartbeat liveness \
-                             polling + optimizer-state mirroring on \
-                             rank 0 (--live, distributed fabrics)"));
+                             polling + optimizer-state mirroring, \
+                             sharded across survivor ranks (--live, \
+                             distributed fabrics)"));
+    specs.push(switch("mirror-leader", "legacy ft mirror placement: \
+                             one flat copy on rank 0 instead of the \
+                             sharded survivor spread (recovery is \
+                             bitwise identical either way)"));
+    specs.push(opt("rejoin-window", "milliseconds a suspected rank is \
+                             courted with REJOIN handshakes before \
+                             being declared dead; 0 = suspicion is \
+                             death (--live, implies nothing else)",
+                   Some("0")));
     specs.push(opt("chaos", "deterministic fault injection (--live): \
                              seed=N[,crash=K][,first=S][,stride=D]\
-                             [,delay=P][,delay_ms=M][,dup=P]; \
+                             [,delay=P][,delay_ms=M][,dup=P]\
+                             [,drop_ping=R][,drop_first=N]\
+                             [,drop_count=K][,poll_delay_ms=M]\
+                             [,taint=R][,coord_crash=N]; \
                              implies --ft", None));
     specs.push(opt("chaos-log", "write the fault plan and recovery \
                                  timings as JSON here (--live)", None));
@@ -476,12 +491,15 @@ fn cmd_elastic(argv: &[String]) -> Result<(), String> {
     }
     if !a.has("live")
         && (a.has("ft")
+            || a.has("mirror-leader")
+            || a.get_u64("rejoin-window").unwrap_or(0) > 0
             || a.get("chaos").is_some()
             || a.get("chaos-log").is_some()
             || a.get("trace-out").is_some())
     {
-        return Err("--ft / --chaos / --chaos-log / --trace-out apply to \
-                    --live sessions only"
+        return Err("--ft / --mirror-leader / --rejoin-window / --chaos \
+                    / --chaos-log / --trace-out apply to --live \
+                    sessions only"
             .into());
     }
     if a.has("live") {
@@ -588,6 +606,8 @@ fn cmd_elastic_live(
         fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
         plan_cache_path: a.get("plan-cache").map(std::path::PathBuf::from),
         ft: a.has("ft"),
+        mirror_leader: a.has("mirror-leader"),
+        rejoin_window_ms: a.get_u64("rejoin-window").unwrap_or(0),
         chaos: a.get("chaos").map(String::from),
         hosts: parse_hosts(&a, cluster.num_gpus())?,
         trace_out: trace_out.clone(),
@@ -651,6 +671,26 @@ fn cmd_elastic_live(
         }
         println!("{}", rt.render());
     }
+    if !session.rejoins.is_empty() {
+        let mut jt = Table::new(
+            "Rejoins (partitioned ranks re-admitted inside the rejoin \
+             window)",
+            &["hour", "step", "rank", "probes", "path", "migrate (ms)",
+              "state moved (elems)"],
+        );
+        for r in &session.rejoins {
+            jt.add_row(vec![
+                r.hour.to_string(),
+                r.step.to_string(),
+                r.rank.to_string(),
+                r.attempts.to_string(),
+                String::from(if r.hit { "in place" } else { "re-stream" }),
+                format!("{:.2}", r.migrate_ms),
+                r.moved_state_elems.to_string(),
+            ]);
+        }
+        println!("{}", jt.render());
+    }
     if let Some(timings) = session.rank_timings() {
         print_skew_report(
             session.planned_rank_seconds().as_deref(),
@@ -709,6 +749,28 @@ fn write_chaos_log(path: &str, session: &Session) -> Result<(), String> {
         })
         .collect();
     obj.insert("recoveries".to_string(), Json::Arr(recoveries));
+    let rejoins: Vec<Json> = session
+        .rejoins
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("hour".to_string(), Json::Num(r.hour as f64));
+            o.insert("step".to_string(), Json::Num(r.step as f64));
+            o.insert("rank".to_string(), Json::Num(r.rank as f64));
+            o.insert(
+                "attempts".to_string(),
+                Json::Num(r.attempts as f64),
+            );
+            o.insert("hit".to_string(), Json::Bool(r.hit));
+            o.insert("migrate_ms".to_string(), Json::Num(r.migrate_ms));
+            o.insert(
+                "moved_state_elems".to_string(),
+                Json::Num(r.moved_state_elems as f64),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    obj.insert("rejoins".to_string(), Json::Arr(rejoins));
     std::fs::write(path, Json::Obj(obj).render())
         .map_err(|e| e.to_string())
 }
@@ -993,6 +1055,9 @@ fn train_distributed(
         surrogate: SurrogateSpec::default(),
         shard_params: shard_params_flag(a)?,
         ft: false,
+        mirror_leader: false,
+        rejoin_window_ms: 0,
+        ping_timeout_ms: 2000,
         fsdp_units: a.get_usize("fsdp-units").unwrap_or(1),
         hosts: parse_hosts(a, world)?,
         trace_out: a.get("trace-out").map(String::from),

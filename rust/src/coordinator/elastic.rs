@@ -31,14 +31,18 @@ pub struct Transfer {
     pub to: usize,
     /// Flat element range being moved.
     pub start: usize,
+    /// Length of the range, in elements.
     pub len: usize,
 }
 
 /// Result of an elastic re-plan.
 #[derive(Debug)]
 pub struct Replan {
+    /// The new batch/stage assignment for the surviving membership.
     pub assignment: Assignment,
+    /// The new shard layout the assignment implies.
     pub new_layout: ShardLayout,
+    /// Ranges to move, in deterministic destination-major order.
     pub transfers: Vec<Transfer>,
     /// Elements that stay on their current owner (no traffic).
     pub resident_elems: usize,

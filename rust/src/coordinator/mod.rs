@@ -3,6 +3,8 @@
 //! (`coordinator::app`) and elastic re-planning
 //! (`coordinator::elastic`).
 
+#![warn(missing_docs)]
+
 pub mod app;
 pub mod elastic;
 #[cfg(feature = "xla")]
@@ -22,10 +24,15 @@ use crate::sim::GaVariant;
 
 /// Everything needed to evaluate one (cluster, model) workload.
 pub struct Workload {
+    /// The heterogeneous GPU cluster being planned for.
     pub cluster: Cluster,
+    /// The transformer being trained (a Table-1 architecture).
     pub model: TransformerSpec,
+    /// Synthetic profiling oracle (the stand-in for timing real GPUs).
     pub oracle: SyntheticOracle,
+    /// Fitted per-GPU compute/memory performance models.
     pub profile: ClusterPerfProfile,
+    /// Fitted collective-communication cost model.
     pub collective: CollectiveModel,
     /// `plan::fingerprint(cluster, profile)`, memoized so every
     /// `ctx()`/cache lookup is a hash probe, not a profile re-render.

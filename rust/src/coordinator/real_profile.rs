@@ -18,9 +18,13 @@ use crate::util::prng::Rng;
 /// One measured point.
 #[derive(Debug, Clone)]
 pub struct LayerSample {
+    /// Microbatch size the executable was compiled for.
     pub microbatch: usize,
+    /// Mean wall time per forward over `reps` repetitions.
     pub mean_seconds: f64,
+    /// Fastest single repetition (the least-noisy estimate).
     pub min_seconds: f64,
+    /// Number of timed repetitions.
     pub reps: usize,
 }
 

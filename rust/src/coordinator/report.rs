@@ -9,11 +9,17 @@ use crate::plan::{PlanOutcome, PlannerRegistry, SweepCell};
 /// The systems compared across the paper's tables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SystemKind {
+    /// This repo's planner (the paper's system).
     Cephalo,
+    /// Megatron-LM with heterogeneity-aware uniform stages.
     MegatronHet,
+    /// FlashFlex-style asymmetric pipeline planning.
     FlashFlex,
+    /// Whale-style hardware-aware operator placement.
     Whale,
+    /// HAP-style hybrid automatic parallelism.
     Hap,
+    /// Homogeneous fully-sharded data parallelism.
     Fsdp,
 }
 

@@ -35,13 +35,21 @@
 
 //! Fault tolerance: with [`SessionConfig::ft`] (or a chaos spec) on a
 //! distributed fabric, the session polls the driver's failure detector
-//! before every migration and every step. A detected-dead rank is
-//! synthesized into the SAME elastic departure path as a trace-driven
-//! shrink — re-plan via the cache, wire-migrate with rank 0's mirror
-//! substituting for the corpse — so a crash-recovered session is
-//! bitwise identical to one that planned the same membership change
-//! gracefully (DESIGN.md invariant 12). Dead ranks clamp `max_live`,
-//! so later regrow events never re-admit a corpse.
+//! before every migration and every step. A suspected rank first gets
+//! a bounded rejoin window ([`SessionConfig::rejoin_window_ms`]): if
+//! it answers the REJOIN handshake with a shard fingerprint matching
+//! the driver's ledger it resumes in place — zero bytes move, no
+//! migration is planned — and with a stale fingerprint it is
+//! re-streamed from the mirror like a fresh joiner. A rank that never
+//! answers inside the window is declared dead and synthesized into the
+//! SAME elastic departure path as a trace-driven shrink — re-plan via
+//! the cache, wire-migrate with the mirror (spread across survivors by
+//! [`crate::transport::MirrorLayout`] by default, rank-0 flat under
+//! [`SessionConfig::mirror_leader`]) substituting for the corpse — so
+//! a crash-recovered session is bitwise identical to one that planned
+//! the same membership change gracefully (DESIGN.md invariants 12 and
+//! 15). Dead ranks clamp `max_live`, so later regrow events never
+//! re-admit a corpse.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -58,6 +66,7 @@ use crate::trainer::adam::{AdamConfig, AdamShard};
 use crate::trainer::{StepStats, TrainConfig, Trainer};
 use crate::transport::{
     ChaosConfig, ChaosOpts, DistConfig, DistDriver, FabricSpec, FaultPlan,
+    PollReport,
 };
 use crate::util::error::{anyhow, Result};
 
@@ -73,7 +82,9 @@ pub struct SessionConfig {
     pub batch: usize,
     /// Training steps to run after each membership change.
     pub steps_per_event: usize,
+    /// Seed for weight init, the corpus stream and chaos schedules.
     pub seed: u64,
+    /// Adam hyperparameters shared by every engine.
     pub adam: AdamConfig,
     /// Smallest membership a churn event may shrink to; 0 = auto
     /// (two below the full cluster, at least 1).
@@ -99,11 +110,23 @@ pub struct SessionConfig {
     /// [`Session::save_plan_cache`] — recurring memberships stay warm
     /// across restarts.
     pub plan_cache_path: Option<PathBuf>,
-    /// Fault-tolerant mode (distributed fabrics only): keep the rank-0
-    /// state mirror, probe liveness at step boundaries, and recover
-    /// detected-dead ranks through the elastic departure path. Implied
-    /// by `chaos`.
+    /// Fault-tolerant mode (distributed fabrics only): keep the state
+    /// mirror current every step, probe liveness at step boundaries,
+    /// and recover detected-dead ranks through the elastic departure
+    /// path. Implied by `chaos`.
     pub ft: bool,
+    /// Use the legacy rank-0 flat mirror instead of the default
+    /// [`crate::transport::MirrorLayout`] sharded placement. Recovery
+    /// is bitwise identical either way (DESIGN.md invariant 15).
+    pub mirror_leader: bool,
+    /// Bounded rejoin window (`--rejoin-window`, milliseconds): how
+    /// long the driver courts a suspected rank with REJOIN handshakes
+    /// before declaring it dead. 0 = legacy behavior, suspicion is
+    /// death.
+    pub rejoin_window_ms: u64,
+    /// How long a liveness probe waits for its PING echo before the
+    /// rank is suspected (milliseconds).
+    pub ping_timeout_ms: u64,
     /// Deterministic fault injection: a `seed=N[,crash=..,..]` spec
     /// (see [`ChaosConfig::parse`]) wrapping every worker endpoint in a
     /// seeded [`crate::transport::ChaosTransport`]. Requires a
@@ -135,6 +158,9 @@ impl Default for SessionConfig {
             fsdp_units: 1,
             plan_cache_path: None,
             ft: false,
+            mirror_leader: false,
+            rejoin_window_ms: 0,
+            ping_timeout_ms: 2000,
             chaos: None,
             hosts: None,
             trace_out: None,
@@ -145,19 +171,24 @@ impl Default for SessionConfig {
 /// What one churn event did.
 #[derive(Debug, Clone)]
 pub struct EventReport {
+    /// Ordinal of this churn event within the session.
     pub event: usize,
+    /// Trace hour the event's membership size came from.
     pub hour: usize,
     /// Membership size after the event.
     pub gpus: usize,
     /// True when the re-plan was served by the shared [`PlanCache`].
     pub from_cache: bool,
+    /// Wall time of the re-plan (0 on cache hits).
     pub solve_seconds: f64,
     /// Planning-scale migration traffic (16 B per Table-2 parameter).
     pub migration_bytes: f64,
     /// Executed-scale elements actually copied between shards or
     /// restored from the checkpoint.
     pub moved_state_elems: usize,
+    /// Training steps executed in this event.
     pub steps: usize,
+    /// Mean per-token loss over the event's steps.
     pub mean_loss: f64,
     /// Steps/sec under the executor's `step_seconds` timing hook —
     /// MODELED time when a `StepTimeModel` is attached (the number the
@@ -194,6 +225,29 @@ pub struct RecoveryReport {
     pub migration_bytes: f64,
     /// Executed-scale state elements re-sourced over the wire — ranges
     /// owned by the corpse come from its mirror. Deterministic.
+    pub moved_state_elems: usize,
+}
+
+/// What one rejoin handshake did (ft sessions with a rejoin window;
+/// one entry per partitioned-then-returned rank).
+#[derive(Debug, Clone)]
+pub struct RejoinReport {
+    /// Trace hour of the enclosing churn event.
+    pub hour: usize,
+    /// Global steps executed when the rank rejoined.
+    pub step: usize,
+    /// The rank that went silent and came back.
+    pub rank: usize,
+    /// REJOIN probes before the rank answered.
+    pub attempts: u64,
+    /// True when the reported shard fingerprint matched the driver's
+    /// ledger: the rank resumed from its resident shards and ZERO
+    /// bytes moved. False: its state was untrusted and re-streamed
+    /// from the mirror like a fresh joiner's.
+    pub hit: bool,
+    /// Wall time of the re-stream migration; 0 for fingerprint hits.
+    pub migrate_ms: f64,
+    /// Executed-scale state elements re-streamed; 0 for hits.
     pub moved_state_elems: usize,
 }
 
@@ -234,8 +288,15 @@ pub struct Session {
     max_live: usize,
     /// The generated fault schedule, when chaos injection is on.
     fault_plan: Option<FaultPlan>,
+    /// Recovery migrations executed so far (deaths or re-streams) —
+    /// the counter the coordinator-crash chaos point keys on.
+    recovery_migrations: u64,
+    /// One entry per completed churn event.
     pub reports: Vec<EventReport>,
+    /// One entry per recovery migration triggered by dead ranks.
     pub recoveries: Vec<RecoveryReport>,
+    /// One entry per completed rejoin handshake (hits and re-streams).
+    pub rejoins: Vec<RejoinReport>,
 }
 
 /// The first `k` GPUs of `base` in canonical (node, slot) order,
@@ -370,6 +431,9 @@ impl Session {
                     shard_params: cfg.shard_params,
                     fsdp_units: cfg.fsdp_units,
                     ft: cfg.ft || cfg.chaos.is_some(),
+                    mirror_leader: cfg.mirror_leader,
+                    rejoin_window_ms: cfg.rejoin_window_ms,
+                    ping_timeout_ms: cfg.ping_timeout_ms,
                     hosts: cfg.hosts.clone(),
                     trace_out: cfg.trace_out.clone(),
                 };
@@ -404,8 +468,10 @@ impl Session {
             current_asg: asg,
             max_live: n,
             fault_plan,
+            recovery_migrations: 0,
             reports: Vec::new(),
             recoveries: Vec::new(),
+            rejoins: Vec::new(),
         })
     }
 
@@ -436,11 +502,31 @@ impl Session {
     /// recovery. Updates `current_asg`/`current_size`.
     fn replan_and_migrate(&mut self, size: usize)
         -> Result<MigrationStats> {
+        self.replan_and_migrate_with(size, &[])
+    }
+
+    /// [`Session::replan_and_migrate`] with a RESTREAM list: live
+    /// ranks whose state is untrusted after a fingerprint-miss rejoin.
+    /// They drop out of the survivor map (their full new range streams
+    /// over the wire, sourced from mirror holders) but stay in the
+    /// membership — re-admitted exactly like fresh arrivals.
+    fn replan_and_migrate_with(
+        &mut self,
+        size: usize,
+        restream: &[usize],
+    ) -> Result<MigrationStats> {
         // Prefix memberships: new rank i is the same physical GPU as
         // old rank i while it existed; ranks past the old size are
-        // fresh arrivals (checkpoint-restore targets).
+        // fresh arrivals (checkpoint-restore targets), and restreamed
+        // ranks are treated as arrivals wherever they land.
         let survivors: Vec<Option<usize>> = (0..size)
-            .map(|i| if i < self.current_size { Some(i) } else { None })
+            .map(|i| {
+                if i < self.current_size && !restream.contains(&i) {
+                    Some(i)
+                } else {
+                    None
+                }
+            })
             .collect();
         ensure_workload(
             &mut self.workloads,
@@ -479,8 +565,10 @@ impl Session {
         // engine's actual flat state. A recurring membership that
         // re-plans to the EXACT running assignment (the cache-hit
         // steady state) is a true no-op: skip the checkpoint/copy/adopt
-        // churn entirely.
-        let unchanged = size == self.current_size
+        // churn entirely — unless a rank needs its state re-streamed,
+        // which is wire traffic even at an unchanged layout.
+        let unchanged = restream.is_empty()
+            && size == self.current_size
             && re.assignment == self.current_asg;
         let sp =
             crate::telemetry::span(crate::telemetry::CAT_MIGRATE, "migrate");
@@ -554,10 +642,13 @@ impl Session {
                 Engine::Dist(driver) => {
                     // The SAME transfer list, executed as rank-to-rank
                     // wire traffic (peer copies; departed owners are
-                    // standby processes — or, once declared dead, the
-                    // rank-0 mirror — re-streaming their ranges,
-                    // numerically the checkpoint restore).
-                    driver.migrate(workers, &survivors, &transfers)?;
+                    // standby processes — or, once declared dead or
+                    // restreamed, their mirror holders — re-streaming
+                    // their ranges, numerically the checkpoint
+                    // restore).
+                    driver.migrate_with(
+                        workers, &survivors, &transfers, restream,
+                    )?;
                 }
             }
             moved
@@ -577,76 +668,180 @@ impl Session {
         Ok(stats)
     }
 
-    /// Poll the distributed failure detector and recover from any
-    /// newly dead ranks: clamp `max_live`, and — when a dead rank is
-    /// inside the current membership — synthesize the SAME elastic
-    /// departure a graceful shrink would take (re-plan + wire migrate
-    /// with the mirror standing in for the corpse). No-op on
-    /// in-process engines and non-ft drivers.
+    /// Poll the distributed failure detector and absorb the verdicts:
+    /// fingerprint-hit rejoins resume in place (recorded, nothing
+    /// moves); fingerprint-miss rejoins are re-streamed from the
+    /// mirror at the current membership; newly dead ranks clamp
+    /// `max_live` and — when inside the current membership —
+    /// synthesize the SAME elastic departure a graceful shrink would
+    /// take (re-plan + wire migrate with the mirror standing in for
+    /// the corpse). Deaths and re-streams found in one sweep fold into
+    /// ONE migration. No-op on in-process engines and non-ft drivers.
     fn recover_failures(&mut self, hour: usize) -> Result<()> {
         let sp =
             crate::telemetry::span(crate::telemetry::CAT_DETECT, "detect");
         let t_detect = Instant::now();
-        let newly = match &mut self.engine {
+        let poll = match &mut self.engine {
             Engine::Dist(d) => d.poll_failures(),
-            Engine::InProcess(_) => Vec::new(),
+            Engine::InProcess(_) => PollReport::default(),
         };
         drop(sp);
-        if newly.is_empty() {
+        if poll.is_empty() {
             return Ok(());
         }
         let detect_ms = t_detect.elapsed().as_secs_f64() * 1e3;
         let _recover_sp =
             crate::telemetry::span(crate::telemetry::CAT_RECOVER, "recover");
+        for ev in poll.rejoined.iter().filter(|e| e.hit) {
+            crate::info!(
+                "rank {} rejoined in place after {} probe(s) at step {} \
+                 (fingerprint hit: resident shards trusted, zero bytes \
+                 moved)",
+                ev.rank,
+                ev.attempts,
+                self.steps_run()
+            );
+            self.rejoins.push(RejoinReport {
+                hour,
+                step: self.steps_run(),
+                rank: ev.rank,
+                attempts: ev.attempts,
+                hit: true,
+                migrate_ms: 0.0,
+                moved_state_elems: 0,
+            });
+        }
+        let newly = poll.dead.clone();
+        let restream = poll.restream();
+        if newly.is_empty() && restream.is_empty() {
+            return Ok(());
+        }
         for &d in &newly {
             if d == 0 {
                 return Err(anyhow!("coordinator rank cannot die"));
             }
             self.max_live = self.max_live.min(d);
         }
-        crate::warn!(
-            "rank(s) {newly:?} declared dead at step {}; max membership \
-             now {}",
-            self.steps_run(),
-            self.max_live
-        );
+        if !newly.is_empty() {
+            crate::warn!(
+                "rank(s) {newly:?} declared dead at step {}; max \
+                 membership now {}",
+                self.steps_run(),
+                self.max_live
+            );
+        }
+        for &r in &restream {
+            crate::warn!(
+                "rank {r} rejoined with a stale fingerprint at step {}; \
+                 re-streaming its state from the mirror",
+                self.steps_run()
+            );
+        }
+        let target = self.current_size.min(self.max_live);
+        let need_migration =
+            self.current_size > self.max_live || !restream.is_empty();
         let (replan_ms, migrate_ms, migration_bytes, moved) =
-            if self.current_size > self.max_live {
-                let st = self.replan_and_migrate(self.max_live)?;
+            if need_migration {
+                self.recovery_migrations += 1;
+                let crash_here = self
+                    .fault_plan
+                    .as_ref()
+                    .and_then(|p| p.driver.coord_crash_recovery)
+                    == Some(self.recovery_migrations);
+                if crash_here {
+                    // Chaos: the coordinator "dies" after the re-plan
+                    // lands in the cache but before the migration
+                    // executes, then restarts and replays the whole
+                    // recovery. The replay must be idempotent: the
+                    // cache serves the same plan and the migration
+                    // runs exactly once.
+                    self.plan_only(target)?;
+                    crate::warn!(
+                        "chaos: coordinator crash between re-plan and \
+                         migrate (recovery {}); replaying recovery",
+                        self.recovery_migrations
+                    );
+                }
+                let st =
+                    self.replan_and_migrate_with(target, &restream)?;
                 (st.replan_ms, st.migrate_ms, st.migration_bytes, st.moved)
             } else {
                 // Dead ranks were standby: nothing to migrate, the clamp
                 // alone keeps them out of future memberships.
                 (0.0, 0.0, 0.0, 0)
             };
-        // Dead ranks are never re-admitted, so plans for memberships
-        // larger than `max_live` can never be served again: age their
-        // fingerprints out of the cache (counted apart from LRU).
-        let live: Vec<u64> = self
-            .workloads
-            .iter()
-            .filter(|(size, _)| **size <= self.max_live)
-            .map(|(_, w)| w.fingerprint)
-            .collect();
-        let aged = self.cache.retain_fingerprints(&live);
-        if aged > 0 {
-            crate::info!(
-                "aged {aged} cached plan(s) for unreachable memberships \
-                 (> {} ranks) out of the plan cache",
-                self.max_live
-            );
+        if !newly.is_empty() {
+            // Dead ranks are never re-admitted, so plans for
+            // memberships larger than `max_live` can never be served
+            // again: age their fingerprints out of the cache (counted
+            // apart from LRU).
+            let live: Vec<u64> = self
+                .workloads
+                .iter()
+                .filter(|(size, _)| **size <= self.max_live)
+                .map(|(_, w)| w.fingerprint)
+                .collect();
+            let aged = self.cache.retain_fingerprints(&live);
+            if aged > 0 {
+                crate::info!(
+                    "aged {aged} cached plan(s) for unreachable \
+                     memberships (> {} ranks) out of the plan cache",
+                    self.max_live
+                );
+            }
+            self.recoveries.push(RecoveryReport {
+                hour,
+                step: self.steps_run(),
+                ranks: newly,
+                gpus: self.current_size,
+                detect_ms,
+                replan_ms,
+                migrate_ms,
+                migration_bytes,
+                moved_state_elems: moved,
+            });
         }
-        self.recoveries.push(RecoveryReport {
-            hour,
-            step: self.steps_run(),
-            ranks: newly,
-            gpus: self.current_size,
-            detect_ms,
-            replan_ms,
-            migrate_ms,
-            migration_bytes,
-            moved_state_elems: moved,
-        });
+        for ev in poll.rejoined.iter().filter(|e| !e.hit) {
+            self.rejoins.push(RejoinReport {
+                hour,
+                step: self.steps_run(),
+                rank: ev.rank,
+                attempts: ev.attempts,
+                hit: false,
+                migrate_ms,
+                moved_state_elems: moved,
+            });
+        }
+        Ok(())
+    }
+
+    /// The re-plan half of a recovery and nothing else — the state the
+    /// coordinator-crash chaos point leaves behind. Warms the workload
+    /// memo and the plan cache exactly like the real recovery's
+    /// re-plan; touches neither the engine nor
+    /// `current_asg`/`current_size`.
+    fn plan_only(&mut self, size: usize) -> Result<()> {
+        let survivors: Vec<Option<usize>> = (0..size)
+            .map(|i| if i < self.current_size { Some(i) } else { None })
+            .collect();
+        ensure_workload(
+            &mut self.workloads,
+            &self.base,
+            &self.cfg.model,
+            self.cfg.seed,
+            size,
+        )?;
+        let old_w = &self.workloads[&self.current_size];
+        let new_w = &self.workloads[&size];
+        elastic::replan(
+            &self.current_asg,
+            &old_w.profile,
+            &new_w.ctx(self.cfg.batch),
+            &survivors,
+            &*self.planner,
+            Some(&self.cache),
+        )
+        .map_err(|e| anyhow!(e.to_string()))?;
         Ok(())
     }
 
@@ -778,10 +973,12 @@ impl Session {
         Ok(())
     }
 
+    /// The session's shared plan cache (hit/miss counters included).
     pub fn cache(&self) -> &PlanCache {
         &self.cache
     }
 
+    /// Current membership size (ranks actively training).
     pub fn current_size(&self) -> usize {
         self.current_size
     }
@@ -953,6 +1150,70 @@ mod tests {
             chaotic.params().unwrap(),
             reference.params().unwrap(),
             "crash-recovered session left the reference trajectory"
+        );
+    }
+
+    #[test]
+    fn dropped_ping_heals_by_rejoin_without_migration() {
+        // Rejoin tentpole at the session level: coordinator-side chaos
+        // drops a healthy rank's PING echo once, raising a false
+        // suspicion. Inside the rejoin window the rank answers the
+        // REJOIN handshake with a fingerprint matching the ledger, so
+        // it resumes in place: no recovery migration, no membership
+        // clamp, and the trajectory stays bitwise on the in-process
+        // reference (invariants 10 + 15).
+        let mut chaotic = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            SessionConfig {
+                batch: 8,
+                steps_per_event: 2,
+                seed: 7,
+                min_gpus: 1,
+                fabric: Some(FabricSpec::Local),
+                chaos: Some(
+                    "seed=5,crash=0,delay=0,dup=0,drop_ping=1,\
+                     drop_first=1"
+                        .into(),
+                ),
+                rejoin_window_ms: 5000,
+                ping_timeout_ms: 200,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut reference = Session::new(
+            tiny_cluster(),
+            Arc::new(CephaloPlanner::default()),
+            SessionConfig {
+                batch: 8,
+                steps_per_event: 2,
+                seed: 7,
+                min_gpus: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for hour in 0..2 {
+            chaotic.step_event(hour, 2).unwrap();
+            reference.step_event(hour, 2).unwrap();
+        }
+        assert!(
+            chaotic.recoveries.is_empty(),
+            "a healed partition must not migrate"
+        );
+        assert_eq!(chaotic.rejoins.len(), 1);
+        let rj = &chaotic.rejoins[0];
+        assert_eq!(rj.rank, 1);
+        assert!(rj.hit, "matching fingerprint must resume in place");
+        assert_eq!(rj.moved_state_elems, 0);
+        assert_eq!(chaotic.max_live(), 2, "rejoined rank stays live");
+        assert_eq!(chaotic.current_size(), 2);
+        assert_eq!(chaotic.steps_run(), reference.steps_run());
+        assert_eq!(
+            chaotic.params().unwrap(),
+            reference.params().unwrap(),
+            "rejoin perturbed the trajectory"
         );
     }
 

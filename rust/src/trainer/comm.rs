@@ -370,6 +370,7 @@ mod tests {
                 delay_prob: 0.5,
                 max_delay_ms: 1,
                 dup_prob: 0.5,
+                ..Default::default()
             },
         );
         for mut engine in [

@@ -62,6 +62,7 @@ pub enum CrashMode {
 /// derives them from a seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RankFaults {
+    /// The rank this schedule applies to.
     pub rank: usize,
     /// Crash on the next command fetch after COMPLETING this global
     /// step (the reply and ft-sync frames for the step are already
@@ -99,6 +100,68 @@ impl RankFaults {
     }
 }
 
+/// Coordinator-side fault schedule: faults that fire in the DRIVER,
+/// not on a worker lane. The coordinator was previously assumed
+/// reliable; these knobs let chaos runs exercise its recovery paths —
+/// dropped liveness frames, delayed polls, a tainted rejoin digest,
+/// and a crash between re-plan and migrate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DriverFaults {
+    /// Drop the named rank's PING echo at the coordinator (the frame
+    /// arrives but the driver pretends it did not), forcing a
+    /// suspicion on a healthy rank.
+    pub drop_ping_rank: Option<usize>,
+    /// First liveness poll (1-based) at which `drop_ping_rank` fires.
+    pub drop_ping_first_poll: u64,
+    /// How many consecutive polls the drop persists for.
+    pub drop_ping_polls: u64,
+    /// Sleep this long at the top of every liveness poll (a slow,
+    /// overloaded coordinator).
+    pub poll_delay_ms: u64,
+    /// Corrupt this rank's reported rejoin fingerprint ONCE, forcing
+    /// the re-stream path on an otherwise-clean rejoin.
+    pub taint_rank: Option<usize>,
+    /// Crash the coordinator between re-plan and migrate on the n-th
+    /// (1-based) recovery, exercising idempotent recovery.
+    pub coord_crash_recovery: Option<u64>,
+}
+
+impl Default for DriverFaults {
+    fn default() -> Self {
+        DriverFaults::quiet()
+    }
+}
+
+impl DriverFaults {
+    /// No coordinator-side faults.
+    pub fn quiet() -> DriverFaults {
+        DriverFaults {
+            drop_ping_rank: None,
+            drop_ping_first_poll: 1,
+            drop_ping_polls: 1,
+            poll_delay_ms: 0,
+            taint_rank: None,
+            coord_crash_recovery: None,
+        }
+    }
+
+    /// True when no coordinator-side fault can ever fire.
+    pub fn is_quiet(&self) -> bool {
+        self.drop_ping_rank.is_none()
+            && self.poll_delay_ms == 0
+            && self.taint_rank.is_none()
+            && self.coord_crash_recovery.is_none()
+    }
+
+    /// Should the coordinator drop `rank`'s PING echo on liveness poll
+    /// number `poll` (1-based)?
+    pub fn drops_ping(&self, rank: usize, poll: u64) -> bool {
+        self.drop_ping_rank == Some(rank)
+            && poll >= self.drop_ping_first_poll
+            && poll < self.drop_ping_first_poll + self.drop_ping_polls
+    }
+}
+
 /// Knobs for [`FaultPlan::generate`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChaosConfig {
@@ -112,9 +175,16 @@ pub struct ChaosConfig {
     /// Minimum spacing between successive crash steps; the generator
     /// adds seeded jitter on top.
     pub crash_step_stride: u64,
+    /// Per-send probability of a seeded delay.
     pub delay_prob: f64,
+    /// Upper bound on one injected delay, in milliseconds.
     pub max_delay_ms: u64,
+    /// Per-send probability of re-transmitting the frame (the
+    /// receiver's sequence dedup must absorb it).
     pub dup_prob: f64,
+    /// Coordinator-side faults, copied into the plan verbatim (they
+    /// are schedules already, nothing to derive from the seed).
+    pub driver: DriverFaults,
 }
 
 impl Default for ChaosConfig {
@@ -126,6 +196,7 @@ impl Default for ChaosConfig {
             delay_prob: 0.05,
             max_delay_ms: 2,
             dup_prob: 0.05,
+            driver: DriverFaults::quiet(),
         }
     }
 }
@@ -160,10 +231,30 @@ impl ChaosConfig {
                 "delay" => cfg.delay_prob = parsed(key, value)?,
                 "delay_ms" => cfg.max_delay_ms = parsed(key, value)?,
                 "dup" => cfg.dup_prob = parsed(key, value)?,
+                "drop_ping" => {
+                    cfg.driver.drop_ping_rank = Some(parsed(key, value)?)
+                }
+                "drop_first" => {
+                    cfg.driver.drop_ping_first_poll = parsed(key, value)?
+                }
+                "drop_count" => {
+                    cfg.driver.drop_ping_polls = parsed(key, value)?
+                }
+                "poll_delay_ms" => {
+                    cfg.driver.poll_delay_ms = parsed(key, value)?
+                }
+                "taint" => {
+                    cfg.driver.taint_rank = Some(parsed(key, value)?)
+                }
+                "coord_crash" => {
+                    cfg.driver.coord_crash_recovery =
+                        Some(parsed(key, value)?)
+                }
                 _ => {
                     return Err(crate::anyhow!(
                         "unknown chaos key `{key}` (try seed/crash/first/\
-                         stride/delay/delay_ms/dup)"
+                         stride/delay/delay_ms/dup/drop_ping/drop_first/\
+                         drop_count/poll_delay_ms/taint/coord_crash)"
                     ))
                 }
             }
@@ -178,9 +269,15 @@ impl ChaosConfig {
 /// structural, so "same seed ⇒ same plan" is directly assertable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
+    /// The seed the schedule was generated from.
     pub seed: u64,
-    /// `faults[rank]` — rank 0 (the coordinator) is always quiet.
+    /// `faults[rank]` — rank 0 (the coordinator) is always quiet ON
+    /// ITS LANES; coordinator-side faults live in `driver`.
     pub faults: Vec<RankFaults>,
+    /// Faults that fire in the coordinator itself (dropped liveness
+    /// frames, delayed polls, tainted rejoin digests, a crash between
+    /// re-plan and migrate).
+    pub driver: DriverFaults,
 }
 
 impl FaultPlan {
@@ -190,6 +287,7 @@ impl FaultPlan {
         FaultPlan {
             seed: 0,
             faults: (0..world).map(RankFaults::quiet).collect(),
+            driver: DriverFaults::quiet(),
         }
     }
 
@@ -213,9 +311,10 @@ impl FaultPlan {
             let stride = cfg.crash_step_stride.max(1);
             step += stride + rng.range(0, stride as usize + 1) as u64;
         }
-        FaultPlan { seed, faults }
+        FaultPlan { seed, faults, driver: cfg.driver.clone() }
     }
 
+    /// Number of ranks the schedule covers.
     pub fn world(&self) -> usize {
         self.faults.len()
     }
@@ -265,6 +364,36 @@ impl FaultPlan {
             })
             .collect();
         obj.insert("faults".into(), Json::Arr(ranks));
+        if !self.driver.is_quiet() {
+            let mut d = BTreeMap::new();
+            if let Some(r) = self.driver.drop_ping_rank {
+                d.insert("drop_ping_rank".into(), Json::Num(r as f64));
+                d.insert(
+                    "drop_ping_first_poll".into(),
+                    Json::Num(self.driver.drop_ping_first_poll as f64),
+                );
+                d.insert(
+                    "drop_ping_polls".into(),
+                    Json::Num(self.driver.drop_ping_polls as f64),
+                );
+            }
+            if self.driver.poll_delay_ms > 0 {
+                d.insert(
+                    "poll_delay_ms".into(),
+                    Json::Num(self.driver.poll_delay_ms as f64),
+                );
+            }
+            if let Some(r) = self.driver.taint_rank {
+                d.insert("taint_rank".into(), Json::Num(r as f64));
+            }
+            if let Some(n) = self.driver.coord_crash_recovery {
+                d.insert(
+                    "coord_crash_recovery".into(),
+                    Json::Num(n as f64),
+                );
+            }
+            obj.insert("driver".into(), Json::Obj(d));
+        }
         Json::Obj(obj)
     }
 }
@@ -307,6 +436,7 @@ impl<T: Transport> ChaosTransport<T> {
         }
     }
 
+    /// Unwrap the middleware, returning the inner fabric endpoint.
     pub fn into_inner(self) -> T {
         self.inner
     }
@@ -464,6 +594,10 @@ impl<T: Transport> Transport for ChaosTransport<T> {
         self.inner.peer_closed(rank)
     }
 
+    fn peer_failed(&self, rank: usize) -> bool {
+        self.inner.peer_failed(rank)
+    }
+
     fn close(&mut self) {
         self.inner.close();
     }
@@ -531,6 +665,36 @@ mod tests {
         assert!(ChaosConfig::parse("crash=2").is_err(), "seed is required");
         assert!(ChaosConfig::parse("seed=x").is_err());
         assert!(ChaosConfig::parse("seed=1,zap=2").is_err());
+    }
+
+    #[test]
+    fn driver_fault_spec_parses_and_schedules() {
+        let (_, cfg) = ChaosConfig::parse(
+            "seed=3,drop_ping=2,drop_first=4,drop_count=2,taint=1,\
+             poll_delay_ms=5,coord_crash=1",
+        )
+        .unwrap();
+        let d = &cfg.driver;
+        assert_eq!(d.drop_ping_rank, Some(2));
+        assert!(!d.drops_ping(2, 3), "before the window");
+        assert!(d.drops_ping(2, 4));
+        assert!(d.drops_ping(2, 5));
+        assert!(!d.drops_ping(2, 6), "after the window");
+        assert!(!d.drops_ping(1, 4), "only the named rank");
+        assert_eq!(d.taint_rank, Some(1));
+        assert_eq!(d.poll_delay_ms, 5);
+        assert_eq!(d.coord_crash_recovery, Some(1));
+        assert!(!d.is_quiet());
+        assert!(DriverFaults::quiet().is_quiet());
+        // The plan carries the schedule verbatim and renders it.
+        let plan = FaultPlan::generate(3, 3, &cfg);
+        assert_eq!(plan.driver, cfg.driver);
+        let rendered = plan.to_json().render();
+        assert!(rendered.contains("\"drop_ping_rank\":2"));
+        assert!(rendered.contains("\"taint_rank\":1"));
+        // A quiet driver stays out of the JSON entirely.
+        let quiet = FaultPlan::quiet(3).to_json().render();
+        assert!(!quiet.contains("driver"));
     }
 
     #[test]

@@ -101,6 +101,7 @@ impl RingOrder {
         self.order.len()
     }
 
+    /// Whether the ring has no ranks at all.
     pub fn is_empty(&self) -> bool {
         self.order.is_empty()
     }

@@ -31,19 +31,56 @@
 //! peer, so no barrier is needed between commands.
 //!
 //! Fault tolerance (`DistConfig::ft`): after every step each active
-//! worker streams its post-step Adam moments (and, fully-sharded, its
-//! weight slice) to rank 0, which folds them into a flat-indexed
-//! [`Mirror`]. When [`DistDriver::poll_failures`] declares a rank dead
-//! (closed lane, or an unanswered `PING` within the timeout), the next
-//! [`MigrateCmd`] carries the dead set and every rank substitutes rank
-//! 0's mirror for the dead owner in the transfer loop — so a crashed
-//! rank's state migrates EXACTLY like a graceful departure's, and the
-//! recovered trajectory is bitwise the never-crashed one (DESIGN.md
-//! invariant 12). Crashes are detected at step boundaries only: a rank
-//! that died mid-step fails the step itself (fail-stop), because a
+//! rank's post-step Adam moments (and, fully-sharded, its weight
+//! slice) are backed up into a [`Mirror`]. The DEFAULT placement is
+//! the sharded mirror: a [`MirrorLayout`] assigns every owner's backup
+//! to its ring successor (`(owner + 1) % group`, rank-0 fallback at
+//! `group <= 2`), so backup bytes per rank scale as `state/(n-1)`
+//! instead of concentrating on the leader. `DistConfig::mirror_leader`
+//! opts back into the legacy rank-0 flat mirror; both placements
+//! recover onto the SAME bits (DESIGN.md invariant 15). When
+//! [`DistDriver::poll_failures`] declares a rank dead (closed lane, or
+//! an unanswered `PING` within the timeout), the next [`MigrateCmd`]
+//! carries the dead set and every rank substitutes the dead owner's
+//! mirror holder in the transfer loop — so a crashed rank's state
+//! migrates EXACTLY like a graceful departure's, and the recovered
+//! trajectory is bitwise the never-crashed one (DESIGN.md invariant
+//! 12). Crashes are detected at step boundaries only: a rank that died
+//! mid-step fails the step itself (fail-stop), because a
 //! half-participated collective has no consistent state to recover.
+//!
+//! Rejoin (`DistConfig::rejoin_window_ms`): an unanswered probe no
+//! longer has to be a death sentence. With a non-zero window the
+//! driver retries the suspect with `REJOIN` probes (exponential
+//! backoff) until the window closes; a worker that was merely
+//! partitioned (or stopped) answers with its step counter and a
+//! fingerprint of its resident shards. A matching fingerprint
+//! re-admits the rank with NO data movement; a mismatch re-streams its
+//! ranges from the mirror like a fresh arrival ([`MigrateCmd`]'s
+//! `restream` set). Either way the trajectory is bitwise the
+//! never-partitioned one (DESIGN.md invariant 15).
+//!
+//! ```text
+//! REJOIN handshake (byte-frame payloads; framing per transport/mod.rs)
+//!
+//!   driver -> suspect     ┌───────────┬──────────────┐
+//!   (probe, retried with  │ op = 7    │ nonce        │
+//!   50→400ms backoff)     │ u8        │ u64 LE       │
+//!                         └───────────┴──────────────┘
+//!   suspect -> driver     ┌───────────┬──────────────┬──────────┬─────────────┐
+//!   (ack; echoes the      │ op = 7    │ nonce        │ step     │ fingerprint │
+//!   freshest nonce seen)  │ u8        │ u64 LE       │ u64 LE   │ u64 LE      │
+//!                         └───────────┴──────────────┴──────────┴─────────────┘
+//!
+//!   step        = global steps the rank has completed (a mismatch is
+//!                 fatal: its corpus stream position diverged)
+//!   fingerprint = FNV-1a 64 over the rank's shard step + Adam moment
+//!                 bits + weight-slice bits; compared against the
+//!                 driver's per-rank ledger (refreshed from every STEP
+//!                 reply and after every MIGRATE)
+//! ```
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -57,6 +94,7 @@ use crate::trainer::data::{split_batch, Corpus};
 use crate::trainer::{
     flatten, unflatten, unflatten_into, StepStats, WorkerSpec,
 };
+use crate::transport::chaos::DriverFaults;
 use crate::transport::{
     collectives as wire, ChaosTransport, CrashMode, FaultPlan,
     HostTopology, HybridTransport, LocalFabric, ShmFabric, ShmTransport,
@@ -114,6 +152,7 @@ impl FabricSpec {
         }
     }
 
+    /// Short fabric name for logs, reports and bench tables.
     pub fn label(&self) -> &'static str {
         match self {
             FabricSpec::Local => "local",
@@ -130,9 +169,13 @@ impl FabricSpec {
 /// Everything a rank needs to stand itself up, broadcast in `INIT`.
 #[derive(Debug, Clone)]
 pub struct DistConfig {
+    /// Seed for weight init and the shared corpus stream.
     pub seed: u64,
+    /// Adam hyperparameters, identical on every rank.
     pub adam: AdamConfig,
+    /// Corpus branch index (selects the data stream).
     pub corpus_branch: usize,
+    /// The executed model (surrogate transformer spec).
     pub surrogate: SurrogateSpec,
     /// Fully-sharded parameters: every rank holds only its `r_i` slice
     /// of the weights, materializing the full vector per step with the
@@ -146,6 +189,25 @@ pub struct DistConfig {
     /// default — the sync costs one extra model-sized transfer per
     /// step per rank.
     pub ft: bool,
+    /// Keep the legacy LEADER mirror (rank 0 folds every rank's backup
+    /// into one flat copy) instead of the default sharded
+    /// [`MirrorLayout`] placement. The leader mirror concentrates
+    /// `state` bytes on rank 0; the sharded mirror spreads
+    /// `state/(n-1)` bytes per rank over ring successors. Recovery is
+    /// bitwise identical either way (DESIGN.md invariant 15).
+    pub mirror_leader: bool,
+    /// Bounded rejoin window in milliseconds: when a liveness probe
+    /// goes unanswered, retry the suspect with `REJOIN` handshakes
+    /// (exponential backoff) for this long before declaring it dead.
+    /// `0` (the default) disables retry — the first unanswered probe
+    /// is a death verdict, the pre-rejoin behavior.
+    pub rejoin_window_ms: u64,
+    /// How long [`DistDriver::poll_failures`] waits for a `PING` echo.
+    /// Probes run at step boundaries when every live worker is blocked
+    /// on `recv`, so a live echo arrives in microseconds; the default
+    /// 2000 ms margin covers scheduler jitter and chaos-injected
+    /// delivery delays. Tests shrink it to keep suspicion cheap.
+    pub ping_timeout_ms: u64,
     /// FSDP units for the sharded step (`<= 1` = whole-model gather):
     /// each rank gathers unit k+1's weights on the wire WHILE unit k
     /// computes (round-stepped [`wire::AllGatherOp`] driven between
@@ -180,6 +242,9 @@ impl Default for DistConfig {
             surrogate: SurrogateSpec::default(),
             shard_params: false,
             ft: false,
+            mirror_leader: false,
+            rejoin_window_ms: 0,
+            ping_timeout_ms: 2000,
             fsdp_units: 1,
             hosts: None,
             trace_out: None,
@@ -190,20 +255,29 @@ impl Default for DistConfig {
 /// A membership change, broadcast by the coordinator.
 #[derive(Debug, Clone)]
 pub struct MigrateCmd {
+    /// The membership after the change (a prefix of the world).
     pub new_membership: Vec<WorkerSpec>,
     /// `survivors[new_rank]` = the old rank of the same physical
     /// worker. Over a transport, memberships are prefixes of the fixed
     /// process world, so survivor entries must be identity (`Some(i)`
     /// at index `i`) or `None` for ranks entering the membership.
     pub survivors: Vec<Option<usize>>,
+    /// State ranges to move, in deterministic order.
     pub transfers: Vec<Transfer>,
     /// Adam step counter carried onto rebuilt shards.
     pub adam_step: u64,
     /// Ranks declared dead by the coordinator. Transfers whose
-    /// old-layout owner is in this set are served by rank 0 from the ft
-    /// [`Mirror`] instead — every rank computes the same substitution,
-    /// so nobody waits on a corpse.
+    /// old-layout owner is in this set are served from the owner's ft
+    /// [`Mirror`] holder instead — every rank computes the same
+    /// substitution, so nobody waits on a corpse.
     pub dead: Vec<usize>,
+    /// Ranks that rejoined with a MISMATCHED shard fingerprint: still
+    /// live (they receive and execute this command), but their
+    /// resident state is untrusted, so transfers they would have
+    /// SERVED are re-routed to their mirror holder exactly like a dead
+    /// owner's. Unlike `dead`, a restreamed rank is re-admitted — the
+    /// transfer list rebuilds its shard from trusted bytes.
+    pub restream: Vec<usize>,
 }
 
 // ---- command wire codec (length-prefixed LE, no serde) --------------
@@ -220,13 +294,15 @@ const OP_COLLECT: u8 = 5;
 /// echoes `[OP_PING]` back. Pings never touch a worker's step counter,
 /// so they are transparent to the corpus-alignment desync guard.
 pub(crate) const OP_PING: u8 = 6;
-
-/// How long [`DistDriver::poll_failures`] waits for a `PING` echo
-/// before declaring the rank dead. Probes run at step boundaries when
-/// every live worker is blocked on `recv`, so a live echo arrives in
-/// microseconds; the margin covers scheduler jitter and chaos-injected
-/// delivery delays.
-const PING_TIMEOUT_MS: u64 = 2000;
+/// Rejoin handshake. Probe (driver → suspect):
+/// `[OP_REJOIN][nonce u64 LE]`. Ack (suspect → driver):
+/// `[OP_REJOIN][nonce u64 LE][next_step u64 LE][fingerprint u64 LE]` —
+/// the worker's step counter (corpus-alignment proof) and the FNV-1a
+/// fingerprint of its resident shards ([`DistRank::fingerprint`]).
+/// The nonce pairs each ack with its probe so stale echoes from
+/// earlier attempts are skipped, never misread. Like `PING`, a
+/// `REJOIN` probe never touches the worker's step counter.
+pub(crate) const OP_REJOIN: u8 = 7;
 
 #[derive(Default)]
 struct W(Vec<u8>);
@@ -311,6 +387,9 @@ fn encode_init(cfg: &DistConfig, membership: &[WorkerSpec]) -> Vec<u8> {
     w.f64(cfg.adam.weight_decay as f64);
     w.u8(u8::from(cfg.shard_params));
     w.u8(u8::from(cfg.ft));
+    w.u8(u8::from(cfg.mirror_leader));
+    w.u64(cfg.rejoin_window_ms);
+    w.u64(cfg.ping_timeout_ms);
     w.u64(cfg.fsdp_units as u64);
     match &cfg.hosts {
         Some(h) => {
@@ -343,6 +422,9 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
     };
     let shard_params = r.u8()? != 0;
     let ft = r.u8()? != 0;
+    let mirror_leader = r.u8()? != 0;
+    let rejoin_window_ms = r.u64()?;
+    let ping_timeout_ms = r.u64()?;
     let fsdp_units = r.u64()? as usize;
     let hosts = if r.u8()? != 0 {
         let n = r.u64()? as usize;
@@ -363,6 +445,9 @@ fn decode_init(r: &mut R<'_>) -> Result<(DistConfig, Vec<WorkerSpec>)> {
             surrogate,
             shard_params,
             ft,
+            mirror_leader,
+            rejoin_window_ms,
+            ping_timeout_ms,
             fsdp_units,
             hosts,
             trace_out: None,
@@ -389,6 +474,10 @@ fn encode_migrate(cmd: &MigrateCmd) -> Vec<u8> {
     }
     w.u64(cmd.dead.len() as u64);
     for d in &cmd.dead {
+        w.u64(*d as u64);
+    }
+    w.u64(cmd.restream.len() as u64);
+    for d in &cmd.restream {
         w.u64(*d as u64);
     }
     w.0
@@ -419,7 +508,19 @@ fn decode_migrate(r: &mut R<'_>) -> Result<MigrateCmd> {
     for _ in 0..nd {
         dead.push(r.u64()? as usize);
     }
-    Ok(MigrateCmd { new_membership, survivors, transfers, adam_step, dead })
+    let nr = r.u64()? as usize;
+    let mut restream = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        restream.push(r.u64()? as usize);
+    }
+    Ok(MigrateCmd {
+        new_membership,
+        survivors,
+        transfers,
+        adam_step,
+        dead,
+        restream,
+    })
 }
 
 /// The old-layout owner of flat position `pos` (the process that holds
@@ -555,16 +656,64 @@ pub(crate) fn drive_overlapped(
     Ok(())
 }
 
-/// Rank 0's flat-indexed copy of every rank's post-step state, kept
-/// current by [`DistRank::ft_sync`]. Flat positions, not ranks, index
-/// the mirror, so it is valid across membership changes; after step k
-/// it holds exactly the bytes each rank held at the k/k+1 boundary.
-/// `w` is populated only in fully-sharded mode — leader-resident runs
-/// already keep the full weights on rank 0.
-struct Mirror {
+/// Where one rank's ft backup lives: ring-successor placement with a
+/// rank-0 fallback for tiny groups. Every rank computes the same map
+/// locally from the membership size — placement is never negotiated on
+/// the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MirrorLayout {
+    group: usize,
+}
+
+impl MirrorLayout {
+    /// The placement map for a `group`-rank membership.
+    pub fn new(group: usize) -> MirrorLayout {
+        MirrorLayout { group }
+    }
+
+    /// The rank holding `owner`'s backup shard: the ring successor
+    /// `(owner + 1) % group`, except at `group <= 2` where rank 0
+    /// holds everything (with two ranks the "successor" of each is the
+    /// other, and rank 0 — the coordinator, which cannot die — is the
+    /// only holder that survives every admissible failure).
+    pub fn holder(&self, owner: usize) -> usize {
+        if self.group <= 2 {
+            0
+        } else {
+            (owner + 1) % self.group
+        }
+    }
+
+    /// The owners whose backups `holder` keeps, ascending.
+    pub fn sources(&self, holder: usize) -> Vec<usize> {
+        (0..self.group).filter(|&o| self.holder(o) == holder).collect()
+    }
+}
+
+/// One owner's backup shard under the sharded mirror: the owner's
+/// post-step moments (and, fully-sharded, weight slice) at flat
+/// offset `start`.
+struct Backup {
+    start: usize,
     m: Vec<f32>,
     v: Vec<f32>,
     w: Option<Vec<f32>>,
+}
+
+/// A rank's copy of cluster backup state, kept current by
+/// [`DistRank::ft_sync`]. Flat positions, not ranks, index both
+/// variants, so a mirror is valid across membership changes; after
+/// step k it holds exactly the bytes each rank held at the k/k+1
+/// boundary. Weight planes are populated only in fully-sharded mode —
+/// leader-resident runs already keep the full weights on rank 0.
+enum Mirror {
+    /// The legacy placement (`DistConfig::mirror_leader`): rank 0
+    /// folds every rank's backup into one flat copy.
+    Leader { m: Vec<f32>, v: Vec<f32>, w: Option<Vec<f32>> },
+    /// The default [`MirrorLayout`] placement: this rank holds the
+    /// backups of the owners whose ring successor it is, keyed by
+    /// owner rank.
+    Sharded { backups: BTreeMap<usize, Backup> },
 }
 
 /// One rank's SPMD training state.
@@ -598,7 +747,11 @@ pub struct DistRank {
     order: wire::RingOrder,
     /// Fault tolerance on: run the per-step [`DistRank::ft_sync`].
     ft: bool,
-    /// Rank 0 with `ft` only: the cluster-state mirror.
+    /// Legacy leader mirror placement (everything on rank 0) instead
+    /// of the default sharded [`MirrorLayout`].
+    mirror_leader: bool,
+    /// With `ft`: rank 0's flat mirror (leader placement), or this
+    /// rank's slice of backups (sharded placement; active ranks only).
     mirror: Option<Mirror>,
     /// Flat gather scratch, recycled across steps (and across units
     /// within a step) so the sharded hot path performs no per-step
@@ -613,6 +766,8 @@ pub struct DistRank {
 }
 
 impl DistRank {
+    /// Stand up one rank from the broadcast `INIT` payload: build the
+    /// executor, derive the shard layout and seed the local state.
     pub fn init(
         rank: usize,
         cfg: &DistConfig,
@@ -630,23 +785,51 @@ impl DistRank {
         let active = rank < membership.len();
         let shard =
             active.then(|| AdamShard::new(layout.size(rank), cfg.adam));
-        let mirrors = rank == 0 && cfg.ft;
-        let (params, param_shard, mirror_w) = if cfg.shard_params {
-            // Keep only this rank's slice of the deterministic init —
-            // except on a mirroring rank 0, where the full flat copy
-            // survives as the mirror's weight plane (it must: after a
-            // crash nobody else holds the dead rank's slice).
+        let leads = rank == 0 && cfg.ft && cfg.mirror_leader;
+        let (params, param_shard, init_flat) = if cfg.shard_params {
+            // Keep only this rank's slice of the deterministic init;
+            // the full flat copy survives only where a mirror needs a
+            // weight plane (after a crash nobody else holds the dead
+            // rank's slice).
             let flat = crate::trainer::flatten(&init, flat_len);
             let ps = active.then(|| flat[layout.range(rank)].to_vec());
-            (Vec::new(), ps, mirrors.then_some(flat))
+            (Vec::new(), ps, cfg.ft.then_some(flat))
         } else {
             (init, None, None)
         };
-        let mirror = mirrors.then(|| Mirror {
-            m: vec![0f32; flat_len],
-            v: vec![0f32; flat_len],
-            w: mirror_w,
-        });
+        // Mirrors are populated LOCALLY at init — every rank derives
+        // the same deterministic init state, so standing up either
+        // placement costs zero wire traffic.
+        let mirror = if cfg.ft && cfg.mirror_leader {
+            leads.then(|| Mirror::Leader {
+                m: vec![0f32; flat_len],
+                v: vec![0f32; flat_len],
+                w: init_flat.clone(),
+            })
+        } else if cfg.ft && active {
+            let ml = MirrorLayout::new(membership.len());
+            let mut backups = BTreeMap::new();
+            for src in ml.sources(rank) {
+                let range = layout.range(src);
+                if range.is_empty() {
+                    continue;
+                }
+                backups.insert(
+                    src,
+                    Backup {
+                        start: range.start,
+                        m: vec![0f32; range.len()],
+                        v: vec![0f32; range.len()],
+                        w: init_flat
+                            .as_ref()
+                            .map(|f| f[range.clone()].to_vec()),
+                    },
+                );
+            }
+            Some(Mirror::Sharded { backups })
+        } else {
+            None
+        };
         let units = unit_plan(
             &exec,
             &layout,
@@ -673,6 +856,7 @@ impl DistRank {
             topo,
             order,
             ft: cfg.ft,
+            mirror_leader: cfg.mirror_leader,
             mirror,
             scratch: Vec::new(),
             full_scratch: Vec::new(),
@@ -680,6 +864,7 @@ impl DistRank {
         })
     }
 
+    /// The current membership (what the shard layout is derived from).
     pub fn membership(&self) -> &[WorkerSpec] {
         &self.membership
     }
@@ -696,14 +881,17 @@ impl DistRank {
         self.param_shard.as_deref()
     }
 
+    /// Whether parameters are fully sharded (no leader copy).
     pub fn is_sharded(&self) -> bool {
         self.shard_params
     }
 
+    /// Per-tensor flat lengths of the executed model.
     pub fn sizes(&self) -> &[usize] {
         &self.sizes
     }
 
+    /// The uneven shard layout over the flat state.
     pub fn layout(&self) -> &ShardLayout {
         &self.layout
     }
@@ -716,6 +904,35 @@ impl DistRank {
     /// standby ranks and before the first step).
     pub fn last_phases(&self) -> PhaseBreakdown {
         self.last_phases
+    }
+
+    /// FNV-1a 64 digest of this rank's resident training state: the
+    /// Adam step counter, both moment shards and (fully-sharded) the
+    /// weight slice, mixed as bit patterns — so two states are
+    /// fingerprint-equal only when they are BITWISE equal. Standby
+    /// ranks (no shard) digest to the bare offset basis. The rejoin
+    /// handshake compares this against the driver's ledger to decide
+    /// resume-in-place vs. re-stream.
+    pub fn fingerprint(&self) -> u64 {
+        const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = BASIS;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        if let Some(shard) = &self.shard {
+            mix(shard.step);
+            for x in shard.m.iter().chain(shard.v.iter()) {
+                mix(x.to_bits() as u64);
+            }
+        }
+        if let Some(w) = &self.param_shard {
+            for x in w {
+                mix(x.to_bits() as u64);
+            }
+        }
+        h
     }
 
     /// One SPMD step; returns this rank's `(loss_sum, token_count)`
@@ -1080,11 +1297,14 @@ impl DistRank {
         t.send_f32(0, mine)
     }
 
-    /// Per-step mirror sync (ft runs only; no-op otherwise). Active
-    /// workers stream their post-step moments (and, fully-sharded,
-    /// weight slice) to rank 0; rank 0 folds every live range into the
-    /// [`Mirror`]. Pure copies on the side — the training trajectory
-    /// never reads the mirror, so the sync is bitwise-invisible.
+    /// Per-step mirror sync (ft runs only; no-op otherwise). Leader
+    /// placement: active workers stream their post-step moments (and,
+    /// fully-sharded, weight slice) to rank 0, which folds every live
+    /// range into the flat [`Mirror::Leader`]. Sharded placement:
+    /// every active rank ships its shard to its [`MirrorLayout`]
+    /// holder instead ([`DistRank::mirror_shift`]). Pure copies on the
+    /// side — the training trajectory never reads the mirror, so the
+    /// sync is bitwise-invisible.
     ///
     /// Frame order is safe by per-lane FIFO: a worker's step reply
     /// (bytes) precedes its ft frames (f32), and the driver folds all
@@ -1092,6 +1312,9 @@ impl DistRank {
     pub fn ft_sync(&mut self, t: &mut dyn Transport) -> Result<()> {
         if !self.ft {
             return Ok(());
+        }
+        if !self.mirror_leader {
+            return self.mirror_shift(t);
         }
         let group = self.membership.len();
         if self.rank != 0 {
@@ -1114,18 +1337,17 @@ impl DistRank {
             }
             return Ok(());
         }
-        let mirror = self
-            .mirror
-            .as_mut()
-            .ok_or_else(|| anyhow!("ft_sync on rank 0 without a mirror"))?;
+        let Some(Mirror::Leader { m, v, w }) = self.mirror.as_mut() else {
+            return Err(anyhow!("ft_sync on rank 0 without a leader mirror"));
+        };
         if let Some(shard) = self.shard.as_ref() {
             let r0 = self.layout.range(0);
-            mirror.m[r0.clone()].copy_from_slice(&shard.m);
-            mirror.v[r0.clone()].copy_from_slice(&shard.v);
-            if let (Some(w), Some(mw)) =
-                (self.param_shard.as_deref(), mirror.w.as_mut())
+            m[r0.clone()].copy_from_slice(&shard.m);
+            v[r0.clone()].copy_from_slice(&shard.v);
+            if let (Some(ws), Some(mw)) =
+                (self.param_shard.as_deref(), w.as_mut())
             {
-                mw[r0].copy_from_slice(w);
+                mw[r0].copy_from_slice(ws);
             }
         }
         for r in 1..group {
@@ -1143,8 +1365,8 @@ impl DistRank {
                     v_in.len()
                 ));
             }
-            mirror.m[range.clone()].copy_from_slice(&m_in);
-            mirror.v[range.clone()].copy_from_slice(&v_in);
+            m[range.clone()].copy_from_slice(&m_in);
+            v[range.clone()].copy_from_slice(&v_in);
             if self.shard_params {
                 let w_in = t.recv_f32(r)?;
                 if w_in.len() != sz {
@@ -1154,15 +1376,106 @@ impl DistRank {
                         w_in.len()
                     ));
                 }
-                mirror
-                    .w
-                    .as_mut()
+                w.as_mut()
                     .ok_or_else(|| {
                         anyhow!("sharded ft mirror has no weight plane")
                     })?[range]
                     .copy_from_slice(&w_in);
             }
         }
+        Ok(())
+    }
+
+    /// The sharded-mirror sync: every active rank ships its post-step
+    /// shard to its [`MirrorLayout`] holder and collects the backups
+    /// it holds for others, walking owners in global rank order (one
+    /// point-to-point per owner — sends never block and recvs follow
+    /// per-lane FIFO, so the walk is deadlock-free with zero transport
+    /// buffering). Standby ranks hold no backups: a rank outside the
+    /// membership may itself die, so nothing may depend on its copy.
+    fn mirror_shift(&mut self, t: &mut dyn Transport) -> Result<()> {
+        let group = self.membership.len();
+        if self.rank >= group {
+            self.mirror = None;
+            return Ok(());
+        }
+        let ml = MirrorLayout::new(group);
+        let mut backups = BTreeMap::new();
+        for src in 0..group {
+            let range = self.layout.range(src);
+            if range.is_empty() {
+                continue;
+            }
+            let holder = ml.holder(src);
+            if src == self.rank {
+                let shard = self.shard.as_ref().ok_or_else(|| {
+                    anyhow!("active rank {src} has no shard")
+                })?;
+                if holder == self.rank {
+                    // Self-placement (group <= 2 on rank 0): a local
+                    // copy, no wire traffic.
+                    backups.insert(
+                        src,
+                        Backup {
+                            start: range.start,
+                            m: shard.m.clone(),
+                            v: shard.v.clone(),
+                            w: self.param_shard.clone(),
+                        },
+                    );
+                } else {
+                    t.send_f32(holder, &shard.m)?;
+                    t.send_f32(holder, &shard.v)?;
+                    if self.shard_params {
+                        let w = self.param_shard.as_deref().ok_or_else(
+                            || {
+                                anyhow!(
+                                    "active rank {src} has no parameter \
+                                     shard"
+                                )
+                            },
+                        )?;
+                        t.send_f32(holder, w)?;
+                    }
+                }
+            } else if holder == self.rank {
+                let m_in = t.recv_f32(src)?;
+                let v_in = t.recv_f32(src)?;
+                if m_in.len() != range.len() || v_in.len() != range.len() {
+                    return Err(anyhow!(
+                        "mirror shift from rank {src} holds {}+{} elems, \
+                         wanted {}",
+                        m_in.len(),
+                        v_in.len(),
+                        range.len()
+                    ));
+                }
+                let w_in = if self.shard_params {
+                    let w = t.recv_f32(src)?;
+                    if w.len() != range.len() {
+                        return Err(anyhow!(
+                            "mirror weight shift from rank {src} holds \
+                             {} elems, wanted {}",
+                            w.len(),
+                            range.len()
+                        ));
+                    }
+                    Some(w)
+                } else {
+                    None
+                };
+                backups.insert(
+                    src,
+                    Backup {
+                        start: range.start,
+                        m: m_in,
+                        v: v_in,
+                        w: w_in,
+                    },
+                );
+            }
+        }
+        self.mirror = Some(Mirror::Sharded { backups });
         Ok(())
     }
 
@@ -1238,13 +1551,18 @@ impl DistRank {
 
         // The transfer list, in list order on every rank (frames are
         // FIFO per pair, sends never block: deadlock-free by
-        // induction on list position). A DEAD owner's ranges are served
-        // by rank 0 from the ft mirror — same list position, same
-        // payloads the corpse would have sent (the mirror holds its
-        // boundary state), so the recovered bytes are bitwise the
+        // induction on list position). An UNTRUSTED owner's ranges —
+        // dead, or live-but-restreamed after a fingerprint-mismatch
+        // rejoin — are served by its mirror holder: rank 0 under the
+        // leader mirror, `MirrorLayout::holder(owner)` under the
+        // default sharded mirror. Same list position, same payloads
+        // the owner would have sent (the mirror holds its boundary
+        // state), so the recovered bytes are bitwise the
         // graceful-departure bytes. Every rank (including ranks
         // declared dead that are in fact still running) computes the
         // same substitution, so nobody waits on the corpse.
+        let old_group = self.membership.len();
+        let ml = MirrorLayout::new(old_group);
         for tr in &cmd.transfers {
             let owner = owner_of(&old_layout, tr.start)?;
             if tr.start + tr.len > old_layout.range(owner).end {
@@ -1254,44 +1572,80 @@ impl DistRank {
                     tr.len
                 ));
             }
-            let dead_src = cmd.dead.contains(&owner);
-            let src = if dead_src { 0 } else { owner };
-            if self.rank == src {
-                if dead_src {
-                    let mirror = self.mirror.as_ref().ok_or_else(|| {
-                        anyhow!(
-                            "dead owner {owner}'s transfer needs the ft \
-                             mirror"
-                        )
-                    })?;
-                    let s = tr.start..tr.start + tr.len;
-                    t.send_f32(tr.to, &mirror.m[s.clone()])?;
-                    t.send_f32(tr.to, &mirror.v[s.clone()])?;
-                    if self.shard_params {
-                        let w = mirror.w.as_deref().ok_or_else(|| {
-                            anyhow!(
-                                "sharded ft mirror has no weight plane"
-                            )
-                        })?;
-                        t.send_f32(tr.to, &w[s])?;
-                    }
-                } else {
-                    let old = self.shard.as_ref().ok_or_else(|| {
-                        anyhow!("transfer source {src} holds no shard")
-                    })?;
-                    let a = tr.start - old_layout.range(src).start;
-                    t.send_f32(tr.to, &old.m[a..a + tr.len])?;
-                    t.send_f32(tr.to, &old.v[a..a + tr.len])?;
-                    if self.shard_params {
-                        let w =
-                            self.param_shard.as_ref().ok_or_else(|| {
+            let untrusted = cmd.dead.contains(&owner)
+                || cmd.restream.contains(&owner);
+            let src = if !untrusted {
+                owner
+            } else if self.mirror_leader {
+                0
+            } else {
+                let holder = ml.holder(owner);
+                if cmd.dead.contains(&holder) {
+                    return Err(anyhow!(
+                        "rank {owner}'s mirror holder {holder} is also \
+                         dead: correlated failure exceeds the sharded \
+                         mirror's budget"
+                    ));
+                }
+                holder
+            };
+            if self.rank == src && untrusted {
+                match self.mirror.as_ref() {
+                    Some(Mirror::Leader { m, v, w }) => {
+                        let s = tr.start..tr.start + tr.len;
+                        t.send_f32(tr.to, &m[s.clone()])?;
+                        t.send_f32(tr.to, &v[s.clone()])?;
+                        if self.shard_params {
+                            let w = w.as_deref().ok_or_else(|| {
                                 anyhow!(
-                                    "transfer source {src} holds no \
-                                     parameter shard"
+                                    "leader ft mirror has no weight \
+                                     plane"
                                 )
                             })?;
-                        t.send_f32(tr.to, &w[a..a + tr.len])?;
+                            t.send_f32(tr.to, &w[s])?;
+                        }
                     }
+                    Some(Mirror::Sharded { backups }) => {
+                        let b = backups.get(&owner).ok_or_else(|| {
+                            anyhow!(
+                                "holder {src} has no backup for rank \
+                                 {owner}"
+                            )
+                        })?;
+                        let a = tr.start - b.start;
+                        t.send_f32(tr.to, &b.m[a..a + tr.len])?;
+                        t.send_f32(tr.to, &b.v[a..a + tr.len])?;
+                        if self.shard_params {
+                            let w = b.w.as_deref().ok_or_else(|| {
+                                anyhow!(
+                                    "backup for rank {owner} has no \
+                                     weight plane"
+                                )
+                            })?;
+                            t.send_f32(tr.to, &w[a..a + tr.len])?;
+                        }
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "rank {owner}'s transfer needs the ft mirror"
+                        ))
+                    }
+                }
+            } else if self.rank == src {
+                let old = self.shard.as_ref().ok_or_else(|| {
+                    anyhow!("transfer source {src} holds no shard")
+                })?;
+                let a = tr.start - old_layout.range(src).start;
+                t.send_f32(tr.to, &old.m[a..a + tr.len])?;
+                t.send_f32(tr.to, &old.v[a..a + tr.len])?;
+                if self.shard_params {
+                    let w = self.param_shard.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "transfer source {src} holds no parameter \
+                             shard"
+                        )
+                    })?;
+                    t.send_f32(tr.to, &w[a..a + tr.len])?;
                 }
             }
             if is_active && self.rank == tr.to {
@@ -1385,6 +1739,14 @@ impl DistRank {
         } else {
             None
         };
+        // Re-seed the sharded mirror over the NEW membership: holders
+        // change with the group size, and a rejoined-but-restreamed
+        // rank's stale backups must be replaced before anyone trusts
+        // them. (The leader mirror needs no reshape — it spans the full
+        // flat vector and the next ft_sync refreshes it.)
+        if self.ft && !self.mirror_leader {
+            self.mirror_shift(t)?;
+        }
         Ok(())
     }
 }
@@ -1408,7 +1770,16 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
         match r.u8()? {
             OP_INIT => {
                 let (cfg, membership) = decode_init(&mut r)?;
-                state = Some(DistRank::init(rank, &cfg, membership)?);
+                let st = DistRank::init(rank, &cfg, membership)?;
+                // Seed the coordinator's fingerprint ledger: every
+                // active rank reports its boundary-state digest so a
+                // later rejoin can be checked against it.
+                if st.ft && rank < st.membership().len() {
+                    let mut w = W::default();
+                    w.u64(st.fingerprint());
+                    t.send_bytes(0, &w.0)?;
+                }
+                state = Some(st);
                 next_step = 0;
             }
             OP_STEP => {
@@ -1435,6 +1806,9 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
                     // The reply ALWAYS carries the phase fields and the
                     // measured step time — the wire format never
                     // depends on whether tracing is on (invariant 14).
+                    // Under `--ft` it additionally carries the post-step
+                    // shard fingerprint, refreshing the coordinator's
+                    // rejoin ledger every step.
                     let mut w = W::default();
                     w.f64(loss);
                     w.f64(count);
@@ -1442,6 +1816,9 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
                         w.f64(p);
                     }
                     w.f64(measured);
+                    if st.ft {
+                        w.u64(st.fingerprint());
+                    }
                     t.send_bytes(0, &w.0)?;
                 }
                 // Reply first, mirror second: per-lane FIFO then
@@ -1453,12 +1830,34 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
             OP_PING => {
                 t.send_bytes(0, &[OP_PING])?;
             }
+            OP_REJOIN => {
+                // Rejoin handshake probe: echo the nonce with this
+                // rank's step count and boundary-state fingerprint so
+                // the coordinator can decide resume vs. re-stream.
+                let nonce = r.u64()?;
+                let st = state
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("REJOIN before INIT"))?;
+                let mut w = W::default();
+                w.u8(OP_REJOIN);
+                w.u64(nonce);
+                w.u64(next_step);
+                w.u64(st.fingerprint());
+                t.send_bytes(0, &w.0)?;
+            }
             OP_MIGRATE => {
                 let mc = decode_migrate(&mut r)?;
-                state
+                let st = state
                     .as_mut()
-                    .ok_or_else(|| anyhow!("MIGRATE before INIT"))?
-                    .migrate(t.as_mut(), &mc)?;
+                    .ok_or_else(|| anyhow!("MIGRATE before INIT"))?;
+                st.migrate(t.as_mut(), &mc)?;
+                // Ledger refresh: active ranks report the post-migration
+                // digest (shards just moved, the old entries are stale).
+                if st.ft && rank < st.membership().len() {
+                    let mut w = W::default();
+                    w.u64(st.fingerprint());
+                    t.send_bytes(0, &w.0)?;
+                }
             }
             OP_COLLECT => {
                 state
@@ -1480,6 +1879,7 @@ pub fn worker_loop(mut t: Box<dyn Transport>) -> Result<()> {
 /// from `cli_spec` and crash for real via [`CrashMode::Abort`].
 #[derive(Debug, Clone)]
 pub struct ChaosOpts {
+    /// The seeded fault schedule every endpoint replays.
     pub plan: FaultPlan,
     /// The `--chaos` spec string handed to spawned `cephalo worker`
     /// processes; required for [`FabricSpec::TcpProcesses`] and
@@ -1504,6 +1904,22 @@ pub struct DistDriver {
     /// best-effort `SHUTDOWN` (a rank declared dead may still be
     /// running, e.g. after a one-sided lane failure).
     dead: BTreeSet<usize>,
+    /// Per-rank boundary-state fingerprints, refreshed from every
+    /// `INIT`/`STEP`/`MIGRATE` reply; `None` for rank 0 (never
+    /// rejoins) and for standby ranks. The reference a rejoin
+    /// handshake is checked against.
+    ledger: Vec<Option<u64>>,
+    /// Liveness polls issued so far (1-based in fault schedules).
+    polls: u64,
+    /// Coordinator-side fault schedule (quiet unless chaos is on).
+    faults: DriverFaults,
+    /// The one-shot `taint` fault has fired.
+    taint_spent: bool,
+    /// Milliseconds a suspected rank is probed for rejoin before being
+    /// declared dead; 0 disables the rejoin path entirely.
+    rejoin_window_ms: u64,
+    /// Echo timeout for a single liveness `PING`.
+    ping_timeout_ms: u64,
     timer: Option<StepTimeModel>,
     threads: Vec<std::thread::JoinHandle<()>>,
     children: Vec<std::process::Child>,
@@ -1515,6 +1931,7 @@ pub struct DistDriver {
     /// inbound lane files, so per-endpoint cleanup is not enough).
     shm_dir: Option<PathBuf>,
     down: bool,
+    /// Stats of every completed global step, in order.
     pub history: Vec<StepStats>,
     /// Per-rank phase totals folded from STEP replies (rank 0 measured
     /// locally) — the measured side of the skew report.
@@ -1525,10 +1942,56 @@ pub struct DistDriver {
     steps_timed: Vec<u64>,
 }
 
+/// Outcome of one [`DistDriver::poll_failures`] sweep: ranks declared
+/// dead, and suspected ranks that answered a rejoin handshake inside
+/// the window.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PollReport {
+    /// Ranks newly declared dead this sweep, ascending.
+    pub dead: Vec<usize>,
+    /// Suspected ranks that completed the rejoin handshake, in sweep
+    /// order.
+    pub rejoined: Vec<RejoinEvent>,
+}
+
+impl PollReport {
+    /// No deaths and no rejoins: nothing for the coordinator to do.
+    pub fn is_empty(&self) -> bool {
+        self.dead.is_empty() && self.rejoined.is_empty()
+    }
+
+    /// Rejoined ranks whose fingerprint MISSED the ledger, ascending:
+    /// live, corpus-aligned, but with untrusted state — the
+    /// coordinator must re-stream them like fresh joiners.
+    pub fn restream(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .rejoined
+            .iter()
+            .filter(|e| !e.hit)
+            .map(|e| e.rank)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// One completed rejoin handshake (see [`DistDriver::poll_failures`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RejoinEvent {
+    /// The rank that went silent and came back.
+    pub rank: usize,
+    /// REJOIN probes it took before the rank answered.
+    pub attempts: u64,
+    /// True when the reported fingerprint matched the ledger: the rank
+    /// resumes from its resident shards, zero bytes move.
+    pub hit: bool,
+}
+
 /// One rank's accumulated measured timing, folded by the driver from
 /// the phase fields every STEP reply carries.
 #[derive(Debug, Clone)]
 pub struct RankTiming {
+    /// The rank the timing belongs to.
     pub rank: usize,
     /// Steps this rank contributed timing for.
     pub steps: u64,
@@ -1801,7 +2264,25 @@ impl DistDriver {
         }
         let sharded = cfg.shard_params;
         let ft = cfg.ft;
+        let rejoin_window_ms = cfg.rejoin_window_ms;
+        let ping_timeout_ms = cfg.ping_timeout_ms;
+        let group = membership.len();
         let rank0 = DistRank::init(0, &cfg, membership)?;
+        // Seed the rejoin ledger from the workers' INIT fingerprints.
+        let mut ledger: Vec<Option<u64>> = vec![None; world];
+        if ft {
+            for (r, slot) in ledger.iter_mut().enumerate().take(group) {
+                if r == 0 {
+                    continue;
+                }
+                let raw = t.recv_bytes(r)?;
+                *slot = Some(R::new(&raw).u64()?);
+            }
+        }
+        let faults = chaos
+            .as_ref()
+            .map(|c| c.plan.driver.clone())
+            .unwrap_or_else(DriverFaults::quiet);
         Ok(DistDriver {
             t,
             rank0,
@@ -1810,6 +2291,12 @@ impl DistDriver {
             sharded,
             ft,
             dead: BTreeSet::new(),
+            ledger,
+            polls: 0,
+            faults,
+            taint_spent: false,
+            rejoin_window_ms,
+            ping_timeout_ms,
             timer: None,
             threads,
             children,
@@ -1859,14 +2346,17 @@ impl DistDriver {
         })
     }
 
+    /// Total transport ranks (fixed for the fabric's lifetime).
     pub fn world(&self) -> usize {
         self.world
     }
 
+    /// The fabric's short name ("tcp", "shm", ...).
     pub fn backend_label(&self) -> &'static str {
         self.spec.label()
     }
 
+    /// The current membership (rank 0's copy).
     pub fn membership(&self) -> &[WorkerSpec] {
         self.rank0.membership()
     }
@@ -1925,6 +2415,7 @@ impl DistDriver {
         Ok(unflatten(&flat, self.rank0.sizes()))
     }
 
+    /// The current shard layout (rank 0's copy).
     pub fn layout(&self) -> &ShardLayout {
         self.rank0.layout()
     }
@@ -1950,51 +2441,197 @@ impl DistDriver {
         (1..self.world).filter(|r| !self.dead.contains(r)).collect()
     }
 
-    /// Probe every live worker rank (active AND standby) and declare
-    /// unresponsive ones dead; returns the NEWLY dead ranks,
-    /// ascending. Only meaningful between steps — ft runs call this at
-    /// step boundaries, when every live worker is blocked on `recv`
-    /// and answers a `PING` immediately. A rank is declared dead on
-    /// hard evidence (closed/suspected lane, failed send) or an echo
-    /// timeout ([`PING_TIMEOUT_MS`]). No-op unless `ft` is on.
-    pub fn poll_failures(&mut self) -> Vec<usize> {
+    /// Probe every live worker rank (active AND standby) and sort the
+    /// unresponsive ones into DEAD and REJOINED. Only meaningful
+    /// between steps — ft runs call this at step boundaries, when
+    /// every live worker is blocked on `recv` and answers a `PING`
+    /// immediately.
+    ///
+    /// The per-rank state machine: a missed echo (or a lane the
+    /// transport merely *suspects*) raises a suspicion; with a rejoin
+    /// window configured the rank is then probed with `REJOIN`
+    /// handshakes under exponential backoff until the window closes —
+    /// an answering rank is re-admitted (fingerprint hit → resume in
+    /// place; miss → caller re-streams it), a silent one is declared
+    /// dead. Hard evidence ([`Transport::peer_failed`]: a CLOSED lane,
+    /// a failed send) skips the window — that lane can never carry a
+    /// handshake. No-op unless `ft` is on.
+    pub fn poll_failures(&mut self) -> PollReport {
+        let mut report = PollReport::default();
         if !self.ft {
-            return Vec::new();
+            return report;
         }
-        let mut newly = Vec::new();
+        self.polls += 1;
+        if self.faults.poll_delay_ms > 0 {
+            Self::record_driver_fault(&format!(
+                "poll delay {}ms",
+                self.faults.poll_delay_ms
+            ));
+            std::thread::sleep(Duration::from_millis(
+                self.faults.poll_delay_ms,
+            ));
+        }
         for r in self.live_workers() {
             let probe = Instant::now();
-            let alive = if self.t.peer_closed(r) {
-                false
-            } else if self.t.send_bytes(r, &[OP_PING]).is_err() {
-                false
-            } else {
-                let ok = matches!(
-                    self.t.recv_bytes_timeout(r, PING_TIMEOUT_MS),
-                    Ok(Some(ref pong)) if pong.as_slice() == [OP_PING]
-                );
-                if ok {
-                    telemetry::counters().record_ping_rtt(
-                        probe.elapsed().as_micros() as u64,
-                    );
-                }
-                ok
-            };
-            if !alive {
-                telemetry::counters()
-                    .suspicions
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if telemetry::on() {
-                    telemetry::instant(
-                        telemetry::CAT_SUSPECT,
-                        &format!("suspect r{r}"),
-                    );
-                }
+            if self.t.peer_failed(r)
+                || self.t.send_bytes(r, &[OP_PING]).is_err()
+            {
+                self.raise_suspicion(r);
                 self.dead.insert(r);
-                newly.push(r);
+                report.dead.push(r);
+                continue;
             }
+            let dropped = self.faults.drops_ping(r, self.polls);
+            if dropped {
+                Self::record_driver_fault(&format!(
+                    "drop ping r{r} poll {}",
+                    self.polls
+                ));
+            }
+            let pong = matches!(
+                self.t.recv_bytes_timeout(r, self.ping_timeout_ms),
+                Ok(Some(ref pong)) if pong.as_slice() == [OP_PING]
+            );
+            if pong && !dropped {
+                telemetry::counters()
+                    .record_ping_rtt(probe.elapsed().as_micros() as u64);
+                continue;
+            }
+            self.raise_suspicion(r);
+            if self.rejoin_window_ms > 0 && !self.t.peer_failed(r) {
+                if let Some(ev) = self.try_rejoin(r) {
+                    if telemetry::on() {
+                        telemetry::instant(
+                            telemetry::CAT_RECOVER,
+                            &format!(
+                                "rejoin r{r} {}",
+                                if ev.hit { "hit" } else { "restream" }
+                            ),
+                        );
+                    }
+                    report.rejoined.push(ev);
+                    continue;
+                }
+            }
+            self.dead.insert(r);
+            report.dead.push(r);
         }
-        newly
+        report
+    }
+
+    fn raise_suspicion(&self, r: usize) {
+        telemetry::counters()
+            .suspicions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if telemetry::on() {
+            telemetry::instant(
+                telemetry::CAT_SUSPECT,
+                &format!("suspect r{r}"),
+            );
+        }
+    }
+
+    /// A coordinator-side chaos fault fired: count it and mark the
+    /// trace, exactly like [`crate::transport::ChaosTransport`] does
+    /// for lane faults.
+    fn record_driver_fault(name: &str) {
+        telemetry::counters()
+            .chaos_faults
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if telemetry::on() {
+            telemetry::instant(telemetry::CAT_FAULT, name);
+        }
+    }
+
+    /// Probe a suspected rank with `REJOIN` handshakes (exponential
+    /// backoff, 50→400ms) until it answers or the rejoin window
+    /// closes. `None` means the window expired (or the lane errored):
+    /// declare it dead.
+    fn try_rejoin(&mut self, r: usize) -> Option<RejoinEvent> {
+        let deadline = Instant::now()
+            + Duration::from_millis(self.rejoin_window_ms);
+        let mut backoff = 50u64;
+        let mut attempts = 0u64;
+        while Instant::now() < deadline {
+            attempts += 1;
+            let mut w = W::default();
+            w.u8(OP_REJOIN);
+            w.u64(attempts);
+            if self.t.send_bytes(r, &w.0).is_err() {
+                return None;
+            }
+            let attempt_deadline = std::cmp::min(
+                Instant::now() + Duration::from_millis(backoff),
+                deadline,
+            );
+            loop {
+                let now = Instant::now();
+                if now >= attempt_deadline {
+                    break;
+                }
+                let left =
+                    (attempt_deadline - now).as_millis() as u64 + 1;
+                match self.t.recv_bytes_timeout(r, left) {
+                    // A stale pong from the PING that started all this.
+                    Ok(Some(ref raw)) if raw.as_slice() == [OP_PING] => {
+                        continue;
+                    }
+                    Ok(Some(raw)) => {
+                        let mut rd = R::new(&raw);
+                        let (Ok(op), Ok(nonce), Ok(step), Ok(fp)) =
+                            (rd.u8(), rd.u64(), rd.u64(), rd.u64())
+                        else {
+                            return None;
+                        };
+                        if op != OP_REJOIN {
+                            return None;
+                        }
+                        if nonce < attempts {
+                            // Ack of an earlier probe that raced the
+                            // backoff; the fresh one is behind it.
+                            continue;
+                        }
+                        return self.admit_rejoin(r, attempts, step, fp);
+                    }
+                    Ok(None) => break,
+                    Err(_) => return None,
+                }
+            }
+            backoff = (backoff * 2).min(400);
+        }
+        None
+    }
+
+    /// A suspected rank answered the handshake: decide its fate. A
+    /// step-count mismatch is fatal (its corpus position diverged —
+    /// re-streaming state cannot fix that); otherwise the fingerprint
+    /// against the ledger decides resume-in-place vs. re-stream.
+    fn admit_rejoin(
+        &mut self,
+        r: usize,
+        attempts: u64,
+        step: u64,
+        fp: u64,
+    ) -> Option<RejoinEvent> {
+        if step != self.history.len() as u64 {
+            return None;
+        }
+        let mut fp = fp;
+        if self.faults.taint_rank == Some(r) && !self.taint_spent {
+            // Chaos: corrupt the reported digest once, forcing the
+            // re-stream path on an otherwise-clean rejoin.
+            self.taint_spent = true;
+            Self::record_driver_fault(&format!("taint rejoin r{r}"));
+            fp ^= 1;
+        }
+        let hit = match self.ledger[r] {
+            Some(want) => want == fp,
+            // No ledger entry: standby ranks carry no boundary state,
+            // so a standby rejoin is always a hit; an active rank
+            // without an entry is never trusted.
+            None => r >= self.rank0.membership().len(),
+        };
+        Some(RejoinEvent { rank: r, attempts, hit })
     }
 
     /// Drive one global step: broadcast, run rank 0's share, fold in
@@ -2035,6 +2672,9 @@ impl DistDriver {
             self.phase_totals[r].add(&rp);
             self.measured_totals[r] += rd.f64()?;
             self.steps_timed[r] += 1;
+            if self.ft {
+                self.ledger[r] = Some(rd.u64()?);
+            }
             // Synthesize the cross-rank timeline: every rank's phases
             // laid from the driver's step start (replies carry
             // durations, not wall-clock anchors).
@@ -2068,6 +2708,21 @@ impl DistDriver {
         survivors: &[Option<usize>],
         transfers: &[Transfer],
     ) -> Result<()> {
+        self.migrate_with(new_membership, survivors, transfers, &[])
+    }
+
+    /// [`DistDriver::migrate`] with a RESTREAM list: live ranks whose
+    /// state is untrusted after a fingerprint-miss rejoin. Their
+    /// transfers are served by mirror holders exactly as a dead rank's
+    /// would be, but the ranks themselves stay in the fabric and are
+    /// re-admitted by the migration.
+    pub fn migrate_with(
+        &mut self,
+        new_membership: Vec<WorkerSpec>,
+        survivors: &[Option<usize>],
+        transfers: &[Transfer],
+        restream: &[usize],
+    ) -> Result<()> {
         if new_membership.len() > self.world {
             return Err(anyhow!(
                 "membership of {} ranks does not fit a {}-rank world",
@@ -2081,12 +2736,27 @@ impl DistDriver {
             transfers: transfers.to_vec(),
             adam_step: self.adam_step(),
             dead: self.dead_ranks(),
+            restream: restream.to_vec(),
         };
         let frame = encode_migrate(&cmd);
         for r in self.live_workers() {
             self.t.send_bytes(r, &frame)?;
         }
-        self.rank0.migrate(self.t.as_mut(), &cmd)
+        self.rank0.migrate(self.t.as_mut(), &cmd)?;
+        // Ledger refresh: shards just moved, every pre-migration entry
+        // is stale. Active ranks report their post-migration digest;
+        // standby ranks carry no boundary state and report nothing.
+        if self.ft {
+            let group = self.rank0.membership().len();
+            for slot in self.ledger.iter_mut() {
+                *slot = None;
+            }
+            for r in 1..group {
+                let raw = self.t.recv_bytes(r)?;
+                self.ledger[r] = Some(R::new(&raw).u64()?);
+            }
+        }
+        Ok(())
     }
 
     /// Stop every worker rank and reap threads/processes. Idempotent;
@@ -2155,6 +2825,9 @@ mod tests {
             seed: 9,
             corpus_branch: 3,
             ft: true,
+            mirror_leader: true,
+            rejoin_window_ms: 1500,
+            ping_timeout_ms: 250,
             fsdp_units: 5,
             hosts: Some(vec![4, 4, 9]),
             ..Default::default()
@@ -2169,6 +2842,9 @@ mod tests {
         assert_eq!(back.adam.lr, cfg.adam.lr);
         assert_eq!(back.surrogate.vocab, cfg.surrogate.vocab);
         assert!(back.ft);
+        assert!(back.mirror_leader);
+        assert_eq!(back.rejoin_window_ms, 1500);
+        assert_eq!(back.ping_timeout_ms, 250);
         assert_eq!(back.fsdp_units, 5);
         assert_eq!(back.hosts.as_deref(), Some(&[4, 4, 9][..]));
         assert_eq!(mem.len(), 2);
@@ -2192,6 +2868,7 @@ mod tests {
             ],
             adam_step: 17,
             dead: vec![2, 3],
+            restream: vec![1],
         };
         let frame = encode_migrate(&mc);
         let mut r = R::new(&frame);
@@ -2202,11 +2879,37 @@ mod tests {
         assert_eq!(back.transfers, mc.transfers);
         assert_eq!(back.new_membership.len(), 1);
         assert_eq!(back.dead, vec![2, 3]);
+        assert_eq!(back.restream, vec![1]);
 
         // Truncated frames error instead of panicking.
         let mut r = R::new(&frame[..4]);
         let _ = r.u8();
         assert!(decode_migrate(&mut r).is_err());
+    }
+
+    #[test]
+    fn mirror_layout_places_backups_on_ring_successors() {
+        // Tiny groups fall back to rank 0 (a 2-rank ring's successor
+        // is the peer that dies with you under a single host loss).
+        for group in 1..=2 {
+            let ml = MirrorLayout::new(group);
+            for owner in 0..group {
+                assert_eq!(ml.holder(owner), 0, "group {group}");
+            }
+        }
+        // Larger groups: owner r backs up on (r + 1) % group, and
+        // sources() is the exact inverse map.
+        let ml = MirrorLayout::new(5);
+        for owner in 0..5 {
+            assert_eq!(ml.holder(owner), (owner + 1) % 5);
+        }
+        for holder in 0..5 {
+            let srcs = ml.sources(holder);
+            assert_eq!(srcs, vec![(holder + 4) % 5]);
+            for s in srcs {
+                assert_eq!(ml.holder(s), holder);
+            }
+        }
     }
 
     #[test]
@@ -2519,6 +3222,7 @@ mod tests {
                 delay_prob: 0.0,
                 max_delay_ms: 0,
                 dup_prob: 0.0,
+                ..Default::default()
             },
         );
         assert_eq!(plan.for_rank(2).crash_after_step, Some(1));
@@ -2537,7 +3241,7 @@ mod tests {
             chaotic.step(s).unwrap();
             graceful.step(s).unwrap();
         }
-        assert_eq!(chaotic.poll_failures(), vec![2]);
+        assert_eq!(chaotic.poll_failures().dead, vec![2]);
         assert!(graceful.poll_failures().is_empty());
         let new_membership = vec![member(2, 0.6), member(1, 0.4)];
         let survivors = vec![Some(0), Some(1)];
@@ -2622,6 +3326,7 @@ mod tests {
                     delay_prob: 0.0,
                     max_delay_ms: 0,
                     dup_prob: 0.0,
+                    ..Default::default()
                 },
             );
             assert_eq!(plan.for_rank(2).crash_after_step, Some(1));
@@ -2641,7 +3346,7 @@ mod tests {
                 chaotic.step(s).unwrap();
                 graceful.step(s).unwrap();
             }
-            assert_eq!(chaotic.poll_failures(), vec![2]);
+            assert_eq!(chaotic.poll_failures().dead, vec![2]);
             assert_eq!(chaotic.dead_ranks(), vec![2]);
             assert!(graceful.poll_failures().is_empty());
 
@@ -2695,7 +3400,7 @@ mod tests {
         )
         .unwrap();
         d.step(0).unwrap();
-        assert_eq!(d.poll_failures(), vec![1]);
+        assert_eq!(d.poll_failures().dead, vec![1]);
         let t0 = Instant::now();
         d.shutdown();
         assert!(

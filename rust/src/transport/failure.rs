@@ -48,10 +48,12 @@ impl FailureDetector {
         Self { peers, suspect_after_ms }
     }
 
+    /// Number of peers being tracked.
     pub fn world(&self) -> usize {
         self.peers.len()
     }
 
+    /// The configured silence threshold, in milliseconds.
     pub fn suspect_after_ms(&self) -> u64 {
         self.suspect_after_ms
     }
@@ -156,6 +158,39 @@ mod tests {
         d.beat(1, 7); // a late frame cannot resurrect the peer
         assert!(d.suspected(1, 8));
         assert!(!d.is_closed(0));
+    }
+
+    #[test]
+    fn heartbeat_exactly_at_the_window_edge_is_not_suspect() {
+        // Rejoin-issue satellite: the suspicion predicate is a STRICT
+        // `elapsed > window`, so a beat landing exactly `window` ms ago
+        // keeps the peer alive — the rejoin clock starts one
+        // millisecond later, never early.
+        let d = FailureDetector::new(2, 200);
+        d.beat(1, 1000);
+        assert!(!d.suspected(1, 1200), "elapsed == window is alive");
+        assert!(d.suspected(1, 1201), "elapsed == window + 1 is suspect");
+        // The edge also holds from a zero-clock start (no beat yet).
+        assert!(!d.suspected(0, 200));
+        assert!(d.suspected(0, 201));
+    }
+
+    #[test]
+    fn suspicion_clears_when_a_partitioned_peer_beats_again() {
+        // Rejoin-issue satellite: soft suspicion is NOT sticky. A peer
+        // that went silent past the window (raised) and then resumes
+        // beating inside the rejoin retry window drops back to alive —
+        // the driver sees no suspect, so no migration is planned. Only
+        // hard closure is permanent.
+        let d = FailureDetector::new(2, 100);
+        d.beat(1, 500);
+        assert!(d.suspected(1, 700), "silent 200ms > 100ms window");
+        assert_eq!(d.suspects(700), vec![0, 1]);
+        d.beat(1, 710); // the partition heals; frames flow again
+        assert!(!d.suspected(1, 750), "a resumed beat clears suspicion");
+        d.mark_closed(1);
+        d.beat(1, 760);
+        assert!(d.suspected(1, 770), "closure is the one-way verdict");
     }
 
     #[test]

@@ -233,6 +233,10 @@ impl Transport for HybridTransport {
         self.shm.peer_closed(rank) || self.slow.peer_closed(rank)
     }
 
+    fn peer_failed(&self, rank: usize) -> bool {
+        self.shm.peer_failed(rank) || self.slow.peer_failed(rank)
+    }
+
     fn close(&mut self) {
         self.shm.close();
         self.slow.close();

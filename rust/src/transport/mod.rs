@@ -59,6 +59,18 @@
 //! serialization. A `recv_f32` that dequeues a bytes frame (or vice
 //! versa) is a protocol error, not a silent reinterpretation — SPMD
 //! lockstep means both sides always agree on the next frame type.
+//!
+//! ```text
+//! v2 TCP frame
+//! ┌──────┬────────────┬────────────┬───────────┬─────────────┐
+//! │ tag  │ seq        │ len        │ payload   │ crc32       │
+//! │ u8   │ u64 LE     │ u64 LE     │ len bytes │ u32 LE      │
+//! └──────┴────────────┴────────────┴───────────┴─────────────┘
+//!   0 = bytes   1 = f32 vector   2 = heartbeat (len 0, seq 0)
+//!   crc32 (IEEE) covers tag..payload; seq is per-lane, gap-free
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod chaos;
 pub mod collectives;
@@ -70,8 +82,11 @@ pub mod shm;
 pub mod tcp;
 pub mod topology;
 
-pub use chaos::{ChaosConfig, ChaosTransport, CrashMode, FaultPlan};
-pub use dist::{worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec, RankTiming};
+pub use chaos::{ChaosConfig, ChaosTransport, CrashMode, DriverFaults, FaultPlan};
+pub use dist::{
+    worker_loop, ChaosOpts, DistConfig, DistDriver, FabricSpec, MirrorLayout,
+    PollReport, RankTiming, RejoinEvent,
+};
 pub use failure::FailureDetector;
 pub use hybrid::HybridTransport;
 pub use local::{LocalFabric, LocalTransport};
@@ -168,7 +183,10 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// `read_frame`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
+    /// Raw bytes (commands, acks, serialized state) — wire tag 0.
     Bytes(Vec<u8>),
+    /// An f32 vector (tensor traffic) — wire tag 1, payload is
+    /// `4 × count` little-endian bytes.
     F32(Vec<f32>),
 }
 
@@ -228,12 +246,24 @@ pub trait Transport: Send {
         }
     }
 
-    /// Whether the fabric KNOWS this peer's connection is gone (EOF,
-    /// reset, heartbeat expiry). `false` means "no evidence", not
-    /// "alive" — fabrics without liveness tracking always say `false`.
+    /// Whether the fabric suspects or KNOWS this peer's connection is
+    /// gone (EOF, reset, heartbeat expiry). `false` means "no
+    /// evidence", not "alive" — fabrics without liveness tracking
+    /// always say `false`.
     fn peer_closed(&self, rank: usize) -> bool {
         let _ = rank;
         false
+    }
+
+    /// Whether the fabric has HARD evidence the peer is gone — a lane
+    /// that saw EOF/reset and can never carry another frame. Unlike
+    /// [`Transport::peer_closed`], a mere heartbeat-silence suspicion
+    /// does NOT count: a suspected lane may still come back, which is
+    /// what the rejoin window probes for. Default: same as
+    /// `peer_closed` (fabrics without a soft-suspicion tier have no
+    /// distinction to make).
+    fn peer_failed(&self, rank: usize) -> bool {
+        self.peer_closed(rank)
     }
 
     /// Tear down this endpoint's lanes so every peer blocked on a
@@ -327,6 +357,9 @@ impl<T: Transport + ?Sized> Transport for Box<T> {
     }
     fn peer_closed(&self, rank: usize) -> bool {
         (**self).peer_closed(rank)
+    }
+    fn peer_failed(&self, rank: usize) -> bool {
+        (**self).peer_failed(rank)
     }
     fn close(&mut self) {
         (**self).close()

@@ -768,6 +768,13 @@ impl Transport for TcpTransport {
             || self.detector.suspected(rank, self.now_ms())
     }
 
+    fn peer_failed(&self, rank: usize) -> bool {
+        // Hard evidence only: an EOF/reset/corrupt lane is gone for
+        // good, but heartbeat silence (`suspected`) may be a transient
+        // partition — the rejoin window decides its fate.
+        self.detector.is_closed(rank)
+    }
+
     fn close(&mut self) {
         self.close_impl();
     }

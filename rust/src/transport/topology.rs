@@ -54,6 +54,7 @@ impl HostTopology {
         Ok(HostTopology::new(hosts))
     }
 
+    /// Number of ranks the host map covers.
     pub fn world_size(&self) -> usize {
         self.hosts.len()
     }

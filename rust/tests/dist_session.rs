@@ -20,6 +20,14 @@
 //! and its state re-streamed from the rank-0 mirror — and the session
 //! STILL rides the single-worker reference trajectory bit for bit
 //! (DESIGN.md invariant 12: crash recovery ≡ graceful departure).
+//!
+//! The rejoin round adds DESIGN.md invariant 15, both halves: a
+//! partitioned-then-returned rank re-admitted through the REJOIN
+//! handshake is bitwise-equivalent to a departure + arrival (in place
+//! on a fingerprint hit, re-streamed on a miss), and recovery from the
+//! default sharded mirror is bitwise-equivalent to recovery from the
+//! legacy rank-0 flat mirror — asserted under seeded coordinator-side
+//! chaos on the TCP and hybrid fabrics, across churn.
 
 use std::sync::Arc;
 
@@ -702,6 +710,237 @@ fn tracing_is_bitwise_invisible_under_churn_and_chaos() {
     );
 }
 
+/// A fully-sharded rejoin-enabled session config: chaos schedule plus
+/// the bounded rejoin window and a short ping timeout (the tests run
+/// on loopback, where an undropped pong lands in microseconds).
+fn rejoin_cfg(
+    fabric: FabricSpec,
+    hosts: Option<Vec<u64>>,
+    chaos: Option<&str>,
+) -> SessionConfig {
+    SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric: Some(fabric),
+        shard_params: true,
+        hosts,
+        chaos: chaos.map(String::from),
+        rejoin_window_ms: 5000,
+        ping_timeout_ms: 200,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn partitioned_rank_rejoins_in_place_bitwise_on_tcp_and_hybrid() {
+    // Tentpole (DESIGN.md invariant 15, rejoin half, hit path): a
+    // coordinator-side chaos point swallows rank 2's PING echo once,
+    // raising a false suspicion on a healthy rank. The REJOIN
+    // handshake answers inside the window with a fingerprint matching
+    // the driver's ledger, so the rank resumes from its RESIDENT
+    // shards: zero bytes move, no migration is planned, max_live never
+    // clamps — and the session rides the no-chaos trajectory bit for
+    // bit through later shrink/regrow churn, on the socket fabric AND
+    // the locality-routed hybrid fabric (where the partitioned rank
+    // shares a host with the coordinator, so the handshake runs over
+    // the shm lane).
+    let chaos = "seed=11,crash=0,delay=0,dup=0,drop_ping=2,drop_first=2";
+    for hosts in [None, Some(vec![0u64, 1, 0])] {
+        let fabric = if hosts.is_some() {
+            FabricSpec::HybridThreads
+        } else {
+            FabricSpec::TcpThreads
+        };
+        let mut chaotic = Session::new(
+            tiny_cluster3(),
+            Arc::new(CephaloPlanner::default()),
+            rejoin_cfg(fabric, hosts.clone(), Some(chaos)),
+        )
+        .unwrap();
+        let mut graceful = Session::new(
+            tiny_cluster3(),
+            Arc::new(CephaloPlanner::default()),
+            rejoin_cfg(FabricSpec::Local, None, None),
+        )
+        .unwrap();
+        let mut solo = reference();
+
+        // Hour 0: the drop fires at the pre-step poll (poll 2) while
+        // all three ranks are active. Hours 1–2: ordinary elastic
+        // churn AFTER the heal — the rejoined rank departs gracefully
+        // and returns, proving nothing about its state went stale.
+        let churn = [3usize, 2, 3];
+        for (hour, &size) in churn.iter().enumerate() {
+            chaotic.step_event(hour, size).unwrap();
+            graceful.step_event(hour, size).unwrap();
+            for _ in 0..STEPS_PER_EVENT {
+                let idx = solo.history.len();
+                solo.step(idx).unwrap();
+            }
+            assert_eq!(
+                chaotic.params().unwrap(),
+                solo.params(),
+                "rejoin perturbed the trajectory after hour {hour} \
+                 (hosts={hosts:?})"
+            );
+        }
+        assert!(
+            chaotic.recoveries.is_empty(),
+            "a healed partition must not migrate (hosts={hosts:?}): {:?}",
+            chaotic.recoveries
+        );
+        assert_eq!(chaotic.rejoins.len(), 1, "hosts={hosts:?}");
+        let rj = &chaotic.rejoins[0];
+        assert_eq!(rj.rank, 2);
+        assert!(rj.hit, "matching fingerprint must resume in place");
+        assert_eq!(rj.moved_state_elems, 0, "a hit moves zero bytes");
+        assert!(rj.attempts >= 1);
+        assert_eq!(chaotic.max_live(), 3, "rejoined rank stays live");
+        assert_eq!(chaotic.current_size(), 3);
+        assert_eq!(chaotic.steps_run(), graceful.steps_run());
+        assert_eq!(
+            chaotic.params().unwrap(),
+            graceful.params().unwrap(),
+            "rejoin diverged from the fault-free session (hosts={hosts:?})"
+        );
+    }
+}
+
+#[test]
+fn tainted_rejoin_restreams_from_the_mirror_bitwise() {
+    // Tentpole (invariant 15, rejoin half, miss path): the `taint`
+    // chaos point corrupts the rejoining rank's reported fingerprint
+    // once, so the otherwise-clean rejoin takes the re-stream path —
+    // the rank is re-admitted exactly like a fresh elastic arrival,
+    // its Adam moments and weight slice re-streamed from the sharded
+    // mirror while the membership stays put. Rejoin ≡ departure +
+    // arrival: the trajectory still matches a fault-free run bit for
+    // bit, and state really moved.
+    let chaos =
+        "seed=11,crash=0,delay=0,dup=0,drop_ping=2,drop_first=2,taint=2";
+    let mut chaotic = Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        rejoin_cfg(FabricSpec::TcpThreads, None, Some(chaos)),
+    )
+    .unwrap();
+    let mut graceful = Session::new(
+        tiny_cluster3(),
+        Arc::new(CephaloPlanner::default()),
+        rejoin_cfg(FabricSpec::Local, None, None),
+    )
+    .unwrap();
+    let mut solo = reference();
+
+    for hour in 0..3 {
+        chaotic.step_event(hour, 3).unwrap();
+        graceful.step_event(hour, 3).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = solo.history.len();
+            solo.step(idx).unwrap();
+        }
+        assert_eq!(
+            chaotic.params().unwrap(),
+            solo.params(),
+            "tainted rejoin left the trajectory after hour {hour}"
+        );
+    }
+    assert!(
+        chaotic.recoveries.is_empty(),
+        "no rank died; the re-stream is a rejoin, not a recovery: {:?}",
+        chaotic.recoveries
+    );
+    assert_eq!(chaotic.rejoins.len(), 1);
+    let rj = &chaotic.rejoins[0];
+    assert_eq!(rj.rank, 2);
+    assert!(!rj.hit, "the tainted digest must force the re-stream path");
+    assert!(
+        rj.moved_state_elems > 0,
+        "a re-stream rejoin must move the rank's state over the wire"
+    );
+    assert_eq!(chaotic.max_live(), 3, "re-streamed rank stays live");
+    assert_eq!(chaotic.current_size(), 3);
+    assert_eq!(chaotic.steps_run(), graceful.steps_run());
+    assert_eq!(
+        chaotic.params().unwrap(),
+        graceful.params().unwrap(),
+        "re-stream rejoin diverged from the fault-free session"
+    );
+}
+
+#[test]
+fn sharded_mirror_recovery_matches_the_leader_mirror_bitwise() {
+    // Tentpole (invariant 15, mirror half): the same seeded crash
+    // recovered once from the DEFAULT sharded mirror (each rank's
+    // backup on its ring successor) and once from the legacy rank-0
+    // flat mirror (`mirror_leader`) produces bitwise-identical
+    // parameters — the mirror placement is pure plumbing, invisible to
+    // the numerics. Both sessions also stay on the single-worker
+    // reference trajectory throughout.
+    let chaos = "seed=3,crash=1,first=1,stride=2,delay=0,dup=0";
+    let cfg5 = |mirror_leader: bool| SessionConfig {
+        model: "BERT-Large".into(),
+        batch: BATCH,
+        steps_per_event: STEPS_PER_EVENT,
+        seed: SEED,
+        min_gpus: 1,
+        fabric: Some(FabricSpec::TcpThreads),
+        shard_params: true,
+        chaos: Some(chaos.into()),
+        mirror_leader,
+        ..Default::default()
+    };
+    let mut sharded = Session::new(
+        tiny5_cluster(),
+        Arc::new(CephaloPlanner::default()),
+        cfg5(false),
+    )
+    .unwrap();
+    let mut leader = Session::new(
+        tiny5_cluster(),
+        Arc::new(CephaloPlanner::default()),
+        cfg5(true),
+    )
+    .unwrap();
+    let mut solo = reference();
+
+    for hour in 0..3 {
+        sharded.step_event(hour, 5).unwrap();
+        leader.step_event(hour, 5).unwrap();
+        for _ in 0..STEPS_PER_EVENT {
+            let idx = solo.history.len();
+            solo.step(idx).unwrap();
+        }
+        assert_eq!(
+            sharded.params().unwrap(),
+            solo.params(),
+            "sharded-mirror recovery left the trajectory at hour {hour}"
+        );
+        assert_eq!(
+            leader.params().unwrap(),
+            solo.params(),
+            "leader-mirror recovery left the trajectory at hour {hour}"
+        );
+    }
+    for s in [&sharded, &leader] {
+        assert_eq!(s.recoveries.len(), 1, "{:?}", s.recoveries);
+        assert_eq!(s.recoveries[0].ranks, vec![4]);
+    }
+    assert_eq!(
+        sharded.recoveries[0].migration_bytes,
+        leader.recoveries[0].migration_bytes,
+        "both mirrors must stream the same recovery volume"
+    );
+    assert_eq!(
+        sharded.params().unwrap(),
+        leader.params().unwrap(),
+        "mirror placement leaked into the numerics"
+    );
+}
+
 #[test]
 fn corrupted_frame_declares_the_rank_dead_and_recovery_stays_bitwise() {
     // Satellite: wire corruption is a fail-stop event, not silent data
@@ -741,7 +980,7 @@ fn corrupted_frame_declares_the_rank_dead_and_recovery_stays_bitwise() {
     corrupted.step(0).unwrap();
     graceful.step(0).unwrap();
     assert_eq!(
-        corrupted.poll_failures(),
+        corrupted.poll_failures().dead,
         vec![2],
         "a CRC-failed frame must fail the sender's liveness check"
     );

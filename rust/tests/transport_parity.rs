@@ -98,6 +98,7 @@ fn noise(delay: f64, dup: f64) -> ChaosConfig {
         delay_prob: delay,
         max_delay_ms: 1,
         dup_prob: dup,
+        ..Default::default()
     }
 }
 
@@ -183,6 +184,7 @@ fn prop_fault_plans_are_pure_in_seed_world_and_config() {
             delay_prob: g.f64_in(0.0, 1.0),
             max_delay_ms: g.usize_in(0, 3) as u64,
             dup_prob: g.f64_in(0.0, 1.0),
+            ..Default::default()
         };
         let plan = FaultPlan::generate(seed, world, &cfg);
         assert_eq!(plan, FaultPlan::generate(seed, world, &cfg));
